@@ -1,0 +1,54 @@
+//! Placement study: how tensor-partition and core-placement choices shape
+//! single-request latency (a compact §5.4 / Figs. 9–10 walk-through).
+//!
+//! Run: `cargo run --release --example placement_study`
+
+use npusim::config::{ChipConfig, ModelConfig};
+use npusim::experiments::fig10::request_latency_ms;
+use npusim::experiments::fig9::prefill_latency_ms;
+use npusim::parallel::partition::PartitionStrategy;
+use npusim::parallel::placement::Placement;
+use npusim::util::table::{f3, Table};
+
+fn main() -> anyhow::Result<()> {
+    let model = ModelConfig::qwen3_4b();
+
+    // Partition strategies across sequence lengths (Fig. 9's crossover).
+    let mut t = Table::new(
+        "partition strategy vs sequence length (Qwen3-4B prefill, TP=4, ms)",
+        &["seq", "1d-mn (allgather)", "1d-k (allreduce)", "2d-mnk"],
+    );
+    for seq in [256u64, 1024, 4096, 16384] {
+        t.row(&[
+            seq.to_string(),
+            f3(prefill_latency_ms(&model, seq, PartitionStrategy::OneDimMN)),
+            f3(prefill_latency_ms(&model, seq, PartitionStrategy::OneDimK)),
+            f3(prefill_latency_ms(
+                &model,
+                seq,
+                PartitionStrategy::TwoDim { rows: 2, cols: 2 },
+            )),
+        ]);
+    }
+    t.print();
+    println!();
+
+    // Core placements (Fig. 10): same collective, different physical map.
+    let chip = ChipConfig::large_core();
+    let mut t = Table::new(
+        "core placement (Qwen3-4B, TP=4, seq 2048 + 8 decode steps, ms)",
+        &["placement", "latency"],
+    );
+    for p in Placement::all() {
+        t.row(&[
+            p.name().to_string(),
+            f3(request_latency_ms(&chip, &model, 4, p, 2048, 8)),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nguidance (§5.6): AllReduce for short/chunked sequences, AllGather or 2-D\n\
+         for long prompts; ring placement matches ring collectives best."
+    );
+    Ok(())
+}

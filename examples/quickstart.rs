@@ -1,0 +1,32 @@
+//! Quickstart: simulate a small LLM serving workload on a 64-core NPU and
+//! print the serving metrics — the 20-line tour of the public API.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use npusim::config::{ChipConfig, ModelConfig, WorkloadConfig};
+use npusim::serving::pd_fusion::{simulate_fusion, FusionConfig};
+use npusim::sim::chip::ChipSim;
+
+fn main() -> anyhow::Result<()> {
+    // Hardware: the paper's Table-3 "large-core" chip (8x8 mesh, 128x128
+    // systolic arrays, 32 MB SRAM + core-local HBM per core).
+    let mut chip = ChipSim::new(ChipConfig::large_core());
+
+    // Model + workload: Qwen3-4B under a decode-dominated trace.
+    let model = ModelConfig::qwen3_4b();
+    let workload = WorkloadConfig::decode_dominated(8);
+
+    // Serving strategy: PD fusion with chunked prefill (§4.3.2).
+    let metrics = simulate_fusion(&mut chip, &model, &workload, &FusionConfig::default())?;
+
+    println!("requests completed : {}", metrics.n_requests());
+    println!("TTFT mean          : {:.1} ms", metrics.ttft_s().mean() * 1e3);
+    println!("TBT  mean          : {:.2} ms", metrics.tbt_s().mean() * 1e3);
+    println!("throughput         : {:.1} tok/s", metrics.tokens_per_s());
+
+    println!("\nwhere the cycles went:");
+    for (class, cycles, pct) in chip.aggregate_tracer().breakdown() {
+        println!("  {:<12} {:>14} cycles  {:>5.1}%", class.name(), cycles, pct);
+    }
+    Ok(())
+}

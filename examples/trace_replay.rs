@@ -1,0 +1,69 @@
+//! Trace replay: serve a Mooncake-format JSONL trace through both serving
+//! strategies and compare. Uses a bundled synthetic trace if no path is
+//! given: `cargo run --release --example trace_replay [-- path/to.jsonl]`
+
+use npusim::config::{ChipConfig, ModelConfig, WorkloadConfig};
+use npusim::serving::pd_disagg::{simulate_disagg_requests, DisaggConfig};
+use npusim::serving::pd_fusion::{simulate_fusion_requests, FusionConfig};
+use npusim::serving::{request, trace};
+use npusim::sim::chip::ChipSim;
+use npusim::util::table::{f3, Table};
+
+fn main() -> anyhow::Result<()> {
+    // Load the trace (or synthesise a Mooncake-like one, round-tripped
+    // through the JSONL format to exercise the parser end to end).
+    let reqs = match std::env::args().nth(1) {
+        Some(path) => {
+            println!("replaying {path}");
+            trace::load_jsonl(&path, Some(32))?
+        }
+        None => {
+            let synthetic = request::generate(&WorkloadConfig::mooncake_like(12));
+            let jsonl = trace::to_jsonl(&synthetic);
+            println!("no trace given; using a synthetic Mooncake-like trace:");
+            for line in jsonl.lines().take(3) {
+                println!("  {line}");
+            }
+            println!("  ... ({} requests)", synthetic.len());
+            trace::parse_jsonl(&jsonl)?
+        }
+    };
+    let total_in: usize = reqs.iter().map(|r| r.input_len).sum();
+    let total_out: usize = reqs.iter().map(|r| r.output_len).sum();
+    println!(
+        "trace: {} requests, {total_in} prompt tokens, {total_out} output tokens\n",
+        reqs.len()
+    );
+
+    let model = ModelConfig::qwen3_4b();
+    let mut t = Table::new(
+        "trace replay — PD fusion vs PD disaggregation (Qwen3-4B, 64 cores)",
+        &["system", "TTFT ms", "TBT ms", "e2e s", "tok/s"],
+    );
+    for (name, disagg) in [("fusion (TP16)", false), ("disagg P42/D21", true)] {
+        let mut chip = ChipSim::new(ChipConfig::large_core());
+        let m = if disagg {
+            simulate_disagg_requests(&mut chip, &model, reqs.clone(), &DisaggConfig::p42_d21())?
+        } else {
+            simulate_fusion_requests(
+                &mut chip,
+                &model,
+                reqs.clone(),
+                &FusionConfig {
+                    tp: 16,
+                    stages: 1,
+                    ..FusionConfig::default()
+                },
+            )?
+        };
+        t.row(&[
+            name.to_string(),
+            f3(m.ttft_s().mean() * 1e3),
+            f3(m.tbt_s().mean() * 1e3),
+            f3(m.e2e_s().mean()),
+            f3(m.tokens_per_s()),
+        ]);
+    }
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,71 @@
+"""AOT export: lower the TinyQwen entry points to HLO **text** artifacts
+the rust runtime loads via the `xla` crate.
+
+HLO text — NOT `lowered.compile()` / serialized protos: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage: cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export(out_dir: pathlib.Path, seed: int = 0) -> dict:
+    c = model.CONFIG
+    out_dir.mkdir(parents=True, exist_ok=True)
+    prefill_fn, decode_fn = model.entry_points(seed)
+
+    b, p = c["decode_batch"], c["prefill_len"]
+    kv_shape = (c["layers"], 2, b, c["max_seq"], c["kv_heads"], c["head_dim"])
+
+    tok_p = jax.ShapeDtypeStruct((b, p), jnp.int32)
+    tok_d = jax.ShapeDtypeStruct((b,), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    kv = jax.ShapeDtypeStruct(kv_shape, jnp.float32)
+
+    outputs = {}
+    for name, lowered in [
+        ("prefill", jax.jit(prefill_fn).lower(tok_p)),
+        ("decode", jax.jit(decode_fn).lower(tok_d, pos, kv)),
+    ]:
+        text = to_hlo_text(lowered)
+        path = out_dir / f"{name}.hlo.txt"
+        path.write_text(text)
+        outputs[name] = path
+        print(f"wrote {path} ({len(text)} chars)")
+
+    meta = "".join(f"{k}={v}\n" for k, v in c.items())
+    meta_path = out_dir / "model_meta.txt"
+    meta_path.write_text(meta)
+    outputs["meta"] = meta_path
+    print(f"wrote {meta_path}")
+    return outputs
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts", type=pathlib.Path)
+    ap.add_argument("--seed", default=0, type=int)
+    args = ap.parse_args()
+    export(args.out_dir, args.seed)
+
+
+if __name__ == "__main__":
+    main()

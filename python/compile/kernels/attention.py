@@ -1,0 +1,82 @@
+"""L1 Pallas kernel: masked decode attention over the KV cache.
+
+One grid step per (batch, query-head); the KV sequence is processed in
+S-blocks with a running (flash-style) max/sum so the softmax never
+materialises outside VMEM — the BlockSpec walk over the KV cache is the
+HBM->VMEM streaming schedule the paper's section 4.2 KV management feeds.
+
+interpret=True: see matmul.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# KV-sequence block (VMEM slab) per inner step.
+BLOCK_S = 64
+
+
+def _decode_attn_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, *, s_blocks: int, scale: float):
+    """One (batch, head) pair: q [1, d], k/v [1, S, d], len [1, 1]."""
+    q = q_ref[0]  # [d]
+    kv_len = len_ref[0, 0]
+
+    def body(s, carry):
+        m_prev, l_prev, acc = carry
+        ks = k_ref[0, pl.ds(s * BLOCK_S, BLOCK_S), :]  # [B_S, d]
+        vs = v_ref[0, pl.ds(s * BLOCK_S, BLOCK_S), :]
+        logits = (ks @ q) * scale  # [B_S]
+        idx = s * BLOCK_S + jnp.arange(BLOCK_S)
+        logits = jnp.where(idx < kv_len, logits, -jnp.inf)
+        m_cur = jnp.maximum(m_prev, jnp.max(logits))
+        # Rescale the running accumulator (flash-attention recurrence).
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(logits - m_cur)  # [B_S]
+        l_cur = l_prev * alpha + jnp.sum(p)
+        acc = acc * alpha + p @ vs  # [d]
+        return m_cur, l_cur, acc
+
+    d = q_ref.shape[-1]
+    init = (jnp.float32(-jnp.inf), jnp.float32(0.0), jnp.zeros((d,), jnp.float32))
+    _, l_fin, acc = jax.lax.fori_loop(0, s_blocks, body, init)
+    o_ref[0, :] = acc / l_fin
+
+
+def decode_attention(q, k, v, kv_len) -> jax.Array:
+    """Single-token attention.
+
+    q: [B, H, d]; k, v: [B, S, KH, d] (GQA: H a multiple of KH);
+    kv_len: [B] valid prefix lengths. Returns [B, H, d].
+    """
+    b, h, d = q.shape
+    _, s, kh, _ = k.shape
+    assert h % kh == 0 and s % BLOCK_S == 0, (h, kh, s)
+    groups = h // kh
+    scale = 1.0 / (d**0.5)
+
+    # Expand KV heads to query heads (GQA) and flatten (batch, head).
+    k_full = jnp.repeat(k, groups, axis=2)  # [B, S, H, d]
+    v_full = jnp.repeat(v, groups, axis=2)
+    qf = q.reshape(b * h, d).astype(jnp.float32)
+    kf = jnp.moveaxis(k_full, 2, 1).reshape(b * h, s, d).astype(jnp.float32)
+    vf = jnp.moveaxis(v_full, 2, 1).reshape(b * h, s, d).astype(jnp.float32)
+    lens = jnp.repeat(kv_len.astype(jnp.int32), h).reshape(b * h, 1)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _decode_attn_kernel, s_blocks=s // BLOCK_S, scale=scale
+        ),
+        grid=(b * h,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, s, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, d), jnp.float32),
+        interpret=True,
+    )(qf, kf, vf, lens)
+    return out.reshape(b, h, d)

@@ -1,0 +1,85 @@
+"""L1 Pallas kernel: tiled matmul — the paper's per-core GEMM hot-spot.
+
+The paper's compute model streams `sa_dim x sa_dim` weight tiles through a
+systolic array (T_comp = N_tiles * T_cycles + T_inject, section 3.1). On
+TPU the same schedule is expressed with Pallas `BlockSpec`s: the grid walks
+(M, N) output tiles, an inner fori_loop accumulates over K tiles, and the
+BlockSpec index maps are the HBM->VMEM DMA schedule the paper's per-core
+DMA engine performs (DESIGN.md section Hardware-Adaptation).
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU efficiency is estimated in DESIGN.md section Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-friendly default tiles (128x128 output tile, 128-deep K slices).
+TILE_M = 128
+TILE_N = 128
+TILE_K = 128
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, k_tiles: int):
+    """Accumulate one (TILE_M, TILE_N) output tile over k_tiles K-slices."""
+
+    @functools.partial(jax.lax.fori_loop, 0, k_tiles, init_val=jnp.zeros_like(o_ref))
+    def acc(k, acc):
+        xs = x_ref[:, pl.ds(k * TILE_K, TILE_K)]
+        ws = w_ref[pl.ds(k * TILE_K, TILE_K), :]
+        return acc + jnp.dot(xs, ws, preferred_element_type=jnp.float32)
+
+    o_ref[...] = acc
+
+
+def _pad_to(x, m, axis):
+    pad = (-x.shape[axis]) % m
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """`x @ w` via the Pallas tiled kernel (f32), any 2-D shapes.
+
+    Inputs are zero-padded up to tile multiples (the paper's "pad the last
+    tile" rule) and the result is sliced back.
+    """
+    assert x.ndim == 2 and w.ndim == 2 and x.shape[1] == w.shape[0], (
+        x.shape,
+        w.shape,
+    )
+    m, k = x.shape
+    _, n = w.shape
+    xp = _pad_to(_pad_to(x.astype(jnp.float32), TILE_M, 0), TILE_K, 1)
+    wp = _pad_to(_pad_to(w.astype(jnp.float32), TILE_K, 0), TILE_N, 1)
+    mp, kp = xp.shape
+    _, np_ = wp.shape
+    k_tiles = kp // TILE_K
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, k_tiles=k_tiles),
+        grid=(mp // TILE_M, np_ // TILE_N),
+        in_specs=[
+            # Row-band of X per M-tile: the VMEM-resident activation slab.
+            pl.BlockSpec((TILE_M, kp), lambda i, j: (i, 0)),
+            # Column-band of W per N-tile: streamed weight tiles.
+            pl.BlockSpec((kp, TILE_N), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((TILE_M, TILE_N), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+def matmul_batched(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Batched wrapper: collapses leading dims of `x` into M."""
+    lead = x.shape[:-1]
+    out = matmul(x.reshape(-1, x.shape[-1]), w)
+    return out.reshape(*lead, w.shape[-1])

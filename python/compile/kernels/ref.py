@@ -1,0 +1,39 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Everything here is straight-line jax.numpy with no Pallas — the reference
+semantics the kernels (and therefore the AOT artifacts rust executes) are
+validated against in python/tests/.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, w):
+    """Plain f32 matmul."""
+    return jnp.matmul(x.astype(jnp.float32), w.astype(jnp.float32))
+
+
+def decode_attention_ref(q, k, v, kv_len):
+    """Masked single-token attention; shapes as kernels.attention.
+
+    q: [B, H, d]; k, v: [B, S, KH, d]; kv_len: [B] -> [B, H, d].
+    """
+    b, h, d = q.shape
+    _, s, kh, _ = k.shape
+    groups = h // kh
+    k_full = jnp.repeat(k, groups, axis=2)  # [B, S, H, d]
+    v_full = jnp.repeat(v, groups, axis=2)
+    q = q.astype(jnp.float32)
+    logits = jnp.einsum("bhd,bshd->bhs", q, k_full.astype(jnp.float32))
+    logits = logits / (d**0.5)
+    mask = jnp.arange(s)[None, None, :] < kv_len[:, None, None]
+    logits = jnp.where(mask, logits, -jnp.inf)
+    p = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhs,bshd->bhd", p, v_full.astype(jnp.float32))
+
+
+def swiglu_ref(gate, up):
+    """silu(gate) * up in plain jnp."""
+    gate = gate.astype(jnp.float32)
+    return gate / (1.0 + jnp.exp(-gate)) * up.astype(jnp.float32)

@@ -1,0 +1,53 @@
+"""L1 Pallas kernel: fused SwiGLU activation — silu(gate) * up.
+
+The FFN's elementwise hot-spot, fused so the gate/up intermediates never
+round-trip to HBM: the grid walks row blocks, each step holding one
+(BLOCK_R, intermediate) slab of both inputs in VMEM (the paper's vector
+unit works the same way on its SRAM-resident activation slabs).
+
+interpret=True: see matmul.py.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows per grid step (token positions).
+BLOCK_R = 128
+
+
+def _swiglu_kernel(g_ref, u_ref, o_ref):
+    g = g_ref[...]
+    u = u_ref[...]
+    # silu(g) = g * sigmoid(g), computed stably in f32.
+    o_ref[...] = (g * jax.nn.sigmoid(g)) * u
+
+
+def swiglu(gate: jax.Array, up: jax.Array) -> jax.Array:
+    """Fused `silu(gate) * up` over matching 2-D `[rows, inter]` arrays."""
+    assert gate.shape == up.shape and gate.ndim == 2, (gate.shape, up.shape)
+    rows, inter = gate.shape
+    pad = (-rows) % BLOCK_R
+    gp = jnp.pad(gate.astype(jnp.float32), ((0, pad), (0, 0)))
+    upad = jnp.pad(up.astype(jnp.float32), ((0, pad), (0, 0)))
+    rp = rows + pad
+
+    out = pl.pallas_call(
+        _swiglu_kernel,
+        grid=(rp // BLOCK_R,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_R, inter), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_R, inter), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_R, inter), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rp, inter), jnp.float32),
+        interpret=True,
+    )(gp, upad)
+    return out[:rows]
+
+
+def swiglu_batched(gate: jax.Array, up: jax.Array) -> jax.Array:
+    """Collapse leading dims, apply the kernel, restore the shape."""
+    lead = gate.shape[:-1]
+    out = swiglu(gate.reshape(-1, gate.shape[-1]), up.reshape(-1, up.shape[-1]))
+    return out.reshape(*lead, gate.shape[-1])

@@ -1,0 +1,172 @@
+"""L2: TinyQwen — a Qwen3-style transformer in functional JAX, calling the
+L1 Pallas kernels, lowered once by aot.py to HLO text for the rust runtime.
+
+Architecture mirrors the paper's evaluated family at toy scale: RMSNorm,
+RoPE, grouped-query attention, SwiGLU FFN, tied embeddings. Weights are
+seeded constants baked into the lowered HLO so the rust side only feeds
+tokens (and the KV cache it threads between decode steps).
+
+Entry points (both return a tuple, lowered with return_tuple=True):
+  prefill(tokens[i32 B,P])            -> (logits[B,P,V], kv[L,2,B,S,KH,D])
+  decode(tokens[i32 B], pos[i32], kv) -> (logits[B,V],   kv[L,2,B,S,KH,D])
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.attention import decode_attention
+from compile.kernels.matmul import matmul_batched
+from compile.kernels.swiglu import swiglu_batched
+
+# Toy config (exported to artifacts/model_meta.txt; rust parses it).
+CONFIG = {
+    "vocab": 256,
+    "hidden": 64,
+    "layers": 2,
+    "heads": 4,
+    "kv_heads": 2,
+    "head_dim": 16,
+    "intermediate": 128,
+    "max_seq": 64,
+    "prefill_len": 16,
+    "decode_batch": 2,
+}
+
+
+def init_params(seed: int = 0):
+    """Seeded parameter pytree (f32)."""
+    c = CONFIG
+    h, hd = c["hidden"], c["head_dim"]
+    qd = c["heads"] * hd
+    kvd = c["kv_heads"] * hd
+    keys = jax.random.split(jax.random.PRNGKey(seed), 2 + 7 * c["layers"])
+    scale = 0.05
+    params = {
+        "embed": jax.random.normal(keys[0], (c["vocab"], h)) * scale,
+        "final_norm": jnp.ones((h,)),
+        "layers": [],
+    }
+    ki = 1
+    for _ in range(c["layers"]):
+        params["layers"].append(
+            {
+                "attn_norm": jnp.ones((h,)),
+                "wq": jax.random.normal(keys[ki + 0], (h, qd)) * scale,
+                "wk": jax.random.normal(keys[ki + 1], (h, kvd)) * scale,
+                "wv": jax.random.normal(keys[ki + 2], (h, kvd)) * scale,
+                "wo": jax.random.normal(keys[ki + 3], (qd, h)) * scale,
+                "ffn_norm": jnp.ones((h,)),
+                "w_gate": jax.random.normal(keys[ki + 4], (h, c["intermediate"])) * scale,
+                "w_up": jax.random.normal(keys[ki + 5], (h, c["intermediate"])) * scale,
+                "w_down": jax.random.normal(keys[ki + 6], (c["intermediate"], h)) * scale,
+            }
+        )
+        ki += 7
+    return params
+
+
+def _rmsnorm(x, w):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + 1e-6) * w
+
+
+def _rope(x, positions):
+    """Rotary embedding; x [..., T, n_heads, d], positions [T]."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (10000.0 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions[:, None].astype(jnp.float32) * freqs[None, :]  # [T, half]
+    cos = jnp.cos(angles)[None, :, None, :]
+    sin = jnp.sin(angles)[None, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _swiglu(params, x):
+    gate = matmul_batched(x, params["w_gate"])
+    up = matmul_batched(x, params["w_up"])
+    return matmul_batched(swiglu_batched(gate, up), params["w_down"])
+
+
+def prefill(params, tokens):
+    """Full-prompt pass. tokens [B, P] i32 -> (logits [B,P,V], kv)."""
+    c = CONFIG
+    b, p = tokens.shape
+    s, kh, hd, nh = c["max_seq"], c["kv_heads"], c["head_dim"], c["heads"]
+    positions = jnp.arange(p)
+    x = params["embed"][tokens]  # [B, P, H]
+    kv = jnp.zeros((c["layers"], 2, b, s, kh, hd), jnp.float32)
+
+    causal = jnp.tril(jnp.ones((p, p), bool))
+    for li, lp in enumerate(params["layers"]):
+        xin = _rmsnorm(x, lp["attn_norm"])
+        q = matmul_batched(xin, lp["wq"]).reshape(b, p, nh, hd)
+        k = matmul_batched(xin, lp["wk"]).reshape(b, p, kh, hd)
+        v = matmul_batched(xin, lp["wv"]).reshape(b, p, kh, hd)
+        q = _rope(q, positions)
+        k = _rope(k, positions)
+        kv = kv.at[li, 0, :, :p].set(k)
+        kv = kv.at[li, 1, :, :p].set(v)
+        # Prefill attention (jnp; the Pallas hot-spot is the decode path).
+        groups = nh // kh
+        kf = jnp.repeat(k, groups, axis=2)
+        vf = jnp.repeat(v, groups, axis=2)
+        logits = jnp.einsum("bthd,bshd->bhts", q, kf) / (hd**0.5)
+        logits = jnp.where(causal[None, None], logits, -jnp.inf)
+        w = jax.nn.softmax(logits, axis=-1)
+        attn = jnp.einsum("bhts,bshd->bthd", w, vf).reshape(b, p, nh * hd)
+        x = x + matmul_batched(attn, lp["wo"])
+        x = x + _swiglu(lp, _rmsnorm(x, lp["ffn_norm"]))
+
+    x = _rmsnorm(x, params["final_norm"])
+    logits = matmul_batched(x, params["embed"].T)  # tied embeddings
+    return logits, kv
+
+
+def decode(params, tokens, pos, kv):
+    """One decode step. tokens [B] i32, pos scalar i32 (tokens go to index
+    `pos`; attention covers [0, pos]). Returns (logits [B,V], new kv)."""
+    c = CONFIG
+    b = tokens.shape[0]
+    kh, hd, nh = c["kv_heads"], c["head_dim"], c["heads"]
+    x = params["embed"][tokens][:, None, :]  # [B, 1, H]
+    positions = pos[None].astype(jnp.int32)
+
+    for li, lp in enumerate(params["layers"]):
+        xin = _rmsnorm(x, lp["attn_norm"])
+        q = matmul_batched(xin, lp["wq"]).reshape(b, 1, nh, hd)
+        k = matmul_batched(xin, lp["wk"]).reshape(b, 1, kh, hd)
+        v = matmul_batched(xin, lp["wv"]).reshape(b, 1, kh, hd)
+        q = _rope(q, positions)
+        k = _rope(k, positions)
+        kv = jax.lax.dynamic_update_slice(
+            kv, k[None, None, :, :, :, :], (li, 0, 0, pos, 0, 0)
+        )
+        kv = jax.lax.dynamic_update_slice(
+            kv, v[None, None, :, :, :, :], (li, 1, 0, pos, 0, 0)
+        )
+        kv_len = jnp.full((b,), pos + 1, jnp.int32)
+        attn = decode_attention(q[:, 0], kv[li, 0], kv[li, 1], kv_len)  # [B,NH,hd]
+        x = x + matmul_batched(attn.reshape(b, 1, nh * hd), lp["wo"])
+        x = x + _swiglu(lp, _rmsnorm(x, lp["ffn_norm"]))
+
+    x = _rmsnorm(x, params["final_norm"])
+    logits = matmul_batched(x, params["embed"].T)[:, 0]
+    return logits, kv
+
+
+@functools.lru_cache(maxsize=1)
+def entry_points(seed: int = 0):
+    """(prefill_fn, decode_fn) closed over the seeded parameters; both
+    return tuples, ready for jax.jit(...).lower()."""
+    params = init_params(seed)
+
+    def prefill_fn(tokens):
+        return prefill(params, tokens)
+
+    def decode_fn(tokens, pos, kv):
+        return decode(params, tokens, pos, kv)
+
+    return prefill_fn, decode_fn

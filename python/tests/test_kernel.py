@@ -1,0 +1,169 @@
+"""L1 kernel correctness: Pallas kernels vs the pure-jnp oracles.
+
+hypothesis sweeps shapes/values; assert_allclose against ref.py is the
+core correctness signal for everything the AOT artifacts compute.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attention import BLOCK_S, decode_attention
+from compile.kernels.matmul import matmul, matmul_batched
+
+
+def rand(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape) * scale
+
+
+class TestMatmul:
+    @pytest.mark.parametrize(
+        "m,k,n",
+        [
+            (128, 128, 128),  # exactly one tile
+            (256, 128, 384),  # multi-tile grid
+            (64, 64, 64),     # sub-tile (padding path)
+            (130, 257, 100),  # ragged everything
+            (1, 64, 256),     # GEMV-shaped
+        ],
+    )
+    def test_matches_ref(self, m, k, n):
+        x, w = rand(1, (m, k)), rand(2, (k, n))
+        np.testing.assert_allclose(
+            matmul(x, w), ref.matmul_ref(x, w), rtol=1e-4, atol=1e-4
+        )
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        m=st.integers(1, 200),
+        k=st.integers(1, 200),
+        n=st.integers(1, 200),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_hypothesis(self, m, k, n, seed):
+        x = rand(seed, (m, k))
+        w = rand(seed + 1, (k, n))
+        np.testing.assert_allclose(
+            matmul(x, w), ref.matmul_ref(x, w), rtol=1e-4, atol=1e-4
+        )
+
+    def test_batched_collapses_leading_dims(self):
+        x, w = rand(3, (2, 5, 64)), rand(4, (64, 32))
+        out = matmul_batched(x, w)
+        assert out.shape == (2, 5, 32)
+        np.testing.assert_allclose(
+            out, ref.matmul_ref(x.reshape(10, 64), w).reshape(2, 5, 32), rtol=1e-4, atol=1e-4
+        )
+
+    def test_zero_input_gives_zero(self):
+        out = matmul(jnp.zeros((16, 32)), rand(5, (32, 16)))
+        assert float(jnp.abs(out).max()) == 0.0
+
+
+class TestDecodeAttention:
+    @pytest.mark.parametrize("b,h,kh,d,s", [(2, 4, 2, 16, 64), (1, 8, 8, 32, 128), (3, 4, 1, 16, 64)])
+    def test_matches_ref(self, b, h, kh, d, s):
+        q = rand(10, (b, h, d))
+        k = rand(11, (b, s, kh, d))
+        v = rand(12, (b, s, kh, d))
+        kv_len = jnp.array([min(i * 7 + 1, s) for i in range(b)], jnp.int32)
+        np.testing.assert_allclose(
+            decode_attention(q, k, v, kv_len),
+            ref.decode_attention_ref(q, k, v, kv_len),
+            rtol=1e-4,
+            atol=1e-4,
+        )
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        b=st.integers(1, 3),
+        groups=st.integers(1, 4),
+        kh=st.sampled_from([1, 2, 4]),
+        s_blocks=st.integers(1, 3),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_hypothesis(self, b, groups, kh, s_blocks, seed):
+        h, d, s = groups * kh, 16, s_blocks * BLOCK_S
+        q = rand(seed, (b, h, d))
+        k = rand(seed + 1, (b, s, kh, d))
+        v = rand(seed + 2, (b, s, kh, d))
+        lens = jax.random.randint(jax.random.PRNGKey(seed + 3), (b,), 1, s + 1)
+        np.testing.assert_allclose(
+            decode_attention(q, k, v, lens),
+            ref.decode_attention_ref(q, k, v, lens),
+            rtol=1e-4,
+            atol=1e-4,
+        )
+
+    def test_mask_ignores_stale_kv(self):
+        # Garbage beyond kv_len must not affect the output.
+        b, h, kh, d, s = 1, 4, 2, 16, 64
+        q = rand(20, (b, h, d))
+        k = rand(21, (b, s, kh, d))
+        v = rand(22, (b, s, kh, d))
+        kv_len = jnp.array([10], jnp.int32)
+        base = decode_attention(q, k, v, kv_len)
+        k2 = k.at[:, 10:].set(1e9)
+        v2 = v.at[:, 10:].set(-1e9)
+        np.testing.assert_allclose(
+            base, decode_attention(q, k2, v2, kv_len), rtol=1e-5, atol=1e-5
+        )
+
+    def test_single_valid_token_returns_its_value(self):
+        b, h, kh, d, s = 1, 2, 2, 16, 64
+        q = rand(30, (b, h, d))
+        k = rand(31, (b, s, kh, d))
+        v = rand(32, (b, s, kh, d))
+        out = decode_attention(q, k, v, jnp.array([1], jnp.int32))
+        np.testing.assert_allclose(out[0], v[0, 0], rtol=1e-5, atol=1e-5)
+
+
+class TestSwiglu:
+    @pytest.mark.parametrize("rows,inter", [(128, 128), (1, 64), (300, 96), (256, 512)])
+    def test_matches_ref(self, rows, inter):
+        from compile.kernels.swiglu import swiglu
+
+        g, u = rand(40, (rows, inter), 3.0), rand(41, (rows, inter))
+        np.testing.assert_allclose(
+            swiglu(g, u), ref.swiglu_ref(g, u), rtol=1e-5, atol=1e-5
+        )
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        rows=st.integers(1, 300),
+        inter=st.sampled_from([32, 64, 128]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_hypothesis(self, rows, inter, seed):
+        from compile.kernels.swiglu import swiglu
+
+        g, u = rand(seed, (rows, inter), 2.0), rand(seed + 1, (rows, inter))
+        np.testing.assert_allclose(
+            swiglu(g, u), ref.swiglu_ref(g, u), rtol=1e-5, atol=1e-5
+        )
+
+    def test_batched_shape(self):
+        from compile.kernels.swiglu import swiglu_batched
+
+        g, u = rand(42, (2, 7, 64)), rand(43, (2, 7, 64))
+        out = swiglu_batched(g, u)
+        assert out.shape == (2, 7, 64)
+        np.testing.assert_allclose(
+            out,
+            ref.swiglu_ref(g, u),
+            rtol=1e-5,
+            atol=1e-5,
+        )
+
+    def test_extremes_are_stable(self):
+        from compile.kernels.swiglu import swiglu
+
+        g = jnp.array([[-100.0, 0.0, 100.0, -5.0]])
+        u = jnp.ones((1, 4))
+        out = np.asarray(swiglu(g, u))
+        assert np.isfinite(out).all()
+        assert abs(out[0, 0]) < 1e-6          # silu(-100) -> 0
+        assert abs(out[0, 2] - 100.0) < 1e-3  # silu(100) -> 100

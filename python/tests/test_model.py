@@ -1,0 +1,92 @@
+"""L2 model correctness: shapes, determinism, and the prefill/decode
+consistency that the rust request path depends on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(0)
+
+
+C = model.CONFIG
+B, P = C["decode_batch"], C["prefill_len"]
+KV_SHAPE = (C["layers"], 2, B, C["max_seq"], C["kv_heads"], C["head_dim"])
+
+
+def toy_tokens(seed=0):
+    return jax.random.randint(jax.random.PRNGKey(seed), (B, P), 0, C["vocab"])
+
+
+class TestShapes:
+    def test_prefill_shapes(self, params):
+        logits, kv = model.prefill(params, toy_tokens())
+        assert logits.shape == (B, P, C["vocab"])
+        assert kv.shape == KV_SHAPE
+
+    def test_decode_shapes(self, params):
+        _, kv = model.prefill(params, toy_tokens())
+        tok = jnp.array([1, 2], jnp.int32)
+        logits, kv2 = model.decode(params, tok, jnp.int32(P), kv)
+        assert logits.shape == (B, C["vocab"])
+        assert kv2.shape == KV_SHAPE
+
+    def test_kv_written_only_in_prefix(self, params):
+        _, kv = model.prefill(params, toy_tokens())
+        assert float(jnp.abs(kv[:, :, :, P:]).max()) == 0.0
+        assert float(jnp.abs(kv[:, :, :, :P]).max()) > 0.0
+
+
+class TestConsistency:
+    def test_deterministic(self, params):
+        a, _ = model.prefill(params, toy_tokens())
+        b, _ = model.prefill(params, toy_tokens())
+        np.testing.assert_array_equal(a, b)
+
+    def test_decode_matches_prefill_logits(self, params):
+        """Teacher-forcing: decoding token t with the prefix's KV must give
+        the same logits as prefill's position-t output."""
+        tokens = toy_tokens(7)
+        full_logits, _ = model.prefill(params, tokens)
+        # Prefill only the first P-1 tokens, then decode token P-1.
+        prefix = tokens.at[:, P - 1].set(0)  # value at P-1 unused below
+        _, kv = model.prefill(params, prefix)
+        # Zero the KV the prefix wrote at position P-1 onward is absent
+        # anyway; decode step writes position P-1.
+        kv = kv.at[:, :, :, P - 1 :].set(0.0)
+        logits, _ = model.decode(params, tokens[:, P - 1], jnp.int32(P - 1), kv)
+        np.testing.assert_allclose(
+            logits, full_logits[:, P - 1], rtol=2e-3, atol=2e-3
+        )
+
+    def test_decode_steps_accumulate_kv(self, params):
+        _, kv = model.prefill(params, toy_tokens())
+        tok = jnp.array([3, 4], jnp.int32)
+        _, kv1 = model.decode(params, tok, jnp.int32(P), kv)
+        assert float(jnp.abs(kv1[:, :, :, P]).max()) > 0.0
+        assert float(jnp.abs(kv1[:, :, :, P + 1 :]).max()) == 0.0
+
+    def test_position_changes_output(self, params):
+        _, kv = model.prefill(params, toy_tokens())
+        tok = jnp.array([5, 6], jnp.int32)
+        a, _ = model.decode(params, tok, jnp.int32(P), kv)
+        b, _ = model.decode(params, tok, jnp.int32(P + 3), kv)
+        assert not np.allclose(a, b)
+
+
+class TestExport:
+    def test_aot_export_writes_artifacts(self, tmp_path):
+        from compile import aot
+
+        outputs = aot.export(tmp_path)
+        for name in ("prefill", "decode", "meta"):
+            assert outputs[name].exists()
+        hlo = outputs["prefill"].read_text()
+        assert "HloModule" in hlo
+        meta = outputs["meta"].read_text()
+        assert "vocab=256" in meta

@@ -1,0 +1,12 @@
+//! `cargo bench` target for the design-choice ablations (chunk size, KV
+//! block granularity, planner split, PD placement policy).
+
+use npusim::experiments::{self, Opts};
+use npusim::util::bench::Bench;
+
+fn main() {
+    let bench = Bench::new("ablations").iters(1).warmup(0);
+    bench.run("ablations", || {
+        experiments::run("ablations", &Opts::default()).expect("experiment failed");
+    });
+}

@@ -1,0 +1,16 @@
+//! `cargo bench` target regenerating the paper's fig9 (see
+//! npusim::experiments). Prints the same rows the paper reports and
+//! records wall time through the in-tree bench harness.
+
+use npusim::experiments::{self, Opts};
+use npusim::util::bench::Bench;
+
+fn main() {
+    let bench = Bench::new("fig9").iters(1).warmup(0);
+    let opts = Opts::default();
+    for id in ["fig9"].join(" ").split_whitespace() {
+        bench.run(id, || {
+            experiments::run(id, &opts).expect("experiment failed");
+        });
+    }
+}

@@ -1,0 +1,128 @@
+//! Microbenchmarks of the simulator's hot paths — the profile targets of
+//! the §Perf optimization pass (EXPERIMENTS.md): NoC transfers, TLM HBM
+//! accesses, ring collectives, and a full model iteration.
+
+use npusim::config::{ChipConfig, ModelConfig};
+use npusim::memmgr::planner::{plan, PlanRequest};
+use npusim::memmgr::KvCache;
+use npusim::model::exec::{run_iteration, ExecConfig};
+use npusim::model::{BatchItem, IterBatch};
+use npusim::parallel::collectives::ring_all_reduce;
+use npusim::parallel::partition::PartitionStrategy;
+use npusim::parallel::placement::{Placement, Region, TpGroup};
+use npusim::sim::chip::ChipSim;
+use npusim::sim::tracer::OpClass;
+use npusim::util::bench::{black_box, Bench};
+
+fn main() {
+    let bench = Bench::new("micro").iters(10).warmup(2);
+
+    // Raw mesh transfer throughput (events/s of the NoC model).
+    bench.run("mesh_transfer_10k", || {
+        let mut chip = ChipSim::new(ChipConfig::large_core());
+        for i in 0..10_000u64 {
+            let src = npusim::sim::noc::Coord::new((i % 8) as usize, ((i / 8) % 8) as usize);
+            let dst = npusim::sim::noc::Coord::new(((i + 3) % 8) as usize, ((i / 5) % 8) as usize);
+            black_box(chip.mesh.transfer(src, dst, 4096, i));
+        }
+    });
+
+    // TLM HBM accesses (burst pipeline).
+    bench.run("hbm_access_10k", || {
+        let chip = ChipConfig::large_core();
+        let mut core =
+            npusim::sim::CoreSim::new(&chip, npusim::sim::noc::Coord::new(0, 0), chip.core);
+        for i in 0..10_000u64 {
+            black_box(core.hbm_access(16 * 1024, OpClass::HbmWeight));
+            let _ = i;
+        }
+    });
+
+    // Ring AllReduce on an 8-core ring.
+    bench.run("ring_allreduce_x100", || {
+        let mut chip = ChipSim::new(ChipConfig::large_core());
+        let g = TpGroup::place(Region::new(0, 0, 2, 4), Placement::Ring);
+        for _ in 0..100 {
+            black_box(ring_all_reduce(&mut chip, &g, 1 << 20));
+        }
+    });
+
+    // One full Qwen3-4B prefill iteration (the serving inner loop).
+    let model = ModelConfig::qwen3_4b();
+    bench.run("prefill_iteration_512tok", || {
+        let mut chip = ChipSim::new(ChipConfig::large_core());
+        let group = TpGroup::place(Region::new(0, 0, 2, 2), Placement::Ring);
+        let p = plan(
+            &chip.cfg.core,
+            &model,
+            &PlanRequest {
+                layers: model.layers,
+                tp: 4,
+                iter_tokens: 512,
+                kv_share: 0.5,
+            },
+        );
+        let bpt = model.kv_bytes_per_token_layer() * model.layers as u64 / 4;
+        let mut kv = KvCache::new(p.kv_bytes, 16, 4 << 30, bpt, 4096);
+        kv.admit(1);
+        let exec = ExecConfig::new(PartitionStrategy::OneDimK, model.layers, true);
+        let b = IterBatch::new(vec![BatchItem::prefill(1, 512, 512)]);
+        black_box(run_iteration(
+            &mut chip, &group, &model, &p, &exec, &b, &mut kv,
+        ));
+    });
+
+    // Decode iteration at batch 16 (the TBT-critical path).
+    bench.run("decode_iteration_b16", || {
+        let mut chip = ChipSim::new(ChipConfig::large_core());
+        let group = TpGroup::place(Region::new(0, 0, 2, 2), Placement::Ring);
+        let p = plan(
+            &chip.cfg.core,
+            &model,
+            &PlanRequest {
+                layers: model.layers,
+                tp: 4,
+                iter_tokens: 16,
+                kv_share: 0.5,
+            },
+        );
+        let bpt = model.kv_bytes_per_token_layer() * model.layers as u64 / 4;
+        let mut kv = KvCache::new(p.kv_bytes, 16, 4 << 30, bpt, 4096);
+        let items: Vec<BatchItem> = (0..16)
+            .map(|r| {
+                kv.admit(r);
+                kv.append(r, 511);
+                BatchItem::decode(r, 512)
+            })
+            .collect();
+        let exec = ExecConfig::new(PartitionStrategy::OneDimK, model.layers, true);
+        black_box(run_iteration(
+            &mut chip,
+            &group,
+            &model,
+            &p,
+            &exec,
+            &IterBatch::new(items),
+            &mut kv,
+        ));
+    });
+
+    // Simulation rate: simulated cycles per wall second on a small serving
+    // run (the §Perf L3 target metric).
+    let t0 = std::time::Instant::now();
+    let mut chip = ChipSim::new(ChipConfig::large_core());
+    let w = npusim::config::WorkloadConfig::fixed_ratio(256, 32, 8);
+    let m = npusim::serving::pd_fusion::simulate_fusion(
+        &mut chip,
+        &model,
+        &w,
+        &npusim::serving::pd_fusion::FusionConfig::default(),
+    )
+    .expect("serving run");
+    let wall = t0.elapsed().as_secs_f64();
+    bench.report_metric(
+        "sim_cycles_per_wall_second",
+        m.makespan() as f64 / wall,
+        "cyc/s",
+    );
+}

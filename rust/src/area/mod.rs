@@ -1,0 +1,93 @@
+//! Chip area model (Fig. 12's "per unit of chip area" metrics).
+//!
+//! The paper computes "chip area per unit of computational power, HBM
+//! interface and SRAM" from TSMC's 7nm process. The absolute constants
+//! here are derived from public 7nm literature (A100/Ascend die analyses,
+//! HBM2e PHY area reports); Fig. 12's rankings depend only on the
+//! *relative* ratios between MACs, SRAM macros and HBM PHYs, which these
+//! preserve (DESIGN.md "Substitutions").
+
+use crate::config::{ChipConfig, CoreConfig};
+
+/// mm² per bf16 MAC at 7nm (systolic array cell incl. local routing):
+/// ~0.25 mm² per 1024-MAC tile.
+pub const MM2_PER_MAC: f64 = 0.25 / 1024.0;
+
+/// mm² per vector ALU (wider datapath + register files than a MAC).
+pub const MM2_PER_VALU: f64 = 0.6 / 1024.0;
+
+/// mm² per MB of SRAM at 7nm (dense macro ≈ 0.45 mm²/MB incl. periphery).
+pub const MM2_PER_MB_SRAM: f64 = 0.45;
+
+/// mm² of HBM PHY + controller per GB/s of per-core bandwidth
+/// (HBM2e PHY ≈ 11 mm² per 450 GB/s stack interface).
+pub const MM2_PER_GBPS_HBM: f64 = 11.0 / 450.0;
+
+/// mm² of NoC router + link drivers per GB/s of per-link bandwidth.
+pub const MM2_PER_GBPS_NOC: f64 = 0.35 / 128.0;
+
+/// Fixed per-core overhead (scalar core, DMA engines, control): mm².
+pub const MM2_CORE_OVERHEAD: f64 = 0.3;
+
+/// Area of one NPU core in mm².
+pub fn core_area_mm2(core: &CoreConfig, noc_link_gbps: f64) -> f64 {
+    let macs = (core.sa_dim * core.sa_dim) as f64 * MM2_PER_MAC;
+    let valus = (core.vector_lanes * 64) as f64 * MM2_PER_VALU;
+    let sram = core.sram_bytes as f64 / (1024.0 * 1024.0) * MM2_PER_MB_SRAM;
+    let hbm = core.hbm_bw_gbps * MM2_PER_GBPS_HBM;
+    let noc = 4.0 * noc_link_gbps * MM2_PER_GBPS_NOC;
+    macs + valus + sram + hbm + noc + MM2_CORE_OVERHEAD
+}
+
+/// Total chip area in mm² (honouring heterogeneous decode cores when
+/// `n_decode_cores` of the chip use the decode-core override).
+pub fn chip_area_mm2(chip: &ChipConfig, n_decode_cores: usize) -> f64 {
+    let n = chip.n_cores();
+    let nd = n_decode_cores.min(n);
+    let np = n - nd;
+    let link = chip.noc.link_bw_gbps;
+    np as f64 * core_area_mm2(&chip.core, link)
+        + nd as f64 * core_area_mm2(&chip.decode_core(), link)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::MB;
+
+    #[test]
+    fn homogeneous_chip_area_scales_with_cores() {
+        let large = ChipConfig::large_core();
+        let a64 = chip_area_mm2(&large, 0);
+        assert!((a64 / 64.0 - core_area_mm2(&large.core, large.noc.link_bw_gbps)).abs() < 1e-9);
+        assert!(a64 > 100.0 && a64 < 5000.0, "implausible area {a64}");
+    }
+
+    #[test]
+    fn narrower_decode_cores_shrink_the_chip() {
+        let chip = ChipConfig::large_core();
+        let mut decode = chip.core;
+        decode.sa_dim = 32; // 1/16 the MACs
+        let hetero = chip.clone().with_decode_core(decode);
+        assert!(chip_area_mm2(&hetero, 21) < chip_area_mm2(&chip, 0));
+    }
+
+    #[test]
+    fn hbm_bandwidth_costs_area() {
+        let mut a = ChipConfig::large_core().core;
+        let mut b = a;
+        a.hbm_bw_gbps = 60.0;
+        b.hbm_bw_gbps = 480.0;
+        assert!(core_area_mm2(&b, 128.0) > core_area_mm2(&a, 128.0));
+    }
+
+    #[test]
+    fn sram_dominates_when_huge() {
+        let mut small = ChipConfig::large_core().core;
+        small.sram_bytes = 8 * MB;
+        let mut big = small;
+        big.sram_bytes = 128 * MB;
+        let delta = core_area_mm2(&big, 128.0) - core_area_mm2(&small, 128.0);
+        assert!((delta - 120.0 * MM2_PER_MB_SRAM).abs() < 1e-9);
+    }
+}

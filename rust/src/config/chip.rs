@@ -1,0 +1,345 @@
+//! Chip / core / NoC hardware configuration (paper Table 3).
+//!
+//! A chip is a `rows × cols` 2D mesh of NPU cores. Each core has a systolic
+//! array (GEMM), a vector unit (elementwise/softmax/norms), local SRAM
+//! scratchpad, an optional core-local HBM stack, a DMA engine and a NoC
+//! router with four directional links. Heterogeneous PD-disaggregation
+//! (§4.3.1) is expressed by giving decode cores their own [`CoreConfig`].
+
+use crate::util::units::{gbps_to_bytes_per_cycle, MB};
+
+/// Simulation fidelity for the memory system (§3.1): transaction-level
+/// (detailed, near-cycle-accurate) or analytic performance model (fast).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum MemSimMode {
+    /// 4-phase TLM with banked HBM, bounded outstanding window, OOO completion.
+    #[default]
+    Detailed,
+    /// `bytes / bandwidth + fixed latency` analytic estimate.
+    Fast,
+}
+
+/// Simulation fidelity for the NoC (§3.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum NocSimMode {
+    /// Handshake path setup + channel locking + per-link contention.
+    #[default]
+    Detailed,
+    /// `hops × hop_latency + bytes / bandwidth`, no contention.
+    Fast,
+}
+
+/// Per-core hardware resources.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CoreConfig {
+    /// Systolic array dimension (the array is `sa_dim × sa_dim` MACs).
+    pub sa_dim: u64,
+    /// Vector unit lanes; each lane has 64 ALUs (Table 3).
+    pub vector_lanes: u64,
+    /// Local SRAM scratchpad capacity in bytes.
+    pub sram_bytes: u64,
+    /// SRAM bandwidth in GB/s. `0.0` means "scaled with the systolic array"
+    /// (Table 3: *SRAM bandwidth per core — scaled with SA*); see
+    /// [`CoreConfig::sram_bw_gbps`].
+    pub sram_bw_gbps_raw: f64,
+    /// Core-local HBM bandwidth in GB/s (0 = no HBM attached to this core).
+    pub hbm_bw_gbps: f64,
+    /// Core-local HBM capacity in bytes.
+    pub hbm_bytes: u64,
+}
+
+impl CoreConfig {
+    /// Effective SRAM bandwidth. When not set explicitly it scales with
+    /// the core's compute capability (Table 3: *SRAM bandwidth per core —
+    /// scaled with SA*; §5.5: "automatically adjust SRAM bandwidth to
+    /// match the computational capability"): enough to stream two bf16
+    /// operands per lane of the wider of the systolic array and the
+    /// vector unit — `4 × max(sa_dim, vector_lanes) bytes/cycle`.
+    pub fn sram_bw_gbps(&self, freq_mhz: f64) -> f64 {
+        if self.sram_bw_gbps_raw > 0.0 {
+            self.sram_bw_gbps_raw
+        } else {
+            let bytes_per_cycle = 4.0 * self.sa_dim.max(self.vector_lanes) as f64;
+            bytes_per_cycle * freq_mhz * 1e6 / 1e9
+        }
+    }
+
+    /// SRAM bytes/cycle at `freq_mhz`.
+    pub fn sram_bytes_per_cycle(&self, freq_mhz: f64) -> f64 {
+        gbps_to_bytes_per_cycle(self.sram_bw_gbps(freq_mhz), freq_mhz)
+    }
+
+    /// HBM bytes/cycle at `freq_mhz`.
+    pub fn hbm_bytes_per_cycle(&self, freq_mhz: f64) -> f64 {
+        gbps_to_bytes_per_cycle(self.hbm_bw_gbps, freq_mhz)
+    }
+
+    /// Peak MACs/cycle of the systolic array.
+    pub fn peak_macs_per_cycle(&self) -> u64 {
+        self.sa_dim * self.sa_dim
+    }
+
+    /// Peak vector ALU ops/cycle.
+    pub fn peak_vector_ops_per_cycle(&self) -> u64 {
+        self.vector_lanes * 64
+    }
+
+    pub fn has_hbm(&self) -> bool {
+        self.hbm_bw_gbps > 0.0 && self.hbm_bytes > 0
+    }
+}
+
+/// NoC link/router configuration. Each core has 4 directional links
+/// (N/E/S/W) of `link_bw_gbps` each.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NocConfig {
+    /// Per-link bandwidth in GB/s.
+    pub link_bw_gbps: f64,
+    /// Router traversal latency in cycles (handshake/arbitration per hop).
+    pub router_latency: u64,
+    /// Simulation mode.
+    pub mode: NocSimMode,
+}
+
+impl NocConfig {
+    /// Link width in bytes per cycle at `freq_mhz` (one flit per cycle once
+    /// the path is locked — §3.1).
+    pub fn link_bytes_per_cycle(&self, freq_mhz: f64) -> f64 {
+        gbps_to_bytes_per_cycle(self.link_bw_gbps, freq_mhz)
+    }
+}
+
+/// Whole-chip configuration: the 2D mesh of cores.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChipConfig {
+    pub name: String,
+    /// Mesh rows.
+    pub rows: usize,
+    /// Mesh columns.
+    pub cols: usize,
+    /// Core clock in MHz (Table 3: 500 MHz).
+    pub freq_mhz: f64,
+    /// Default (prefill / homogeneous) core resources.
+    pub core: CoreConfig,
+    /// Override for decode cores under heterogeneous PD-disaggregation.
+    /// `None` = homogeneous chip.
+    pub decode_core: Option<CoreConfig>,
+    pub noc: NocConfig,
+    pub mem_mode: MemSimMode,
+    /// Fixed HBM access latency component in cycles (row activation etc.).
+    pub hbm_latency_cycles: u64,
+    /// Number of HBM banks per core-local stack (Detailed mem mode).
+    pub hbm_banks: usize,
+    /// Max outstanding HBM transactions per core (Detailed mem mode).
+    pub hbm_outstanding: usize,
+    /// Element size in bytes for weights/activations (bf16 = 2).
+    pub dtype_bytes: u64,
+}
+
+impl ChipConfig {
+    pub fn n_cores(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Core resources for a decode core (falls back to the default core on
+    /// homogeneous chips).
+    pub fn decode_core(&self) -> CoreConfig {
+        self.decode_core.unwrap_or(self.core)
+    }
+
+    /// Paper Table 3 "Large-core" preset: 64 cores, 8×8 mesh.
+    pub fn large_core() -> Self {
+        ChipConfig {
+            name: "large-core-64".into(),
+            rows: 8,
+            cols: 8,
+            freq_mhz: 500.0,
+            core: CoreConfig {
+                sa_dim: 128,
+                vector_lanes: 128,
+                sram_bytes: 32 * MB,
+                sram_bw_gbps_raw: 0.0,
+                hbm_bw_gbps: 120.0,
+                hbm_bytes: 4 * 1024 * MB,
+            },
+            decode_core: None,
+            noc: NocConfig {
+                link_bw_gbps: 128.0,
+                router_latency: 2,
+                mode: NocSimMode::Detailed,
+            },
+            mem_mode: MemSimMode::Detailed,
+            hbm_latency_cycles: 60,
+            hbm_banks: 16,
+            hbm_outstanding: 16,
+            dtype_bytes: 2,
+        }
+    }
+
+    /// Paper Table 3 "Small-core" preset: 256 cores, 16×16 mesh.
+    pub fn small_core() -> Self {
+        ChipConfig {
+            name: "small-core-256".into(),
+            rows: 16,
+            cols: 16,
+            freq_mhz: 500.0,
+            core: CoreConfig {
+                sa_dim: 64,
+                vector_lanes: 64,
+                sram_bytes: 16 * MB,
+                sram_bw_gbps_raw: 0.0,
+                hbm_bw_gbps: 40.0,
+                hbm_bytes: 1024 * MB,
+            },
+            decode_core: None,
+            noc: NocConfig {
+                link_bw_gbps: 64.0,
+                router_latency: 2,
+                mode: NocSimMode::Detailed,
+            },
+            mem_mode: MemSimMode::Detailed,
+            hbm_latency_cycles: 60,
+            hbm_banks: 8,
+            hbm_outstanding: 16,
+            dtype_bytes: 2,
+        }
+    }
+
+    /// An Ascend-910B-class configuration used for the Fig. 7 validation:
+    /// ~25 "DaVinci" cube cores, large cube units, shared HBM modelled as
+    /// core-local slices of the aggregate ~1.6 TB/s.
+    pub fn ascend910b_like() -> Self {
+        ChipConfig {
+            name: "ascend910b-like".into(),
+            rows: 5,
+            cols: 5,
+            freq_mhz: 1000.0,
+            core: CoreConfig {
+                sa_dim: 128, // 16^3 cube ~ 4096 MACs/cycle ≈ 64x64; x2 for bf16 rate
+                vector_lanes: 64,
+                sram_bytes: 24 * MB,
+                sram_bw_gbps_raw: 0.0,
+                hbm_bw_gbps: 64.0, // ~1.6 TB/s / 25 cores
+                hbm_bytes: 2 * 1024 * MB,
+            },
+            decode_core: None,
+            noc: NocConfig {
+                link_bw_gbps: 96.0,
+                router_latency: 2,
+                mode: NocSimMode::Detailed,
+            },
+            mem_mode: MemSimMode::Detailed,
+            hbm_latency_cycles: 80,
+            hbm_banks: 16,
+            hbm_outstanding: 32,
+            dtype_bytes: 2,
+        }
+    }
+
+    /// Set both simulation modes at once (Fig. 7-right's mode comparison).
+    pub fn with_sim_modes(mut self, mem: MemSimMode, noc: NocSimMode) -> Self {
+        self.mem_mode = mem;
+        self.noc.mode = noc;
+        self
+    }
+
+    /// Builder-style knobs used by the configuration-space sweeps (Fig. 8).
+    pub fn with_sram_mb(mut self, mb: u64) -> Self {
+        self.core.sram_bytes = mb * MB;
+        self
+    }
+    pub fn with_sa_dim(mut self, dim: u64) -> Self {
+        self.core.sa_dim = dim;
+        self
+    }
+    pub fn with_hbm_bw(mut self, gbps: f64) -> Self {
+        self.core.hbm_bw_gbps = gbps;
+        self
+    }
+    pub fn with_noc_bw(mut self, gbps: f64) -> Self {
+        self.noc.link_bw_gbps = gbps;
+        self
+    }
+    /// Heterogeneous decode-core override (Fig. 12 sweeps).
+    pub fn with_decode_core(mut self, core: CoreConfig) -> Self {
+        self.decode_core = Some(core);
+        self
+    }
+
+    /// Sanity checks; experiments call this after building a config.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.rows > 0 && self.cols > 0, "empty mesh");
+        anyhow::ensure!(self.freq_mhz > 0.0, "bad frequency");
+        anyhow::ensure!(self.core.sa_dim > 0, "bad systolic dim");
+        anyhow::ensure!(self.core.sram_bytes > 0, "no SRAM");
+        anyhow::ensure!(self.noc.link_bw_gbps > 0.0, "no NoC bandwidth");
+        anyhow::ensure!(self.dtype_bytes > 0, "bad dtype");
+        if let Some(d) = &self.decode_core {
+            anyhow::ensure!(d.sa_dim > 0 && d.sram_bytes > 0, "bad decode core");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_validate() {
+        ChipConfig::large_core().validate().unwrap();
+        ChipConfig::small_core().validate().unwrap();
+        ChipConfig::ascend910b_like().validate().unwrap();
+    }
+
+    #[test]
+    fn preset_core_counts_match_table3() {
+        assert_eq!(ChipConfig::large_core().n_cores(), 64);
+        assert_eq!(ChipConfig::small_core().n_cores(), 256);
+    }
+
+    #[test]
+    fn sram_bw_scales_with_sa() {
+        let c = ChipConfig::large_core();
+        // 4 bytes/cycle per SA lane at 128 lanes, 500 MHz => 256 GB/s.
+        let bw = c.core.sram_bw_gbps(c.freq_mhz);
+        assert!((bw - 256.0).abs() < 1e-6, "bw={bw}");
+        // Explicit value wins.
+        let mut core = c.core;
+        core.sram_bw_gbps_raw = 100.0;
+        assert_eq!(core.sram_bw_gbps(c.freq_mhz), 100.0);
+    }
+
+    #[test]
+    fn builder_knobs() {
+        let c = ChipConfig::large_core()
+            .with_sram_mb(64)
+            .with_sa_dim(32)
+            .with_hbm_bw(240.0)
+            .with_noc_bw(480.0);
+        assert_eq!(c.core.sram_bytes, 64 * MB);
+        assert_eq!(c.core.sa_dim, 32);
+        assert_eq!(c.core.hbm_bw_gbps, 240.0);
+        assert_eq!(c.noc.link_bw_gbps, 480.0);
+    }
+
+    #[test]
+    fn decode_core_fallback() {
+        let c = ChipConfig::large_core();
+        assert_eq!(c.decode_core(), c.core);
+        let mut d = c.core;
+        d.sa_dim = 32;
+        let c2 = c.with_decode_core(d);
+        assert_eq!(c2.decode_core().sa_dim, 32);
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mut c = ChipConfig::large_core();
+        c.rows = 0;
+        assert!(c.validate().is_err());
+        let mut c = ChipConfig::large_core();
+        c.core.sram_bytes = 0;
+        assert!(c.validate().is_err());
+    }
+}

@@ -1,0 +1,162 @@
+//! Load a full simulation configuration from a TOML file (see
+//! `configs/*.toml` for examples). Every key is optional and overrides the
+//! named preset, so config files stay small.
+
+use super::{
+    ArrivalProcess, ChipConfig, LenDist, MemSimMode, ModelConfig, NocSimMode, WorkloadConfig,
+};
+use crate::util::minitoml::Document;
+use crate::util::units::MB;
+use anyhow::{Context, Result};
+
+/// A bundle of chip + model + workload loaded from one file.
+#[derive(Debug, Clone)]
+pub struct SimConfigBundle {
+    pub chip: ChipConfig,
+    pub model: ModelConfig,
+    pub workload: WorkloadConfig,
+}
+
+/// Parse a config file. Layout:
+///
+/// ```toml
+/// [chip]
+/// preset = "large_core"     # or small_core / ascend910b
+/// sram_mb = 32
+/// sa_dim = 128
+/// hbm_bw_gbps = 120.0
+/// noc_bw_gbps = 128.0
+/// mem_mode = "detailed"     # or "fast"
+/// noc_mode = "detailed"
+///
+/// [model]
+/// name = "qwen3_4b"
+///
+/// [workload]
+/// preset = "decode_dominated"   # or prefill_dominated / sharegpt / mooncake
+/// n_requests = 64
+/// rate = 4.0
+/// input_len = 1000              # switches to fixed lengths
+/// output_len = 100
+/// ```
+pub fn load_sim_config(text: &str) -> Result<SimConfigBundle> {
+    let doc = Document::parse(text).context("parsing config")?;
+
+    // ---- chip ----
+    let mut chip = match doc.get_str("chip.preset").unwrap_or("large_core") {
+        "large_core" | "large-core" => ChipConfig::large_core(),
+        "small_core" | "small-core" => ChipConfig::small_core(),
+        "ascend910b" | "ascend" => ChipConfig::ascend910b_like(),
+        other => anyhow::bail!("unknown chip preset {other:?}"),
+    };
+    if let Some(v) = doc.get_int("chip.sram_mb") {
+        chip.core.sram_bytes = v as u64 * MB;
+    }
+    if let Some(v) = doc.get_int("chip.sa_dim") {
+        chip.core.sa_dim = v as u64;
+    }
+    if let Some(v) = doc.get_float("chip.hbm_bw_gbps") {
+        chip.core.hbm_bw_gbps = v;
+    }
+    if let Some(v) = doc.get_float("chip.noc_bw_gbps") {
+        chip.noc.link_bw_gbps = v;
+    }
+    if let Some(v) = doc.get_int("chip.rows") {
+        chip.rows = v as usize;
+    }
+    if let Some(v) = doc.get_int("chip.cols") {
+        chip.cols = v as usize;
+    }
+    if let Some(v) = doc.get_str("chip.mem_mode") {
+        chip.mem_mode = match v {
+            "detailed" => MemSimMode::Detailed,
+            "fast" => MemSimMode::Fast,
+            other => anyhow::bail!("unknown mem_mode {other:?}"),
+        };
+    }
+    if let Some(v) = doc.get_str("chip.noc_mode") {
+        chip.noc.mode = match v {
+            "detailed" => NocSimMode::Detailed,
+            "fast" => NocSimMode::Fast,
+            other => anyhow::bail!("unknown noc_mode {other:?}"),
+        };
+    }
+    chip.validate()?;
+
+    // ---- model ----
+    let model = ModelConfig::by_name(doc.get_str("model.name").unwrap_or("qwen3_4b"))?;
+
+    // ---- workload ----
+    let n_requests = doc.get_int("workload.n_requests").unwrap_or(32) as usize;
+    let mut workload = match doc.get_str("workload.preset").unwrap_or("decode_dominated") {
+        "prefill_dominated" => WorkloadConfig::prefill_dominated(n_requests),
+        "decode_dominated" => WorkloadConfig::decode_dominated(n_requests),
+        "sharegpt" | "sharegpt_like" => WorkloadConfig::sharegpt_like(n_requests),
+        "mooncake" | "mooncake_like" => WorkloadConfig::mooncake_like(n_requests),
+        other => anyhow::bail!("unknown workload preset {other:?}"),
+    };
+    if let (Some(i), Some(o)) = (
+        doc.get_int("workload.input_len"),
+        doc.get_int("workload.output_len"),
+    ) {
+        workload.input_len = LenDist::Fixed(i as usize);
+        workload.output_len = LenDist::Fixed(o as usize);
+    }
+    if let Some(rate) = doc.get_float("workload.rate") {
+        workload.arrival = ArrivalProcess::Poisson { rate };
+    }
+    if let Some(seed) = doc.get_int("workload.seed") {
+        workload.seed = seed as u64;
+    }
+
+    Ok(SimConfigBundle {
+        chip,
+        model,
+        workload,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_load() {
+        let b = load_sim_config("").unwrap();
+        assert_eq!(b.chip.n_cores(), 64);
+        assert_eq!(b.model.name, "qwen3_4b");
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let text = r#"
+[chip]
+preset = "small_core"
+sram_mb = 48
+sa_dim = 32
+mem_mode = "fast"
+
+[model]
+name = "qwen3_8b"
+
+[workload]
+preset = "prefill_dominated"
+n_requests = 16
+input_len = 1000
+output_len = 100
+"#;
+        let b = load_sim_config(text).unwrap();
+        assert_eq!(b.chip.n_cores(), 256);
+        assert_eq!(b.chip.core.sram_bytes, 48 * MB);
+        assert_eq!(b.chip.core.sa_dim, 32);
+        assert_eq!(b.chip.mem_mode, MemSimMode::Fast);
+        assert_eq!(b.model.name, "qwen3_8b");
+        assert_eq!(b.workload.n_requests, 16);
+        assert_eq!(b.workload.input_len, LenDist::Fixed(1000));
+    }
+
+    #[test]
+    fn bad_preset_errors() {
+        assert!(load_sim_config("[chip]\npreset = \"gpu\"\n").is_err());
+    }
+}

@@ -1,0 +1,17 @@
+//! Configuration layer: chip (hardware), model (LLM), and workload (trace)
+//! configuration, plus TOML loading for all three.
+//!
+//! The chip configuration space mirrors Table 3 of the paper; the model
+//! presets cover the evaluated Qwen3 family (1.7B–32B dense, 30B-A3B MoE);
+//! workloads cover the prefill-dominated and decode-dominated serving
+//! traces of §5.1.
+
+mod chip;
+mod loader;
+mod model;
+mod workload;
+
+pub use chip::{ChipConfig, CoreConfig, MemSimMode, NocConfig, NocSimMode};
+pub use loader::load_sim_config;
+pub use model::{ModelConfig, MoeConfig};
+pub use workload::{ArrivalProcess, LenDist, WorkloadConfig};

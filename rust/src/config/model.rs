@@ -1,0 +1,251 @@
+//! LLM model configuration: the Qwen3 family evaluated in the paper
+//! (dense 1.7B–32B plus the 30B-A3B MoE), with derived sizes (parameter
+//! bytes, KV bytes/token, per-layer GEMM shapes).
+
+/// Mixture-of-experts parameters (Qwen3-30B-A3B).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MoeConfig {
+    /// Total routed experts per layer.
+    pub n_experts: usize,
+    /// Experts activated per token.
+    pub top_k: usize,
+    /// Per-expert FFN intermediate size.
+    pub expert_intermediate: usize,
+}
+
+/// Transformer model architecture description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub layers: usize,
+    pub hidden: usize,
+    pub heads: usize,
+    pub kv_heads: usize,
+    pub head_dim: usize,
+    /// Dense FFN intermediate size (ignored for pure-MoE layers).
+    pub intermediate: usize,
+    pub vocab: usize,
+    pub moe: Option<MoeConfig>,
+    /// Weight/activation element size in bytes (bf16 = 2).
+    pub dtype_bytes: u64,
+    /// Maximum context length used for KV buffer sizing.
+    pub max_context: usize,
+}
+
+impl ModelConfig {
+    // ---- Qwen3 presets (§5.1 "Model selection") -------------------------
+
+    pub fn qwen3_1_7b() -> Self {
+        Self::dense("qwen3_1.7b", 28, 2048, 16, 8, 6144)
+    }
+    pub fn qwen3_4b() -> Self {
+        Self::dense("qwen3_4b", 36, 2560, 32, 8, 9728)
+    }
+    pub fn qwen3_8b() -> Self {
+        Self::dense("qwen3_8b", 36, 4096, 32, 8, 12288)
+    }
+    pub fn qwen3_14b() -> Self {
+        Self::dense("qwen3_14b", 40, 5120, 40, 8, 17408)
+    }
+    pub fn qwen3_32b() -> Self {
+        Self::dense("qwen3_32b", 64, 5120, 64, 8, 25600)
+    }
+    /// Qwen3-30B-A3B: 128 experts, 8 active, 768 expert intermediate.
+    pub fn qwen3_30b_a3b() -> Self {
+        let mut m = Self::dense("qwen3_30b_a3b", 48, 2048, 32, 4, 6144);
+        m.moe = Some(MoeConfig {
+            n_experts: 128,
+            top_k: 8,
+            expert_intermediate: 768,
+        });
+        m
+    }
+
+    /// All paper models, for sweep loops.
+    pub fn paper_models() -> Vec<ModelConfig> {
+        vec![
+            Self::qwen3_1_7b(),
+            Self::qwen3_4b(),
+            Self::qwen3_8b(),
+            Self::qwen3_14b(),
+            Self::qwen3_32b(),
+            Self::qwen3_30b_a3b(),
+        ]
+    }
+
+    /// Look up a preset by name (CLI `--model`).
+    pub fn by_name(name: &str) -> anyhow::Result<ModelConfig> {
+        let norm = name.to_ascii_lowercase().replace(['-', '.'], "_");
+        Self::paper_models()
+            .into_iter()
+            .find(|m| m.name.replace(['-', '.'], "_") == norm)
+            .ok_or_else(|| anyhow::anyhow!("unknown model {name:?}"))
+    }
+
+    fn dense(
+        name: &str,
+        layers: usize,
+        hidden: usize,
+        heads: usize,
+        kv_heads: usize,
+        intermediate: usize,
+    ) -> Self {
+        ModelConfig {
+            name: name.into(),
+            layers,
+            hidden,
+            heads,
+            kv_heads,
+            head_dim: 128,
+            intermediate,
+            vocab: 151_936,
+            moe: None,
+            dtype_bytes: 2,
+            max_context: 32 * 1024,
+        }
+    }
+
+    // ---- Derived sizes ---------------------------------------------------
+
+    /// Attention projection dims.
+    pub fn q_dim(&self) -> usize {
+        self.heads * self.head_dim
+    }
+    pub fn kv_dim(&self) -> usize {
+        self.kv_heads * self.head_dim
+    }
+
+    /// Parameter count (weights only, embeddings tied).
+    pub fn n_params(&self) -> u64 {
+        let h = self.hidden as u64;
+        let attn = h * self.q_dim() as u64 // Wq
+            + 2 * h * self.kv_dim() as u64 // Wk, Wv
+            + self.q_dim() as u64 * h; // Wo
+        let ffn = match self.moe {
+            None => 3 * h * self.intermediate as u64, // gate, up, down
+            Some(moe) => {
+                let expert = 3 * h * moe.expert_intermediate as u64;
+                let router = h * moe.n_experts as u64;
+                expert * moe.n_experts as u64 + router
+            }
+        };
+        let norms = 2 * h;
+        let per_layer = attn + ffn + norms;
+        let embed = self.vocab as u64 * h; // tied in/out
+        per_layer * self.layers as u64 + embed + h // final norm
+    }
+
+    /// Total weight bytes.
+    pub fn weight_bytes(&self) -> u64 {
+        self.n_params() * self.dtype_bytes
+    }
+
+    /// Weight bytes for a single layer (the unit pipeline stages hold).
+    pub fn layer_weight_bytes(&self) -> u64 {
+        let h = self.hidden as u64;
+        let attn = h * self.q_dim() as u64 + 2 * h * self.kv_dim() as u64 + self.q_dim() as u64 * h;
+        let ffn = match self.moe {
+            None => 3 * h * self.intermediate as u64,
+            Some(moe) => {
+                3 * h * moe.expert_intermediate as u64 * moe.n_experts as u64
+                    + h * moe.n_experts as u64
+            }
+        };
+        (attn + ffn + 2 * h) * self.dtype_bytes
+    }
+
+    /// KV cache bytes per token per layer (K + V).
+    pub fn kv_bytes_per_token_layer(&self) -> u64 {
+        2 * self.kv_dim() as u64 * self.dtype_bytes
+    }
+
+    /// KV cache bytes per token across all layers.
+    pub fn kv_bytes_per_token(&self) -> u64 {
+        self.kv_bytes_per_token_layer() * self.layers as u64
+    }
+
+    /// FLOPs for one forward pass over `tokens` new tokens with `context`
+    /// total attended tokens (per-token-position averaged): 2·params-style
+    /// estimate plus attention score/context matmuls.
+    pub fn fwd_flops(&self, tokens: u64, context: u64) -> u64 {
+        let h = self.hidden as u64;
+        let qd = self.q_dim() as u64;
+        let kvd = self.kv_dim() as u64;
+        let proj = 2 * tokens * (h * qd + 2 * h * kvd + qd * h);
+        let ffn = match self.moe {
+            None => 2 * tokens * 3 * h * self.intermediate as u64,
+            Some(moe) => {
+                2 * tokens * 3 * h * moe.expert_intermediate as u64 * moe.top_k as u64
+                    + 2 * tokens * h * moe.n_experts as u64
+            }
+        };
+        // QK^T and PV: per head, tokens × context × head_dim each.
+        let attn = 2 * 2 * tokens * context * (self.heads * self.head_dim) as u64;
+        (proj + ffn + attn) * self.layers as u64 + 2 * tokens * h * self.vocab as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_counts_near_nominal() {
+        // Within ~20% of the marketing size (nominal sizes are approximate
+        // and tokenizer/config details differ slightly).
+        let cases = [
+            (ModelConfig::qwen3_1_7b(), 1.7e9),
+            (ModelConfig::qwen3_4b(), 4.0e9),
+            (ModelConfig::qwen3_8b(), 8.0e9),
+            (ModelConfig::qwen3_14b(), 14.0e9),
+            (ModelConfig::qwen3_32b(), 32.0e9),
+            (ModelConfig::qwen3_30b_a3b(), 30.0e9),
+        ];
+        for (m, nominal) in cases {
+            let p = m.n_params() as f64;
+            let ratio = p / nominal;
+            assert!(
+                (0.75..1.35).contains(&ratio),
+                "{}: {:.2}B vs nominal {:.1}B (ratio {ratio:.2})",
+                m.name,
+                p / 1e9,
+                nominal / 1e9
+            );
+        }
+    }
+
+    #[test]
+    fn kv_bytes_per_token() {
+        let m = ModelConfig::qwen3_4b();
+        // 8 kv heads × 128 dim × 2 (K+V) × 2 bytes × 36 layers = 147456.
+        assert_eq!(m.kv_bytes_per_token(), 8 * 128 * 2 * 2 * 36);
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert_eq!(ModelConfig::by_name("qwen3_4b").unwrap().hidden, 2560);
+        assert_eq!(ModelConfig::by_name("Qwen3-8B").unwrap().hidden, 4096);
+        assert!(ModelConfig::by_name("llama").is_err());
+    }
+
+    #[test]
+    fn moe_params_dominated_by_experts() {
+        let m = ModelConfig::qwen3_30b_a3b();
+        let moe = m.moe.unwrap();
+        assert_eq!(moe.n_experts, 128);
+        assert_eq!(moe.top_k, 8);
+        // Active params per token should be a small fraction of total.
+        let active_flops = m.fwd_flops(1, 1) as f64;
+        let dense32 = ModelConfig::qwen3_32b().fwd_flops(1, 1) as f64;
+        assert!(active_flops < dense32 / 3.0);
+    }
+
+    #[test]
+    fn prefill_flops_scale_linearly_in_tokens() {
+        let m = ModelConfig::qwen3_4b();
+        let f1 = m.fwd_flops(128, 128);
+        let f2 = m.fwd_flops(256, 256);
+        let ratio = f2 as f64 / f1 as f64;
+        assert!(ratio > 1.9 && ratio < 2.4, "ratio={ratio}");
+    }
+}

@@ -1,0 +1,247 @@
+//! Serving workload configuration (§5.1 "Workloads").
+//!
+//! The paper references the ShareGPT and Mooncake industrial traces and
+//! distils them into two workload classes: *prefill-dominated* and
+//! *decode-dominated*. Since the raw traces are not redistributable, we
+//! generate synthetic traces whose prompt/output length marginals and
+//! arrival processes match the published characteristics (see DESIGN.md
+//! "Substitutions").
+
+/// Token-length distribution for prompts or outputs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LenDist {
+    /// Every request has exactly this many tokens.
+    Fixed(usize),
+    /// Uniform in `[lo, hi]`.
+    Uniform(usize, usize),
+    /// Log-normal over the underlying normal's `mu`/`sigma`, clamped to
+    /// `[min, max]`. ShareGPT-like prompt lengths: `mu≈5.2, sigma≈1.3`.
+    LogNormal {
+        mu: f64,
+        sigma: f64,
+        min: usize,
+        max: usize,
+    },
+}
+
+impl LenDist {
+    pub fn sample(&self, rng: &mut crate::util::rng::Rng) -> usize {
+        match *self {
+            LenDist::Fixed(n) => n,
+            LenDist::Uniform(lo, hi) => rng.range(lo, hi + 1),
+            LenDist::LogNormal { mu, sigma, min, max } => {
+                (rng.log_normal(mu, sigma).round() as usize).clamp(min, max)
+            }
+        }
+    }
+
+    /// Analytic-ish mean (used for capacity planning in the scheduler).
+    pub fn mean(&self) -> f64 {
+        match *self {
+            LenDist::Fixed(n) => n as f64,
+            LenDist::Uniform(lo, hi) => (lo + hi) as f64 / 2.0,
+            LenDist::LogNormal { mu, sigma, min, max } => {
+                (mu + sigma * sigma / 2.0).exp().clamp(min as f64, max as f64)
+            }
+        }
+    }
+}
+
+/// Request arrival process.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalProcess {
+    /// All requests available at t=0 (offline/batch evaluation).
+    Batch,
+    /// Poisson process at `rate` requests/second.
+    Poisson { rate: f64 },
+    /// Bursty: Poisson at `rate` with periodic bursts of `burst_size`
+    /// back-to-back requests every `period_s` seconds (Mooncake-like).
+    Bursty {
+        rate: f64,
+        burst_size: usize,
+        period_s: f64,
+    },
+}
+
+/// A complete workload description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadConfig {
+    pub name: String,
+    pub input_len: LenDist,
+    pub output_len: LenDist,
+    pub arrival: ArrivalProcess,
+    pub n_requests: usize,
+    pub seed: u64,
+}
+
+impl WorkloadConfig {
+    /// Prefill-dominated workload: long prompts, short generations
+    /// (retrieval / summarisation style; input:output ≈ 10:1).
+    pub fn prefill_dominated(n_requests: usize) -> Self {
+        WorkloadConfig {
+            name: "prefill-dominated".into(),
+            input_len: LenDist::LogNormal {
+                mu: 7.3, // median ≈ 1480 tokens
+                sigma: 0.6,
+                min: 256,
+                max: 8192,
+            },
+            output_len: LenDist::LogNormal {
+                mu: 4.8, // median ≈ 120 tokens
+                sigma: 0.5,
+                min: 16,
+                max: 512,
+            },
+            arrival: ArrivalProcess::Poisson { rate: 4.0 },
+            n_requests,
+            seed: 2025,
+        }
+    }
+
+    /// Decode-dominated workload: short prompts, long generations
+    /// (chatbot / reasoning style; input:output ≈ 1:8).
+    pub fn decode_dominated(n_requests: usize) -> Self {
+        WorkloadConfig {
+            name: "decode-dominated".into(),
+            input_len: LenDist::LogNormal {
+                mu: 4.8,
+                sigma: 0.7,
+                min: 16,
+                max: 1024,
+            },
+            output_len: LenDist::LogNormal {
+                mu: 6.9, // median ≈ 990 tokens
+                sigma: 0.5,
+                min: 128,
+                max: 4096,
+            },
+            arrival: ArrivalProcess::Poisson { rate: 4.0 },
+            n_requests,
+            seed: 2025,
+        }
+    }
+
+    /// ShareGPT-like conversational trace (moderate both ways).
+    pub fn sharegpt_like(n_requests: usize) -> Self {
+        WorkloadConfig {
+            name: "sharegpt-like".into(),
+            input_len: LenDist::LogNormal {
+                mu: 5.4,
+                sigma: 1.1,
+                min: 8,
+                max: 4096,
+            },
+            output_len: LenDist::LogNormal {
+                mu: 5.5,
+                sigma: 0.9,
+                min: 8,
+                max: 2048,
+            },
+            arrival: ArrivalProcess::Poisson { rate: 6.0 },
+            n_requests,
+            seed: 2025,
+        }
+    }
+
+    /// Mooncake-like trace: long, highly variable prompts with bursts.
+    pub fn mooncake_like(n_requests: usize) -> Self {
+        WorkloadConfig {
+            name: "mooncake-like".into(),
+            input_len: LenDist::LogNormal {
+                mu: 7.8,
+                sigma: 1.2,
+                min: 64,
+                max: 16384,
+            },
+            output_len: LenDist::LogNormal {
+                mu: 5.0,
+                sigma: 0.7,
+                min: 16,
+                max: 1024,
+            },
+            arrival: ArrivalProcess::Bursty {
+                rate: 2.0,
+                burst_size: 8,
+                period_s: 10.0,
+            },
+            n_requests,
+            seed: 2025,
+        }
+    }
+
+    /// Fixed-shape workload `input:output` used by Figs. 11/14's ratio
+    /// sweeps (e.g. `fixed_ratio(1000, 100, 64)` = the paper's "1000:100").
+    pub fn fixed_ratio(input: usize, output: usize, n_requests: usize) -> Self {
+        WorkloadConfig {
+            name: format!("{input}:{output}"),
+            input_len: LenDist::Fixed(input),
+            output_len: LenDist::Fixed(output),
+            arrival: ArrivalProcess::Batch,
+            n_requests,
+            seed: 2025,
+        }
+    }
+
+    pub fn with_arrival(mut self, arrival: ArrivalProcess) -> Self {
+        self.arrival = arrival;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn fixed_dist_is_fixed() {
+        let mut rng = Rng::new(1);
+        let d = LenDist::Fixed(100);
+        for _ in 0..10 {
+            assert_eq!(d.sample(&mut rng), 100);
+        }
+        assert_eq!(d.mean(), 100.0);
+    }
+
+    #[test]
+    fn lognormal_respects_clamps() {
+        let mut rng = Rng::new(2);
+        let d = LenDist::LogNormal {
+            mu: 6.0,
+            sigma: 2.0,
+            min: 100,
+            max: 500,
+        };
+        for _ in 0..1000 {
+            let x = d.sample(&mut rng);
+            assert!((100..=500).contains(&x));
+        }
+    }
+
+    #[test]
+    fn prefill_dominated_is_input_heavy() {
+        let w = WorkloadConfig::prefill_dominated(10);
+        assert!(w.input_len.mean() > 5.0 * w.output_len.mean());
+    }
+
+    #[test]
+    fn decode_dominated_is_output_heavy() {
+        let w = WorkloadConfig::decode_dominated(10);
+        assert!(w.output_len.mean() > 3.0 * w.input_len.mean());
+    }
+
+    #[test]
+    fn uniform_in_bounds() {
+        let mut rng = Rng::new(3);
+        let d = LenDist::Uniform(10, 20);
+        for _ in 0..200 {
+            let x = d.sample(&mut rng);
+            assert!((10..=20).contains(&x));
+        }
+    }
+}

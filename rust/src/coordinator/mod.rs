@@ -1,0 +1,238 @@
+//! Serving coordinator: router + dynamic batcher + PJRT worker.
+//!
+//! This is the *functional* half of the stack: real tokens through the
+//! AOT-compiled TinyQwen artifacts (the *timing* half is [`crate::serving`]
+//! on the simulator; `examples/serve_e2e.rs` composes both). Python never
+//! runs here — the worker executes the HLO artifacts via
+//! [`crate::runtime`].
+//!
+//! Threading model (std::thread + mpsc, no async runtime needed at this
+//! scale): callers submit [`GenRequest`]s to the router; the batcher
+//! groups them into model-sized batches (the lowered decode entry point
+//! has a fixed batch dimension); one worker thread owns the PJRT client
+//! and runs prefill + greedy decode, threading the KV cache between steps.
+
+use crate::runtime::{argmax, literal_f32, literal_i32, ModelMeta, Runtime};
+use anyhow::{Context, Result};
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+/// A generation request.
+#[derive(Debug, Clone)]
+pub struct GenRequest {
+    pub id: u64,
+    /// Prompt token ids (clamped to the model's vocab by the worker).
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+}
+
+/// A completed generation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GenResponse {
+    pub id: u64,
+    /// Generated token ids (prompt not included).
+    pub tokens: Vec<i32>,
+}
+
+enum Msg {
+    Submit(GenRequest, mpsc::Sender<GenResponse>),
+    Shutdown,
+}
+
+/// Handle to a running coordinator.
+pub struct Coordinator {
+    tx: mpsc::Sender<Msg>,
+    worker: Option<JoinHandle<()>>,
+    pub meta: ModelMeta,
+}
+
+impl Coordinator {
+    /// Spawn the worker thread and load the artifacts inside it (the PJRT
+    /// client is not `Send`, so the worker owns it end to end).
+    pub fn start(artifact_dir: impl AsRef<std::path::Path>) -> Result<Coordinator> {
+        let dir = artifact_dir.as_ref().to_path_buf();
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (meta_tx, meta_rx) = mpsc::channel::<Result<ModelMeta>>();
+        let worker = std::thread::spawn(move || {
+            let runtime = match Runtime::load(&dir) {
+                Ok(r) => {
+                    let _ = meta_tx.send(Ok(r.meta.clone()));
+                    r
+                }
+                Err(e) => {
+                    let _ = meta_tx.send(Err(e));
+                    return;
+                }
+            };
+            let meta = runtime.meta.clone();
+            worker_loop(runtime, meta, rx);
+        });
+        let meta = meta_rx
+            .recv()
+            .context("worker thread died during startup")??;
+        Ok(Coordinator {
+            tx,
+            worker: Some(worker),
+            meta,
+        })
+    }
+
+    /// Submit a request; returns the receiver for its response.
+    pub fn submit(&self, req: GenRequest) -> Result<mpsc::Receiver<GenResponse>> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Msg::Submit(req, rtx))
+            .map_err(|_| anyhow::anyhow!("coordinator worker gone"))?;
+        Ok(rrx)
+    }
+
+    /// Convenience: batched blocking generation.
+    pub fn generate(&self, requests: Vec<GenRequest>) -> Result<Vec<GenResponse>> {
+        let receivers: Vec<_> = requests
+            .into_iter()
+            .map(|r| self.submit(r))
+            .collect::<Result<_>>()?;
+        receivers
+            .into_iter()
+            .map(|rx| rx.recv().context("worker dropped response"))
+            .collect()
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The worker: dynamic batching + prefill/decode over PJRT.
+fn worker_loop(runtime: Runtime, meta: ModelMeta, rx: mpsc::Receiver<Msg>) {
+    let batch = meta.decode_batch;
+    let mut queue: Vec<(GenRequest, mpsc::Sender<GenResponse>)> = Vec::new();
+    loop {
+        // Block for the first request, then drain whatever else is queued
+        // (dynamic batching: take what arrived, don't wait for a full batch
+        // longer than the drain window).
+        if queue.is_empty() {
+            match rx.recv() {
+                Ok(Msg::Submit(r, tx)) => queue.push((r, tx)),
+                Ok(Msg::Shutdown) | Err(_) => return,
+            }
+        }
+        let window = std::time::Duration::from_millis(2);
+        while queue.len() < batch {
+            match rx.recv_timeout(window) {
+                Ok(Msg::Submit(r, tx)) => queue.push((r, tx)),
+                Ok(Msg::Shutdown) => return,
+                Err(_) => break,
+            }
+        }
+        let take = queue.len().min(batch);
+        let group: Vec<_> = queue.drain(..take).collect();
+        match run_batch(&runtime, &meta, &group) {
+            Ok(responses) => {
+                for ((_, tx), resp) in group.iter().zip(responses) {
+                    let _ = tx.send(resp);
+                }
+            }
+            Err(e) => {
+                crate::log_warn!("batch failed: {e:#}");
+                for (req, tx) in &group {
+                    let _ = tx.send(GenResponse {
+                        id: req.id,
+                        tokens: Vec::new(),
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// Run one model-sized batch: fixed-length prefill + greedy decode.
+fn run_batch(
+    runtime: &Runtime,
+    meta: &ModelMeta,
+    group: &[(GenRequest, mpsc::Sender<GenResponse>)],
+) -> Result<Vec<GenResponse>> {
+    let b = meta.decode_batch;
+    let p = meta.prefill_len;
+    // Right-align prompts into the fixed prefill window (pad id 0).
+    let mut tokens = vec![0i32; b * p];
+    for (i, (req, _)) in group.iter().enumerate() {
+        let prompt: Vec<i32> = req
+            .prompt
+            .iter()
+            .map(|&t| t.rem_euclid(meta.vocab as i32))
+            .collect();
+        let take = prompt.len().min(p);
+        let src = &prompt[prompt.len() - take..];
+        tokens[i * p + (p - take)..(i + 1) * p].copy_from_slice(src);
+    }
+    let tok_lit = literal_i32(&tokens, &[b as i64, p as i64])?;
+    let out = runtime.execute(&runtime.prefill, &[tok_lit])?;
+    let (logits, mut kv) = (out[0].clone(), out[1].clone());
+
+    // Last-position logits per sequence -> first generated token.
+    let vocab = meta.vocab;
+    let mut current: Vec<i32> = (0..b)
+        .map(|i| {
+            let row = &logits[(i * p + p - 1) * vocab..(i * p + p) * vocab];
+            argmax(row) as i32
+        })
+        .collect();
+    let mut generated: Vec<Vec<i32>> = vec![Vec::new(); b];
+    for (i, t) in current.iter().enumerate() {
+        generated[i].push(*t);
+    }
+
+    let max_new = group
+        .iter()
+        .map(|(r, _)| r.max_new_tokens)
+        .max()
+        .unwrap_or(1)
+        .min(meta.max_seq - p);
+    let kv_shape: Vec<i64> = vec![
+        meta.layers as i64,
+        2,
+        b as i64,
+        meta.max_seq as i64,
+        meta.kv_heads as i64,
+        meta.head_dim as i64,
+    ];
+    for step in 1..max_new {
+        let pos = (p + step - 1) as i32;
+        let tok_lit = literal_i32(&current, &[b as i64])?;
+        let pos_lit = xla::Literal::scalar(pos);
+        let kv_lit = literal_f32(&kv, &kv_shape)?;
+        let out = runtime.execute(&runtime.decode, &[tok_lit, pos_lit, kv_lit])?;
+        kv = out[1].clone();
+        for i in 0..b {
+            current[i] = argmax(&out[0][i * vocab..(i + 1) * vocab]) as i32;
+            generated[i].push(current[i]);
+        }
+    }
+
+    Ok(group
+        .iter()
+        .enumerate()
+        .map(|(i, (req, _))| GenResponse {
+            id: req.id,
+            tokens: generated[i][..req.max_new_tokens.min(generated[i].len())].to_vec(),
+        })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    // PJRT-backed tests live in rust/tests/runtime_e2e.rs (need
+    // `make artifacts`); here we only test the pure helpers.
+
+    #[test]
+    fn prompt_clamping_is_modulo_vocab() {
+        assert_eq!((300i32).rem_euclid(256), 44);
+        assert_eq!((-1i32).rem_euclid(256), 255);
+    }
+}

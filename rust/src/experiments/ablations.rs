@@ -1,0 +1,166 @@
+//! Ablations over the design choices DESIGN.md calls out — each table
+//! isolates one knob of the serving system on a fixed workload:
+//!
+//! 1. **Chunked-prefill chunk size** (§4.3.2's budget scheduler),
+//! 2. **SRAM KV block granularity** (§4.2's fine-grained tier),
+//! 3. **SRAM remainder split** between KV blocks and resident weights
+//!    (the planner's `kv_share` best-effort policy),
+//! 4. **PD placement policy** (DP-prioritized WSC-LLM vs our
+//!    PP-prioritized edge/center layout, Fig. 6).
+
+use crate::config::{ChipConfig, ModelConfig, WorkloadConfig};
+use crate::experiments::Opts;
+use crate::parallel::pd_placement::PdPlacementPolicy;
+use crate::serving::pd_disagg::{simulate_disagg, DisaggConfig};
+use crate::serving::pd_fusion::{simulate_fusion, FusionConfig};
+use crate::sim::chip::ChipSim;
+use crate::util::table::{f3, Table};
+
+pub fn run(opts: &Opts) -> anyhow::Result<Vec<Table>> {
+    let model = ModelConfig::qwen3_4b();
+    let n = opts.pick(12, 3);
+    let mut tables = Vec::new();
+
+    // 1. Chunk size: TTFT/TBT trade-off under mixed load.
+    let w = WorkloadConfig::fixed_ratio(opts.pick(1024, 256), opts.pick(128, 16), n)
+        .with_arrival(crate::config::ArrivalProcess::Poisson { rate: 4.0 });
+    let mut t = Table::new(
+        "Ablation 1 — chunked-prefill chunk size (Qwen3-4B, fusion)",
+        &["chunk", "TTFT (ms)", "TBT (ms)", "tok/s"],
+    );
+    for chunk in [64usize, 256, 1024] {
+        let mut chip = ChipSim::new(ChipConfig::large_core());
+        let m = simulate_fusion(
+            &mut chip,
+            &model,
+            &w,
+            &FusionConfig {
+                chunk,
+                budget: chunk + 32,
+                ..FusionConfig::default()
+            },
+        )?;
+        t.row(&[
+            chunk.to_string(),
+            f3(m.ttft_s().mean() * 1e3),
+            f3(m.tbt_s().mean() * 1e3),
+            f3(m.tokens_per_s()),
+        ]);
+    }
+    tables.push(t);
+
+    // 2. KV block granularity: allocator internal fragmentation vs
+    //    bookkeeping (measured via the KvCache directly).
+    let mut t = Table::new(
+        "Ablation 2 — SRAM KV block granularity (tokens/block)",
+        &["block tokens", "requests admitted to SRAM", "SRAM waste %"],
+    );
+    for block_tokens in [4u64, 16, 64, 256] {
+        let bpt = model.kv_bytes_per_token_layer() * 9 / 4; // 9-layer stage, TP4
+        let sram = 8 << 20;
+        let mut kv = crate::memmgr::KvCache::new(sram, block_tokens, 1 << 30, bpt, 2048);
+        // Admit requests of 100 tokens until SRAM blocks run out.
+        let mut admitted = 0u64;
+        let mut in_sram = 0u64;
+        for id in 0..1024 {
+            kv.admit(id);
+            let a = kv.append(id, 100);
+            if a.sram_bytes > 0 {
+                in_sram += a.sram_bytes;
+                admitted += 1;
+            } else {
+                break;
+            }
+        }
+        let used = sram - kv.sram_free_bytes();
+        let waste = (used.saturating_sub(in_sram)) as f64 / used.max(1) as f64 * 100.0;
+        t.row(&[block_tokens.to_string(), admitted.to_string(), f3(waste)]);
+    }
+    tables.push(t);
+
+    // 3. Planner kv_share split.
+    let w3 = WorkloadConfig::fixed_ratio(opts.pick(512, 128), opts.pick(64, 8), n);
+    let mut t = Table::new(
+        "Ablation 3 — SRAM remainder split (KV share vs resident weights)",
+        &["kv_share", "TBT (ms)", "tok/s"],
+    );
+    for share in [0.1f64, 0.5, 0.9] {
+        let mut chip = ChipSim::new(ChipConfig::large_core());
+        let m = simulate_fusion(
+            &mut chip,
+            &model,
+            &w3,
+            &FusionConfig {
+                kv_share: share,
+                ..FusionConfig::default()
+            },
+        )?;
+        t.row(&[
+            f3(share),
+            f3(m.tbt_s().mean() * 1e3),
+            f3(m.tokens_per_s()),
+        ]);
+    }
+    tables.push(t);
+
+    // 4. PD placement policy (Fig. 6): DP- vs PP-prioritized.
+    let w4 = WorkloadConfig::fixed_ratio(opts.pick(512, 128), opts.pick(64, 8), n);
+    let mut t = Table::new(
+        "Ablation 4 — PD placement policy (P42/D21)",
+        &["policy", "TTFT (ms)", "TBT (ms)", "tok/s", "mean KV hops"],
+    );
+    for (name, policy) in [
+        ("pp-prioritized (ours)", PdPlacementPolicy::PpPrioritized),
+        ("dp-prioritized (WSC-LLM)", PdPlacementPolicy::DpPrioritized { dp: 4 }),
+    ] {
+        let mut chip = ChipSim::new(ChipConfig::large_core());
+        let cfg = DisaggConfig {
+            policy,
+            ..DisaggConfig::p42_d21()
+        };
+        let assignment = crate::parallel::pd_placement::assign(
+            8, 8, cfg.n_prefill, cfg.n_decode, cfg.prefill_tp, cfg.prefill_stages,
+            cfg.decode_tp, policy,
+        )?;
+        let m = simulate_disagg(&mut chip, &model, &w4, &cfg)?;
+        t.row(&[
+            name.to_string(),
+            f3(m.ttft_s().mean() * 1e3),
+            f3(m.tbt_s().mean() * 1e3),
+            f3(m.tokens_per_s()),
+            f3(assignment.mean_kv_distance()),
+        ]);
+    }
+    tables.push(t);
+
+    Ok(tables)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_four_ablations_run() {
+        let tables = run(&Opts::fast()).unwrap();
+        assert_eq!(tables.len(), 4);
+        for t in &tables {
+            assert!(t.n_rows() >= 2);
+        }
+    }
+
+    #[test]
+    fn finer_blocks_waste_less_sram() {
+        let tables = run(&Opts::fast()).unwrap();
+        let csv = tables[1].to_csv();
+        let waste: Vec<f64> = csv
+            .lines()
+            .skip(1)
+            .map(|l| l.split(',').nth(2).unwrap().parse().unwrap())
+            .collect();
+        assert!(
+            waste.first().unwrap() <= waste.last().unwrap(),
+            "fine blocks should waste no more than coarse: {waste:?}"
+        );
+    }
+}

@@ -1,0 +1,158 @@
+//! Fig. 10 — core placement strategies (linear-seq / linear-interleave /
+//! ring / 2-D mesh) at TP=4 (64-core chip) and TP=16 (256-core chip):
+//! single-request latency.
+//!
+//! Placement quality manifests through the NoC channel-locking model: a
+//! 2-hop logical neighbour holds two links per transfer, halving ring
+//! bandwidth — which is why linear-interleave (optimal on Cerebras) loses
+//! to ring/mesh here, matching the paper's §5.4 discussion.
+
+use crate::config::{ChipConfig, ModelConfig};
+use crate::experiments::Opts;
+use crate::memmgr::planner::{plan, PlanRequest};
+use crate::memmgr::KvCache;
+use crate::model::exec::{run_iteration, ExecConfig};
+use crate::model::{BatchItem, IterBatch};
+use crate::parallel::partition::PartitionStrategy;
+use crate::parallel::placement::{Placement, Region, TpGroup};
+use crate::sim::chip::ChipSim;
+use crate::util::table::{f3, Table};
+use crate::util::units::cycles_to_ms;
+
+/// One full-model pass (prefill + a few decode steps) with the TP group
+/// arranged by `placement`.
+pub fn request_latency_ms(
+    chip_cfg: &ChipConfig,
+    model: &ModelConfig,
+    tp: usize,
+    placement: Placement,
+    seq: u64,
+    decode_steps: u64,
+) -> f64 {
+    let mut chip = ChipSim::new(chip_cfg.clone());
+    // The placement decides the region *shape* (Fig. 4): linear strategies
+    // arrange the TP group along a line (pipe-shaped), ring/mesh fold the
+    // same cores into a rectangle.
+    let (r, c) = match placement {
+        Placement::LinearSeq | Placement::LinearInterleave => (1, tp),
+        Placement::Ring | Placement::Mesh2D => {
+            crate::serving::layout::tp_rect(tp, chip_cfg.rows, chip_cfg.cols)
+        }
+    };
+    let group = TpGroup::place(Region::new(0, 0, r, c), placement);
+    // AllGather GEMMs stress the ring the hardest (weights rotate through
+    // every rank) — the regime T10/WaferLLM designed these placements for.
+    let strategy = if placement == Placement::Mesh2D && tp >= 4 {
+        let rows = (1..=tp).rev().find(|x| tp % x == 0 && x * x <= tp).unwrap_or(1);
+        PartitionStrategy::TwoDim { rows, cols: tp / rows }
+    } else {
+        PartitionStrategy::OneDimMN
+    };
+    let mut p = plan(
+        &chip_cfg.core,
+        model,
+        &PlanRequest {
+            layers: model.layers,
+            tp,
+            iter_tokens: seq as usize,
+            kv_share: 0.5,
+        },
+    );
+    // Placement study semantics (the T10/WaferLLM regime): weights are
+    // SRAM-resident and *rotate over the NoC* — no HBM streaming, so the
+    // figure isolates what placement controls. (With per-core HBM the
+    // streaming time drowns the NoC entirely; Fig. 8 covers that axis.)
+    p.weight_sram_bytes = p.shard_weight_bytes;
+    p.weight_hbm_bytes = 0;
+    let bpt = (model.kv_bytes_per_token_layer() * model.layers as u64 / tp as u64).max(1);
+    let mut kv = KvCache::new(
+        p.kv_bytes,
+        16,
+        chip_cfg.core.hbm_bytes,
+        bpt,
+        model.max_context as u64,
+    );
+    kv.admit(1);
+    let exec = ExecConfig::new(strategy, model.layers, true);
+    let mut t = run_iteration(
+        &mut chip,
+        &group,
+        model,
+        &p,
+        &exec,
+        &IterBatch::new(vec![BatchItem::prefill(1, seq, seq)]),
+        &mut kv,
+    );
+    for s in 0..decode_steps {
+        t = run_iteration(
+            &mut chip,
+            &group,
+            model,
+            &p,
+            &exec,
+            &IterBatch::new(vec![BatchItem::decode(1, seq + s + 1)]),
+            &mut kv,
+        );
+    }
+    cycles_to_ms(t, chip_cfg.freq_mhz)
+}
+
+pub fn run(opts: &Opts) -> anyhow::Result<Vec<Table>> {
+    let model = ModelConfig::qwen3_4b();
+    let seq = opts.pick(2048, 512);
+    let decode = opts.pick(8, 2);
+    let cases: Vec<(&str, ChipConfig, usize)> = if opts.fast {
+        vec![("TP=4 (64 cores)", ChipConfig::large_core(), 4)]
+    } else {
+        vec![
+            ("TP=4 (64 cores)", ChipConfig::large_core(), 4),
+            ("TP=16 (256 cores)", ChipConfig::small_core(), 16),
+        ]
+    };
+
+    let mut tables = Vec::new();
+    for (name, chip, tp) in cases {
+        let mut t = Table::new(
+            &format!("Fig 10 — {} single-request latency (ms) by placement", name),
+            &["placement", "latency", "speedup vs linear-interleave"],
+        );
+        let base = request_latency_ms(&chip, &model, tp, Placement::LinearInterleave, seq, decode);
+        for p in Placement::all() {
+            let l = request_latency_ms(&chip, &model, tp, p, seq, decode);
+            t.row(&[p.name().to_string(), f3(l), f3(base / l)]);
+        }
+        tables.push(t);
+    }
+    Ok(tables)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_beats_linear_seq() {
+        let chip = ChipConfig::large_core();
+        let m = ModelConfig::qwen3_4b();
+        let ring = request_latency_ms(&chip, &m, 4, Placement::Ring, 512, 0);
+        let lin = request_latency_ms(&chip, &m, 4, Placement::LinearSeq, 512, 0);
+        assert!(ring <= lin, "ring {ring} vs linear-seq {lin}");
+    }
+
+    #[test]
+    fn ring_beats_interleave_under_channel_locking() {
+        // The paper's §5.4 observation: with channel locking, interleaved
+        // 2-hop transfers hold two links, so ring wins on this platform.
+        let chip = ChipConfig::large_core();
+        let m = ModelConfig::qwen3_4b();
+        let ring = request_latency_ms(&chip, &m, 4, Placement::Ring, 2048, 0);
+        let inter = request_latency_ms(&chip, &m, 4, Placement::LinearInterleave, 2048, 0);
+        assert!(ring <= inter * 1.02, "ring {ring} vs interleave {inter}");
+    }
+
+    #[test]
+    fn table_shape() {
+        let tables = run(&Opts::fast()).unwrap();
+        assert_eq!(tables[0].n_rows(), 4);
+    }
+}

@@ -1,0 +1,108 @@
+//! Fig. 11 — PD-disaggregation core-ratio sweep: TTFT / TBT / e2e across
+//! prefill:decode core splits (P49/D14 … P21/D42) and workload
+//! input:output ratios, Qwen3-4B on the 64-core chip.
+
+use crate::config::{ChipConfig, ModelConfig, WorkloadConfig};
+use crate::experiments::Opts;
+use crate::serving::metrics::Metrics;
+use crate::serving::pd_disagg::{simulate_disagg, DisaggConfig};
+use crate::sim::chip::ChipSim;
+use crate::util::table::{f3, Table};
+
+/// The paper's sweep points: (prefill cores, decode cores, prefill stages).
+pub const RATIOS: [(usize, usize, usize); 4] =
+    [(49, 14, 7), (42, 21, 6), (28, 28, 4), (21, 42, 3)];
+
+pub fn run_ratio(
+    model: &ModelConfig,
+    w: &WorkloadConfig,
+    p: usize,
+    d: usize,
+    stages: usize,
+) -> anyhow::Result<Metrics> {
+    let mut chip = ChipSim::new(ChipConfig::large_core());
+    // Per-group decode batches are SRAM-activation bound in practice; a
+    // modest cap is what makes decode-core *count* matter under load (the
+    // paper's "more scheduling resources under a high-request load").
+    let cfg = DisaggConfig {
+        max_decode_batch: 8,
+        ..DisaggConfig::ratio_64(p, d, stages)
+    };
+    simulate_disagg(&mut chip, model, w, &cfg)
+}
+
+pub fn run(opts: &Opts) -> anyhow::Result<Vec<Table>> {
+    let model = ModelConfig::qwen3_4b();
+    let n = opts.pick(16, 3);
+    let workloads: Vec<WorkloadConfig> = if opts.fast {
+        vec![WorkloadConfig::fixed_ratio(100, 20, n)]
+    } else {
+        vec![
+            WorkloadConfig::fixed_ratio(1000, 100, n),
+            WorkloadConfig::fixed_ratio(500, 250, n),
+            WorkloadConfig::fixed_ratio(100, 100, n),
+        ]
+    };
+
+    let mut tables = Vec::new();
+    for w in &workloads {
+        let mut t = Table::new(
+            &format!("Fig 11 — PD core ratios, workload {} (Qwen3-4B, 64 cores)", w.name),
+            &["cores", "TTFT (s)", "TBT (ms)", "e2e (s)", "tok/s"],
+        );
+        for (p, d, stages) in RATIOS {
+            let m = run_ratio(&model, w, p, d, stages)?;
+            t.row(&[
+                format!("P{p}/D{d}"),
+                f3(m.ttft_s().mean()),
+                f3(m.tbt_s().mean() * 1e3),
+                f3(m.e2e_s().mean()),
+                f3(m.tokens_per_s()),
+            ]);
+        }
+        tables.push(t);
+    }
+    Ok(tables)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn more_prefill_cores_reduce_ttft() {
+        let model = ModelConfig::qwen3_4b();
+        let w = WorkloadConfig::fixed_ratio(500, 16, 6);
+        let p49 = run_ratio(&model, &w, 49, 14, 7).unwrap();
+        let p21 = run_ratio(&model, &w, 21, 42, 3).unwrap();
+        assert!(
+            p49.ttft_s().mean() <= p21.ttft_s().mean(),
+            "P49 {} vs P21 {}",
+            p49.ttft_s().mean(),
+            p21.ttft_s().mean()
+        );
+    }
+
+    #[test]
+    fn more_decode_cores_reduce_e2e_on_decode_heavy() {
+        // Paper: in the 100:100 task P21/D42 lowers e2e sharply vs P49/D14
+        // — under enough load that decode capacity queues requests.
+        let model = ModelConfig::qwen3_4b();
+        let w = WorkloadConfig::fixed_ratio(100, 100, 32);
+        let p49 = run_ratio(&model, &w, 49, 14, 7).unwrap();
+        let p21 = run_ratio(&model, &w, 21, 42, 3).unwrap();
+        assert!(
+            p21.e2e_s().mean() < p49.e2e_s().mean(),
+            "P21 {} vs P49 {}",
+            p21.e2e_s().mean(),
+            p49.e2e_s().mean()
+        );
+    }
+
+    #[test]
+    fn table_shape() {
+        let tables = run(&Opts::fast()).unwrap();
+        assert_eq!(tables.len(), 1);
+        assert_eq!(tables[0].n_rows(), 4);
+    }
+}

@@ -1,0 +1,127 @@
+//! Fig. 12 — heterogeneous decode cores for PD disaggregation: sweep the
+//! decode cores' systolic-array dimension and per-core HBM bandwidth;
+//! report throughput, TBT, and both per unit of chip area (7nm area model).
+//!
+//! Prefill:decode core ratio fixed at 2:1 (the Fig. 11 optimum).
+
+use crate::area;
+use crate::config::{ChipConfig, ModelConfig, WorkloadConfig};
+use crate::experiments::Opts;
+use crate::serving::metrics::Metrics;
+use crate::serving::pd_disagg::{simulate_disagg, DisaggConfig};
+use crate::sim::chip::ChipSim;
+use crate::util::table::{f3, Table};
+
+/// The decode-core configurations of the sweep: (name, sa_dim, hbm GB/s).
+/// Config 0 is the homogeneous baseline (A64H120 matches prefill cores on
+/// the large-core chip at 120 GB/s).
+pub const CONFIGS: [(&str, u64, f64); 8] = [
+    ("A128H120 (homog)", 128, 120.0),
+    ("A128H240", 128, 240.0),
+    ("A128H480", 128, 480.0),
+    ("A64H120", 64, 120.0),
+    ("A64H240", 64, 240.0),
+    ("A64H480", 64, 480.0),
+    ("A32H60", 32, 60.0),
+    ("A32H240", 32, 240.0),
+];
+
+pub fn run_config(
+    model: &ModelConfig,
+    w: &WorkloadConfig,
+    sa: u64,
+    hbm: f64,
+) -> anyhow::Result<(Metrics, f64)> {
+    let mut decode_core = ChipConfig::large_core().core;
+    decode_core.sa_dim = sa;
+    decode_core.hbm_bw_gbps = hbm;
+    // SRAM bandwidth auto-scales with the systolic array (Table 3 note).
+    let chip_cfg = ChipConfig::large_core().with_decode_core(decode_core);
+    let cfg = DisaggConfig::ratio_64(42, 21, 6); // 2:1 ratio
+    let area = area::chip_area_mm2(&chip_cfg, cfg.n_decode);
+    let mut chip = ChipSim::new(chip_cfg);
+    let m = simulate_disagg(&mut chip, model, w, &cfg)?;
+    Ok((m, area))
+}
+
+pub fn run(opts: &Opts) -> anyhow::Result<Vec<Table>> {
+    let model = ModelConfig::qwen3_4b();
+    let n = opts.pick(24, 4);
+    // Decode-leaning workload exposes the decode cores' provisioning.
+    let w = WorkloadConfig::fixed_ratio(opts.pick(256, 64), opts.pick(256, 24), n);
+    let configs: Vec<&(&str, u64, f64)> = if opts.fast {
+        CONFIGS.iter().take(3).collect()
+    } else {
+        CONFIGS.iter().collect()
+    };
+
+    let mut t = Table::new(
+        "Fig 12 — heterogeneous decode cores (P42/D21, Qwen3-4B)",
+        &[
+            "decode config",
+            "tok/s",
+            "area mm2",
+            "tok/s/mm2 (norm)",
+            "TBT (ms)",
+            "1/(TBT*area) (norm)",
+        ],
+    );
+    let mut rows: Vec<(String, f64, f64, f64)> = Vec::new();
+    for &&(name, sa, hbm) in &configs {
+        let (m, area) = run_config(&model, &w, sa, hbm)?;
+        rows.push((name.to_string(), m.tokens_per_s(), area, m.tbt_s().mean()));
+    }
+    let (base_tps, base_area, base_tbt) = (rows[0].1, rows[0].2, rows[0].3);
+    for (name, tps, area, tbt) in &rows {
+        t.row(&[
+            name.clone(),
+            f3(*tps),
+            f3(*area),
+            f3((tps / area) / (base_tps / base_area)),
+            f3(tbt * 1e3),
+            f3((base_tbt * base_area) / (tbt * area)),
+        ]);
+    }
+    Ok(vec![t])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn more_decode_hbm_bw_helps_throughput() {
+        let model = ModelConfig::qwen3_4b();
+        let w = WorkloadConfig::fixed_ratio(64, 32, 6);
+        let (lo, _) = run_config(&model, &w, 128, 60.0).unwrap();
+        let (hi, _) = run_config(&model, &w, 128, 480.0).unwrap();
+        assert!(
+            hi.tokens_per_s() >= lo.tokens_per_s(),
+            "hbm480 {} vs hbm60 {}",
+            hi.tokens_per_s(),
+            lo.tokens_per_s()
+        );
+    }
+
+    #[test]
+    fn narrower_decode_array_wins_per_area() {
+        // §4.3.1: decode is GEMV-bound, so halving the array barely hurts
+        // throughput while shrinking area → better tput/mm².
+        let model = ModelConfig::qwen3_4b();
+        let w = WorkloadConfig::fixed_ratio(64, 32, 6);
+        let (wide, area_wide) = run_config(&model, &w, 128, 240.0).unwrap();
+        let (narrow, area_narrow) = run_config(&model, &w, 32, 240.0).unwrap();
+        let per_area_wide = wide.tokens_per_s() / area_wide;
+        let per_area_narrow = narrow.tokens_per_s() / area_narrow;
+        assert!(
+            per_area_narrow > per_area_wide,
+            "narrow {per_area_narrow} vs wide {per_area_wide}"
+        );
+    }
+
+    #[test]
+    fn table_shape() {
+        let tables = run(&Opts::fast()).unwrap();
+        assert_eq!(tables[0].n_rows(), 3);
+    }
+}

@@ -1,0 +1,95 @@
+//! Fig. 13 — PD fusion hardware sweep: end-to-end latency vs input token
+//! length × per-core SRAM size {16, 32, 48 MB} × pipeline stage count
+//! {12, 18, 32} for Qwen3-8B (TP=4) on the 256-core chip.
+//!
+//! Fewer stages ⇒ more layers per stage ⇒ more data parallelism but more
+//! SRAM pressure (spilling); the sweet spot moves with SRAM size, which is
+//! the paper's point.
+
+use crate::config::{ChipConfig, ModelConfig, WorkloadConfig};
+use crate::experiments::Opts;
+use crate::serving::pd_fusion::{simulate_fusion, FusionConfig};
+use crate::sim::chip::ChipSim;
+use crate::util::table::{f3, Table};
+
+pub fn run_cell(
+    model: &ModelConfig,
+    input: usize,
+    output: usize,
+    n_requests: usize,
+    sram_mb: u64,
+    stages: usize,
+) -> anyhow::Result<f64> {
+    let chip_cfg = ChipConfig::small_core().with_sram_mb(sram_mb);
+    let mut chip = ChipSim::new(chip_cfg);
+    let w = WorkloadConfig::fixed_ratio(input, output, n_requests);
+    let cfg = FusionConfig {
+        tp: 4,
+        stages,
+        ..FusionConfig::default()
+    };
+    let m = simulate_fusion(&mut chip, model, &w, &cfg)?;
+    Ok(m.e2e_s().max())
+}
+
+pub fn run(opts: &Opts) -> anyhow::Result<Vec<Table>> {
+    let model = ModelConfig::qwen3_8b();
+    let output = opts.pick(64, 8);
+    let n = opts.pick(8, 2);
+    let inputs = opts.pick(vec![512usize, 2048, 8192], vec![128, 512]);
+    let srams = opts.pick(vec![16u64, 32, 48], vec![16, 48]);
+    let stage_counts = opts.pick(vec![12usize, 18, 32], vec![12, 32]);
+
+    let mut tables = Vec::new();
+    for &input in &inputs {
+        let mut t = Table::new(
+            &format!(
+                "Fig 13 — PD fusion e2e latency (s), Qwen3-8B TP=4 256 cores, input {input}"
+            ),
+            &["sram MB", "pp12", "pp18", "pp32"],
+        );
+        for &sram in &srams {
+            let mut row = vec![sram.to_string()];
+            for &st in &[12usize, 18, 32] {
+                if !stage_counts.contains(&st) {
+                    row.push("-".into());
+                    continue;
+                }
+                row.push(f3(run_cell(&model, input, output, n, sram, st)?));
+            }
+            t.row(&row);
+        }
+        tables.push(t);
+    }
+    Ok(tables)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bigger_sram_helps_under_fusion_pressure() {
+        // Paper: 16 → 32/48 MB SRAM gives a large speedup under fusion.
+        let m = ModelConfig::qwen3_8b();
+        let small = run_cell(&m, 256, 16, 2, 16, 12).unwrap();
+        let big = run_cell(&m, 256, 16, 2, 48, 12).unwrap();
+        assert!(big <= small, "48MB {big} vs 16MB {small}");
+    }
+
+    #[test]
+    fn more_stages_help_when_sram_is_small() {
+        // With small SRAM, more stages = fewer layers/core = less spill.
+        let m = ModelConfig::qwen3_8b();
+        let pp12 = run_cell(&m, 256, 16, 2, 16, 12).unwrap();
+        let pp32 = run_cell(&m, 256, 16, 2, 16, 32).unwrap();
+        assert!(pp32 <= pp12 * 1.05, "pp32 {pp32} vs pp12 {pp12}");
+    }
+
+    #[test]
+    fn table_shape() {
+        let tables = run(&Opts::fast()).unwrap();
+        assert_eq!(tables.len(), 2);
+        assert_eq!(tables[0].n_rows(), 2);
+    }
+}

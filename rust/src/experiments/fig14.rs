@@ -1,0 +1,160 @@
+//! Fig. 14 — PD disaggregation vs PD fusion: throughput and TBT across
+//! input:output token ratios (Qwen3-4B, 64-core chip), comparing two
+//! heterogeneous disaggregation configs and a homogeneous one against
+//! fusion — including per-area throughput via the 7nm area model.
+
+use crate::area;
+use crate::config::{ChipConfig, ModelConfig, WorkloadConfig};
+use crate::experiments::Opts;
+use crate::serving::metrics::Metrics;
+use crate::serving::pd_disagg::{simulate_disagg, DisaggConfig};
+use crate::serving::pd_fusion::{simulate_fusion, FusionConfig};
+use crate::sim::chip::ChipSim;
+use crate::util::table::{f3, Table};
+
+/// The compared systems: disagg homogeneous, two heterogeneous variants
+/// (narrow decode array / fat decode HBM), and fusion.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum System {
+    DisaggHomog,
+    DisaggHeteroA32H240,
+    DisaggHeteroA64H480,
+    Fusion,
+}
+
+impl System {
+    pub fn name(&self) -> &'static str {
+        match self {
+            System::DisaggHomog => "disagg homog",
+            System::DisaggHeteroA32H240 => "disagg A32H240",
+            System::DisaggHeteroA64H480 => "disagg A64H480",
+            System::Fusion => "fusion",
+        }
+    }
+
+    pub fn all() -> [System; 4] {
+        [
+            System::DisaggHomog,
+            System::DisaggHeteroA32H240,
+            System::DisaggHeteroA64H480,
+            System::Fusion,
+        ]
+    }
+}
+
+pub fn run_system(
+    model: &ModelConfig,
+    w: &WorkloadConfig,
+    sys: System,
+) -> anyhow::Result<(Metrics, f64)> {
+    let mk_hetero = |sa: u64, hbm: f64| {
+        let mut d = ChipConfig::large_core().core;
+        d.sa_dim = sa;
+        d.hbm_bw_gbps = hbm;
+        ChipConfig::large_core().with_decode_core(d)
+    };
+    let (chip_cfg, n_decode) = match sys {
+        System::DisaggHomog => (ChipConfig::large_core(), 21),
+        System::DisaggHeteroA32H240 => (mk_hetero(32, 240.0), 21),
+        System::DisaggHeteroA64H480 => (mk_hetero(64, 480.0), 21),
+        System::Fusion => (ChipConfig::large_core(), 0),
+    };
+    let area = area::chip_area_mm2(&chip_cfg, n_decode);
+    let mut chip = ChipSim::new(chip_cfg);
+    let m = match sys {
+        // §4.3.2: fusion adopts TP for both stages (PP would re-stream
+        // weights per microbatch during decode) — TP=16 over the 64-core
+        // chip gives 4 data-parallel fused groups.
+        System::Fusion => simulate_fusion(
+            &mut chip,
+            model,
+            w,
+            &FusionConfig {
+                tp: 16,
+                stages: 1,
+                ..FusionConfig::default()
+            },
+        )?,
+        _ => simulate_disagg(&mut chip, model, w, &DisaggConfig::ratio_64(42, 21, 6))?,
+    };
+    Ok((m, area))
+}
+
+pub fn run(opts: &Opts) -> anyhow::Result<Vec<Table>> {
+    let model = ModelConfig::qwen3_4b();
+    let n = opts.pick(16, 3);
+    // input:output ratios from decode-heavy (0.25) to prefill-heavy (10).
+    let ratios: Vec<(usize, usize)> = if opts.fast {
+        vec![(50, 200), (500, 50)]
+    } else {
+        vec![(128, 512), (256, 256), (512, 256), (1024, 256), (1000, 100)]
+    };
+
+    let mut tput = Table::new(
+        "Fig 14a — throughput (tok/s) and tok/s/mm², PD disagg vs fusion (Qwen3-4B, 64 cores)",
+        &["in:out", "system", "tok/s", "tok/s/mm2"],
+    );
+    let mut tbt = Table::new(
+        "Fig 14b — TBT (ms), PD disagg vs fusion",
+        &["in:out", "system", "TBT (ms)"],
+    );
+    for &(i, o) in &ratios {
+        let w = WorkloadConfig::fixed_ratio(i, o, n);
+        for sys in System::all() {
+            let (m, area) = run_system(&model, &w, sys)?;
+            tput.row(&[
+                format!("{i}:{o}"),
+                sys.name().to_string(),
+                f3(m.tokens_per_s()),
+                f3(m.tokens_per_s() / area * 1000.0),
+            ]);
+            tbt.row(&[
+                format!("{i}:{o}"),
+                sys.name().to_string(),
+                f3(m.tbt_s().mean() * 1e3),
+            ]);
+        }
+    }
+    Ok(vec![tput, tbt])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fusion_wins_decode_heavy_throughput() {
+        // Paper: at in:out < 1 fusion delivers >2.3x disagg throughput
+        // (disagg's prefill cores idle during decode-heavy phases).
+        let model = ModelConfig::qwen3_4b();
+        let w = WorkloadConfig::fixed_ratio(64, 256, 6);
+        let (fusion, _) = run_system(&model, &w, System::Fusion).unwrap();
+        let (disagg, _) = run_system(&model, &w, System::DisaggHomog).unwrap();
+        assert!(
+            fusion.tokens_per_s() > disagg.tokens_per_s(),
+            "fusion {} vs disagg {}",
+            fusion.tokens_per_s(),
+            disagg.tokens_per_s()
+        );
+    }
+
+    #[test]
+    fn disagg_tbt_stays_stable_across_ratios() {
+        // Paper: disagg TBT is stable; fusion TBT inflates as prefill
+        // chunks interleave with decoding.
+        let model = ModelConfig::qwen3_4b();
+        let w_dec = WorkloadConfig::fixed_ratio(64, 128, 4);
+        let w_pre = WorkloadConfig::fixed_ratio(1024, 64, 4);
+        let (d1, _) = run_system(&model, &w_dec, System::DisaggHomog).unwrap();
+        let (d2, _) = run_system(&model, &w_pre, System::DisaggHomog).unwrap();
+        let ratio = d2.tbt_s().mean() / d1.tbt_s().mean();
+        assert!(ratio > 0.4 && ratio < 2.5, "disagg TBT unstable: {ratio}");
+    }
+
+    #[test]
+    fn table_shape() {
+        let tables = run(&Opts::fast()).unwrap();
+        assert_eq!(tables.len(), 2);
+        assert_eq!(tables[0].n_rows(), 8);
+    }
+}

@@ -1,0 +1,125 @@
+//! Fig. 8 — hardware configuration space exploration: single-request
+//! latency of the Qwen3 family while sweeping per-core SRAM size, systolic
+//! array dimension and HBM bandwidth (64 cores, TP=4, prefill:decode 5:1).
+
+use crate::config::{ChipConfig, ModelConfig, WorkloadConfig};
+use crate::experiments::Opts;
+use crate::serving::pd_fusion::{simulate_fusion, FusionConfig};
+use crate::sim::chip::ChipSim;
+use crate::util::table::{f3, Table};
+
+/// Single-request e2e latency (s) on `chip_cfg`.
+pub fn single_request_latency_s(
+    chip_cfg: ChipConfig,
+    model: &ModelConfig,
+    input: usize,
+    output: usize,
+) -> f64 {
+    let mut chip = ChipSim::new(chip_cfg);
+    let w = WorkloadConfig::fixed_ratio(input, output, 1);
+    let cfg = FusionConfig {
+        tp: 4,
+        stages: 4,
+        ..FusionConfig::default()
+    };
+    let m = simulate_fusion(&mut chip, model, &w, &cfg).expect("simulation failed");
+    m.e2e_s().max()
+}
+
+pub fn run(opts: &Opts) -> anyhow::Result<Vec<Table>> {
+    // Prefill:decode = 5:1 (paper's setting).
+    let (input, output) = opts.pick((500, 100), (80, 16));
+    let srams = opts.pick(vec![8u64, 32, 128], vec![8, 32]);
+    let sas = opts.pick(vec![32u64, 64, 128], vec![32, 128]);
+    let hbms = opts.pick(vec![30.0f64, 120.0, 480.0], vec![30.0, 480.0]);
+    let models: Vec<ModelConfig> = if opts.fast {
+        vec![ModelConfig::qwen3_4b()]
+    } else {
+        vec![
+            ModelConfig::qwen3_4b(),
+            ModelConfig::qwen3_8b(),
+            ModelConfig::qwen3_14b(),
+            ModelConfig::qwen3_32b(),
+        ]
+    };
+
+    let mut tables = Vec::new();
+    for model in &models {
+        let mut t = Table::new(
+            &format!(
+                "Fig 8 — {} single-request latency (s), 64 cores TP=4, {input}:{output}",
+                model.name
+            ),
+            &["config", "hbm30", "hbm120", "hbm480"],
+        );
+        for &sram in &srams {
+            for &sa in &sas {
+                let mut row = vec![format!("S{sram}A{}", sa / 10)];
+                for &hbm in &[30.0, 120.0, 480.0] {
+                    if !hbms.contains(&hbm) {
+                        row.push("-".into());
+                        continue;
+                    }
+                    let chip = ChipConfig::large_core()
+                        .with_sram_mb(sram)
+                        .with_sa_dim(sa)
+                        .with_hbm_bw(hbm);
+                    row.push(f3(single_request_latency_s(chip, model, input, output)));
+                }
+                t.row(&row);
+            }
+        }
+        tables.push(t);
+    }
+    Ok(tables)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_runs_and_sorts_sensibly() {
+        let tables = run(&Opts::fast()).unwrap();
+        assert_eq!(tables.len(), 1);
+        assert!(tables[0].n_rows() >= 4);
+    }
+
+    #[test]
+    fn bigger_systolic_array_cuts_prefill_latency() {
+        let m = ModelConfig::qwen3_4b();
+        let slow = single_request_latency_s(
+            ChipConfig::large_core().with_sa_dim(32),
+            &m,
+            256,
+            8,
+        );
+        let fast = single_request_latency_s(
+            ChipConfig::large_core().with_sa_dim(128),
+            &m,
+            256,
+            8,
+        );
+        assert!(fast < slow, "sa128 {fast} should beat sa32 {slow}");
+    }
+
+    #[test]
+    fn hbm_bandwidth_matters_for_streamed_weights() {
+        // 32B model weights cannot fit SRAM: decode is weight-streaming
+        // bound, so HBM bandwidth changes latency (paper's 32B finding).
+        let m = ModelConfig::qwen3_32b();
+        let lo = single_request_latency_s(
+            ChipConfig::large_core().with_hbm_bw(30.0),
+            &m,
+            64,
+            8,
+        );
+        let hi = single_request_latency_s(
+            ChipConfig::large_core().with_hbm_bw(480.0),
+            &m,
+            64,
+            8,
+        );
+        assert!(hi < lo, "hbm480 {hi} should beat hbm30 {lo}");
+    }
+}

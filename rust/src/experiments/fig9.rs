@@ -1,0 +1,112 @@
+//! Fig. 9 — TP partition strategies (MN / K / 2-D) vs input sequence
+//! length: single prefill-request latency at TP=4.
+//!
+//! The paper's findings this regenerates: K-dimension (AllReduce) partition
+//! wins while `seq < hidden` (up to 6.03x at seq 256 on Qwen3-4B) and
+//! degrades sharply beyond; 2-D beats 1-D MN by ~1.44x on average.
+
+use crate::config::{ChipConfig, ModelConfig};
+use crate::experiments::Opts;
+use crate::memmgr::planner::{plan, PlanRequest};
+use crate::memmgr::KvCache;
+use crate::model::exec::{run_iteration, ExecConfig};
+use crate::model::{BatchItem, IterBatch};
+use crate::parallel::partition::PartitionStrategy;
+use crate::parallel::placement::{Placement, Region, TpGroup};
+use crate::sim::chip::ChipSim;
+use crate::util::table::{f3, Table};
+use crate::util::units::cycles_to_ms;
+
+/// Latency (ms) of one full-model prefill pass at TP=4 with `strategy`.
+pub fn prefill_latency_ms(model: &ModelConfig, seq: u64, strategy: PartitionStrategy) -> f64 {
+    let mut chip = ChipSim::new(ChipConfig::large_core());
+    let group = TpGroup::place(Region::new(0, 0, 2, 2), Placement::Ring);
+    let p = plan(
+        &chip.cfg.core,
+        model,
+        &PlanRequest {
+            layers: model.layers,
+            tp: 4,
+            iter_tokens: seq as usize,
+            kv_share: 0.5,
+        },
+    );
+    let bpt = (model.kv_bytes_per_token_layer() * model.layers as u64 / 4).max(1);
+    let mut kv = KvCache::new(p.kv_bytes, 16, chip.cfg.core.hbm_bytes, bpt, model.max_context as u64);
+    kv.admit(1);
+    let exec = ExecConfig::new(strategy, model.layers, true);
+    let batch = IterBatch::new(vec![BatchItem::prefill(1, seq, seq)]);
+    let t = run_iteration(&mut chip, &group, model, &p, &exec, &batch, &mut kv);
+    cycles_to_ms(t, chip.cfg.freq_mhz)
+}
+
+pub fn run(opts: &Opts) -> anyhow::Result<Vec<Table>> {
+    let models = if opts.fast {
+        vec![ModelConfig::qwen3_4b()]
+    } else {
+        vec![ModelConfig::qwen3_4b(), ModelConfig::qwen3_8b()]
+    };
+    let seqs: Vec<u64> = opts.pick(vec![256, 1024, 4096, 16384], vec![256, 4096]);
+
+    let mut tables = Vec::new();
+    for model in &models {
+        let mut t = Table::new(
+            &format!("Fig 9 — {} prefill latency (ms) by partition strategy, TP=4", model.name),
+            &["seq len", "1d-mn", "1d-k", "2d-mnk", "k/mn speedup", "2d/mn speedup"],
+        );
+        for &seq in &seqs {
+            let mn = prefill_latency_ms(model, seq, PartitionStrategy::OneDimMN);
+            let k = prefill_latency_ms(model, seq, PartitionStrategy::OneDimK);
+            let d2 = prefill_latency_ms(model, seq, PartitionStrategy::TwoDim { rows: 2, cols: 2 });
+            t.row(&[
+                seq.to_string(),
+                f3(mn),
+                f3(k),
+                f3(d2),
+                f3(mn / k),
+                f3(mn / d2),
+            ]);
+        }
+        tables.push(t);
+    }
+    Ok(tables)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn k_partition_wins_short_sequences() {
+        let m = ModelConfig::qwen3_4b();
+        let mn = prefill_latency_ms(&m, 256, PartitionStrategy::OneDimMN);
+        let k = prefill_latency_ms(&m, 256, PartitionStrategy::OneDimK);
+        assert!(k < mn, "K {k} must beat MN {mn} at seq 256");
+    }
+
+    #[test]
+    fn k_partition_degrades_long_sequences() {
+        let m = ModelConfig::qwen3_4b();
+        let mn = prefill_latency_ms(&m, 16384, PartitionStrategy::OneDimMN);
+        let k = prefill_latency_ms(&m, 16384, PartitionStrategy::OneDimK);
+        assert!(mn < k, "MN {mn} must beat K {k} at seq 16384");
+    }
+
+    #[test]
+    fn crossover_near_hidden_size() {
+        // The win flips somewhere between seq << hidden and seq >> hidden.
+        let m = ModelConfig::qwen3_4b(); // hidden 2560
+        let short_ratio = prefill_latency_ms(&m, 256, PartitionStrategy::OneDimMN)
+            / prefill_latency_ms(&m, 256, PartitionStrategy::OneDimK);
+        let long_ratio = prefill_latency_ms(&m, 16384, PartitionStrategy::OneDimMN)
+            / prefill_latency_ms(&m, 16384, PartitionStrategy::OneDimK);
+        assert!(short_ratio > 1.0 && long_ratio < 1.0);
+    }
+
+    #[test]
+    fn table_shape() {
+        let tables = run(&Opts::fast()).unwrap();
+        assert_eq!(tables.len(), 1);
+        assert_eq!(tables[0].n_rows(), 2);
+    }
+}

@@ -1,0 +1,191 @@
+//! §5.4 headline — "1.32x–6.03x over SOTA": our per-scenario strategy
+//! (partition + placement) against the T10 / WaferLLM / WSC-LLM presets,
+//! all run through identical simulation machinery.
+
+use crate::baselines::{self, StrategyPreset};
+use crate::config::{ChipConfig, ModelConfig};
+use crate::experiments::Opts;
+use crate::memmgr::planner::{plan, PlanRequest};
+use crate::memmgr::KvCache;
+use crate::model::exec::{run_iteration, ExecConfig};
+use crate::model::{BatchItem, IterBatch};
+use crate::parallel::placement::{Region, TpGroup};
+use crate::sim::chip::ChipSim;
+use crate::util::table::{f3, Table};
+use crate::util::units::cycles_to_ms;
+
+/// Single-request prefill+decode latency (ms) under a strategy preset.
+///
+/// `decode_partition` overrides the partition for the decode phase — the
+/// per-phase adaptation that is *our* contribution (AllGather/2-D for the
+/// long prefill, AllReduce for the GEMV-shaped decode); the baselines pass
+/// `None` and keep their single fixed strategy, as published.
+pub fn preset_latency_ms(
+    chip_cfg: &ChipConfig,
+    model: &ModelConfig,
+    tp: usize,
+    seq: u64,
+    decode_steps: u64,
+    preset: &StrategyPreset,
+    decode_partition: Option<crate::parallel::partition::PartitionStrategy>,
+) -> f64 {
+    let mut chip = ChipSim::new(chip_cfg.clone());
+    let (r, c) = crate::serving::layout::tp_rect(tp, chip_cfg.rows, chip_cfg.cols);
+    let group = TpGroup::place(Region::new(0, 0, r, c), preset.placement);
+    let p = plan(
+        &chip_cfg.core,
+        model,
+        &PlanRequest {
+            layers: model.layers,
+            tp,
+            iter_tokens: seq as usize,
+            kv_share: 0.5,
+        },
+    );
+    let bpt = (model.kv_bytes_per_token_layer() * model.layers as u64 / tp as u64).max(1);
+    // SRAM-only presets (T10/WaferLLM) get no HBM KV tier: overflow KV is
+    // charged as remote traffic by the executor.
+    let hbm_kv = if preset.uses_hbm {
+        chip_cfg.core.hbm_bytes
+    } else {
+        0
+    };
+    let mut kv = KvCache::new(p.kv_bytes, 16, hbm_kv, bpt, model.max_context as u64);
+    kv.admit(1);
+    // SRAM-only presets also stream no weights from HBM: if the shard does
+    // not fit, it must round-robin through SRAM (modeled as HBM-rate
+    // streaming being unavailable → they keep the plan's resident share and
+    // re-gather the rest over the NoC each pass, which the MN partition's
+    // rotation already charges).
+    let exec = ExecConfig::new(preset.partition, model.layers, true);
+    let mut t = run_iteration(
+        &mut chip,
+        &group,
+        model,
+        &p,
+        &exec,
+        &IterBatch::new(vec![BatchItem::prefill(1, seq, seq)]),
+        &mut kv,
+    );
+    let dec_exec = ExecConfig::new(
+        decode_partition.unwrap_or(preset.partition),
+        model.layers,
+        true,
+    );
+    for s in 0..decode_steps {
+        t = run_iteration(
+            &mut chip,
+            &group,
+            model,
+            &p,
+            &dec_exec,
+            &IterBatch::new(vec![BatchItem::decode(1, seq + s + 1)]),
+            &mut kv,
+        );
+    }
+    cycles_to_ms(t, chip_cfg.freq_mhz)
+}
+
+pub fn run(opts: &Opts) -> anyhow::Result<Vec<Table>> {
+    let models = if opts.fast {
+        vec![ModelConfig::qwen3_4b()]
+    } else {
+        vec![
+            ModelConfig::qwen3_1_7b(),
+            ModelConfig::qwen3_4b(),
+            ModelConfig::qwen3_8b(),
+            ModelConfig::qwen3_32b(),
+        ]
+    };
+    let scenarios: Vec<(&str, u64, u64)> = if opts.fast {
+        vec![("short prompt", 256, 2)]
+    } else {
+        vec![("short prompt", 256, 16), ("long prompt", 4096, 16)]
+    };
+    let tp = 4;
+    let chip_cfg = ChipConfig::large_core();
+
+    let mut t = Table::new(
+        "§5.4 headline — ours vs SOTA single-request latency (ms), TP=4, 64-core chip",
+        &["model", "scenario", "t10", "waferllm", "wsc-llm", "ours", "best speedup"],
+    );
+    for model in &models {
+        for &(name, seq, dec) in &scenarios {
+            let ours = baselines::ours(seq, model.hidden as u64, tp);
+            let l_ours = preset_latency_ms(
+                &chip_cfg,
+                model,
+                tp,
+                seq,
+                dec,
+                &ours,
+                Some(crate::parallel::partition::PartitionStrategy::OneDimK),
+            );
+            let mut lats = Vec::new();
+            for b in baselines::all_baselines() {
+                lats.push(preset_latency_ms(&chip_cfg, model, tp, seq, dec, &b, None));
+            }
+            let best_speedup = lats.iter().cloned().fold(f64::MIN, f64::max) / l_ours;
+            t.row(&[
+                model.name.clone(),
+                name.to_string(),
+                f3(lats[0]),
+                f3(lats[1]),
+                f3(lats[2]),
+                f3(l_ours),
+                f3(best_speedup),
+            ]);
+        }
+    }
+    Ok(vec![t])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ours_beats_every_baseline_somewhere() {
+        let chip = ChipConfig::large_core();
+        let m = ModelConfig::qwen3_4b();
+        let ours = baselines::ours(256, m.hidden as u64, 4);
+        let l_ours = preset_latency_ms(
+            &chip,
+            &m,
+            4,
+            256,
+            2,
+            &ours,
+            Some(crate::parallel::partition::PartitionStrategy::OneDimK),
+        );
+        for b in baselines::all_baselines() {
+            let l_b = preset_latency_ms(&chip, &m, 4, 256, 2, &b, None);
+            assert!(
+                l_ours <= l_b * 1.02,
+                "ours {l_ours} should not lose to {} {l_b}",
+                b.name
+            );
+        }
+    }
+
+    #[test]
+    fn speedup_over_t10_is_material_at_short_seq() {
+        // The 6.03x headline case: seq << hidden, K-partition vs MN.
+        let chip = ChipConfig::large_core();
+        let m = ModelConfig::qwen3_4b();
+        let ours = baselines::ours(256, m.hidden as u64, 4);
+        let l_ours = preset_latency_ms(&chip, &m, 4, 256, 0, &ours, None);
+        let l_t10 = preset_latency_ms(&chip, &m, 4, 256, 0, &baselines::t10(), None);
+        assert!(
+            l_t10 / l_ours > 1.3,
+            "expected material speedup, got {}",
+            l_t10 / l_ours
+        );
+    }
+
+    #[test]
+    fn table_shape() {
+        let t = run(&Opts::fast()).unwrap();
+        assert_eq!(t[0].n_rows(), 1);
+    }
+}

@@ -1,0 +1,127 @@
+//! Experiment harness: one module per table/figure of the paper's
+//! evaluation (§5). Each experiment prints the same rows/series the paper
+//! reports and writes a CSV under `results/`.
+//!
+//! | id | paper content | module |
+//! |----|---------------|--------|
+//! | `table2` | analytic partition costs + simulated cross-check | [`table2`] |
+//! | `fig7a` | NpuSim vs reference-hardware validation | [`fig7`] |
+//! | `fig7b` | detailed vs fast simulation accuracy/speed | [`fig7`] |
+//! | `fig8` | hardware configuration space sweep | [`fig8`] |
+//! | `fig9` | TP partition strategy vs sequence length | [`fig9`] |
+//! | `fig10` | core placement strategies | [`fig10`] |
+//! | `fig11` | PD core-ratio sweep | [`fig11`] |
+//! | `fig12` | heterogeneous decode cores | [`fig12`] |
+//! | `fig13` | PD fusion hardware sweep | [`fig13`] |
+//! | `fig14` | PD disaggregation vs PD fusion | [`fig14`] |
+//! | `headline` | ours vs T10 / WaferLLM / WSC-LLM | [`headline`] |
+
+pub mod ablations;
+pub mod fig10;
+pub mod fig11;
+pub mod fig12;
+pub mod fig13;
+pub mod fig14;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+pub mod headline;
+pub mod reference_hw;
+pub mod table2;
+
+use crate::util::table::Table;
+use std::path::PathBuf;
+
+/// Experiment options shared by every module.
+#[derive(Debug, Clone)]
+pub struct Opts {
+    /// Shrink workloads (unit tests / smoke runs): fewer requests, shorter
+    /// sequences, fewer sweep points. Figures keep their shape.
+    pub fast: bool,
+    /// Where CSVs are written (`None` = don't write).
+    pub out_dir: Option<PathBuf>,
+}
+
+impl Default for Opts {
+    fn default() -> Self {
+        Opts {
+            fast: false,
+            out_dir: Some(PathBuf::from("results")),
+        }
+    }
+}
+
+impl Opts {
+    pub fn fast() -> Self {
+        Opts {
+            fast: true,
+            out_dir: None,
+        }
+    }
+
+    /// Pick a sweep value: full-fidelity or reduced.
+    pub fn pick<T>(&self, full: T, fast: T) -> T {
+        if self.fast {
+            fast
+        } else {
+            full
+        }
+    }
+}
+
+/// All experiment ids, in paper order.
+pub const ALL: &[&str] = &[
+    "table2", "fig7a", "fig7b", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13", "fig14",
+    "headline", "ablations",
+];
+
+/// Run one experiment by id; returns its tables (already printed).
+pub fn run(id: &str, opts: &Opts) -> anyhow::Result<Vec<Table>> {
+    let tables = match id {
+        "table2" => table2::run(opts)?,
+        "fig7a" => fig7::run_validation(opts)?,
+        "fig7b" => fig7::run_mode_comparison(opts)?,
+        "fig8" => fig8::run(opts)?,
+        "fig9" => fig9::run(opts)?,
+        "fig10" => fig10::run(opts)?,
+        "fig11" => fig11::run(opts)?,
+        "fig12" => fig12::run(opts)?,
+        "fig13" => fig13::run(opts)?,
+        "fig14" => fig14::run(opts)?,
+        "headline" => headline::run(opts)?,
+        "ablations" => ablations::run(opts)?,
+        other => anyhow::bail!("unknown experiment {other:?} (try one of {ALL:?})"),
+    };
+    for t in &tables {
+        t.print();
+        println!();
+    }
+    if let Some(dir) = &opts.out_dir {
+        for (i, t) in tables.iter().enumerate() {
+            let name = if tables.len() == 1 {
+                id.to_string()
+            } else {
+                format!("{id}_{i}")
+            };
+            t.write_csv(dir, &name)?;
+        }
+    }
+    Ok(tables)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_id_rejected() {
+        assert!(run("fig99", &Opts::fast()).is_err());
+    }
+
+    #[test]
+    fn table2_dispatches() {
+        // Pure-analytic, instant; per-figure smoke tests live per module.
+        let t = run("table2", &Opts::fast()).unwrap();
+        assert!(!t.is_empty());
+    }
+}

@@ -1,0 +1,101 @@
+//! Table 2: communication and memory cost of the tensor-partition
+//! strategies — the analytic formulas, cross-checked against the bytes the
+//! simulated NoC actually moved.
+
+use crate::config::{ChipConfig, ModelConfig};
+use crate::experiments::Opts;
+use crate::model::exec::dist_gemm;
+use crate::parallel::partition::{partition_cost, PartitionStrategy};
+use crate::parallel::placement::{Placement, Region, TpGroup};
+use crate::sim::chip::ChipSim;
+use crate::util::table::{f3, Table};
+
+const STRATEGIES: [PartitionStrategy; 4] = [
+    PartitionStrategy::InputOnly,
+    PartitionStrategy::OneDimMN,
+    PartitionStrategy::OneDimK,
+    PartitionStrategy::TwoDim { rows: 2, cols: 2 },
+];
+
+/// Simulated NoC bytes per core for one distributed GEMM.
+fn simulated_comm_per_core(strategy: PartitionStrategy, m: u64, k: u64, n: u64) -> f64 {
+    let mut chip = ChipSim::new(ChipConfig::large_core());
+    let group = TpGroup::place(Region::new(0, 0, 2, 2), Placement::Ring);
+    dist_gemm(&mut chip, &group, strategy, m, k, n, 0);
+    chip.mesh.stats().bytes as f64 / group.len() as f64 / chip.cfg.dtype_bytes as f64
+}
+
+pub fn run(opts: &Opts) -> anyhow::Result<Vec<Table>> {
+    let model = ModelConfig::qwen3_8b();
+    let (m, k, n) = (
+        opts.pick(1024, 256),
+        model.hidden as u64,
+        model.hidden as u64,
+    );
+    let tp = 4;
+
+    let mut t = Table::new(
+        &format!("Table 2 — partition costs for GEMM [{m},{k}]x[{k},{n}], {tp} cores (elements)"),
+        &[
+            "strategy",
+            "input/core",
+            "weight/core",
+            "output/core",
+            "analytic comm",
+            "simulated comm",
+            "err %",
+            "max hop",
+        ],
+    );
+    for s in STRATEGIES {
+        let c = partition_cost(s, tp, m, k, n, 2);
+        let sim = simulated_comm_per_core(s, m, k, n);
+        // The AllReduce sim moves ceil(bytes/num) chunks; tiny rounding ok.
+        let err = if c.total_comm == 0.0 {
+            (sim - c.total_comm).abs()
+        } else {
+            (sim - c.total_comm).abs() / c.total_comm * 100.0
+        };
+        t.row(&[
+            s.name().to_string(),
+            f3(c.input_per_core),
+            f3(c.weight_per_core),
+            f3(c.output_per_core),
+            f3(c.total_comm),
+            f3(sim),
+            f3(err),
+            format!("0~{}", c.max_hop),
+        ]);
+    }
+    Ok(vec![t])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simulated_comm_matches_analytic_within_rounding() {
+        let (m, k, n) = (512, 4096, 4096);
+        for s in [PartitionStrategy::OneDimMN, PartitionStrategy::OneDimK] {
+            let analytic = partition_cost(s, 4, m, k, n, 2).total_comm;
+            let sim = simulated_comm_per_core(s, m, k, n);
+            let err = (sim - analytic).abs() / analytic;
+            assert!(err < 0.05, "{s:?}: sim {sim} vs analytic {analytic}");
+        }
+    }
+
+    #[test]
+    fn input_only_moves_nothing() {
+        assert_eq!(
+            simulated_comm_per_core(PartitionStrategy::InputOnly, 512, 1024, 1024),
+            0.0
+        );
+    }
+
+    #[test]
+    fn table_has_all_strategies() {
+        let t = run(&Opts::fast()).unwrap();
+        assert_eq!(t[0].n_rows(), 4);
+    }
+}

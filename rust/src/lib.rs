@@ -1,0 +1,38 @@
+//! # NpuSim — LLM serving on multi-core NPUs
+//!
+//! Reproduction of *"From Principles to Practice: A Systematic Study of LLM
+//! Serving on Multi-core NPUs"* (Zhu et al., 2025).
+//!
+//! The crate is organised around the paper's two contributions:
+//!
+//! - **The simulator** ([`sim`]): a multi-level simulation framework —
+//!   performance-model compute ([`sim::compute`]), transaction-level memory
+//!   ([`sim::memory`]), and cycle-accurate 2D-mesh NoC routing
+//!   ([`sim::noc`]) — glued together by a discrete-event engine
+//!   ([`sim::engine`]).
+//! - **The serving study** ([`parallel`], [`memmgr`], [`serving`]): tensor
+//!   partition strategies and core placements, hierarchical KV-cache
+//!   management across SRAM and HBM, and PD-disaggregation / PD-fusion
+//!   scheduling with heterogeneous core designs ([`area`]).
+//!
+//! [`experiments`] regenerates every table and figure of the paper's
+//! evaluation; [`baselines`] encodes the T10 / WaferLLM / WSC-LLM strategy
+//! presets the paper compares against; [`runtime`] + [`coordinator`] run a
+//! real (tiny) Qwen3-style model AOT-compiled from JAX through PJRT so the
+//! serving stack can be exercised end-to-end with actual tokens.
+
+pub mod area;
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod memmgr;
+pub mod model;
+pub mod parallel;
+pub mod runtime;
+pub mod serving;
+pub mod sim;
+pub mod util;
+
+pub use config::{ChipConfig, ModelConfig, WorkloadConfig};
+pub use util::units::Cycle;

@@ -1,0 +1,294 @@
+//! `npusim` — CLI for the NpuSim simulator and serving study.
+//!
+//! ```text
+//! npusim experiment <id>|all [--fast] [--out results]   regenerate a paper figure/table
+//! npusim simulate [--config f.toml] [--mode fusion|disagg] ...   run one serving simulation
+//! npusim serve [--artifacts artifacts] [--prompt "1,2,3"] [--n 4]   real tokens via PJRT
+//! npusim validate [--fast]     fig7 simulator validation
+//! npusim info [--model name]   print chip/model presets
+//! ```
+
+use anyhow::{Context, Result};
+use npusim::config::{ChipConfig, ModelConfig, WorkloadConfig};
+use npusim::coordinator::{Coordinator, GenRequest};
+use npusim::experiments::{self, Opts};
+use npusim::serving::pd_disagg::{simulate_disagg, DisaggConfig};
+use npusim::serving::pd_fusion::{simulate_fusion, FusionConfig};
+use npusim::serving::Metrics;
+use npusim::sim::chip::ChipSim;
+use npusim::util::cli::Args;
+use npusim::util::table::{f3, Table};
+
+fn main() {
+    let args = Args::from_env();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("experiment") => cmd_experiment(args),
+        Some("simulate") => cmd_simulate(args),
+        Some("serve") => cmd_serve(args),
+        Some("validate") => {
+            let opts = opts_from(args);
+            experiments::run("fig7a", &opts)?;
+            experiments::run("fig7b", &opts)?;
+            Ok(())
+        }
+        Some("info") => cmd_info(args),
+        Some(other) => anyhow::bail!("unknown subcommand {other:?}; see --help in README"),
+        None => {
+            println!(
+                "npusim — LLM serving on multi-core NPUs (paper reproduction)\n\
+                 subcommands: experiment | simulate | serve | validate | info\n\
+                 e.g.  npusim experiment fig9\n      npusim experiment all --fast\n      \
+                 npusim simulate --mode fusion --model qwen3_4b --input 512 --output 64\n      \
+                 npusim serve --prompt \"1,2,3,4\""
+            );
+            Ok(())
+        }
+    }
+}
+
+fn opts_from(args: &Args) -> Opts {
+    Opts {
+        fast: args.flag("fast"),
+        out_dir: match args.opt("out") {
+            Some(dir) => Some(dir.into()),
+            None => Some("results".into()),
+        },
+    }
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .context("usage: npusim experiment <id>|all")?;
+    let opts = opts_from(args);
+    if id == "all" {
+        for id in experiments::ALL {
+            println!(">>> experiment {id}");
+            experiments::run(id, &opts)?;
+        }
+    } else {
+        experiments::run(id, &opts)?;
+    }
+    Ok(())
+}
+
+fn chip_from(args: &Args) -> Result<ChipConfig> {
+    let mut chip = match args.opt_or("chip", "large_core") {
+        "large_core" | "large" => ChipConfig::large_core(),
+        "small_core" | "small" => ChipConfig::small_core(),
+        "ascend" | "ascend910b" => ChipConfig::ascend910b_like(),
+        other => anyhow::bail!("unknown chip {other:?}"),
+    };
+    if let Some(mb) = args.opt_parse::<u64>("sram-mb")? {
+        chip = chip.with_sram_mb(mb);
+    }
+    if let Some(sa) = args.opt_parse::<u64>("sa-dim")? {
+        chip = chip.with_sa_dim(sa);
+    }
+    if let Some(bw) = args.opt_parse::<f64>("hbm-bw")? {
+        chip = chip.with_hbm_bw(bw);
+    }
+    chip.validate()?;
+    Ok(chip)
+}
+
+fn print_metrics(name: &str, m: &Metrics, chip: &ChipSim) {
+    let mut t = Table::new(
+        &format!("serving metrics — {name}"),
+        &["metric", "value"],
+    );
+    let mut ttft = m.ttft_s();
+    let mut tbt = m.tbt_s();
+    let e2e = m.e2e_s();
+    t.row(&["requests".into(), m.n_requests().to_string()]);
+    t.row(&["TTFT mean (s)".into(), f3(ttft.mean())]);
+    t.row(&["TTFT p99 (s)".into(), f3(ttft.p99())]);
+    t.row(&["TBT mean (ms)".into(), f3(tbt.mean() * 1e3)]);
+    t.row(&["TBT p99 (ms)".into(), f3(tbt.p99() * 1e3)]);
+    t.row(&["e2e mean (s)".into(), f3(e2e.mean())]);
+    t.row(&["throughput (tok/s)".into(), f3(m.tokens_per_s())]);
+    t.row(&["requests/s".into(), f3(m.requests_per_s())]);
+    // SLO attainment at a typical interactive target (§4.3: scheduling is
+    // driven by TTFT/TBT SLOs).
+    t.row(&[
+        "SLO attainment (TTFT<2s, TBT<50ms)".into(),
+        f3(m.slo_attainment(2.0, 0.050) * 100.0),
+    ]);
+    t.print();
+    println!("\nper-op cycle breakdown:");
+    for (class, cycles, pct) in chip.aggregate_tracer().breakdown() {
+        println!("  {:<12} {:>14} cycles  {:>5.1}%", class.name(), cycles, pct);
+    }
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    // Optional TOML config; flags override.
+    let bundle = if let Some(path) = args.opt("config") {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        Some(npusim::config::load_sim_config(&text)?)
+    } else {
+        None
+    };
+    let chip_cfg = match &bundle {
+        Some(b) => b.chip.clone(),
+        None => chip_from(args)?,
+    };
+    let model = match args.opt("model") {
+        Some(name) => ModelConfig::by_name(name)?,
+        None => bundle
+            .as_ref()
+            .map(|b| b.model.clone())
+            .unwrap_or_else(ModelConfig::qwen3_4b),
+    };
+    let n = args.opt_parse_or::<usize>("requests", 16)?;
+    let workload = match (args.opt_parse::<usize>("input")?, args.opt_parse::<usize>("output")?) {
+        (Some(i), Some(o)) => WorkloadConfig::fixed_ratio(i, o, n),
+        _ => bundle
+            .as_ref()
+            .map(|b| b.workload.clone())
+            .unwrap_or_else(|| WorkloadConfig::decode_dominated(n)),
+    };
+
+    // Trace replay (`--trace file.jsonl`) overrides the synthetic workload.
+    let trace = match args.opt("trace") {
+        Some(path) => Some(npusim::serving::trace::load_jsonl(
+            path,
+            args.opt_parse::<usize>("requests")?,
+        )?),
+        None => None,
+    };
+
+    let mode = args.opt_or("mode", "fusion");
+    let mut chip = ChipSim::new(chip_cfg);
+    let metrics = match mode {
+        "fusion" => {
+            let cfg = FusionConfig {
+                tp: args.opt_parse_or("tp", 4)?,
+                stages: args.opt_parse_or("stages", 4)?,
+                chunk: args.opt_parse_or("chunk", 256)?,
+                budget: args.opt_parse_or("budget", 288)?,
+                ..FusionConfig::default()
+            };
+            match trace {
+                Some(reqs) => npusim::serving::pd_fusion::simulate_fusion_requests(
+                    &mut chip, &model, reqs, &cfg,
+                )?,
+                None => simulate_fusion(&mut chip, &model, &workload, &cfg)?,
+            }
+        }
+        "disagg" => {
+            let cfg = DisaggConfig {
+                n_prefill: args.opt_parse_or("prefill-cores", 42)?,
+                n_decode: args.opt_parse_or("decode-cores", 21)?,
+                prefill_stages: args.opt_parse_or("stages", 6)?,
+                ..DisaggConfig::default()
+            };
+            match trace {
+                Some(reqs) => npusim::serving::pd_disagg::simulate_disagg_requests(
+                    &mut chip, &model, reqs, &cfg,
+                )?,
+                None => simulate_disagg(&mut chip, &model, &workload, &cfg)?,
+            }
+        }
+        other => anyhow::bail!("unknown mode {other:?} (fusion|disagg)"),
+    };
+    print_metrics(
+        &format!("{mode} / {} / {}", model.name, workload.name),
+        &metrics,
+        &chip,
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let dir = args.opt_or("artifacts", npusim::runtime::ARTIFACT_DIR);
+    let coord = Coordinator::start(dir)?;
+    println!(
+        "loaded TinyQwen artifacts: vocab={} hidden={} layers={} (decode batch {})",
+        coord.meta.vocab, coord.meta.hidden, coord.meta.layers, coord.meta.decode_batch
+    );
+    let n = args.opt_parse_or::<usize>("n", 2)?;
+    let max_new = args.opt_parse_or::<usize>("max-new-tokens", 16)?;
+    let prompts: Vec<Vec<i32>> = match args.opt("prompt") {
+        Some(p) => vec![p
+            .split(',')
+            .map(|t| t.trim().parse::<i32>().context("bad token id"))
+            .collect::<Result<_>>()?],
+        None => (0..n)
+            .map(|i| (0..8).map(|j| (i * 31 + j * 7) as i32).collect())
+            .collect(),
+    };
+    let reqs: Vec<GenRequest> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| GenRequest {
+            id: i as u64,
+            prompt: p.clone(),
+            max_new_tokens: max_new,
+        })
+        .collect();
+    let t0 = std::time::Instant::now();
+    let responses = coord.generate(reqs)?;
+    let dt = t0.elapsed().as_secs_f64();
+    let total_tokens: usize = responses.iter().map(|r| r.tokens.len()).sum();
+    for r in &responses {
+        println!("request {} -> {:?}", r.id, r.tokens);
+    }
+    println!(
+        "{total_tokens} tokens in {dt:.3}s ({:.1} tok/s)",
+        total_tokens as f64 / dt
+    );
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let mut t = Table::new(
+        "model presets",
+        &["name", "layers", "hidden", "heads/kv", "params (B)", "weights (GiB)"],
+    );
+    for m in ModelConfig::paper_models() {
+        if let Some(filter) = args.opt("model") {
+            if !m.name.contains(filter) {
+                continue;
+            }
+        }
+        t.row(&[
+            m.name.clone(),
+            m.layers.to_string(),
+            m.hidden.to_string(),
+            format!("{}/{}", m.heads, m.kv_heads),
+            f3(m.n_params() as f64 / 1e9),
+            f3(m.weight_bytes() as f64 / (1 << 30) as f64),
+        ]);
+    }
+    t.print();
+    let mut c = Table::new(
+        "chip presets (Table 3)",
+        &["name", "cores", "SA", "SRAM/core", "HBM bw/core", "NoC link"],
+    );
+    for chip in [
+        ChipConfig::large_core(),
+        ChipConfig::small_core(),
+        ChipConfig::ascend910b_like(),
+    ] {
+        c.row(&[
+            chip.name.clone(),
+            chip.n_cores().to_string(),
+            format!("{0}x{0}", chip.core.sa_dim),
+            npusim::util::units::fmt_bytes(chip.core.sram_bytes),
+            format!("{} GB/s", chip.core.hbm_bw_gbps),
+            format!("{} GB/s", chip.noc.link_bw_gbps),
+        ]);
+    }
+    c.print();
+    Ok(())
+}

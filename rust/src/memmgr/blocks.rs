@@ -1,0 +1,234 @@
+//! Fine-grained SRAM block allocator (Fig. 5, left).
+//!
+//! The KV region of SRAM is carved into fixed-size blocks. Each request
+//! owns a chain (linked list) of block IDs — blocks from different
+//! requests interleave freely, exactly as in the paper's example where
+//! requests 2 and 3 arrive while request 1 is mid-generation. A free list
+//! recycles blocks when requests complete.
+
+/// Sentinel for "no next block" in the chain table.
+const NIL: u32 = u32::MAX;
+
+/// A request's handle on its block chain.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Chain {
+    head: u32,
+    tail: u32,
+    len: u32,
+}
+
+impl Chain {
+    pub fn empty() -> Self {
+        Chain {
+            head: NIL,
+            tail: NIL,
+            len: 0,
+        }
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.len as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+/// Fixed-size block allocator over a byte capacity.
+#[derive(Debug, Clone)]
+pub struct BlockAllocator {
+    block_bytes: u64,
+    /// `next[i]` = chain successor of block `i` (NIL terminates). Blocks on
+    /// the free list reuse the same table.
+    next: Vec<u32>,
+    free_head: u32,
+    n_free: u32,
+}
+
+impl BlockAllocator {
+    /// Carve `capacity_bytes` into blocks of `block_bytes`.
+    pub fn new(capacity_bytes: u64, block_bytes: u64) -> Self {
+        assert!(block_bytes > 0, "zero block size");
+        let n = (capacity_bytes / block_bytes) as usize;
+        let n = n.min(u32::MAX as usize - 1);
+        // Free list initially links every block in order.
+        let mut next = vec![NIL; n];
+        for i in 0..n.saturating_sub(1) {
+            next[i] = (i + 1) as u32;
+        }
+        BlockAllocator {
+            block_bytes,
+            next,
+            free_head: if n == 0 { NIL } else { 0 },
+            n_free: n as u32,
+        }
+    }
+
+    pub fn block_bytes(&self) -> u64 {
+        self.block_bytes
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.next.len()
+    }
+
+    pub fn n_free(&self) -> usize {
+        self.n_free as usize
+    }
+
+    pub fn bytes_free(&self) -> u64 {
+        self.n_free as u64 * self.block_bytes
+    }
+
+    /// Append one block to `chain`. Returns `false` (chain unchanged) when
+    /// SRAM is exhausted — the caller spills to HBM instead.
+    pub fn append(&mut self, chain: &mut Chain) -> bool {
+        if self.free_head == NIL {
+            return false;
+        }
+        let blk = self.free_head;
+        self.free_head = self.next[blk as usize];
+        self.next[blk as usize] = NIL;
+        self.n_free -= 1;
+        if chain.tail == NIL {
+            chain.head = blk;
+        } else {
+            self.next[chain.tail as usize] = blk;
+        }
+        chain.tail = blk;
+        chain.len += 1;
+        true
+    }
+
+    /// Release an entire chain back to the free list (request completed).
+    pub fn release(&mut self, chain: &mut Chain) {
+        if chain.head == NIL {
+            return;
+        }
+        // Splice the whole chain onto the free list head in O(1).
+        self.next[chain.tail as usize] = self.free_head;
+        self.free_head = chain.head;
+        self.n_free += chain.len;
+        *chain = Chain::empty();
+    }
+
+    /// Walk a chain's block IDs (diagnostics / tests).
+    pub fn chain_blocks(&self, chain: &Chain) -> Vec<u32> {
+        let mut out = Vec::with_capacity(chain.n_blocks());
+        let mut cur = chain.head;
+        while cur != NIL {
+            out.push(cur);
+            cur = self.next[cur as usize];
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn carves_capacity_into_blocks() {
+        let a = BlockAllocator::new(1024, 128);
+        assert_eq!(a.n_blocks(), 8);
+        assert_eq!(a.n_free(), 8);
+        assert_eq!(a.bytes_free(), 1024);
+    }
+
+    #[test]
+    fn append_until_exhausted() {
+        let mut a = BlockAllocator::new(512, 128);
+        let mut c = Chain::empty();
+        for _ in 0..4 {
+            assert!(a.append(&mut c));
+        }
+        assert!(!a.append(&mut c), "5th block must fail");
+        assert_eq!(c.n_blocks(), 4);
+        assert_eq!(a.n_free(), 0);
+    }
+
+    #[test]
+    fn chains_interleave_like_fig5() {
+        // Request 1 grows alone, then 2 and 3 arrive: block IDs interleave.
+        let mut a = BlockAllocator::new(8 * 64, 64);
+        let mut r1 = Chain::empty();
+        let mut r2 = Chain::empty();
+        let mut r3 = Chain::empty();
+        a.append(&mut r1);
+        a.append(&mut r1);
+        a.append(&mut r2);
+        a.append(&mut r3);
+        a.append(&mut r1); // r1's third block is *after* r2/r3's first
+        assert_eq!(a.chain_blocks(&r1), vec![0, 1, 4]);
+        assert_eq!(a.chain_blocks(&r2), vec![2]);
+        assert_eq!(a.chain_blocks(&r3), vec![3]);
+    }
+
+    #[test]
+    fn release_recycles_blocks() {
+        let mut a = BlockAllocator::new(4 * 64, 64);
+        let mut r1 = Chain::empty();
+        let mut r2 = Chain::empty();
+        for _ in 0..2 {
+            a.append(&mut r1);
+            a.append(&mut r2);
+        }
+        assert_eq!(a.n_free(), 0);
+        a.release(&mut r1);
+        assert_eq!(a.n_free(), 2);
+        assert!(r1.is_empty());
+        // Freed blocks are reusable by a new request.
+        let mut r3 = Chain::empty();
+        assert!(a.append(&mut r3));
+        assert!(a.append(&mut r3));
+        assert!(!a.append(&mut r3));
+        // r2 is untouched.
+        assert_eq!(r2.n_blocks(), 2);
+    }
+
+    #[test]
+    fn zero_capacity_always_fails() {
+        let mut a = BlockAllocator::new(63, 64); // less than one block
+        let mut c = Chain::empty();
+        assert!(!a.append(&mut c));
+    }
+
+    #[test]
+    fn release_empty_chain_is_noop() {
+        let mut a = BlockAllocator::new(256, 64);
+        let mut c = Chain::empty();
+        a.release(&mut c);
+        assert_eq!(a.n_free(), 4);
+    }
+
+    #[test]
+    fn prop_no_block_shared_between_chains() {
+        check("block exclusivity", 128, |rng| {
+            let n_blocks = rng.range(1, 32);
+            let mut a = BlockAllocator::new(n_blocks as u64 * 64, 64);
+            let mut chains = vec![Chain::empty(); rng.range(1, 6)];
+            // Random interleaving of appends and releases.
+            for _ in 0..rng.range(1, 64) {
+                let i = rng.range(0, chains.len());
+                if rng.chance(0.8) {
+                    a.append(&mut chains[i]);
+                } else {
+                    a.release(&mut chains[i]);
+                }
+            }
+            // Invariant: all live blocks distinct, accounting consistent.
+            let mut seen = std::collections::HashSet::new();
+            let mut live = 0;
+            for c in &chains {
+                for b in a.chain_blocks(c) {
+                    assert!(seen.insert(b), "block {b} in two chains");
+                    live += 1;
+                }
+            }
+            assert_eq!(live + a.n_free(), a.n_blocks());
+        });
+    }
+}

@@ -1,0 +1,295 @@
+//! The combined multi-grained KV cache (Fig. 5): fine-grained SRAM blocks
+//! with spill into coarse-grained per-request HBM ring buffers.
+//!
+//! One `KvCache` instance manages the KV memory of one worker group (all
+//! cores of a TP group share the same residency statistics since the KV is
+//! head-sharded uniformly across them).
+
+use super::blocks::{BlockAllocator, Chain};
+use super::ring::{RingAlloc, RingBuffer};
+use std::collections::HashMap;
+
+/// Where a request's KV bytes currently live. The attention operator
+/// charges HBM streaming time for the `hbm_bytes` portion.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct KvResidency {
+    pub sram_bytes: u64,
+    pub hbm_bytes: u64,
+}
+
+impl KvResidency {
+    pub fn total(&self) -> u64 {
+        self.sram_bytes + self.hbm_bytes
+    }
+}
+
+#[derive(Debug)]
+struct Entry {
+    chain: Chain,
+    hbm: Option<RingAlloc>,
+    res: KvResidency,
+}
+
+/// Outcome of appending tokens: how many new bytes landed where (the
+/// `hbm_bytes` part is what the executor charges as spill writeback).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Appended {
+    pub sram_bytes: u64,
+    pub hbm_bytes: u64,
+}
+
+/// Multi-grained KV cache for one worker group.
+#[derive(Debug)]
+pub struct KvCache {
+    sram: BlockAllocator,
+    hbm: RingBuffer,
+    /// Bytes of K+V per token (for this group's layer/head shard).
+    bytes_per_token: u64,
+    /// HBM buffer size reserved per admitted request (max token length).
+    max_request_bytes: u64,
+    entries: HashMap<u64, Entry>,
+    /// Bytes that could not be stored anywhere (admission bug if > 0).
+    overflow_bytes: u64,
+}
+
+impl KvCache {
+    /// * `sram_kv_bytes`: the planner's SRAM KV budget for this group.
+    /// * `block_tokens`: tokens per SRAM block (fine granularity).
+    /// * `hbm_bytes`: HBM ring capacity for spilled KV.
+    /// * `bytes_per_token`: K+V bytes per token for this group's shard.
+    /// * `max_tokens`: maximum request length (sizes the HBM buffers).
+    pub fn new(
+        sram_kv_bytes: u64,
+        block_tokens: u64,
+        hbm_bytes: u64,
+        bytes_per_token: u64,
+        max_tokens: u64,
+    ) -> Self {
+        let block_bytes = (block_tokens.max(1) * bytes_per_token).max(1);
+        KvCache {
+            sram: BlockAllocator::new(sram_kv_bytes, block_bytes),
+            hbm: RingBuffer::new(hbm_bytes),
+            bytes_per_token,
+            max_request_bytes: max_tokens * bytes_per_token,
+            entries: HashMap::new(),
+            overflow_bytes: 0,
+        }
+    }
+
+    /// Can another request be admitted? True when HBM can hold a whole
+    /// max-length buffer (SRAM is best-effort and never blocks admission),
+    /// or when there is no HBM at all (SRAM-only chips admit and may
+    /// overflow — the WaferLLM regime, where overflow KV is remote SRAM).
+    pub fn can_admit(&self) -> bool {
+        self.hbm.capacity() == 0 || self.hbm.bytes_free() >= self.max_request_bytes
+    }
+
+    /// Admit a request: reserve its coarse-grained HBM buffer.
+    pub fn admit(&mut self, id: u64) -> bool {
+        if self.entries.contains_key(&id) {
+            return true;
+        }
+        let hbm = if self.hbm.capacity() > 0 {
+            match self.hbm.alloc(self.max_request_bytes) {
+                Some(a) => Some(a),
+                None => return false,
+            }
+        } else {
+            None
+        };
+        self.entries.insert(
+            id,
+            Entry {
+                chain: Chain::empty(),
+                hbm,
+                res: KvResidency::default(),
+            },
+        );
+        true
+    }
+
+    /// Append `n_tokens` of KV for request `id`. New tokens fill SRAM
+    /// blocks while any remain, then spill to the request's HBM buffer.
+    pub fn append(&mut self, id: u64, n_tokens: u64) -> Appended {
+        let bytes = n_tokens * self.bytes_per_token;
+        let entry = self.entries.get_mut(&id).expect("append before admit");
+        let mut out = Appended::default();
+        // Fill the tail of the last SRAM block first.
+        let chain_cap = entry.chain.n_blocks() as u64 * self.sram.block_bytes();
+        let tail_room = chain_cap.saturating_sub(entry.res.sram_bytes);
+        let into_tail = bytes.min(tail_room);
+        out.sram_bytes += into_tail;
+        let mut remaining = bytes - into_tail;
+        // Grab new blocks while SRAM has them.
+        while remaining > 0 && self.sram.append(&mut entry.chain) {
+            let take = remaining.min(self.sram.block_bytes());
+            out.sram_bytes += take;
+            remaining -= take;
+        }
+        // Spill the rest to the HBM buffer.
+        if remaining > 0 {
+            match &entry.hbm {
+                Some(a) => {
+                    let room = a.bytes.saturating_sub(entry.res.hbm_bytes);
+                    let take = remaining.min(room);
+                    out.hbm_bytes += take;
+                    self.overflow_bytes += remaining - take;
+                }
+                None => {
+                    // SRAM-only chip: "spill" is remote/overflow, tracked so
+                    // the executor can charge NoC offload (WaferLLM style).
+                    out.hbm_bytes += remaining;
+                }
+            }
+        }
+        entry.res.sram_bytes += out.sram_bytes;
+        entry.res.hbm_bytes += out.hbm_bytes;
+        out
+    }
+
+    /// Current residency of a request's KV.
+    pub fn residency(&self, id: u64) -> KvResidency {
+        self.entries.get(&id).map(|e| e.res).unwrap_or_default()
+    }
+
+    /// Release all memory of a completed request.
+    pub fn release(&mut self, id: u64) {
+        if let Some(mut e) = self.entries.remove(&id) {
+            self.sram.release(&mut e.chain);
+            if let Some(a) = e.hbm {
+                self.hbm.free(a.id);
+            }
+        }
+    }
+
+    pub fn n_active(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Aggregate SRAM KV occupancy across requests.
+    pub fn sram_used_bytes(&self) -> u64 {
+        self.entries.values().map(|e| e.res.sram_bytes).sum()
+    }
+
+    pub fn sram_free_bytes(&self) -> u64 {
+        self.sram.bytes_free()
+    }
+
+    pub fn hbm_free_bytes(&self) -> u64 {
+        self.hbm.bytes_free()
+    }
+
+    /// Bytes lost to exhausted HBM buffers (must stay 0 when admission
+    /// control sizes buffers by `max_tokens`).
+    pub fn overflow_bytes(&self) -> u64 {
+        self.overflow_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    fn cache() -> KvCache {
+        // 4 blocks of 16 tokens × 8 B/token; HBM fits 4 requests of 256 tok.
+        KvCache::new(4 * 16 * 8, 16, 4 * 256 * 8, 8, 256)
+    }
+
+    #[test]
+    fn fills_sram_then_spills() {
+        let mut kv = cache();
+        assert!(kv.admit(1));
+        // 64 tokens exactly fill SRAM (4 blocks × 16 tokens).
+        let a = kv.append(1, 64);
+        assert_eq!(a.sram_bytes, 64 * 8);
+        assert_eq!(a.hbm_bytes, 0);
+        // The next token spills.
+        let a = kv.append(1, 10);
+        assert_eq!(a.sram_bytes, 0);
+        assert_eq!(a.hbm_bytes, 80);
+        let r = kv.residency(1);
+        assert_eq!(r.sram_bytes, 512);
+        assert_eq!(r.hbm_bytes, 80);
+    }
+
+    #[test]
+    fn partial_block_tail_is_reused() {
+        let mut kv = cache();
+        kv.admit(1);
+        kv.append(1, 10); // block 0: 10/16 tokens used
+        let a = kv.append(1, 4); // fits in block 0's tail
+        assert_eq!(a.sram_bytes, 32);
+        assert_eq!(kv.sram_free_bytes(), 3 * 16 * 8);
+    }
+
+    #[test]
+    fn admission_bounded_by_hbm() {
+        let mut kv = cache();
+        for id in 0..4 {
+            assert!(kv.can_admit(), "id={id}");
+            assert!(kv.admit(id));
+        }
+        assert!(!kv.can_admit());
+        assert!(!kv.admit(99));
+        // Releasing one admits another.
+        kv.release(0);
+        assert!(kv.admit(99));
+    }
+
+    #[test]
+    fn release_frees_both_tiers() {
+        let mut kv = cache();
+        kv.admit(1);
+        kv.append(1, 100); // 64 SRAM + 36 spilled
+        kv.admit(2);
+        kv.append(2, 16); // all spilled (SRAM full)
+        assert_eq!(kv.residency(2).sram_bytes, 0);
+        kv.release(1);
+        // New request can now use SRAM again.
+        kv.admit(3);
+        let a = kv.append(3, 16);
+        assert_eq!(a.sram_bytes, 128);
+    }
+
+    #[test]
+    fn sram_only_chip_tracks_remote_overflow() {
+        let mut kv = KvCache::new(2 * 16 * 8, 16, 0, 8, 256);
+        assert!(kv.can_admit());
+        kv.admit(1);
+        let a = kv.append(1, 48); // 32 tokens fit, 16 overflow "remote"
+        assert_eq!(a.sram_bytes, 256);
+        assert_eq!(a.hbm_bytes, 128);
+        assert_eq!(kv.overflow_bytes(), 0);
+    }
+
+    #[test]
+    fn prop_residency_equals_appended_tokens() {
+        check("kv residency conservation", 64, |rng| {
+            let mut kv = KvCache::new(
+                rng.range_u64(0, 4096),
+                rng.range_u64(1, 32),
+                1 << 20,
+                8,
+                1024,
+            );
+            let mut expect: HashMap<u64, u64> = HashMap::new();
+            for _ in 0..rng.range(1, 40) {
+                let id = rng.range_u64(0, 4);
+                if !kv.admit(id) {
+                    continue;
+                }
+                let n = rng.range_u64(1, 64);
+                let already = expect.entry(id).or_insert(0);
+                if *already + n <= 1024 {
+                    kv.append(id, n);
+                    *already += n;
+                }
+            }
+            for (id, tokens) in expect {
+                assert_eq!(kv.residency(id).total(), tokens * 8, "id={id}");
+            }
+            assert_eq!(kv.overflow_bytes(), 0);
+        });
+    }
+}

@@ -1,0 +1,28 @@
+//! Hierarchical memory management (§4.2): multi-grained KV cache across
+//! SRAM and HBM, plus the SRAM budget planner.
+//!
+//! The paper's scheme (Fig. 5):
+//!
+//! - **SRAM** is scarce, so the KV cache living there is managed
+//!   *fine-grained*, at **block** granularity — a request's KV tensor is a
+//!   linked list of (possibly non-contiguous) block IDs, and a free-block
+//!   list recycles blocks as requests retire ([`blocks`]).
+//! - **HBM** is plentiful and strongly prefers sequential access, so
+//!   spilled KV is managed *coarse-grained*: one whole max-length buffer
+//!   per request, organised as a **ring buffer** ([`ring`]).
+//! - [`kv`] combines both: appends go to SRAM while blocks remain, then
+//!   spill to the request's HBM buffer; per-request SRAM/HBM residency is
+//!   what the attention operator uses to charge HBM streaming time.
+//! - [`planner`] computes the SRAM budget split between activations,
+//!   communication staging, temporaries, KV blocks, and resident weights
+//!   (in that priority order — §4.2 "weight and activation management").
+
+pub mod blocks;
+pub mod kv;
+pub mod planner;
+pub mod ring;
+
+pub use blocks::BlockAllocator;
+pub use kv::{KvCache, KvResidency};
+pub use planner::SramPlan;
+pub use ring::RingBuffer;

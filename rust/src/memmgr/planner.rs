@@ -1,0 +1,264 @@
+//! SRAM budget planner (§4.2 "weight and activation management").
+//!
+//! Given the model shard a core holds and the serving batch shape, the
+//! planner splits the core's SRAM in the paper's priority order:
+//!
+//! 1. **Activations / inputs** — the dataflow staging buffers every
+//!    inter-core transfer lands in (double-buffered).
+//! 2. **Communication staging** — collective send/recv buffers.
+//! 3. **Compute temporaries** — "a modest amount of buffer … is
+//!    sufficient" for matrix intermediate results.
+//! 4. **KV cache blocks** — best-effort from the remainder.
+//! 5. **Resident weights** — whatever still remains pins hot weights; the
+//!    rest streams from HBM per layer.
+//!
+//! The planner is what turns a `(ChipConfig, ModelConfig, batch)` into the
+//! executor's memory behaviour, and what the Fig. 8/13 SRAM sweeps vary.
+
+use crate::config::{CoreConfig, ModelConfig};
+
+/// How a core's SRAM is divided, in bytes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SramPlan {
+    pub act_bytes: u64,
+    pub comm_bytes: u64,
+    pub temp_bytes: u64,
+    pub kv_bytes: u64,
+    pub weight_sram_bytes: u64,
+    /// Weight bytes this core must stream from HBM each full model pass.
+    pub weight_hbm_bytes: u64,
+    /// Total weight bytes of the shard this core holds.
+    pub shard_weight_bytes: u64,
+}
+
+impl SramPlan {
+    /// Fraction of the core's weight shard resident in SRAM.
+    pub fn weight_resident_fraction(&self) -> f64 {
+        if self.shard_weight_bytes == 0 {
+            return 1.0;
+        }
+        self.weight_sram_bytes as f64 / self.shard_weight_bytes as f64
+    }
+
+    /// Total planned bytes (must fit the core's SRAM).
+    pub fn total(&self) -> u64 {
+        self.act_bytes + self.comm_bytes + self.temp_bytes + self.kv_bytes + self.weight_sram_bytes
+    }
+
+    /// HBM weight bytes to stream for a `layers` sub-range of the shard
+    /// (pipeline stages stream only their own layers).
+    pub fn weight_hbm_bytes_for(&self, layer_fraction: f64) -> u64 {
+        (self.weight_hbm_bytes as f64 * layer_fraction.clamp(0.0, 1.0)) as u64
+    }
+}
+
+/// Inputs to the planner describing one core's role.
+#[derive(Debug, Clone, Copy)]
+pub struct PlanRequest {
+    /// Layers this core's group executes (pipeline stage depth).
+    pub layers: usize,
+    /// Tensor-parallel degree within the group (shards weights and KV).
+    pub tp: usize,
+    /// Peak tokens per iteration (chunk size × micro-batch for prefill,
+    /// batch size for decode).
+    pub iter_tokens: usize,
+    /// Fraction of the post-buffer remainder given to KV blocks before
+    /// weights (best-effort split; 1.0 = all KV, 0.0 = all weights).
+    pub kv_share: f64,
+}
+
+impl Default for PlanRequest {
+    fn default() -> Self {
+        PlanRequest {
+            layers: 1,
+            tp: 1,
+            iter_tokens: 512,
+            kv_share: 0.5,
+        }
+    }
+}
+
+/// Compute the SRAM plan for one core.
+pub fn plan(core: &CoreConfig, model: &ModelConfig, req: &PlanRequest) -> SramPlan {
+    let dtype = model.dtype_bytes;
+    let hidden = model.hidden as u64;
+    let tokens = req.iter_tokens.max(1) as u64;
+    let tp = req.tp.max(1) as u64;
+
+    // 1. Activation staging: input + output token slabs, double-buffered so
+    //    the next iteration's input streams while this one computes.
+    let act = 2 * 2 * tokens * hidden * dtype / tp.max(1);
+    // 2. Communication staging: one shard of the largest collective payload
+    //    (output activations) for send + recv.
+    let widest = hidden.max(model.intermediate as u64);
+    let comm = 2 * tokens * widest * dtype / tp;
+    // 3. Compute temporaries: a few systolic tiles of partial sums (f32).
+    let temp = 4 * core.sa_dim * core.sa_dim * 4;
+
+    let reserved = act + comm + temp;
+    let remainder = core.sram_bytes.saturating_sub(reserved);
+
+    // The weight shard this core holds: its layers, TP-sharded.
+    let shard_weight = model.layer_weight_bytes() * req.layers as u64 / tp;
+
+    // 4/5. Best-effort split of the remainder between KV and weights. If
+    //    weights fit entirely, give them priority (no streaming at all) and
+    //    leave the rest to KV — the paper's observation that SRAM only pays
+    //    off once the whole model fits (§5.3).
+    let (kv, weight_sram) = if shard_weight <= remainder {
+        (remainder - shard_weight, shard_weight)
+    } else {
+        let kv = (remainder as f64 * req.kv_share.clamp(0.0, 1.0)) as u64;
+        (kv, remainder - kv)
+    };
+
+    SramPlan {
+        act_bytes: act,
+        comm_bytes: comm,
+        temp_bytes: temp,
+        kv_bytes: kv,
+        weight_sram_bytes: weight_sram.min(shard_weight),
+        weight_hbm_bytes: shard_weight.saturating_sub(weight_sram),
+        shard_weight_bytes: shard_weight,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ChipConfig;
+    use crate::util::prop::check;
+    use crate::util::units::MB;
+
+    fn core() -> CoreConfig {
+        ChipConfig::large_core().core // 32 MB SRAM
+    }
+
+    #[test]
+    fn plan_fits_sram() {
+        let m = ModelConfig::qwen3_4b();
+        let p = plan(
+            &core(),
+            &m,
+            &PlanRequest {
+                layers: 4,
+                tp: 4,
+                iter_tokens: 512,
+                kv_share: 0.5,
+            },
+        );
+        assert!(p.total() <= core().sram_bytes, "{p:?}");
+        assert!(p.act_bytes > 0 && p.comm_bytes > 0 && p.temp_bytes > 0);
+    }
+
+    #[test]
+    fn small_model_weights_fully_resident() {
+        // 1 layer of qwen3-1.7B TP=4 is ~20 MB/4 = small vs 32 MB SRAM.
+        let m = ModelConfig::qwen3_1_7b();
+        let p = plan(
+            &core(),
+            &m,
+            &PlanRequest {
+                layers: 1,
+                tp: 4,
+                iter_tokens: 128,
+                kv_share: 0.5,
+            },
+        );
+        assert_eq!(p.weight_hbm_bytes, 0);
+        assert!((p.weight_resident_fraction() - 1.0).abs() < 1e-9);
+        assert!(p.kv_bytes > 0, "leftover goes to KV");
+    }
+
+    #[test]
+    fn big_model_streams_weights() {
+        // 16 layers of qwen3-32B on one core vastly exceed 32 MB.
+        let m = ModelConfig::qwen3_32b();
+        let p = plan(
+            &core(),
+            &m,
+            &PlanRequest {
+                layers: 16,
+                tp: 4,
+                iter_tokens: 512,
+                kv_share: 0.5,
+            },
+        );
+        assert!(p.weight_hbm_bytes > 0);
+        assert!(p.weight_resident_fraction() < 0.1);
+        assert!(p.kv_bytes > 0);
+    }
+
+    #[test]
+    fn kv_share_shifts_the_split() {
+        let m = ModelConfig::qwen3_32b();
+        let mk = |share: f64| {
+            plan(
+                &core(),
+                &m,
+                &PlanRequest {
+                    layers: 16,
+                    tp: 4,
+                    iter_tokens: 512,
+                    kv_share: share,
+                },
+            )
+        };
+        let kv_heavy = mk(0.9);
+        let w_heavy = mk(0.1);
+        assert!(kv_heavy.kv_bytes > w_heavy.kv_bytes);
+        assert!(kv_heavy.weight_sram_bytes < w_heavy.weight_sram_bytes);
+    }
+
+    #[test]
+    fn bigger_sram_means_more_resident_weight() {
+        let m = ModelConfig::qwen3_8b();
+        let req = PlanRequest {
+            layers: 9,
+            tp: 4,
+            iter_tokens: 512,
+            kv_share: 0.5,
+        };
+        let mut small = core();
+        small.sram_bytes = 16 * MB;
+        let mut big = core();
+        big.sram_bytes = 128 * MB;
+        let ps = plan(&small, &m, &req);
+        let pb = plan(&big, &m, &req);
+        assert!(pb.weight_resident_fraction() > ps.weight_resident_fraction());
+    }
+
+    #[test]
+    fn layer_fraction_scales_hbm_stream() {
+        let m = ModelConfig::qwen3_32b();
+        let p = plan(&core(), &m, &PlanRequest::default());
+        assert_eq!(p.weight_hbm_bytes_for(1.0), p.weight_hbm_bytes);
+        assert!(p.weight_hbm_bytes_for(0.5) <= p.weight_hbm_bytes / 2 + 1);
+    }
+
+    #[test]
+    fn prop_plan_never_exceeds_sram_when_buffers_fit() {
+        check("plan fits", 128, |rng| {
+            let mut c = core();
+            c.sram_bytes = rng.range_u64(8, 128) * MB;
+            let models = ModelConfig::paper_models();
+            let m = &models[rng.range(0, models.len())];
+            let req = PlanRequest {
+                layers: rng.range(1, 32),
+                tp: 1 << rng.range(0, 5),
+                iter_tokens: rng.range(1, 2048),
+                kv_share: rng.f64(),
+            };
+            let p = plan(&c, m, &req);
+            let reserved = p.act_bytes + p.comm_bytes + p.temp_bytes;
+            if reserved <= c.sram_bytes {
+                assert!(p.total() <= c.sram_bytes, "{p:?} vs {}", c.sram_bytes);
+            }
+            // Weight accounting always conserves the shard.
+            assert_eq!(
+                p.weight_sram_bytes + p.weight_hbm_bytes,
+                p.shard_weight_bytes
+            );
+        });
+    }
+}

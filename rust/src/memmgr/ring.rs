@@ -1,0 +1,191 @@
+//! Coarse-grained HBM ring buffer (Fig. 5, right).
+//!
+//! Spilled KV caches live in HBM as one contiguous **whole-request buffer**
+//! sized for the maximum token length — HBM strongly favours long
+//! sequential bursts, so fine-grained blocks would waste its bandwidth.
+//! Buffers are allocated from a ring: an advancing head pointer with
+//! in-order reclamation at the tail, matching the FIFO-ish lifetime of
+//! serving requests.
+
+/// Handle on one request's HBM KV buffer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RingAlloc {
+    /// Allocation id (monotonic; used for in-order reclamation).
+    pub id: u64,
+    /// Byte offset of the buffer within the ring.
+    pub offset: u64,
+    /// Buffer size in bytes.
+    pub bytes: u64,
+}
+
+/// Ring-buffer allocator over an HBM byte capacity.
+#[derive(Debug, Clone)]
+pub struct RingBuffer {
+    capacity: u64,
+    /// Next byte to allocate (monotonic, un-wrapped).
+    head: u64,
+    /// Oldest live byte (monotonic, un-wrapped).
+    tail: u64,
+    /// Live allocations in ring order (front = oldest).
+    live: std::collections::VecDeque<RingAlloc>,
+    next_id: u64,
+}
+
+impl RingBuffer {
+    pub fn new(capacity: u64) -> Self {
+        RingBuffer {
+            capacity,
+            head: 0,
+            tail: 0,
+            live: std::collections::VecDeque::new(),
+            next_id: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    pub fn bytes_live(&self) -> u64 {
+        self.head - self.tail
+    }
+
+    pub fn bytes_free(&self) -> u64 {
+        self.capacity - self.bytes_live()
+    }
+
+    pub fn n_live(&self) -> usize {
+        self.live.len()
+    }
+
+    /// Allocate a whole-request buffer of `bytes`. Fails (returns `None`)
+    /// when the ring cannot hold it — the scheduler must then defer
+    /// admission (§4.3's budget/admission control is built on this signal).
+    pub fn alloc(&mut self, bytes: u64) -> Option<RingAlloc> {
+        if bytes == 0 || bytes > self.bytes_free() {
+            return None;
+        }
+        let a = RingAlloc {
+            id: self.next_id,
+            offset: self.head % self.capacity.max(1),
+            bytes,
+        };
+        self.next_id += 1;
+        self.head += bytes;
+        self.live.push_back(a);
+        Some(a)
+    }
+
+    /// Free an allocation. Space is reclaimed in ring order: the tail only
+    /// advances past buffers that are themselves freed, so freeing out of
+    /// order defers reclamation (the paper's coarse-grained trade-off).
+    pub fn free(&mut self, id: u64) {
+        if let Some(pos) = self.live.iter().position(|a| a.id == id) {
+            self.live[pos].bytes = self.live[pos].bytes.wrapping_neg(); // mark dead
+            // Advance tail over every leading dead buffer.
+            while let Some(front) = self.live.front() {
+                let dead = (front.bytes as i64) < 0;
+                if !dead {
+                    break;
+                }
+                let bytes = front.bytes.wrapping_neg();
+                self.tail += bytes;
+                self.live.pop_front();
+            }
+        }
+    }
+
+    /// Fraction of capacity held by freed-but-unreclaimed buffers
+    /// (fragmentation diagnostic).
+    pub fn dead_fraction(&self) -> f64 {
+        if self.capacity == 0 {
+            return 0.0;
+        }
+        let dead: u64 = self
+            .live
+            .iter()
+            .filter(|a| (a.bytes as i64) < 0)
+            .map(|a| a.bytes.wrapping_neg())
+            .sum();
+        dead as f64 / self.capacity as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn alloc_and_free_in_order() {
+        let mut r = RingBuffer::new(1000);
+        let a = r.alloc(400).unwrap();
+        let b = r.alloc(400).unwrap();
+        assert!(r.alloc(400).is_none(), "over capacity");
+        r.free(a.id);
+        assert_eq!(r.bytes_free(), 600);
+        let c = r.alloc(500).unwrap();
+        assert_eq!(c.offset, 800 % 1000);
+        r.free(b.id);
+        r.free(c.id);
+        assert_eq!(r.bytes_free(), 1000);
+        assert_eq!(r.n_live(), 0);
+    }
+
+    #[test]
+    fn out_of_order_free_defers_reclamation() {
+        let mut r = RingBuffer::new(1000);
+        let a = r.alloc(300).unwrap();
+        let b = r.alloc(300).unwrap();
+        // Free the *second* buffer: tail cannot move past the live first.
+        r.free(b.id);
+        assert_eq!(r.bytes_free(), 400);
+        assert!(r.dead_fraction() > 0.29);
+        // Freeing the first reclaims both.
+        r.free(a.id);
+        assert_eq!(r.bytes_free(), 1000);
+        assert_eq!(r.dead_fraction(), 0.0);
+    }
+
+    #[test]
+    fn wraps_around() {
+        let mut r = RingBuffer::new(100);
+        let a = r.alloc(60).unwrap();
+        r.free(a.id);
+        let b = r.alloc(60).unwrap();
+        assert_eq!(b.offset, 60); // offset wraps modulo capacity
+        let c = r.alloc(40).unwrap();
+        assert_eq!(c.offset, 20);
+    }
+
+    #[test]
+    fn zero_alloc_rejected() {
+        let mut r = RingBuffer::new(100);
+        assert!(r.alloc(0).is_none());
+    }
+
+    #[test]
+    fn prop_accounting_consistent() {
+        check("ring accounting", 128, |rng| {
+            let mut r = RingBuffer::new(10_000);
+            let mut ids = Vec::new();
+            for _ in 0..rng.range(1, 64) {
+                if rng.chance(0.6) {
+                    if let Some(a) = r.alloc(rng.range_u64(1, 2000)) {
+                        ids.push(a.id);
+                    }
+                } else if !ids.is_empty() {
+                    let i = rng.range(0, ids.len());
+                    r.free(ids.swap_remove(i));
+                }
+                assert!(r.bytes_live() <= r.capacity());
+                assert!(r.bytes_free() <= r.capacity());
+            }
+            // Draining everything restores full capacity.
+            for id in ids {
+                r.free(id);
+            }
+            assert_eq!(r.bytes_free(), 10_000);
+        });
+    }
+}

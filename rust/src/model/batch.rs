@@ -1,0 +1,120 @@
+//! Iteration batch description: which requests run this scheduler tick.
+
+/// Serving phase of a batch item.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Prefill,
+    Decode,
+}
+
+/// One request's contribution to an iteration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchItem {
+    /// Request id (keys into the KV cache).
+    pub request: u64,
+    /// Query tokens processed this iteration (chunk size for chunked
+    /// prefill; 1 for decode).
+    pub q_tokens: u64,
+    /// KV context length *after* this iteration's tokens are appended.
+    pub kv_tokens: u64,
+    pub phase: Phase,
+}
+
+impl BatchItem {
+    pub fn prefill(request: u64, q_tokens: u64, kv_tokens: u64) -> Self {
+        BatchItem {
+            request,
+            q_tokens,
+            kv_tokens,
+            phase: Phase::Prefill,
+        }
+    }
+
+    pub fn decode(request: u64, kv_tokens: u64) -> Self {
+        BatchItem {
+            request,
+            q_tokens: 1,
+            kv_tokens,
+            phase: Phase::Decode,
+        }
+    }
+}
+
+/// The batch of one iteration (may mix prefill chunks and decode steps —
+/// that is exactly what PD fusion does).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct IterBatch {
+    pub items: Vec<BatchItem>,
+}
+
+impl IterBatch {
+    pub fn new(items: Vec<BatchItem>) -> Self {
+        IterBatch { items }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Total query tokens this iteration (the GEMM `M` dimension).
+    pub fn total_q_tokens(&self) -> u64 {
+        self.items.iter().map(|i| i.q_tokens).sum()
+    }
+
+    /// Tokens that need logits (decode steps + prefill chunks finishing a
+    /// prompt produce one next-token each; we approximate with one logit
+    /// row per item, the standard continuous-batching shape).
+    pub fn logit_tokens(&self) -> u64 {
+        self.items.len() as u64
+    }
+
+    pub fn n_decode(&self) -> usize {
+        self.items
+            .iter()
+            .filter(|i| i.phase == Phase::Decode)
+            .count()
+    }
+
+    pub fn n_prefill(&self) -> usize {
+        self.items.len() - self.n_decode()
+    }
+
+    /// Whether every item is a decode step (pure-decode iterations use the
+    /// GEMV-shaped path).
+    pub fn is_pure_decode(&self) -> bool {
+        self.items.iter().all(|i| i.phase == Phase::Decode)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_accounting() {
+        let b = IterBatch::new(vec![
+            BatchItem::prefill(1, 256, 256),
+            BatchItem::decode(2, 100),
+            BatchItem::decode(3, 50),
+        ]);
+        assert_eq!(b.total_q_tokens(), 258);
+        assert_eq!(b.logit_tokens(), 3);
+        assert_eq!(b.n_decode(), 2);
+        assert_eq!(b.n_prefill(), 1);
+        assert!(!b.is_pure_decode());
+    }
+
+    #[test]
+    fn pure_decode_batch() {
+        let b = IterBatch::new(vec![BatchItem::decode(1, 10), BatchItem::decode(2, 20)]);
+        assert!(b.is_pure_decode());
+        assert_eq!(b.total_q_tokens(), 2);
+    }
+
+    #[test]
+    fn empty_batch() {
+        let b = IterBatch::default();
+        assert!(b.is_empty());
+        assert_eq!(b.total_q_tokens(), 0);
+    }
+}

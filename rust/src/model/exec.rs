@@ -1,0 +1,609 @@
+//! Distributed execution of one serving iteration on a placed TP group.
+//!
+//! Every operator of the transformer layer is executed with the group's
+//! partition strategy (Fig. 3): what each core computes comes from the
+//! shape math, what the group communicates comes from the ring collectives
+//! running on the contention-aware NoC — so placement quality (Fig. 4/10)
+//! and NoC bandwidth show up in end-to-end iteration latency exactly as in
+//! the paper.
+
+use crate::config::{ChipConfig, ModelConfig};
+use crate::memmgr::{KvCache, SramPlan};
+use crate::model::batch::IterBatch;
+use crate::parallel::collectives::{ring_all_reduce, ring_step, sub_ring_all_reduce};
+use crate::parallel::partition::PartitionStrategy;
+use crate::parallel::placement::{Placement, TpGroup};
+use crate::sim::chip::ChipSim;
+use crate::sim::compute;
+use crate::sim::tracer::OpClass;
+use crate::util::units::{ceil_div, Cycle};
+
+/// Static execution configuration for a worker group.
+#[derive(Debug, Clone, Copy)]
+pub struct ExecConfig {
+    /// GEMM partition strategy within the group.
+    pub strategy: PartitionStrategy,
+    /// Transformer layers this group executes per iteration (its pipeline
+    /// stage depth).
+    pub layers: usize,
+    /// Whether this group computes output logits (last pipeline stage).
+    pub with_logits: bool,
+}
+
+impl ExecConfig {
+    pub fn new(strategy: PartitionStrategy, layers: usize, with_logits: bool) -> Self {
+        ExecConfig {
+            strategy,
+            layers,
+            with_logits,
+        }
+    }
+}
+
+/// Max clock over the group (iteration makespan so far).
+pub fn group_now(chip: &ChipSim, group: &TpGroup) -> Cycle {
+    group
+        .coords
+        .iter()
+        .map(|&c| chip.core(c).now())
+        .max()
+        .unwrap_or(0)
+}
+
+/// Advance every core of the group by `cycles` of `class` work from the
+/// synchronised time `t0` (lock-step TP execution).
+fn uniform_op(chip: &mut ChipSim, group: &TpGroup, class: OpClass, t0: Cycle, cycles: Cycle) {
+    for &c in &group.coords {
+        let core = chip.core_mut(c);
+        core.advance_to(t0);
+        if cycles > 0 {
+            core.tracer.record(class, cycles);
+        }
+        core.advance_to(t0 + cycles);
+    }
+}
+
+/// One distributed GEMM `[m,k] × [k,n]` over the group.
+///
+/// `hbm_weight_bytes` is the per-core portion of this GEMM's weight shard
+/// that is *not* SRAM-resident and must stream from HBM (charged once; in
+/// rotating strategies only a core's own shard lives in its HBM — gathered
+/// shards arrive over the NoC).
+pub fn dist_gemm(
+    chip: &mut ChipSim,
+    group: &TpGroup,
+    strategy: PartitionStrategy,
+    m: u64,
+    k: u64,
+    n: u64,
+    hbm_weight_bytes: u64,
+) -> Cycle {
+    if m == 0 || k == 0 || n == 0 {
+        return group_now(chip, group);
+    }
+    let cfg = chip.cfg.clone();
+    let num = group.len().max(1) as u64;
+    let dtype = cfg.dtype_bytes;
+    match strategy {
+        PartitionStrategy::InputOnly => {
+            let m_loc = ceil_div(m, num);
+            for &c in &group.coords {
+                chip.core_mut(c)
+                    .gemm_hbm_weights(&cfg, m_loc, k, n, hbm_weight_bytes);
+            }
+            chip.sync(&group.coords)
+        }
+        PartitionStrategy::OneDimMN => {
+            // Rotating AllGather (T10/WaferLLM style): each core computes
+            // its M-rows against the weight shard it currently holds while
+            // the next shard rotates in; `num` steps overlap compute+comm.
+            let m_loc = ceil_div(m, num);
+            let n_loc = ceil_div(n, num);
+            let shard_bytes = k * n_loc * dtype;
+            for step in 0..num {
+                let t0 = chip.sync(&group.coords);
+                let hbm = if step == 0 { hbm_weight_bytes } else { 0 };
+                // Compute this step's partial GEMM (with the first step
+                // streaming the core's own shard from HBM if not resident).
+                let mut t_comp_end = t0;
+                for &c in &group.coords {
+                    let core = chip.core_mut(c);
+                    core.gemm_hbm_weights(&cfg, m_loc, k, n_loc, hbm);
+                    t_comp_end = t_comp_end.max(core.now());
+                }
+                // Rotate shards (skipped on the last step) — issued from
+                // t0 so transfer overlaps the step's compute (dataflow DMA).
+                if step + 1 < num {
+                    for &c in &group.coords {
+                        chip.core_mut(c).advance_to(t0); // cannot go back; no-op
+                    }
+                    // Issue the ring transfers at each core's *pre-compute*
+                    // clock by temporarily using mesh directly.
+                    let nloc = group.len();
+                    let mut barrier = t0;
+                    for i in 0..nloc {
+                        let src = group.coords[i];
+                        let dst = group.coords[(i + 1) % nloc];
+                        let t = chip.mesh.transfer(src, dst, shard_bytes, t0);
+                        chip.core_mut(src)
+                            .tracer
+                            .record(OpClass::AllGather, t.finish - t0);
+                        barrier = barrier.max(t.finish);
+                    }
+                    let next = barrier.max(t_comp_end);
+                    for &c in &group.coords {
+                        chip.core_mut(c).advance_to(next);
+                    }
+                } else {
+                    for &c in &group.coords {
+                        chip.core_mut(c).advance_to(t_comp_end);
+                    }
+                }
+            }
+            group_now(chip, group)
+        }
+        PartitionStrategy::OneDimK => {
+            // Local partial GEMM over the K-shard, then ring AllReduce of
+            // the full [m,n] partial results.
+            let k_loc = ceil_div(k, num);
+            for &c in &group.coords {
+                chip.core_mut(c)
+                    .gemm_hbm_weights(&cfg, m, k_loc, n, hbm_weight_bytes);
+            }
+            ring_all_reduce(chip, group, m * n * dtype)
+        }
+        PartitionStrategy::TwoDim { rows, cols } => {
+            let grid = group.mesh_grid(rows, cols);
+            let (r, c_) = (rows as u64, cols as u64);
+            let m_loc = ceil_div(m, r);
+            let k_loc = ceil_div(k, c_);
+            let n_loc = ceil_div(n, r);
+            // Column rotation shard (Table 2: (R-1) · K·N/(C·R) total).
+            let col_shard = k * n / (r * c_) * dtype;
+            // Row partial-result reduction (Table 2: 2·(C-1)/C · M·N/C²).
+            let row_data = m * n / (c_ * c_) * dtype;
+            for it in 0..rows {
+                let t0 = chip.sync(&group.coords);
+                let hbm = if it == 0 { hbm_weight_bytes } else { 0 };
+                let mut t_comp_end = t0;
+                for &coord in grid.iter().flatten() {
+                    let core = chip.core_mut(coord);
+                    core.gemm_hbm_weights(&cfg, m_loc, k_loc, n_loc, hbm);
+                    t_comp_end = t_comp_end.max(core.now());
+                }
+                for &coord in grid.iter().flatten() {
+                    chip.core_mut(coord).advance_to(t_comp_end);
+                }
+                if it + 1 < rows {
+                    // Row-wise AllReduce of partial results.
+                    for row in &grid {
+                        sub_ring_all_reduce(chip, row, row_data);
+                    }
+                    // Column-wise shard rotation (AllGather step).
+                    for j in 0..cols {
+                        let col: Vec<_> = grid.iter().map(|row| row[j]).collect();
+                        let col_group = TpGroup {
+                            coords: col,
+                            placement: Placement::Ring,
+                        };
+                        ring_step(chip, &col_group, col_shard, OpClass::AllGather);
+                    }
+                }
+            }
+            chip.sync(&group.coords)
+        }
+    }
+}
+
+/// Attention over every batch item (heads sharded across the group; each
+/// core holds its head-shard of each request's KV, with the spilled portion
+/// streaming from HBM).
+fn attention_all(
+    chip: &mut ChipSim,
+    group: &TpGroup,
+    cfg: &ChipConfig,
+    model: &ModelConfig,
+    batch: &IterBatch,
+    kv: &KvCache,
+    layers: usize,
+) -> Cycle {
+    let tp = group.len().max(1) as u64;
+    let heads = ceil_div(model.heads as u64, tp).max(1);
+    let t0 = chip.sync(&group.coords);
+    for &c in &group.coords {
+        let core = chip.core_mut(c);
+        for item in &batch.items {
+            let res = kv.residency(item.request);
+            // The KV residency covers all `layers` of this group's shard;
+            // charge one layer's share per attention call.
+            let kv_hbm = res.hbm_bytes / layers.max(1) as u64;
+            core.attention(
+                cfg,
+                heads,
+                item.q_tokens,
+                item.kv_tokens,
+                model.head_dim as u64,
+                kv_hbm,
+            );
+        }
+    }
+    let t = group_now(chip, group);
+    for &c in &group.coords {
+        chip.core_mut(c).advance_to(t);
+    }
+    let _ = t0;
+    t
+}
+
+/// Dense FFN: fused gate+up GEMM, SwiGLU, down GEMM.
+fn ffn_dense(
+    chip: &mut ChipSim,
+    group: &TpGroup,
+    cfg: &ChipConfig,
+    model: &ModelConfig,
+    strategy: PartitionStrategy,
+    m: u64,
+    hbm_layer_bytes: u64,
+) {
+    let h = model.hidden as u64;
+    let inter = model.intermediate as u64;
+    let tp = group.len().max(1) as u64;
+    let layer_w = model.layer_weight_bytes().max(1);
+    let w_gate_up = 2 * h * inter * model.dtype_bytes / tp;
+    let w_down = h * inter * model.dtype_bytes / tp;
+    let frac = |w: u64| hbm_layer_bytes * w / (layer_w / tp).max(1);
+    dist_gemm(chip, group, strategy, m, h, 2 * inter, frac(w_gate_up));
+    let t0 = chip.sync(&group.coords);
+    let act = compute::swiglu_cycles(&cfg.core, m, ceil_div(inter, tp));
+    uniform_op(chip, group, OpClass::Vector, t0, act);
+    dist_gemm(chip, group, strategy, m, inter, h, frac(w_down));
+}
+
+/// MoE FFN (Qwen3-30B-A3B): router GEMM, token dispatch, per-expert
+/// GEMMs, combine. Experts are sharded across the group; dispatch and
+/// combine are modeled as activation ring rotations (the all-to-all of a
+/// ring-connected group).
+fn ffn_moe(
+    chip: &mut ChipSim,
+    group: &TpGroup,
+    cfg: &ChipConfig,
+    model: &ModelConfig,
+    strategy: PartitionStrategy,
+    m: u64,
+    hbm_layer_bytes: u64,
+) {
+    let moe = model.moe.expect("ffn_moe on dense model");
+    let h = model.hidden as u64;
+    let e_inter = moe.expert_intermediate as u64;
+    let tp = group.len().max(1) as u64;
+    let dtype = model.dtype_bytes;
+
+    // Router: small replicated GEMM + top-k select.
+    let t0 = chip.sync(&group.coords);
+    let router = compute::matmul_cycles(cfg, &cfg.core, m, h, moe.n_experts as u64);
+    uniform_op(chip, group, OpClass::Gemm, t0, router);
+    let t0 = group_now(chip, group);
+    let select = compute::vector_cycles(&cfg.core, m * moe.n_experts as u64, 2);
+    uniform_op(chip, group, OpClass::Vector, t0, select);
+
+    // Dispatch: each token's activation travels to its experts' cores.
+    // On a ring group this is one rotation of the local activation shard.
+    let act_shard = m * h * dtype / tp;
+    ring_step(chip, group, act_shard, OpClass::P2P);
+
+    // Expert compute: m·top_k (token, expert) pairs spread over the group.
+    let pairs_per_core = ceil_div(m * moe.top_k as u64, tp).max(1);
+    let expert_w = 3 * h * e_inter * moe.n_experts as u64 * dtype / tp;
+    let layer_w = (model.layer_weight_bytes() / tp).max(1);
+    let hbm = hbm_layer_bytes * expert_w / layer_w;
+    dist_gemm(
+        chip,
+        group,
+        strategy,
+        pairs_per_core * tp, // dist_gemm re-shards M internally
+        h,
+        2 * e_inter,
+        hbm / 2,
+    );
+    let t0 = chip.sync(&group.coords);
+    let act = compute::swiglu_cycles(&cfg.core, pairs_per_core, e_inter);
+    uniform_op(chip, group, OpClass::Vector, t0, act);
+    dist_gemm(chip, group, strategy, pairs_per_core * tp, e_inter, h, hbm / 2);
+
+    // Combine: results rotate back and are weight-summed.
+    ring_step(chip, group, act_shard, OpClass::P2P);
+    let t0 = group_now(chip, group);
+    let sum = compute::vector_cycles(&cfg.core, m * h / tp * moe.top_k as u64, 1);
+    uniform_op(chip, group, OpClass::Vector, t0, sum);
+}
+
+/// Execute one full iteration (all of this group's layers, plus logits on
+/// the last stage) for `batch`. Appends the batch's new tokens to `kv`
+/// (charging spill writeback) and returns the group's finish cycle.
+pub fn run_iteration(
+    chip: &mut ChipSim,
+    group: &TpGroup,
+    model: &ModelConfig,
+    plan: &SramPlan,
+    exec: &ExecConfig,
+    batch: &IterBatch,
+    kv: &mut KvCache,
+) -> Cycle {
+    if batch.is_empty() {
+        return group_now(chip, group);
+    }
+    let cfg = chip.cfg.clone();
+    let tp = group.len().max(1) as u64;
+    let h = model.hidden as u64;
+    let m = batch.total_q_tokens();
+    let dtype = model.dtype_bytes;
+
+    // Append this iteration's tokens to the KV cache; spilled bytes are
+    // written back to HBM (or offloaded over the NoC on SRAM-only chips).
+    let mut spill_bytes = 0;
+    for item in &batch.items {
+        let a = kv.append(item.request, item.q_tokens);
+        spill_bytes += a.hbm_bytes;
+    }
+    if spill_bytes > 0 {
+        for &c in &group.coords {
+            chip.core_mut(c).hbm_access(spill_bytes, OpClass::KvSpill);
+        }
+    }
+
+    let qd = model.q_dim() as u64;
+    let kvd = model.kv_dim() as u64;
+    let layer_w = (model.layer_weight_bytes() / tp).max(1);
+    let hbm_layer = plan.weight_hbm_bytes / exec.layers.max(1) as u64;
+    let frac = |w_bytes: u64| hbm_layer * w_bytes / layer_w;
+
+    for _layer in 0..exec.layers {
+        // Pre-attention RMSNorm.
+        let t0 = chip.sync(&group.coords);
+        let norm = compute::rmsnorm_cycles(&cfg.core, m, ceil_div(h, tp));
+        uniform_op(chip, group, OpClass::Vector, t0, norm);
+
+        // QKV projection.
+        let w_qkv = h * (qd + 2 * kvd) * dtype / tp;
+        dist_gemm(chip, group, exec.strategy, m, h, qd + 2 * kvd, frac(w_qkv));
+
+        // RoPE on Q and K.
+        let t0 = group_now(chip, group);
+        let rope = compute::rope_cycles(&cfg.core, m, ceil_div(qd + kvd, tp));
+        uniform_op(chip, group, OpClass::Vector, t0, rope);
+
+        // Attention over the KV cache.
+        attention_all(chip, group, &cfg, model, batch, kv, exec.layers);
+
+        // Output projection + residual.
+        let w_o = qd * h * dtype / tp;
+        dist_gemm(chip, group, exec.strategy, m, qd, h, frac(w_o));
+        let t0 = group_now(chip, group);
+        let resid = compute::vector_cycles(&cfg.core, m * ceil_div(h, tp), 1);
+        uniform_op(chip, group, OpClass::Vector, t0, resid);
+
+        // Pre-FFN RMSNorm.
+        let t0 = group_now(chip, group);
+        uniform_op(chip, group, OpClass::Vector, t0, norm);
+
+        // FFN (dense or MoE) + residual.
+        if model.moe.is_some() {
+            ffn_moe(chip, group, &cfg, model, exec.strategy, m, hbm_layer);
+        } else {
+            ffn_dense(chip, group, &cfg, model, exec.strategy, m, hbm_layer);
+        }
+        let t0 = group_now(chip, group);
+        uniform_op(chip, group, OpClass::Vector, t0, resid);
+    }
+
+    // Output logits (vocab-sharded; embeddings stream from HBM — they are
+    // too large to pin and are read once per iteration).
+    if exec.with_logits {
+        let lm = batch.logit_tokens();
+        let t0 = chip.sync(&group.coords);
+        let norm = compute::rmsnorm_cycles(&cfg.core, lm, ceil_div(h, tp));
+        uniform_op(chip, group, OpClass::Vector, t0, norm);
+        let vocab_shard = ceil_div(model.vocab as u64, tp);
+        let embed_bytes = vocab_shard * h * dtype;
+        for &c in &group.coords {
+            chip.core_mut(c)
+                .gemm_hbm_weights(&cfg, lm, h, vocab_shard, embed_bytes);
+        }
+        chip.sync(&group.coords);
+    }
+
+    group_now(chip, group)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ChipConfig;
+    use crate::memmgr::planner::{plan, PlanRequest};
+    use crate::model::batch::BatchItem;
+    use crate::parallel::placement::Region;
+
+    fn setup(tp: usize) -> (ChipSim, TpGroup) {
+        let chip = ChipSim::new(ChipConfig::large_core());
+        let group = TpGroup::place(Region::new(0, 0, 2, tp / 2), Placement::Ring);
+        (chip, group)
+    }
+
+    fn kv_for(model: &ModelConfig, plan_: &SramPlan, layers: usize, tp: usize) -> KvCache {
+        let bpt = model.kv_bytes_per_token_layer() * layers as u64 / tp as u64;
+        KvCache::new(plan_.kv_bytes, 16, 4 << 30, bpt.max(1), 4096)
+    }
+
+    fn run(
+        strategy: PartitionStrategy,
+        batch: &IterBatch,
+        layers: usize,
+    ) -> Cycle {
+        let (mut chip, group) = setup(4);
+        let model = ModelConfig::qwen3_4b();
+        let p = plan(
+            &chip.cfg.core,
+            &model,
+            &PlanRequest {
+                layers,
+                tp: 4,
+                iter_tokens: batch.total_q_tokens() as usize,
+                kv_share: 0.5,
+            },
+        );
+        let mut kv = kv_for(&model, &p, layers, 4);
+        for item in &batch.items {
+            kv.admit(item.request);
+            if item.kv_tokens > item.q_tokens {
+                kv.append(item.request, item.kv_tokens - item.q_tokens);
+            }
+        }
+        // Logits off: they are a layer-count-independent cost that would
+        // blur the per-layer comparisons below.
+        let exec = ExecConfig::new(strategy, layers, false);
+        run_iteration(&mut chip, &group, &model, &p, &exec, batch, &mut kv)
+    }
+
+    #[test]
+    fn prefill_iteration_completes() {
+        let b = IterBatch::new(vec![BatchItem::prefill(1, 256, 256)]);
+        let t = run(PartitionStrategy::OneDimK, &b, 2);
+        assert!(t > 0);
+    }
+
+    #[test]
+    fn empty_batch_is_free() {
+        let (mut chip, group) = setup(4);
+        let model = ModelConfig::qwen3_4b();
+        let p = plan(&chip.cfg.core, &model, &PlanRequest::default());
+        let mut kv = kv_for(&model, &p, 1, 4);
+        let exec = ExecConfig::new(PartitionStrategy::OneDimK, 1, false);
+        let t = run_iteration(
+            &mut chip,
+            &group,
+            &model,
+            &p,
+            &exec,
+            &IterBatch::default(),
+            &mut kv,
+        );
+        assert_eq!(t, 0);
+    }
+
+    #[test]
+    fn short_seq_prefers_allreduce_partition() {
+        // Fig. 9's headline: at short sequence length K-partition wins.
+        let b = IterBatch::new(vec![BatchItem::prefill(1, 256, 256)]);
+        let t_k = run(PartitionStrategy::OneDimK, &b, 2);
+        let t_mn = run(PartitionStrategy::OneDimMN, &b, 2);
+        assert!(
+            t_k < t_mn,
+            "K-partition {t_k} should beat MN {t_mn} at seq 256"
+        );
+    }
+
+    #[test]
+    fn long_seq_prefers_allgather_partition() {
+        let b = IterBatch::new(vec![BatchItem::prefill(1, 8192, 8192)]);
+        let t_k = run(PartitionStrategy::OneDimK, &b, 2);
+        let t_mn = run(PartitionStrategy::OneDimMN, &b, 2);
+        assert!(
+            t_mn < t_k,
+            "MN {t_mn} should beat K-partition {t_k} at seq 8192"
+        );
+    }
+
+    #[test]
+    fn decode_iteration_uses_gemv_path() {
+        let b = IterBatch::new(vec![BatchItem::decode(1, 512)]);
+        let (mut chip, group) = setup(4);
+        let model = ModelConfig::qwen3_4b();
+        let p = plan(&chip.cfg.core, &model, &PlanRequest::default());
+        let mut kv = kv_for(&model, &p, 2, 4);
+        kv.admit(1);
+        kv.append(1, 511);
+        let exec = ExecConfig::new(PartitionStrategy::OneDimK, 2, true);
+        run_iteration(&mut chip, &group, &model, &p, &exec, &b, &mut kv);
+        let tr = chip.aggregate_tracer();
+        assert!(tr.cycles(OpClass::Gemv) > 0, "decode must hit GEMV");
+        assert!(tr.cycles(OpClass::Attention) > 0);
+    }
+
+    #[test]
+    fn longer_context_slows_decode() {
+        let mk = |ctx: u64| {
+            let b = IterBatch::new(vec![BatchItem::decode(1, ctx)]);
+            let (mut chip, group) = setup(4);
+            let model = ModelConfig::qwen3_4b();
+            let p = plan(&chip.cfg.core, &model, &PlanRequest::default());
+            let mut kv = kv_for(&model, &p, 2, 4);
+            kv.admit(1);
+            kv.append(1, ctx - 1);
+            let exec = ExecConfig::new(PartitionStrategy::OneDimK, 2, true);
+            run_iteration(&mut chip, &group, &model, &p, &exec, &b, &mut kv)
+        };
+        assert!(mk(4096) > mk(128));
+    }
+
+    #[test]
+    fn moe_iteration_runs() {
+        let model = ModelConfig::qwen3_30b_a3b();
+        let (mut chip, group) = setup(4);
+        let p = plan(
+            &chip.cfg.core,
+            &model,
+            &PlanRequest {
+                layers: 1,
+                tp: 4,
+                iter_tokens: 128,
+                kv_share: 0.5,
+            },
+        );
+        let mut kv = kv_for(&model, &p, 1, 4);
+        kv.admit(1);
+        let b = IterBatch::new(vec![BatchItem::prefill(1, 128, 128)]);
+        let exec = ExecConfig::new(PartitionStrategy::OneDimK, 1, false);
+        let t = run_iteration(&mut chip, &group, &model, &p, &exec, &b, &mut kv);
+        assert!(t > 0);
+        assert!(chip.aggregate_tracer().cycles(OpClass::P2P) > 0, "MoE dispatch");
+    }
+
+    #[test]
+    fn kv_spill_charges_hbm() {
+        let model = ModelConfig::qwen3_4b();
+        let (mut chip, group) = setup(4);
+        let p = plan(&chip.cfg.core, &model, &PlanRequest::default());
+        // Tiny SRAM KV: everything spills.
+        let bpt = model.kv_bytes_per_token_layer() * 2 / 4;
+        let mut kv = KvCache::new(0, 16, 4 << 30, bpt, 65536);
+        kv.admit(1);
+        let b = IterBatch::new(vec![BatchItem::prefill(1, 2048, 2048)]);
+        let exec = ExecConfig::new(PartitionStrategy::OneDimK, 2, false);
+        run_iteration(&mut chip, &group, &model, &p, &exec, &b, &mut kv);
+        assert!(chip.aggregate_tracer().cycles(OpClass::KvSpill) > 0);
+    }
+
+    #[test]
+    fn two_dim_partition_runs_and_communicates() {
+        let b = IterBatch::new(vec![BatchItem::prefill(1, 1024, 1024)]);
+        let (mut chip, group) = setup(4);
+        let model = ModelConfig::qwen3_4b();
+        let p = plan(&chip.cfg.core, &model, &PlanRequest::default());
+        let mut kv = kv_for(&model, &p, 1, 4);
+        kv.admit(1);
+        let exec = ExecConfig::new(PartitionStrategy::TwoDim { rows: 2, cols: 2 }, 1, false);
+        let t = run_iteration(&mut chip, &group, &model, &p, &exec, &b, &mut kv);
+        assert!(t > 0);
+        let tr = chip.aggregate_tracer();
+        assert!(tr.cycles(OpClass::AllReduce) > 0);
+        assert!(tr.cycles(OpClass::AllGather) > 0);
+    }
+
+    #[test]
+    fn more_layers_cost_more() {
+        let b = IterBatch::new(vec![BatchItem::prefill(1, 512, 512)]);
+        let t1 = run(PartitionStrategy::OneDimK, &b, 1);
+        let t4 = run(PartitionStrategy::OneDimK, &b, 4);
+        assert!(t4 > 3 * t1, "t1={t1} t4={t4}");
+    }
+}

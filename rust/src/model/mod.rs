@@ -1,0 +1,24 @@
+//! LLM operator graphs and their distributed execution on the simulated
+//! chip.
+//!
+//! A serving iteration (one scheduler tick) is described by an
+//! [`batch::IterBatch`] — which requests contribute how many query tokens
+//! against how much KV context — and executed layer by layer on a placed
+//! TP group by [`exec`]. Execution composes:
+//!
+//! - the **compute models** of [`crate::sim::compute`] for every GEMM /
+//!   GEMV / vector operator,
+//! - the **partition strategies** of [`crate::parallel::partition`] which
+//!   decide what each core computes and what the group communicates,
+//! - the **collectives** of [`crate::parallel::collectives`] running on the
+//!   contention-aware NoC,
+//! - the **KV residency** of [`crate::memmgr`] which decides how much of
+//!   attention's KV streams from HBM, and
+//! - the **SRAM plan** of [`crate::memmgr::planner`] which decides how much
+//!   weight streams from HBM per layer.
+
+pub mod batch;
+pub mod exec;
+
+pub use batch::{BatchItem, IterBatch, Phase};
+pub use exec::{run_iteration, ExecConfig};

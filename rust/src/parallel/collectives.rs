@@ -1,0 +1,178 @@
+//! Ring collective schedules executed on the simulated mesh.
+//!
+//! Collectives are expressed as rounds of simultaneous neighbour transfers
+//! over the [`TpGroup`]'s logical ring; physical hop counts and link
+//! contention come out of the NoC model, which is exactly how placement
+//! quality (Fig. 10) manifests: a 2-hop logical neighbour locks two links
+//! per transfer, halving effective ring bandwidth.
+
+use super::placement::TpGroup;
+use crate::sim::chip::ChipSim;
+use crate::sim::compute;
+use crate::sim::tracer::OpClass;
+use crate::util::units::Cycle;
+
+/// One ring rotation step: every rank sends `bytes` to its ring successor
+/// simultaneously; clocks of all ranks synchronise at the step barrier
+/// (ranks cannot start the next rotation before their predecessor's data
+/// arrives). Returns the barrier cycle.
+pub fn ring_step(chip: &mut ChipSim, group: &TpGroup, bytes: u64, class: OpClass) -> Cycle {
+    let n = group.len();
+    if n <= 1 || bytes == 0 {
+        return chip.sync(&group.coords);
+    }
+    // Issue all sends at each sender's current clock; deterministic order.
+    let mut finishes = Vec::with_capacity(n);
+    for i in 0..n {
+        let src = group.coords[i];
+        let dst = group.coords[(i + 1) % n];
+        let depart = chip.core(src).now();
+        let t = chip.mesh.transfer(src, dst, bytes, depart);
+        chip.core_mut(src).tracer.record(class, t.finish - depart);
+        finishes.push(t.finish);
+    }
+    // Each rank may proceed once it has sent and received; ring steps are
+    // lock-step across the group, so synchronise on the slowest transfer.
+    let barrier = finishes.into_iter().max().unwrap();
+    for &c in &group.coords {
+        chip.core_mut(c).advance_to(barrier);
+    }
+    barrier
+}
+
+/// Ring AllGather: every rank ends up with all `n` shards of `shard_bytes`.
+/// `n-1` rotation steps, each moving one shard per rank.
+pub fn ring_all_gather(chip: &mut ChipSim, group: &TpGroup, shard_bytes: u64) -> Cycle {
+    let n = group.len();
+    if n <= 1 {
+        return chip.sync(&group.coords);
+    }
+    let mut t = 0;
+    for _ in 0..n - 1 {
+        t = ring_step(chip, group, shard_bytes, OpClass::AllGather);
+    }
+    t
+}
+
+/// Ring AllReduce over `data_bytes` per rank: reduce-scatter (`n-1` steps of
+/// `data_bytes/n` + elementwise add) followed by allgather (`n-1` steps).
+pub fn ring_all_reduce(chip: &mut ChipSim, group: &TpGroup, data_bytes: u64) -> Cycle {
+    let n = group.len();
+    if n <= 1 {
+        return chip.sync(&group.coords);
+    }
+    let chunk = (data_bytes as usize).div_ceil(n) as u64;
+    let elems = chunk / chip.cfg.dtype_bytes.max(1);
+    let mut t = 0;
+    // Reduce-scatter: each step transfers a chunk and reduces it.
+    for _ in 0..n - 1 {
+        ring_step(chip, group, chunk, OpClass::AllReduce);
+        // Elementwise accumulate on every rank (vector unit).
+        for &c in &group.coords {
+            let core = chip.core_mut(c);
+            let add = compute::vector_cycles(&core.cfg, elems, 1);
+            core.tracer.record(OpClass::Vector, add);
+            core.advance_to(core.now() + add);
+        }
+        t = chip.sync(&group.coords);
+    }
+    // AllGather phase.
+    for _ in 0..n - 1 {
+        t = ring_step(chip, group, chunk, OpClass::AllReduce);
+    }
+    t
+}
+
+/// AllReduce along one row/column sub-ring of a 2-D grid (used by the 2-D
+/// partition's per-iteration row reduction).
+pub fn sub_ring_all_reduce(chip: &mut ChipSim, ring: &[crate::sim::noc::Coord], data_bytes: u64) -> Cycle {
+    let group = TpGroup {
+        coords: ring.to_vec(),
+        placement: super::placement::Placement::Ring,
+    };
+    ring_all_reduce(chip, &group, data_bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ChipConfig;
+    use crate::parallel::placement::{Placement, Region};
+
+    fn chip() -> ChipSim {
+        ChipSim::new(ChipConfig::large_core())
+    }
+
+    fn group(placement: Placement, w: usize) -> TpGroup {
+        TpGroup::place(Region::new(0, 0, 2, w / 2), placement)
+    }
+
+    #[test]
+    fn ring_step_advances_all_cores_equally() {
+        let mut c = chip();
+        let g = group(Placement::Ring, 4);
+        let t = ring_step(&mut c, &g, 25_600, OpClass::AllGather);
+        assert!(t > 0);
+        for &co in &g.coords {
+            assert_eq!(c.core(co).now(), t);
+        }
+    }
+
+    #[test]
+    fn all_gather_scales_with_group_size() {
+        let mut c = chip();
+        let g2 = TpGroup::place(Region::new(0, 0, 2, 1), Placement::Ring);
+        let t2 = ring_all_gather(&mut c, &g2, 10_000);
+        let mut c = chip();
+        let g8 = TpGroup::place(Region::new(0, 0, 2, 4), Placement::Ring);
+        let t8 = ring_all_gather(&mut c, &g8, 10_000);
+        // 7 steps vs 1 step.
+        assert!(t8 > 5 * t2, "t2={t2} t8={t8}");
+    }
+
+    #[test]
+    fn all_reduce_moves_two_passes_of_data() {
+        let mut c1 = chip();
+        let g = TpGroup::place(Region::new(0, 0, 2, 2), Placement::Ring);
+        let tg = ring_all_gather(&mut c1, &g, 100_000 / 4);
+        let mut c2 = chip();
+        let g = TpGroup::place(Region::new(0, 0, 2, 2), Placement::Ring);
+        let tr = ring_all_reduce(&mut c2, &g, 100_000);
+        // AllReduce ≈ 2× the steps of AllGather on the same total bytes.
+        assert!(tr > tg, "tr={tr} tg={tg}");
+        assert!(tr < 4 * tg.max(1), "tr={tr} tg={tg}");
+    }
+
+    #[test]
+    fn one_hop_ring_beats_linear_seq() {
+        // Same logical collective, different placement: linear-seq has a
+        // long wrap hop that serialises against the forward traffic.
+        let mut c1 = chip();
+        let ring = TpGroup::place(Region::new(0, 0, 2, 8), Placement::Ring);
+        let t_ring = ring_all_gather(&mut c1, &ring, 1 << 20);
+        let mut c2 = chip();
+        let lin = TpGroup::place(Region::new(0, 0, 2, 8), Placement::LinearSeq);
+        let t_lin = ring_all_gather(&mut c2, &lin, 1 << 20);
+        assert!(
+            t_ring < t_lin,
+            "ring {t_ring} should beat linear-seq {t_lin}"
+        );
+    }
+
+    #[test]
+    fn singleton_group_is_free() {
+        let mut c = chip();
+        let g = TpGroup::place(Region::new(0, 0, 1, 1), Placement::Ring);
+        assert_eq!(ring_all_gather(&mut c, &g, 1 << 20), 0);
+        assert_eq!(ring_all_reduce(&mut c, &g, 1 << 20), 0);
+    }
+
+    #[test]
+    fn zero_bytes_step_syncs_only() {
+        let mut c = chip();
+        let g = group(Placement::Ring, 4);
+        c.core_mut(g.coords[0]).advance_to(777);
+        let t = ring_step(&mut c, &g, 0, OpClass::AllGather);
+        assert_eq!(t, 777);
+    }
+}

@@ -1,0 +1,21 @@
+//! Tensor partition, core placement and collective communication — the
+//! paper's §4.1 design space.
+//!
+//! - [`partition`]: the three GEMM partition strategies of Fig. 3 (1-D M/N
+//!   via AllGather, 1-D K via AllReduce, 2-D hybrid) with the Table 2
+//!   analytic cost model.
+//! - [`placement`]: the core placement strategies of Fig. 4 (linear-seq,
+//!   linear-interleave, ring, 2-D mesh) mapping logical TP ranks onto
+//!   physical mesh coordinates, plus pipeline-stage region partitioning.
+//! - [`collectives`]: ring AllGather / AllReduce schedules executed on the
+//!   simulated mesh (contention-aware).
+//! - [`pd_placement`]: DP-prioritized vs PP-prioritized core placement for
+//!   PD disaggregation (Fig. 6).
+
+pub mod collectives;
+pub mod partition;
+pub mod pd_placement;
+pub mod placement;
+
+pub use partition::PartitionStrategy;
+pub use placement::{Placement, Region, TpGroup};

@@ -1,0 +1,253 @@
+//! GEMM tensor-partition strategies (Fig. 3) and their analytic cost model
+//! (Table 2).
+//!
+//! For a GEMM `[M,K] × [K,N]` distributed over `num` cores:
+//!
+//! | strategy        | collective        | total comm / core                  |
+//! |-----------------|-------------------|------------------------------------|
+//! | Input-only      | none              | 0                                  |
+//! | 1-D M/N         | ring AllGather    | `(num-1)/num × K·N`                |
+//! | 1-D K           | ring AllReduce    | `2 (num-1)/num × M·N`              |
+//! | 2-D (R×C)       | row AR + col AG   | `(R-1)(2 (C-1)/C · M·N/C² + K·N/(C·R))` |
+//!
+//! The K-dimension partition moves *results* (`M·N`) instead of *weights*
+//! (`K·N`), which is why it wins when the sequence length (M) is smaller
+//! than the hidden dimension (K/N) — e.g. short prompts or chunked prefill
+//! — and loses sharply once M outgrows the hidden size (Fig. 9).
+
+use crate::config::ModelConfig;
+
+/// How a GEMM is split across the TP group.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PartitionStrategy {
+    /// Replicated weights, inputs split along M: no communication, but
+    /// every core must hold the full weight tensor.
+    InputOnly,
+    /// 1-D split along M/N: weights sharded, rotated via ring AllGather
+    /// (T10 / WaferLLM style).
+    OneDimMN,
+    /// 1-D split along K: partial results aggregated via ring AllReduce.
+    OneDimK,
+    /// 2-D split along M/N and K on an `rows × cols` logical grid:
+    /// row-wise AllReduce + column-wise AllGather per iteration.
+    TwoDim { rows: usize, cols: usize },
+}
+
+impl PartitionStrategy {
+    /// Parse from a CLI string.
+    pub fn parse(s: &str, tp: usize) -> anyhow::Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "input" | "input_only" => PartitionStrategy::InputOnly,
+            "mn" | "allgather" => PartitionStrategy::OneDimMN,
+            "k" | "allreduce" => PartitionStrategy::OneDimK,
+            "mnk" | "2d" | "twodim" => {
+                let rows = (1..=tp)
+                    .rev()
+                    .find(|r| tp % r == 0 && *r * *r <= tp)
+                    .unwrap_or(1);
+                PartitionStrategy::TwoDim {
+                    rows,
+                    cols: tp / rows,
+                }
+            }
+            other => anyhow::bail!("unknown partition strategy {other:?}"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PartitionStrategy::InputOnly => "input-only",
+            PartitionStrategy::OneDimMN => "1d-mn(allgather)",
+            PartitionStrategy::OneDimK => "1d-k(allreduce)",
+            PartitionStrategy::TwoDim { .. } => "2d-mnk(hybrid)",
+        }
+    }
+
+    /// Number of cores the strategy spans.
+    pub fn degree(&self, tp: usize) -> usize {
+        match self {
+            PartitionStrategy::TwoDim { rows, cols } => rows * cols,
+            _ => tp,
+        }
+    }
+}
+
+/// Table 2 analytic costs for one GEMM, in **elements** (multiply by dtype
+/// size for bytes).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PartitionCost {
+    /// Per-core input tensor elements.
+    pub input_per_core: f64,
+    /// Per-core weight tensor elements.
+    pub weight_per_core: f64,
+    /// Per-core output tensor elements.
+    pub output_per_core: f64,
+    /// Total elements communicated by one core over the whole GEMM.
+    pub total_comm: f64,
+    /// Worst-case hops between logically adjacent cores (`alpha` ≈ 2 for
+    /// interleaved linear placements, 1 for ring).
+    pub max_hop: u64,
+}
+
+/// Evaluate the Table 2 cost model.
+pub fn partition_cost(
+    strategy: PartitionStrategy,
+    tp: usize,
+    m: u64,
+    k: u64,
+    n: u64,
+    alpha: u64,
+) -> PartitionCost {
+    let (m, k, n) = (m as f64, k as f64, n as f64);
+    let num = tp as f64;
+    match strategy {
+        PartitionStrategy::InputOnly => PartitionCost {
+            input_per_core: m * k / num,
+            weight_per_core: k * n,
+            output_per_core: m * n / num,
+            total_comm: 0.0,
+            max_hop: 0,
+        },
+        PartitionStrategy::OneDimMN => PartitionCost {
+            input_per_core: m * k / num,
+            weight_per_core: k * n / num,
+            output_per_core: m * n / num,
+            total_comm: (num - 1.0) / num * (k * n),
+            max_hop: alpha,
+        },
+        PartitionStrategy::OneDimK => PartitionCost {
+            input_per_core: m * k / num,
+            weight_per_core: k * n / num,
+            output_per_core: m * n / num,
+            total_comm: 2.0 * (num - 1.0) / num * (m * n),
+            max_hop: alpha,
+        },
+        PartitionStrategy::TwoDim { rows, cols } => {
+            let (r, c) = (rows as f64, cols as f64);
+            PartitionCost {
+                input_per_core: m * k / (r * c),
+                weight_per_core: k * n / (r * c),
+                output_per_core: m * n / (r * c),
+                total_comm: (r - 1.0) * (2.0 * (c - 1.0) / c * (m * n) / (c * c) + (k * n) / (c * r)),
+                max_hop: alpha,
+            }
+        }
+    }
+}
+
+/// The analytically optimal 1-D strategy for a GEMM: AllReduce when the
+/// result (`M·N`) is smaller than the weights (`K·N`) — i.e. roughly when
+/// `M < K/2` given AllReduce moves the result twice (§4.1, §5.6 guidance).
+pub fn best_1d_strategy(m: u64, k: u64, _n: u64) -> PartitionStrategy {
+    if 2 * m < k {
+        PartitionStrategy::OneDimK
+    } else {
+        PartitionStrategy::OneDimMN
+    }
+}
+
+/// Pick a per-scenario strategy following §5.6: AllReduce for short
+/// sequences / chunked prefill, 2-D for long prompts at larger TP.
+pub fn auto_strategy(model: &ModelConfig, seq_len: u64, tp: usize) -> PartitionStrategy {
+    let hidden = model.hidden as u64;
+    if 2 * seq_len < hidden {
+        PartitionStrategy::OneDimK
+    } else if tp >= 8 {
+        // Factor tp into the squarest grid.
+        let rows = (1..=tp).rev().find(|r| tp % r == 0 && r * r <= tp).unwrap_or(1);
+        PartitionStrategy::TwoDim { rows, cols: tp / rows }
+    } else {
+        PartitionStrategy::OneDimMN
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn input_only_has_no_comm_but_full_weights() {
+        let c = partition_cost(PartitionStrategy::InputOnly, 4, 128, 4096, 4096, 2);
+        assert_eq!(c.total_comm, 0.0);
+        assert_eq!(c.weight_per_core, 4096.0 * 4096.0);
+        assert_eq!(c.max_hop, 0);
+    }
+
+    #[test]
+    fn table2_mn_formula() {
+        let c = partition_cost(PartitionStrategy::OneDimMN, 4, 256, 1024, 2048, 2);
+        assert!((c.total_comm - 0.75 * 1024.0 * 2048.0).abs() < 1e-6);
+        assert_eq!(c.weight_per_core, 1024.0 * 2048.0 / 4.0);
+    }
+
+    #[test]
+    fn table2_k_formula() {
+        let c = partition_cost(PartitionStrategy::OneDimK, 4, 256, 1024, 2048, 2);
+        assert!((c.total_comm - 2.0 * 0.75 * 256.0 * 2048.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn table2_2d_formula() {
+        let (r, c_) = (2.0f64, 2.0f64);
+        let (m, k, n) = (256.0f64, 1024.0, 2048.0);
+        let expect = (r - 1.0) * (2.0 * (c_ - 1.0) / c_ * m * n / (c_ * c_) + k * n / (c_ * r));
+        let c = partition_cost(
+            PartitionStrategy::TwoDim { rows: 2, cols: 2 },
+            4,
+            256,
+            1024,
+            2048,
+            2,
+        );
+        assert!((c.total_comm - expect).abs() < 1e-6);
+    }
+
+    #[test]
+    fn k_beats_mn_for_short_sequences() {
+        // seq 256 << hidden 4096: AllReduce moves 2·(3/4)·256·4096 while
+        // AllGather moves (3/4)·4096·4096 — 8x more.
+        let mn = partition_cost(PartitionStrategy::OneDimMN, 4, 256, 4096, 4096, 2);
+        let k = partition_cost(PartitionStrategy::OneDimK, 4, 256, 4096, 4096, 2);
+        assert!(k.total_comm * 4.0 < mn.total_comm);
+        assert_eq!(best_1d_strategy(256, 4096, 4096), PartitionStrategy::OneDimK);
+    }
+
+    #[test]
+    fn mn_beats_k_for_long_sequences() {
+        let mn = partition_cost(PartitionStrategy::OneDimMN, 4, 16384, 4096, 4096, 2);
+        let k = partition_cost(PartitionStrategy::OneDimK, 4, 16384, 4096, 4096, 2);
+        assert!(mn.total_comm < k.total_comm);
+        assert_eq!(
+            best_1d_strategy(16384, 4096, 4096),
+            PartitionStrategy::OneDimMN
+        );
+    }
+
+    #[test]
+    fn parse_strategies() {
+        assert_eq!(
+            PartitionStrategy::parse("allreduce", 4).unwrap(),
+            PartitionStrategy::OneDimK
+        );
+        assert_eq!(
+            PartitionStrategy::parse("mnk", 16).unwrap(),
+            PartitionStrategy::TwoDim { rows: 4, cols: 4 }
+        );
+        assert_eq!(
+            PartitionStrategy::parse("2d", 8).unwrap(),
+            PartitionStrategy::TwoDim { rows: 2, cols: 4 }
+        );
+        assert!(PartitionStrategy::parse("bogus", 4).is_err());
+    }
+
+    #[test]
+    fn auto_strategy_follows_guidance() {
+        let m = crate::config::ModelConfig::qwen3_4b(); // hidden 2560
+        assert_eq!(auto_strategy(&m, 256, 4), PartitionStrategy::OneDimK);
+        assert_eq!(auto_strategy(&m, 4096, 4), PartitionStrategy::OneDimMN);
+        assert!(matches!(
+            auto_strategy(&m, 4096, 16),
+            PartitionStrategy::TwoDim { rows: 4, cols: 4 }
+        ));
+    }
+}

@@ -1,0 +1,379 @@
+//! Core placement for PD disaggregation (Fig. 6).
+//!
+//! - **DP-prioritized** (WSC-LLM): the chip is first split into `dp` data-
+//!   parallel bands; within each band cores are assigned to prefill and
+//!   decode by the requested ratio. KV transfers then compete with the
+//!   band's own pipeline traffic.
+//! - **PP-prioritized** (this paper): pipeline-parallel columns are
+//!   assigned from the chip *edges* inward for prefill, leaving decode
+//!   cores in the center — every prefill column has an unobstructed mesh
+//!   path toward the decode region, maximising prefill→decode KV-transfer
+//!   bandwidth while pipeline traffic flows along the columns.
+
+use super::placement::TpGroup;
+use crate::sim::noc::Coord;
+
+/// PD-disaggregation placement policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PdPlacementPolicy {
+    /// WSC-LLM style: `dp` bands, split each by ratio.
+    DpPrioritized { dp: usize },
+    /// Paper's: prefill at the edges, decode in the center.
+    PpPrioritized,
+}
+
+impl PdPlacementPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PdPlacementPolicy::DpPrioritized { .. } => "dp-prioritized",
+            PdPlacementPolicy::PpPrioritized => "pp-prioritized",
+        }
+    }
+}
+
+/// The physical core assignment produced by a policy.
+#[derive(Debug, Clone)]
+pub struct PdAssignment {
+    /// Prefill pipelines: `[pipeline][stage]` TP groups.
+    pub prefill_pipelines: Vec<Vec<TpGroup>>,
+    /// Decode worker groups (each runs all layers with TP).
+    pub decode_groups: Vec<TpGroup>,
+    pub policy: PdPlacementPolicy,
+}
+
+impl PdAssignment {
+    pub fn n_prefill_cores(&self) -> usize {
+        self.prefill_pipelines
+            .iter()
+            .flat_map(|p| p.iter())
+            .map(|g| g.len())
+            .sum()
+    }
+
+    pub fn n_decode_cores(&self) -> usize {
+        self.decode_groups.iter().map(|g| g.len()).sum()
+    }
+
+    /// Mean Manhattan distance from prefill cores to their nearest decode
+    /// core — the KV-transfer distance statistic the edge/center layout
+    /// optimises.
+    pub fn mean_kv_distance(&self) -> f64 {
+        let decode: Vec<Coord> = self
+            .decode_groups
+            .iter()
+            .flat_map(|g| g.coords.iter().cloned())
+            .collect();
+        if decode.is_empty() {
+            return 0.0;
+        }
+        let mut total = 0usize;
+        let mut count = 0usize;
+        for p in &self.prefill_pipelines {
+            for g in p {
+                for &c in &g.coords {
+                    total += decode.iter().map(|&d| c.hops_to(d)).min().unwrap();
+                    count += 1;
+                }
+            }
+        }
+        if count == 0 {
+            0.0
+        } else {
+            total as f64 / count as f64
+        }
+    }
+}
+
+/// Build a TP group from an arbitrary coordinate list, interleaving the
+/// order so logical ring neighbours stay within ~2 hops even on straight
+/// column segments.
+fn tp_group_from_coords(mut coords: Vec<Coord>) -> TpGroup {
+    // Interleave: evens forward, odds backward.
+    let n = coords.len();
+    let mut order = Vec::with_capacity(n);
+    let mut i = 0;
+    while i < n {
+        order.push(coords[i]);
+        i += 2;
+    }
+    let mut j = if n % 2 == 0 { n.saturating_sub(1) } else { n.saturating_sub(2) };
+    while n > 1 {
+        if j % 2 == 1 {
+            order.push(coords[j]);
+        }
+        if j <= 1 {
+            break;
+        }
+        j -= 2;
+    }
+    if n == 1 {
+        order = std::mem::take(&mut coords);
+    }
+    TpGroup {
+        coords: order,
+        placement: super::placement::Placement::LinearInterleave,
+    }
+}
+
+/// Compute the PD core assignment.
+///
+/// * `rows`/`cols`: chip mesh shape.
+/// * `n_prefill`/`n_decode`: core counts (must fit on the chip).
+/// * `prefill_tp`: TP size of each prefill pipeline stage.
+/// * `prefill_stages`: pipeline stages per prefill pipeline.
+/// * `decode_tp`: TP size of each decode group.
+pub fn assign(
+    rows: usize,
+    cols: usize,
+    n_prefill: usize,
+    n_decode: usize,
+    prefill_tp: usize,
+    prefill_stages: usize,
+    decode_tp: usize,
+    policy: PdPlacementPolicy,
+) -> anyhow::Result<PdAssignment> {
+    anyhow::ensure!(
+        n_prefill + n_decode <= rows * cols,
+        "{} prefill + {} decode cores exceed the {}x{} chip",
+        n_prefill,
+        n_decode,
+        rows,
+        cols
+    );
+    anyhow::ensure!(prefill_tp > 0 && decode_tp > 0 && prefill_stages > 0);
+
+    let (prefill_coords, decode_coords) = match policy {
+        PdPlacementPolicy::PpPrioritized => {
+            // Column order: edges first (0, cols-1, 1, cols-2, ...).
+            let mut col_order = Vec::with_capacity(cols);
+            let (mut lo, mut hi) = (0usize, cols - 1);
+            while lo <= hi {
+                col_order.push(lo);
+                if lo != hi {
+                    col_order.push(hi);
+                }
+                if hi == 0 {
+                    break;
+                }
+                lo += 1;
+                hi -= 1;
+            }
+            let mut all = Vec::with_capacity(rows * cols);
+            for &c in &col_order {
+                for r in 0..rows {
+                    all.push(Coord::new(r, c));
+                }
+            }
+            let prefill: Vec<Coord> = all[..n_prefill].to_vec();
+            // Decode takes from the *end* of the edge-first order — i.e.
+            // the center columns.
+            let decode: Vec<Coord> = all[all.len() - n_decode..].to_vec();
+            (prefill, decode)
+        }
+        PdPlacementPolicy::DpPrioritized { dp } => {
+            anyhow::ensure!(dp > 0 && dp <= rows, "dp {dp} must divide the mesh rows");
+            let band_rows = rows / dp;
+            let per_band_prefill = n_prefill / dp;
+            let per_band_decode = n_decode / dp;
+            let mut prefill = Vec::new();
+            let mut decode = Vec::new();
+            for b in 0..dp {
+                let r0 = b * band_rows;
+                let mut band = Vec::new();
+                for r in r0..(r0 + band_rows).min(rows) {
+                    for c in 0..cols {
+                        band.push(Coord::new(r, c));
+                    }
+                }
+                prefill.extend(band.iter().take(per_band_prefill).cloned());
+                decode.extend(
+                    band.iter()
+                        .skip(per_band_prefill)
+                        .take(per_band_decode)
+                        .cloned(),
+                );
+            }
+            // Distribute any remainder round-robin from unassigned cores.
+            let assigned: std::collections::HashSet<Coord> =
+                prefill.iter().chain(decode.iter()).cloned().collect();
+            let mut rest: Vec<Coord> = (0..rows)
+                .flat_map(|r| (0..cols).map(move |c| Coord::new(r, c)))
+                .filter(|c| !assigned.contains(c))
+                .collect();
+            while prefill.len() < n_prefill {
+                prefill.push(rest.remove(0));
+            }
+            while decode.len() < n_decode {
+                decode.push(rest.remove(0));
+            }
+            (prefill, decode)
+        }
+    };
+
+    // Chunk prefill coords into pipelines of `stages × tp`.
+    let per_pipeline = prefill_tp * prefill_stages;
+    let n_pipelines = (prefill_coords.len() / per_pipeline).max(1);
+    let mut prefill_pipelines = Vec::with_capacity(n_pipelines);
+    for p in 0..n_pipelines {
+        let base = p * per_pipeline;
+        if base + per_pipeline > prefill_coords.len() {
+            break;
+        }
+        let mut stages = Vec::with_capacity(prefill_stages);
+        for s in 0..prefill_stages {
+            let c0 = base + s * prefill_tp;
+            stages.push(tp_group_from_coords(
+                prefill_coords[c0..c0 + prefill_tp].to_vec(),
+            ));
+        }
+        prefill_pipelines.push(stages);
+    }
+    anyhow::ensure!(
+        !prefill_pipelines.is_empty(),
+        "not enough prefill cores ({}) for one pipeline of {} stages x TP {}",
+        prefill_coords.len(),
+        prefill_stages,
+        prefill_tp
+    );
+
+    // Chunk decode coords into TP groups, preferring column-compact groups:
+    // a TP ring inside one mesh column has 1–2-hop neighbours and leaves the
+    // row links free for prefill→decode KV transfers (the Fig. 6-b point).
+    let mut decode_groups = Vec::new();
+    {
+        let mut by_col: std::collections::BTreeMap<usize, Vec<Coord>> =
+            std::collections::BTreeMap::new();
+        for &c in &decode_coords {
+            by_col.entry(c.col).or_default().push(c);
+        }
+        let mut leftovers: Vec<Coord> = Vec::new();
+        for (_, mut col) in by_col {
+            col.sort();
+            let mut it = col.into_iter().peekable();
+            loop {
+                let chunk: Vec<Coord> = it.by_ref().take(decode_tp).collect();
+                if chunk.len() == decode_tp {
+                    decode_groups.push(tp_group_from_coords(chunk));
+                } else {
+                    leftovers.extend(chunk);
+                    break;
+                }
+            }
+        }
+        leftovers.sort();
+        for chunk in leftovers.chunks(decode_tp) {
+            if chunk.len() == decode_tp {
+                decode_groups.push(tp_group_from_coords(chunk.to_vec()));
+            }
+        }
+    }
+    anyhow::ensure!(
+        !decode_groups.is_empty(),
+        "not enough decode cores ({}) for TP {}",
+        decode_coords.len(),
+        decode_tp
+    );
+
+    Ok(PdAssignment {
+        prefill_pipelines,
+        decode_groups,
+        policy,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pp_prioritized_puts_prefill_at_edges() {
+        let a = assign(8, 8, 32, 32, 4, 2, 4, PdPlacementPolicy::PpPrioritized).unwrap();
+        // Prefill columns should be the 4 edge-most columns (0,7,1,6).
+        let prefill_cols: std::collections::HashSet<usize> = a
+            .prefill_pipelines
+            .iter()
+            .flatten()
+            .flat_map(|g| g.coords.iter().map(|c| c.col))
+            .collect();
+        assert_eq!(
+            prefill_cols,
+            [0usize, 7, 1, 6].into_iter().collect::<std::collections::HashSet<_>>()
+        );
+        // Decode in the center columns.
+        let decode_cols: std::collections::HashSet<usize> = a
+            .decode_groups
+            .iter()
+            .flat_map(|g| g.coords.iter().map(|c| c.col))
+            .collect();
+        assert_eq!(
+            decode_cols,
+            [2usize, 3, 4, 5].into_iter().collect::<std::collections::HashSet<_>>()
+        );
+    }
+
+    #[test]
+    fn pp_layout_shortens_kv_distance_vs_dp() {
+        let pp = assign(8, 8, 40, 24, 4, 2, 4, PdPlacementPolicy::PpPrioritized).unwrap();
+        let dp = assign(8, 8, 40, 24, 4, 2, 4, PdPlacementPolicy::DpPrioritized { dp: 4 }).unwrap();
+        // Edge/center layout should not be worse on mean KV distance.
+        assert!(
+            pp.mean_kv_distance() <= dp.mean_kv_distance() + 0.5,
+            "pp={} dp={}",
+            pp.mean_kv_distance(),
+            dp.mean_kv_distance()
+        );
+    }
+
+    #[test]
+    fn core_counts_respected() {
+        let a = assign(8, 8, 48, 16, 4, 3, 8, PdPlacementPolicy::PpPrioritized).unwrap();
+        assert_eq!(a.n_prefill_cores(), 48);
+        assert_eq!(a.n_decode_cores(), 16);
+        assert_eq!(a.prefill_pipelines.len(), 4); // 48 / (4*3)
+        assert_eq!(a.decode_groups.len(), 2); // 16 / 8
+    }
+
+    #[test]
+    fn dp_prioritized_bands() {
+        let a = assign(8, 8, 32, 32, 4, 2, 4, PdPlacementPolicy::DpPrioritized { dp: 4 }).unwrap();
+        assert_eq!(a.n_prefill_cores(), 32);
+        assert_eq!(a.n_decode_cores(), 32);
+    }
+
+    #[test]
+    fn no_overlap_between_prefill_and_decode() {
+        for policy in [
+            PdPlacementPolicy::PpPrioritized,
+            PdPlacementPolicy::DpPrioritized { dp: 2 },
+        ] {
+            let a = assign(8, 8, 42, 21, 7, 3, 7, policy).unwrap();
+            let prefill: std::collections::HashSet<Coord> = a
+                .prefill_pipelines
+                .iter()
+                .flatten()
+                .flat_map(|g| g.coords.iter().cloned())
+                .collect();
+            let decode: std::collections::HashSet<Coord> = a
+                .decode_groups
+                .iter()
+                .flat_map(|g| g.coords.iter().cloned())
+                .collect();
+            assert!(prefill.is_disjoint(&decode), "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn too_many_cores_rejected() {
+        assert!(assign(4, 4, 12, 8, 4, 1, 4, PdPlacementPolicy::PpPrioritized).is_err());
+    }
+
+    #[test]
+    fn paper_fig11_ratios_fit() {
+        // P49/D14, P42/D21, P28/D28(+8 idle), P21/D42 on the 64-core chip:
+        // TP=7 groups, pipeline depth scaling with the prefill share.
+        for (p, d, stages) in [(49, 14, 7), (42, 21, 6), (28, 28, 4), (21, 42, 3)] {
+            let a = assign(8, 8, p, d, 7, stages, 7, PdPlacementPolicy::PpPrioritized);
+            assert!(a.is_ok(), "P{p}/D{d}: {:?}", a.err());
+        }
+    }
+}

@@ -1,0 +1,417 @@
+//! Core placement strategies (Fig. 4): mapping logical TP ranks onto
+//! physical mesh coordinates within a rectangular region, and slicing the
+//! chip into pipeline-stage regions.
+//!
+//! Placement determines the physical hop count between *logically adjacent*
+//! ring ranks, which directly scales ring-collective cost:
+//!
+//! - **linear-seq** (T10): ranks in row-major order; neighbours are 1 hop
+//!   apart but the ring wrap-around crosses the whole region.
+//! - **linear-interleave** (WaferLLM): even ranks forward, odd ranks
+//!   backward; every logical neighbour (wrap included) is ≤ 2 hops.
+//! - **ring**: a Hamiltonian cycle over the region (boustrophedon); every
+//!   logical neighbour is exactly 1 hop — but the region's internal links
+//!   are monopolised, lowering inter-pipeline bandwidth.
+//! - **mesh2d**: ranks arranged as an `R×C` grid for 2-D partition; each
+//!   row and column forms its own small ring.
+
+use crate::sim::noc::Coord;
+
+/// A rectangular sub-block of the chip mesh.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Region {
+    pub row0: usize,
+    pub col0: usize,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl Region {
+    pub fn new(row0: usize, col0: usize, rows: usize, cols: usize) -> Self {
+        assert!(rows > 0 && cols > 0);
+        Region {
+            row0,
+            col0,
+            rows,
+            cols,
+        }
+    }
+
+    /// Full-chip region.
+    pub fn whole(rows: usize, cols: usize) -> Self {
+        Self::new(0, 0, rows, cols)
+    }
+
+    pub fn n_cores(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Row-major coordinates.
+    pub fn coords(&self) -> Vec<Coord> {
+        let mut v = Vec::with_capacity(self.n_cores());
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                v.push(Coord::new(self.row0 + r, self.col0 + c));
+            }
+        }
+        v
+    }
+
+    /// Split into `n` horizontal bands (pipeline stages). Bands get
+    /// `rows/n` rows each, the remainder distributed to the first bands.
+    pub fn split_rows(&self, n: usize) -> Vec<Region> {
+        assert!(n > 0 && n <= self.rows, "cannot split {} rows into {n}", self.rows);
+        let base = self.rows / n;
+        let extra = self.rows % n;
+        let mut out = Vec::with_capacity(n);
+        let mut r = self.row0;
+        for i in 0..n {
+            let h = base + usize::from(i < extra);
+            out.push(Region::new(r, self.col0, h, self.cols));
+            r += h;
+        }
+        out
+    }
+}
+
+/// Core placement strategy for a TP group (Fig. 4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Placement {
+    LinearSeq,
+    LinearInterleave,
+    Ring,
+    Mesh2D,
+}
+
+impl Placement {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "linear" | "linear_seq" | "linear-seq" | "seq" => Placement::LinearSeq,
+            "interleave" | "linear_interleave" | "linear-interleave" => Placement::LinearInterleave,
+            "ring" => Placement::Ring,
+            "mesh" | "mesh2d" | "2d" => Placement::Mesh2D,
+            other => anyhow::bail!("unknown placement {other:?}"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Placement::LinearSeq => "linear-seq",
+            Placement::LinearInterleave => "linear-interleave",
+            Placement::Ring => "ring",
+            Placement::Mesh2D => "mesh2d",
+        }
+    }
+
+    pub fn all() -> [Placement; 4] {
+        [
+            Placement::LinearSeq,
+            Placement::LinearInterleave,
+            Placement::Ring,
+            Placement::Mesh2D,
+        ]
+    }
+}
+
+/// A placed TP group: physical coordinates in **logical ring order**
+/// (rank i's ring successor is rank i+1 mod n).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TpGroup {
+    pub coords: Vec<Coord>,
+    pub placement: Placement,
+}
+
+impl TpGroup {
+    /// Place a TP group of the full region size.
+    pub fn place(region: Region, placement: Placement) -> TpGroup {
+        let coords = match placement {
+            Placement::LinearSeq => region.coords(),
+            Placement::LinearInterleave => interleave(&region.coords()),
+            Placement::Ring => hamiltonian_ring(region),
+            // For Mesh2D the ring order is the boustrophedon cycle too;
+            // 2-D partition addressing uses `mesh_grid` instead.
+            Placement::Mesh2D => hamiltonian_ring(region),
+        };
+        TpGroup { coords, placement }
+    }
+
+    pub fn len(&self) -> usize {
+        self.coords.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.coords.is_empty()
+    }
+
+    /// Physical hops between each logical ring neighbour pair.
+    pub fn ring_hop_counts(&self) -> Vec<usize> {
+        let n = self.coords.len();
+        (0..n)
+            .map(|i| self.coords[i].hops_to(self.coords[(i + 1) % n]))
+            .collect()
+    }
+
+    /// Max hop between logical ring neighbours (`alpha` in Table 2).
+    pub fn max_ring_hop(&self) -> usize {
+        self.ring_hop_counts().into_iter().max().unwrap_or(0)
+    }
+
+    /// Arrange the group as an `rows × cols` logical grid for 2-D
+    /// partition: `grid[i][j]` is the core at logical row i, column j.
+    /// Logical rows map to physical mesh rows of the region when shapes
+    /// allow, so row-rings and column-rings are physically compact.
+    pub fn mesh_grid(&self, rows: usize, cols: usize) -> Vec<Vec<Coord>> {
+        assert_eq!(rows * cols, self.coords.len(), "grid shape mismatch");
+        // Sort coords into row-major physical order, then chunk.
+        let mut sorted = self.coords.clone();
+        sorted.sort();
+        let mut grid = Vec::with_capacity(rows);
+        for i in 0..rows {
+            let mut row: Vec<Coord> = sorted[i * cols..(i + 1) * cols].to_vec();
+            // Interleave within the row so each row-ring has ≤2-hop
+            // neighbours even when the physical row is a line.
+            row = interleave(&row);
+            grid.push(row);
+        }
+        grid
+    }
+}
+
+/// WaferLLM interleaved order: even positions forward then odd positions
+/// backward, bounding every logical-neighbour distance (wrap included) to
+/// ≤ 2 physical hops on a line.
+fn interleave(line: &[Coord]) -> Vec<Coord> {
+    let mut out = Vec::with_capacity(line.len());
+    let mut i = 0;
+    while i < line.len() {
+        out.push(line[i]);
+        i += 2;
+    }
+    let mut j = if line.len() % 2 == 0 {
+        line.len().saturating_sub(1)
+    } else {
+        line.len().saturating_sub(2)
+    };
+    loop {
+        if j % 2 == 1 {
+            out.push(line[j]);
+        }
+        if j <= 1 {
+            break;
+        }
+        j -= 2;
+    }
+    out
+}
+
+/// Hamiltonian cycle over a rectangular region (every consecutive pair — and
+/// the wrap — 1 hop apart). Exists when either side is even; degenerate
+/// regions (single row/col) and odd×odd regions fall back to a
+/// boustrophedon path whose wrap is the only long hop.
+fn hamiltonian_ring(region: Region) -> Vec<Coord> {
+    let (h, w) = (region.rows, region.cols);
+    let at = |r: usize, c: usize| Coord::new(region.row0 + r, region.col0 + c);
+    if h == 1 || w == 1 {
+        return region.coords(); // line: no cycle possible
+    }
+    if w % 2 == 0 || h % 2 == 0 {
+        // Reserve column 0: go down it last. Snake through columns 1..w
+        // over all rows, ending back at row 0, then walk column 0 upward.
+        // Construction: row 0 from (0,0) to (0,w-1); snake rows 1..h over
+        // columns w-1..1; finish down column 0? Simpler known-good:
+        // - top row left→right
+        // - snake the remaining rows right→left / left→right over
+        //   columns 1..w
+        // - column 0 from bottom back to top
+        let mut out = Vec::with_capacity(h * w);
+        for c in 0..w {
+            out.push(at(0, c));
+        }
+        // rows 1..h over columns w-1..=1, boustrophedon
+        for r in 1..h {
+            if r % 2 == 1 {
+                for c in (1..w).rev() {
+                    out.push(at(r, c));
+                }
+            } else {
+                for c in 1..w {
+                    out.push(at(r, c));
+                }
+            }
+        }
+        // We are now at row h-1, column (1 if (h-1)%2==1 else w-1).
+        // For the cycle to close via column 0 we must be at column 1;
+        // that requires h even (last snaked row index h-1 odd). When h is
+        // odd but w is even, transpose the construction.
+        if h % 2 == 0 {
+            for r in (1..h).rev() {
+                out.push(at(r, 0));
+            }
+            return out;
+        }
+        // h odd, w even: transpose (walk row 0 reserved along the other axis).
+        let mut out = Vec::with_capacity(h * w);
+        for r in 0..h {
+            out.push(at(r, 0));
+        }
+        for c in 1..w {
+            if c % 2 == 1 {
+                for r in (1..h).rev() {
+                    out.push(at(r, c));
+                }
+            } else {
+                for r in 1..h {
+                    out.push(at(r, c));
+                }
+            }
+        }
+        for c in (1..w).rev() {
+            out.push(at(0, c));
+        }
+        return out;
+    }
+    // Odd × odd: boustrophedon path (wrap is the long hop).
+    let mut out = Vec::with_capacity(h * w);
+    for r in 0..h {
+        if r % 2 == 0 {
+            for c in 0..w {
+                out.push(at(r, c));
+            }
+        } else {
+            for c in (0..w).rev() {
+                out.push(at(r, c));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use std::collections::HashSet;
+
+    fn assert_is_permutation(group: &[Coord], region: Region) {
+        let set: HashSet<Coord> = group.iter().cloned().collect();
+        let expect: HashSet<Coord> = region.coords().into_iter().collect();
+        assert_eq!(set, expect, "placement must be a permutation of the region");
+        assert_eq!(group.len(), region.n_cores());
+    }
+
+    #[test]
+    fn region_split_rows_covers_exactly() {
+        let r = Region::whole(8, 8);
+        let parts = r.split_rows(3);
+        assert_eq!(parts.len(), 3);
+        assert_eq!(parts.iter().map(|p| p.rows).sum::<usize>(), 8);
+        assert_eq!(parts[0].rows, 3); // 8 = 3+3+2
+        assert_eq!(parts[2].row0, 6);
+    }
+
+    #[test]
+    fn linear_seq_row_major() {
+        let g = TpGroup::place(Region::new(0, 0, 1, 4), Placement::LinearSeq);
+        assert_eq!(
+            g.coords,
+            vec![
+                Coord::new(0, 0),
+                Coord::new(0, 1),
+                Coord::new(0, 2),
+                Coord::new(0, 3)
+            ]
+        );
+        // Wrap-around is the long hop: 3.
+        assert_eq!(g.max_ring_hop(), 3);
+    }
+
+    #[test]
+    fn interleave_bounds_hops_to_two() {
+        for n in [4usize, 5, 6, 7, 8, 16] {
+            let g = TpGroup::place(Region::new(0, 0, 1, n), Placement::LinearInterleave);
+            assert_is_permutation(&g.coords, Region::new(0, 0, 1, n));
+            assert!(
+                g.max_ring_hop() <= 2,
+                "n={n}: hops {:?}",
+                g.ring_hop_counts()
+            );
+        }
+    }
+
+    #[test]
+    fn ring_is_all_one_hop_on_even_regions() {
+        for (h, w) in [(2usize, 2usize), (2, 4), (4, 4), (2, 8), (4, 8), (3, 4), (4, 3)] {
+            let region = Region::new(0, 0, h, w);
+            let g = TpGroup::place(region, Placement::Ring);
+            assert_is_permutation(&g.coords, region);
+            assert_eq!(
+                g.max_ring_hop(),
+                1,
+                "({h},{w}) hops {:?} coords {:?}",
+                g.ring_hop_counts(),
+                g.coords
+            );
+        }
+    }
+
+    #[test]
+    fn ring_odd_odd_falls_back_to_path() {
+        let region = Region::new(0, 0, 3, 3);
+        let g = TpGroup::place(region, Placement::Ring);
+        assert_is_permutation(&g.coords, region);
+        // Interior hops are all 1; only the wrap is long.
+        let hops = g.ring_hop_counts();
+        assert!(hops[..hops.len() - 1].iter().all(|&h| h == 1));
+    }
+
+    #[test]
+    fn ring_single_row_is_path() {
+        let g = TpGroup::place(Region::new(2, 0, 1, 6), Placement::Ring);
+        assert_eq!(g.max_ring_hop(), 5);
+    }
+
+    #[test]
+    fn mesh_grid_shapes() {
+        let g = TpGroup::place(Region::new(0, 0, 4, 4), Placement::Mesh2D);
+        let grid = g.mesh_grid(4, 4);
+        assert_eq!(grid.len(), 4);
+        let mut all: Vec<Coord> = grid.iter().flatten().cloned().collect();
+        all.sort();
+        assert_eq!(all, Region::new(0, 0, 4, 4).coords());
+        // Each logical row lives on one physical row: row rings compact.
+        for row in &grid {
+            let r0 = row[0].row;
+            assert!(row.iter().all(|c| c.row == r0));
+        }
+    }
+
+    #[test]
+    fn prop_placements_are_permutations() {
+        check("placements are permutations", 128, |rng| {
+            let h = rng.range(1, 6);
+            let w = rng.range(1, 6);
+            let region = Region::new(rng.range(0, 4), rng.range(0, 4), h, w);
+            for p in Placement::all() {
+                let g = TpGroup::place(region, p);
+                let set: HashSet<Coord> = g.coords.iter().cloned().collect();
+                assert_eq!(set.len(), region.n_cores(), "{p:?} {region:?}");
+                for c in &g.coords {
+                    assert!(c.row >= region.row0 && c.row < region.row0 + h);
+                    assert!(c.col >= region.col0 && c.col < region.col0 + w);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn prop_ring_beats_or_ties_linear_seq_wrap() {
+        check("ring wrap <= linear wrap", 64, |rng| {
+            let h = rng.range(1, 6);
+            let w = rng.range(1, 6);
+            let region = Region::new(0, 0, h, w);
+            let ring = TpGroup::place(region, Placement::Ring);
+            let lin = TpGroup::place(region, Placement::LinearSeq);
+            assert!(ring.max_ring_hop() <= lin.max_ring_hop());
+        });
+    }
+}

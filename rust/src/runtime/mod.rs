@@ -1,0 +1,209 @@
+//! PJRT runtime: load the AOT-compiled JAX/Pallas artifacts (HLO **text**,
+//! see `python/compile/aot.py`) and execute them from rust — Python never
+//! runs on the request path.
+//!
+//! Wraps the `xla` crate: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! One compiled executable per model entry point (prefill, decode step).
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Default artifact directory (built by `make artifacts`).
+pub const ARTIFACT_DIR: &str = "artifacts";
+
+/// Shape metadata for the tiny AOT model, parsed from the sidecar
+/// `model_meta.txt` the exporter writes next to the HLO.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelMeta {
+    pub vocab: usize,
+    pub hidden: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub kv_heads: usize,
+    pub head_dim: usize,
+    pub intermediate: usize,
+    pub max_seq: usize,
+    /// Fixed prefill length the prefill entry point was lowered for.
+    pub prefill_len: usize,
+    /// Fixed batch the decode entry point was lowered for.
+    pub decode_batch: usize,
+}
+
+impl ModelMeta {
+    /// Parse `key=value` lines.
+    pub fn parse(text: &str) -> Result<ModelMeta> {
+        let get = |k: &str| -> Result<usize> {
+            text.lines()
+                .find_map(|l| l.strip_prefix(&format!("{k}=")))
+                .with_context(|| format!("missing key {k} in model_meta"))?
+                .trim()
+                .parse()
+                .with_context(|| format!("bad value for {k}"))
+        };
+        Ok(ModelMeta {
+            vocab: get("vocab")?,
+            hidden: get("hidden")?,
+            layers: get("layers")?,
+            heads: get("heads")?,
+            kv_heads: get("kv_heads")?,
+            head_dim: get("head_dim")?,
+            intermediate: get("intermediate")?,
+            max_seq: get("max_seq")?,
+            prefill_len: get("prefill_len")?,
+            decode_batch: get("decode_batch")?,
+        })
+    }
+
+    pub fn load(dir: &Path) -> Result<ModelMeta> {
+        let path = dir.join("model_meta.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts` first)"))?;
+        Self::parse(&text)
+    }
+
+    /// KV cache elements per layer:
+    /// `2 (k/v) × batch × max_seq × kv_heads × head_dim`.
+    pub fn kv_elems(&self) -> usize {
+        2 * self.decode_batch * self.max_seq * self.kv_heads * self.head_dim
+    }
+}
+
+/// A compiled model entry point.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+/// The PJRT runtime: client + compiled entry points.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub meta: ModelMeta,
+    pub prefill: Executable,
+    pub decode: Executable,
+}
+
+impl Runtime {
+    /// Load + compile every artifact under `dir`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref();
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let meta = ModelMeta::load(dir)?;
+        let prefill = Self::compile_one(&client, &dir.join("prefill.hlo.txt"))?;
+        let decode = Self::compile_one(&client, &dir.join("decode.hlo.txt"))?;
+        crate::log_info!(
+            "runtime: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Runtime {
+            client,
+            meta,
+            prefill,
+            decode,
+        })
+    }
+
+    fn compile_one(client: &xla::PjRtClient, path: &PathBuf) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path:?}"))?;
+        Ok(Executable {
+            exe,
+            name: path
+                .file_stem()
+                .and_then(|s| s.to_str())
+                .unwrap_or("model")
+                .to_string(),
+        })
+    }
+
+    /// Execute an entry point, returning every output buffer flattened to
+    /// `Vec<f32>`. The lowered computations return a tuple
+    /// `(logits, kv_cache)` — see `aot.py`.
+    pub fn execute(&self, exe: &Executable, inputs: &[xla::Literal]) -> Result<Vec<Vec<f32>>> {
+        let result = exe
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", exe.name))?;
+        let mut literal = result[0][0]
+            .to_literal_sync()
+            .context("fetching result buffer")?;
+        let tuple = literal.decompose_tuple().context("decomposing tuple")?;
+        tuple
+            .into_iter()
+            .map(|l| {
+                let l = l
+                    .convert(xla::PrimitiveType::F32)
+                    .context("converting output to f32")?;
+                l.to_vec::<f32>().context("reading output buffer")
+            })
+            .collect()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+}
+
+/// Build an f32 literal of `shape` from data.
+pub fn literal_f32(data: &[f32], shape: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = shape.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "shape/data mismatch");
+    Ok(xla::Literal::vec1(data).reshape(shape)?)
+}
+
+/// Build an i32 literal of `shape` from data.
+pub fn literal_i32(data: &[i32], shape: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = shape.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "shape/data mismatch");
+    Ok(xla::Literal::vec1(data).reshape(shape)?)
+}
+
+/// Greedy argmax over a logits row.
+pub fn argmax(logits: &[f32]) -> usize {
+    logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meta_parses_and_derives() {
+        let text = "vocab=256\nhidden=64\nlayers=2\nheads=4\nkv_heads=2\nhead_dim=16\nintermediate=128\nmax_seq=64\nprefill_len=16\ndecode_batch=2\n";
+        let m = ModelMeta::parse(text).unwrap();
+        assert_eq!(m.vocab, 256);
+        assert_eq!(m.kv_elems(), 2 * 2 * 64 * 2 * 16);
+    }
+
+    #[test]
+    fn meta_missing_key_errors() {
+        assert!(ModelMeta::parse("vocab=256\n").is_err());
+    }
+
+    #[test]
+    fn argmax_picks_peak() {
+        assert_eq!(argmax(&[0.1, 3.0, -2.0, 2.9]), 1);
+        assert_eq!(argmax(&[]), 0);
+    }
+
+    #[test]
+    fn literal_shape_mismatch_rejected() {
+        assert!(literal_f32(&[1.0, 2.0], &[3]).is_err());
+        assert!(literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).is_ok());
+    }
+
+    // Runtime::load is exercised by `rust/tests/runtime_e2e.rs` (needs
+    // `make artifacts`).
+}

@@ -1,0 +1,193 @@
+//! Serving metrics: TTFT, TBT, end-to-end latency, throughput, SLO
+//! attainment — the quantities every figure in §5.5 reports.
+
+use crate::util::stats::Summary;
+use crate::util::units::{cycles_to_secs, Cycle};
+
+/// Lifecycle timestamps of one completed request (in simulated cycles).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RequestRecord {
+    pub id: u64,
+    pub arrival: Cycle,
+    /// First output token produced (end of prefill).
+    pub first_token: Cycle,
+    /// Last output token produced.
+    pub finish: Cycle,
+    pub input_tokens: u64,
+    pub output_tokens: u64,
+}
+
+impl RequestRecord {
+    /// Time To First Token, cycles.
+    pub fn ttft(&self) -> Cycle {
+        self.first_token.saturating_sub(self.arrival)
+    }
+
+    /// Mean Time Between Tokens, cycles (0 for single-token outputs).
+    pub fn tbt(&self) -> f64 {
+        if self.output_tokens <= 1 {
+            return 0.0;
+        }
+        (self.finish - self.first_token) as f64 / (self.output_tokens - 1) as f64
+    }
+
+    /// End-to-end latency, cycles.
+    pub fn e2e(&self) -> Cycle {
+        self.finish.saturating_sub(self.arrival)
+    }
+}
+
+/// Aggregated metrics over a serving run.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    records: Vec<RequestRecord>,
+    freq_mhz: f64,
+}
+
+impl Metrics {
+    pub fn new(freq_mhz: f64) -> Self {
+        Metrics {
+            records: Vec::new(),
+            freq_mhz,
+        }
+    }
+
+    pub fn record(&mut self, r: RequestRecord) {
+        debug_assert!(r.first_token >= r.arrival && r.finish >= r.first_token, "{r:?}");
+        self.records.push(r);
+    }
+
+    pub fn n_requests(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn records(&self) -> &[RequestRecord] {
+        &self.records
+    }
+
+    /// Makespan: last finish cycle.
+    pub fn makespan(&self) -> Cycle {
+        self.records.iter().map(|r| r.finish).max().unwrap_or(0)
+    }
+
+    /// TTFT distribution in seconds.
+    pub fn ttft_s(&self) -> Summary {
+        Summary::from_samples(
+            self.records
+                .iter()
+                .map(|r| cycles_to_secs(r.ttft(), self.freq_mhz)),
+        )
+    }
+
+    /// TBT distribution in seconds.
+    pub fn tbt_s(&self) -> Summary {
+        Summary::from_samples(
+            self.records
+                .iter()
+                .filter(|r| r.output_tokens > 1)
+                .map(|r| r.tbt() / (self.freq_mhz * 1e6)),
+        )
+    }
+
+    /// End-to-end latency distribution in seconds.
+    pub fn e2e_s(&self) -> Summary {
+        Summary::from_samples(
+            self.records
+                .iter()
+                .map(|r| cycles_to_secs(r.e2e(), self.freq_mhz)),
+        )
+    }
+
+    /// Output-token throughput over the makespan, tokens/s.
+    pub fn tokens_per_s(&self) -> f64 {
+        let tokens: u64 = self.records.iter().map(|r| r.output_tokens).sum();
+        let span = cycles_to_secs(self.makespan(), self.freq_mhz);
+        if span <= 0.0 {
+            return 0.0;
+        }
+        tokens as f64 / span
+    }
+
+    /// Completed requests per second.
+    pub fn requests_per_s(&self) -> f64 {
+        let span = cycles_to_secs(self.makespan(), self.freq_mhz);
+        if span <= 0.0 {
+            return 0.0;
+        }
+        self.records.len() as f64 / span
+    }
+
+    /// Fraction of requests meeting both SLO targets (seconds).
+    pub fn slo_attainment(&self, ttft_target_s: f64, tbt_target_s: f64) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        let ok = self
+            .records
+            .iter()
+            .filter(|r| {
+                cycles_to_secs(r.ttft(), self.freq_mhz) <= ttft_target_s
+                    && r.tbt() / (self.freq_mhz * 1e6) <= tbt_target_s
+            })
+            .count();
+        ok as f64 / self.records.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(id: u64, arrival: Cycle, first: Cycle, finish: Cycle, out: u64) -> RequestRecord {
+        RequestRecord {
+            id,
+            arrival,
+            first_token: first,
+            finish,
+            input_tokens: 100,
+            output_tokens: out,
+        }
+    }
+
+    #[test]
+    fn per_request_derivations() {
+        let r = rec(1, 1000, 3000, 13_000, 11);
+        assert_eq!(r.ttft(), 2000);
+        assert_eq!(r.e2e(), 12_000);
+        assert!((r.tbt() - 1000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_token_tbt_is_zero() {
+        assert_eq!(rec(1, 0, 10, 10, 1).tbt(), 0.0);
+    }
+
+    #[test]
+    fn aggregate_conversions() {
+        let mut m = Metrics::new(500.0); // 5e8 cycles/s
+        m.record(rec(1, 0, 5_000_000, 255_000_000, 51)); // ttft 10ms, tbt 10ms
+        m.record(rec(2, 0, 10_000_000, 260_000_000, 51));
+        assert_eq!(m.n_requests(), 2);
+        assert!((m.ttft_s().mean() - 0.015).abs() < 1e-9);
+        assert!((m.tbt_s().mean() - 0.01).abs() < 1e-9);
+        // 102 tokens over 0.52 s.
+        assert!((m.tokens_per_s() - 102.0 / 0.52).abs() < 1e-6);
+    }
+
+    #[test]
+    fn slo_attainment_counts() {
+        let mut m = Metrics::new(500.0);
+        m.record(rec(1, 0, 5_000_000, 255_000_000, 51)); // ttft 10ms tbt 10ms
+        m.record(rec(2, 0, 500_000_000, 600_000_000, 2)); // ttft 1s
+        assert!((m.slo_attainment(0.1, 0.5) - 0.5).abs() < 1e-9);
+        assert!((m.slo_attainment(2.0, 0.5) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_metrics_safe() {
+        let m = Metrics::new(500.0);
+        assert_eq!(m.tokens_per_s(), 0.0);
+        assert_eq!(m.slo_attainment(1.0, 1.0), 0.0);
+        assert_eq!(m.makespan(), 0);
+    }
+}

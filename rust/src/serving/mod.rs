@@ -1,0 +1,28 @@
+//! The LLM serving framework (§4): streaming requests, iteration-level
+//! scheduling, PD fusion and PD disaggregation, and serving metrics.
+//!
+//! - [`request`]: synthetic trace generation (ShareGPT / Mooncake-like
+//!   marginals, Poisson / bursty arrivals).
+//! - [`layout`]: carving the chip mesh into pipeline stages of TP groups.
+//! - [`worker`]: one placed TP group with its SRAM plan and KV cache.
+//! - [`pd_fusion`]: chunked-prefill budget scheduler co-locating prefill
+//!   and decode on every pipeline (§4.3.2).
+//! - [`pd_disagg`]: dedicated prefill pipelines + decode groups with
+//!   NoC KV transfer and optional heterogeneous decode cores (§4.3.1).
+//! - [`metrics`]: TTFT / TBT / e2e / throughput / SLO attainment.
+
+pub mod layout;
+pub mod metrics;
+pub mod pd_disagg;
+pub mod pd_fusion;
+pub mod request;
+pub mod trace;
+pub mod worker;
+
+pub use layout::PipelineLayout;
+pub use metrics::{Metrics, RequestRecord};
+pub use pd_disagg::{simulate_disagg, DisaggConfig};
+pub use pd_fusion::{simulate_fusion, FusionConfig};
+pub use request::Request;
+pub use trace::{load_jsonl, parse_jsonl};
+pub use worker::StageWorker;

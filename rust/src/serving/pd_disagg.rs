@@ -1,0 +1,499 @@
+//! PD disaggregation (§4.3.1): dedicated prefill pipelines and decode
+//! groups, with KV-cache transfer between them over the NoC.
+//!
+//! Prefill cores run pipeline-parallel stages (prompts stream in without
+//! waiting); decode cores run tensor-parallel groups over all layers
+//! (autoregression tolerates no pipeline bubbles). The placement policy
+//! (Fig. 6) decides where each lives — the paper's PP-prioritized layout
+//! puts prefill at the chip edges and decode in the center to shorten and
+//! de-contend the KV-transfer paths. Heterogeneous chips override the
+//! decode cores' hardware (narrower systolic arrays, fatter HBM — §4.3.1).
+
+use crate::config::{ModelConfig, WorkloadConfig};
+use crate::model::{BatchItem, IterBatch};
+use crate::parallel::partition::PartitionStrategy;
+use crate::parallel::pd_placement::{assign, PdAssignment, PdPlacementPolicy};
+use crate::serving::metrics::{Metrics, RequestRecord};
+use crate::serving::request::{self, Request};
+use crate::serving::worker::StageWorker;
+use crate::sim::chip::ChipSim;
+use crate::sim::tracer::OpClass;
+use crate::util::units::{secs_to_cycles, Cycle};
+use std::collections::VecDeque;
+
+/// PD-disaggregation serving configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct DisaggConfig {
+    pub n_prefill: usize,
+    pub n_decode: usize,
+    /// TP degree of each prefill pipeline stage.
+    pub prefill_tp: usize,
+    /// Pipeline stages per prefill pipeline.
+    pub prefill_stages: usize,
+    /// TP degree of each decode group (each group runs all layers).
+    pub decode_tp: usize,
+    pub policy: PdPlacementPolicy,
+    /// Partition for the prefill GEMMs (long sequences → AllGather/2-D).
+    pub prefill_strategy: PartitionStrategy,
+    /// Partition for the decode GEMVs (M=batch is small → AllReduce).
+    pub decode_strategy: PartitionStrategy,
+    /// Max concurrent decode requests per group.
+    pub max_decode_batch: usize,
+    pub kv_share: f64,
+}
+
+impl DisaggConfig {
+    /// The paper's balanced optimum on the 64-core chip: P42/D21 at TP 7
+    /// (Fig. 11's "superior overall performance" configuration).
+    pub fn p42_d21() -> Self {
+        DisaggConfig {
+            n_prefill: 42,
+            n_decode: 21,
+            prefill_tp: 7,
+            prefill_stages: 3,
+            decode_tp: 7,
+            policy: PdPlacementPolicy::PpPrioritized,
+            prefill_strategy: PartitionStrategy::OneDimMN,
+            decode_strategy: PartitionStrategy::OneDimK,
+            max_decode_batch: 32,
+            kv_share: 0.6,
+        }
+    }
+
+    /// A `P<p>/D<d>` ratio preset on the 64-core chip (Fig. 11 sweep).
+    pub fn ratio_64(n_prefill: usize, n_decode: usize, prefill_stages: usize) -> Self {
+        DisaggConfig {
+            n_prefill,
+            n_decode,
+            prefill_stages,
+            ..Self::p42_d21()
+        }
+    }
+}
+
+impl Default for DisaggConfig {
+    fn default() -> Self {
+        Self::p42_d21()
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct DecodeReq {
+    req: Request,
+    first_token: Cycle,
+    generated: u64,
+    ready_at: Cycle,
+}
+
+struct DecodeGroup {
+    worker: StageWorker,
+    /// Transferred but not yet admitted to the KV cache.
+    pending: VecDeque<DecodeReq>,
+    active: Vec<DecodeReq>,
+}
+
+impl DecodeGroup {
+    fn load(&self) -> usize {
+        self.pending.len() + self.active.len()
+    }
+
+    fn next_action(&self, chip: &ChipSim) -> Option<Cycle> {
+        let now = self.worker.now(chip);
+        let pending = self.pending.front().map(|r| r.ready_at);
+        let active = self
+            .active
+            .iter()
+            .filter(|a| a.generated < a.req.output_len as u64)
+            .map(|a| a.ready_at)
+            .min();
+        match (pending, active) {
+            (None, None) => None,
+            (a, b) => Some(now.max(a.unwrap_or(Cycle::MAX).min(b.unwrap_or(Cycle::MAX)))),
+        }
+    }
+}
+
+/// Simulate a full workload under PD disaggregation.
+pub fn simulate_disagg(
+    chip: &mut ChipSim,
+    model: &ModelConfig,
+    workload: &WorkloadConfig,
+    cfg: &DisaggConfig,
+) -> anyhow::Result<Metrics> {
+    simulate_disagg_requests(chip, model, request::generate(workload), cfg)
+}
+
+/// Like [`simulate_disagg`] but over an explicit request list (trace
+/// replay — see [`crate::serving::trace`]). Requests must be sorted by
+/// arrival time.
+pub fn simulate_disagg_requests(
+    chip: &mut ChipSim,
+    model: &ModelConfig,
+    reqs: Vec<Request>,
+    cfg: &DisaggConfig,
+) -> anyhow::Result<Metrics> {
+    let a: PdAssignment = assign(
+        chip.cfg.rows,
+        chip.cfg.cols,
+        cfg.n_prefill,
+        cfg.n_decode,
+        cfg.prefill_tp,
+        cfg.prefill_stages,
+        cfg.decode_tp,
+        cfg.policy,
+    )?;
+
+    // Heterogeneous decode cores (Fig. 12): apply the chip's decode-core
+    // override to every decode coordinate.
+    let decode_core = chip.cfg.decode_core();
+    if chip.cfg.decode_core.is_some() {
+        for g in &a.decode_groups {
+            for &c in &g.coords {
+                chip.set_core_config(c, decode_core);
+            }
+        }
+    }
+
+    let layers = model.layers;
+    let lps = {
+        let base = layers / cfg.prefill_stages;
+        let extra = layers % cfg.prefill_stages;
+        (0..cfg.prefill_stages)
+            .map(|s| base + usize::from(s < extra))
+            .collect::<Vec<_>>()
+    };
+    let core = chip.cfg.core;
+    let mut queue: VecDeque<Request> = reqs.into();
+    let max_tokens = queue
+        .iter()
+        .map(|r| r.total_tokens())
+        .max()
+        .unwrap_or(1);
+    let mut pipelines: Vec<Vec<StageWorker>> = a
+        .prefill_pipelines
+        .iter()
+        .map(|stages| {
+            stages
+                .iter()
+                .enumerate()
+                .map(|(s, g)| {
+                    StageWorker::new(
+                        &core,
+                        model,
+                        g.clone(),
+                        cfg.prefill_strategy,
+                        lps[s].max(1),
+                        s + 1 == stages.len(),
+                        2048,
+                        cfg.kv_share,
+                        max_tokens,
+                    )
+                })
+                .collect()
+        })
+        .collect();
+    let mut groups: Vec<DecodeGroup> = a
+        .decode_groups
+        .iter()
+        .map(|g| DecodeGroup {
+            worker: StageWorker::new(
+                &decode_core,
+                model,
+                g.clone(),
+                cfg.decode_strategy,
+                layers,
+                true,
+                cfg.max_decode_batch,
+                cfg.kv_share,
+                max_tokens,
+            ),
+            pending: VecDeque::new(),
+            active: Vec::new(),
+        })
+        .collect();
+
+    let freq = chip.cfg.freq_mhz;
+    let total = queue.len();
+    let mut metrics = Metrics::new(freq);
+    let mut done = 0usize;
+    let mut guard = 0u64;
+
+    while done < total {
+        guard += 1;
+        anyhow::ensure!(
+            guard < 4_000_000,
+            "disagg scheduler livelock: {done}/{total} done"
+        );
+        // Earliest actionable prefill (any pipeline, next queued request).
+        let prefill_action: Option<(usize, Cycle)> = if queue.is_empty() {
+            None
+        } else {
+            let arrival = secs_to_cycles(queue.front().unwrap().arrival_s, freq);
+            pipelines
+                .iter()
+                .enumerate()
+                .map(|(i, p)| (i, p[0].now(chip).max(arrival)))
+                .min_by_key(|&(_, t)| t)
+        };
+        // Earliest actionable decode tick.
+        let decode_action: Option<(usize, Cycle)> = groups
+            .iter()
+            .enumerate()
+            .filter_map(|(i, g)| g.next_action(chip).map(|t| (i, t)))
+            .min_by_key(|&(_, t)| t);
+
+        match (prefill_action, decode_action) {
+            (Some((pi, tp_)), Some((_, td))) if tp_ <= td => {
+                done += run_prefill(
+                    chip, model, cfg, &mut pipelines[pi], &mut queue, &mut groups, &mut metrics,
+                    freq,
+                )?;
+            }
+            (Some((pi, _)), None) => {
+                done += run_prefill(
+                    chip, model, cfg, &mut pipelines[pi], &mut queue, &mut groups, &mut metrics,
+                    freq,
+                )?;
+            }
+            (_, Some((gi, t))) => {
+                done += decode_tick(chip, model, cfg, &mut groups[gi], t, &mut metrics, freq);
+            }
+            (None, None) => anyhow::bail!("deadlock: {done}/{total} requests done"),
+        }
+    }
+    Ok(metrics)
+}
+
+/// Run one whole prompt through a prefill pipeline, then transfer its KV to
+/// the least-loaded decode group. Returns completions (requests whose
+/// output is a single token finish at prefill).
+#[allow(clippy::too_many_arguments)]
+fn run_prefill(
+    chip: &mut ChipSim,
+    model: &ModelConfig,
+    cfg: &DisaggConfig,
+    pipeline: &mut [StageWorker],
+    queue: &mut VecDeque<Request>,
+    groups: &mut [DecodeGroup],
+    metrics: &mut Metrics,
+    freq: f64,
+) -> anyhow::Result<usize> {
+    let r = queue.pop_front().expect("caller checked");
+    let arrival = secs_to_cycles(r.arrival_s, freq);
+    pipeline[0].advance_to(chip, arrival);
+
+    for s in pipeline.iter_mut() {
+        s.admit(r.id);
+    }
+    let batch = IterBatch::new(vec![BatchItem::prefill(
+        r.id,
+        r.input_len as u64,
+        r.input_len as u64,
+    )]);
+    let mut finish = 0;
+    for s in 0..pipeline.len() {
+        finish = pipeline[s].run(chip, model, &batch);
+        if s + 1 < pipeline.len() {
+            let bytes = r.input_len as u64 * model.hidden as u64 * model.dtype_bytes;
+            let src = pipeline[s].group.coords[0];
+            let dst = pipeline[s + 1].group.coords[0];
+            let t = chip.send(src, dst, bytes, OpClass::P2P);
+            finish = finish.max(t.finish);
+        }
+    }
+    let first_token = finish;
+
+    if r.output_len <= 1 {
+        for s in pipeline.iter_mut() {
+            s.release(r.id);
+        }
+        metrics.record(RequestRecord {
+            id: r.id,
+            arrival,
+            first_token,
+            finish,
+            input_tokens: r.input_len as u64,
+            output_tokens: 1,
+        });
+        return Ok(1);
+    }
+
+    // KV transfer to the least-loaded decode group: every prefill core
+    // streams its KV shard to a decode core (PP-prioritized placement keeps
+    // these paths short and off the pipeline's own columns).
+    let gi = groups
+        .iter()
+        .enumerate()
+        .min_by_key(|(_, g)| g.load())
+        .map(|(i, _)| i)
+        .ok_or_else(|| anyhow::anyhow!("no decode groups"))?;
+    let total_kv = r.input_len as u64 * model.kv_bytes_per_token(); // whole model
+    let mut ready_at = finish;
+    let dst_coords = groups[gi].worker.group.coords.clone();
+    let n_layers: usize = pipeline.iter().map(|s| s.exec.layers).sum();
+    let mut di = 0usize;
+    for stage in pipeline.iter() {
+        let stage_kv = total_kv * stage.exec.layers as u64 / n_layers.max(1) as u64;
+        let per_core = stage_kv / stage.group.coords.len().max(1) as u64;
+        for &src in &stage.group.coords {
+            let dst = dst_coords[di % dst_coords.len()];
+            di += 1;
+            let t = chip.send(src, dst, per_core, OpClass::KvTransfer);
+            ready_at = ready_at.max(t.finish);
+        }
+    }
+    for s in pipeline.iter_mut() {
+        s.release(r.id);
+    }
+    groups[gi].pending.push_back(DecodeReq {
+        req: r,
+        first_token,
+        generated: 1,
+        ready_at,
+    });
+    let _ = cfg;
+    Ok(0)
+}
+
+/// One continuous-batching decode iteration on one group.
+fn decode_tick(
+    chip: &mut ChipSim,
+    model: &ModelConfig,
+    cfg: &DisaggConfig,
+    group: &mut DecodeGroup,
+    t: Cycle,
+    metrics: &mut Metrics,
+    freq: f64,
+) -> usize {
+    group.worker.advance_to(chip, t);
+    let now = group.worker.now(chip);
+
+    // Admit transferred requests (their prefill KV is appended on arrival).
+    while let Some(front) = group.pending.front() {
+        if front.ready_at > now
+            || group.active.len() >= cfg.max_decode_batch
+            || !group.worker.can_admit()
+        {
+            break;
+        }
+        let r = group.pending.pop_front().unwrap();
+        group.worker.admit(r.req.id);
+        group.worker.kv.append(r.req.id, r.req.input_len as u64);
+        group.active.push(r);
+    }
+
+    let items: Vec<BatchItem> = group
+        .active
+        .iter()
+        .filter(|a| a.generated < a.req.output_len as u64 && a.ready_at <= now)
+        .map(|a| BatchItem::decode(a.req.id, a.req.input_len as u64 + a.generated))
+        .collect();
+    if items.is_empty() {
+        return 0;
+    }
+    let ids: Vec<u64> = items.iter().map(|i| i.request).collect();
+    let finish = group.worker.run(chip, model, &IterBatch::new(items));
+
+    let mut completions = 0;
+    for a in &mut group.active {
+        if ids.contains(&a.req.id) {
+            a.generated += 1;
+            a.ready_at = finish;
+        }
+    }
+    let mut i = 0;
+    while i < group.active.len() {
+        if group.active[i].generated >= group.active[i].req.output_len as u64 {
+            let a = group.active.swap_remove(i);
+            group.worker.release(a.req.id);
+            metrics.record(RequestRecord {
+                id: a.req.id,
+                arrival: secs_to_cycles(a.req.arrival_s, freq),
+                first_token: a.first_token,
+                finish,
+                input_tokens: a.req.input_len as u64,
+                output_tokens: a.req.output_len as u64,
+            });
+            completions += 1;
+        } else {
+            i += 1;
+        }
+    }
+    completions
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ChipConfig;
+
+    fn run(workload: &WorkloadConfig, cfg: &DisaggConfig) -> Metrics {
+        let mut chip = ChipSim::new(ChipConfig::large_core());
+        let model = ModelConfig::qwen3_4b();
+        simulate_disagg(&mut chip, &model, workload, cfg).unwrap()
+    }
+
+    #[test]
+    fn completes_all_requests() {
+        let w = WorkloadConfig::fixed_ratio(256, 16, 8);
+        let m = run(&w, &DisaggConfig::default());
+        assert_eq!(m.n_requests(), 8);
+    }
+
+    #[test]
+    fn record_invariants_hold() {
+        let w = WorkloadConfig::fixed_ratio(128, 32, 6);
+        let m = run(&w, &DisaggConfig::default());
+        for r in m.records() {
+            assert!(r.first_token >= r.arrival);
+            assert!(r.finish >= r.first_token);
+            assert_eq!(r.output_tokens, 32);
+        }
+    }
+
+    #[test]
+    fn single_token_outputs_finish_at_prefill() {
+        let w = WorkloadConfig::fixed_ratio(128, 1, 4);
+        let m = run(&w, &DisaggConfig::default());
+        for r in m.records() {
+            assert_eq!(r.first_token, r.finish);
+        }
+    }
+
+    #[test]
+    fn more_prefill_cores_cut_ttft() {
+        // Fig. 11: increasing prefill cores consistently reduces TTFT.
+        let w = WorkloadConfig::fixed_ratio(1000, 16, 8);
+        let p21 = run(&w, &DisaggConfig::ratio_64(21, 42, 3));
+        let p49 = run(&w, &DisaggConfig::ratio_64(49, 14, 7));
+        assert!(
+            p49.ttft_s().mean() < p21.ttft_s().mean(),
+            "P49 {} vs P21 {}",
+            p49.ttft_s().mean(),
+            p21.ttft_s().mean()
+        );
+    }
+
+    #[test]
+    fn kv_transfer_traffic_recorded() {
+        let w = WorkloadConfig::fixed_ratio(512, 8, 2);
+        let mut chip = ChipSim::new(ChipConfig::large_core());
+        let model = ModelConfig::qwen3_4b();
+        simulate_disagg(&mut chip, &model, &w, &DisaggConfig::default()).unwrap();
+        assert!(chip.aggregate_tracer().cycles(OpClass::KvTransfer) > 0);
+    }
+
+    #[test]
+    fn heterogeneous_decode_cores_applied() {
+        let mut decode = ChipConfig::large_core().core;
+        decode.sa_dim = 32;
+        decode.hbm_bw_gbps = 480.0;
+        let mut chip = ChipSim::new(ChipConfig::large_core().with_decode_core(decode));
+        let model = ModelConfig::qwen3_4b();
+        let w = WorkloadConfig::fixed_ratio(128, 8, 2);
+        simulate_disagg(&mut chip, &model, &w, &DisaggConfig::default()).unwrap();
+        // Center (decode) cores must carry the override.
+        let any_decode = chip.core(crate::sim::noc::Coord::new(0, 3));
+        assert_eq!(any_decode.cfg.sa_dim, 32);
+    }
+}

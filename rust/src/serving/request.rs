@@ -1,0 +1,122 @@
+//! Streaming request generation from a [`WorkloadConfig`] (§3.2's
+//! "streaming request inputs"): synthetic traces whose prompt/output length
+//! marginals and arrival processes match the ShareGPT / Mooncake
+//! characteristics the paper references (see DESIGN.md "Substitutions").
+
+use crate::config::{ArrivalProcess, WorkloadConfig};
+use crate::util::rng::Rng;
+
+/// One serving request of the trace.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Request {
+    pub id: u64,
+    /// Arrival time in seconds from trace start.
+    pub arrival_s: f64,
+    /// Prompt length in tokens.
+    pub input_len: usize,
+    /// Generation length in tokens.
+    pub output_len: usize,
+}
+
+impl Request {
+    pub fn total_tokens(&self) -> usize {
+        self.input_len + self.output_len
+    }
+}
+
+/// Generate the full trace for a workload (sorted by arrival time).
+pub fn generate(w: &WorkloadConfig) -> Vec<Request> {
+    let mut rng = Rng::new(w.seed);
+    let mut out = Vec::with_capacity(w.n_requests);
+    let mut t = 0.0f64;
+    let mut since_burst = 0.0f64;
+    for id in 0..w.n_requests as u64 {
+        let arrival_s = match w.arrival {
+            ArrivalProcess::Batch => 0.0,
+            ArrivalProcess::Poisson { rate } => {
+                t += rng.exponential(rate);
+                t
+            }
+            ArrivalProcess::Bursty {
+                rate,
+                burst_size,
+                period_s,
+            } => {
+                // Poisson baseline with `burst_size` back-to-back arrivals
+                // every `period_s` seconds.
+                let in_burst = id as usize % (burst_size.max(1)) != 0;
+                if in_burst {
+                    t
+                } else {
+                    t += rng.exponential(rate);
+                    since_burst += t;
+                    if since_burst >= period_s {
+                        since_burst = 0.0;
+                    }
+                    t
+                }
+            }
+        };
+        out.push(Request {
+            id,
+            arrival_s,
+            input_len: w.input_len.sample(&mut rng).max(1),
+            output_len: w.output_len.sample(&mut rng).max(1),
+        });
+    }
+    out.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{LenDist, WorkloadConfig};
+
+    #[test]
+    fn deterministic_for_seed() {
+        let w = WorkloadConfig::sharegpt_like(32);
+        assert_eq!(generate(&w), generate(&w));
+        let w2 = w.clone().with_seed(7);
+        assert_ne!(generate(&w), generate(&w2));
+    }
+
+    #[test]
+    fn batch_arrivals_all_at_zero() {
+        let w = WorkloadConfig::fixed_ratio(100, 100, 16);
+        let reqs = generate(&w);
+        assert!(reqs.iter().all(|r| r.arrival_s == 0.0));
+        assert!(reqs.iter().all(|r| r.input_len == 100 && r.output_len == 100));
+    }
+
+    #[test]
+    fn poisson_arrivals_monotone_and_spread() {
+        let w = WorkloadConfig::decode_dominated(64);
+        let reqs = generate(&w);
+        for pair in reqs.windows(2) {
+            assert!(pair[0].arrival_s <= pair[1].arrival_s);
+        }
+        let span = reqs.last().unwrap().arrival_s;
+        // 64 requests at 4 req/s ≈ 16 s span.
+        assert!(span > 5.0 && span < 50.0, "span={span}");
+    }
+
+    #[test]
+    fn lengths_respect_distribution_bounds() {
+        let mut w = WorkloadConfig::prefill_dominated(256);
+        w.input_len = LenDist::Uniform(100, 200);
+        let reqs = generate(&w);
+        assert!(reqs.iter().all(|r| (100..=200).contains(&r.input_len)));
+    }
+
+    #[test]
+    fn bursty_produces_coincident_arrivals() {
+        let w = WorkloadConfig::mooncake_like(64);
+        let reqs = generate(&w);
+        let coincident = reqs
+            .windows(2)
+            .filter(|p| p[0].arrival_s == p[1].arrival_s)
+            .count();
+        assert!(coincident > 10, "bursts should co-arrive: {coincident}");
+    }
+}

@@ -1,0 +1,178 @@
+//! A placed worker: one TP group with its execution config, SRAM plan and
+//! KV cache — the unit both PD-fusion pipelines and PD-disaggregation
+//! prefill/decode groups are assembled from.
+
+use crate::config::{ChipConfig, CoreConfig, ModelConfig};
+use crate::memmgr::planner::{plan, PlanRequest};
+use crate::memmgr::KvCache;
+use crate::model::exec::{group_now, run_iteration, ExecConfig};
+use crate::model::IterBatch;
+use crate::parallel::partition::PartitionStrategy;
+use crate::parallel::placement::TpGroup;
+use crate::sim::chip::ChipSim;
+use crate::util::units::Cycle;
+
+/// One TP group ready to execute iterations.
+#[derive(Debug)]
+pub struct StageWorker {
+    pub group: TpGroup,
+    pub exec: ExecConfig,
+    pub plan: crate::memmgr::SramPlan,
+    pub kv: KvCache,
+}
+
+impl StageWorker {
+    /// Build a worker for `layers` of `model` on `group`.
+    ///
+    /// * `core`: the hardware resources of this group's cores (decode
+    ///   workers pass the heterogeneous decode-core config).
+    /// * `iter_tokens`: planning token budget per iteration.
+    /// * `kv_share`: SRAM remainder split (see [`PlanRequest`]).
+    /// * `max_tokens`: longest request (prompt + output) this worker must
+    ///   hold KV for — sizes the per-request HBM reservation, so admission
+    ///   control reflects the actual workload rather than `max_context`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        core: &CoreConfig,
+        model: &ModelConfig,
+        group: TpGroup,
+        strategy: PartitionStrategy,
+        layers: usize,
+        with_logits: bool,
+        iter_tokens: usize,
+        kv_share: f64,
+        max_tokens: usize,
+    ) -> Self {
+        let tp = group.len().max(1);
+        let p = plan(
+            core,
+            model,
+            &PlanRequest {
+                layers,
+                tp,
+                iter_tokens,
+                kv_share,
+            },
+        );
+        // Per-core KV bytes/token for this group's layer+head shard.
+        let bpt = (model.kv_bytes_per_token_layer() * layers as u64 / tp as u64).max(1);
+        // HBM left for KV after the streamed weight shard.
+        let hbm_kv = core.hbm_bytes.saturating_sub(p.weight_hbm_bytes);
+        let kv = KvCache::new(
+            p.kv_bytes,
+            16, // tokens per SRAM block (fine granularity)
+            hbm_kv,
+            bpt,
+            (max_tokens.max(1)).min(model.max_context) as u64,
+        );
+        StageWorker {
+            group,
+            exec: ExecConfig::new(strategy, layers, with_logits),
+            plan: p,
+            kv,
+        }
+    }
+
+    /// Whether another request fits this worker's KV capacity.
+    pub fn can_admit(&self) -> bool {
+        self.kv.can_admit()
+    }
+
+    pub fn admit(&mut self, request: u64) -> bool {
+        self.kv.admit(request)
+    }
+
+    pub fn release(&mut self, request: u64) {
+        self.kv.release(request);
+    }
+
+    /// This worker's current clock.
+    pub fn now(&self, chip: &ChipSim) -> Cycle {
+        group_now(chip, &self.group)
+    }
+
+    /// Advance the whole group to at least `t` (idle wait).
+    pub fn advance_to(&self, chip: &mut ChipSim, t: Cycle) {
+        for &c in &self.group.coords {
+            chip.core_mut(c).advance_to(t);
+        }
+    }
+
+    /// Execute one iteration; returns the finish cycle.
+    pub fn run(&mut self, chip: &mut ChipSim, model: &ModelConfig, batch: &IterBatch) -> Cycle {
+        run_iteration(
+            chip,
+            &self.group,
+            model,
+            &self.plan,
+            &self.exec,
+            batch,
+            &mut self.kv,
+        )
+    }
+
+    /// Activation bytes handed to the next pipeline stage for a batch of
+    /// `q_tokens` (one hidden-state row per token).
+    pub fn handoff_bytes(&self, chip_cfg: &ChipConfig, model: &ModelConfig, q_tokens: u64) -> u64 {
+        let _ = chip_cfg;
+        q_tokens * model.hidden as u64 * model.dtype_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ChipConfig;
+    use crate::model::BatchItem;
+    use crate::parallel::placement::{Placement, Region};
+
+    fn worker(chip: &ChipSim) -> StageWorker {
+        let model = ModelConfig::qwen3_4b();
+        let group = TpGroup::place(Region::new(0, 0, 2, 2), Placement::Ring);
+        StageWorker::new(
+            &chip.cfg.core,
+            &model,
+            group,
+            PartitionStrategy::OneDimK,
+            4,
+            true,
+            512,
+            0.5,
+            2048,
+        )
+    }
+
+    #[test]
+    fn worker_runs_iterations() {
+        let mut chip = ChipSim::new(ChipConfig::large_core());
+        let model = ModelConfig::qwen3_4b();
+        let mut w = worker(&chip);
+        assert!(w.admit(1));
+        let b = IterBatch::new(vec![BatchItem::prefill(1, 256, 256)]);
+        let t = w.run(&mut chip, &model, &b);
+        assert!(t > 0);
+        assert_eq!(w.now(&chip), t);
+        // Decode step continues from there.
+        let b2 = IterBatch::new(vec![BatchItem::decode(1, 257)]);
+        let t2 = w.run(&mut chip, &model, &b2);
+        assert!(t2 > t);
+    }
+
+    #[test]
+    fn admit_release_cycle() {
+        let chip = ChipSim::new(ChipConfig::large_core());
+        let mut w = worker(&chip);
+        assert!(w.can_admit());
+        assert!(w.admit(7));
+        w.release(7);
+        assert!(w.can_admit());
+    }
+
+    #[test]
+    fn advance_to_is_idle_wait() {
+        let mut chip = ChipSim::new(ChipConfig::large_core());
+        let w = worker(&chip);
+        w.advance_to(&mut chip, 12345);
+        assert_eq!(w.now(&chip), 12345);
+    }
+}

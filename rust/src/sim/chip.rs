@@ -1,0 +1,175 @@
+//! Whole-chip simulation state: the mesh of [`CoreSim`]s plus the shared
+//! NoC, with helpers for cross-core transfers and clock synchronisation.
+
+use crate::config::{ChipConfig, CoreConfig};
+use crate::sim::core::CoreSim;
+use crate::sim::noc::{Coord, Mesh, Transfer};
+use crate::sim::tracer::{OpClass, Tracer};
+use crate::util::units::Cycle;
+
+/// The simulated chip.
+#[derive(Debug)]
+pub struct ChipSim {
+    pub cfg: ChipConfig,
+    cores: Vec<CoreSim>,
+    pub mesh: Mesh,
+}
+
+impl ChipSim {
+    /// Build a homogeneous chip from `cfg` (decode-core overrides are
+    /// applied per-core later via [`ChipSim::set_core_config`]).
+    pub fn new(cfg: ChipConfig) -> Self {
+        let mesh = Mesh::new(&cfg);
+        let mut cores = Vec::with_capacity(cfg.n_cores());
+        for r in 0..cfg.rows {
+            for c in 0..cfg.cols {
+                cores.push(CoreSim::new(&cfg, Coord::new(r, c), cfg.core));
+            }
+        }
+        ChipSim { cfg, cores, mesh }
+    }
+
+    fn index(&self, c: Coord) -> usize {
+        debug_assert!(c.row < self.cfg.rows && c.col < self.cfg.cols);
+        c.row * self.cfg.cols + c.col
+    }
+
+    pub fn core(&self, c: Coord) -> &CoreSim {
+        &self.cores[self.index(c)]
+    }
+
+    pub fn core_mut(&mut self, c: Coord) -> &mut CoreSim {
+        let i = self.index(c);
+        &mut self.cores[i]
+    }
+
+    pub fn cores(&self) -> &[CoreSim] {
+        &self.cores
+    }
+
+    /// Replace the hardware resources of one core (heterogeneous
+    /// PD-disaggregation: decode cores get different SA/HBM provisioning).
+    pub fn set_core_config(&mut self, at: Coord, core_cfg: CoreConfig) {
+        let i = self.index(at);
+        let now = self.cores[i].now();
+        let mut fresh = CoreSim::new(&self.cfg, at, core_cfg);
+        fresh.advance_to(now);
+        self.cores[i] = fresh;
+    }
+
+    /// Point-to-point transfer: waits for the source core, moves the bytes
+    /// over the NoC, and advances the destination core to the arrival time.
+    pub fn send(&mut self, src: Coord, dst: Coord, bytes: u64, class: OpClass) -> Transfer {
+        let depart = self.core(src).now();
+        let t = self.mesh.transfer(src, dst, bytes, depart);
+        let si = self.index(src);
+        // Sender is busy until its tail flit leaves (channel locked).
+        self.cores[si].tracer.record(class, t.finish - depart);
+        self.cores[si].advance_to(t.finish);
+        let di = self.index(dst);
+        self.cores[di].advance_to(t.finish);
+        t
+    }
+
+    /// Synchronise a group of cores to their max clock (barrier semantics
+    /// at the end of a collective or pipeline handoff).
+    pub fn sync(&mut self, group: &[Coord]) -> Cycle {
+        let t = group
+            .iter()
+            .map(|&c| self.core(c).now())
+            .max()
+            .unwrap_or(0);
+        for &c in group {
+            self.core_mut(c).advance_to(t);
+        }
+        t
+    }
+
+    /// Max clock across all cores (end-to-end makespan).
+    pub fn makespan(&self) -> Cycle {
+        self.cores.iter().map(|c| c.now()).max().unwrap_or(0)
+    }
+
+    /// Aggregate tracer across all cores.
+    pub fn aggregate_tracer(&self) -> Tracer {
+        let mut t = Tracer::new();
+        for c in &self.cores {
+            t.merge(&c.tracer);
+        }
+        t
+    }
+
+    /// Wall-clock seconds represented by `cycles` on this chip.
+    pub fn cycles_to_secs(&self, cycles: Cycle) -> f64 {
+        crate::util::units::cycles_to_secs(cycles, self.cfg.freq_mhz)
+    }
+
+    pub fn reset(&mut self) {
+        for c in &mut self.cores {
+            c.reset();
+        }
+        self.mesh.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_and_index() {
+        let chip = ChipSim::new(ChipConfig::large_core());
+        assert_eq!(chip.cores().len(), 64);
+        assert_eq!(chip.core(Coord::new(3, 5)).coord, Coord::new(3, 5));
+    }
+
+    #[test]
+    fn send_advances_both_clocks() {
+        let mut chip = ChipSim::new(ChipConfig::large_core());
+        chip.core_mut(Coord::new(0, 0)).advance_to(100);
+        let t = chip.send(Coord::new(0, 0), Coord::new(0, 2), 2560, OpClass::P2P);
+        assert_eq!(t.start, 100);
+        assert_eq!(chip.core(Coord::new(0, 0)).now(), t.finish);
+        assert_eq!(chip.core(Coord::new(0, 2)).now(), t.finish);
+    }
+
+    #[test]
+    fn sync_raises_all_to_max() {
+        let mut chip = ChipSim::new(ChipConfig::large_core());
+        let g = [Coord::new(0, 0), Coord::new(1, 0), Coord::new(2, 0)];
+        chip.core_mut(g[1]).advance_to(500);
+        let t = chip.sync(&g);
+        assert_eq!(t, 500);
+        for c in g {
+            assert_eq!(chip.core(c).now(), 500);
+        }
+    }
+
+    #[test]
+    fn heterogeneous_core_override() {
+        let mut chip = ChipSim::new(ChipConfig::large_core());
+        let mut decode = chip.cfg.core;
+        decode.sa_dim = 32;
+        decode.hbm_bw_gbps = 480.0;
+        chip.set_core_config(Coord::new(7, 7), decode);
+        assert_eq!(chip.core(Coord::new(7, 7)).cfg.sa_dim, 32);
+        assert_eq!(chip.core(Coord::new(0, 0)).cfg.sa_dim, 128);
+    }
+
+    #[test]
+    fn makespan_is_max_clock() {
+        let mut chip = ChipSim::new(ChipConfig::large_core());
+        chip.core_mut(Coord::new(4, 4)).advance_to(9999);
+        assert_eq!(chip.makespan(), 9999);
+    }
+
+    #[test]
+    fn reset_zeroes_everything() {
+        let mut chip = ChipSim::new(ChipConfig::large_core());
+        chip.core_mut(Coord::new(0, 0)).advance_to(100);
+        chip.send(Coord::new(0, 0), Coord::new(0, 1), 1000, OpClass::P2P);
+        chip.reset();
+        assert_eq!(chip.makespan(), 0);
+        assert_eq!(chip.mesh.stats().transfers, 0);
+    }
+}

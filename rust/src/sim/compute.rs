@@ -1,0 +1,229 @@
+//! Operator performance models (§3.1 "computing system").
+//!
+//! Compute latency on a systolic array is deterministic given shapes, so it
+//! is modeled analytically: for a GEMM the weight matrix is tiled into
+//! `sa_dim × sa_dim` tiles (last tiles padded) and
+//!
+//! ```text
+//! T_comp = N_tiles × T_cycles + T_inject
+//! ```
+//!
+//! where `T_cycles = M + sa_dim` (stream M activation rows through the
+//! array + pipeline drain) and `T_inject = sa_dim` (initial weight
+//! injection; subsequent tiles double-buffer their injection behind the
+//! previous tile's streaming). The result is lower-bounded by the SRAM
+//! bandwidth roofline. Vector operators (norms, softmax, RoPE, residuals)
+//! run on the `lanes × 64` ALU vector unit.
+
+use crate::config::{ChipConfig, CoreConfig};
+use crate::util::units::{ceil_div, Cycle};
+
+/// Where the GEMM weights stream from (affects the roofline only; HBM
+/// prefetch latency is simulated by the core executor via the TLM channel).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WeightSource {
+    Sram,
+    Hbm,
+}
+
+/// GEMM/GEMV latency for `[m,k] × [k,n]`.
+///
+/// The operator is dispatched to the better-suited unit — the systolic
+/// array (tile pipeline: `N_tiles × (M + sa) + sa`) or the vector unit
+/// (`2·M·K·N / peak_ops`; a skinny GEMV cannot amortise systolic weight
+/// injection, so real NPU cores run it on the vector lanes — this is the
+/// premise of §4.3.1's heterogeneous decode cores, whose systolic arrays
+/// shrink "with minimal impact" on decode). The result is lower-bounded
+/// by the SRAM-bandwidth roofline.
+pub fn matmul_cycles(chip: &ChipConfig, core: &CoreConfig, m: u64, k: u64, n: u64) -> Cycle {
+    if m == 0 || k == 0 || n == 0 {
+        return 0;
+    }
+    let sa = core.sa_dim;
+    let n_tiles = ceil_div(k, sa) * ceil_div(n, sa);
+    let t_cycles = m + sa; // stream M rows + drain
+    let t_inject = sa;
+    let systolic = n_tiles * t_cycles + t_inject;
+
+    // Vector-unit path (MAC = 2 ALU ops).
+    let vector = ceil_div(2 * m * k * n, core.peak_vector_ops_per_cycle()).max(1);
+
+    // SRAM roofline: weights + activations read, outputs written.
+    let dtype = chip.dtype_bytes;
+    let bytes = (m * k + k * n + m * n) * dtype;
+    let sram = (bytes as f64 / core.sram_bytes_per_cycle(chip.freq_mhz)).ceil() as Cycle;
+
+    systolic.min(vector).max(sram)
+}
+
+/// GEMV (`m = 1`) — decode-stage projections. On a systolic array a GEMV
+/// cannot amortise weight injection across rows, which is exactly why the
+/// paper provisions decode cores with narrower arrays + more memory
+/// bandwidth (§4.3.1 heterogeneous core design).
+pub fn gemv_cycles(chip: &ChipConfig, core: &CoreConfig, k: u64, n: u64) -> Cycle {
+    matmul_cycles(chip, core, 1, k, n)
+}
+
+/// Elementwise vector op over `elems` elements, `passes` read-modify-write
+/// passes (e.g. residual add = 1, RMSNorm ≈ 2: reduce + scale).
+pub fn vector_cycles(core: &CoreConfig, elems: u64, passes: u64) -> Cycle {
+    if elems == 0 {
+        return 0;
+    }
+    ceil_div(elems * passes, core.peak_vector_ops_per_cycle()).max(1)
+}
+
+/// Softmax over `rows` rows of `cols` elements: max-reduce, exp+sum, scale
+/// ≈ 3 passes (exp costed as ~4 ALU ops).
+pub fn softmax_cycles(core: &CoreConfig, rows: u64, cols: u64) -> Cycle {
+    vector_cycles(core, rows * cols, 6)
+}
+
+/// RMSNorm over `tokens` rows of `hidden`: square+sum, rsqrt, scale.
+pub fn rmsnorm_cycles(core: &CoreConfig, tokens: u64, hidden: u64) -> Cycle {
+    vector_cycles(core, tokens * hidden, 3)
+}
+
+/// Rotary position embedding over `tokens × dim`.
+pub fn rope_cycles(core: &CoreConfig, tokens: u64, dim: u64) -> Cycle {
+    vector_cycles(core, tokens * dim, 4)
+}
+
+/// SwiGLU activation (`silu(gate) * up`) over `tokens × intermediate`.
+pub fn swiglu_cycles(core: &CoreConfig, tokens: u64, intermediate: u64) -> Cycle {
+    vector_cycles(core, tokens * intermediate, 5)
+}
+
+/// Attention score+context for one head group on one core:
+/// `scores = Q·Kᵀ` (`[q_tokens, head_dim] × [head_dim, kv_tokens]`),
+/// softmax, `out = P·V` (`[q_tokens, kv_tokens] × [kv_tokens, head_dim]`).
+pub fn attention_cycles(
+    chip: &ChipConfig,
+    core: &CoreConfig,
+    heads: u64,
+    q_tokens: u64,
+    kv_tokens: u64,
+    head_dim: u64,
+) -> Cycle {
+    if heads == 0 || q_tokens == 0 || kv_tokens == 0 {
+        return 0;
+    }
+    let qk = matmul_cycles(chip, core, q_tokens, head_dim, kv_tokens);
+    let sm = softmax_cycles(core, q_tokens, kv_tokens);
+    let pv = matmul_cycles(chip, core, q_tokens, kv_tokens, head_dim);
+    heads * (qk + sm + pv)
+}
+
+/// FLOPs of a `[m,k]×[k,n]` GEMM (for utilization reporting).
+pub fn matmul_flops(m: u64, k: u64, n: u64) -> u64 {
+    2 * m * k * n
+}
+
+/// Achieved MAC utilization of the systolic model for a GEMM (diagnostic).
+pub fn matmul_utilization(chip: &ChipConfig, core: &CoreConfig, m: u64, k: u64, n: u64) -> f64 {
+    let cycles = matmul_cycles(chip, core, m, k, n);
+    if cycles == 0 {
+        return 0.0;
+    }
+    let ideal = matmul_flops(m, k, n) as f64 / (2.0 * core.peak_macs_per_cycle() as f64);
+    ideal / cycles as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ChipConfig;
+
+    fn chip() -> ChipConfig {
+        ChipConfig::large_core() // sa=128, lanes=128
+    }
+
+    #[test]
+    fn matmul_matches_formula_when_compute_bound() {
+        let c = chip();
+        // 512x512x512 with sa=128: tiles = 4*4 = 16, t_cycles = 512+128,
+        // inject 128 => 16*640+128 = 10368. SRAM roofline: 3*512²*2 B
+        // at 512 B/cyc = 3072 cycles < systolic.
+        assert_eq!(matmul_cycles(&c, &c.core, 512, 512, 512), 16 * 640 + 128);
+    }
+
+    #[test]
+    fn matmul_ragged_shapes_pad_up() {
+        let c = chip();
+        // k=129 needs 2 tile rows (m large enough that the systolic path,
+        // not the vector unit, is chosen).
+        let a = matmul_cycles(&c, &c.core, 1024, 129, 128);
+        let b = matmul_cycles(&c, &c.core, 1024, 128, 128);
+        assert_eq!(a, 2 * b - 128); // 2 tiles vs 1 tile, shared inject
+    }
+
+    #[test]
+    fn gemv_is_mxu_inefficient() {
+        // A GEMV achieves far lower systolic utilization than a big GEMM
+        // (it runs on the vector unit instead, but the array would idle).
+        let c = chip();
+        let util = matmul_utilization(&c, &c.core, 1, 4096, 4096);
+        let util_big = matmul_utilization(&c, &c.core, 1024, 4096, 4096);
+        assert!(util < util_big / 2.0, "gemv {util} vs gemm {util_big}");
+        assert!(util_big > 0.5, "large GEMM util should be high: {util_big}");
+    }
+
+    #[test]
+    fn narrower_array_hurts_gemm_but_not_gemv() {
+        // The heterogeneous-decode-core argument (§4.3.1): shrinking
+        // sa_dim slows large GEMMs ~4x but GEMVs dispatch to the vector
+        // unit, so decode-shaped work is unaffected.
+        let c = chip();
+        let mut narrow = c.core;
+        narrow.sa_dim = 64;
+        narrow.sram_bw_gbps_raw = c.core.sram_bw_gbps(c.freq_mhz); // keep feed
+        let gemm_wide = matmul_cycles(&c, &c.core, 1024, 4096, 4096) as f64;
+        let gemm_narrow = matmul_cycles(&c, &narrow, 1024, 4096, 4096) as f64;
+        let gemv_wide = gemv_cycles(&c, &c.core, 4096, 4096) as f64;
+        let gemv_narrow = gemv_cycles(&c, &narrow, 4096, 4096) as f64;
+        assert!(gemm_narrow / gemm_wide > 3.0);
+        assert!(gemv_narrow / gemv_wide < 1.1);
+    }
+
+    #[test]
+    fn zero_shapes_are_free() {
+        let c = chip();
+        assert_eq!(matmul_cycles(&c, &c.core, 0, 128, 128), 0);
+        assert_eq!(vector_cycles(&c.core, 0, 3), 0);
+        assert_eq!(attention_cycles(&c, &c.core, 8, 0, 128, 128), 0);
+    }
+
+    #[test]
+    fn vector_ops_scale_with_lanes() {
+        let c = chip();
+        let mut half = c.core;
+        half.vector_lanes = 64;
+        let full_t = rmsnorm_cycles(&c.core, 128, 4096);
+        let half_t = rmsnorm_cycles(&half, 128, 4096);
+        assert!(half_t >= 2 * full_t - 1);
+    }
+
+    #[test]
+    fn attention_scales_with_context() {
+        let c = chip();
+        let short = attention_cycles(&c, &c.core, 8, 1, 128, 128);
+        let long = attention_cycles(&c, &c.core, 8, 1, 4096, 128);
+        assert!(long > 4 * short, "short={short} long={long}");
+    }
+
+    #[test]
+    fn sram_roofline_binds_when_bandwidth_starved() {
+        // With auto-scaled SRAM bandwidth the array is always fed (the
+        // systolic term binds); explicitly starving the SRAM port makes the
+        // roofline take over.
+        let c = chip();
+        let mut starved = c.core;
+        starved.sram_bw_gbps_raw = 8.0; // 16 B/cycle @ 500 MHz
+        let (m, k, n) = (512u64, 512, 512);
+        let cycles = matmul_cycles(&c, &starved, m, k, n);
+        let bytes = (m * k + k * n + m * n) * 2;
+        let roofline = (bytes as f64 / 16.0).ceil() as u64;
+        assert_eq!(cycles, roofline);
+        assert!(cycles > matmul_cycles(&c, &c.core, m, k, n));
+    }
+}

@@ -1,0 +1,8 @@
+//! The memory sub-system: transaction-level HBM channels and SRAM
+//! scratchpad bandwidth modeling (§3.1 "memory system").
+
+mod hbm;
+mod sram;
+
+pub use hbm::{HbmChannel, HbmStats, TlmPhases};
+pub use sram::SramPort;

@@ -1,0 +1,82 @@
+//! SRAM scratchpad port model.
+//!
+//! Compute operators account for their own SRAM traffic analytically inside
+//! the roofline of [`crate::sim::compute`]; this port models the *shared*
+//! traffic that competes with compute — DMA spills to HBM and NoC
+//! send/receive staging — as a bandwidth timeline.
+
+use crate::config::{ChipConfig, CoreConfig};
+use crate::sim::engine::Timeline;
+use crate::util::units::Cycle;
+
+/// One core's SRAM port for DMA/NoC staging traffic.
+#[derive(Debug)]
+pub struct SramPort {
+    timeline: Timeline,
+    bytes_per_cycle: f64,
+    capacity: u64,
+}
+
+impl SramPort {
+    pub fn new(chip: &ChipConfig, core: &CoreConfig) -> Self {
+        SramPort {
+            timeline: Timeline::new(),
+            bytes_per_cycle: core.sram_bytes_per_cycle(chip.freq_mhz),
+            capacity: core.sram_bytes,
+        }
+    }
+
+    /// Move `bytes` through the port starting no earlier than `earliest`;
+    /// returns completion cycle.
+    pub fn transfer(&mut self, earliest: Cycle, bytes: u64) -> Cycle {
+        if bytes == 0 {
+            return earliest;
+        }
+        let cycles = (bytes as f64 / self.bytes_per_cycle).ceil().max(1.0) as Cycle;
+        let start = self.timeline.reserve(earliest, cycles);
+        start + cycles
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    pub fn busy_cycles(&self) -> Cycle {
+        self.timeline.busy_cycles()
+    }
+
+    pub fn reset(&mut self) {
+        self.timeline.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ChipConfig;
+
+    #[test]
+    fn transfer_time_matches_bandwidth() {
+        let chip = ChipConfig::large_core();
+        let mut p = SramPort::new(&chip, &chip.core);
+        // 256 GB/s @ 500 MHz = 512 B/cycle; 5120 bytes -> 10 cycles.
+        assert_eq!(p.transfer(0, 5120), 10);
+    }
+
+    #[test]
+    fn transfers_serialize() {
+        let chip = ChipConfig::large_core();
+        let mut p = SramPort::new(&chip, &chip.core);
+        let t1 = p.transfer(0, 5120);
+        let t2 = p.transfer(0, 5120);
+        assert_eq!(t2, t1 + 10);
+    }
+
+    #[test]
+    fn zero_bytes_noop() {
+        let chip = ChipConfig::large_core();
+        let mut p = SramPort::new(&chip, &chip.core);
+        assert_eq!(p.transfer(7, 0), 7);
+        assert_eq!(p.busy_cycles(), 0);
+    }
+}

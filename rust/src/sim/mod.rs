@@ -1,0 +1,33 @@
+//! NpuSim — the multi-level simulation framework (§3 of the paper).
+//!
+//! Three sub-systems at three fidelity levels:
+//!
+//! - [`compute`]: **performance models** for operators. Compute latency is
+//!   deterministic given shapes, so an analytic model is accurate (the
+//!   paper measures ≤3% error on compute-bound workloads).
+//! - [`memory`]: **transaction-level modeling** of HBM — four-phase
+//!   (BeginReq/EndReq/BeginResp/EndResp) transactions over banked channels
+//!   with a bounded outstanding window and out-of-order completion — plus a
+//!   `Fast` analytic mode for the Fig. 7-right accuracy/speed comparison.
+//! - [`noc`]: **cycle-accurate (link-reservation) routing** — XY routing on
+//!   a 2D mesh with handshake path setup and channel locking. Once a path
+//!   is locked one flit moves per cycle, so the full transfer can be
+//!   modeled as a busy interval on every traversed link without a per-flit
+//!   loop (this is the paper's own argument for why cycle-accurate routing
+//!   does not dominate simulation time).
+//!
+//! [`engine`] provides the event queue / resource timelines shared by all
+//! three; [`core`] and [`chip`] assemble them into NPU cores on a mesh;
+//! [`tracer`] collects utilization and phase statistics.
+
+pub mod chip;
+pub mod compute;
+pub mod core;
+pub mod engine;
+pub mod memory;
+pub mod noc;
+pub mod tracer;
+
+pub use chip::ChipSim;
+pub use core::CoreSim;
+pub use engine::{EventQueue, Timeline};

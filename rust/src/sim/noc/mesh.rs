@@ -1,0 +1,354 @@
+//! 2D-mesh NoC model with XY routing and channel locking.
+//!
+//! The paper's router is cycle-accurate with a handshake mechanism: a path
+//! is first established hop by hop (router arbitration), and once the
+//! handshake completes the channel is *locked* and one flit moves per
+//! cycle. Because the locked path streams deterministically, the whole
+//! transfer can be represented as a busy interval on every traversed link —
+//! latency and contention are cycle-accurate without a per-flit loop
+//! (the paper makes the same observation to keep routing simulation fast).
+//!
+//! Deadlock freedom: links along a path are acquired in a single global
+//! order (ascending link index). Combined with XY routing (which is itself
+//! deadlock-free in a mesh) this prevents circular waits even when
+//! collectives issue many simultaneous transfers. This channel-locking
+//! mechanism is also what penalises WaferLLM's interleaved placement in
+//! §5.4 — two-hop logical-neighbour transfers hold two links for the whole
+//! transfer duration.
+
+use crate::config::{ChipConfig, NocSimMode};
+use crate::sim::engine::Timeline;
+use crate::util::units::Cycle;
+
+/// Physical core coordinate on the mesh.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Coord {
+    pub row: usize,
+    pub col: usize,
+}
+
+impl Coord {
+    pub fn new(row: usize, col: usize) -> Self {
+        Coord { row, col }
+    }
+
+    /// Manhattan distance (number of mesh hops under XY routing).
+    pub fn hops_to(&self, other: Coord) -> usize {
+        self.row.abs_diff(other.row) + self.col.abs_diff(other.col)
+    }
+}
+
+/// Outgoing link direction from a core.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    North,
+    East,
+    South,
+    West,
+}
+
+/// Result of one simulated transfer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Transfer {
+    /// When the transfer was issued.
+    pub issued: Cycle,
+    /// When the path lock was granted (== issued if uncontended).
+    pub start: Cycle,
+    /// When the last flit arrived at the destination.
+    pub finish: Cycle,
+    /// Mesh hops traversed.
+    pub hops: usize,
+}
+
+impl Transfer {
+    /// Cycles spent waiting on busy links.
+    pub fn waited(&self) -> Cycle {
+        self.start - self.issued
+    }
+}
+
+/// Aggregate NoC statistics.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NocStats {
+    pub transfers: u64,
+    pub bytes: u64,
+    pub total_hops: u64,
+    /// Total cycles transfers waited for locked channels.
+    pub contention: Cycle,
+}
+
+/// The mesh: per-directional-link busy timelines.
+#[derive(Debug)]
+pub struct Mesh {
+    rows: usize,
+    cols: usize,
+    mode: NocSimMode,
+    router_latency: Cycle,
+    /// `1 / link_bytes_per_cycle` (hot-path division hoist — §Perf opt 1).
+    inv_link_bytes_per_cycle: f64,
+    /// `links[core_id * 4 + dir]` = outgoing link timeline.
+    links: Vec<Timeline>,
+    stats: NocStats,
+    /// Scratch buffer for path link ids (avoids per-transfer allocation).
+    path_buf: Vec<usize>,
+}
+
+impl Mesh {
+    pub fn new(chip: &ChipConfig) -> Self {
+        Mesh {
+            rows: chip.rows,
+            cols: chip.cols,
+            mode: chip.noc.mode,
+            router_latency: chip.noc.router_latency,
+            inv_link_bytes_per_cycle: 1.0 / chip.noc.link_bytes_per_cycle(chip.freq_mhz),
+            links: vec![Timeline::new(); chip.rows * chip.cols * 4],
+            stats: NocStats::default(),
+            path_buf: Vec::with_capacity(chip.rows + chip.cols),
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    fn core_id(&self, c: Coord) -> usize {
+        debug_assert!(c.row < self.rows && c.col < self.cols, "coord {c:?} off-mesh");
+        c.row * self.cols + c.col
+    }
+
+    fn link_id(&self, from: Coord, dir: Direction) -> usize {
+        self.core_id(from) * 4
+            + match dir {
+                Direction::North => 0,
+                Direction::East => 1,
+                Direction::South => 2,
+                Direction::West => 3,
+            }
+    }
+
+    /// Build the XY route from `src` to `dst` into `out` (link ids in
+    /// traversal order).
+    fn route_into(&self, src: Coord, dst: Coord, out: &mut Vec<usize>) {
+        out.clear();
+        let mut cur = src;
+        // X first (columns), then Y (rows).
+        while cur.col != dst.col {
+            let dir = if dst.col > cur.col {
+                Direction::East
+            } else {
+                Direction::West
+            };
+            out.push(self.link_id(cur, dir));
+            cur.col = if dst.col > cur.col { cur.col + 1 } else { cur.col - 1 };
+        }
+        while cur.row != dst.row {
+            let dir = if dst.row > cur.row {
+                Direction::South
+            } else {
+                Direction::North
+            };
+            out.push(self.link_id(cur, dir));
+            cur.row = if dst.row > cur.row { cur.row + 1 } else { cur.row - 1 };
+        }
+    }
+
+    /// Serialization cycles for `bytes` on one locked channel.
+    fn ser_cycles(&self, bytes: u64) -> Cycle {
+        let x = bytes as f64 * self.inv_link_bytes_per_cycle;
+        let t = x as Cycle;
+        (t + u64::from((t as f64) < x)).max(1)
+    }
+
+    /// Simulate one point-to-point transfer issued at `earliest`.
+    pub fn transfer(&mut self, src: Coord, dst: Coord, bytes: u64, earliest: Cycle) -> Transfer {
+        let hops = src.hops_to(dst);
+        if hops == 0 || bytes == 0 {
+            return Transfer {
+                issued: earliest,
+                start: earliest,
+                finish: earliest,
+                hops: 0,
+            };
+        }
+        self.stats.transfers += 1;
+        self.stats.bytes += bytes;
+        self.stats.total_hops += hops as u64;
+
+        let setup = self.router_latency * hops as Cycle;
+        let ser = self.ser_cycles(bytes);
+
+        match self.mode {
+            NocSimMode::Fast => Transfer {
+                issued: earliest,
+                start: earliest,
+                finish: earliest + setup + ser,
+                hops,
+            },
+            NocSimMode::Detailed => {
+                // Handshake: the path is acquired link by link in global
+                // link-id order (deadlock freedom); the channel is locked
+                // from the granted start until the tail flit clears.
+                let mut path = std::mem::take(&mut self.path_buf);
+                self.route_into(src, dst, &mut path);
+                // Lock start: all links must be simultaneously free.
+                let mut start = earliest;
+                // Ordered acquisition: examine links in ascending id.
+                path.sort_unstable();
+                for &l in &path {
+                    start = start.max(self.links[l].probe(start));
+                }
+                let hold = setup + ser;
+                for &l in &path {
+                    self.links[l].reserve_at(start, hold);
+                }
+                self.path_buf = path;
+                self.stats.contention += start - earliest;
+                Transfer {
+                    issued: earliest,
+                    start,
+                    finish: start + hold,
+                    hops,
+                }
+            }
+        }
+    }
+
+    /// Analytic (uncontended) latency for `bytes` over `hops` hops — used
+    /// by planners that need a cost estimate without mutating link state.
+    pub fn estimate(&self, hops: usize, bytes: u64) -> Cycle {
+        if hops == 0 || bytes == 0 {
+            return 0;
+        }
+        self.router_latency * hops as Cycle + self.ser_cycles(bytes)
+    }
+
+    pub fn stats(&self) -> NocStats {
+        self.stats
+    }
+
+    /// Peak per-link busy cycles (hotspot detection in reports).
+    pub fn max_link_busy(&self) -> Cycle {
+        self.links.iter().map(|l| l.busy_cycles()).max().unwrap_or(0)
+    }
+
+    /// Sum of busy cycles over all links.
+    pub fn total_link_busy(&self) -> Cycle {
+        self.links.iter().map(|l| l.busy_cycles()).sum()
+    }
+
+    pub fn reset(&mut self) {
+        for l in &mut self.links {
+            l.reset();
+        }
+        self.stats = NocStats::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ChipConfig, NocSimMode};
+
+    fn mesh(mode: NocSimMode) -> Mesh {
+        let mut chip = ChipConfig::large_core(); // 8x8, 128 GB/s links @500MHz = 256 B/cyc
+        chip.noc.mode = mode;
+        Mesh::new(&chip)
+    }
+
+    #[test]
+    fn xy_route_lengths() {
+        let m = mesh(NocSimMode::Detailed);
+        assert_eq!(Coord::new(0, 0).hops_to(Coord::new(0, 3)), 3);
+        assert_eq!(Coord::new(2, 1).hops_to(Coord::new(5, 4)), 6);
+        let mut path = Vec::new();
+        m.route_into(Coord::new(2, 1), Coord::new(5, 4), &mut path);
+        assert_eq!(path.len(), 6);
+    }
+
+    #[test]
+    fn uncontended_latency_is_setup_plus_serialization() {
+        let mut m = mesh(NocSimMode::Detailed);
+        // 2560 bytes over 256 B/cycle = 10 cycles; 2 hops × 2 = 4 setup.
+        let t = m.transfer(Coord::new(0, 0), Coord::new(0, 2), 2560, 100);
+        assert_eq!(t.start, 100);
+        assert_eq!(t.finish, 100 + 4 + 10);
+        assert_eq!(t.hops, 2);
+        assert_eq!(t.waited(), 0);
+    }
+
+    #[test]
+    fn fast_mode_matches_uncontended_detailed() {
+        let mut md = mesh(NocSimMode::Detailed);
+        let mut mf = mesh(NocSimMode::Fast);
+        let a = md.transfer(Coord::new(1, 1), Coord::new(3, 4), 10_000, 0);
+        let b = mf.transfer(Coord::new(1, 1), Coord::new(3, 4), 10_000, 0);
+        assert_eq!(a.finish, b.finish);
+    }
+
+    #[test]
+    fn overlapping_paths_contend_in_detailed_mode() {
+        let mut m = mesh(NocSimMode::Detailed);
+        // Both transfers cross link (0,0)->(0,1).
+        let t1 = m.transfer(Coord::new(0, 0), Coord::new(0, 4), 25_600, 0);
+        let t2 = m.transfer(Coord::new(0, 0), Coord::new(0, 4), 25_600, 0);
+        assert!(t2.start >= t1.finish, "second must wait for channel unlock");
+        assert!(m.stats().contention > 0);
+    }
+
+    #[test]
+    fn disjoint_paths_do_not_contend() {
+        let mut m = mesh(NocSimMode::Detailed);
+        let t1 = m.transfer(Coord::new(0, 0), Coord::new(0, 1), 25_600, 0);
+        let t2 = m.transfer(Coord::new(3, 0), Coord::new(3, 1), 25_600, 0);
+        assert_eq!(t1.start, 0);
+        assert_eq!(t2.start, 0);
+        assert_eq!(m.stats().contention, 0);
+    }
+
+    #[test]
+    fn fast_mode_ignores_contention() {
+        let mut m = mesh(NocSimMode::Fast);
+        let t1 = m.transfer(Coord::new(0, 0), Coord::new(0, 4), 25_600, 0);
+        let t2 = m.transfer(Coord::new(0, 0), Coord::new(0, 4), 25_600, 0);
+        assert_eq!(t1.finish, t2.finish);
+    }
+
+    #[test]
+    fn self_transfer_is_free() {
+        let mut m = mesh(NocSimMode::Detailed);
+        let t = m.transfer(Coord::new(2, 2), Coord::new(2, 2), 1000, 50);
+        assert_eq!(t.finish, 50);
+        assert_eq!(t.hops, 0);
+        assert_eq!(m.stats().transfers, 0);
+    }
+
+    #[test]
+    fn estimate_matches_uncontended_transfer() {
+        let mut m = mesh(NocSimMode::Detailed);
+        let est = m.estimate(3, 5000);
+        let t = m.transfer(Coord::new(0, 0), Coord::new(0, 3), 5000, 0);
+        assert_eq!(t.finish, est);
+    }
+
+    #[test]
+    fn opposite_directions_are_separate_channels() {
+        let mut m = mesh(NocSimMode::Detailed);
+        // A->B and B->A use different directional links: no contention.
+        let t1 = m.transfer(Coord::new(0, 0), Coord::new(0, 1), 25_600, 0);
+        let t2 = m.transfer(Coord::new(0, 1), Coord::new(0, 0), 25_600, 0);
+        assert_eq!(t1.start, 0);
+        assert_eq!(t2.start, 0);
+    }
+
+    #[test]
+    fn reset_clears_links() {
+        let mut m = mesh(NocSimMode::Detailed);
+        m.transfer(Coord::new(0, 0), Coord::new(0, 4), 25_600, 0);
+        m.reset();
+        let t = m.transfer(Coord::new(0, 0), Coord::new(0, 4), 25_600, 0);
+        assert_eq!(t.start, 0);
+    }
+}

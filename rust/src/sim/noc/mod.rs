@@ -1,0 +1,6 @@
+//! Network-on-chip sub-system (§3.1 "routing system"): XY-routed 2D mesh
+//! with handshake path setup, channel locking, and per-link contention.
+
+mod mesh;
+
+pub use mesh::{Coord, Direction, Mesh, NocStats, Transfer};

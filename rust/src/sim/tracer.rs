@@ -1,0 +1,166 @@
+//! Simulation tracing: per-operator-class cycle accounting used for the
+//! latency-breakdown reports and utilization figures.
+
+use crate::util::units::Cycle;
+
+/// Operator classes tracked by the tracer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpClass {
+    Gemm,
+    Gemv,
+    Attention,
+    Vector,
+    AllGather,
+    AllReduce,
+    P2P,
+    HbmWeight,
+    HbmKv,
+    KvSpill,
+    KvTransfer,
+    Idle,
+}
+
+pub const OP_CLASSES: [OpClass; 12] = [
+    OpClass::Gemm,
+    OpClass::Gemv,
+    OpClass::Attention,
+    OpClass::Vector,
+    OpClass::AllGather,
+    OpClass::AllReduce,
+    OpClass::P2P,
+    OpClass::HbmWeight,
+    OpClass::HbmKv,
+    OpClass::KvSpill,
+    OpClass::KvTransfer,
+    OpClass::Idle,
+];
+
+impl OpClass {
+    fn index(self) -> usize {
+        match self {
+            OpClass::Gemm => 0,
+            OpClass::Gemv => 1,
+            OpClass::Attention => 2,
+            OpClass::Vector => 3,
+            OpClass::AllGather => 4,
+            OpClass::AllReduce => 5,
+            OpClass::P2P => 6,
+            OpClass::HbmWeight => 7,
+            OpClass::HbmKv => 8,
+            OpClass::KvSpill => 9,
+            OpClass::KvTransfer => 10,
+            OpClass::Idle => 11,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            OpClass::Gemm => "gemm",
+            OpClass::Gemv => "gemv",
+            OpClass::Attention => "attention",
+            OpClass::Vector => "vector",
+            OpClass::AllGather => "allgather",
+            OpClass::AllReduce => "allreduce",
+            OpClass::P2P => "p2p",
+            OpClass::HbmWeight => "hbm-weight",
+            OpClass::HbmKv => "hbm-kv",
+            OpClass::KvSpill => "kv-spill",
+            OpClass::KvTransfer => "kv-transfer",
+            OpClass::Idle => "idle",
+        }
+    }
+}
+
+/// Cycle totals per operator class.
+#[derive(Debug, Clone, Default)]
+pub struct Tracer {
+    cycles: [Cycle; 12],
+    counts: [u64; 12],
+}
+
+impl Tracer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, class: OpClass, cycles: Cycle) {
+        let i = class.index();
+        self.cycles[i] += cycles;
+        self.counts[i] += 1;
+    }
+
+    pub fn cycles(&self, class: OpClass) -> Cycle {
+        self.cycles[class.index()]
+    }
+
+    pub fn count(&self, class: OpClass) -> u64 {
+        self.counts[class.index()]
+    }
+
+    pub fn total_cycles(&self) -> Cycle {
+        self.cycles.iter().sum()
+    }
+
+    /// Merge another tracer (aggregating across cores).
+    pub fn merge(&mut self, other: &Tracer) {
+        for i in 0..12 {
+            self.cycles[i] += other.cycles[i];
+            self.counts[i] += other.counts[i];
+        }
+    }
+
+    /// Render a percentage breakdown, descending.
+    pub fn breakdown(&self) -> Vec<(OpClass, Cycle, f64)> {
+        let total = self.total_cycles().max(1) as f64;
+        let mut rows: Vec<(OpClass, Cycle, f64)> = OP_CLASSES
+            .iter()
+            .map(|&c| (c, self.cycles(c), self.cycles(c) as f64 / total * 100.0))
+            .filter(|&(_, cyc, _)| cyc > 0)
+            .collect();
+        rows.sort_by(|a, b| b.1.cmp(&a.1));
+        rows
+    }
+
+    pub fn reset(&mut self) {
+        *self = Self::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_query() {
+        let mut t = Tracer::new();
+        t.record(OpClass::Gemm, 100);
+        t.record(OpClass::Gemm, 50);
+        t.record(OpClass::AllReduce, 30);
+        assert_eq!(t.cycles(OpClass::Gemm), 150);
+        assert_eq!(t.count(OpClass::Gemm), 2);
+        assert_eq!(t.total_cycles(), 180);
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = Tracer::new();
+        a.record(OpClass::Vector, 10);
+        let mut b = Tracer::new();
+        b.record(OpClass::Vector, 20);
+        b.record(OpClass::Idle, 5);
+        a.merge(&b);
+        assert_eq!(a.cycles(OpClass::Vector), 30);
+        assert_eq!(a.cycles(OpClass::Idle), 5);
+    }
+
+    #[test]
+    fn breakdown_sorted_desc_and_filters_zero() {
+        let mut t = Tracer::new();
+        t.record(OpClass::Gemm, 10);
+        t.record(OpClass::AllGather, 90);
+        let rows = t.breakdown();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].0, OpClass::AllGather);
+        assert!((rows[0].2 - 90.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,134 @@
+//! Criterion-like micro/macro benchmark harness (criterion is unavailable
+//! offline). Used by every file in `rust/benches/` via `harness = false`.
+//!
+//! Provides warmup, repeated timed runs, and a mean/std/min/median report in
+//! a stable text format so `cargo bench` output can be diffed across
+//! optimization iterations (EXPERIMENTS.md §Perf).
+
+use super::stats::Summary;
+use std::time::{Duration, Instant};
+
+/// One benchmark group (named section in the output).
+pub struct Bench {
+    name: String,
+    warmup: usize,
+    iters: usize,
+    max_total: Duration,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        Bench {
+            name: name.to_string(),
+            warmup: 1,
+            iters: 5,
+            max_total: Duration::from_secs(60),
+        }
+    }
+
+    /// Number of measured iterations (default 5).
+    pub fn iters(mut self, n: usize) -> Self {
+        self.iters = n.max(1);
+        self
+    }
+
+    /// Number of warmup iterations (default 1).
+    pub fn warmup(mut self, n: usize) -> Self {
+        self.warmup = n;
+        self
+    }
+
+    /// Hard cap on total measured time; stops early once exceeded.
+    pub fn max_total(mut self, d: Duration) -> Self {
+        self.max_total = d;
+        self
+    }
+
+    /// Run a case and print its report line. Returns the summary (seconds).
+    pub fn run<F: FnMut()>(&self, case: &str, mut f: F) -> Summary {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut summary = Summary::new();
+        let started = Instant::now();
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            f();
+            summary.add(t0.elapsed().as_secs_f64());
+            if started.elapsed() > self.max_total {
+                break;
+            }
+        }
+        let mut s = summary.clone();
+        println!(
+            "bench {:<40} {:>12} mean {:>12} min {:>12} median {:>12} std  (n={})",
+            format!("{}/{}", self.name, case),
+            fmt_dur(s.mean()),
+            fmt_dur(s.min()),
+            fmt_dur(s.median()),
+            fmt_dur(s.std()),
+            s.len(),
+        );
+        summary
+    }
+
+    /// Run a case that reports its own scalar metric (e.g. simulated
+    /// latency, throughput) instead of wall time. Prints one stable line.
+    pub fn report_metric(&self, case: &str, value: f64, unit: &str) {
+        println!(
+            "metric {:<40} {value:>14.4} {unit}",
+            format!("{}/{}", self.name, case)
+        );
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+fn fmt_dur(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1}ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2}us", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2}ms", secs * 1e3)
+    } else {
+        format!("{:.3}s", secs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_collects_samples() {
+        let b = Bench::new("test").iters(3).warmup(0);
+        let s = b.run("noop", || {
+            black_box(1 + 1);
+        });
+        assert_eq!(s.len(), 3);
+        assert!(s.mean() >= 0.0);
+    }
+
+    #[test]
+    fn max_total_stops_early() {
+        let b = Bench::new("test")
+            .iters(1000)
+            .warmup(0)
+            .max_total(Duration::from_millis(30));
+        let s = b.run("sleep", || std::thread::sleep(Duration::from_millis(10)));
+        assert!(s.len() < 1000);
+    }
+
+    #[test]
+    fn fmt_dur_ranges() {
+        assert!(fmt_dur(5e-9).ends_with("ns"));
+        assert!(fmt_dur(5e-6).ends_with("us"));
+        assert!(fmt_dur(5e-3).ends_with("ms"));
+        assert!(fmt_dur(5.0).ends_with('s'));
+    }
+}

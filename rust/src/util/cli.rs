@@ -1,0 +1,132 @@
+//! Minimal command-line argument parser (clap substitute).
+//!
+//! Supports the patterns the `npusim` binary and examples need:
+//! `prog <subcommand> [positional...] [--flag] [--key value] [--key=value]`.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: a subcommand, positional args, and `--key value` opts.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping `argv\[0\]`).
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Parse from an explicit iterator (used by tests).
+    pub fn parse(args: impl IntoIterator<Item = String>) -> Self {
+        let mut out = Args::default();
+        let mut iter = args.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|nxt| !nxt.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.opts.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(arg);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    /// `--key value` lookup.
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    /// `--key value` with a default.
+    pub fn opt_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.opt(key).unwrap_or(default)
+    }
+
+    /// Typed option lookup (parses with `FromStr`).
+    pub fn opt_parse<T: std::str::FromStr>(&self, key: &str) -> anyhow::Result<Option<T>> {
+        match self.opt(key) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| anyhow::anyhow!("invalid value for --{key}: {s:?}")),
+        }
+    }
+
+    /// Typed option with default.
+    pub fn opt_parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> anyhow::Result<T> {
+        Ok(self.opt_parse(key)?.unwrap_or(default))
+    }
+
+    /// Bare `--flag` presence.
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key) || self.opts.contains_key(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_positional() {
+        let a = sv(&["experiment", "fig9"]);
+        assert_eq!(a.subcommand.as_deref(), Some("experiment"));
+        assert_eq!(a.positional, vec!["fig9"]);
+    }
+
+    #[test]
+    fn key_value_both_syntaxes() {
+        let a = sv(&["serve", "--model=qwen3_4b", "--tp", "4"]);
+        assert_eq!(a.opt("model"), Some("qwen3_4b"));
+        assert_eq!(a.opt("tp"), Some("4"));
+    }
+
+    #[test]
+    fn flags_without_values() {
+        let a = sv(&["sweep", "--fast", "--csv"]);
+        assert!(a.flag("fast"));
+        assert!(a.flag("csv"));
+        assert!(!a.flag("slow"));
+    }
+
+    #[test]
+    fn typed_parse() {
+        let a = sv(&["x", "--tp", "16", "--ratio", "2.5"]);
+        assert_eq!(a.opt_parse::<usize>("tp").unwrap(), Some(16));
+        assert_eq!(a.opt_parse_or::<f64>("ratio", 1.0).unwrap(), 2.5);
+        assert_eq!(a.opt_parse_or::<u64>("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn typed_parse_error() {
+        let a = sv(&["x", "--tp", "nope"]);
+        assert!(a.opt_parse::<usize>("tp").is_err());
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = sv(&["x", "--fast", "--tp", "4"]);
+        assert!(a.flag("fast"));
+        assert_eq!(a.opt("tp"), Some("4"));
+    }
+}

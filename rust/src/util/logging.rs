@@ -1,0 +1,117 @@
+//! Minimal leveled logger (the `log`/`env_logger` crates' facade without
+//! the dependency). Controlled by the `NPUSIM_LOG` environment variable:
+//! `error|warn|info|debug|trace` (default `warn`).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    fn from_str(s: &str) -> Level {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Level::Error,
+            "warn" | "warning" => Level::Warn,
+            "info" => Level::Info,
+            "debug" => Level::Debug,
+            "trace" => Level::Trace,
+            _ => Level::Warn,
+        }
+    }
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX); // MAX = uninitialised
+static INIT: OnceLock<()> = OnceLock::new();
+
+/// Current log level (lazily read from `NPUSIM_LOG`).
+pub fn level() -> Level {
+    INIT.get_or_init(|| {
+        let lvl = std::env::var("NPUSIM_LOG")
+            .map(|v| Level::from_str(&v))
+            .unwrap_or(Level::Warn);
+        LEVEL.store(lvl as u8, Ordering::Relaxed);
+    });
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Error,
+        1 => Level::Warn,
+        2 => Level::Info,
+        3 => Level::Debug,
+        _ => Level::Trace,
+    }
+}
+
+/// Override the level programmatically (tests, CLI `--verbose`).
+pub fn set_level(lvl: Level) {
+    INIT.get_or_init(|| ());
+    LEVEL.store(lvl as u8, Ordering::Relaxed);
+}
+
+/// Emit a log line if `lvl` is enabled.
+pub fn log(lvl: Level, module: &str, msg: std::fmt::Arguments<'_>) {
+    if lvl <= level() {
+        eprintln!("[{:<5} {module}] {msg}", lvl.tag());
+    }
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Info, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Warn, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Debug, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        assert!(Level::Error < Level::Trace);
+        assert!(Level::Warn < Level::Info);
+    }
+
+    #[test]
+    fn set_level_overrides() {
+        set_level(Level::Debug);
+        assert_eq!(level(), Level::Debug);
+        set_level(Level::Warn);
+        assert_eq!(level(), Level::Warn);
+    }
+
+    #[test]
+    fn from_str_parses() {
+        assert_eq!(Level::from_str("TRACE"), Level::Trace);
+        assert_eq!(Level::from_str("bogus"), Level::Warn);
+    }
+}

@@ -1,0 +1,289 @@
+//! Minimal TOML-subset parser (the `toml` crate is unavailable offline).
+//!
+//! Supports what the config files in `configs/` use:
+//! - `[table]` and `[table.subtable]` headers
+//! - `key = value` with string / integer / float / boolean / array values
+//! - `#` comments, blank lines
+//!
+//! Not supported (and not needed): inline tables, arrays-of-tables,
+//! multi-line strings, datetimes.
+
+use std::collections::BTreeMap;
+use thiserror::Error;
+
+/// A parsed TOML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    /// Floats accept integer literals too (`sram_mb = 32`).
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Parse error with 1-based line number.
+#[derive(Debug, Error)]
+#[error("minitoml parse error at line {line}: {msg}")]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+/// A parsed document: dotted-path keys (`table.key`) to values.
+#[derive(Debug, Clone, Default)]
+pub struct Document {
+    entries: BTreeMap<String, Value>,
+}
+
+impl Document {
+    pub fn parse(text: &str) -> Result<Self, ParseError> {
+        let mut doc = Document::default();
+        let mut prefix = String::new();
+        for (idx, raw) in text.lines().enumerate() {
+            let lineno = idx + 1;
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or_else(|| ParseError {
+                    line: lineno,
+                    msg: "unterminated table header".into(),
+                })?;
+                let name = name.trim();
+                if name.is_empty() {
+                    return Err(ParseError {
+                        line: lineno,
+                        msg: "empty table name".into(),
+                    });
+                }
+                prefix = name.to_string();
+                continue;
+            }
+            let (key, value) = line.split_once('=').ok_or_else(|| ParseError {
+                line: lineno,
+                msg: format!("expected `key = value`, got {line:?}"),
+            })?;
+            let key = key.trim();
+            let value = parse_value(value.trim()).map_err(|msg| ParseError { line: lineno, msg })?;
+            let full = if prefix.is_empty() {
+                key.to_string()
+            } else {
+                format!("{prefix}.{key}")
+            };
+            doc.entries.insert(full, value);
+        }
+        Ok(doc)
+    }
+
+    /// Look up a value by dotted path.
+    pub fn get(&self, path: &str) -> Option<&Value> {
+        self.entries.get(path)
+    }
+
+    pub fn get_str(&self, path: &str) -> Option<&str> {
+        self.get(path).and_then(Value::as_str)
+    }
+    pub fn get_int(&self, path: &str) -> Option<i64> {
+        self.get(path).and_then(Value::as_int)
+    }
+    pub fn get_float(&self, path: &str) -> Option<f64> {
+        self.get(path).and_then(Value::as_float)
+    }
+    pub fn get_bool(&self, path: &str) -> Option<bool> {
+        self.get(path).and_then(Value::as_bool)
+    }
+
+    /// All keys under a table prefix (`prefix.` stripped).
+    pub fn keys_under(&self, prefix: &str) -> Vec<&str> {
+        let pat = format!("{prefix}.");
+        self.entries
+            .keys()
+            .filter_map(|k| k.strip_prefix(&pat))
+            .collect()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A `#` inside a string literal must not start a comment.
+    let mut in_str = false;
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| format!("unterminated string: {s:?}"))?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| format!("unterminated array: {s:?}"))?
+            .trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(vec![]));
+        }
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            items.push(parse_value(part.trim())?);
+        }
+        return Ok(Value::Array(items));
+    }
+    let cleaned = s.replace('_', "");
+    if let Ok(i) = cleaned.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value: {s:?}"))
+}
+
+/// Split an array body on commas that are not nested in strings/brackets.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, ch) in s.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars() {
+        let doc = Document::parse(
+            r#"
+name = "qwen3_4b"   # a comment
+layers = 36
+rope_theta = 1000000.0
+moe = false
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_str("name"), Some("qwen3_4b"));
+        assert_eq!(doc.get_int("layers"), Some(36));
+        assert_eq!(doc.get_float("rope_theta"), Some(1_000_000.0));
+        assert_eq!(doc.get_bool("moe"), Some(false));
+    }
+
+    #[test]
+    fn tables_prefix_keys() {
+        let doc = Document::parse(
+            "[chip]\ncores = 64\n[chip.noc]\nbw_gbps = 128\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get_int("chip.cores"), Some(64));
+        assert_eq!(doc.get_int("chip.noc.bw_gbps"), Some(128));
+    }
+
+    #[test]
+    fn arrays() {
+        let doc = Document::parse("dims = [32, 64, 128]\nnames = [\"a\", \"b\"]\n").unwrap();
+        let dims = doc.get("dims").unwrap().as_array().unwrap();
+        assert_eq!(dims.len(), 3);
+        assert_eq!(dims[2].as_int(), Some(128));
+        let names = doc.get("names").unwrap().as_array().unwrap();
+        assert_eq!(names[1].as_str(), Some("b"));
+    }
+
+    #[test]
+    fn int_accepted_as_float() {
+        let doc = Document::parse("x = 32\n").unwrap();
+        assert_eq!(doc.get_float("x"), Some(32.0));
+    }
+
+    #[test]
+    fn underscores_in_numbers() {
+        let doc = Document::parse("big = 1_000_000\n").unwrap();
+        assert_eq!(doc.get_int("big"), Some(1_000_000));
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = Document::parse("s = \"a#b\"\n").unwrap();
+        assert_eq!(doc.get_str("s"), Some("a#b"));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = Document::parse("ok = 1\nbroken\n").unwrap_err();
+        assert_eq!(err.line, 2);
+    }
+
+    #[test]
+    fn keys_under_lists_table_members() {
+        let doc = Document::parse("[m]\na = 1\nb = 2\n[other]\nc = 3\n").unwrap();
+        let mut keys = doc.keys_under("m");
+        keys.sort();
+        assert_eq!(keys, vec!["a", "b"]);
+    }
+}

@@ -1,0 +1,16 @@
+//! In-tree substrates for functionality that would normally come from
+//! external crates (`rand`, `clap`, `toml`, `proptest`, `criterion`).
+//!
+//! The build environment is fully offline and the vendored crate set only
+//! contains the `xla` dependency closure, so these are implemented from
+//! scratch. Each module is small, tested, and dependency-free.
+
+pub mod bench;
+pub mod cli;
+pub mod logging;
+pub mod minitoml;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod units;

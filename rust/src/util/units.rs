@@ -1,0 +1,105 @@
+//! Unit helpers: cycles ↔ seconds, byte quantities, and human formatting.
+//!
+//! The simulator's native time unit is the NPU core clock **cycle**; all
+//! latency formulas operate in cycles and convert to wall time only at the
+//! reporting boundary via the chip's core frequency.
+
+/// Simulated time in cycles.
+pub type Cycle = u64;
+
+pub const KB: u64 = 1024;
+pub const MB: u64 = 1024 * KB;
+pub const GB: u64 = 1024 * MB;
+
+/// Convert a GB/s bandwidth into bytes/cycle at `freq_mhz`.
+#[inline]
+pub fn gbps_to_bytes_per_cycle(gb_per_s: f64, freq_mhz: f64) -> f64 {
+    // bytes/s / cycles/s
+    (gb_per_s * 1e9) / (freq_mhz * 1e6)
+}
+
+/// Convert cycles to seconds at `freq_mhz`.
+#[inline]
+pub fn cycles_to_secs(cycles: Cycle, freq_mhz: f64) -> f64 {
+    cycles as f64 / (freq_mhz * 1e6)
+}
+
+/// Convert cycles to milliseconds at `freq_mhz`.
+#[inline]
+pub fn cycles_to_ms(cycles: Cycle, freq_mhz: f64) -> f64 {
+    cycles_to_secs(cycles, freq_mhz) * 1e3
+}
+
+/// Convert seconds to cycles at `freq_mhz`.
+#[inline]
+pub fn secs_to_cycles(secs: f64, freq_mhz: f64) -> Cycle {
+    (secs * freq_mhz * 1e6).round() as Cycle
+}
+
+/// Ceiling division for positive integers.
+#[inline]
+pub fn ceil_div(a: u64, b: u64) -> u64 {
+    assert!(b > 0);
+    a.div_ceil(b)
+}
+
+/// Human-readable byte count.
+pub fn fmt_bytes(bytes: u64) -> String {
+    if bytes >= GB {
+        format!("{:.2}GiB", bytes as f64 / GB as f64)
+    } else if bytes >= MB {
+        format!("{:.2}MiB", bytes as f64 / MB as f64)
+    } else if bytes >= KB {
+        format!("{:.1}KiB", bytes as f64 / KB as f64)
+    } else {
+        format!("{bytes}B")
+    }
+}
+
+/// Human-readable cycle count as time at `freq_mhz`.
+pub fn fmt_cycles(cycles: Cycle, freq_mhz: f64) -> String {
+    let s = cycles_to_secs(cycles, freq_mhz);
+    if s < 1e-6 {
+        format!("{:.0}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.3}s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bandwidth_conversion_round_trip() {
+        // 500 MHz, 64 GB/s -> 128 bytes/cycle.
+        let bpc = gbps_to_bytes_per_cycle(64.0, 500.0);
+        assert!((bpc - 128.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cycle_time_round_trip() {
+        let c = secs_to_cycles(0.002, 500.0);
+        assert_eq!(c, 1_000_000);
+        assert!((cycles_to_ms(c, 500.0) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ceil_div_cases() {
+        assert_eq!(ceil_div(10, 5), 2);
+        assert_eq!(ceil_div(11, 5), 3);
+        assert_eq!(ceil_div(0, 5), 0);
+    }
+
+    #[test]
+    fn fmt_bytes_ranges() {
+        assert_eq!(fmt_bytes(512), "512B");
+        assert_eq!(fmt_bytes(2 * KB), "2.0KiB");
+        assert!(fmt_bytes(3 * MB).starts_with("3.00MiB"));
+        assert!(fmt_bytes(5 * GB).starts_with("5.00GiB"));
+    }
+}

@@ -1,0 +1,30 @@
+//! Smoke test: every experiment of the paper regenerates in fast mode and
+//! produces non-empty tables with the expected row structure.
+
+use npusim::experiments::{self, Opts};
+
+#[test]
+fn every_experiment_regenerates_fast() {
+    for id in experiments::ALL {
+        let tables = experiments::run(id, &Opts::fast())
+            .unwrap_or_else(|e| panic!("experiment {id} failed: {e:#}"));
+        assert!(!tables.is_empty(), "{id}: no tables");
+        for t in &tables {
+            assert!(t.n_rows() > 0, "{id}: empty table");
+        }
+    }
+}
+
+#[test]
+fn csvs_written_when_out_dir_given() {
+    let dir = std::env::temp_dir().join(format!("npusim_smoke_{}", std::process::id()));
+    let opts = Opts {
+        fast: true,
+        out_dir: Some(dir.clone()),
+    };
+    experiments::run("table2", &opts).unwrap();
+    assert!(dir.join("table2.csv").exists());
+    let csv = std::fs::read_to_string(dir.join("table2.csv")).unwrap();
+    assert!(csv.lines().count() >= 5, "header + 4 strategies");
+    let _ = std::fs::remove_dir_all(dir);
+}

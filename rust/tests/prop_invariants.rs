@@ -1,0 +1,126 @@
+//! Randomized cross-stack invariants: whatever the workload, chip shape
+//! and scheduler configuration, the serving engines must preserve these.
+
+use npusim::config::{ArrivalProcess, ChipConfig, LenDist, ModelConfig, WorkloadConfig};
+use npusim::serving::pd_disagg::{simulate_disagg, DisaggConfig};
+use npusim::serving::pd_fusion::{simulate_fusion, FusionConfig};
+use npusim::sim::chip::ChipSim;
+use npusim::util::prop::check;
+
+fn random_workload(rng: &mut npusim::util::rng::Rng) -> WorkloadConfig {
+    let n = rng.range(1, 5);
+    let mut w = WorkloadConfig::fixed_ratio(rng.range(8, 200), rng.range(1, 24), n);
+    if rng.chance(0.5) {
+        w.input_len = LenDist::Uniform(8, 256);
+        w.output_len = LenDist::Uniform(1, 16);
+    }
+    if rng.chance(0.5) {
+        w = w.with_arrival(ArrivalProcess::Poisson {
+            rate: rng.range_f64(0.5, 8.0),
+        });
+    }
+    w.with_seed(rng.next_u64())
+}
+
+#[test]
+fn fusion_invariants_hold_for_random_workloads() {
+    check("fusion invariants", 12, |rng| {
+        let w = random_workload(rng);
+        let mut chip = ChipSim::new(ChipConfig::large_core());
+        let cfg = FusionConfig {
+            tp: *rng.choose(&[4usize, 8, 16]),
+            stages: *rng.choose(&[1usize, 2, 4]),
+            chunk: *rng.choose(&[64usize, 256]),
+            budget: 288,
+            ..FusionConfig::default()
+        };
+        let m = simulate_fusion(&mut chip, &ModelConfig::qwen3_4b(), &w, &cfg)
+            .expect("fusion run failed");
+        // 1. Every request completes exactly once.
+        assert_eq!(m.n_requests(), w.n_requests);
+        let mut ids: Vec<u64> = m.records().iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), w.n_requests);
+        // 2. Causality per request.
+        for r in m.records() {
+            assert!(r.first_token >= r.arrival, "{r:?}");
+            assert!(r.finish >= r.first_token, "{r:?}");
+            assert!(r.output_tokens >= 1);
+        }
+        // 3. The chip did work and clocks are consistent.
+        assert!(chip.makespan() >= m.makespan());
+    });
+}
+
+#[test]
+fn disagg_invariants_hold_for_random_workloads() {
+    check("disagg invariants", 10, |rng| {
+        let w = random_workload(rng);
+        let mut chip = ChipSim::new(ChipConfig::large_core());
+        let (p, d, stages) = *rng.choose(&[(49, 14, 7), (42, 21, 6), (28, 28, 4), (21, 42, 3)]);
+        let cfg = DisaggConfig {
+            max_decode_batch: rng.range(2, 32),
+            ..DisaggConfig::ratio_64(p, d, stages)
+        };
+        let m = simulate_disagg(&mut chip, &ModelConfig::qwen3_4b(), &w, &cfg)
+            .expect("disagg run failed");
+        assert_eq!(m.n_requests(), w.n_requests);
+        for r in m.records() {
+            assert!(r.first_token >= r.arrival, "{r:?}");
+            assert!(r.finish >= r.first_token, "{r:?}");
+        }
+    });
+}
+
+#[test]
+fn schedulers_agree_on_total_output_tokens() {
+    check("token conservation", 8, |rng| {
+        let w = random_workload(rng);
+        let expect: u64 = npusim::serving::request::generate(&w)
+            .iter()
+            .map(|r| r.output_len as u64)
+            .sum();
+        let mut chip = ChipSim::new(ChipConfig::large_core());
+        let mf = simulate_fusion(
+            &mut chip,
+            &ModelConfig::qwen3_4b(),
+            &w,
+            &FusionConfig::default(),
+        )
+        .unwrap();
+        let got: u64 = mf.records().iter().map(|r| r.output_tokens).sum();
+        assert_eq!(got, expect, "fusion lost/invented tokens");
+        let mut chip = ChipSim::new(ChipConfig::large_core());
+        let md = simulate_disagg(
+            &mut chip,
+            &ModelConfig::qwen3_4b(),
+            &w,
+            &DisaggConfig::p42_d21(),
+        )
+        .unwrap();
+        let got: u64 = md.records().iter().map(|r| r.output_tokens).sum();
+        assert_eq!(got, expect, "disagg lost/invented tokens");
+    });
+}
+
+#[test]
+fn simulated_time_is_monotone_in_workload_size() {
+    check("monotone makespan", 6, |rng| {
+        let base_n = rng.range(1, 3);
+        let mk = |n: usize, seed: u64| {
+            let w = WorkloadConfig::fixed_ratio(64, 8, n).with_seed(seed);
+            let mut chip = ChipSim::new(ChipConfig::large_core());
+            simulate_fusion(
+                &mut chip,
+                &ModelConfig::qwen3_4b(),
+                &w,
+                &FusionConfig::default(),
+            )
+            .unwrap()
+            .makespan()
+        };
+        let seed = rng.next_u64();
+        assert!(mk(base_n, seed) <= mk(base_n * 4, seed));
+    });
+}

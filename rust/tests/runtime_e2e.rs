@@ -1,0 +1,87 @@
+//! Integration: the PJRT runtime + coordinator over the real AOT
+//! artifacts. Requires `make artifacts` (skips with a notice otherwise —
+//! `make test` always builds them first).
+
+use npusim::coordinator::{Coordinator, GenRequest};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("model_meta.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn coordinator_generates_tokens() {
+    let Some(dir) = artifacts_dir() else { return };
+    let coord = Coordinator::start(&dir).expect("load artifacts");
+    let reqs = vec![
+        GenRequest {
+            id: 0,
+            prompt: vec![1, 2, 3, 4, 5],
+            max_new_tokens: 8,
+        },
+        GenRequest {
+            id: 1,
+            prompt: vec![9, 8, 7],
+            max_new_tokens: 8,
+        },
+    ];
+    let out = coord.generate(reqs).expect("generate");
+    assert_eq!(out.len(), 2);
+    for r in &out {
+        assert_eq!(r.tokens.len(), 8, "request {}: {:?}", r.id, r.tokens);
+        assert!(r.tokens.iter().all(|&t| (0..coord.meta.vocab as i32).contains(&t)));
+    }
+}
+
+#[test]
+fn generation_is_deterministic() {
+    let Some(dir) = artifacts_dir() else { return };
+    let coord = Coordinator::start(&dir).expect("load artifacts");
+    let req = || {
+        vec![GenRequest {
+            id: 0,
+            prompt: vec![42, 17, 99],
+            max_new_tokens: 12,
+        }]
+    };
+    let a = coord.generate(req()).unwrap();
+    let b = coord.generate(req()).unwrap();
+    assert_eq!(a[0].tokens, b[0].tokens, "greedy decode must be deterministic");
+}
+
+#[test]
+fn oversized_batch_splits_across_model_batches() {
+    let Some(dir) = artifacts_dir() else { return };
+    let coord = Coordinator::start(&dir).expect("load artifacts");
+    let n = coord.meta.decode_batch * 2 + 1;
+    let reqs: Vec<GenRequest> = (0..n)
+        .map(|i| GenRequest {
+            id: i as u64,
+            prompt: vec![i as i32; 4],
+            max_new_tokens: 4,
+        })
+        .collect();
+    let out = coord.generate(reqs).expect("generate");
+    assert_eq!(out.len(), n);
+    assert!(out.iter().all(|r| r.tokens.len() == 4));
+}
+
+#[test]
+fn long_prompts_are_window_clamped() {
+    let Some(dir) = artifacts_dir() else { return };
+    let coord = Coordinator::start(&dir).expect("load artifacts");
+    let long: Vec<i32> = (0..200).collect(); // prefill window is 16
+    let out = coord
+        .generate(vec![GenRequest {
+            id: 7,
+            prompt: long,
+            max_new_tokens: 4,
+        }])
+        .unwrap();
+    assert_eq!(out[0].tokens.len(), 4);
+}

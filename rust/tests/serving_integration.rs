@@ -1,0 +1,128 @@
+//! Cross-module integration: scheduler × executor × memory manager × NoC,
+//! exercised through the public API the way an adopter would.
+
+use npusim::config::{load_sim_config, ArrivalProcess, ChipConfig, ModelConfig, WorkloadConfig};
+use npusim::serving::pd_disagg::{simulate_disagg, DisaggConfig};
+use npusim::serving::pd_fusion::{simulate_fusion, FusionConfig};
+use npusim::serving::request;
+use npusim::sim::chip::ChipSim;
+use npusim::sim::tracer::OpClass;
+
+fn small_workload(n: usize) -> WorkloadConfig {
+    WorkloadConfig::fixed_ratio(96, 12, n)
+}
+
+#[test]
+fn fusion_conserves_requests_and_tokens() {
+    let mut chip = ChipSim::new(ChipConfig::large_core());
+    let model = ModelConfig::qwen3_4b();
+    let w = small_workload(6);
+    let m = simulate_fusion(&mut chip, &model, &w, &FusionConfig::default()).unwrap();
+    assert_eq!(m.n_requests(), 6);
+    let total_out: u64 = m.records().iter().map(|r| r.output_tokens).sum();
+    assert_eq!(total_out, 6 * 12);
+    // The chip actually did transformer work.
+    let tr = chip.aggregate_tracer();
+    assert!(tr.cycles(OpClass::Gemm) > 0);
+    assert!(tr.cycles(OpClass::Attention) > 0);
+    assert!(tr.cycles(OpClass::AllReduce) + tr.cycles(OpClass::AllGather) > 0);
+}
+
+#[test]
+fn disagg_conserves_requests_and_transfers_kv() {
+    let mut chip = ChipSim::new(ChipConfig::large_core());
+    let model = ModelConfig::qwen3_4b();
+    let w = small_workload(6);
+    let m = simulate_disagg(&mut chip, &model, &w, &DisaggConfig::p42_d21()).unwrap();
+    assert_eq!(m.n_requests(), 6);
+    assert!(chip.aggregate_tracer().cycles(OpClass::KvTransfer) > 0);
+}
+
+#[test]
+fn fusion_and_disagg_agree_on_workload_scale() {
+    // Same workload, same chip: the two schedulers must land within an
+    // order of magnitude of each other (they share every model below).
+    let model = ModelConfig::qwen3_4b();
+    let w = small_workload(4);
+    let mut c1 = ChipSim::new(ChipConfig::large_core());
+    let f = simulate_fusion(&mut c1, &model, &w, &FusionConfig::default()).unwrap();
+    let mut c2 = ChipSim::new(ChipConfig::large_core());
+    let d = simulate_disagg(&mut c2, &model, &w, &DisaggConfig::p42_d21()).unwrap();
+    let ratio = f.e2e_s().mean() / d.e2e_s().mean();
+    assert!(ratio > 0.05 && ratio < 20.0, "ratio={ratio}");
+}
+
+#[test]
+fn streaming_arrivals_respected_by_both_schedulers() {
+    let model = ModelConfig::qwen3_4b();
+    let w = small_workload(5).with_arrival(ArrivalProcess::Poisson { rate: 2.0 });
+    let arrivals: Vec<f64> = request::generate(&w).iter().map(|r| r.arrival_s).collect();
+    assert!(arrivals.iter().any(|&a| a > 0.1), "trace has spread");
+
+    let mut chip = ChipSim::new(ChipConfig::large_core());
+    let m = simulate_fusion(&mut chip, &model, &w, &FusionConfig::default()).unwrap();
+    for r in m.records() {
+        assert!(r.first_token >= r.arrival, "{r:?}");
+    }
+}
+
+#[test]
+fn moe_model_serves_end_to_end() {
+    let mut chip = ChipSim::new(ChipConfig::large_core());
+    let model = ModelConfig::qwen3_30b_a3b();
+    let w = WorkloadConfig::fixed_ratio(64, 6, 2);
+    let m = simulate_fusion(&mut chip, &model, &w, &FusionConfig::default()).unwrap();
+    assert_eq!(m.n_requests(), 2);
+    assert!(chip.aggregate_tracer().cycles(OpClass::P2P) > 0, "MoE dispatch traffic");
+}
+
+#[test]
+fn toml_config_drives_simulation() {
+    let text = r#"
+[chip]
+preset = "large_core"
+sram_mb = 16
+mem_mode = "fast"
+noc_mode = "fast"
+
+[model]
+name = "qwen3_1.7b"
+
+[workload]
+n_requests = 3
+input_len = 64
+output_len = 8
+"#;
+    let bundle = load_sim_config(text).unwrap();
+    let mut chip = ChipSim::new(bundle.chip);
+    let m = simulate_fusion(
+        &mut chip,
+        &bundle.model,
+        &bundle.workload,
+        &FusionConfig::default(),
+    )
+    .unwrap();
+    assert_eq!(m.n_requests(), 3);
+}
+
+#[test]
+fn fast_modes_run_faster_than_detailed() {
+    use npusim::config::{MemSimMode, NocSimMode};
+    let model = ModelConfig::qwen3_4b();
+    let w = small_workload(3);
+    let t0 = std::time::Instant::now();
+    let mut c = ChipSim::new(ChipConfig::large_core());
+    simulate_fusion(&mut c, &model, &w, &FusionConfig::default()).unwrap();
+    let wall_detailed = t0.elapsed();
+    let t0 = std::time::Instant::now();
+    let mut c = ChipSim::new(
+        ChipConfig::large_core().with_sim_modes(MemSimMode::Fast, NocSimMode::Fast),
+    );
+    simulate_fusion(&mut c, &model, &w, &FusionConfig::default()).unwrap();
+    let wall_fast = t0.elapsed();
+    // Fast mode must not be slower by more than noise.
+    assert!(
+        wall_fast <= wall_detailed * 3,
+        "fast {wall_fast:?} vs detailed {wall_detailed:?}"
+    );
+}
