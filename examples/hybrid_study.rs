@@ -1,0 +1,68 @@
+//! Hybrid study: when does the adaptive hybrid scheduler beat the static
+//! PD-fusion / PD-disaggregation choice? Runs the three schedulers over a
+//! bursty long-prompt (Mooncake-like) and a steady conversational
+//! (ShareGPT-like) trace through the unified `Scheduler` trait.
+//!
+//! Run: `cargo run --release --example hybrid_study`
+
+use npusim::config::{ChipConfig, ModelConfig, WorkloadConfig};
+use npusim::serving::pd_disagg::DisaggConfig;
+use npusim::serving::pd_fusion::FusionConfig;
+use npusim::serving::request;
+use npusim::serving::scheduler::{self, HybridConfig, HybridScheduler, SchedulerConfig};
+use npusim::sim::chip::ChipSim;
+use npusim::util::table::{f3, Table};
+
+fn main() -> anyhow::Result<()> {
+    let model = ModelConfig::qwen3_4b();
+    let n = 12;
+    let traces = [
+        ("bursty (mooncake-like)", request::generate(&WorkloadConfig::mooncake_like(n))),
+        ("poisson (sharegpt-like)", request::generate(&WorkloadConfig::sharegpt_like(n))),
+    ];
+
+    let mut t = Table::new(
+        "adaptive hybrid vs static schedulers (Qwen3-4B, 64 cores)",
+        &["workload", "system", "tok/s", "TTFT mean (s)", "TBT mean (ms)"],
+    );
+    for (label, reqs) in &traces {
+        for sys in [
+            SchedulerConfig::Fusion(FusionConfig::default()),
+            SchedulerConfig::Disagg(DisaggConfig::p42_d21()),
+            SchedulerConfig::Hybrid(HybridConfig::default()),
+        ] {
+            let mut chip = ChipSim::new(ChipConfig::large_core());
+            let m = match sys {
+                SchedulerConfig::Hybrid(c) => {
+                    let mut sched = HybridScheduler::new(c);
+                    let m =
+                        scheduler::simulate_requests(&mut chip, &model, reqs.clone(), &mut sched)?;
+                    println!(
+                        "[{label}] hybrid: {} re-partition(s), {} dedicated prefill pipe(s) at exit",
+                        sched.repartitions(),
+                        sched.n_prefill_pipes()
+                    );
+                    m
+                }
+                other => {
+                    let mut sched = other.build();
+                    scheduler::simulate_requests(&mut chip, &model, reqs.clone(), sched.as_mut())?
+                }
+            };
+            t.row(&[
+                label.to_string(),
+                sys.name().to_string(),
+                f3(m.tokens_per_s()),
+                f3(m.ttft_s().mean()),
+                f3(m.tbt_s().mean() * 1e3),
+            ]);
+        }
+    }
+    t.print();
+    println!(
+        "\nguidance: the hybrid starts fully fused and dedicates prefill pipelines\n\
+         only under sustained prefill backlog, so it tracks fusion on steady\n\
+         decode-heavy traffic and moves toward disaggregation under bursts."
+    );
+    Ok(())
+}

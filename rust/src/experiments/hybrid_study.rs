@@ -1,0 +1,176 @@
+//! `hybrid_study` — fusion vs disaggregation vs the adaptive hybrid
+//! scheduler across workload regimes.
+//!
+//! Extends the paper's §5.5 comparison (Figs. 11/14 treat PD-disagg vs
+//! PD-fusion as a static choice) with the FlexNPU-style adaptive hybrid:
+//! three workload regimes — bursty long-prompt (Mooncake-like), steady
+//! Poisson conversational (ShareGPT-like), and a JSONL trace replay
+//! (synthetic Mooncake trace round-tripped through the parser) — each run
+//! under all three schedulers on the Table-3 large-core chip.
+
+use crate::config::{ChipConfig, LenDist, ModelConfig, WorkloadConfig};
+use crate::experiments::Opts;
+use crate::serving::metrics::Metrics;
+use crate::serving::pd_disagg::DisaggConfig;
+use crate::serving::pd_fusion::FusionConfig;
+use crate::serving::request::{self, Request};
+use crate::serving::scheduler::{self, HybridConfig, HybridScheduler, SchedulerConfig};
+use crate::serving::trace;
+use crate::sim::chip::ChipSim;
+use crate::util::table::{f3, Table};
+
+/// The three compared schedulers, defaults tuned for the 64-core chip.
+pub fn systems() -> [SchedulerConfig; 3] {
+    [
+        SchedulerConfig::Fusion(FusionConfig::default()),
+        SchedulerConfig::Disagg(DisaggConfig::p42_d21()),
+        SchedulerConfig::Hybrid(HybridConfig::default()),
+    ]
+}
+
+/// The swept workload regimes: `(label, requests)`.
+pub fn workloads(opts: &Opts) -> anyhow::Result<Vec<(&'static str, Vec<Request>)>> {
+    let n = opts.pick(24, 5);
+    // Bursty long-prompt regime (Mooncake-like). Fast mode trims the tail
+    // lengths so smoke runs stay quick without changing the regime's shape.
+    let mut bursty = WorkloadConfig::mooncake_like(n);
+    if opts.fast {
+        bursty.input_len = LenDist::LogNormal {
+            mu: 6.2,
+            sigma: 0.8,
+            min: 64,
+            max: 2048,
+        };
+        bursty.output_len = LenDist::LogNormal {
+            mu: 4.5,
+            sigma: 0.5,
+            min: 8,
+            max: 128,
+        };
+    }
+    // Steady Poisson conversational regime (ShareGPT-like).
+    let mut poisson = WorkloadConfig::sharegpt_like(n);
+    if opts.fast {
+        poisson.input_len = LenDist::LogNormal {
+            mu: 5.0,
+            sigma: 0.8,
+            min: 16,
+            max: 1024,
+        };
+        poisson.output_len = LenDist::LogNormal {
+            mu: 4.2,
+            sigma: 0.6,
+            min: 8,
+            max: 128,
+        };
+    }
+    // Trace replay: export the bursty trace to Mooncake JSONL and parse it
+    // back, so the replay path (timestamps, re-basing, sorting) is the one
+    // actually exercised — a true round-trip of the compared request list.
+    let bursty_reqs = request::generate(&bursty);
+    let replay = trace::parse_jsonl(&trace::to_jsonl(&bursty_reqs))?;
+    Ok(vec![
+        ("bursty", bursty_reqs),
+        ("poisson", request::generate(&poisson)),
+        ("trace-replay", replay),
+    ])
+}
+
+/// Run one scheduler over one request list on a fresh large-core chip.
+/// Returns the metrics and, for the hybrid, its re-partition count.
+pub fn run_system(
+    model: &ModelConfig,
+    reqs: Vec<Request>,
+    sys: &SchedulerConfig,
+) -> anyhow::Result<(Metrics, u64)> {
+    let mut chip = ChipSim::new(ChipConfig::large_core());
+    match sys {
+        SchedulerConfig::Hybrid(c) => {
+            let mut sched = HybridScheduler::new(*c);
+            let m = scheduler::simulate_requests(&mut chip, model, reqs, &mut sched)?;
+            Ok((m, sched.repartitions()))
+        }
+        other => {
+            let mut sched = other.build();
+            let m = scheduler::simulate_requests(&mut chip, model, reqs, sched.as_mut())?;
+            Ok((m, 0))
+        }
+    }
+}
+
+pub fn run(opts: &Opts) -> anyhow::Result<Vec<Table>> {
+    let model = ModelConfig::qwen3_4b();
+    let mut cmp = Table::new(
+        "hybrid study — fusion vs disagg vs adaptive hybrid (Qwen3-4B, 64 cores)",
+        &[
+            "workload",
+            "system",
+            "tok/s",
+            "TTFT mean (s)",
+            "TBT mean (ms)",
+            "SLO att. (%)",
+        ],
+    );
+    let mut adapt = Table::new(
+        "hybrid study — adaptation activity",
+        &["workload", "re-partitions"],
+    );
+    for (label, reqs) in workloads(opts)? {
+        for sys in systems() {
+            let (m, repartitions) = run_system(&model, reqs.clone(), &sys)?;
+            cmp.row(&[
+                label.to_string(),
+                sys.name().to_string(),
+                f3(m.tokens_per_s()),
+                f3(m.ttft_s().mean()),
+                f3(m.tbt_s().mean() * 1e3),
+                f3(m.slo_attainment(2.0, 0.050) * 100.0),
+            ]);
+            if matches!(sys, SchedulerConfig::Hybrid(_)) {
+                adapt.row(&[label.to_string(), repartitions.to_string()]);
+            }
+        }
+    }
+    Ok(vec![cmp, adapt])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_shape() {
+        let tables = run(&Opts::fast()).unwrap();
+        assert_eq!(tables.len(), 2);
+        // 3 workloads x 3 systems.
+        assert_eq!(tables[0].n_rows(), 9);
+        assert_eq!(tables[1].n_rows(), 3);
+    }
+
+    #[test]
+    fn hybrid_is_never_the_worst_on_the_bursty_workload() {
+        // The acceptance property: on the bursty regime the adaptive hybrid
+        // must not be strictly the worst of the three on output throughput.
+        // (When its controller stays quiescent it is bit-identical to
+        // fusion; the 10% tolerance absorbs adaptation overhead.)
+        let model = ModelConfig::qwen3_4b();
+        let opts = Opts::fast();
+        let (_, reqs) = workloads(&opts)
+            .unwrap()
+            .into_iter()
+            .find(|(l, _)| *l == "bursty")
+            .unwrap();
+        let [fusion_cfg, disagg_cfg, hybrid_cfg] = systems();
+        let (f, _) = run_system(&model, reqs.clone(), &fusion_cfg).unwrap();
+        let (d, _) = run_system(&model, reqs.clone(), &disagg_cfg).unwrap();
+        let (h, _) = run_system(&model, reqs, &hybrid_cfg).unwrap();
+        let floor = f.tokens_per_s().min(d.tokens_per_s());
+        assert!(
+            h.tokens_per_s() >= floor * 0.9,
+            "hybrid {} tok/s is the strict worst (fusion {}, disagg {})",
+            h.tokens_per_s(),
+            f.tokens_per_s(),
+            d.tokens_per_s()
+        );
+    }
+}

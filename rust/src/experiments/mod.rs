@@ -15,6 +15,7 @@
 //! | `fig13` | PD fusion hardware sweep | [`fig13`] |
 //! | `fig14` | PD disaggregation vs PD fusion | [`fig14`] |
 //! | `headline` | ours vs T10 / WaferLLM / WSC-LLM | [`headline`] |
+//! | `hybrid_study` | fusion vs disagg vs adaptive hybrid | [`hybrid_study`] |
 
 pub mod ablations;
 pub mod fig10;
@@ -26,6 +27,7 @@ pub mod fig7;
 pub mod fig8;
 pub mod fig9;
 pub mod headline;
+pub mod hybrid_study;
 pub mod reference_hw;
 pub mod table2;
 
@@ -72,7 +74,7 @@ impl Opts {
 /// All experiment ids, in paper order.
 pub const ALL: &[&str] = &[
     "table2", "fig7a", "fig7b", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13", "fig14",
-    "headline", "ablations",
+    "headline", "ablations", "hybrid_study",
 ];
 
 /// Run one experiment by id; returns its tables (already printed).
@@ -90,6 +92,7 @@ pub fn run(id: &str, opts: &Opts) -> anyhow::Result<Vec<Table>> {
         "fig14" => fig14::run(opts)?,
         "headline" => headline::run(opts)?,
         "ablations" => ablations::run(opts)?,
+        "hybrid_study" => hybrid_study::run(opts)?,
         other => anyhow::bail!("unknown experiment {other:?} (try one of {ALL:?})"),
     };
     for t in &tables {

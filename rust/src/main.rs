@@ -2,7 +2,7 @@
 //!
 //! ```text
 //! npusim experiment <id>|all [--fast] [--out results]   regenerate a paper figure/table
-//! npusim simulate [--config f.toml] [--mode fusion|disagg] ...   run one serving simulation
+//! npusim simulate [--config f.toml] [--mode fusion|disagg|hybrid] ...   run one serving simulation
 //! npusim serve [--artifacts artifacts] [--prompt "1,2,3"] [--n 4]   real tokens via PJRT
 //! npusim validate [--fast]     fig7 simulator validation
 //! npusim info [--model name]   print chip/model presets
@@ -14,6 +14,7 @@ use npusim::coordinator::{Coordinator, GenRequest};
 use npusim::experiments::{self, Opts};
 use npusim::serving::pd_disagg::{simulate_disagg, DisaggConfig};
 use npusim::serving::pd_fusion::{simulate_fusion, FusionConfig};
+use npusim::serving::scheduler::{self, HybridConfig, HybridScheduler};
 use npusim::serving::Metrics;
 use npusim::sim::chip::ChipSim;
 use npusim::util::cli::Args;
@@ -46,6 +47,7 @@ fn dispatch(args: &Args) -> Result<()> {
                  subcommands: experiment | simulate | serve | validate | info\n\
                  e.g.  npusim experiment fig9\n      npusim experiment all --fast\n      \
                  npusim simulate --mode fusion --model qwen3_4b --input 512 --output 64\n      \
+                 npusim simulate --mode hybrid --model qwen3_4b\n      \
                  npusim serve --prompt \"1,2,3,4\""
             );
             Ok(())
@@ -99,6 +101,17 @@ fn chip_from(args: &Args) -> Result<ChipConfig> {
     }
     chip.validate()?;
     Ok(chip)
+}
+
+/// Fusion-pipeline knobs shared by `--mode fusion` and `--mode hybrid`.
+fn fusion_cfg_from(args: &Args) -> Result<FusionConfig> {
+    Ok(FusionConfig {
+        tp: args.opt_parse_or("tp", 4)?,
+        stages: args.opt_parse_or("stages", 4)?,
+        chunk: args.opt_parse_or("chunk", 256)?,
+        budget: args.opt_parse_or("budget", 288)?,
+        ..FusionConfig::default()
+    })
 }
 
 fn print_metrics(name: &str, m: &Metrics, chip: &ChipSim) {
@@ -171,13 +184,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let mut chip = ChipSim::new(chip_cfg);
     let metrics = match mode {
         "fusion" => {
-            let cfg = FusionConfig {
-                tp: args.opt_parse_or("tp", 4)?,
-                stages: args.opt_parse_or("stages", 4)?,
-                chunk: args.opt_parse_or("chunk", 256)?,
-                budget: args.opt_parse_or("budget", 288)?,
-                ..FusionConfig::default()
-            };
+            let cfg = fusion_cfg_from(args)?;
             match trace {
                 Some(reqs) => npusim::serving::pd_fusion::simulate_fusion_requests(
                     &mut chip, &model, reqs, &cfg,
@@ -199,7 +206,31 @@ fn cmd_simulate(args: &Args) -> Result<()> {
                 None => simulate_disagg(&mut chip, &model, &workload, &cfg)?,
             }
         }
-        other => anyhow::bail!("unknown mode {other:?} (fusion|disagg)"),
+        "hybrid" => {
+            let fusion = fusion_cfg_from(args)?;
+            let defaults = HybridConfig::default();
+            let cfg = HybridConfig {
+                fusion,
+                window: args.opt_parse_or("window", defaults.window)?,
+                hysteresis: args.opt_parse_or("hysteresis", defaults.hysteresis)?,
+                min_dwell: args.opt_parse_or("min-dwell", defaults.min_dwell)?,
+                ..defaults
+            };
+            let mut sched = HybridScheduler::new(cfg);
+            let metrics = match trace {
+                Some(reqs) => {
+                    scheduler::simulate_requests(&mut chip, &model, reqs, &mut sched)?
+                }
+                None => scheduler::simulate(&mut chip, &model, &workload, &mut sched)?,
+            };
+            println!(
+                "hybrid controller: {} dedicated prefill pipeline(s) at exit, {} re-partition(s)",
+                sched.n_prefill_pipes(),
+                sched.repartitions()
+            );
+            metrics
+        }
+        other => anyhow::bail!("unknown mode {other:?} (fusion|disagg|hybrid)"),
     };
     print_metrics(
         &format!("{mode} / {} / {}", model.name, workload.name),

@@ -35,6 +35,13 @@ impl RequestRecord {
     pub fn e2e(&self) -> Cycle {
         self.finish.saturating_sub(self.arrival)
     }
+
+    /// Mean Time Between Tokens in seconds at `freq_mhz` (0 for
+    /// single-token outputs) — the one conversion shared by reporting and
+    /// SLO checks.
+    pub fn tbt_secs(&self, freq_mhz: f64) -> f64 {
+        self.tbt() / (freq_mhz * 1e6)
+    }
 }
 
 /// Aggregated metrics over a serving run.
@@ -85,7 +92,7 @@ impl Metrics {
             self.records
                 .iter()
                 .filter(|r| r.output_tokens > 1)
-                .map(|r| r.tbt() / (self.freq_mhz * 1e6)),
+                .map(|r| r.tbt_secs(self.freq_mhz)),
         )
     }
 
@@ -127,7 +134,7 @@ impl Metrics {
             .iter()
             .filter(|r| {
                 cycles_to_secs(r.ttft(), self.freq_mhz) <= ttft_target_s
-                    && r.tbt() / (self.freq_mhz * 1e6) <= tbt_target_s
+                    && r.tbt_secs(self.freq_mhz) <= tbt_target_s
             })
             .count();
         ok as f64 / self.records.len() as f64

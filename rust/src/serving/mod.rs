@@ -5,10 +5,14 @@
 //!   marginals, Poisson / bursty arrivals).
 //! - [`layout`]: carving the chip mesh into pipeline stages of TP groups.
 //! - [`worker`]: one placed TP group with its SRAM plan and KV cache.
+//! - [`scheduler`]: the unified [`scheduler::Scheduler`] trait, the shared
+//!   `simulate` driver, and the three policies behind it — fusion, disagg,
+//!   and the adaptive hybrid (`scheduler::hybrid`).
 //! - [`pd_fusion`]: chunked-prefill budget scheduler co-locating prefill
-//!   and decode on every pipeline (§4.3.2).
+//!   and decode on every pipeline (§4.3.2); config + wrappers.
 //! - [`pd_disagg`]: dedicated prefill pipelines + decode groups with
-//!   NoC KV transfer and optional heterogeneous decode cores (§4.3.1).
+//!   NoC KV transfer and optional heterogeneous decode cores (§4.3.1);
+//!   config + wrappers.
 //! - [`metrics`]: TTFT / TBT / e2e / throughput / SLO attainment.
 
 pub mod layout;
@@ -16,6 +20,7 @@ pub mod metrics;
 pub mod pd_disagg;
 pub mod pd_fusion;
 pub mod request;
+pub mod scheduler;
 pub mod trace;
 pub mod worker;
 
@@ -24,5 +29,6 @@ pub use metrics::{Metrics, RequestRecord};
 pub use pd_disagg::{simulate_disagg, DisaggConfig};
 pub use pd_fusion::{simulate_fusion, FusionConfig};
 pub use request::Request;
+pub use scheduler::{HybridConfig, HybridScheduler, Scheduler, SchedulerConfig};
 pub use trace::{load_jsonl, parse_jsonl};
 pub use worker::StageWorker;

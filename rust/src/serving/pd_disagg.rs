@@ -8,18 +8,20 @@
 //! puts prefill at the chip edges and decode in the center to shorten and
 //! de-contend the KV-transfer paths. Heterogeneous chips override the
 //! decode cores' hardware (narrower systolic arrays, fatter HBM — §4.3.1).
+//!
+//! The policy is implemented by
+//! [`DisaggScheduler`](crate::serving::scheduler::DisaggScheduler) behind
+//! the unified [`Scheduler`](crate::serving::scheduler::Scheduler) trait;
+//! the free functions here are convenience wrappers kept for the original
+//! call sites.
 
 use crate::config::{ModelConfig, WorkloadConfig};
-use crate::model::{BatchItem, IterBatch};
 use crate::parallel::partition::PartitionStrategy;
-use crate::parallel::pd_placement::{assign, PdAssignment, PdPlacementPolicy};
-use crate::serving::metrics::{Metrics, RequestRecord};
-use crate::serving::request::{self, Request};
-use crate::serving::worker::StageWorker;
+use crate::parallel::pd_placement::PdPlacementPolicy;
+use crate::serving::metrics::Metrics;
+use crate::serving::request::Request;
+use crate::serving::scheduler::{self, DisaggScheduler};
 use crate::sim::chip::ChipSim;
-use crate::sim::tracer::OpClass;
-use crate::util::units::{secs_to_cycles, Cycle};
-use std::collections::VecDeque;
 
 /// PD-disaggregation serving configuration.
 #[derive(Debug, Clone, Copy)]
@@ -77,42 +79,6 @@ impl Default for DisaggConfig {
     }
 }
 
-#[derive(Debug, Clone, Copy)]
-struct DecodeReq {
-    req: Request,
-    first_token: Cycle,
-    generated: u64,
-    ready_at: Cycle,
-}
-
-struct DecodeGroup {
-    worker: StageWorker,
-    /// Transferred but not yet admitted to the KV cache.
-    pending: VecDeque<DecodeReq>,
-    active: Vec<DecodeReq>,
-}
-
-impl DecodeGroup {
-    fn load(&self) -> usize {
-        self.pending.len() + self.active.len()
-    }
-
-    fn next_action(&self, chip: &ChipSim) -> Option<Cycle> {
-        let now = self.worker.now(chip);
-        let pending = self.pending.front().map(|r| r.ready_at);
-        let active = self
-            .active
-            .iter()
-            .filter(|a| a.generated < a.req.output_len as u64)
-            .map(|a| a.ready_at)
-            .min();
-        match (pending, active) {
-            (None, None) => None,
-            (a, b) => Some(now.max(a.unwrap_or(Cycle::MAX).min(b.unwrap_or(Cycle::MAX)))),
-        }
-    }
-}
-
 /// Simulate a full workload under PD disaggregation.
 pub fn simulate_disagg(
     chip: &mut ChipSim,
@@ -120,7 +86,8 @@ pub fn simulate_disagg(
     workload: &WorkloadConfig,
     cfg: &DisaggConfig,
 ) -> anyhow::Result<Metrics> {
-    simulate_disagg_requests(chip, model, request::generate(workload), cfg)
+    let mut sched = DisaggScheduler::new(*cfg);
+    scheduler::simulate(chip, model, workload, &mut sched)
 }
 
 /// Like [`simulate_disagg`] but over an explicit request list (trace
@@ -132,300 +99,15 @@ pub fn simulate_disagg_requests(
     reqs: Vec<Request>,
     cfg: &DisaggConfig,
 ) -> anyhow::Result<Metrics> {
-    let a: PdAssignment = assign(
-        chip.cfg.rows,
-        chip.cfg.cols,
-        cfg.n_prefill,
-        cfg.n_decode,
-        cfg.prefill_tp,
-        cfg.prefill_stages,
-        cfg.decode_tp,
-        cfg.policy,
-    )?;
-
-    // Heterogeneous decode cores (Fig. 12): apply the chip's decode-core
-    // override to every decode coordinate.
-    let decode_core = chip.cfg.decode_core();
-    if chip.cfg.decode_core.is_some() {
-        for g in &a.decode_groups {
-            for &c in &g.coords {
-                chip.set_core_config(c, decode_core);
-            }
-        }
-    }
-
-    let layers = model.layers;
-    let lps = {
-        let base = layers / cfg.prefill_stages;
-        let extra = layers % cfg.prefill_stages;
-        (0..cfg.prefill_stages)
-            .map(|s| base + usize::from(s < extra))
-            .collect::<Vec<_>>()
-    };
-    let core = chip.cfg.core;
-    let mut queue: VecDeque<Request> = reqs.into();
-    let max_tokens = queue
-        .iter()
-        .map(|r| r.total_tokens())
-        .max()
-        .unwrap_or(1);
-    let mut pipelines: Vec<Vec<StageWorker>> = a
-        .prefill_pipelines
-        .iter()
-        .map(|stages| {
-            stages
-                .iter()
-                .enumerate()
-                .map(|(s, g)| {
-                    StageWorker::new(
-                        &core,
-                        model,
-                        g.clone(),
-                        cfg.prefill_strategy,
-                        lps[s].max(1),
-                        s + 1 == stages.len(),
-                        2048,
-                        cfg.kv_share,
-                        max_tokens,
-                    )
-                })
-                .collect()
-        })
-        .collect();
-    let mut groups: Vec<DecodeGroup> = a
-        .decode_groups
-        .iter()
-        .map(|g| DecodeGroup {
-            worker: StageWorker::new(
-                &decode_core,
-                model,
-                g.clone(),
-                cfg.decode_strategy,
-                layers,
-                true,
-                cfg.max_decode_batch,
-                cfg.kv_share,
-                max_tokens,
-            ),
-            pending: VecDeque::new(),
-            active: Vec::new(),
-        })
-        .collect();
-
-    let freq = chip.cfg.freq_mhz;
-    let total = queue.len();
-    let mut metrics = Metrics::new(freq);
-    let mut done = 0usize;
-    let mut guard = 0u64;
-
-    while done < total {
-        guard += 1;
-        anyhow::ensure!(
-            guard < 4_000_000,
-            "disagg scheduler livelock: {done}/{total} done"
-        );
-        // Earliest actionable prefill (any pipeline, next queued request).
-        let prefill_action: Option<(usize, Cycle)> = if queue.is_empty() {
-            None
-        } else {
-            let arrival = secs_to_cycles(queue.front().unwrap().arrival_s, freq);
-            pipelines
-                .iter()
-                .enumerate()
-                .map(|(i, p)| (i, p[0].now(chip).max(arrival)))
-                .min_by_key(|&(_, t)| t)
-        };
-        // Earliest actionable decode tick.
-        let decode_action: Option<(usize, Cycle)> = groups
-            .iter()
-            .enumerate()
-            .filter_map(|(i, g)| g.next_action(chip).map(|t| (i, t)))
-            .min_by_key(|&(_, t)| t);
-
-        match (prefill_action, decode_action) {
-            (Some((pi, tp_)), Some((_, td))) if tp_ <= td => {
-                done += run_prefill(
-                    chip, model, cfg, &mut pipelines[pi], &mut queue, &mut groups, &mut metrics,
-                    freq,
-                )?;
-            }
-            (Some((pi, _)), None) => {
-                done += run_prefill(
-                    chip, model, cfg, &mut pipelines[pi], &mut queue, &mut groups, &mut metrics,
-                    freq,
-                )?;
-            }
-            (_, Some((gi, t))) => {
-                done += decode_tick(chip, model, cfg, &mut groups[gi], t, &mut metrics, freq);
-            }
-            (None, None) => anyhow::bail!("deadlock: {done}/{total} requests done"),
-        }
-    }
-    Ok(metrics)
-}
-
-/// Run one whole prompt through a prefill pipeline, then transfer its KV to
-/// the least-loaded decode group. Returns completions (requests whose
-/// output is a single token finish at prefill).
-#[allow(clippy::too_many_arguments)]
-fn run_prefill(
-    chip: &mut ChipSim,
-    model: &ModelConfig,
-    cfg: &DisaggConfig,
-    pipeline: &mut [StageWorker],
-    queue: &mut VecDeque<Request>,
-    groups: &mut [DecodeGroup],
-    metrics: &mut Metrics,
-    freq: f64,
-) -> anyhow::Result<usize> {
-    let r = queue.pop_front().expect("caller checked");
-    let arrival = secs_to_cycles(r.arrival_s, freq);
-    pipeline[0].advance_to(chip, arrival);
-
-    for s in pipeline.iter_mut() {
-        s.admit(r.id);
-    }
-    let batch = IterBatch::new(vec![BatchItem::prefill(
-        r.id,
-        r.input_len as u64,
-        r.input_len as u64,
-    )]);
-    let mut finish = 0;
-    for s in 0..pipeline.len() {
-        finish = pipeline[s].run(chip, model, &batch);
-        if s + 1 < pipeline.len() {
-            let bytes = r.input_len as u64 * model.hidden as u64 * model.dtype_bytes;
-            let src = pipeline[s].group.coords[0];
-            let dst = pipeline[s + 1].group.coords[0];
-            let t = chip.send(src, dst, bytes, OpClass::P2P);
-            finish = finish.max(t.finish);
-        }
-    }
-    let first_token = finish;
-
-    if r.output_len <= 1 {
-        for s in pipeline.iter_mut() {
-            s.release(r.id);
-        }
-        metrics.record(RequestRecord {
-            id: r.id,
-            arrival,
-            first_token,
-            finish,
-            input_tokens: r.input_len as u64,
-            output_tokens: 1,
-        });
-        return Ok(1);
-    }
-
-    // KV transfer to the least-loaded decode group: every prefill core
-    // streams its KV shard to a decode core (PP-prioritized placement keeps
-    // these paths short and off the pipeline's own columns).
-    let gi = groups
-        .iter()
-        .enumerate()
-        .min_by_key(|(_, g)| g.load())
-        .map(|(i, _)| i)
-        .ok_or_else(|| anyhow::anyhow!("no decode groups"))?;
-    let total_kv = r.input_len as u64 * model.kv_bytes_per_token(); // whole model
-    let mut ready_at = finish;
-    let dst_coords = groups[gi].worker.group.coords.clone();
-    let n_layers: usize = pipeline.iter().map(|s| s.exec.layers).sum();
-    let mut di = 0usize;
-    for stage in pipeline.iter() {
-        let stage_kv = total_kv * stage.exec.layers as u64 / n_layers.max(1) as u64;
-        let per_core = stage_kv / stage.group.coords.len().max(1) as u64;
-        for &src in &stage.group.coords {
-            let dst = dst_coords[di % dst_coords.len()];
-            di += 1;
-            let t = chip.send(src, dst, per_core, OpClass::KvTransfer);
-            ready_at = ready_at.max(t.finish);
-        }
-    }
-    for s in pipeline.iter_mut() {
-        s.release(r.id);
-    }
-    groups[gi].pending.push_back(DecodeReq {
-        req: r,
-        first_token,
-        generated: 1,
-        ready_at,
-    });
-    let _ = cfg;
-    Ok(0)
-}
-
-/// One continuous-batching decode iteration on one group.
-fn decode_tick(
-    chip: &mut ChipSim,
-    model: &ModelConfig,
-    cfg: &DisaggConfig,
-    group: &mut DecodeGroup,
-    t: Cycle,
-    metrics: &mut Metrics,
-    freq: f64,
-) -> usize {
-    group.worker.advance_to(chip, t);
-    let now = group.worker.now(chip);
-
-    // Admit transferred requests (their prefill KV is appended on arrival).
-    while let Some(front) = group.pending.front() {
-        if front.ready_at > now
-            || group.active.len() >= cfg.max_decode_batch
-            || !group.worker.can_admit()
-        {
-            break;
-        }
-        let r = group.pending.pop_front().unwrap();
-        group.worker.admit(r.req.id);
-        group.worker.kv.append(r.req.id, r.req.input_len as u64);
-        group.active.push(r);
-    }
-
-    let items: Vec<BatchItem> = group
-        .active
-        .iter()
-        .filter(|a| a.generated < a.req.output_len as u64 && a.ready_at <= now)
-        .map(|a| BatchItem::decode(a.req.id, a.req.input_len as u64 + a.generated))
-        .collect();
-    if items.is_empty() {
-        return 0;
-    }
-    let ids: Vec<u64> = items.iter().map(|i| i.request).collect();
-    let finish = group.worker.run(chip, model, &IterBatch::new(items));
-
-    let mut completions = 0;
-    for a in &mut group.active {
-        if ids.contains(&a.req.id) {
-            a.generated += 1;
-            a.ready_at = finish;
-        }
-    }
-    let mut i = 0;
-    while i < group.active.len() {
-        if group.active[i].generated >= group.active[i].req.output_len as u64 {
-            let a = group.active.swap_remove(i);
-            group.worker.release(a.req.id);
-            metrics.record(RequestRecord {
-                id: a.req.id,
-                arrival: secs_to_cycles(a.req.arrival_s, freq),
-                first_token: a.first_token,
-                finish,
-                input_tokens: a.req.input_len as u64,
-                output_tokens: a.req.output_len as u64,
-            });
-            completions += 1;
-        } else {
-            i += 1;
-        }
-    }
-    completions
+    let mut sched = DisaggScheduler::new(*cfg);
+    scheduler::simulate_requests(chip, model, reqs, &mut sched)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::ChipConfig;
+    use crate::sim::tracer::OpClass;
 
     fn run(workload: &WorkloadConfig, cfg: &DisaggConfig) -> Metrics {
         let mut chip = ChipSim::new(ChipConfig::large_core());

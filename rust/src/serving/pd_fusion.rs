@@ -5,19 +5,20 @@
 //! steps are admitted first (they bound TBT); leftover budget is assigned
 //! to chunked prefill (SARATHI-style), so prefill never stalls decoding by
 //! more than one chunk.
+//!
+//! The policy is implemented by
+//! [`FusionScheduler`](crate::serving::scheduler::FusionScheduler) behind
+//! the unified [`Scheduler`](crate::serving::scheduler::Scheduler) trait
+//! (shared tick machinery in `scheduler::pipe`); the free functions here
+//! are convenience wrappers kept for the original call sites.
 
 use crate::config::{ModelConfig, WorkloadConfig};
-use crate::model::{BatchItem, IterBatch};
 use crate::parallel::partition::PartitionStrategy;
 use crate::parallel::placement::Placement;
-use crate::serving::layout::PipelineLayout;
-use crate::serving::metrics::{Metrics, RequestRecord};
-use crate::serving::request::{self, Request};
-use crate::serving::worker::StageWorker;
+use crate::serving::metrics::Metrics;
+use crate::serving::request::Request;
+use crate::serving::scheduler::{self, FusionScheduler};
 use crate::sim::chip::ChipSim;
-use crate::sim::tracer::OpClass;
-use crate::util::units::{secs_to_cycles, Cycle};
-use std::collections::VecDeque;
 
 /// PD-fusion serving configuration.
 #[derive(Debug, Clone, Copy)]
@@ -55,66 +56,6 @@ impl Default for FusionConfig {
     }
 }
 
-/// In-flight request state.
-#[derive(Debug, Clone, Copy)]
-struct Active {
-    req: Request,
-    /// Prompt tokens already prefilled.
-    prefilled: u64,
-    /// Output tokens generated (first comes from the final prefill chunk).
-    generated: u64,
-    first_token: Option<Cycle>,
-    /// Earliest cycle the next decode step may start (autoregressive
-    /// dependency — this is what makes deep pipelines hurt decode).
-    ready_at: Cycle,
-}
-
-impl Active {
-    fn is_prefilling(&self) -> bool {
-        self.prefilled < self.req.input_len as u64
-    }
-
-    fn is_done(&self) -> bool {
-        !self.is_prefilling() && self.generated >= self.req.output_len as u64
-    }
-}
-
-struct Pipe {
-    stages: Vec<StageWorker>,
-    queue: VecDeque<Request>,
-    active: Vec<Active>,
-}
-
-impl Pipe {
-    fn stage0_now(&self, chip: &ChipSim) -> Cycle {
-        self.stages[0].now(chip)
-    }
-
-    /// Earliest cycle at which this pipe can do useful work, or `None`.
-    fn next_action(&self, chip: &ChipSim) -> Option<Cycle> {
-        let now = self.stage0_now(chip);
-        if self.active.iter().any(|a| a.is_prefilling()) {
-            return Some(now);
-        }
-        let next_decode = self
-            .active
-            .iter()
-            .filter(|a| !a.is_done())
-            .map(|a| a.ready_at)
-            .min();
-        if let Some(t) = next_decode {
-            return Some(now.max(t));
-        }
-        self.queue
-            .front()
-            .map(|r| now.max(secs_to_cycles(r.arrival_s, chip_freq(chip))))
-    }
-}
-
-fn chip_freq(chip: &ChipSim) -> f64 {
-    chip.cfg.freq_mhz
-}
-
 /// Simulate a full workload under PD fusion; returns the serving metrics.
 pub fn simulate_fusion(
     chip: &mut ChipSim,
@@ -122,7 +63,8 @@ pub fn simulate_fusion(
     workload: &WorkloadConfig,
     cfg: &FusionConfig,
 ) -> anyhow::Result<Metrics> {
-    simulate_fusion_requests(chip, model, request::generate(workload), cfg)
+    let mut sched = FusionScheduler::new(*cfg);
+    scheduler::simulate(chip, model, workload, &mut sched)
 }
 
 /// Like [`simulate_fusion`] but over an explicit request list (trace
@@ -131,207 +73,11 @@ pub fn simulate_fusion(
 pub fn simulate_fusion_requests(
     chip: &mut ChipSim,
     model: &ModelConfig,
-    reqs: Vec<crate::serving::request::Request>,
+    reqs: Vec<Request>,
     cfg: &FusionConfig,
 ) -> anyhow::Result<Metrics> {
-    let layout = PipelineLayout::build(
-        chip.cfg.rows,
-        chip.cfg.cols,
-        cfg.tp,
-        cfg.stages,
-        cfg.placement,
-    )?;
-    let lps = layout.layers_per_stage(model.layers);
-    let core = chip.cfg.core;
-    let max_tokens = reqs.iter().map(|r| r.total_tokens()).max().unwrap_or(1);
-    let mut pipes: Vec<Pipe> = layout
-        .pipelines
-        .iter()
-        .map(|groups| Pipe {
-            stages: groups
-                .iter()
-                .enumerate()
-                .map(|(s, g)| {
-                    StageWorker::new(
-                        &core,
-                        model,
-                        g.clone(),
-                        cfg.strategy,
-                        lps[s].max(1),
-                        s + 1 == groups.len(),
-                        cfg.budget.max(cfg.chunk),
-                        cfg.kv_share,
-                        max_tokens,
-                    )
-                })
-                .collect(),
-            queue: VecDeque::new(),
-            active: Vec::new(),
-        })
-        .collect();
-    anyhow::ensure!(!pipes.is_empty(), "no pipelines fit the chip");
-
-    let total = reqs.len();
-    let n_pipes = pipes.len();
-    for (i, r) in reqs.into_iter().enumerate() {
-        pipes[i % n_pipes].queue.push_back(r);
-    }
-
-    let freq = chip_freq(chip);
-    let mut metrics = Metrics::new(freq);
-    let mut done = 0usize;
-    let mut guard = 0u64;
-    while done < total {
-        guard += 1;
-        anyhow::ensure!(
-            guard < 4_000_000,
-            "fusion scheduler livelock: {done}/{total} done"
-        );
-        // Pick the pipeline with the earliest actionable work.
-        let (pi, t) = pipes
-            .iter()
-            .enumerate()
-            .filter_map(|(i, p)| p.next_action(chip).map(|t| (i, t)))
-            .min_by_key(|&(_, t)| t)
-            .ok_or_else(|| anyhow::anyhow!("deadlock: {done}/{total} requests done"))?;
-        done += tick(chip, model, cfg, &mut pipes[pi], t, &mut metrics, freq);
-    }
-    Ok(metrics)
-}
-
-/// One scheduler iteration on one pipeline. Returns completions.
-fn tick(
-    chip: &mut ChipSim,
-    model: &ModelConfig,
-    cfg: &FusionConfig,
-    pipe: &mut Pipe,
-    t: Cycle,
-    metrics: &mut Metrics,
-    freq: f64,
-) -> usize {
-    pipe.stages[0].advance_to(chip, t);
-    let now = pipe.stage0_now(chip);
-
-    // Admit arrived requests while capacity lasts.
-    while let Some(front) = pipe.queue.front() {
-        let arrived = secs_to_cycles(front.arrival_s, freq) <= now;
-        let capacity =
-            pipe.active.len() < cfg.max_batch && pipe.stages.iter().all(|s| s.can_admit());
-        if !arrived || !capacity {
-            break;
-        }
-        let r = pipe.queue.pop_front().unwrap();
-        for s in &mut pipe.stages {
-            s.admit(r.id);
-        }
-        pipe.active.push(Active {
-            req: r,
-            prefilled: 0,
-            generated: 0,
-            first_token: None,
-            ready_at: 0,
-        });
-    }
-
-    // Build the fused batch under the token budget: decode first. Decode
-    // items are additionally capped to 1/stages of the ready set so that
-    // consecutive ticks form microbatches that *pipeline* through the
-    // stages instead of draining the whole pipe per token (items not taken
-    // now are taken by the immediately following tick on stage 0).
-    let mut items = Vec::new();
-    let mut budget = cfg.budget as u64;
-    let mut decode_idx = Vec::new();
-    let mut prefill_idx = Vec::new();
-    let n_ready = pipe
-        .active
-        .iter()
-        .filter(|a| !a.is_done() && !a.is_prefilling() && a.ready_at <= now)
-        .count();
-    let micro_cap = n_ready.div_ceil(pipe.stages.len().max(1)).max(1);
-    for (i, a) in pipe.active.iter().enumerate() {
-        if a.is_done() {
-            continue;
-        }
-        if !a.is_prefilling()
-            && a.ready_at <= now
-            && budget > 0
-            && decode_idx.len() < micro_cap
-        {
-            items.push(BatchItem::decode(
-                a.req.id,
-                a.req.input_len as u64 + a.generated,
-            ));
-            decode_idx.push(i);
-            budget -= 1;
-        }
-    }
-    for (i, a) in pipe.active.iter().enumerate() {
-        if a.is_prefilling() && budget > 0 {
-            let remaining = a.req.input_len as u64 - a.prefilled;
-            let chunk = remaining.min(cfg.chunk as u64).min(budget);
-            items.push(BatchItem::prefill(a.req.id, chunk, a.prefilled + chunk));
-            prefill_idx.push((i, chunk));
-            budget -= chunk;
-        }
-    }
-    if items.is_empty() {
-        return 0;
-    }
-    let batch = IterBatch::new(items);
-
-    // Stream the batch through the pipeline stages.
-    let q = batch.total_q_tokens();
-    let mut finish = 0;
-    for s in 0..pipe.stages.len() {
-        finish = pipe.stages[s].run(chip, model, &batch);
-        if s + 1 < pipe.stages.len() {
-            let bytes = pipe.stages[s].handoff_bytes(&chip.cfg.clone(), model, q);
-            let src = pipe.stages[s].group.coords[0];
-            let dst = pipe.stages[s + 1].group.coords[0];
-            let tr = chip.send(src, dst, bytes, OpClass::P2P);
-            finish = finish.max(tr.finish);
-        }
-    }
-
-    // Update request states.
-    let mut completions = 0;
-    for (i, chunk) in prefill_idx {
-        let a = &mut pipe.active[i];
-        a.prefilled += chunk;
-        if !a.is_prefilling() {
-            // Final prefill chunk emits the first output token.
-            a.first_token = Some(finish);
-            a.generated = 1;
-            a.ready_at = finish;
-        }
-    }
-    for i in decode_idx {
-        let a = &mut pipe.active[i];
-        a.generated += 1;
-        a.ready_at = finish;
-    }
-    // Retire completed requests.
-    let mut i = 0;
-    while i < pipe.active.len() {
-        if pipe.active[i].is_done() {
-            let a = pipe.active.swap_remove(i);
-            for s in &mut pipe.stages {
-                s.release(a.req.id);
-            }
-            metrics.record(RequestRecord {
-                id: a.req.id,
-                arrival: secs_to_cycles(a.req.arrival_s, freq),
-                first_token: a.first_token.unwrap_or(finish),
-                finish,
-                input_tokens: a.req.input_len as u64,
-                output_tokens: a.req.output_len as u64,
-            });
-            completions += 1;
-        } else {
-            i += 1;
-        }
-    }
-    completions
+    let mut sched = FusionScheduler::new(*cfg);
+    scheduler::simulate_requests(chip, model, reqs, &mut sched)
 }
 
 #[cfg(test)]

@@ -1,0 +1,464 @@
+//! Adaptive hybrid PD scheduler (FlexNPU-style dynamic co-location).
+//!
+//! §4.3 of the paper frames PD-disaggregation vs PD-fusion as a *static*,
+//! workload-dependent choice. This scheduler makes it dynamic: it starts
+//! fully fused (every pipeline co-locates chunked prefill and decode) and
+//! monitors, over a sliding window, (1) the prefill backlog (queued plus
+//! in-flight unprefilled prompt tokens), (2) the decode population, and
+//! (3) TTFT/TBT SLO headroom over recent completions. Under sustained
+//! prefill pressure it *re-partitions*: individual pipelines flip to a
+//! dedicated-prefill role — they spend their whole token budget on
+//! chunked prefill and hand each freshly prefilled request to the
+//! least-loaded fused pipeline over a NoC KV transfer (exactly the
+//! disaggregated motion). When the backlog drains, pipelines flip back to
+//! fused.
+//!
+//! Two mechanisms bound re-partition thrash: a *hysteresis* vote count
+//! (the controller must suggest the same direction on consecutive
+//! evaluations) and a *minimum dwell* in scheduler steps between role
+//! changes. Role flips are also graceful: a pipeline flipping to
+//! prefill-only finishes its in-flight decodes locally (only requests
+//! finishing prefill *after* the flip hand off), so no KV state ever
+//! migrates mid-decode.
+//!
+//! With the controller quiescent (no role changes) the step/tick path is
+//! identical to [`FusionScheduler`](super::fusion::FusionScheduler) —
+//! asserted bit-for-bit by the tests below.
+
+use super::pipe::{self, Handoff, PendingDecode, Pipe};
+use super::Scheduler;
+use crate::config::ModelConfig;
+use crate::serving::metrics::Metrics;
+use crate::serving::pd_fusion::FusionConfig;
+use crate::serving::request::Request;
+use crate::sim::chip::ChipSim;
+use crate::sim::noc::Coord;
+use crate::util::units::cycles_to_secs;
+
+/// Hybrid scheduler configuration: the fused-pipeline knobs plus the
+/// adaptation controller's.
+#[derive(Debug, Clone, Copy)]
+pub struct HybridConfig {
+    /// Layout/budget knobs shared with PD fusion (tp, stages, chunk,
+    /// budget, max_batch, ...).
+    pub fusion: FusionConfig,
+    /// Controller evaluation period, in scheduler steps.
+    pub window: usize,
+    /// Consecutive same-direction evaluations required before one
+    /// re-partition (hysteresis).
+    pub hysteresis: usize,
+    /// Minimum scheduler steps between re-partitions (bounds thrash).
+    pub min_dwell: usize,
+    /// Max fraction of pipelines that may hold the dedicated-prefill role
+    /// (at least one pipeline always stays fused).
+    pub max_prefill_share: f64,
+    /// TTFT SLO target; sustained violations vote for more prefill pipes.
+    pub ttft_slo_s: f64,
+    /// TBT SLO target; sustained violations vote for more fused pipes.
+    pub tbt_slo_s: f64,
+}
+
+impl Default for HybridConfig {
+    fn default() -> Self {
+        HybridConfig {
+            fusion: FusionConfig::default(),
+            window: 24,
+            hysteresis: 2,
+            min_dwell: 48,
+            max_prefill_share: 0.5,
+            ttft_slo_s: 2.0,
+            tbt_slo_s: 0.050,
+        }
+    }
+}
+
+/// Role of one pipeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Role {
+    /// Co-locates chunked prefill and decode (fusion tick).
+    Fused,
+    /// Spends its whole budget on prefill; hands completed prefills off.
+    PrefillOnly,
+}
+
+/// The adaptive hybrid scheduler.
+pub struct HybridScheduler {
+    cfg: HybridConfig,
+    pipes: Vec<Pipe>,
+    roles: Vec<Role>,
+    steps: u64,
+    last_change: u64,
+    up_votes: u32,
+    down_votes: u32,
+    repartitions: u64,
+}
+
+impl HybridScheduler {
+    pub fn new(cfg: HybridConfig) -> Self {
+        HybridScheduler {
+            cfg,
+            pipes: Vec::new(),
+            roles: Vec::new(),
+            steps: 0,
+            last_change: 0,
+            up_votes: 0,
+            down_votes: 0,
+            repartitions: 0,
+        }
+    }
+
+    /// Pipelines currently holding the dedicated-prefill role.
+    pub fn n_prefill_pipes(&self) -> usize {
+        self.roles.iter().filter(|r| **r == Role::PrefillOnly).count()
+    }
+
+    /// Total role changes performed so far (thrash observability).
+    pub fn repartitions(&self) -> u64 {
+        self.repartitions
+    }
+
+    /// Hard cap on dedicated-prefill pipelines.
+    fn max_prefill(&self) -> usize {
+        let n = self.pipes.len();
+        if n <= 1 {
+            return 0;
+        }
+        (((n as f64) * self.cfg.max_prefill_share).floor() as usize).min(n - 1)
+    }
+
+    /// The controller's target number of dedicated-prefill pipelines.
+    fn desired_prefill_pipes(&self, metrics: &Metrics, freq: f64) -> usize {
+        let n = self.pipes.len();
+        // Pressure signal, both sides in "iterations of work": a prefill
+        // chunk occupies one iteration; each decode-phase request occupies
+        // roughly one budget slot per iteration.
+        let prefill_tokens: u64 = self.pipes.iter().map(|p| p.prefill_backlog_tokens()).sum();
+        let decode_reqs: u64 = self.pipes.iter().map(|p| p.decode_load() as u64).sum();
+        let chunk = self.cfg.fusion.chunk.max(1) as u64;
+        let prefill_iters = prefill_tokens.div_ceil(chunk);
+        let total = prefill_iters + decode_reqs;
+        if total == 0 {
+            return self.n_prefill_pipes(); // idle: no vote either way
+        }
+        let share = prefill_iters as f64 / total as f64;
+        let mut desired = (n as f64 * share).round() as usize;
+        // SLO headroom nudges over the recent completion window.
+        let records = metrics.records();
+        let tail = &records[records.len().saturating_sub(16)..];
+        if !tail.is_empty() {
+            let ttft_viol = tail
+                .iter()
+                .filter(|r| cycles_to_secs(r.ttft(), freq) > self.cfg.ttft_slo_s)
+                .count();
+            let tbt_viol = tail
+                .iter()
+                .filter(|r| r.tbt_secs(freq) > self.cfg.tbt_slo_s)
+                .count();
+            if ttft_viol * 2 > tail.len() {
+                desired += 1;
+            }
+            if tbt_viol * 2 > tail.len() {
+                desired = desired.saturating_sub(1);
+            }
+        }
+        desired.min(self.max_prefill())
+    }
+
+    /// One controller evaluation: vote, and re-partition one pipeline when
+    /// hysteresis and dwell both allow it.
+    fn evaluate(&mut self, metrics: &Metrics, freq: f64) {
+        let desired = self.desired_prefill_pipes(metrics, freq);
+        let current = self.n_prefill_pipes();
+        if desired > current {
+            self.up_votes += 1;
+            self.down_votes = 0;
+        } else if desired < current {
+            self.down_votes += 1;
+            self.up_votes = 0;
+        } else {
+            self.up_votes = 0;
+            self.down_votes = 0;
+            return;
+        }
+        if self.steps.saturating_sub(self.last_change) < self.cfg.min_dwell as u64 {
+            return;
+        }
+        if desired > current && self.up_votes >= self.cfg.hysteresis.max(1) as u32 {
+            self.dedicate_one();
+        } else if desired < current && self.down_votes >= self.cfg.hysteresis.max(1) as u32 {
+            self.fuse_one();
+        }
+    }
+
+    /// Flip the least decode-loaded fused pipeline to the prefill role.
+    fn dedicate_one(&mut self) {
+        if self.n_prefill_pipes() >= self.max_prefill() {
+            return;
+        }
+        let target = (0..self.pipes.len())
+            .filter(|&i| self.roles[i] == Role::Fused)
+            .min_by_key(|&i| (self.pipes[i].decode_load(), i));
+        if let Some(i) = target {
+            self.roles[i] = Role::PrefillOnly;
+            self.note_change();
+        }
+    }
+
+    /// Flip the least prefill-backlogged dedicated pipeline back to fused.
+    fn fuse_one(&mut self) {
+        let target = (0..self.pipes.len())
+            .filter(|&i| self.roles[i] == Role::PrefillOnly)
+            .min_by_key(|&i| (self.pipes[i].prefill_backlog_tokens(), i));
+        if let Some(i) = target {
+            self.roles[i] = Role::Fused;
+            self.note_change();
+        }
+    }
+
+    fn note_change(&mut self) {
+        self.up_votes = 0;
+        self.down_votes = 0;
+        self.last_change = self.steps;
+        self.repartitions += 1;
+    }
+
+    /// Move a freshly prefilled request to the least-loaded fused pipe:
+    /// stream its KV shards over the NoC (disagg-style), then enqueue it
+    /// for decode admission there.
+    fn dispatch_handoff(
+        &mut self,
+        chip: &mut ChipSim,
+        model: &ModelConfig,
+        src_pipe: usize,
+        h: Handoff,
+    ) -> anyhow::Result<()> {
+        let dst = (0..self.pipes.len())
+            .filter(|&i| self.roles[i] == Role::Fused)
+            .min_by_key(|&i| (self.pipes[i].decode_load(), i))
+            .ok_or_else(|| anyhow::anyhow!("hybrid scheduler has no fused pipeline"))?;
+        let total_kv = h.req.input_len as u64 * model.kv_bytes_per_token();
+        let src_stages: Vec<(Vec<Coord>, usize)> = self.pipes[src_pipe]
+            .stages
+            .iter()
+            .map(|s| (s.group.coords.clone(), s.exec.layers))
+            .collect();
+        let dst_coords: Vec<Coord> = self.pipes[dst]
+            .stages
+            .iter()
+            .flat_map(|s| s.group.coords.iter().copied())
+            .collect();
+        let ready_at = pipe::stream_kv_shards(chip, &src_stages, &dst_coords, total_kv, h.ready_at);
+        self.pipes[dst].pending.push_back(PendingDecode {
+            req: h.req,
+            first_token: h.first_token,
+            ready_at,
+        });
+        Ok(())
+    }
+}
+
+impl Scheduler for HybridScheduler {
+    fn name(&self) -> &'static str {
+        "hybrid"
+    }
+
+    fn init(
+        &mut self,
+        chip: &mut ChipSim,
+        model: &ModelConfig,
+        reqs: Vec<Request>,
+    ) -> anyhow::Result<()> {
+        let max_tokens = reqs.iter().map(|r| r.total_tokens()).max().unwrap_or(1);
+        self.pipes = pipe::build_pipes(chip, model, &self.cfg.fusion, max_tokens)?;
+        self.roles = vec![Role::Fused; self.pipes.len()];
+        // Same static round-robin assignment as fusion: a dedicated
+        // prefill pipe prefills its own share and hands decode phases off.
+        let n = self.pipes.len();
+        for (i, r) in reqs.into_iter().enumerate() {
+            self.pipes[i % n].queue.push_back(r);
+        }
+        self.steps = 0;
+        self.last_change = 0;
+        self.up_votes = 0;
+        self.down_votes = 0;
+        self.repartitions = 0;
+        Ok(())
+    }
+
+    fn step(
+        &mut self,
+        chip: &mut ChipSim,
+        model: &ModelConfig,
+        metrics: &mut Metrics,
+    ) -> anyhow::Result<usize> {
+        let freq = chip.cfg.freq_mhz;
+        self.steps += 1;
+        if self.cfg.window > 0 && self.steps % self.cfg.window as u64 == 0 {
+            self.evaluate(metrics, freq);
+        }
+        // Pick the pipeline with the earliest actionable work.
+        let (pi, t) = self
+            .pipes
+            .iter()
+            .enumerate()
+            .filter_map(|(i, p)| p.next_action(chip, freq).map(|t| (i, t)))
+            .min_by_key(|&(_, t)| t)
+            .ok_or_else(|| anyhow::anyhow!("hybrid deadlock: no actionable pipeline"))?;
+        let extract = self.roles[pi] == Role::PrefillOnly;
+        let mut handoffs = Vec::new();
+        let completions = self.pipes[pi].tick(
+            chip,
+            model,
+            &self.cfg.fusion,
+            t,
+            metrics,
+            freq,
+            extract,
+            &mut handoffs,
+        );
+        for h in handoffs {
+            self.dispatch_handoff(chip, model, pi, h)?;
+        }
+        Ok(completions)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ArrivalProcess, ChipConfig, WorkloadConfig};
+    use crate::serving::pd_fusion::simulate_fusion;
+    use crate::serving::request;
+    use crate::serving::scheduler::{simulate, simulate_requests};
+    use crate::sim::tracer::OpClass;
+
+    /// A controller that can never fire (window never reached).
+    fn quiescent(fusion: FusionConfig) -> HybridConfig {
+        HybridConfig {
+            fusion,
+            window: usize::MAX,
+            ..HybridConfig::default()
+        }
+    }
+
+    /// An eager controller for small test workloads.
+    fn eager(fusion: FusionConfig) -> HybridConfig {
+        HybridConfig {
+            fusion,
+            window: 4,
+            hysteresis: 1,
+            min_dwell: 0,
+            ..HybridConfig::default()
+        }
+    }
+
+    #[test]
+    fn quiescent_hybrid_is_bitwise_identical_to_fusion() {
+        // With no role changes the hybrid tick path must be the fusion tick
+        // path, record for record — this pins the trait refactor.
+        let model = ModelConfig::qwen3_4b();
+        let w = WorkloadConfig::sharegpt_like(6);
+        let fcfg = FusionConfig::default();
+        let mut c1 = ChipSim::new(ChipConfig::large_core());
+        let mf = simulate_fusion(&mut c1, &model, &w, &fcfg).unwrap();
+        let mut c2 = ChipSim::new(ChipConfig::large_core());
+        let mut sched = HybridScheduler::new(quiescent(fcfg));
+        let mh = simulate(&mut c2, &model, &w, &mut sched).unwrap();
+        assert_eq!(sched.repartitions(), 0);
+        assert_eq!(mf.records(), mh.records());
+        assert_eq!(c1.makespan(), c2.makespan());
+    }
+
+    #[test]
+    fn controller_dedicates_prefill_pipes_under_pressure() {
+        // A burst of long prompts with tiny outputs is pure prefill
+        // pressure: the controller must re-partition at least once and
+        // every request must still retire exactly once.
+        let model = ModelConfig::qwen3_4b();
+        let w = WorkloadConfig::fixed_ratio(2048, 4, 12);
+        let reqs = request::generate(&w);
+        let mut chip = ChipSim::new(ChipConfig::large_core());
+        let mut sched = HybridScheduler::new(eager(FusionConfig::default()));
+        let m = simulate_requests(&mut chip, &model, reqs, &mut sched).unwrap();
+        assert_eq!(m.n_requests(), 12);
+        assert!(
+            sched.repartitions() > 0,
+            "controller never re-partitioned under prefill pressure"
+        );
+        let out: u64 = m.records().iter().map(|r| r.output_tokens).sum();
+        assert_eq!(out, 12 * 4, "handoff lost or invented tokens");
+        for r in m.records() {
+            assert!(r.first_token >= r.arrival, "{r:?}");
+            assert!(r.finish >= r.first_token, "{r:?}");
+        }
+    }
+
+    #[test]
+    fn handoffs_move_kv_over_the_noc() {
+        let model = ModelConfig::qwen3_4b();
+        let w = WorkloadConfig::fixed_ratio(2048, 8, 12);
+        let mut chip = ChipSim::new(ChipConfig::large_core());
+        let mut sched = HybridScheduler::new(eager(FusionConfig::default()));
+        let m = simulate(&mut chip, &model, &w, &mut sched).unwrap();
+        assert_eq!(m.n_requests(), 12);
+        if sched.repartitions() > 0 && sched.n_prefill_pipes() > 0 {
+            assert!(
+                chip.aggregate_tracer().cycles(OpClass::KvTransfer) > 0,
+                "dedicated prefill pipes must stream KV to fused pipes"
+            );
+        }
+    }
+
+    #[test]
+    fn hysteresis_and_dwell_bound_repartition_thrash() {
+        let model = ModelConfig::qwen3_4b();
+        let w = WorkloadConfig::fixed_ratio(1024, 8, 10)
+            .with_arrival(ArrivalProcess::Poisson { rate: 4.0 });
+        let mut chip = ChipSim::new(ChipConfig::large_core());
+        let cfg = HybridConfig {
+            fusion: FusionConfig::default(),
+            window: 4,
+            hysteresis: 1,
+            min_dwell: 1_000_000, // effectively one change per run
+            ..HybridConfig::default()
+        };
+        let mut sched = HybridScheduler::new(cfg);
+        let m = simulate(&mut chip, &model, &w, &mut sched).unwrap();
+        assert_eq!(m.n_requests(), 10);
+        assert!(
+            sched.repartitions() <= 1,
+            "dwell violated: {} repartitions",
+            sched.repartitions()
+        );
+    }
+
+    #[test]
+    fn at_least_one_pipe_always_stays_fused() {
+        let model = ModelConfig::qwen3_4b();
+        let w = WorkloadConfig::fixed_ratio(4096, 2, 8);
+        let mut chip = ChipSim::new(ChipConfig::large_core());
+        let mut cfg = eager(FusionConfig::default());
+        cfg.max_prefill_share = 1.0; // ask for everything; cap must hold
+        let mut sched = HybridScheduler::new(cfg);
+        let m = simulate(&mut chip, &model, &w, &mut sched).unwrap();
+        assert_eq!(m.n_requests(), 8);
+        assert!(
+            sched.n_prefill_pipes() < 4,
+            "all pipes dedicated: decode would starve"
+        );
+    }
+
+    #[test]
+    fn single_token_outputs_finish_at_prefill_even_on_dedicated_pipes() {
+        let model = ModelConfig::qwen3_4b();
+        let w = WorkloadConfig::fixed_ratio(1024, 1, 8);
+        let mut chip = ChipSim::new(ChipConfig::large_core());
+        let mut sched = HybridScheduler::new(eager(FusionConfig::default()));
+        let m = simulate(&mut chip, &model, &w, &mut sched).unwrap();
+        assert_eq!(m.n_requests(), 8);
+        for r in m.records() {
+            assert_eq!(r.first_token, r.finish, "{r:?}");
+            assert_eq!(r.output_tokens, 1);
+        }
+    }
+}

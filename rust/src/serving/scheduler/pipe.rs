@@ -1,0 +1,524 @@
+//! Shared fused-pipeline machinery: the chunked-prefill budget scheduler
+//! over one pipeline of [`StageWorker`] stages.
+//!
+//! [`FusionScheduler`](super::fusion::FusionScheduler) runs every pipe in
+//! fused mode; [`HybridScheduler`](super::hybrid::HybridScheduler) reuses
+//! the exact same tick for its fused pipes and flips individual pipes into
+//! *prefill-only* mode, where freshly prefilled requests are extracted as
+//! [`Handoff`]s (their decode phase runs on a fused pipe after a NoC KV
+//! transfer) instead of decoding locally.
+
+use crate::config::ModelConfig;
+use crate::model::{BatchItem, IterBatch};
+use crate::serving::layout::PipelineLayout;
+use crate::serving::metrics::{Metrics, RequestRecord};
+use crate::serving::pd_fusion::FusionConfig;
+use crate::serving::request::Request;
+use crate::serving::worker::StageWorker;
+use crate::sim::chip::ChipSim;
+use crate::sim::noc::Coord;
+use crate::sim::tracer::OpClass;
+use crate::util::units::{secs_to_cycles, Cycle};
+use std::collections::VecDeque;
+
+/// In-flight request state on a pipe.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct Active {
+    pub req: Request,
+    /// Prompt tokens already prefilled.
+    pub prefilled: u64,
+    /// Output tokens generated (first comes from the final prefill chunk).
+    pub generated: u64,
+    pub first_token: Option<Cycle>,
+    /// Earliest cycle the next decode step may start (autoregressive
+    /// dependency — this is what makes deep pipelines hurt decode).
+    pub ready_at: Cycle,
+}
+
+impl Active {
+    pub fn is_prefilling(&self) -> bool {
+        self.prefilled < self.req.input_len as u64
+    }
+
+    pub fn is_done(&self) -> bool {
+        !self.is_prefilling() && self.generated >= self.req.output_len as u64
+    }
+}
+
+/// A decode-phase request transferred to a fused pipe (hybrid handoff):
+/// its prefill ran elsewhere and its KV arrives at `ready_at`.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct PendingDecode {
+    pub req: Request,
+    pub first_token: Cycle,
+    pub ready_at: Cycle,
+}
+
+/// A freshly prefilled request leaving a prefill-only pipe.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct Handoff {
+    pub req: Request,
+    pub first_token: Cycle,
+    pub ready_at: Cycle,
+}
+
+/// One pipeline of TP stages with its request queue and in-flight set.
+pub(crate) struct Pipe {
+    pub stages: Vec<StageWorker>,
+    pub queue: VecDeque<Request>,
+    pub active: Vec<Active>,
+    /// Transferred decode-phase requests not yet admitted to the KV cache
+    /// (always empty under pure fusion).
+    pub pending: VecDeque<PendingDecode>,
+}
+
+/// Carve the chip into fused pipelines per the fusion layout knobs.
+pub(crate) fn build_pipes(
+    chip: &ChipSim,
+    model: &ModelConfig,
+    cfg: &FusionConfig,
+    max_tokens: usize,
+) -> anyhow::Result<Vec<Pipe>> {
+    let layout = PipelineLayout::build(
+        chip.cfg.rows,
+        chip.cfg.cols,
+        cfg.tp,
+        cfg.stages,
+        cfg.placement,
+    )?;
+    let lps = layout.layers_per_stage(model.layers);
+    let core = chip.cfg.core;
+    let pipes: Vec<Pipe> = layout
+        .pipelines
+        .iter()
+        .map(|groups| Pipe {
+            stages: groups
+                .iter()
+                .enumerate()
+                .map(|(s, g)| {
+                    StageWorker::new(
+                        &core,
+                        model,
+                        g.clone(),
+                        cfg.strategy,
+                        lps[s].max(1),
+                        s + 1 == groups.len(),
+                        cfg.budget.max(cfg.chunk),
+                        cfg.kv_share,
+                        max_tokens,
+                    )
+                })
+                .collect(),
+            queue: VecDeque::new(),
+            active: Vec::new(),
+            pending: VecDeque::new(),
+        })
+        .collect();
+    anyhow::ensure!(!pipes.is_empty(), "no pipelines fit the chip");
+    Ok(pipes)
+}
+
+/// Stream a request's KV shards over the NoC: each source stage holds
+/// `layers / total layers` of the KV, split evenly across its cores, and
+/// every source core sends its shard to a destination core round-robin.
+/// Returns the cycle at which the last shard lands. Shared by the disagg
+/// prefill→decode transfer and the hybrid prefill-pipe handoff, so the
+/// KV-transfer accounting cannot diverge between the two policies.
+pub(crate) fn stream_kv_shards(
+    chip: &mut ChipSim,
+    src_stages: &[(Vec<Coord>, usize)],
+    dst_coords: &[Coord],
+    total_kv: u64,
+    start: Cycle,
+) -> Cycle {
+    let n_layers: usize = src_stages.iter().map(|(_, layers)| *layers).sum();
+    let mut ready_at = start;
+    let mut di = 0usize;
+    for (coords, layers) in src_stages {
+        let stage_kv = total_kv * *layers as u64 / n_layers.max(1) as u64;
+        let per_core = stage_kv / coords.len().max(1) as u64;
+        for &src in coords {
+            let dst = dst_coords[di % dst_coords.len()];
+            di += 1;
+            let t = chip.send(src, dst, per_core, OpClass::KvTransfer);
+            ready_at = ready_at.max(t.finish);
+        }
+    }
+    ready_at
+}
+
+/// One iteration's admission under the token budget: decode steps first
+/// (they bound TBT), leftover budget to chunked prefill (SARATHI-style).
+/// Decode items are additionally capped to `1/n_stages` of the ready set so
+/// consecutive ticks form microbatches that *pipeline* through the stages.
+pub(crate) struct BatchPlan {
+    pub items: Vec<BatchItem>,
+    /// Indices into `active` of the scheduled decode steps.
+    pub decode_idx: Vec<usize>,
+    /// `(index into active, chunk tokens)` of the scheduled prefill chunks.
+    pub prefill_idx: Vec<(usize, u64)>,
+}
+
+pub(crate) fn plan_batch(
+    active: &[Active],
+    now: Cycle,
+    n_stages: usize,
+    cfg: &FusionConfig,
+) -> BatchPlan {
+    let mut items = Vec::new();
+    let mut budget = cfg.budget as u64;
+    let mut decode_idx = Vec::new();
+    let mut prefill_idx = Vec::new();
+    let n_ready = active
+        .iter()
+        .filter(|a| !a.is_done() && !a.is_prefilling() && a.ready_at <= now)
+        .count();
+    let micro_cap = n_ready.div_ceil(n_stages.max(1)).max(1);
+    for (i, a) in active.iter().enumerate() {
+        if a.is_done() {
+            continue;
+        }
+        if !a.is_prefilling() && a.ready_at <= now && budget > 0 && decode_idx.len() < micro_cap {
+            items.push(BatchItem::decode(
+                a.req.id,
+                a.req.input_len as u64 + a.generated,
+            ));
+            decode_idx.push(i);
+            budget -= 1;
+        }
+    }
+    for (i, a) in active.iter().enumerate() {
+        if a.is_prefilling() && budget > 0 {
+            let remaining = a.req.input_len as u64 - a.prefilled;
+            let chunk = remaining.min(cfg.chunk as u64).min(budget);
+            items.push(BatchItem::prefill(a.req.id, chunk, a.prefilled + chunk));
+            prefill_idx.push((i, chunk));
+            budget -= chunk;
+        }
+    }
+    BatchPlan {
+        items,
+        decode_idx,
+        prefill_idx,
+    }
+}
+
+impl Pipe {
+    pub(crate) fn stage0_now(&self, chip: &ChipSim) -> Cycle {
+        self.stages[0].now(chip)
+    }
+
+    /// Earliest cycle at which this pipe can do useful work, or `None`.
+    pub(crate) fn next_action(&self, chip: &ChipSim, freq: f64) -> Option<Cycle> {
+        let now = self.stage0_now(chip);
+        if self.active.iter().any(|a| a.is_prefilling()) {
+            return Some(now);
+        }
+        let next_decode = self
+            .active
+            .iter()
+            .filter(|a| !a.is_done())
+            .map(|a| a.ready_at)
+            .min();
+        if let Some(t) = next_decode {
+            return Some(now.max(t));
+        }
+        let pending = self.pending.front().map(|p| p.ready_at);
+        let queued = self
+            .queue
+            .front()
+            .map(|r| secs_to_cycles(r.arrival_s, freq));
+        match (pending, queued) {
+            (None, None) => None,
+            (a, b) => Some(now.max(a.unwrap_or(Cycle::MAX).min(b.unwrap_or(Cycle::MAX)))),
+        }
+    }
+
+    /// Decode-phase load (pending + active decodes) — the hybrid router's
+    /// least-loaded signal.
+    pub(crate) fn decode_load(&self) -> usize {
+        self.pending.len()
+            + self
+                .active
+                .iter()
+                .filter(|a| !a.is_prefilling() && !a.is_done())
+                .count()
+    }
+
+    /// Queued plus in-flight-unprefilled prompt tokens (the controller's
+    /// prefill-pressure signal).
+    pub(crate) fn prefill_backlog_tokens(&self) -> u64 {
+        let queued: u64 = self.queue.iter().map(|r| r.input_len as u64).sum();
+        let inflight: u64 = self
+            .active
+            .iter()
+            .filter(|a| a.is_prefilling())
+            .map(|a| a.req.input_len as u64 - a.prefilled)
+            .sum();
+        queued + inflight
+    }
+
+    /// One scheduler iteration on this pipe at time `t`. Returns the number
+    /// of retired requests; when `extract_handoffs` is set, requests whose
+    /// prefill completed this tick are pushed to `handoffs` (instead of
+    /// decoding locally) and do not count as retired unless already done.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn tick(
+        &mut self,
+        chip: &mut ChipSim,
+        model: &ModelConfig,
+        cfg: &FusionConfig,
+        t: Cycle,
+        metrics: &mut Metrics,
+        freq: f64,
+        extract_handoffs: bool,
+        handoffs: &mut Vec<Handoff>,
+    ) -> usize {
+        self.stages[0].advance_to(chip, t);
+        let now = self.stage0_now(chip);
+
+        // Admit arrived requests while capacity lasts.
+        while let Some(front) = self.queue.front() {
+            let arrived = secs_to_cycles(front.arrival_s, freq) <= now;
+            let capacity =
+                self.active.len() < cfg.max_batch && self.stages.iter().all(|s| s.can_admit());
+            if !arrived || !capacity {
+                break;
+            }
+            let r = self.queue.pop_front().unwrap();
+            for s in &mut self.stages {
+                s.admit(r.id);
+            }
+            self.active.push(Active {
+                req: r,
+                prefilled: 0,
+                generated: 0,
+                first_token: None,
+                ready_at: 0,
+            });
+        }
+
+        // Admit transferred decode-phase requests (hybrid handoffs): their
+        // prefill KV is appended on arrival, like a disagg decode group.
+        while let Some(front) = self.pending.front() {
+            if front.ready_at > now
+                || self.active.len() >= cfg.max_batch
+                || !self.stages.iter().all(|s| s.can_admit())
+            {
+                break;
+            }
+            let p = self.pending.pop_front().unwrap();
+            for s in &mut self.stages {
+                s.admit(p.req.id);
+                s.kv.append(p.req.id, p.req.input_len as u64);
+            }
+            self.active.push(Active {
+                req: p.req,
+                prefilled: p.req.input_len as u64,
+                generated: 1,
+                first_token: Some(p.first_token),
+                ready_at: p.ready_at,
+            });
+        }
+
+        let plan = plan_batch(&self.active, now, self.stages.len(), cfg);
+        if plan.items.is_empty() {
+            return 0;
+        }
+        let batch = IterBatch::new(plan.items);
+
+        // Stream the batch through the pipeline stages.
+        let q = batch.total_q_tokens();
+        let mut finish = 0;
+        for s in 0..self.stages.len() {
+            finish = self.stages[s].run(chip, model, &batch);
+            if s + 1 < self.stages.len() {
+                let bytes = self.stages[s].handoff_bytes(&chip.cfg.clone(), model, q);
+                let src = self.stages[s].group.coords[0];
+                let dst = self.stages[s + 1].group.coords[0];
+                let tr = chip.send(src, dst, bytes, OpClass::P2P);
+                finish = finish.max(tr.finish);
+            }
+        }
+
+        // Update request states.
+        let mut newly_prefilled: Vec<u64> = Vec::new();
+        for (i, chunk) in plan.prefill_idx {
+            let a = &mut self.active[i];
+            a.prefilled += chunk;
+            if !a.is_prefilling() {
+                // Final prefill chunk emits the first output token.
+                a.first_token = Some(finish);
+                a.generated = 1;
+                a.ready_at = finish;
+                newly_prefilled.push(a.req.id);
+            }
+        }
+        for i in plan.decode_idx {
+            let a = &mut self.active[i];
+            a.generated += 1;
+            a.ready_at = finish;
+        }
+
+        // Retire completed requests; in prefill-only mode, extract the
+        // requests that finished prefill this tick for decode handoff
+        // (draining decodes admitted earlier still finish locally).
+        let mut completions = 0;
+        let mut i = 0;
+        while i < self.active.len() {
+            if self.active[i].is_done() {
+                let a = self.active.swap_remove(i);
+                for s in &mut self.stages {
+                    s.release(a.req.id);
+                }
+                metrics.record(RequestRecord {
+                    id: a.req.id,
+                    arrival: secs_to_cycles(a.req.arrival_s, freq),
+                    first_token: a.first_token.unwrap_or(finish),
+                    finish,
+                    input_tokens: a.req.input_len as u64,
+                    output_tokens: a.req.output_len as u64,
+                });
+                completions += 1;
+            } else if extract_handoffs && newly_prefilled.contains(&self.active[i].req.id) {
+                let a = self.active.swap_remove(i);
+                for s in &mut self.stages {
+                    s.release(a.req.id);
+                }
+                handoffs.push(Handoff {
+                    req: a.req,
+                    first_token: a.first_token.unwrap_or(finish),
+                    ready_at: a.ready_at.max(finish),
+                });
+            } else {
+                i += 1;
+            }
+        }
+        completions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Phase;
+
+    fn req(id: u64, input: usize, output: usize) -> Request {
+        Request {
+            id,
+            arrival_s: 0.0,
+            input_len: input,
+            output_len: output,
+        }
+    }
+
+    fn decoding(id: u64, input: usize, output: usize, generated: u64, ready_at: Cycle) -> Active {
+        Active {
+            req: req(id, input, output),
+            prefilled: input as u64,
+            generated,
+            first_token: Some(1),
+            ready_at,
+        }
+    }
+
+    fn prefilling(id: u64, input: usize, prefilled: u64) -> Active {
+        Active {
+            req: req(id, input, 8),
+            prefilled,
+            generated: 0,
+            first_token: None,
+            ready_at: 0,
+        }
+    }
+
+    #[test]
+    fn decode_steps_precede_prefill_chunks() {
+        let active = vec![
+            prefilling(1, 1024, 0),
+            decoding(2, 64, 16, 4, 0),
+            prefilling(3, 512, 256),
+            decoding(4, 64, 16, 2, 0),
+        ];
+        let plan = plan_batch(&active, 100, 1, &FusionConfig::default());
+        let first_prefill = plan
+            .items
+            .iter()
+            .position(|i| i.phase == Phase::Prefill)
+            .unwrap();
+        let last_decode = plan
+            .items
+            .iter()
+            .rposition(|i| i.phase == Phase::Decode)
+            .unwrap();
+        assert!(
+            last_decode < first_prefill,
+            "decode-first ordering violated: {:?}",
+            plan.items
+        );
+        assert_eq!(plan.decode_idx, vec![1, 3]);
+    }
+
+    #[test]
+    fn chunk_accounting_respects_budget() {
+        let cfg = FusionConfig {
+            budget: 300,
+            chunk: 128,
+            ..FusionConfig::default()
+        };
+        let active = vec![
+            decoding(1, 64, 16, 4, 0),
+            prefilling(2, 1024, 0),
+            prefilling(3, 1024, 960), // only 64 tokens left
+            prefilling(4, 4096, 0),
+        ];
+        let plan = plan_batch(&active, 0, 1, &cfg);
+        let decode_units = plan.decode_idx.len() as u64;
+        let prefill_units: u64 = plan.prefill_idx.iter().map(|&(_, c)| c).sum();
+        assert!(decode_units + prefill_units <= 300, "budget exceeded");
+        for &(i, chunk) in &plan.prefill_idx {
+            assert!(chunk <= 128, "chunk {chunk} > configured 128");
+            assert!(chunk <= active[i].req.input_len as u64 - active[i].prefilled);
+        }
+        // Partial chunk for the nearly-done prompt.
+        assert!(plan.prefill_idx.contains(&(2, 64)));
+    }
+
+    #[test]
+    fn decode_microbatching_caps_per_stage_share() {
+        // 8 ready decodes on a 4-stage pipe: at most ceil(8/4)=2 per tick so
+        // consecutive ticks pipeline through the stages.
+        let active: Vec<Active> = (0..8).map(|i| decoding(i, 64, 16, 2, 0)).collect();
+        let plan = plan_batch(&active, 0, 4, &FusionConfig::default());
+        assert_eq!(plan.decode_idx.len(), 2);
+        // With a single stage, all 8 go at once.
+        let plan1 = plan_batch(&active, 0, 1, &FusionConfig::default());
+        assert_eq!(plan1.decode_idx.len(), 8);
+    }
+
+    #[test]
+    fn done_and_not_ready_requests_are_skipped() {
+        let active = vec![
+            decoding(1, 64, 4, 4, 0),   // done
+            decoding(2, 64, 16, 4, 500), // not ready until 500
+            decoding(3, 64, 16, 4, 0),  // ready
+        ];
+        let plan = plan_batch(&active, 100, 1, &FusionConfig::default());
+        assert_eq!(plan.decode_idx, vec![2]);
+        let plan_late = plan_batch(&active, 500, 1, &FusionConfig::default());
+        assert_eq!(plan_late.decode_idx, vec![1, 2]);
+    }
+
+    #[test]
+    fn zero_ready_decodes_still_allows_prefill() {
+        let active = vec![prefilling(1, 300, 0)];
+        let cfg = FusionConfig {
+            budget: 288,
+            chunk: 256,
+            ..FusionConfig::default()
+        };
+        let plan = plan_batch(&active, 0, 4, &cfg);
+        assert!(plan.decode_idx.is_empty());
+        assert_eq!(plan.prefill_idx, vec![(0, 256)]);
+    }
+}

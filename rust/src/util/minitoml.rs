@@ -9,7 +9,6 @@
 //! multi-line strings, datetimes.
 
 use std::collections::BTreeMap;
-use thiserror::Error;
 
 /// A parsed TOML value.
 #[derive(Debug, Clone, PartialEq)]
@@ -57,12 +56,19 @@ impl Value {
 }
 
 /// Parse error with 1-based line number.
-#[derive(Debug, Error)]
-#[error("minitoml parse error at line {line}: {msg}")]
+#[derive(Debug)]
 pub struct ParseError {
     pub line: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "minitoml parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 /// A parsed document: dotted-path keys (`table.key`) to values.
 #[derive(Debug, Clone, Default)]

@@ -1,0 +1,111 @@
+//! Golden regression: fixed-seed serving runs must be byte-stable.
+//!
+//! Two layers of pinning:
+//!
+//! 1. The `util::rng` generator itself is pinned against hard-coded
+//!    reference values (computed independently from the xoshiro256** +
+//!    SplitMix64 definition), so a silent RNG change cannot re-seed every
+//!    "deterministic" trace while the within-run comparisons still pass.
+//! 2. Fixed-seed fusion / disagg / hybrid runs on `qwen3_4b` are rendered
+//!    to a canonical text summary and compared byte-for-byte across two
+//!    independent simulations (fresh chip, fresh scheduler each time).
+
+use npusim::config::{ChipConfig, ModelConfig, WorkloadConfig};
+use npusim::serving::metrics::Metrics;
+use npusim::serving::pd_disagg::DisaggConfig;
+use npusim::serving::pd_fusion::FusionConfig;
+use npusim::serving::scheduler::{self, HybridConfig, SchedulerConfig};
+use npusim::sim::chip::ChipSim;
+use npusim::util::rng::Rng;
+use std::fmt::Write as _;
+
+#[test]
+fn rng_stream_matches_reference_values() {
+    // First four xoshiro256** outputs for the workload seed used by every
+    // preset (2025) and for the property-test base seed (0xA5A5), computed
+    // out-of-band from the generator definition.
+    let mut r = Rng::new(2025);
+    assert_eq!(r.next_u64(), 0xC9FC_BF65_C046_112F);
+    assert_eq!(r.next_u64(), 0x7B7B_3399_E150_A198);
+    assert_eq!(r.next_u64(), 0x68F6_F146_F11E_19C1);
+    assert_eq!(r.next_u64(), 0x8F60_5909_BBB6_33B2);
+
+    let mut r = Rng::new(0xA5A5);
+    assert_eq!(r.next_u64(), 0xFE8F_49D9_C1CD_F208);
+    assert_eq!(r.next_u64(), 0x4381_7C21_E0AE_2B2A);
+    assert_eq!(r.next_u64(), 0xBE67_4453_B7AF_0359);
+    assert_eq!(r.next_u64(), 0x3988_9EE4_1422_EED3);
+}
+
+/// Canonical text rendering of a metrics object: every integer field of
+/// every record (sorted by request id) plus the makespan. Any cycle-level
+/// drift shows up as a byte diff.
+fn summarize(m: &Metrics) -> String {
+    let mut records: Vec<_> = m.records().to_vec();
+    records.sort_by_key(|r| r.id);
+    let mut out = String::new();
+    let _ = writeln!(out, "n={} makespan={}", m.n_requests(), m.makespan());
+    for r in records {
+        let _ = writeln!(
+            out,
+            "id={} arrival={} first={} finish={} in={} out={}",
+            r.id, r.arrival, r.first_token, r.finish, r.input_tokens, r.output_tokens
+        );
+    }
+    out
+}
+
+fn run_once(sys: &SchedulerConfig, w: &WorkloadConfig) -> String {
+    let model = ModelConfig::qwen3_4b();
+    let mut chip = ChipSim::new(ChipConfig::large_core());
+    let mut sched = sys.build();
+    let m = scheduler::simulate(&mut chip, &model, w, sched.as_mut())
+        .unwrap_or_else(|e| panic!("{} failed: {e:#}", sys.name()));
+    summarize(&m)
+}
+
+#[test]
+fn fixed_seed_runs_are_byte_stable_across_runs() {
+    // One decode-leaning and one prefill-leaning fixed-seed workload; the
+    // same seed must reproduce the same per-request cycle timeline for all
+    // three schedulers.
+    let workloads = [
+        WorkloadConfig::fixed_ratio(256, 24, 6).with_seed(7),
+        WorkloadConfig::sharegpt_like(5).with_seed(11),
+    ];
+    let systems = [
+        SchedulerConfig::Fusion(FusionConfig::default()),
+        SchedulerConfig::Disagg(DisaggConfig::p42_d21()),
+        SchedulerConfig::Hybrid(HybridConfig {
+            // Aggressive controller so the adaptive path itself (not just
+            // the quiescent fusion-equivalent path) is pinned.
+            window: 8,
+            hysteresis: 1,
+            min_dwell: 8,
+            ..HybridConfig::default()
+        }),
+    ];
+    for w in &workloads {
+        for sys in &systems {
+            let a = run_once(sys, w);
+            let b = run_once(sys, w);
+            assert!(!a.is_empty());
+            assert_eq!(
+                a,
+                b,
+                "{} on {} is not deterministic across runs",
+                sys.name(),
+                w.name
+            );
+        }
+    }
+}
+
+#[test]
+fn different_seeds_change_the_timeline() {
+    // Guards against the summary being insensitive (e.g. constant output).
+    let sys = SchedulerConfig::Fusion(FusionConfig::default());
+    let a = run_once(&sys, &WorkloadConfig::sharegpt_like(4).with_seed(1));
+    let b = run_once(&sys, &WorkloadConfig::sharegpt_like(4).with_seed(2));
+    assert_ne!(a, b);
+}

@@ -1,0 +1,166 @@
+//! API-compatible **stub** of the `xla` crate (PJRT bindings).
+//!
+//! The offline build environment has no XLA/PJRT shared libraries, so this
+//! stub provides the exact type/function surface `npusim::runtime` and
+//! `npusim::coordinator` use. Every execution entry point returns an
+//! "unavailable" error at run time; pure-metadata helpers ([`Literal`]
+//! shape bookkeeping) behave faithfully so shape-validation code and its
+//! tests work. Swap this path dependency for the real `xla` crate to run
+//! the AOT artifacts.
+
+use std::fmt;
+
+/// Stub error type (mirrors `xla::Error` closely enough for `?`).
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what}: XLA/PJRT runtime unavailable — this build uses the in-tree \
+         stub (rust/vendor/xla); vendor the real `xla` crate to enable it"
+    )))
+}
+
+/// Element types (only the ones the repository converts to).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrimitiveType {
+    F32,
+    S32,
+}
+
+/// A host-side literal. The stub tracks only the element count so shape
+/// checks (`vec1(..).reshape(..)`) behave like the real crate.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    elems: usize,
+}
+
+impl Literal {
+    /// Rank-1 literal from a data slice.
+    pub fn vec1<T>(data: &[T]) -> Literal {
+        Literal { elems: data.len() }
+    }
+
+    /// Rank-0 literal.
+    pub fn scalar<T>(_value: T) -> Literal {
+        Literal { elems: 1 }
+    }
+
+    /// Reshape; errors when the element counts disagree (as the real crate
+    /// does).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n >= 0 && n as usize == self.elems {
+            Ok(self.clone())
+        } else {
+            Err(Error(format!(
+                "cannot reshape a literal of {} elements to {dims:?}",
+                self.elems
+            )))
+        }
+    }
+
+    /// Split a tuple literal into its elements (unavailable in the stub).
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        unavailable("Literal::decompose_tuple")
+    }
+
+    /// Convert to another element type (unavailable in the stub).
+    pub fn convert(&self, _ty: PrimitiveType) -> Result<Literal> {
+        unavailable("Literal::convert")
+    }
+
+    /// Copy out as a typed vector (unavailable in the stub).
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+}
+
+/// Parsed HLO module (never constructible through the stub).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        unavailable(&format!("HloModuleProto::from_text_file({path:?})"))
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// A device-side buffer handle.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// A compiled, loaded executable.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// A PJRT client. `cpu()` fails in the stub, so nothing downstream ever
+/// holds a live client.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reshape_checks_element_count() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[2, 2]).is_ok());
+        assert!(l.reshape(&[3]).is_err());
+        assert!(Literal::scalar(7i32).reshape(&[1]).is_ok());
+    }
+
+    #[test]
+    fn runtime_paths_report_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        let err = Literal::vec1(&[0i32]).to_vec::<i32>().unwrap_err();
+        assert!(format!("{err}").contains("unavailable"));
+    }
+}
