@@ -1,0 +1,19 @@
+//! Serving bench: prefix-sharing paged-KV study + operator-latency
+//! memoization sweep, emitting `BENCH_serving.json` (wall-clock sim time,
+//! simulated tokens/s, TTFT/TBT p50/p99, cache and memo hit rates).
+//!
+//! Run: `cargo run --release --example bench [-- --fast]`
+//! (equivalent to `cargo run --release -p npusim -- experiment bench`)
+
+use npusim::experiments::{self, Opts};
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::args().any(|a| a == "--fast");
+    let opts = Opts {
+        fast,
+        out_dir: Some("results".into()),
+    };
+    experiments::run("bench", &opts)?;
+    println!("wrote BENCH_serving.json (and results/BENCH_serving.json)");
+    Ok(())
+}

@@ -63,6 +63,33 @@ pub enum ArrivalProcess {
     },
 }
 
+/// Shared-prefix / multi-turn structure of a conversational workload
+/// (drives the prefix-caching study; `None` = independent requests).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PrefixSharing {
+    /// Distinct system prompts; conversations round-robin across them.
+    pub n_groups: usize,
+    /// Tokens of the per-group shared system prompt, prepended to every
+    /// conversation's first prompt (and part of all later contexts).
+    pub shared_prefix_len: usize,
+    /// Turns per conversation (1 = single-turn; each turn is a request
+    /// whose prompt carries the whole accumulated context).
+    pub turns: usize,
+    /// Gap between consecutive turns of one conversation, seconds.
+    pub think_time_s: f64,
+}
+
+impl Default for PrefixSharing {
+    fn default() -> Self {
+        PrefixSharing {
+            n_groups: 4,
+            shared_prefix_len: 1024,
+            turns: 2,
+            think_time_s: 5.0,
+        }
+    }
+}
+
 /// A complete workload description.
 #[derive(Debug, Clone, PartialEq)]
 pub struct WorkloadConfig {
@@ -72,6 +99,10 @@ pub struct WorkloadConfig {
     pub arrival: ArrivalProcess,
     pub n_requests: usize,
     pub seed: u64,
+    /// Shared-prefix / multi-turn structure (`None` = independent
+    /// requests; `input_len` then means the whole prompt, otherwise it
+    /// means the fresh per-turn user tokens on top of the shared context).
+    pub prefix: Option<PrefixSharing>,
 }
 
 impl WorkloadConfig {
@@ -95,6 +126,7 @@ impl WorkloadConfig {
             arrival: ArrivalProcess::Poisson { rate: 4.0 },
             n_requests,
             seed: 2025,
+            prefix: None,
         }
     }
 
@@ -118,6 +150,7 @@ impl WorkloadConfig {
             arrival: ArrivalProcess::Poisson { rate: 4.0 },
             n_requests,
             seed: 2025,
+            prefix: None,
         }
     }
 
@@ -140,6 +173,7 @@ impl WorkloadConfig {
             arrival: ArrivalProcess::Poisson { rate: 6.0 },
             n_requests,
             seed: 2025,
+            prefix: None,
         }
     }
 
@@ -166,6 +200,7 @@ impl WorkloadConfig {
             },
             n_requests,
             seed: 2025,
+            prefix: None,
         }
     }
 
@@ -179,7 +214,31 @@ impl WorkloadConfig {
             arrival: ArrivalProcess::Batch,
             n_requests,
             seed: 2025,
+            prefix: None,
         }
+    }
+
+    /// Shared-prefix conversational workload for the prefix-caching study:
+    /// multi-turn chats opening with a 1k-token shared system prompt (4
+    /// prompt groups), modest fresh user turns, chatbot-length outputs.
+    /// Most prompt tokens are shareable — the regime where prefix caching
+    /// pays (Mooncake reports >50% cache-able tokens in production).
+    pub fn shared_prefix(n_requests: usize) -> Self {
+        WorkloadConfig {
+            name: "shared-prefix".into(),
+            // Fresh user tokens per turn (on top of the shared context).
+            input_len: LenDist::Uniform(48, 192),
+            output_len: LenDist::Uniform(32, 128),
+            arrival: ArrivalProcess::Poisson { rate: 4.0 },
+            n_requests,
+            seed: 2025,
+            prefix: Some(PrefixSharing::default()),
+        }
+    }
+
+    pub fn with_prefix(mut self, prefix: PrefixSharing) -> Self {
+        self.prefix = Some(prefix);
+        self
     }
 
     pub fn with_arrival(mut self, arrival: ArrivalProcess) -> Self {

@@ -46,8 +46,9 @@ fn dispatch(args: &Args) -> Result<()> {
                 "npusim — LLM serving on multi-core NPUs (paper reproduction)\n\
                  subcommands: experiment | simulate | serve | validate | info\n\
                  e.g.  npusim experiment fig9\n      npusim experiment all --fast\n      \
+                 npusim experiment bench            # emits BENCH_serving.json\n      \
                  npusim simulate --mode fusion --model qwen3_4b --input 512 --output 64\n      \
-                 npusim simulate --mode hybrid --model qwen3_4b\n      \
+                 npusim simulate --mode hybrid --shared-prefix 1024 --prefix-cache --memo\n      \
                  npusim serve --prompt \"1,2,3,4\""
             );
             Ok(())
@@ -110,6 +111,8 @@ fn fusion_cfg_from(args: &Args) -> Result<FusionConfig> {
         stages: args.opt_parse_or("stages", 4)?,
         chunk: args.opt_parse_or("chunk", 256)?,
         budget: args.opt_parse_or("budget", 288)?,
+        prefix_cache: args.flag("prefix-cache"),
+        memo: args.flag("memo"),
         ..FusionConfig::default()
     })
 }
@@ -136,6 +139,30 @@ fn print_metrics(name: &str, m: &Metrics, chip: &ChipSim) {
         "SLO attainment (TTFT<2s, TBT<50ms)".into(),
         f3(m.slo_attainment(2.0, 0.050) * 100.0),
     ]);
+    // Prefix-cache / memo counters, when those features ran.
+    let c = &m.cache;
+    if c.prefix_lookups > 0 {
+        t.row(&[
+            "prefix-cache hit rate (%)".into(),
+            f3(c.prefix_hit_rate() * 100.0),
+        ]);
+        t.row(&[
+            "prefill tokens skipped".into(),
+            format!("{} ({:.1}%)", c.prefill_tokens_skipped, c.token_skip_rate() * 100.0),
+        ]);
+        t.row(&[
+            "KV bytes deduplicated (MB)".into(),
+            f3(c.kv_bytes_deduped as f64 / (1 << 20) as f64),
+        ]);
+        t.row(&["COW copies".into(), c.cow_copies.to_string()]);
+        t.row(&["prefix evictions".into(), c.prefix_evictions.to_string()]);
+    }
+    if c.memo_hits + c.memo_misses > 0 {
+        t.row(&[
+            "op-latency memo hit rate (%)".into(),
+            f3(c.memo_hit_rate() * 100.0),
+        ]);
+    }
     t.print();
     println!("\nper-op cycle breakdown:");
     for (class, cycles, pct) in chip.aggregate_tracer().breakdown() {
@@ -163,13 +190,26 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             .unwrap_or_else(ModelConfig::qwen3_4b),
     };
     let n = args.opt_parse_or::<usize>("requests", 16)?;
-    let workload = match (args.opt_parse::<usize>("input")?, args.opt_parse::<usize>("output")?) {
+    let mut workload = match (args.opt_parse::<usize>("input")?, args.opt_parse::<usize>("output")?)
+    {
         (Some(i), Some(o)) => WorkloadConfig::fixed_ratio(i, o, n),
         _ => bundle
             .as_ref()
             .map(|b| b.workload.clone())
             .unwrap_or_else(|| WorkloadConfig::decode_dominated(n)),
     };
+    // Shared-prefix / multi-turn structure (`--shared-prefix <tokens>`
+    // switches it on; pair with `--prefix-cache` to reuse the blocks).
+    if let Some(shared) = args.opt_parse::<usize>("shared-prefix")? {
+        let defaults = npusim::config::PrefixSharing::default();
+        workload = workload.with_prefix(npusim::config::PrefixSharing {
+            shared_prefix_len: shared,
+            n_groups: args.opt_parse_or("prefix-groups", defaults.n_groups)?,
+            turns: args.opt_parse_or("turns", defaults.turns)?,
+            think_time_s: args.opt_parse_or("think-time", defaults.think_time_s)?,
+        });
+        workload.name = format!("{}+prefix{shared}", workload.name);
+    }
 
     // Trace replay (`--trace file.jsonl`) overrides the synthetic workload.
     let trace = match args.opt("trace") {
@@ -197,6 +237,8 @@ fn cmd_simulate(args: &Args) -> Result<()> {
                 n_prefill: args.opt_parse_or("prefill-cores", 42)?,
                 n_decode: args.opt_parse_or("decode-cores", 21)?,
                 prefill_stages: args.opt_parse_or("stages", 6)?,
+                prefix_cache: args.flag("prefix-cache"),
+                memo: args.flag("memo"),
                 ..DisaggConfig::default()
             };
             match trace {

@@ -1,49 +1,68 @@
-//! Fine-grained SRAM block allocator (Fig. 5, left).
+//! Fine-grained SRAM block allocator (Fig. 5, left), now **ref-counted**
+//! so blocks can be shared between requests (prefix caching) and by the
+//! [`super::prefix::PrefixIndex`].
 //!
 //! The KV region of SRAM is carved into fixed-size blocks. Each request
-//! owns a chain (linked list) of block IDs — blocks from different
-//! requests interleave freely, exactly as in the paper's example where
-//! requests 2 and 3 arrive while request 1 is mid-generation. A free list
-//! recycles blocks when requests complete.
+//! owns a [`Chain`] (ordered block table) — blocks from different requests
+//! interleave freely, exactly as in the paper's example where requests 2
+//! and 3 arrive while request 1 is mid-generation. Every block carries a
+//! reference count: a freshly allocated block has one owner; sharing a
+//! block (`retain`) bumps the count, and a block only returns to the free
+//! list once every owner has released it — so a prefix block referenced by
+//! three requests plus the prefix index survives until all four drop it.
 
-/// Sentinel for "no next block" in the chain table.
-const NIL: u32 = u32::MAX;
-
-/// A request's handle on its block chain.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// A request's handle on its ordered block table.
+///
+/// Historically this was a linked list threaded through the allocator;
+/// prefix sharing requires blocks to appear in *multiple* tables with
+/// different successors, so each chain now owns its own ordering.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
 pub struct Chain {
-    head: u32,
-    tail: u32,
-    len: u32,
+    blocks: Vec<u32>,
 }
 
 impl Chain {
     pub fn empty() -> Self {
-        Chain {
-            head: NIL,
-            tail: NIL,
-            len: 0,
-        }
+        Chain { blocks: Vec::new() }
     }
 
     pub fn n_blocks(&self) -> usize {
-        self.len as usize
+        self.blocks.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.len == 0
+        self.blocks.is_empty()
+    }
+
+    /// The block ids of this chain, in order.
+    pub fn blocks(&self) -> &[u32] {
+        &self.blocks
+    }
+
+    /// Last block of the chain, if any.
+    pub fn last(&self) -> Option<u32> {
+        self.blocks.last().copied()
+    }
+
+    /// Append an externally allocated/retained block to the table.
+    pub fn push(&mut self, block: u32) {
+        self.blocks.push(block);
+    }
+
+    /// Replace the last block (copy-on-write divergence).
+    pub fn replace_last(&mut self, block: u32) {
+        *self.blocks.last_mut().expect("replace_last on empty chain") = block;
     }
 }
 
-/// Fixed-size block allocator over a byte capacity.
+/// Fixed-size, ref-counted block allocator over a byte capacity.
 #[derive(Debug, Clone)]
 pub struct BlockAllocator {
     block_bytes: u64,
-    /// `next[i]` = chain successor of block `i` (NIL terminates). Blocks on
-    /// the free list reuse the same table.
-    next: Vec<u32>,
-    free_head: u32,
-    n_free: u32,
+    /// `refcount[i] == 0` means block `i` is free.
+    refcount: Vec<u32>,
+    /// LIFO free stack, initialised reversed so ids allocate 0, 1, 2, …
+    free: Vec<u32>,
 }
 
 impl BlockAllocator {
@@ -52,16 +71,10 @@ impl BlockAllocator {
         assert!(block_bytes > 0, "zero block size");
         let n = (capacity_bytes / block_bytes) as usize;
         let n = n.min(u32::MAX as usize - 1);
-        // Free list initially links every block in order.
-        let mut next = vec![NIL; n];
-        for i in 0..n.saturating_sub(1) {
-            next[i] = (i + 1) as u32;
-        }
         BlockAllocator {
             block_bytes,
-            next,
-            free_head: if n == 0 { NIL } else { 0 },
-            n_free: n as u32,
+            refcount: vec![0; n],
+            free: (0..n as u32).rev().collect(),
         }
     }
 
@@ -70,58 +83,74 @@ impl BlockAllocator {
     }
 
     pub fn n_blocks(&self) -> usize {
-        self.next.len()
+        self.refcount.len()
     }
 
     pub fn n_free(&self) -> usize {
-        self.n_free as usize
+        self.free.len()
     }
 
     pub fn bytes_free(&self) -> u64 {
-        self.n_free as u64 * self.block_bytes
+        self.free.len() as u64 * self.block_bytes
     }
 
-    /// Append one block to `chain`. Returns `false` (chain unchanged) when
-    /// SRAM is exhausted — the caller spills to HBM instead.
-    pub fn append(&mut self, chain: &mut Chain) -> bool {
-        if self.free_head == NIL {
-            return false;
-        }
-        let blk = self.free_head;
-        self.free_head = self.next[blk as usize];
-        self.next[blk as usize] = NIL;
-        self.n_free -= 1;
-        if chain.tail == NIL {
-            chain.head = blk;
+    /// Current reference count of a block (0 = free).
+    pub fn refcount(&self, block: u32) -> u32 {
+        self.refcount[block as usize]
+    }
+
+    /// Allocate one block with a single owner; `None` when SRAM is
+    /// exhausted (the caller spills to HBM or evicts cached prefixes).
+    pub fn alloc(&mut self) -> Option<u32> {
+        let blk = self.free.pop()?;
+        debug_assert_eq!(self.refcount[blk as usize], 0, "free block with refs");
+        self.refcount[blk as usize] = 1;
+        Some(blk)
+    }
+
+    /// Add an owner to a live block (prefix sharing).
+    pub fn retain(&mut self, block: u32) {
+        let rc = &mut self.refcount[block as usize];
+        assert!(*rc > 0, "retain of free block {block}");
+        *rc += 1;
+    }
+
+    /// Drop one owner; returns `true` when this freed the block.
+    pub fn release_block(&mut self, block: u32) -> bool {
+        let rc = &mut self.refcount[block as usize];
+        assert!(*rc > 0, "double free of block {block}");
+        *rc -= 1;
+        if *rc == 0 {
+            self.free.push(block);
+            true
         } else {
-            self.next[chain.tail as usize] = blk;
+            false
         }
-        chain.tail = blk;
-        chain.len += 1;
-        true
     }
 
-    /// Release an entire chain back to the free list (request completed).
-    pub fn release(&mut self, chain: &mut Chain) {
-        if chain.head == NIL {
-            return;
+    /// Append one freshly allocated block to `chain`. Returns `false`
+    /// (chain unchanged) when SRAM is exhausted.
+    pub fn append(&mut self, chain: &mut Chain) -> bool {
+        match self.alloc() {
+            Some(blk) => {
+                chain.push(blk);
+                true
+            }
+            None => false,
         }
-        // Splice the whole chain onto the free list head in O(1).
-        self.next[chain.tail as usize] = self.free_head;
-        self.free_head = chain.head;
-        self.n_free += chain.len;
-        *chain = Chain::empty();
+    }
+
+    /// Release one owner of every block of a chain (request completed).
+    /// Shared blocks survive until their other owners release them.
+    pub fn release(&mut self, chain: &mut Chain) {
+        for blk in std::mem::take(&mut chain.blocks) {
+            self.release_block(blk);
+        }
     }
 
     /// Walk a chain's block IDs (diagnostics / tests).
     pub fn chain_blocks(&self, chain: &Chain) -> Vec<u32> {
-        let mut out = Vec::with_capacity(chain.n_blocks());
-        let mut cur = chain.head;
-        while cur != NIL {
-            out.push(cur);
-            cur = self.next[cur as usize];
-        }
-        out
+        chain.blocks.clone()
     }
 }
 
@@ -205,6 +234,42 @@ mod tests {
     }
 
     #[test]
+    fn shared_block_survives_until_last_owner_releases() {
+        let mut a = BlockAllocator::new(4 * 64, 64);
+        let blk = a.alloc().unwrap();
+        a.retain(blk); // second owner (e.g. the prefix index)
+        a.retain(blk); // third owner
+        assert_eq!(a.refcount(blk), 3);
+        assert!(!a.release_block(blk));
+        assert!(!a.release_block(blk));
+        assert_eq!(a.n_free(), 3);
+        assert!(a.release_block(blk), "last release frees");
+        assert_eq!(a.n_free(), 4);
+        assert_eq!(a.refcount(blk), 0);
+    }
+
+    #[test]
+    fn chains_can_share_prefix_blocks() {
+        let mut a = BlockAllocator::new(4 * 64, 64);
+        let mut r1 = Chain::empty();
+        a.append(&mut r1);
+        a.append(&mut r1);
+        // r2 shares r1's first block, then grows its own.
+        let shared = r1.blocks()[0];
+        a.retain(shared);
+        let mut r2 = Chain::empty();
+        r2.push(shared);
+        a.append(&mut r2);
+        assert_eq!(a.n_free(), 1);
+        a.release(&mut r1);
+        // The shared block is still live (r2 holds it); r1's private one freed.
+        assert_eq!(a.refcount(shared), 1);
+        assert_eq!(a.n_free(), 2);
+        a.release(&mut r2);
+        assert_eq!(a.n_free(), 4);
+    }
+
+    #[test]
     fn prop_no_block_shared_between_chains() {
         check("block exclusivity", 128, |rng| {
             let n_blocks = rng.range(1, 32);
@@ -229,6 +294,43 @@ mod tests {
                 }
             }
             assert_eq!(live + a.n_free(), a.n_blocks());
+        });
+    }
+
+    #[test]
+    fn prop_refcounts_conserve_blocks_under_sharing() {
+        // Random share/release interleavings: the allocator must never
+        // double-free, and (sum of refcounts == total owner references)
+        // with `free + live == n_blocks` at every step.
+        check("refcount conservation", 128, |rng| {
+            let n_blocks = rng.range(1, 24);
+            let mut a = BlockAllocator::new(n_blocks as u64 * 64, 64);
+            // owners[b] tracks how many references we believe block b has.
+            let mut owners: Vec<u32> = vec![0; n_blocks];
+            for _ in 0..rng.range(1, 128) {
+                let live: Vec<u32> = (0..n_blocks as u32).filter(|&b| owners[b as usize] > 0).collect();
+                let roll = rng.f64();
+                if roll < 0.4 {
+                    if let Some(b) = a.alloc() {
+                        assert_eq!(owners[b as usize], 0, "alloc returned live block");
+                        owners[b as usize] = 1;
+                    }
+                } else if roll < 0.7 && !live.is_empty() {
+                    let b = *rng.choose(&live);
+                    a.retain(b);
+                    owners[b as usize] += 1;
+                } else if !live.is_empty() {
+                    let b = *rng.choose(&live);
+                    let freed = a.release_block(b);
+                    owners[b as usize] -= 1;
+                    assert_eq!(freed, owners[b as usize] == 0);
+                }
+                let live_now = owners.iter().filter(|&&o| o > 0).count();
+                assert_eq!(live_now + a.n_free(), a.n_blocks());
+                for (b, &o) in owners.iter().enumerate() {
+                    assert_eq!(a.refcount(b as u32), o, "block {b}");
+                }
+            }
         });
     }
 }

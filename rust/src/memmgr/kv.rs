@@ -1,11 +1,27 @@
 //! The combined multi-grained KV cache (Fig. 5): fine-grained SRAM blocks
-//! with spill into coarse-grained per-request HBM ring buffers.
+//! with spill into coarse-grained per-request HBM ring buffers, plus
+//! opt-in **prefix sharing** over the SRAM blocks.
 //!
 //! One `KvCache` instance manages the KV memory of one worker group (all
 //! cores of a TP group share the same residency statistics since the KV is
 //! head-sharded uniformly across them).
+//!
+//! With [`KvCache::enable_prefix_cache`] the cache keeps a
+//! [`PrefixIndex`] — a trie over token-block hashes. Admission walks the
+//! trie: the longest cached prefix is *shared* (blocks are ref-counted and
+//! charged physically once, with the request's residency still covering
+//! them for attention timing), and the request's own shareable prefix
+//! blocks are registered for future arrivals. A shared terminal block that
+//! is only partially filled is *frozen*: the first append past it triggers
+//! a copy-on-write into a private block, so divergence never corrupts a
+//! cached prefix. Released requests leave their registered blocks cached
+//! (the index holds a reference); when SRAM runs dry, ref-count-aware LRU
+//! eviction reclaims cold leaves — blocks referenced by live requests are
+//! never evicted. With the cache disabled, every code path is the
+//! pre-prefix-sharing one and simulations reproduce bit-for-bit.
 
 use super::blocks::{BlockAllocator, Chain};
+use super::prefix::{BlockKey, PrefixBlock, PrefixIndex, NO_NODE};
 use super::ring::{RingAlloc, RingBuffer};
 use std::collections::HashMap;
 
@@ -26,8 +42,27 @@ impl KvResidency {
 #[derive(Debug)]
 struct Entry {
     chain: Chain,
+    /// Appendable SRAM byte capacity over `chain` (a shared/frozen block
+    /// contributes only its fill, a private block its full size).
+    cap_bytes: u64,
+    /// `Some(fill)` when the chain's last block is shared and only `fill`
+    /// bytes of it belong to this request's prefix: appending past it
+    /// requires a copy-on-write into a private block.
+    frozen_tail_fill: Option<u64>,
     hbm: Option<RingAlloc>,
     res: KvResidency,
+}
+
+impl Entry {
+    fn new(hbm: Option<RingAlloc>) -> Self {
+        Entry {
+            chain: Chain::empty(),
+            cap_bytes: 0,
+            frozen_tail_fill: None,
+            hbm,
+            res: KvResidency::default(),
+        }
+    }
 }
 
 /// Outcome of appending tokens: how many new bytes landed where (the
@@ -38,11 +73,37 @@ pub struct Appended {
     pub hbm_bytes: u64,
 }
 
+/// Prefix-cache / sharing counters of one `KvCache` (all zero while the
+/// prefix cache is disabled). These are *per-cache* physical diagnostics;
+/// the request-level rates a serving run reports live in
+/// `serving::metrics::CacheStats` (recorded once per admission, not once
+/// per stage), which consumes only `cow_copies` / `prefix_evictions` from
+/// here.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct KvStats {
+    /// Prefixed admissions that consulted the index.
+    pub prefix_lookups: u64,
+    /// Prefixed admissions that matched at least one block.
+    pub prefix_hits: u64,
+    /// Tokens served from cached prefix blocks.
+    pub matched_tokens: u64,
+    /// Bytes *not* stored again thanks to sharing (matched tokens × B/tok).
+    pub deduped_bytes: u64,
+    /// Blocks registered into the prefix index.
+    pub inserted_blocks: u64,
+    /// Copy-on-write block copies on divergence from a shared prefix.
+    pub cow_copies: u64,
+    /// Cached blocks reclaimed by ref-count-aware LRU eviction.
+    pub prefix_evictions: u64,
+}
+
 /// Multi-grained KV cache for one worker group.
 #[derive(Debug)]
 pub struct KvCache {
     sram: BlockAllocator,
     hbm: RingBuffer,
+    /// Tokens per SRAM block (fine granularity).
+    block_tokens: u64,
     /// Bytes of K+V per token (for this group's layer/head shard).
     bytes_per_token: u64,
     /// HBM buffer size reserved per admitted request (max token length).
@@ -50,6 +111,9 @@ pub struct KvCache {
     entries: HashMap<u64, Entry>,
     /// Bytes that could not be stored anywhere (admission bug if > 0).
     overflow_bytes: u64,
+    /// `Some` once prefix sharing is enabled.
+    prefix: Option<PrefixIndex>,
+    stats: KvStats,
 }
 
 impl KvCache {
@@ -69,11 +133,31 @@ impl KvCache {
         KvCache {
             sram: BlockAllocator::new(sram_kv_bytes, block_bytes),
             hbm: RingBuffer::new(hbm_bytes),
+            block_tokens: block_tokens.max(1),
             bytes_per_token,
             max_request_bytes: max_tokens * bytes_per_token,
             entries: HashMap::new(),
             overflow_bytes: 0,
+            prefix: None,
+            stats: KvStats::default(),
         }
+    }
+
+    /// Turn on prefix sharing (off by default; with it off, behaviour is
+    /// bit-identical to the pre-prefix-cache implementation).
+    pub fn enable_prefix_cache(&mut self) {
+        if self.prefix.is_none() {
+            self.prefix = Some(PrefixIndex::new());
+        }
+    }
+
+    pub fn prefix_enabled(&self) -> bool {
+        self.prefix.is_some()
+    }
+
+    /// Sharing / eviction counters.
+    pub fn stats(&self) -> KvStats {
+        self.stats
     }
 
     /// Can another request be admitted? True when HBM can hold a whole
@@ -84,49 +168,194 @@ impl KvCache {
         self.hbm.capacity() == 0 || self.hbm.bytes_free() >= self.max_request_bytes
     }
 
+    /// Reserve the coarse-grained HBM buffer for one admission.
+    fn reserve_hbm(&mut self) -> Result<Option<RingAlloc>, ()> {
+        if self.hbm.capacity() > 0 {
+            match self.hbm.alloc(self.max_request_bytes) {
+                Some(a) => Ok(Some(a)),
+                None => Err(()),
+            }
+        } else {
+            Ok(None)
+        }
+    }
+
     /// Admit a request: reserve its coarse-grained HBM buffer.
     pub fn admit(&mut self, id: u64) -> bool {
         if self.entries.contains_key(&id) {
             return true;
         }
-        let hbm = if self.hbm.capacity() > 0 {
-            match self.hbm.alloc(self.max_request_bytes) {
-                Some(a) => Some(a),
-                None => return false,
-            }
-        } else {
-            None
+        let Ok(hbm) = self.reserve_hbm() else {
+            return false;
         };
-        self.entries.insert(
-            id,
-            Entry {
-                chain: Chain::empty(),
-                hbm,
-                res: KvResidency::default(),
-            },
-        );
+        self.entries.insert(id, Entry::new(hbm));
         true
+    }
+
+    /// Longest cached prefix (in tokens) for `keys`, capped at
+    /// `max_tokens`, without admitting or touching LRU state. Pipeline
+    /// stages use this to agree on a common match length before committing.
+    pub fn peek_prefix(&self, keys: &[BlockKey], max_tokens: u64) -> u64 {
+        self.prefix
+            .as_ref()
+            .map(|ix| ix.peek(keys, max_tokens))
+            .unwrap_or(0)
+    }
+
+    /// Admit a request with prefix sharing: match the longest cached
+    /// prefix of `keys` (at most `max_match_tokens` tokens), share those
+    /// blocks, and register the request's remaining shareable prefix
+    /// blocks for future arrivals. Returns the matched token count, or
+    /// `None` when HBM admission fails. Falls back to a plain [`admit`]
+    /// (matching nothing) while the prefix cache is disabled.
+    ///
+    /// Matched tokens are already KV-resident: the scheduler skips their
+    /// prefill chunks entirely, and the entry's residency covers them so
+    /// attention streams the right amount — but physically the bytes are
+    /// charged once across all sharers.
+    ///
+    /// [`admit`]: KvCache::admit
+    pub fn admit_prefixed(
+        &mut self,
+        id: u64,
+        keys: &[BlockKey],
+        max_match_tokens: u64,
+    ) -> Option<u64> {
+        if self.entries.contains_key(&id) {
+            return Some(0);
+        }
+        let Ok(hbm) = self.reserve_hbm() else {
+            return None;
+        };
+        let mut entry = Entry::new(hbm);
+        if self.prefix.is_none() || keys.is_empty() {
+            self.entries.insert(id, entry);
+            return Some(0);
+        }
+
+        // 1. Share the longest cached prefix.
+        self.stats.prefix_lookups += 1;
+        let matched: Vec<PrefixBlock> = self
+            .prefix
+            .as_mut()
+            .expect("prefix enabled")
+            .lookup(keys, max_match_tokens);
+        let mut matched_tokens = 0u64;
+        for m in &matched {
+            self.sram.retain(m.block);
+            entry.chain.push(m.block);
+            matched_tokens += m.tokens;
+            let fill = m.tokens * self.bytes_per_token;
+            entry.cap_bytes += fill;
+            entry.frozen_tail_fill = (m.tokens < self.block_tokens).then_some(fill);
+        }
+        entry.res.sram_bytes = matched_tokens * self.bytes_per_token;
+        if matched_tokens > 0 {
+            self.stats.prefix_hits += 1;
+            self.stats.matched_tokens += matched_tokens;
+            self.stats.deduped_bytes += matched_tokens * self.bytes_per_token;
+        }
+
+        // 2. Register the request's remaining shareable prefix blocks (the
+        //    owner's prefill fills them; arrivals in flight share them
+        //    immediately — Mooncake-style cache-aware admission).
+        let mut parent = matched.last().map(|m| m.node).unwrap_or(NO_NODE);
+        for &key in keys.iter().skip(matched.len()) {
+            // A capped match can leave already-cached continuations: never
+            // re-register them (that would orphan the cached node).
+            if self
+                .prefix
+                .as_ref()
+                .expect("prefix enabled")
+                .child_of(parent, key)
+                .is_some()
+            {
+                break;
+            }
+            let Some(blk) = self.alloc_block() else {
+                break; // SRAM exhausted: the rest of the prefix spills unshared
+            };
+            self.sram.retain(blk); // the index's own reference
+            let node = self
+                .prefix
+                .as_mut()
+                .expect("prefix enabled")
+                .insert(parent, key, blk);
+            entry.chain.push(blk);
+            let fill = key.tokens * self.bytes_per_token;
+            entry.cap_bytes += fill;
+            entry.frozen_tail_fill = (key.tokens < self.block_tokens).then_some(fill);
+            self.stats.inserted_blocks += 1;
+            parent = node;
+        }
+
+        self.entries.insert(id, entry);
+        Some(matched_tokens)
+    }
+
+    /// Allocate one SRAM block, reclaiming cold cached prefix blocks via
+    /// ref-count-aware LRU eviction when the free list is empty. Only
+    /// leaves referenced by nobody but the index are evictable.
+    fn alloc_block(&mut self) -> Option<u32> {
+        if let Some(b) = self.sram.alloc() {
+            return Some(b);
+        }
+        let ix = self.prefix.as_mut()?;
+        let sram = &self.sram;
+        let victim = ix.evict_lru(|b| sram.refcount(b) == 1)?;
+        self.sram.release_block(victim);
+        self.stats.prefix_evictions += 1;
+        self.sram.alloc()
     }
 
     /// Append `n_tokens` of KV for request `id`. New tokens fill SRAM
     /// blocks while any remain, then spill to the request's HBM buffer.
+    /// Appending past a shared partial block first copy-on-writes it.
     pub fn append(&mut self, id: u64, n_tokens: u64) -> Appended {
         let bytes = n_tokens * self.bytes_per_token;
-        let entry = self.entries.get_mut(&id).expect("append before admit");
+        let block_bytes = self.sram.block_bytes();
         let mut out = Appended::default();
-        // Fill the tail of the last SRAM block first.
-        let chain_cap = entry.chain.n_blocks() as u64 * self.sram.block_bytes();
-        let tail_room = chain_cap.saturating_sub(entry.res.sram_bytes);
+        // Fill the tail of the chain's appendable capacity first.
+        let (tail_room, has_frozen_tail) = {
+            let e = self.entries.get(&id).expect("append before admit");
+            (
+                e.cap_bytes.saturating_sub(e.res.sram_bytes),
+                e.frozen_tail_fill.is_some(),
+            )
+        };
         let into_tail = bytes.min(tail_room);
         out.sram_bytes += into_tail;
         let mut remaining = bytes - into_tail;
+        // Diverging past a shared partial block: copy-on-write it into a
+        // private block. The cached fill stays valid for the other sharers;
+        // the SRAM-to-SRAM copy itself is not charged (it is tiny next to
+        // the prefill work the sharing skipped).
+        if remaining > 0 && has_frozen_tail {
+            if let Some(nb) = self.alloc_block() {
+                let entry = self.entries.get_mut(&id).expect("append before admit");
+                let fill = entry.frozen_tail_fill.take().expect("checked above");
+                let old = entry.chain.last().expect("frozen tail without block");
+                entry.chain.replace_last(nb);
+                entry.cap_bytes += block_bytes - fill;
+                self.sram.release_block(old);
+                self.stats.cow_copies += 1;
+                let take = remaining.min(block_bytes - fill);
+                out.sram_bytes += take;
+                remaining -= take;
+            }
+        }
         // Grab new blocks while SRAM has them.
-        while remaining > 0 && self.sram.append(&mut entry.chain) {
-            let take = remaining.min(self.sram.block_bytes());
+        while remaining > 0 {
+            let Some(blk) = self.alloc_block() else { break };
+            let entry = self.entries.get_mut(&id).expect("append before admit");
+            entry.chain.push(blk);
+            entry.cap_bytes += block_bytes;
+            let take = remaining.min(block_bytes);
             out.sram_bytes += take;
             remaining -= take;
         }
         // Spill the rest to the HBM buffer.
+        let entry = self.entries.get_mut(&id).expect("append before admit");
         if remaining > 0 {
             match &entry.hbm {
                 Some(a) => {
@@ -152,7 +381,9 @@ impl KvCache {
         self.entries.get(&id).map(|e| e.res).unwrap_or_default()
     }
 
-    /// Release all memory of a completed request.
+    /// Release all memory of a completed request. Blocks registered in the
+    /// prefix index stay cached (the index holds a reference) until LRU
+    /// eviction reclaims them.
     pub fn release(&mut self, id: u64) {
         if let Some(mut e) = self.entries.remove(&id) {
             self.sram.release(&mut e.chain);
@@ -166,9 +397,15 @@ impl KvCache {
         self.entries.len()
     }
 
-    /// Aggregate SRAM KV occupancy across requests.
+    /// Aggregate *logical* SRAM KV occupancy across requests (shared bytes
+    /// count once per sharer — the attention-timing view).
     pub fn sram_used_bytes(&self) -> u64 {
         self.entries.values().map(|e| e.res.sram_bytes).sum()
+    }
+
+    /// *Physical* SRAM block bytes in use (shared blocks count once).
+    pub fn sram_physical_bytes(&self) -> u64 {
+        (self.sram.n_blocks() - self.sram.n_free()) as u64 * self.sram.block_bytes()
     }
 
     pub fn sram_free_bytes(&self) -> u64 {
@@ -194,6 +431,23 @@ mod tests {
     fn cache() -> KvCache {
         // 4 blocks of 16 tokens × 8 B/token; HBM fits 4 requests of 256 tok.
         KvCache::new(4 * 16 * 8, 16, 4 * 256 * 8, 8, 256)
+    }
+
+    /// Content keys for a `tokens`-long prefix tagged by `scope`.
+    fn keys(scope: u64, tokens: u64) -> Vec<BlockKey> {
+        let mut out = Vec::new();
+        let mut pos = 0;
+        let mut i = 0u64;
+        while pos < tokens {
+            let t = (tokens - pos).min(16);
+            out.push(BlockKey {
+                hash: scope.wrapping_mul(1_000_003) ^ (i << 8) ^ t,
+                tokens: t,
+            });
+            pos += t;
+            i += 1;
+        }
+        out
     }
 
     #[test]
@@ -264,6 +518,103 @@ mod tests {
     }
 
     #[test]
+    fn prefix_sharing_dedups_blocks_and_skips_storage() {
+        let mut kv = cache();
+        kv.enable_prefix_cache();
+        let ks = keys(7, 32); // two full blocks of shared prefix
+        // First request: miss; registers its prefix blocks while admitting.
+        assert_eq!(kv.admit_prefixed(1, &ks, u64::MAX), Some(0));
+        kv.append(1, 40); // 32 prefix + 8 unique tokens
+        // Second request: hits both prefix blocks.
+        assert_eq!(kv.admit_prefixed(2, &ks, u64::MAX), Some(32));
+        assert_eq!(kv.residency(2).sram_bytes, 32 * 8);
+        // Physically the two prefix blocks exist once: 1 used 3 blocks
+        // (2 prefix + 1 private), request 2 added none.
+        assert_eq!(kv.sram_physical_bytes(), 3 * 16 * 8);
+        let s = kv.stats();
+        assert_eq!(s.prefix_hits, 1);
+        assert_eq!(s.matched_tokens, 32);
+        assert_eq!(s.deduped_bytes, 32 * 8);
+        assert_eq!(s.inserted_blocks, 2);
+    }
+
+    #[test]
+    fn cached_prefix_survives_release_and_is_rematched() {
+        let mut kv = cache();
+        kv.enable_prefix_cache();
+        let ks = keys(3, 32);
+        kv.admit_prefixed(1, &ks, u64::MAX);
+        kv.append(1, 33);
+        kv.release(1);
+        // Blocks stay cached: a later request still matches.
+        assert_eq!(kv.peek_prefix(&ks, u64::MAX), 32);
+        assert_eq!(kv.admit_prefixed(2, &ks, u64::MAX), Some(32));
+    }
+
+    #[test]
+    fn cow_on_divergence_past_a_shared_partial_block() {
+        let mut kv = cache();
+        kv.enable_prefix_cache();
+        let ks = keys(9, 24); // one full block + one partial (8 tokens)
+        kv.admit_prefixed(1, &ks, u64::MAX);
+        kv.append(1, 24); // owner fills exactly the registered prefix
+        // Request 2 shares both blocks (incl. the partial terminal)…
+        assert_eq!(kv.admit_prefixed(2, &ks, u64::MAX), Some(24));
+        let before = kv.stats().cow_copies;
+        // …and diverges: the partial block must be COWed, not mutated.
+        let a = kv.append(2, 4);
+        assert_eq!(a.sram_bytes, 4 * 8);
+        assert_eq!(kv.stats().cow_copies, before + 1);
+        // A third request still matches the *original* cached prefix.
+        assert_eq!(kv.peek_prefix(&ks, u64::MAX), 24);
+        // Owner appending past its own registered partial also COWs.
+        kv.append(1, 2);
+        assert_eq!(kv.stats().cow_copies, before + 2);
+    }
+
+    #[test]
+    fn lru_eviction_reclaims_cold_prefixes_under_pressure() {
+        let mut kv = cache(); // 4 SRAM blocks
+        kv.enable_prefix_cache();
+        kv.admit_prefixed(1, &keys(1, 32), u64::MAX);
+        kv.append(1, 32);
+        kv.release(1); // 2 cached blocks, refcount 1 (index only)
+        // A new unshared request needs 3 blocks: eviction must free them.
+        kv.admit(2);
+        let a = kv.append(2, 48);
+        assert_eq!(a.sram_bytes, 48 * 8, "eviction should free SRAM");
+        assert!(kv.stats().prefix_evictions >= 1);
+    }
+
+    #[test]
+    fn live_shared_blocks_are_never_evicted() {
+        let mut kv = cache(); // 4 SRAM blocks
+        kv.enable_prefix_cache();
+        let ks = keys(5, 32);
+        kv.admit_prefixed(1, &ks, u64::MAX); // 2 registered blocks, live
+        kv.append(1, 32);
+        // Fill the remaining 2 blocks with an unshared request, then ask
+        // for more: the live prefix blocks must not be reclaimed.
+        kv.admit(2);
+        let a = kv.append(2, 48); // 32 fit, 16 spill
+        assert_eq!(a.sram_bytes, 32 * 8);
+        assert_eq!(a.hbm_bytes, 16 * 8);
+        assert_eq!(kv.stats().prefix_evictions, 0);
+        // Request 1 still matches its prefix for a sharer.
+        assert_eq!(kv.peek_prefix(&ks, u64::MAX), 32);
+    }
+
+    #[test]
+    fn match_cap_limits_sharing() {
+        let mut kv = cache();
+        kv.enable_prefix_cache();
+        let ks = keys(2, 48);
+        kv.admit_prefixed(1, &ks, u64::MAX);
+        // Cap below the cached 48 tokens: match stops at a block boundary.
+        assert_eq!(kv.admit_prefixed(2, &ks, 40), Some(32));
+    }
+
+    #[test]
     fn prop_residency_equals_appended_tokens() {
         check("kv residency conservation", 64, |rng| {
             let mut kv = KvCache::new(
@@ -290,6 +641,65 @@ mod tests {
                 assert_eq!(kv.residency(id).total(), tokens * 8, "id={id}");
             }
             assert_eq!(kv.overflow_bytes(), 0);
+        });
+    }
+
+    #[test]
+    fn prop_sharing_conserves_bytes_and_never_double_frees() {
+        // Random mixes of prefixed admissions (drawn from a few prefix
+        // scopes), appends, and releases: per-request residency must equal
+        // matched + appended tokens, physical blocks must never exceed
+        // capacity, and draining everything must leave only index-held
+        // blocks (which eviction can then fully reclaim).
+        check("kv sharing conservation", 48, |rng| {
+            let n_blocks = rng.range_u64(2, 12);
+            let mut kv = KvCache::new(n_blocks * 16 * 8, 16, 1 << 20, 8, 2048);
+            kv.enable_prefix_cache();
+            let mut tokens: HashMap<u64, u64> = HashMap::new();
+            let mut next_id = 0u64;
+            let mut live: Vec<u64> = Vec::new();
+            for _ in 0..rng.range(1, 60) {
+                let roll = rng.f64();
+                if roll < 0.4 {
+                    let scope = rng.range_u64(1, 4);
+                    let prefix_tokens = rng.range_u64(1, 64);
+                    let id = next_id;
+                    next_id += 1;
+                    let ks = keys(scope, prefix_tokens);
+                    if let Some(matched) = kv.admit_prefixed(id, &ks, u64::MAX) {
+                        assert!(matched <= prefix_tokens);
+                        tokens.insert(id, matched);
+                        live.push(id);
+                    }
+                } else if roll < 0.8 && !live.is_empty() {
+                    let id = *rng.choose(&live);
+                    let n = rng.range_u64(1, 48);
+                    let t = tokens.get_mut(&id).unwrap();
+                    if *t + n <= 2048 {
+                        kv.append(id, n);
+                        *t += n;
+                    }
+                } else if !live.is_empty() {
+                    let i = rng.range(0, live.len());
+                    let id = live.swap_remove(i);
+                    kv.release(id);
+                    tokens.remove(&id);
+                }
+                // Residency conservation for every live request.
+                for (&id, &t) in &tokens {
+                    assert_eq!(kv.residency(id).total(), t * 8, "id={id}");
+                }
+                assert!(kv.sram_physical_bytes() <= n_blocks * 16 * 8);
+                assert_eq!(kv.overflow_bytes(), 0);
+            }
+            // Drain: all remaining blocks belong to the index; evicting
+            // until dry must reclaim every block exactly once (the
+            // allocator panics on double frees).
+            for id in live {
+                kv.release(id);
+            }
+            while kv.alloc_block().is_some() {}
+            assert_eq!(kv.sram_free_bytes(), 0);
         });
     }
 }

@@ -1,18 +1,24 @@
 //! Hierarchical memory management (§4.2): multi-grained KV cache across
-//! SRAM and HBM, plus the SRAM budget planner.
+//! SRAM and HBM, the SRAM budget planner, and prefix-sharing block reuse.
 //!
 //! The paper's scheme (Fig. 5):
 //!
 //! - **SRAM** is scarce, so the KV cache living there is managed
-//!   *fine-grained*, at **block** granularity — a request's KV tensor is a
-//!   linked list of (possibly non-contiguous) block IDs, and a free-block
-//!   list recycles blocks as requests retire ([`blocks`]).
+//!   *fine-grained*, at **block** granularity — a request's KV tensor is an
+//!   ordered table of (possibly non-contiguous) block IDs, and a free-block
+//!   list recycles blocks as requests retire ([`blocks`]). Blocks are
+//!   ref-counted so identical prompt prefixes are stored once and shared.
 //! - **HBM** is plentiful and strongly prefers sequential access, so
 //!   spilled KV is managed *coarse-grained*: one whole max-length buffer
 //!   per request, organised as a **ring buffer** ([`ring`]).
 //! - [`kv`] combines both: appends go to SRAM while blocks remain, then
 //!   spill to the request's HBM buffer; per-request SRAM/HBM residency is
 //!   what the attention operator uses to charge HBM streaming time.
+//! - [`prefix`] is the deterministic radix/trie index over token-block
+//!   hashes behind prefix caching: admission matches the longest cached
+//!   prefix, shares its ref-counted blocks (copy-on-write on divergence),
+//!   and ref-count-aware LRU eviction keeps hot shared prefixes resident
+//!   under pressure.
 //! - [`planner`] computes the SRAM budget split between activations,
 //!   communication staging, temporaries, KV blocks, and resident weights
 //!   (in that priority order — §4.2 "weight and activation management").
@@ -20,9 +26,16 @@
 pub mod blocks;
 pub mod kv;
 pub mod planner;
+pub mod prefix;
 pub mod ring;
 
 pub use blocks::BlockAllocator;
-pub use kv::{KvCache, KvResidency};
+pub use kv::{KvCache, KvResidency, KvStats};
 pub use planner::SramPlan;
+pub use prefix::{BlockKey, PrefixIndex};
 pub use ring::RingBuffer;
+
+/// Tokens per fine-grained SRAM KV block — the prefix-cache hash
+/// granularity shared by every worker (hashes are only comparable when
+/// every cache blocks tokens identically).
+pub const KV_BLOCK_TOKENS: u64 = 16;

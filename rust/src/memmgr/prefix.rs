@@ -1,0 +1,282 @@
+//! Deterministic radix/trie index over token-block hashes — the lookup
+//! structure behind prefix-sharing KV caching (vLLM/SGLang-style automatic
+//! prefix caching, adapted to the paper's fine-grained SRAM blocks).
+//!
+//! Each node stands for one SRAM block holding one block's worth of prefix
+//! tokens; its key is the content hash of that token block, and its parent
+//! is the preceding block of the prefix — so a path from the root spells a
+//! token prefix, and the longest matching path is exactly the longest
+//! cached prefix of an incoming request. Nodes hold the *terminal* token
+//! count too, so a partially filled final block of a shared prefix (e.g. a
+//! system prompt that is not block-aligned) is matchable; divergence past
+//! it is handled by the [`super::kv::KvCache`]'s copy-on-write.
+//!
+//! Eviction is ref-count-aware LRU: only leaf nodes whose block has no
+//! owner besides the index itself are candidates, ordered by last use then
+//! node id — fully deterministic (no HashMap iteration order leaks into
+//! behaviour; the map is only ever *probed* by key).
+
+use std::collections::HashMap;
+
+/// Sentinel parent for root-level nodes.
+pub const NO_NODE: u32 = u32::MAX;
+
+/// One token block of a shareable prefix: the content hash of the block
+/// and how many tokens it holds (full blocks hold `block_tokens`; the
+/// terminal block of a prefix may hold fewer).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BlockKey {
+    pub hash: u64,
+    pub tokens: u64,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Node {
+    parent: u32,
+    hash: u64,
+    block: u32,
+    tokens: u64,
+    last_use: u64,
+    n_children: u32,
+    live: bool,
+}
+
+/// A matched or registered prefix block.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrefixBlock {
+    pub node: u32,
+    pub block: u32,
+    pub tokens: u64,
+}
+
+/// The trie of cached prefix blocks for one [`super::kv::KvCache`].
+#[derive(Debug, Default)]
+pub struct PrefixIndex {
+    nodes: Vec<Node>,
+    /// `(parent node | NO_NODE, block hash) -> node` — probed by key only.
+    children: HashMap<(u32, u64), u32>,
+    free_slots: Vec<u32>,
+    tick: u64,
+}
+
+impl PrefixIndex {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of live (cached) prefix blocks.
+    pub fn n_cached(&self) -> usize {
+        self.nodes.iter().filter(|n| n.live).count()
+    }
+
+    /// Advance the LRU clock (once per lookup).
+    fn bump(&mut self) -> u64 {
+        self.tick += 1;
+        self.tick
+    }
+
+    /// Is `key` already cached as a child of `parent`? (Used to stop
+    /// registration when a capped match left cached continuations.)
+    pub fn child_of(&self, parent: u32, key: BlockKey) -> Option<u32> {
+        self.child(parent, key)
+    }
+
+    /// Child of `parent` matching `key` exactly (hash *and* token count).
+    fn child(&self, parent: u32, key: BlockKey) -> Option<u32> {
+        let &ix = self.children.get(&(parent, key.hash))?;
+        let n = &self.nodes[ix as usize];
+        (n.live && n.tokens == key.tokens).then_some(ix)
+    }
+
+    /// Longest cached prefix of `keys`, capped at `max_tokens`. Touches
+    /// every matched node's LRU stamp. Read-only peek via `peek`.
+    pub fn lookup(&mut self, keys: &[BlockKey], max_tokens: u64) -> Vec<PrefixBlock> {
+        let now = self.bump();
+        let mut out = Vec::new();
+        let mut parent = NO_NODE;
+        let mut tokens = 0u64;
+        for &key in keys {
+            let Some(ix) = self.child(parent, key) else { break };
+            if tokens + key.tokens > max_tokens {
+                break;
+            }
+            tokens += key.tokens;
+            self.nodes[ix as usize].last_use = now;
+            out.push(PrefixBlock {
+                node: ix,
+                block: self.nodes[ix as usize].block,
+                tokens: key.tokens,
+            });
+            parent = ix;
+        }
+        out
+    }
+
+    /// Matched token count for `keys` without mutating LRU state (used to
+    /// agree on a common match length across pipeline stages).
+    pub fn peek(&self, keys: &[BlockKey], max_tokens: u64) -> u64 {
+        let mut parent = NO_NODE;
+        let mut tokens = 0u64;
+        for &key in keys {
+            let Some(ix) = self.child(parent, key) else { break };
+            if tokens + key.tokens > max_tokens {
+                break;
+            }
+            tokens += key.tokens;
+            parent = ix;
+        }
+        tokens
+    }
+
+    /// Register `block` as the child of `parent` for `key`. Returns the new
+    /// node (the caller must hold one reference on `block` for the index).
+    /// `parent` is `NO_NODE` for the first block of a prefix.
+    pub fn insert(&mut self, parent: u32, key: BlockKey, block: u32) -> u32 {
+        debug_assert!(
+            self.child(parent, key).is_none(),
+            "duplicate prefix insert"
+        );
+        let now = self.bump();
+        let node = Node {
+            parent,
+            hash: key.hash,
+            block,
+            tokens: key.tokens,
+            last_use: now,
+            n_children: 0,
+            live: true,
+        };
+        let ix = match self.free_slots.pop() {
+            Some(slot) => {
+                self.nodes[slot as usize] = node;
+                slot
+            }
+            None => {
+                self.nodes.push(node);
+                (self.nodes.len() - 1) as u32
+            }
+        };
+        self.children.insert((parent, key.hash), ix);
+        if parent != NO_NODE {
+            self.nodes[parent as usize].n_children += 1;
+        }
+        ix
+    }
+
+    /// Evict the least-recently-used leaf whose block `can_evict` (i.e. is
+    /// referenced by nobody but the index). Returns the evicted block so
+    /// the caller can drop the index's reference. Deterministic: ties on
+    /// `last_use` break on node id.
+    pub fn evict_lru(&mut self, can_evict: impl Fn(u32) -> bool) -> Option<u32> {
+        let victim = self
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| n.live && n.n_children == 0 && can_evict(n.block))
+            .min_by_key(|(ix, n)| (n.last_use, *ix))
+            .map(|(ix, _)| ix as u32)?;
+        Some(self.remove(victim))
+    }
+
+    /// Remove one leaf node, returning its block.
+    fn remove(&mut self, ix: u32) -> u32 {
+        let n = self.nodes[ix as usize];
+        debug_assert!(n.live && n.n_children == 0, "removing non-leaf {ix}");
+        self.children.remove(&(n.parent, n.hash));
+        if n.parent != NO_NODE {
+            self.nodes[n.parent as usize].n_children -= 1;
+        }
+        self.nodes[ix as usize].live = false;
+        self.free_slots.push(ix);
+        n.block
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(hash: u64) -> BlockKey {
+        BlockKey { hash, tokens: 16 }
+    }
+
+    #[test]
+    fn empty_index_matches_nothing() {
+        let mut ix = PrefixIndex::new();
+        assert!(ix.lookup(&[key(1), key(2)], u64::MAX).is_empty());
+        assert_eq!(ix.peek(&[key(1)], u64::MAX), 0);
+    }
+
+    #[test]
+    fn longest_prefix_match_walks_the_trie() {
+        let mut ix = PrefixIndex::new();
+        let a = ix.insert(NO_NODE, key(1), 10);
+        let b = ix.insert(a, key(2), 11);
+        ix.insert(b, key(3), 12);
+        let m = ix.lookup(&[key(1), key(2), key(9)], u64::MAX);
+        assert_eq!(m.len(), 2);
+        assert_eq!(m[0].block, 10);
+        assert_eq!(m[1].block, 11);
+        // Full path matches all three.
+        assert_eq!(ix.peek(&[key(1), key(2), key(3)], u64::MAX), 48);
+        // A different first block matches nothing.
+        assert!(ix.lookup(&[key(7)], u64::MAX).is_empty());
+    }
+
+    #[test]
+    fn partial_terminal_block_requires_exact_token_count() {
+        let mut ix = PrefixIndex::new();
+        let a = ix.insert(NO_NODE, key(1), 10);
+        ix.insert(a, BlockKey { hash: 2, tokens: 5 }, 11);
+        // Same hash, different fill: no match past the first block.
+        assert_eq!(ix.peek(&[key(1), key(2)], u64::MAX), 16);
+        assert_eq!(ix.peek(&[key(1), BlockKey { hash: 2, tokens: 5 }], u64::MAX), 21);
+    }
+
+    #[test]
+    fn max_tokens_caps_the_match() {
+        let mut ix = PrefixIndex::new();
+        let a = ix.insert(NO_NODE, key(1), 10);
+        ix.insert(a, key(2), 11);
+        let m = ix.lookup(&[key(1), key(2)], 16);
+        assert_eq!(m.len(), 1);
+        assert_eq!(ix.peek(&[key(1), key(2)], 20), 16);
+    }
+
+    #[test]
+    fn lru_eviction_prefers_cold_leaves_and_respects_refcounts() {
+        let mut ix = PrefixIndex::new();
+        let a = ix.insert(NO_NODE, key(1), 10);
+        ix.insert(a, key(2), 11);
+        ix.insert(NO_NODE, key(5), 12);
+        // Touch the second root so block 12 is no longer the coldest leaf…
+        ix.lookup(&[key(5)], u64::MAX);
+        // …leaving block 11 (leaf of the first path) as the LRU victim.
+        assert_eq!(ix.evict_lru(|_| true), Some(11));
+        // Now block 10 is a leaf again; a refcount guard can protect it.
+        assert_eq!(ix.evict_lru(|b| b != 10), Some(12));
+        assert_eq!(ix.evict_lru(|b| b != 10), None);
+        assert_eq!(ix.evict_lru(|_| true), Some(10));
+        assert_eq!(ix.n_cached(), 0);
+    }
+
+    #[test]
+    fn interior_nodes_are_never_evicted() {
+        let mut ix = PrefixIndex::new();
+        let a = ix.insert(NO_NODE, key(1), 10);
+        ix.insert(a, key(2), 11);
+        // Block 10 backs an interior node: only 11 is evictable.
+        assert_eq!(ix.evict_lru(|_| true), Some(11));
+    }
+
+    #[test]
+    fn slots_are_recycled_after_eviction() {
+        let mut ix = PrefixIndex::new();
+        ix.insert(NO_NODE, key(1), 10);
+        assert_eq!(ix.evict_lru(|_| true), Some(10));
+        let again = ix.insert(NO_NODE, key(3), 20);
+        assert_eq!(again, 0, "freed slot reused");
+        assert_eq!(ix.peek(&[key(3)], u64::MAX), 16);
+        assert_eq!(ix.n_cached(), 1);
+    }
+}

@@ -10,12 +10,13 @@
 use crate::config::{ChipConfig, ModelConfig};
 use crate::memmgr::{KvCache, SramPlan};
 use crate::model::batch::IterBatch;
+use crate::model::memo::{LatencyMemo, MemoEntry};
 use crate::parallel::collectives::{ring_all_reduce, ring_step, sub_ring_all_reduce};
 use crate::parallel::partition::PartitionStrategy;
 use crate::parallel::placement::{Placement, TpGroup};
 use crate::sim::chip::ChipSim;
 use crate::sim::compute;
-use crate::sim::tracer::OpClass;
+use crate::sim::tracer::{OpClass, OP_CLASSES};
 use crate::util::units::{ceil_div, Cycle};
 
 /// Static execution configuration for a worker group.
@@ -317,6 +318,142 @@ fn ffn_moe(
     uniform_op(chip, group, OpClass::Vector, t0, sum);
 }
 
+/// One transformer layer of this group's shard for `batch` (pre-attention
+/// norm through the post-FFN residual). Starts from a group sync and ends
+/// with a group-uniform op, so the whole group finishes synchronised.
+#[allow(clippy::too_many_arguments)]
+fn run_layer(
+    chip: &mut ChipSim,
+    group: &TpGroup,
+    cfg: &ChipConfig,
+    model: &ModelConfig,
+    exec: &ExecConfig,
+    batch: &IterBatch,
+    kv: &KvCache,
+    m: u64,
+    hbm_layer: u64,
+) {
+    let tp = group.len().max(1) as u64;
+    let h = model.hidden as u64;
+    let dtype = model.dtype_bytes;
+    let qd = model.q_dim() as u64;
+    let kvd = model.kv_dim() as u64;
+    let layer_w = (model.layer_weight_bytes() / tp).max(1);
+    let frac = |w_bytes: u64| hbm_layer * w_bytes / layer_w;
+
+    // Pre-attention RMSNorm.
+    let t0 = chip.sync(&group.coords);
+    let norm = compute::rmsnorm_cycles(&cfg.core, m, ceil_div(h, tp));
+    uniform_op(chip, group, OpClass::Vector, t0, norm);
+
+    // QKV projection.
+    let w_qkv = h * (qd + 2 * kvd) * dtype / tp;
+    dist_gemm(chip, group, exec.strategy, m, h, qd + 2 * kvd, frac(w_qkv));
+
+    // RoPE on Q and K.
+    let t0 = group_now(chip, group);
+    let rope = compute::rope_cycles(&cfg.core, m, ceil_div(qd + kvd, tp));
+    uniform_op(chip, group, OpClass::Vector, t0, rope);
+
+    // Attention over the KV cache.
+    attention_all(chip, group, cfg, model, batch, kv, exec.layers);
+
+    // Output projection + residual.
+    let w_o = qd * h * dtype / tp;
+    dist_gemm(chip, group, exec.strategy, m, qd, h, frac(w_o));
+    let t0 = group_now(chip, group);
+    let resid = compute::vector_cycles(&cfg.core, m * ceil_div(h, tp), 1);
+    uniform_op(chip, group, OpClass::Vector, t0, resid);
+
+    // Pre-FFN RMSNorm.
+    let t0 = group_now(chip, group);
+    uniform_op(chip, group, OpClass::Vector, t0, norm);
+
+    // FFN (dense or MoE) + residual.
+    if model.moe.is_some() {
+        ffn_moe(chip, group, cfg, model, exec.strategy, m, hbm_layer);
+    } else {
+        ffn_dense(chip, group, cfg, model, exec.strategy, m, hbm_layer);
+    }
+    let t0 = group_now(chip, group);
+    uniform_op(chip, group, OpClass::Vector, t0, resid);
+}
+
+/// Output logits (vocab-sharded; embeddings stream from HBM — they are
+/// too large to pin and are read once per iteration).
+fn run_logits(
+    chip: &mut ChipSim,
+    group: &TpGroup,
+    cfg: &ChipConfig,
+    model: &ModelConfig,
+    batch: &IterBatch,
+) {
+    let tp = group.len().max(1) as u64;
+    let h = model.hidden as u64;
+    let dtype = model.dtype_bytes;
+    let lm = batch.logit_tokens();
+    let t0 = chip.sync(&group.coords);
+    let norm = compute::rmsnorm_cycles(&cfg.core, lm, ceil_div(h, tp));
+    uniform_op(chip, group, OpClass::Vector, t0, norm);
+    let vocab_shard = ceil_div(model.vocab as u64, tp);
+    let embed_bytes = vocab_shard * h * dtype;
+    for &c in &group.coords {
+        chip.core_mut(c)
+            .gemm_hbm_weights(cfg, lm, h, vocab_shard, embed_bytes);
+    }
+    chip.sync(&group.coords);
+}
+
+/// Per-core tracer snapshot over the group (memo delta capture).
+fn tracer_snapshot(chip: &ChipSim, group: &TpGroup) -> Vec<Vec<Cycle>> {
+    group
+        .coords
+        .iter()
+        .map(|&c| {
+            OP_CLASSES
+                .iter()
+                .map(|&cl| chip.core(c).tracer.cycles(cl))
+                .collect()
+        })
+        .collect()
+}
+
+/// Tracer deltas per core since `before`, sparse per op class.
+fn tracer_delta(chip: &ChipSim, group: &TpGroup, before: &[Vec<Cycle>]) -> Vec<Vec<(OpClass, Cycle)>> {
+    group
+        .coords
+        .iter()
+        .zip(before)
+        .map(|(&c, b)| {
+            OP_CLASSES
+                .iter()
+                .enumerate()
+                .filter_map(|(i, &cl)| {
+                    let d = chip.core(c).tracer.cycles(cl) - b[i];
+                    (d > 0).then_some((cl, d))
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Replay a memoized execution `times` times: advance every core by the
+/// cached duration and re-record its tracer deltas. Does not touch NoC or
+/// HBM state — the memo's documented approximation.
+fn replay_entry(chip: &mut ChipSim, group: &TpGroup, entry: &MemoEntry, times: u64) {
+    if times == 0 {
+        return;
+    }
+    let t0 = chip.sync(&group.coords);
+    for (ci, &c) in group.coords.iter().enumerate() {
+        let core = chip.core_mut(c);
+        for &(class, cyc) in &entry.trace[ci] {
+            core.tracer.record(class, cyc * times);
+        }
+        core.advance_to(t0 + entry.duration * times);
+    }
+}
+
 /// Execute one full iteration (all of this group's layers, plus logits on
 /// the last stage) for `batch`. Appends the batch's new tokens to `kv`
 /// (charging spill writeback) and returns the group's finish cycle.
@@ -329,14 +466,31 @@ pub fn run_iteration(
     batch: &IterBatch,
     kv: &mut KvCache,
 ) -> Cycle {
+    run_iteration_memo(chip, group, model, plan, exec, batch, kv, None)
+}
+
+/// [`run_iteration`] with an optional operator-latency memo: when `memo`
+/// is `Some`, one layer is executed in detail per new shape signature and
+/// the remaining layers (and later identical iterations) replay the
+/// cached duration — see [`crate::model::memo`] for the approximation
+/// contract. With `memo == None` the path is bit-identical to the
+/// detailed simulator.
+#[allow(clippy::too_many_arguments)]
+pub fn run_iteration_memo(
+    chip: &mut ChipSim,
+    group: &TpGroup,
+    model: &ModelConfig,
+    plan: &SramPlan,
+    exec: &ExecConfig,
+    batch: &IterBatch,
+    kv: &mut KvCache,
+    mut memo: Option<&mut LatencyMemo>,
+) -> Cycle {
     if batch.is_empty() {
         return group_now(chip, group);
     }
     let cfg = chip.cfg.clone();
-    let tp = group.len().max(1) as u64;
-    let h = model.hidden as u64;
     let m = batch.total_q_tokens();
-    let dtype = model.dtype_bytes;
 
     // Append this iteration's tokens to the KV cache; spilled bytes are
     // written back to HBM (or offloaded over the NoC on SRAM-only chips).
@@ -351,65 +505,53 @@ pub fn run_iteration(
         }
     }
 
-    let qd = model.q_dim() as u64;
-    let kvd = model.kv_dim() as u64;
-    let layer_w = (model.layer_weight_bytes() / tp).max(1);
     let hbm_layer = plan.weight_hbm_bytes / exec.layers.max(1) as u64;
-    let frac = |w_bytes: u64| hbm_layer * w_bytes / layer_w;
 
-    for _layer in 0..exec.layers {
-        // Pre-attention RMSNorm.
-        let t0 = chip.sync(&group.coords);
-        let norm = compute::rmsnorm_cycles(&cfg.core, m, ceil_div(h, tp));
-        uniform_op(chip, group, OpClass::Vector, t0, norm);
-
-        // QKV projection.
-        let w_qkv = h * (qd + 2 * kvd) * dtype / tp;
-        dist_gemm(chip, group, exec.strategy, m, h, qd + 2 * kvd, frac(w_qkv));
-
-        // RoPE on Q and K.
-        let t0 = group_now(chip, group);
-        let rope = compute::rope_cycles(&cfg.core, m, ceil_div(qd + kvd, tp));
-        uniform_op(chip, group, OpClass::Vector, t0, rope);
-
-        // Attention over the KV cache.
-        attention_all(chip, group, &cfg, model, batch, kv, exec.layers);
-
-        // Output projection + residual.
-        let w_o = qd * h * dtype / tp;
-        dist_gemm(chip, group, exec.strategy, m, qd, h, frac(w_o));
-        let t0 = group_now(chip, group);
-        let resid = compute::vector_cycles(&cfg.core, m * ceil_div(h, tp), 1);
-        uniform_op(chip, group, OpClass::Vector, t0, resid);
-
-        // Pre-FFN RMSNorm.
-        let t0 = group_now(chip, group);
-        uniform_op(chip, group, OpClass::Vector, t0, norm);
-
-        // FFN (dense or MoE) + residual.
-        if model.moe.is_some() {
-            ffn_moe(chip, group, &cfg, model, exec.strategy, m, hbm_layer);
+    if let Some(memo) = memo.as_deref_mut() {
+        // Layers: one detailed execution per new shape, replay the rest.
+        let key = LatencyMemo::key_layer(batch, kv);
+        if memo.note(key) {
+            let entry = memo.peek(key).expect("noted hit");
+            replay_entry(chip, group, entry, exec.layers as u64);
         } else {
-            ffn_dense(chip, group, &cfg, model, exec.strategy, m, hbm_layer);
+            let t0 = chip.sync(&group.coords);
+            let before = tracer_snapshot(chip, group);
+            run_layer(chip, group, &cfg, model, exec, batch, kv, m, hbm_layer);
+            let t1 = group_now(chip, group);
+            let entry = MemoEntry {
+                duration: t1 - t0,
+                trace: tracer_delta(chip, group, &before),
+            };
+            replay_entry(chip, group, &entry, (exec.layers as u64).saturating_sub(1));
+            memo.put(key, entry);
         }
-        let t0 = group_now(chip, group);
-        uniform_op(chip, group, OpClass::Vector, t0, resid);
+        if exec.with_logits {
+            let key = LatencyMemo::key_logits(batch);
+            if memo.note(key) {
+                let entry = memo.peek(key).expect("noted hit");
+                replay_entry(chip, group, entry, 1);
+            } else {
+                let t0 = chip.sync(&group.coords);
+                let before = tracer_snapshot(chip, group);
+                run_logits(chip, group, &cfg, model, batch);
+                let t1 = group_now(chip, group);
+                memo.put(
+                    key,
+                    MemoEntry {
+                        duration: t1 - t0,
+                        trace: tracer_delta(chip, group, &before),
+                    },
+                );
+            }
+        }
+        return group_now(chip, group);
     }
 
-    // Output logits (vocab-sharded; embeddings stream from HBM — they are
-    // too large to pin and are read once per iteration).
+    for _layer in 0..exec.layers {
+        run_layer(chip, group, &cfg, model, exec, batch, kv, m, hbm_layer);
+    }
     if exec.with_logits {
-        let lm = batch.logit_tokens();
-        let t0 = chip.sync(&group.coords);
-        let norm = compute::rmsnorm_cycles(&cfg.core, lm, ceil_div(h, tp));
-        uniform_op(chip, group, OpClass::Vector, t0, norm);
-        let vocab_shard = ceil_div(model.vocab as u64, tp);
-        let embed_bytes = vocab_shard * h * dtype;
-        for &c in &group.coords {
-            chip.core_mut(c)
-                .gemm_hbm_weights(&cfg, lm, h, vocab_shard, embed_bytes);
-        }
-        chip.sync(&group.coords);
+        run_logits(chip, group, &cfg, model, batch);
     }
 
     group_now(chip, group)
@@ -605,5 +747,48 @@ mod tests {
         let t1 = run(PartitionStrategy::OneDimK, &b, 1);
         let t4 = run(PartitionStrategy::OneDimK, &b, 4);
         assert!(t4 > 3 * t1, "t1={t1} t4={t4}");
+    }
+
+    fn decode_run(memo: Option<&mut crate::model::memo::LatencyMemo>) -> Cycle {
+        let (mut chip, group) = setup(4);
+        let model = ModelConfig::qwen3_4b();
+        let p = plan(&chip.cfg.core, &model, &PlanRequest::default());
+        let mut kv = kv_for(&model, &p, 4, 4);
+        kv.admit(1);
+        kv.append(1, 255);
+        let exec = ExecConfig::new(PartitionStrategy::OneDimK, 4, true);
+        let mut finish = 0;
+        let mut memo = memo;
+        for step in 0..8u64 {
+            let b = IterBatch::new(vec![BatchItem::decode(1, 256 + step)]);
+            finish = run_iteration_memo(
+                &mut chip,
+                &group,
+                &model,
+                &p,
+                &exec,
+                &b,
+                &mut kv,
+                memo.as_deref_mut(),
+            );
+        }
+        finish
+    }
+
+    #[test]
+    fn memoized_decode_hits_and_tracks_detailed_latency() {
+        let detailed = decode_run(None);
+        let mut memo = crate::model::memo::LatencyMemo::new();
+        let memoized = decode_run(Some(&mut memo));
+        // 8 decode steps whose KV lengths share one 16-token bucket: one
+        // detailed layer + logits, everything else replayed.
+        assert!(memo.hits > 0, "no memo hits");
+        assert!(memo.hit_rate() > 0.5, "hit rate {}", memo.hit_rate());
+        // Contention-free single group: replayed time stays close.
+        let (lo, hi) = (detailed as f64 * 0.75, detailed as f64 * 1.25);
+        assert!(
+            (memoized as f64) > lo && (memoized as f64) < hi,
+            "memoized {memoized} vs detailed {detailed}"
+        );
     }
 }

@@ -1,0 +1,177 @@
+//! Operator-latency memoization for [`super::exec::run_iteration_memo`].
+//!
+//! The fig7–fig14 sweeps execute the same transformer layer millions of
+//! times with identical inputs: every layer of a pipeline stage has the
+//! same shapes, and consecutive decode iterations differ only by one KV
+//! token. The memo caches the measured duration (and per-core tracer
+//! deltas) of one detailed layer execution, keyed by the iteration's
+//! *shape signature* — per item `(phase, query tokens, KV-length bucket,
+//! HBM-residency bucket)` — and replays it for the remaining layers and
+//! for later iterations with the same signature.
+//!
+//! This is an explicitly **approximate fast path** (off by default, like
+//! the analytic `Fast` NoC/memory modes of Fig. 7b): KV lengths are
+//! bucketed to SRAM-block multiples and HBM residency to 256 KiB, and a
+//! replayed layer does not advance the NoC link/HBM bank state, so
+//! cross-group contention is under-modelled. With the memo disabled the
+//! execution path is bit-identical to the detailed simulator.
+
+use crate::memmgr::{KvCache, KV_BLOCK_TOKENS};
+use crate::model::batch::{IterBatch, Phase};
+use crate::sim::tracer::OpClass;
+use crate::util::units::Cycle;
+use std::collections::HashMap;
+
+/// HBM residency bucket width for memo keys.
+const HBM_BUCKET_BYTES: u64 = 256 << 10;
+
+/// One cached execution: duration plus per-core `(op class, cycles)`
+/// tracer deltas (indexed in the worker group's coordinate order).
+#[derive(Debug, Clone)]
+pub struct MemoEntry {
+    pub duration: Cycle,
+    pub trace: Vec<Vec<(OpClass, Cycle)>>,
+}
+
+/// Per-worker latency memo (each `StageWorker` owns its own: group
+/// geometry, layer shard and SRAM plan are constant per worker, so they
+/// need not appear in the key).
+#[derive(Debug, Default)]
+pub struct LatencyMemo {
+    entries: HashMap<u64, MemoEntry>,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl LatencyMemo {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            return 0.0;
+        }
+        self.hits as f64 / total as f64
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Count a hit or miss for `key`; returns whether it is cached.
+    /// Separated from [`peek`](LatencyMemo::peek) so the hit path can
+    /// borrow the entry immutably without cloning it (replay is the hot
+    /// path the memo exists to accelerate).
+    pub fn note(&mut self, key: u64) -> bool {
+        let hit = self.entries.contains_key(&key);
+        if hit {
+            self.hits += 1;
+        } else {
+            self.misses += 1;
+        }
+        hit
+    }
+
+    /// Cached entry for `key` (no hit/miss accounting).
+    pub fn peek(&self, key: u64) -> Option<&MemoEntry> {
+        self.entries.get(&key)
+    }
+
+    pub fn put(&mut self, key: u64, entry: MemoEntry) {
+        self.entries.insert(key, entry);
+    }
+
+    /// Signature of one transformer-layer execution for `batch`.
+    pub fn key_layer(batch: &IterBatch, kv: &KvCache) -> u64 {
+        let mut h = 0x4C41_5945_5221_7A31u64; // "LAYER!" tag
+        for item in &batch.items {
+            let phase = match item.phase {
+                Phase::Prefill => 1u64,
+                Phase::Decode => 2u64,
+            };
+            let kv_bucket = item.kv_tokens.div_ceil(KV_BLOCK_TOKENS);
+            let hbm_bucket = kv
+                .residency(item.request)
+                .hbm_bytes
+                .div_ceil(HBM_BUCKET_BYTES);
+            for v in [phase, item.q_tokens, kv_bucket, hbm_bucket] {
+                h = mix(h, v);
+            }
+        }
+        h
+    }
+
+    /// Signature of the output-logits execution for `batch`.
+    pub fn key_logits(batch: &IterBatch) -> u64 {
+        mix(0x4C4F_4749_5453_2121, batch.logit_tokens()) // "LOGITS!!" tag
+    }
+}
+
+fn mix(h: u64, v: u64) -> u64 {
+    let mut z = h ^ v.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::batch::BatchItem;
+
+    fn kv() -> KvCache {
+        KvCache::new(1 << 16, 16, 1 << 24, 8, 4096)
+    }
+
+    #[test]
+    fn identical_shapes_share_a_key_across_requests() {
+        let kv = kv();
+        let a = IterBatch::new(vec![BatchItem::decode(1, 100)]);
+        let b = IterBatch::new(vec![BatchItem::decode(2, 100)]);
+        assert_eq!(LatencyMemo::key_layer(&a, &kv), LatencyMemo::key_layer(&b, &kv));
+    }
+
+    #[test]
+    fn kv_growth_within_a_block_shares_a_key() {
+        let kv = kv();
+        let a = IterBatch::new(vec![BatchItem::decode(1, 97)]);
+        let b = IterBatch::new(vec![BatchItem::decode(1, 100)]);
+        let c = IterBatch::new(vec![BatchItem::decode(1, 177)]);
+        assert_eq!(LatencyMemo::key_layer(&a, &kv), LatencyMemo::key_layer(&b, &kv));
+        assert_ne!(LatencyMemo::key_layer(&a, &kv), LatencyMemo::key_layer(&c, &kv));
+    }
+
+    #[test]
+    fn phase_and_shape_changes_change_the_key() {
+        let kv = kv();
+        let d = IterBatch::new(vec![BatchItem::decode(1, 256)]);
+        let p = IterBatch::new(vec![BatchItem::prefill(1, 1, 256)]);
+        assert_ne!(LatencyMemo::key_layer(&d, &kv), LatencyMemo::key_layer(&p, &kv));
+        let two = IterBatch::new(vec![BatchItem::decode(1, 256), BatchItem::decode(2, 256)]);
+        assert_ne!(LatencyMemo::key_layer(&d, &kv), LatencyMemo::key_layer(&two, &kv));
+    }
+
+    #[test]
+    fn hit_accounting() {
+        let mut m = LatencyMemo::new();
+        assert!(!m.note(42));
+        assert!(m.peek(42).is_none());
+        m.put(
+            42,
+            MemoEntry {
+                duration: 10,
+                trace: vec![vec![(OpClass::Gemm, 10)]],
+            },
+        );
+        assert!(m.note(42));
+        assert!(m.peek(42).is_some());
+        assert_eq!((m.hits, m.misses), (1, 1));
+        assert!((m.hit_rate() - 0.5).abs() < 1e-9);
+    }
+}

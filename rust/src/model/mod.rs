@@ -19,6 +19,8 @@
 
 pub mod batch;
 pub mod exec;
+pub mod memo;
 
 pub use batch::{BatchItem, IterBatch, Phase};
 pub use exec::{run_iteration, ExecConfig};
+pub use memo::LatencyMemo;

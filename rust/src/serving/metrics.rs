@@ -44,11 +44,74 @@ impl RequestRecord {
     }
 }
 
+/// Prefix-cache and memoization counters of one serving run (all zero
+/// when both features are off).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Admissions that consulted the prefix cache.
+    pub prefix_lookups: u64,
+    /// Admissions that matched a non-empty cached prefix.
+    pub prefix_hits: u64,
+    /// Prompt tokens admitted (hit-rate denominator for skip fraction).
+    pub prefill_tokens_total: u64,
+    /// Prompt tokens whose prefill was skipped via cached prefixes.
+    pub prefill_tokens_skipped: u64,
+    /// Whole-model KV bytes deduplicated by sharing.
+    pub kv_bytes_deduped: u64,
+    /// Copy-on-write block copies on divergence (summed over workers).
+    pub cow_copies: u64,
+    /// Cached prefix blocks reclaimed by LRU eviction (summed).
+    pub prefix_evictions: u64,
+    /// Operator-latency memo hits / misses (summed over workers).
+    pub memo_hits: u64,
+    pub memo_misses: u64,
+}
+
+impl CacheStats {
+    /// Fraction of prefix lookups that hit.
+    pub fn prefix_hit_rate(&self) -> f64 {
+        if self.prefix_lookups == 0 {
+            return 0.0;
+        }
+        self.prefix_hits as f64 / self.prefix_lookups as f64
+    }
+
+    /// Fraction of admitted prompt tokens skipped by prefix caching.
+    pub fn token_skip_rate(&self) -> f64 {
+        if self.prefill_tokens_total == 0 {
+            return 0.0;
+        }
+        self.prefill_tokens_skipped as f64 / self.prefill_tokens_total as f64
+    }
+
+    pub fn memo_hit_rate(&self) -> f64 {
+        let total = self.memo_hits + self.memo_misses;
+        if total == 0 {
+            return 0.0;
+        }
+        self.memo_hits as f64 / total as f64
+    }
+
+    pub fn merge(&mut self, o: &CacheStats) {
+        self.prefix_lookups += o.prefix_lookups;
+        self.prefix_hits += o.prefix_hits;
+        self.prefill_tokens_total += o.prefill_tokens_total;
+        self.prefill_tokens_skipped += o.prefill_tokens_skipped;
+        self.kv_bytes_deduped += o.kv_bytes_deduped;
+        self.cow_copies += o.cow_copies;
+        self.prefix_evictions += o.prefix_evictions;
+        self.memo_hits += o.memo_hits;
+        self.memo_misses += o.memo_misses;
+    }
+}
+
 /// Aggregated metrics over a serving run.
 #[derive(Debug, Clone, Default)]
 pub struct Metrics {
     records: Vec<RequestRecord>,
     freq_mhz: f64,
+    /// Prefix-cache / memo counters (filled by the schedulers).
+    pub cache: CacheStats,
 }
 
 impl Metrics {
@@ -56,6 +119,7 @@ impl Metrics {
         Metrics {
             records: Vec::new(),
             freq_mhz,
+            cache: CacheStats::default(),
         }
     }
 
@@ -196,5 +260,33 @@ mod tests {
         assert_eq!(m.tokens_per_s(), 0.0);
         assert_eq!(m.slo_attainment(1.0, 1.0), 0.0);
         assert_eq!(m.makespan(), 0);
+        assert_eq!(m.cache, CacheStats::default());
+        assert_eq!(m.cache.prefix_hit_rate(), 0.0);
+        assert_eq!(m.cache.memo_hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn cache_stats_rates_and_merge() {
+        let mut a = CacheStats {
+            prefix_lookups: 8,
+            prefix_hits: 6,
+            prefill_tokens_total: 1000,
+            prefill_tokens_skipped: 400,
+            kv_bytes_deduped: 4096,
+            cow_copies: 2,
+            prefix_evictions: 1,
+            memo_hits: 30,
+            memo_misses: 10,
+        };
+        assert!((a.prefix_hit_rate() - 0.75).abs() < 1e-9);
+        assert!((a.token_skip_rate() - 0.4).abs() < 1e-9);
+        assert!((a.memo_hit_rate() - 0.75).abs() < 1e-9);
+        let b = a;
+        a.merge(&b);
+        assert_eq!(a.prefix_lookups, 16);
+        assert_eq!(a.kv_bytes_deduped, 8192);
+        assert_eq!(a.memo_hits, 60);
+        // Rates are scale-invariant under self-merge.
+        assert!((a.prefix_hit_rate() - 0.75).abs() < 1e-9);
     }
 }

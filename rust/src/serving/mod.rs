@@ -25,10 +25,10 @@ pub mod trace;
 pub mod worker;
 
 pub use layout::PipelineLayout;
-pub use metrics::{Metrics, RequestRecord};
+pub use metrics::{CacheStats, Metrics, RequestRecord};
 pub use pd_disagg::{simulate_disagg, DisaggConfig};
 pub use pd_fusion::{simulate_fusion, FusionConfig};
-pub use request::Request;
+pub use request::{Prefix, Request};
 pub use scheduler::{HybridConfig, HybridScheduler, Scheduler, SchedulerConfig};
 pub use trace::{load_jsonl, parse_jsonl};
 pub use worker::StageWorker;

@@ -42,6 +42,12 @@ pub struct DisaggConfig {
     /// Max concurrent decode requests per group.
     pub max_decode_batch: usize,
     pub kv_share: f64,
+    /// Prefix-sharing KV caching on the prefill pipelines (off = legacy
+    /// bit-exact behaviour).
+    pub prefix_cache: bool,
+    /// Operator-latency memoization (approximate fast path, off by
+    /// default).
+    pub memo: bool,
 }
 
 impl DisaggConfig {
@@ -59,6 +65,8 @@ impl DisaggConfig {
             decode_strategy: PartitionStrategy::OneDimK,
             max_decode_batch: 32,
             kv_share: 0.6,
+            prefix_cache: false,
+            memo: false,
         }
     }
 

@@ -37,6 +37,13 @@ pub struct FusionConfig {
     pub max_batch: usize,
     /// SRAM remainder split between KV and weights.
     pub kv_share: f64,
+    /// Prefix-sharing KV caching: admissions match their longest cached
+    /// prompt prefix and skip those prefill chunks (off = legacy bit-exact
+    /// behaviour).
+    pub prefix_cache: bool,
+    /// Operator-latency memoization (approximate fast path, off by
+    /// default — see [`crate::model::memo`]).
+    pub memo: bool,
 }
 
 impl Default for FusionConfig {
@@ -52,6 +59,8 @@ impl Default for FusionConfig {
             budget: 288,
             max_batch: 32,
             kv_share: 0.6,
+            prefix_cache: false,
+            memo: false,
         }
     }
 }

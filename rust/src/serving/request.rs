@@ -1,10 +1,43 @@
 //! Streaming request generation from a [`WorkloadConfig`] (§3.2's
 //! "streaming request inputs"): synthetic traces whose prompt/output length
 //! marginals and arrival processes match the ShareGPT / Mooncake
-//! characteristics the paper references (see DESIGN.md "Substitutions").
+//! characteristics the paper references (see DESIGN.md "Substitutions"),
+//! plus shared-prefix / multi-turn conversational traces for the
+//! prefix-caching study.
 
-use crate::config::{ArrivalProcess, WorkloadConfig};
+use crate::config::{ArrivalProcess, PrefixSharing, WorkloadConfig};
+use crate::memmgr::prefix::BlockKey;
 use crate::util::rng::Rng;
+
+/// Content identity of a request's shareable prompt prefix, at two scopes:
+///
+/// - the **group** scope is the system prompt shared by every conversation
+///   of a prefix group (`group_tokens` leading tokens);
+/// - the **conversation** scope is the accumulated context shared by the
+///   turns of one conversation (`conv_tokens` leading tokens, a superset
+///   of the group prefix on turns ≥ 2).
+///
+/// Token-block hashes derive deterministically from these ids, so two
+/// requests produce equal block hashes exactly where their simulated token
+/// streams agree. `Prefix::default()` means "nothing shareable".
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Prefix {
+    pub group_id: u64,
+    pub group_tokens: u32,
+    pub conv_id: u64,
+    pub conv_tokens: u32,
+}
+
+impl Prefix {
+    /// Total shareable leading tokens.
+    pub fn shared_tokens(&self) -> u64 {
+        (self.group_tokens as u64).max(self.conv_tokens as u64)
+    }
+
+    pub fn is_none(&self) -> bool {
+        self.shared_tokens() == 0
+    }
+}
 
 /// One serving request of the trace.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -16,56 +49,195 @@ pub struct Request {
     pub input_len: usize,
     /// Generation length in tokens.
     pub output_len: usize,
+    /// Shareable-prefix identity (default: nothing shareable).
+    pub prefix: Prefix,
 }
 
 impl Request {
     pub fn total_tokens(&self) -> usize {
         self.input_len + self.output_len
     }
+
+    /// Token-block content keys of this request's shareable prefix, at
+    /// `block_tokens` granularity. Blocks fully inside the group prefix
+    /// hash under the group scope (shared across conversations); later
+    /// blocks inside the conversation context hash under the conversation
+    /// scope (shared across turns); the terminal block may be partial.
+    /// The non-shareable remainder of the prompt gets no keys — it is
+    /// never cached.
+    pub fn block_keys(&self, block_tokens: u64) -> Vec<BlockKey> {
+        let shared = self.prefix.shared_tokens().min(self.input_len as u64);
+        if shared == 0 || block_tokens == 0 {
+            return Vec::new();
+        }
+        let group = (self.prefix.group_tokens as u64).min(shared);
+        let mut keys = Vec::new();
+        let mut pos = 0u64;
+        let mut idx = 0u64;
+        while pos < shared {
+            let end = (pos + block_tokens).min(shared);
+            let tokens = end - pos;
+            let (tag, scope) = if end <= group {
+                (1u64, self.prefix.group_id)
+            } else {
+                (2u64, self.prefix.conv_id)
+            };
+            keys.push(BlockKey {
+                hash: block_hash(tag, scope, idx, tokens),
+                tokens,
+            });
+            pos = end;
+            idx += 1;
+        }
+        keys
+    }
+}
+
+/// SplitMix64 finalizer (the same mixer the RNG seeds through).
+fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Deterministic content hash of one prefix token block.
+fn block_hash(tag: u64, scope: u64, idx: u64, tokens: u64) -> u64 {
+    let mut h = 0x243F_6A88_85A3_08D3u64;
+    for v in [tag, scope, idx, tokens] {
+        h = splitmix64(h ^ v);
+    }
+    h
+}
+
+/// Sample one arrival offset according to the workload's process.
+fn next_arrival(
+    w: &WorkloadConfig,
+    rng: &mut Rng,
+    t: &mut f64,
+    since_burst: &mut f64,
+    seq: u64,
+) -> f64 {
+    match w.arrival {
+        ArrivalProcess::Batch => 0.0,
+        ArrivalProcess::Poisson { rate } => {
+            *t += rng.exponential(rate);
+            *t
+        }
+        ArrivalProcess::Bursty {
+            rate,
+            burst_size,
+            period_s,
+        } => {
+            // Poisson baseline with `burst_size` back-to-back arrivals
+            // every `period_s` seconds.
+            let in_burst = seq as usize % (burst_size.max(1)) != 0;
+            if in_burst {
+                *t
+            } else {
+                *t += rng.exponential(rate);
+                *since_burst += *t;
+                if *since_burst >= period_s {
+                    *since_burst = 0.0;
+                }
+                *t
+            }
+        }
+    }
 }
 
 /// Generate the full trace for a workload (sorted by arrival time).
 pub fn generate(w: &WorkloadConfig) -> Vec<Request> {
+    match &w.prefix {
+        Some(ps) => generate_shared(w, *ps),
+        None => generate_plain(w),
+    }
+}
+
+fn generate_plain(w: &WorkloadConfig) -> Vec<Request> {
     let mut rng = Rng::new(w.seed);
     let mut out = Vec::with_capacity(w.n_requests);
     let mut t = 0.0f64;
     let mut since_burst = 0.0f64;
     for id in 0..w.n_requests as u64 {
-        let arrival_s = match w.arrival {
-            ArrivalProcess::Batch => 0.0,
-            ArrivalProcess::Poisson { rate } => {
-                t += rng.exponential(rate);
-                t
-            }
-            ArrivalProcess::Bursty {
-                rate,
-                burst_size,
-                period_s,
-            } => {
-                // Poisson baseline with `burst_size` back-to-back arrivals
-                // every `period_s` seconds.
-                let in_burst = id as usize % (burst_size.max(1)) != 0;
-                if in_burst {
-                    t
-                } else {
-                    t += rng.exponential(rate);
-                    since_burst += t;
-                    if since_burst >= period_s {
-                        since_burst = 0.0;
-                    }
-                    t
-                }
-            }
-        };
+        let arrival_s = next_arrival(w, &mut rng, &mut t, &mut since_burst, id);
         out.push(Request {
             id,
             arrival_s,
             input_len: w.input_len.sample(&mut rng).max(1),
             output_len: w.output_len.sample(&mut rng).max(1),
+            prefix: Prefix::default(),
         });
     }
     out.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
     out
+}
+
+/// Shared-prefix / multi-turn trace: `n_requests` turns spread over
+/// `n_requests / turns` conversations. Every conversation opens with its
+/// prefix group's `shared_prefix_len`-token system prompt; turn *t*'s
+/// prompt is the whole accumulated context (prior prompts + outputs) plus
+/// freshly sampled user tokens, arriving `think_time_s` after the previous
+/// turn. Arrivals of conversation openers follow the workload's process.
+fn generate_shared(w: &WorkloadConfig, ps: PrefixSharing) -> Vec<Request> {
+    if w.n_requests == 0 {
+        return Vec::new();
+    }
+    let mut rng = Rng::new(w.seed);
+    let turns = ps.turns.max(1);
+    let n_groups = ps.n_groups.max(1);
+    let n_convs = w.n_requests.div_ceil(turns).max(1);
+    let mut out = Vec::with_capacity(w.n_requests);
+    let mut t = 0.0f64;
+    let mut since_burst = 0.0f64;
+    let mut id = 0u64;
+    'outer: for conv in 0..n_convs as u64 {
+        let start = next_arrival(w, &mut rng, &mut t, &mut since_burst, conv);
+        let mut context = 0usize; // accumulated conversation context
+        for turn in 0..turns {
+            let user_tokens = w.input_len.sample(&mut rng).max(1);
+            let output_len = w.output_len.sample(&mut rng).max(1);
+            let (group_tokens, conv_tokens, input_len) = if turn == 0 {
+                let input = ps.shared_prefix_len + user_tokens;
+                (ps.shared_prefix_len, 0, input)
+            } else {
+                (ps.shared_prefix_len, context, context + user_tokens)
+            };
+            out.push(Request {
+                id,
+                arrival_s: start + turn as f64 * ps.think_time_s.max(0.0),
+                input_len,
+                output_len,
+                prefix: Prefix {
+                    group_id: conv % n_groups as u64,
+                    group_tokens: group_tokens.min(u32::MAX as usize) as u32,
+                    conv_id: conv,
+                    conv_tokens: conv_tokens.min(u32::MAX as usize) as u32,
+                },
+            });
+            context = input_len + output_len;
+            id += 1;
+            if out.len() >= w.n_requests {
+                break 'outer;
+            }
+        }
+    }
+    out.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+    out
+}
+
+/// Fraction of all prompt tokens covered by shareable prefixes (trace
+/// diagnostics; the bench harness reports it alongside hit rates).
+pub fn shared_token_fraction(reqs: &[Request]) -> f64 {
+    let total: u64 = reqs.iter().map(|r| r.input_len as u64).sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let shared: u64 = reqs
+        .iter()
+        .map(|r| r.prefix.shared_tokens().min(r.input_len as u64))
+        .sum();
+    shared as f64 / total as f64
 }
 
 #[cfg(test)]
@@ -87,6 +259,7 @@ mod tests {
         let reqs = generate(&w);
         assert!(reqs.iter().all(|r| r.arrival_s == 0.0));
         assert!(reqs.iter().all(|r| r.input_len == 100 && r.output_len == 100));
+        assert!(reqs.iter().all(|r| r.prefix.is_none()));
     }
 
     #[test]
@@ -118,5 +291,126 @@ mod tests {
             .filter(|p| p[0].arrival_s == p[1].arrival_s)
             .count();
         assert!(coincident > 10, "bursts should co-arrive: {coincident}");
+    }
+
+    #[test]
+    fn shared_prefix_trace_shares_group_and_conversation_scopes() {
+        let w = WorkloadConfig::shared_prefix(12);
+        let reqs = generate(&w);
+        assert_eq!(reqs.len(), 12);
+        let ps = w.prefix.unwrap();
+        // Every request opens with the group system prompt.
+        assert!(reqs
+            .iter()
+            .all(|r| r.prefix.group_tokens as usize == ps.shared_prefix_len));
+        assert!(reqs.iter().all(|r| r.input_len > ps.shared_prefix_len));
+        // Later turns share strictly more than the system prompt.
+        assert!(reqs
+            .iter()
+            .any(|r| r.prefix.conv_tokens as usize > ps.shared_prefix_len));
+        // The headline property for the study: most prompt tokens shareable.
+        assert!(
+            shared_token_fraction(&reqs) >= 0.5,
+            "shared fraction {}",
+            shared_token_fraction(&reqs)
+        );
+        // Deterministic.
+        assert_eq!(reqs, generate(&w));
+    }
+
+    #[test]
+    fn block_keys_agree_exactly_where_streams_agree() {
+        let ps = Prefix {
+            group_id: 1,
+            group_tokens: 40,
+            conv_id: 100,
+            conv_tokens: 0,
+        };
+        let a = Request {
+            id: 1,
+            arrival_s: 0.0,
+            input_len: 200,
+            output_len: 8,
+            prefix: ps,
+        };
+        // Same group, different conversation: shares the group blocks.
+        let b = Request {
+            id: 2,
+            arrival_s: 0.0,
+            input_len: 150,
+            output_len: 8,
+            prefix: Prefix { conv_id: 101, ..ps },
+        };
+        let (ka, kb) = (a.block_keys(16), b.block_keys(16));
+        // 40 tokens = 2 full group blocks + 1 partial block still fully
+        // inside the group prefix — all three shared across conversations.
+        assert_eq!(ka.len(), 3);
+        assert_eq!(ka, kb);
+        assert_eq!(ka[2].tokens, 8);
+        // A block *straddling* the group boundary hashes under the
+        // conversation scope, so it does not leak across conversations.
+        let a50 = Request {
+            prefix: Prefix {
+                conv_tokens: 50,
+                ..ps
+            },
+            ..a
+        };
+        let b50 = Request {
+            prefix: Prefix {
+                conv_id: 101,
+                conv_tokens: 50,
+                ..ps
+            },
+            ..b
+        };
+        let (ka50, kb50) = (a50.block_keys(16), b50.block_keys(16));
+        assert_eq!(ka50.len(), 4);
+        assert_eq!(ka50[..2], kb50[..2], "full group blocks still shared");
+        assert_ne!(ka50[2], kb50[2], "straddler is conversation-scoped");
+        // The straddler also differs from the group-scope partial at the
+        // same index (different scope and token count).
+        assert_ne!(ka50[2], ka[2]);
+        // A later turn of conversation 100 re-derives a's early blocks.
+        let c = Request {
+            id: 3,
+            arrival_s: 1.0,
+            input_len: 400,
+            output_len: 8,
+            prefix: Prefix {
+                group_id: 1,
+                group_tokens: 40,
+                conv_id: 100,
+                conv_tokens: 210,
+            },
+        };
+        let kc = c.block_keys(16);
+        assert_eq!(kc[0], ka[0]);
+        assert_eq!(kc[1], ka[1]);
+        assert_eq!(kc.len(), 14); // 13 full blocks + a 2-token partial
+        assert_eq!(kc.last().unwrap().tokens, 2);
+        // No prefix, no keys.
+        let d = Request {
+            prefix: Prefix::default(),
+            ..a
+        };
+        assert!(d.block_keys(16).is_empty());
+    }
+
+    #[test]
+    fn turn_arrivals_follow_think_time_and_stay_sorted() {
+        let mut w = WorkloadConfig::shared_prefix(9);
+        if let Some(ps) = &mut w.prefix {
+            ps.turns = 3;
+            ps.think_time_s = 2.0;
+        }
+        let reqs = generate(&w);
+        for pair in reqs.windows(2) {
+            assert!(pair[0].arrival_s <= pair[1].arrival_s);
+        }
+        // Conversations have 3 distinct arrival times 2 s apart.
+        let conv0: Vec<&Request> = reqs.iter().filter(|r| r.prefix.conv_id == 0).collect();
+        assert_eq!(conv0.len(), 3);
+        assert!((conv0[1].arrival_s - conv0[0].arrival_s - 2.0).abs() < 1e-9);
     }
 }

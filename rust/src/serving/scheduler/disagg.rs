@@ -144,6 +144,8 @@ impl Scheduler for DisaggScheduler {
                             cfg.kv_share,
                             max_tokens,
                         )
+                        .with_prefix_cache(cfg.prefix_cache)
+                        .with_memo(cfg.memo)
                     })
                     .collect()
             })
@@ -152,6 +154,8 @@ impl Scheduler for DisaggScheduler {
             .decode_groups
             .iter()
             .map(|g| DecodeGroup {
+                // Decode groups receive whole-prompt KV over the NoC, so
+                // they never prefix-match — only the memo applies there.
                 worker: StageWorker::new(
                     &decode_core,
                     model,
@@ -162,7 +166,8 @@ impl Scheduler for DisaggScheduler {
                     cfg.max_decode_batch,
                     cfg.kv_share,
                     max_tokens,
-                ),
+                )
+                .with_memo(cfg.memo),
                 pending: VecDeque::new(),
                 active: Vec::new(),
             })
@@ -205,6 +210,7 @@ impl Scheduler for DisaggScheduler {
                 &mut self.groups,
                 metrics,
                 freq,
+                self.cfg.prefix_cache,
             ),
             (Some((pi, _)), None) => run_prefill(
                 chip,
@@ -214,6 +220,7 @@ impl Scheduler for DisaggScheduler {
                 &mut self.groups,
                 metrics,
                 freq,
+                self.cfg.prefix_cache,
             ),
             (_, Some((gi, t))) => Ok(decode_tick(
                 chip,
@@ -227,11 +234,23 @@ impl Scheduler for DisaggScheduler {
             (None, None) => anyhow::bail!("disagg deadlock: no actionable work"),
         }
     }
+
+    fn collect_cache_stats(&self, out: &mut crate::serving::metrics::CacheStats) {
+        let workers = self
+            .pipelines
+            .iter()
+            .flatten()
+            .chain(self.groups.iter().map(|g| &g.worker));
+        pipe::collect_worker_stats(workers, out);
+    }
 }
 
 /// Run one whole prompt through a prefill pipeline, then transfer its KV to
 /// the least-loaded decode group. Returns completions (requests whose
-/// output is a single token finish at prefill).
+/// output is a single token finish at prefill). With the prefix cache on,
+/// the cached prefix's chunks are skipped: only the unmatched prompt tail
+/// is prefilled (the decode group still receives whole-prompt KV).
+#[allow(clippy::too_many_arguments)]
 fn run_prefill(
     chip: &mut ChipSim,
     model: &ModelConfig,
@@ -240,24 +259,30 @@ fn run_prefill(
     groups: &mut [DecodeGroup],
     metrics: &mut Metrics,
     freq: f64,
+    prefix_cache: bool,
 ) -> anyhow::Result<usize> {
     let r = queue.pop_front().expect("caller checked");
     let arrival = secs_to_cycles(r.arrival_s, freq);
     pipeline[0].advance_to(chip, arrival);
 
-    for s in pipeline.iter_mut() {
-        s.admit(r.id);
+    let mut matched = 0u64;
+    if prefix_cache {
+        matched = pipe::admit_with_prefix(pipeline, &r, model, metrics);
+    } else {
+        for s in pipeline.iter_mut() {
+            s.admit(r.id);
+        }
     }
     let batch = IterBatch::new(vec![BatchItem::prefill(
         r.id,
-        r.input_len as u64,
+        r.input_len as u64 - matched,
         r.input_len as u64,
     )]);
     let mut finish = 0;
     for s in 0..pipeline.len() {
         finish = pipeline[s].run(chip, model, &batch);
         if s + 1 < pipeline.len() {
-            let bytes = r.input_len as u64 * model.hidden as u64 * model.dtype_bytes;
+            let bytes = (r.input_len as u64 - matched) * model.hidden as u64 * model.dtype_bytes;
             let src = pipeline[s].group.coords[0];
             let dst = pipeline[s + 1].group.coords[0];
             let t = chip.send(src, dst, bytes, OpClass::P2P);

@@ -80,6 +80,12 @@ impl Scheduler for FusionScheduler {
             &mut no_handoffs,
         ))
     }
+
+    fn collect_cache_stats(&self, out: &mut crate::serving::metrics::CacheStats) {
+        for p in &self.pipes {
+            p.collect_cache_stats(out);
+        }
+    }
 }
 
 #[cfg(test)]

@@ -321,6 +321,12 @@ impl Scheduler for HybridScheduler {
         }
         Ok(completions)
     }
+
+    fn collect_cache_stats(&self, out: &mut crate::serving::metrics::CacheStats) {
+        for p in &self.pipes {
+            p.collect_cache_stats(out);
+        }
+    }
 }
 
 #[cfg(test)]

@@ -57,6 +57,13 @@ pub trait Scheduler {
         model: &ModelConfig,
         metrics: &mut Metrics,
     ) -> anyhow::Result<usize>;
+
+    /// Fold worker-level prefix-cache / memo counters (COW copies,
+    /// evictions, memo hits) into `out`. The driver calls this once after
+    /// the run; policies without such state keep the default no-op.
+    fn collect_cache_stats(&self, out: &mut crate::serving::metrics::CacheStats) {
+        let _ = out;
+    }
 }
 
 /// Data-driven scheduler selection (CLI `--mode`, experiment sweeps).
@@ -119,6 +126,9 @@ pub fn simulate_requests(
         );
         done += sched.step(chip, model, &mut metrics)?;
     }
+    let mut hw = crate::serving::metrics::CacheStats::default();
+    sched.collect_cache_stats(&mut hw);
+    metrics.cache.merge(&hw);
     Ok(metrics)
 }
 

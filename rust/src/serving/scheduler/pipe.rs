@@ -11,7 +11,7 @@
 use crate::config::ModelConfig;
 use crate::model::{BatchItem, IterBatch};
 use crate::serving::layout::PipelineLayout;
-use crate::serving::metrics::{Metrics, RequestRecord};
+use crate::serving::metrics::{CacheStats, Metrics, RequestRecord};
 use crate::serving::pd_fusion::FusionConfig;
 use crate::serving::request::Request;
 use crate::serving::worker::StageWorker;
@@ -107,6 +107,8 @@ pub(crate) fn build_pipes(
                         cfg.kv_share,
                         max_tokens,
                     )
+                    .with_prefix_cache(cfg.prefix_cache)
+                    .with_memo(cfg.memo)
                 })
                 .collect(),
             queue: VecDeque::new(),
@@ -116,6 +118,56 @@ pub(crate) fn build_pipes(
         .collect();
     anyhow::ensure!(!pipes.is_empty(), "no pipelines fit the chip");
     Ok(pipes)
+}
+
+/// Prefix-cache admission over a slice of pipeline stages: match the
+/// longest cached prefix — committing the *minimum* across stages so every
+/// stage skips the same chunks (SRAM pressure can differ per stage) — and
+/// record the request-level cache metrics. At least one prompt token
+/// always prefills (it produces the first output token). Returns the
+/// matched token count. Shared by the fusion/hybrid tick and the disagg
+/// prefill pipeline so cache accounting cannot diverge between policies.
+pub(crate) fn admit_with_prefix(
+    stages: &mut [StageWorker],
+    r: &Request,
+    model: &ModelConfig,
+    metrics: &mut Metrics,
+) -> u64 {
+    let keys = r.block_keys(crate::memmgr::KV_BLOCK_TOKENS);
+    let limit = (r.input_len as u64).saturating_sub(1);
+    let matched = stages
+        .iter()
+        .map(|s| s.peek_prefix(&keys, limit))
+        .min()
+        .unwrap_or(0);
+    for s in stages.iter_mut() {
+        s.admit_prefixed(r.id, &keys, matched);
+    }
+    metrics.cache.prefix_lookups += 1;
+    if matched > 0 {
+        metrics.cache.prefix_hits += 1;
+        metrics.cache.prefill_tokens_skipped += matched;
+        metrics.cache.kv_bytes_deduped += matched * model.kv_bytes_per_token();
+    }
+    metrics.cache.prefill_tokens_total += r.input_len as u64;
+    matched
+}
+
+/// Fold worker-level sharing/memo counters (COW, evictions, memo hits)
+/// into `out` — the request-level hit counters are recorded at admission.
+pub(crate) fn collect_worker_stats<'a>(
+    workers: impl Iterator<Item = &'a StageWorker>,
+    out: &mut CacheStats,
+) {
+    for s in workers {
+        let k = s.kv.stats();
+        out.cow_copies += k.cow_copies;
+        out.prefix_evictions += k.prefix_evictions;
+        if let Some(m) = &s.memo {
+            out.memo_hits += m.hits;
+            out.memo_misses += m.misses;
+        }
+    }
 }
 
 /// Stream a request's KV shards over the NoC: each source stage holds
@@ -208,6 +260,11 @@ impl Pipe {
         self.stages[0].now(chip)
     }
 
+    /// Fold this pipe's per-worker sharing/memo counters into `out`.
+    pub(crate) fn collect_cache_stats(&self, out: &mut CacheStats) {
+        collect_worker_stats(self.stages.iter(), out);
+    }
+
     /// Earliest cycle at which this pipe can do useful work, or `None`.
     pub(crate) fn next_action(&self, chip: &ChipSim, freq: f64) -> Option<Cycle> {
         let now = self.stage0_now(chip);
@@ -286,12 +343,17 @@ impl Pipe {
                 break;
             }
             let r = self.queue.pop_front().unwrap();
-            for s in &mut self.stages {
-                s.admit(r.id);
+            let mut matched = 0u64;
+            if cfg.prefix_cache {
+                matched = admit_with_prefix(&mut self.stages, &r, model, metrics);
+            } else {
+                for s in &mut self.stages {
+                    s.admit(r.id);
+                }
             }
             self.active.push(Active {
                 req: r,
-                prefilled: 0,
+                prefilled: matched,
                 generated: 0,
                 first_token: None,
                 ready_at: 0,
@@ -409,6 +471,7 @@ mod tests {
             arrival_s: 0.0,
             input_len: input,
             output_len: output,
+            prefix: crate::serving::request::Prefix::default(),
         }
     }
 

@@ -43,11 +43,20 @@ fn parse_line(line: &str, id: u64) -> Result<Option<Request>> {
         .or_else(|| field_f64(line, "completion_len"))
         .with_context(|| format!("trace line {id}: no output_length/completion_len"))?;
     let arrival_s = ts_s.or(ts_ms.map(|t| t / 1e3)).unwrap_or(0.0);
+    // Optional shared-prefix annotations (our JSONL extension; Mooncake's
+    // `hash_ids` arrays are block hashes we approximate with scope ids).
+    let prefix = crate::serving::request::Prefix {
+        group_id: field_f64(line, "prefix_group").unwrap_or(0.0) as u64,
+        group_tokens: field_f64(line, "prefix_len").unwrap_or(0.0) as u32,
+        conv_id: field_f64(line, "conv_id").unwrap_or(0.0) as u64,
+        conv_tokens: field_f64(line, "conv_len").unwrap_or(0.0) as u32,
+    };
     Ok(Some(Request {
         id,
         arrival_s,
         input_len: (input as usize).max(1),
         output_len: (output as usize).max(1),
+        prefix,
     }))
 }
 
@@ -86,9 +95,18 @@ pub fn to_jsonl(reqs: &[Request]) -> String {
     use std::fmt::Write as _;
     let mut out = String::new();
     for r in reqs {
+        let p = &r.prefix;
+        let prefix_fields = if p.is_none() {
+            String::new()
+        } else {
+            format!(
+                ", \"prefix_group\": {}, \"prefix_len\": {}, \"conv_id\": {}, \"conv_len\": {}",
+                p.group_id, p.group_tokens, p.conv_id, p.conv_tokens
+            )
+        };
         let _ = writeln!(
             out,
-            "{{\"timestamp\": {}, \"input_length\": {}, \"output_length\": {}, \"hash_ids\": []}}",
+            "{{\"timestamp\": {}, \"input_length\": {}, \"output_length\": {}{prefix_fields}, \"hash_ids\": []}}",
             (r.arrival_s * 1e3).round() as u64,
             r.input_len,
             r.output_len

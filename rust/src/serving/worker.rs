@@ -4,8 +4,10 @@
 
 use crate::config::{ChipConfig, CoreConfig, ModelConfig};
 use crate::memmgr::planner::{plan, PlanRequest};
-use crate::memmgr::KvCache;
-use crate::model::exec::{group_now, run_iteration, ExecConfig};
+use crate::memmgr::prefix::BlockKey;
+use crate::memmgr::{KvCache, KV_BLOCK_TOKENS};
+use crate::model::exec::{group_now, run_iteration_memo, ExecConfig};
+use crate::model::memo::LatencyMemo;
 use crate::model::IterBatch;
 use crate::parallel::partition::PartitionStrategy;
 use crate::parallel::placement::TpGroup;
@@ -19,6 +21,8 @@ pub struct StageWorker {
     pub exec: ExecConfig,
     pub plan: crate::memmgr::SramPlan,
     pub kv: KvCache,
+    /// Operator-latency memo (None = fully detailed simulation).
+    pub memo: Option<LatencyMemo>,
 }
 
 impl StageWorker {
@@ -60,7 +64,7 @@ impl StageWorker {
         let hbm_kv = core.hbm_bytes.saturating_sub(p.weight_hbm_bytes);
         let kv = KvCache::new(
             p.kv_bytes,
-            16, // tokens per SRAM block (fine granularity)
+            KV_BLOCK_TOKENS, // tokens per SRAM block (fine granularity)
             hbm_kv,
             bpt,
             (max_tokens.max(1)).min(model.max_context) as u64,
@@ -70,7 +74,24 @@ impl StageWorker {
             exec: ExecConfig::new(strategy, layers, with_logits),
             plan: p,
             kv,
+            memo: None,
         }
+    }
+
+    /// Enable prefix-sharing KV caching on this worker (builder style).
+    pub fn with_prefix_cache(mut self, on: bool) -> Self {
+        if on {
+            self.kv.enable_prefix_cache();
+        }
+        self
+    }
+
+    /// Enable operator-latency memoization on this worker (builder style).
+    pub fn with_memo(mut self, on: bool) -> Self {
+        if on {
+            self.memo = Some(LatencyMemo::new());
+        }
+        self
     }
 
     /// Whether another request fits this worker's KV capacity.
@@ -80,6 +101,20 @@ impl StageWorker {
 
     pub fn admit(&mut self, request: u64) -> bool {
         self.kv.admit(request)
+    }
+
+    /// Longest cached prefix available for `keys` (no commitment), capped
+    /// at `max_tokens`.
+    pub fn peek_prefix(&self, keys: &[BlockKey], max_tokens: u64) -> u64 {
+        self.kv.peek_prefix(keys, max_tokens)
+    }
+
+    /// Admit with prefix sharing; returns the matched token count (0 when
+    /// the prefix cache is disabled or nothing matched).
+    pub fn admit_prefixed(&mut self, request: u64, keys: &[BlockKey], max_match: u64) -> u64 {
+        self.kv
+            .admit_prefixed(request, keys, max_match)
+            .unwrap_or(0)
     }
 
     pub fn release(&mut self, request: u64) {
@@ -100,7 +135,7 @@ impl StageWorker {
 
     /// Execute one iteration; returns the finish cycle.
     pub fn run(&mut self, chip: &mut ChipSim, model: &ModelConfig, batch: &IterBatch) -> Cycle {
-        run_iteration(
+        run_iteration_memo(
             chip,
             &self.group,
             model,
@@ -108,6 +143,7 @@ impl StageWorker {
             &self.exec,
             batch,
             &mut self.kv,
+            self.memo.as_mut(),
         )
     }
 

@@ -73,6 +73,15 @@ impl<T: Eq> EventQueue<T> {
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
     }
+
+    /// Drop all pending events and restart the FIFO tie-break counter —
+    /// the `reset` every other sim primitive already has. Keeps the heap's
+    /// allocation, so experiment loops can reuse one queue across sweep
+    /// points instead of reallocating.
+    pub fn clear(&mut self) {
+        self.heap.clear();
+        self.seq = 0;
+    }
 }
 
 /// Busy-interval tracker for a serially-reusable resource.
@@ -207,6 +216,20 @@ mod tests {
         assert_eq!(q.pop(), Some((10, "b")));
         assert_eq!(q.pop(), Some((10, "c")));
         assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn event_queue_clear_resets_order_state() {
+        let mut q = EventQueue::new();
+        q.push(1, "stale");
+        q.push(2, "stale2");
+        q.clear();
+        assert!(q.is_empty());
+        // FIFO tie-break restarts: same-time pushes pop in push order again.
+        q.push(10, "x");
+        q.push(10, "y");
+        assert_eq!(q.pop(), Some((10, "x")));
+        assert_eq!(q.pop(), Some((10, "y")));
     }
 
     #[test]

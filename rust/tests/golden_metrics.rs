@@ -109,3 +109,77 @@ fn different_seeds_change_the_timeline() {
     let b = run_once(&sys, &WorkloadConfig::sharegpt_like(4).with_seed(2));
     assert_ne!(a, b);
 }
+
+#[test]
+fn prefix_cache_and_memo_are_off_by_default() {
+    // The golden vectors above pin the *default* configurations: both new
+    // features must stay opt-in for those vectors to stay meaningful.
+    let f = FusionConfig::default();
+    assert!(!f.prefix_cache && !f.memo);
+    let d = DisaggConfig::default();
+    assert!(!d.prefix_cache && !d.memo);
+}
+
+#[test]
+fn enabling_the_prefix_cache_is_inert_without_shared_prefixes() {
+    // With no shareable tokens in the trace, cache-on must reproduce the
+    // cache-off timeline byte-for-byte (the machinery only changes
+    // behaviour when something matches or registers).
+    for w in [
+        WorkloadConfig::fixed_ratio(256, 24, 6).with_seed(7),
+        WorkloadConfig::sharegpt_like(5).with_seed(11),
+    ] {
+        let off = run_once(&SchedulerConfig::Fusion(FusionConfig::default()), &w);
+        let on = run_once(
+            &SchedulerConfig::Fusion(FusionConfig {
+                prefix_cache: true,
+                ..FusionConfig::default()
+            }),
+            &w,
+        );
+        assert_eq!(off, on, "prefix-cache machinery perturbed {}", w.name);
+    }
+}
+
+#[test]
+fn shared_prefix_runs_are_byte_stable_and_cache_changes_the_timeline() {
+    // Golden determinism vector for the prefix-cache feature itself: the
+    // shared-prefix trace under every scheduler, cache on, twice.
+    let w = WorkloadConfig::shared_prefix(8).with_seed(13);
+    let systems = [
+        SchedulerConfig::Fusion(FusionConfig {
+            prefix_cache: true,
+            ..FusionConfig::default()
+        }),
+        SchedulerConfig::Disagg(DisaggConfig {
+            prefix_cache: true,
+            ..DisaggConfig::p42_d21()
+        }),
+        SchedulerConfig::Hybrid(HybridConfig {
+            fusion: FusionConfig {
+                prefix_cache: true,
+                ..FusionConfig::default()
+            },
+            ..HybridConfig::default()
+        }),
+    ];
+    for sys in &systems {
+        let a = run_once(sys, &w);
+        let b = run_once(sys, &w);
+        assert_eq!(a, b, "{} shared-prefix run not deterministic", sys.name());
+    }
+    // And the cache must actually move the needle on this trace.
+    let off = run_once(&SchedulerConfig::Fusion(FusionConfig::default()), &w);
+    let on = run_once(&systems[0], &w);
+    assert_ne!(off, on, "prefix cache had no effect on a shared trace");
+}
+
+#[test]
+fn memoized_runs_are_deterministic() {
+    let w = WorkloadConfig::fixed_ratio(256, 24, 6).with_seed(7);
+    let sys = SchedulerConfig::Fusion(FusionConfig {
+        memo: true,
+        ..FusionConfig::default()
+    });
+    assert_eq!(run_once(&sys, &w), run_once(&sys, &w));
+}

@@ -29,6 +29,35 @@ fn fusion_conserves_requests_and_tokens() {
 }
 
 #[test]
+fn prefix_cached_serving_conserves_tokens_and_skips_prefill() {
+    // Cross-module: trie index × ref-counted blocks × scheduler admission.
+    // Every request still retires exactly once with its full output, while
+    // a large share of prompt tokens never re-prefills.
+    let model = ModelConfig::qwen3_4b();
+    let w = WorkloadConfig::shared_prefix(8);
+    let expect_out: u64 = request::generate(&w)
+        .iter()
+        .map(|r| r.output_len as u64)
+        .sum();
+    let cfg = FusionConfig {
+        prefix_cache: true,
+        ..FusionConfig::default()
+    };
+    let mut chip = ChipSim::new(ChipConfig::large_core());
+    let m = simulate_fusion(&mut chip, &model, &w, &cfg).unwrap();
+    assert_eq!(m.n_requests(), 8);
+    let out: u64 = m.records().iter().map(|r| r.output_tokens).sum();
+    assert_eq!(out, expect_out, "prefix skipping lost or invented tokens");
+    for r in m.records() {
+        assert!(r.first_token >= r.arrival, "{r:?}");
+        assert!(r.finish >= r.first_token, "{r:?}");
+    }
+    assert!(m.cache.prefix_hits > 0, "no prefix hits on a shared trace");
+    assert!(m.cache.prefill_tokens_skipped > 0);
+    assert!(m.cache.kv_bytes_deduped > 0);
+}
+
+#[test]
 fn disagg_conserves_requests_and_transfers_kv() {
     let mut chip = ChipSim::new(ChipConfig::large_core());
     let model = ModelConfig::qwen3_4b();
