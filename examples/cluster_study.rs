@@ -1,0 +1,20 @@
+//! Multi-chip cluster study: chips × router × scheduler on a
+//! shared-prefix conversational workload and a Poisson workload —
+//! prefix-hit-aware routing vs least-loaded vs round-robin, with charged
+//! cross-chip KV migration.
+//!
+//! Run: `cargo run --release --example cluster_study [-- --fast]`
+//! (equivalent to `cargo run --release -p npusim -- experiment cluster_study`)
+
+use npusim::experiments::{self, Opts};
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::args().any(|a| a == "--fast");
+    let opts = Opts {
+        fast,
+        out_dir: Some("results".into()),
+    };
+    experiments::run("cluster_study", &opts)?;
+    println!("wrote results/cluster_study.csv");
+    Ok(())
+}

@@ -1,15 +1,19 @@
 //! `bench` — serving bench harness: one reproducible command that measures
 //! (1) the prefix-sharing paged-KV win on a shared-prefix / multi-turn
-//! conversational trace across all three schedulers, and (2) the
-//! operator-latency memoization speedup on a fig13-style hardware sweep —
-//! and writes both to `BENCH_serving.json` (wall-clock sim time, simulated
-//! tokens/s, TTFT/TBT p50/p99, prefix-cache hit rate, memo hit rate).
+//! conversational trace across all three schedulers, (2) the
+//! operator-latency memoization speedup on a fig13-style hardware sweep,
+//! and (3) the multi-chip cluster grid (router × scheduler on 2 chips,
+//! via [`cluster_study::bench_grid`]) — and writes all three to
+//! `BENCH_serving.json` (wall-clock sim time, simulated tokens/s,
+//! TTFT/TBT p50/p99, prefix-cache hit rate, memo hit rate). CI gates this
+//! file against `BENCH_baseline.json` with `tools/bench_check`.
 //!
 //! ```sh
 //! cargo run --release -p npusim -- experiment bench
 //! ```
 
 use crate::config::{ArrivalProcess, ChipConfig, ModelConfig, PrefixSharing, WorkloadConfig};
+use crate::experiments::cluster_study::{self, ClusterRun};
 use crate::experiments::Opts;
 use crate::serving::metrics::Metrics;
 use crate::serving::pd_disagg::DisaggConfig;
@@ -45,16 +49,19 @@ pub struct SystemRun {
 pub fn shared_trace(opts: &Opts) -> Vec<Request> {
     let mut w = WorkloadConfig::shared_prefix(opts.pick(32, 16));
     if opts.fast {
-        // Smaller shared prompt, single-turn, co-arriving: quick and with a
-        // deterministic queueing effect for the smoke assertions.
+        // Smaller shared prompt, single turn, one prompt group, arrivals
+        // spread by the Poisson process: under in-flight-aware matching a
+        // block only hits once its producing prefill completed, so the
+        // fast trace needs arrival gaps (not a co-arriving batch) for the
+        // cache to demonstrably pay.
         w.prefix = Some(PrefixSharing {
-            n_groups: 2,
+            n_groups: 1,
             shared_prefix_len: 512,
             turns: 1,
             think_time_s: 0.0,
         });
         w.output_len = crate::config::LenDist::Uniform(8, 32);
-        w.arrival = ArrivalProcess::Batch;
+        w.arrival = ArrivalProcess::Poisson { rate: 4.0 };
     }
     request::generate(&w)
 }
@@ -240,7 +247,12 @@ pub fn ttft_reduction_pct(runs: &[SystemRun], system: &str) -> f64 {
 
 /// Hand-rolled JSON (no serde in the offline workspace). All strings are
 /// static identifiers, so no escaping is needed.
-fn render_json(runs: &[SystemRun], memo: &MemoStudy, shared_fraction: f64) -> String {
+fn render_json(
+    runs: &[SystemRun],
+    memo: &MemoStudy,
+    shared_fraction: f64,
+    cluster: &[ClusterRun],
+) -> String {
     let mut j = String::new();
     let _ = writeln!(j, "{{");
     let _ = writeln!(j, "  \"bench\": \"serving\",");
@@ -279,6 +291,29 @@ fn render_json(runs: &[SystemRun], memo: &MemoStudy, shared_fraction: f64) -> St
         );
     }
     let _ = writeln!(j, "  ],");
+    let _ = writeln!(j, "  \"cluster\": [");
+    for (i, r) in cluster.iter().enumerate() {
+        let _ = writeln!(
+            j,
+            "    {{\"workload\": \"{}\", \"sched\": \"{}\", \"router\": \"{}\", \
+             \"chips\": {}, \"tokens_per_s\": {:.3}, \"ttft_p50_s\": {:.6}, \
+             \"ttft_p99_s\": {:.6}, \"tbt_p99_ms\": {:.4}, \"prefix_hit_rate\": {:.4}, \
+             \"migrations\": {}, \"icn_mb\": {:.3}}}{}",
+            r.workload,
+            r.sched,
+            r.router,
+            r.chips,
+            r.tok_s,
+            r.ttft_p50_s,
+            r.ttft_p99_s,
+            r.tbt_p99_ms,
+            r.hit_rate,
+            r.migrations,
+            r.icn_mb,
+            if i + 1 < cluster.len() { "," } else { "" }
+        );
+    }
+    let _ = writeln!(j, "  ],");
     let _ = writeln!(
         j,
         "  \"memo\": {{\"sweep\": \"fig13-mini\", \"wall_off_s\": {:.6}, \"wall_on_s\": {:.6}, \
@@ -294,6 +329,7 @@ pub fn run(opts: &Opts) -> anyhow::Result<Vec<Table>> {
     let shared_fraction = request::shared_token_fraction(&reqs);
     let runs = prefix_study(&reqs)?;
     let memo = memo_study(opts)?;
+    let cluster = cluster_study::bench_grid(opts)?;
 
     let mut t1 = Table::new(
         "bench — prefix-sharing paged KV on the shared-prefix trace (Qwen3-4B, 64 cores)",
@@ -350,24 +386,55 @@ pub fn run(opts: &Opts) -> anyhow::Result<Vec<Table>> {
         f3(memo.latency_err_pct),
     ]);
 
+    let mut t3 = Table::new(
+        "bench — 2-chip cluster grid (router × scheduler, prefix cache on)",
+        &[
+            "workload",
+            "sched",
+            "router",
+            "tok/s",
+            "TTFT p50 (s)",
+            "TTFT p99 (s)",
+            "hit rate (%)",
+            "migrations",
+        ],
+    );
+    for r in &cluster {
+        t3.row(&[
+            r.workload.to_string(),
+            r.sched.to_string(),
+            r.router.to_string(),
+            f3(r.tok_s),
+            f3(r.ttft_p50_s),
+            f3(r.ttft_p99_s),
+            f3(r.hit_rate * 100.0),
+            r.migrations.to_string(),
+        ]);
+    }
+
+    let cluster_rr = cluster_study::ttft_p50(&cluster, "shared-prefix", "fusion", "rr");
+    let cluster_prefix = cluster_study::ttft_p50(&cluster, "shared-prefix", "fusion", "prefix");
     println!(
-        "bench: shared tokens {:.1}%  |  fusion TTFT cut {:.1}%  |  memo speedup {:.2}x (hit rate {:.1}%)",
+        "bench: shared tokens {:.1}%  |  fusion TTFT cut {:.1}%  |  memo speedup {:.2}x (hit rate {:.1}%)  |  \
+         cluster TTFT p50 rr {:.4}s vs prefix {:.4}s",
         shared_fraction * 100.0,
         ttft_reduction_pct(&runs, "fusion"),
         memo.speedup,
-        memo.memo_hit_rate * 100.0
+        memo.memo_hit_rate * 100.0,
+        cluster_rr.unwrap_or(0.0),
+        cluster_prefix.unwrap_or(0.0)
     );
 
     // BENCH_serving.json: one copy beside the CSVs, one at the repo root
-    // (the canonical location the README documents).
+    // (the canonical location the README documents and CI gates on).
     if let Some(dir) = &opts.out_dir {
-        let json = render_json(&runs, &memo, shared_fraction);
+        let json = render_json(&runs, &memo, shared_fraction, &cluster);
         std::fs::create_dir_all(dir)?;
         std::fs::write(dir.join("BENCH_serving.json"), &json)?;
         std::fs::write("BENCH_serving.json", &json)?;
     }
 
-    Ok(vec![t1, t2])
+    Ok(vec![t1, t2, t3])
 }
 
 #[cfg(test)]
@@ -442,11 +509,26 @@ mod tests {
             memo_hit_rate: 0.9,
             latency_err_pct: 1.2,
         };
-        let j = render_json(&runs, &memo, 0.6);
+        let cluster = vec![ClusterRun {
+            workload: "shared-prefix",
+            sched: "fusion",
+            router: "prefix",
+            chips: 2,
+            tok_s: 100.0,
+            ttft_p50_s: 0.01,
+            ttft_p99_s: 0.05,
+            tbt_p99_ms: 12.0,
+            hit_rate: 0.8,
+            migrations: 3,
+            icn_mb: 1.5,
+        }];
+        let j = render_json(&runs, &memo, 0.6, &cluster);
         assert!(j.starts_with("{\n"));
         assert!(j.trim_end().ends_with('}'));
         assert_eq!(j.matches('{').count(), j.matches('}').count());
         assert!(j.contains("\"memo_hit_rate\": 0.9000"));
         assert!(j.contains("\"system\": \"fusion\""));
+        assert!(j.contains("\"router\": \"prefix\""));
+        assert!(j.contains("\"chips\": 2"));
     }
 }

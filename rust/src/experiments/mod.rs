@@ -16,10 +16,12 @@
 //! | `fig14` | PD disaggregation vs PD fusion | [`fig14`] |
 //! | `headline` | ours vs T10 / WaferLLM / WSC-LLM | [`headline`] |
 //! | `hybrid_study` | fusion vs disagg vs adaptive hybrid | [`hybrid_study`] |
-//! | `bench` | prefix-cache + memoization bench → `BENCH_serving.json` | [`bench`] |
+//! | `bench` | prefix-cache + memoization + cluster bench → `BENCH_serving.json` | [`bench`] |
+//! | `cluster_study` | multi-chip: chips × router × scheduler | [`cluster_study`] |
 
 pub mod ablations;
 pub mod bench;
+pub mod cluster_study;
 pub mod fig10;
 pub mod fig11;
 pub mod fig12;
@@ -76,7 +78,7 @@ impl Opts {
 /// All experiment ids, in paper order.
 pub const ALL: &[&str] = &[
     "table2", "fig7a", "fig7b", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13", "fig14",
-    "headline", "ablations", "hybrid_study", "bench",
+    "headline", "ablations", "hybrid_study", "bench", "cluster_study",
 ];
 
 /// Run one experiment by id; returns its tables (already printed).
@@ -96,6 +98,7 @@ pub fn run(id: &str, opts: &Opts) -> anyhow::Result<Vec<Table>> {
         "ablations" => ablations::run(opts)?,
         "hybrid_study" => hybrid_study::run(opts)?,
         "bench" => bench::run(opts)?,
+        "cluster_study" => cluster_study::run(opts)?,
         other => anyhow::bail!("unknown experiment {other:?} (try one of {ALL:?})"),
     };
     for t in &tables {

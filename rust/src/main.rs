@@ -2,7 +2,7 @@
 //!
 //! ```text
 //! npusim experiment <id>|all [--fast] [--out results]   regenerate a paper figure/table
-//! npusim simulate [--config f.toml] [--mode fusion|disagg|hybrid] ...   run one serving simulation
+//! npusim simulate [--config f.toml] [--mode fusion|disagg|hybrid] [--chips N --router rr|least|prefix] ...   run one serving simulation (multi-chip with --chips)
 //! npusim serve [--artifacts artifacts] [--prompt "1,2,3"] [--n 4]   real tokens via PJRT
 //! npusim validate [--fast]     fig7 simulator validation
 //! npusim info [--model name]   print chip/model presets
@@ -12,9 +12,12 @@ use anyhow::{Context, Result};
 use npusim::config::{ChipConfig, ModelConfig, WorkloadConfig};
 use npusim::coordinator::{Coordinator, GenRequest};
 use npusim::experiments::{self, Opts};
+use npusim::serving::cluster::{
+    simulate_cluster, simulate_cluster_requests, ClusterConfig, ClusterMetrics, RouterPolicy,
+};
 use npusim::serving::pd_disagg::{simulate_disagg, DisaggConfig};
 use npusim::serving::pd_fusion::{simulate_fusion, FusionConfig};
-use npusim::serving::scheduler::{self, HybridConfig, HybridScheduler};
+use npusim::serving::scheduler::{self, HybridConfig, HybridScheduler, SchedulerConfig};
 use npusim::serving::Metrics;
 use npusim::sim::chip::ChipSim;
 use npusim::util::cli::Args;
@@ -49,6 +52,7 @@ fn dispatch(args: &Args) -> Result<()> {
                  npusim experiment bench            # emits BENCH_serving.json\n      \
                  npusim simulate --mode fusion --model qwen3_4b --input 512 --output 64\n      \
                  npusim simulate --mode hybrid --shared-prefix 1024 --prefix-cache --memo\n      \
+                 npusim simulate --chips 4 --router prefix --prefix-cache --shared-prefix 1024\n      \
                  npusim serve --prompt \"1,2,3,4\""
             );
             Ok(())
@@ -115,6 +119,93 @@ fn fusion_cfg_from(args: &Args) -> Result<FusionConfig> {
         memo: args.flag("memo"),
         ..FusionConfig::default()
     })
+}
+
+/// Disaggregation knobs for `--mode disagg`.
+fn disagg_cfg_from(args: &Args) -> Result<DisaggConfig> {
+    Ok(DisaggConfig {
+        n_prefill: args.opt_parse_or("prefill-cores", 42)?,
+        n_decode: args.opt_parse_or("decode-cores", 21)?,
+        prefill_stages: args.opt_parse_or("stages", 6)?,
+        prefix_cache: args.flag("prefix-cache"),
+        memo: args.flag("memo"),
+        ..DisaggConfig::default()
+    })
+}
+
+/// Hybrid controller knobs for `--mode hybrid`.
+fn hybrid_cfg_from(args: &Args) -> Result<HybridConfig> {
+    let defaults = HybridConfig::default();
+    Ok(HybridConfig {
+        fusion: fusion_cfg_from(args)?,
+        window: args.opt_parse_or("window", defaults.window)?,
+        hysteresis: args.opt_parse_or("hysteresis", defaults.hysteresis)?,
+        min_dwell: args.opt_parse_or("min-dwell", defaults.min_dwell)?,
+        ..defaults
+    })
+}
+
+/// `--mode` mapped onto a data-driven scheduler config (cluster path).
+fn sched_cfg_from(args: &Args, mode: &str) -> Result<SchedulerConfig> {
+    Ok(match mode {
+        "fusion" => SchedulerConfig::Fusion(fusion_cfg_from(args)?),
+        "disagg" => SchedulerConfig::Disagg(disagg_cfg_from(args)?),
+        "hybrid" => SchedulerConfig::Hybrid(hybrid_cfg_from(args)?),
+        other => anyhow::bail!("unknown mode {other:?} (fusion|disagg|hybrid)"),
+    })
+}
+
+fn print_cluster(name: &str, cm: &ClusterMetrics) {
+    let mut t = Table::new(
+        &format!("cluster serving — {name}"),
+        &[
+            "chip",
+            "requests",
+            "tok/s",
+            "TTFT p50 (s)",
+            "TTFT p99 (s)",
+            "TBT p99 (ms)",
+        ],
+    );
+    for (i, m) in cm.per_chip.iter().enumerate() {
+        let mut ttft = m.ttft_s();
+        let mut tbt = m.tbt_s();
+        t.row(&[
+            format!("chip{i}"),
+            m.n_requests().to_string(),
+            f3(m.tokens_per_s()),
+            f3(ttft.median()),
+            f3(ttft.p99()),
+            f3(tbt.p99() * 1e3),
+        ]);
+    }
+    let agg = cm.aggregate();
+    let mut ttft = agg.ttft_s();
+    let mut tbt = agg.tbt_s();
+    t.row(&[
+        "aggregate".into(),
+        agg.n_requests().to_string(),
+        f3(agg.tokens_per_s()),
+        f3(ttft.median()),
+        f3(ttft.p99()),
+        f3(tbt.p99() * 1e3),
+    ]);
+    t.print();
+    println!(
+        "routing: {:?}  |  migrations: {}  |  interconnect: {} transfers, {:.2} MB",
+        cm.routed,
+        cm.migrations,
+        cm.interconnect.transfers,
+        cm.interconnect.bytes as f64 / (1 << 20) as f64
+    );
+    let c = &agg.cache;
+    if c.prefix_lookups > 0 {
+        println!(
+            "prefix cache: hit rate {:.1}%, {} prefill tokens skipped",
+            c.prefix_hit_rate() * 100.0,
+            c.prefill_tokens_skipped
+        );
+    }
 }
 
 fn print_metrics(name: &str, m: &Metrics, chip: &ChipSim) {
@@ -221,6 +312,36 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     };
 
     let mode = args.opt_or("mode", "fusion");
+
+    // Multi-chip cluster path (`--chips N --router rr|least|prefix`): N
+    // identical chips behind streamed admission and the chosen router.
+    let n_chips = args.opt_parse_or::<usize>("chips", 1)?;
+    if n_chips <= 1 && (args.opt("router").is_some() || args.opt("migrate-gap").is_some()) {
+        anyhow::bail!("--router/--migrate-gap need a multi-chip cluster: pass --chips N (N > 1)");
+    }
+    if n_chips > 1 {
+        let router = RouterPolicy::parse(args.opt_or("router", "least"))?;
+        let mut cluster_cfg =
+            ClusterConfig::new(chip_cfg, n_chips, sched_cfg_from(args, mode)?, router);
+        if let Some(gap) = args.opt_parse::<usize>("migrate-gap")? {
+            cluster_cfg.migrate_load_gap = gap;
+        }
+        let cm = match trace {
+            Some(reqs) => simulate_cluster_requests(&cluster_cfg, &model, reqs)?,
+            None => simulate_cluster(&cluster_cfg, &model, &workload)?,
+        };
+        print_cluster(
+            &format!(
+                "{mode} × {n_chips} chips / {} router / {} / {}",
+                router.name(),
+                model.name,
+                workload.name
+            ),
+            &cm,
+        );
+        return Ok(());
+    }
+
     let mut chip = ChipSim::new(chip_cfg);
     let metrics = match mode {
         "fusion" => {
@@ -233,14 +354,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             }
         }
         "disagg" => {
-            let cfg = DisaggConfig {
-                n_prefill: args.opt_parse_or("prefill-cores", 42)?,
-                n_decode: args.opt_parse_or("decode-cores", 21)?,
-                prefill_stages: args.opt_parse_or("stages", 6)?,
-                prefix_cache: args.flag("prefix-cache"),
-                memo: args.flag("memo"),
-                ..DisaggConfig::default()
-            };
+            let cfg = disagg_cfg_from(args)?;
             match trace {
                 Some(reqs) => npusim::serving::pd_disagg::simulate_disagg_requests(
                     &mut chip, &model, reqs, &cfg,
@@ -249,15 +363,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             }
         }
         "hybrid" => {
-            let fusion = fusion_cfg_from(args)?;
-            let defaults = HybridConfig::default();
-            let cfg = HybridConfig {
-                fusion,
-                window: args.opt_parse_or("window", defaults.window)?,
-                hysteresis: args.opt_parse_or("hysteresis", defaults.hysteresis)?,
-                min_dwell: args.opt_parse_or("min-dwell", defaults.min_dwell)?,
-                ..defaults
-            };
+            let cfg = hybrid_cfg_from(args)?;
             let mut sched = HybridScheduler::new(cfg);
             let metrics = match trace {
                 Some(reqs) => {

@@ -21,7 +21,7 @@
 //! pre-prefix-sharing one and simulations reproduce bit-for-bit.
 
 use super::blocks::{BlockAllocator, Chain};
-use super::prefix::{BlockKey, PrefixBlock, PrefixIndex, NO_NODE};
+use super::prefix::{BlockKey, PrefixBlock, PrefixIndex, NO_NODE, PENDING};
 use super::ring::{RingAlloc, RingBuffer};
 use std::collections::HashMap;
 
@@ -49,6 +49,10 @@ struct Entry {
     /// bytes of it belong to this request's prefix: appending past it
     /// requires a copy-on-write into a private block.
     frozen_tail_fill: Option<u64>,
+    /// Prefix-index nodes this request registered at admission, still
+    /// [`PENDING`] until the producing prefill reaches them: `(node,
+    /// prefix-token end)`, end counted from the start of the prompt.
+    registered: Vec<(u32, u64)>,
     hbm: Option<RingAlloc>,
     res: KvResidency,
 }
@@ -59,6 +63,7 @@ impl Entry {
             chain: Chain::empty(),
             cap_bytes: 0,
             frozen_tail_fill: None,
+            registered: Vec::new(),
             hbm,
             res: KvResidency::default(),
         }
@@ -192,21 +197,25 @@ impl KvCache {
         true
     }
 
-    /// Longest cached prefix (in tokens) for `keys`, capped at
-    /// `max_tokens`, without admitting or touching LRU state. Pipeline
-    /// stages use this to agree on a common match length before committing.
-    pub fn peek_prefix(&self, keys: &[BlockKey], max_tokens: u64) -> u64 {
+    /// Longest cached-and-ready prefix (in tokens) for `keys` at cycle
+    /// `at`, capped at `max_tokens`, without admitting or touching LRU
+    /// state. Pipeline stages use this to agree on a common match length
+    /// before committing; the cluster router probes it read-only.
+    pub fn peek_prefix(&self, keys: &[BlockKey], max_tokens: u64, at: u64) -> u64 {
         self.prefix
             .as_ref()
-            .map(|ix| ix.peek(keys, max_tokens))
+            .map(|ix| ix.peek(keys, max_tokens, at))
             .unwrap_or(0)
     }
 
-    /// Admit a request with prefix sharing: match the longest cached
-    /// prefix of `keys` (at most `max_match_tokens` tokens), share those
+    /// Admit a request with prefix sharing at cycle `at`: match the
+    /// longest cached prefix of `keys` (at most `max_match_tokens` tokens)
+    /// whose producing prefills have completed by `at`, share those
     /// blocks, and register the request's remaining shareable prefix
-    /// blocks for future arrivals. Returns the matched token count, or
-    /// `None` when HBM admission fails. Falls back to a plain [`admit`]
+    /// blocks for future arrivals (as [`PENDING`] — they only become
+    /// matchable once [`KvCache::note_prefilled`] reports the producing
+    /// prefill reached them). Returns the matched token count, or `None`
+    /// when HBM admission fails. Falls back to a plain [`admit`]
     /// (matching nothing) while the prefix cache is disabled.
     ///
     /// Matched tokens are already KV-resident: the scheduler skips their
@@ -220,6 +229,7 @@ impl KvCache {
         id: u64,
         keys: &[BlockKey],
         max_match_tokens: u64,
+        at: u64,
     ) -> Option<u64> {
         if self.entries.contains_key(&id) {
             return Some(0);
@@ -233,13 +243,13 @@ impl KvCache {
             return Some(0);
         }
 
-        // 1. Share the longest cached prefix.
+        // 1. Share the longest cached-and-ready prefix.
         self.stats.prefix_lookups += 1;
         let matched: Vec<PrefixBlock> = self
             .prefix
             .as_mut()
             .expect("prefix enabled")
-            .lookup(keys, max_match_tokens);
+            .lookup(keys, max_match_tokens, at);
         let mut matched_tokens = 0u64;
         for m in &matched {
             self.sram.retain(m.block);
@@ -256,13 +266,16 @@ impl KvCache {
             self.stats.deduped_bytes += matched_tokens * self.bytes_per_token;
         }
 
-        // 2. Register the request's remaining shareable prefix blocks (the
-        //    owner's prefill fills them; arrivals in flight share them
-        //    immediately — Mooncake-style cache-aware admission).
+        // 2. Register the request's remaining shareable prefix blocks as
+        //    PENDING (the owner's prefill fills them; they become
+        //    matchable chunk by chunk as `note_prefilled` reports the
+        //    prefill reaching them — never before the KV exists).
         let mut parent = matched.last().map(|m| m.node).unwrap_or(NO_NODE);
+        let mut prefix_end = matched_tokens;
         for &key in keys.iter().skip(matched.len()) {
-            // A capped match can leave already-cached continuations: never
-            // re-register them (that would orphan the cached node).
+            // A capped or readiness-bounded match can leave already-cached
+            // continuations: never re-register them (that would orphan the
+            // cached node).
             if self
                 .prefix
                 .as_ref()
@@ -280,17 +293,85 @@ impl KvCache {
                 .prefix
                 .as_mut()
                 .expect("prefix enabled")
-                .insert(parent, key, blk);
+                .insert(parent, key, blk, PENDING);
             entry.chain.push(blk);
             let fill = key.tokens * self.bytes_per_token;
             entry.cap_bytes += fill;
             entry.frozen_tail_fill = (key.tokens < self.block_tokens).then_some(fill);
+            prefix_end += key.tokens;
+            entry.registered.push((node, prefix_end));
             self.stats.inserted_blocks += 1;
             parent = node;
         }
 
         self.entries.insert(id, entry);
         Some(matched_tokens)
+    }
+
+    /// Report that request `id`'s prefill has materialised the first
+    /// `upto_tokens` prompt tokens by cycle `now`: every prefix block this
+    /// request registered that lies entirely inside that range becomes
+    /// matchable from `now` on. Schedulers call this once per completed
+    /// prefill chunk; it is a no-op without registered blocks.
+    pub fn note_prefilled(&mut self, id: u64, upto_tokens: u64, now: u64) {
+        let Some(entry) = self.entries.get_mut(&id) else {
+            return;
+        };
+        if entry.registered.is_empty() {
+            return;
+        }
+        let ix = self.prefix.as_mut().expect("registered implies enabled");
+        entry.registered.retain(|&(node, end)| {
+            if end <= upto_tokens {
+                ix.mark_ready(node, now);
+                false
+            } else {
+                true
+            }
+        });
+    }
+
+    /// Seed the cache with an externally produced copy of a prefix
+    /// (cluster KV migration): registers blocks for `keys`, ready from
+    /// cycle `ready_at` (when the inter-chip transfer lands). Blocks
+    /// already cached just have their readiness advanced. Best-effort
+    /// under SRAM pressure; returns the token length of the seeded path.
+    pub fn seed_prefix(&mut self, keys: &[BlockKey], ready_at: u64) -> u64 {
+        if self.prefix.is_none() {
+            return 0;
+        }
+        let mut parent = NO_NODE;
+        let mut tokens = 0u64;
+        for &key in keys {
+            let existing = self
+                .prefix
+                .as_ref()
+                .expect("prefix enabled")
+                .child_of(parent, key);
+            if let Some(node) = existing {
+                self.prefix
+                    .as_mut()
+                    .expect("prefix enabled")
+                    .mark_ready(node, ready_at);
+                tokens += key.tokens;
+                parent = node;
+                continue;
+            }
+            let Some(blk) = self.alloc_block() else {
+                break;
+            };
+            // The freshly allocated block's single reference belongs to
+            // the index (there is no owning request to share with yet).
+            let node = self
+                .prefix
+                .as_mut()
+                .expect("prefix enabled")
+                .insert(parent, key, blk, ready_at);
+            self.stats.inserted_blocks += 1;
+            tokens += key.tokens;
+            parent = node;
+        }
+        tokens
     }
 
     /// Allocate one SRAM block, reclaiming cold cached prefix blocks via
@@ -421,6 +502,22 @@ impl KvCache {
     pub fn overflow_bytes(&self) -> u64 {
         self.overflow_bytes
     }
+
+    /// Occupancy of the admission-limiting KV tier in `[0, 1]`: the HBM
+    /// ring when this worker has HBM (its buffer reservations gate
+    /// [`KvCache::can_admit`]), otherwise the SRAM block pool. The cluster
+    /// router's least-loaded signal.
+    pub fn utilization(&self) -> f64 {
+        let cap = self.hbm.capacity();
+        if cap > 0 {
+            return 1.0 - self.hbm.bytes_free() as f64 / cap as f64;
+        }
+        let total = self.sram.n_blocks();
+        if total == 0 {
+            return 0.0;
+        }
+        1.0 - self.sram.n_free() as f64 / total as f64
+    }
 }
 
 #[cfg(test)]
@@ -523,10 +620,11 @@ mod tests {
         kv.enable_prefix_cache();
         let ks = keys(7, 32); // two full blocks of shared prefix
         // First request: miss; registers its prefix blocks while admitting.
-        assert_eq!(kv.admit_prefixed(1, &ks, u64::MAX), Some(0));
+        assert_eq!(kv.admit_prefixed(1, &ks, u64::MAX, 0), Some(0));
         kv.append(1, 40); // 32 prefix + 8 unique tokens
+        kv.note_prefilled(1, 40, 100); // prefill completes at cycle 100
         // Second request: hits both prefix blocks.
-        assert_eq!(kv.admit_prefixed(2, &ks, u64::MAX), Some(32));
+        assert_eq!(kv.admit_prefixed(2, &ks, u64::MAX, 100), Some(32));
         assert_eq!(kv.residency(2).sram_bytes, 32 * 8);
         // Physically the two prefix blocks exist once: 1 used 3 blocks
         // (2 prefix + 1 private), request 2 added none.
@@ -539,16 +637,40 @@ mod tests {
     }
 
     #[test]
+    fn in_flight_blocks_do_not_match_until_prefilled() {
+        let mut kv = cache();
+        kv.enable_prefix_cache();
+        let ks = keys(7, 32);
+        assert_eq!(kv.admit_prefixed(1, &ks, u64::MAX, 0), Some(0));
+        // Request 1's prefill is still in flight: a co-arriving request
+        // must not count its registered blocks as hits (the historical
+        // admission-time optimism this fix removes).
+        assert_eq!(kv.peek_prefix(&ks, u64::MAX, 0), 0);
+        assert_eq!(kv.admit_prefixed(2, &ks, u64::MAX, 0), Some(0));
+        let s = kv.stats();
+        assert_eq!(s.prefix_hits, 0);
+        assert_eq!(s.matched_tokens, 0);
+        // Chunked completion: the first block becomes matchable once the
+        // prefill passes it, the second only at full coverage.
+        kv.note_prefilled(1, 16, 700);
+        assert_eq!(kv.peek_prefix(&ks, u64::MAX, 700), 16);
+        kv.note_prefilled(1, 32, 900);
+        assert_eq!(kv.peek_prefix(&ks, u64::MAX, 899), 16);
+        assert_eq!(kv.peek_prefix(&ks, u64::MAX, 900), 32);
+    }
+
+    #[test]
     fn cached_prefix_survives_release_and_is_rematched() {
         let mut kv = cache();
         kv.enable_prefix_cache();
         let ks = keys(3, 32);
-        kv.admit_prefixed(1, &ks, u64::MAX);
+        kv.admit_prefixed(1, &ks, u64::MAX, 0);
         kv.append(1, 33);
+        kv.note_prefilled(1, 33, 50);
         kv.release(1);
         // Blocks stay cached: a later request still matches.
-        assert_eq!(kv.peek_prefix(&ks, u64::MAX), 32);
-        assert_eq!(kv.admit_prefixed(2, &ks, u64::MAX), Some(32));
+        assert_eq!(kv.peek_prefix(&ks, u64::MAX, 50), 32);
+        assert_eq!(kv.admit_prefixed(2, &ks, u64::MAX, 50), Some(32));
     }
 
     #[test]
@@ -556,17 +678,18 @@ mod tests {
         let mut kv = cache();
         kv.enable_prefix_cache();
         let ks = keys(9, 24); // one full block + one partial (8 tokens)
-        kv.admit_prefixed(1, &ks, u64::MAX);
+        kv.admit_prefixed(1, &ks, u64::MAX, 0);
         kv.append(1, 24); // owner fills exactly the registered prefix
+        kv.note_prefilled(1, 24, 10);
         // Request 2 shares both blocks (incl. the partial terminal)…
-        assert_eq!(kv.admit_prefixed(2, &ks, u64::MAX), Some(24));
+        assert_eq!(kv.admit_prefixed(2, &ks, u64::MAX, 10), Some(24));
         let before = kv.stats().cow_copies;
         // …and diverges: the partial block must be COWed, not mutated.
         let a = kv.append(2, 4);
         assert_eq!(a.sram_bytes, 4 * 8);
         assert_eq!(kv.stats().cow_copies, before + 1);
         // A third request still matches the *original* cached prefix.
-        assert_eq!(kv.peek_prefix(&ks, u64::MAX), 24);
+        assert_eq!(kv.peek_prefix(&ks, u64::MAX, 10), 24);
         // Owner appending past its own registered partial also COWs.
         kv.append(1, 2);
         assert_eq!(kv.stats().cow_copies, before + 2);
@@ -576,7 +699,7 @@ mod tests {
     fn lru_eviction_reclaims_cold_prefixes_under_pressure() {
         let mut kv = cache(); // 4 SRAM blocks
         kv.enable_prefix_cache();
-        kv.admit_prefixed(1, &keys(1, 32), u64::MAX);
+        kv.admit_prefixed(1, &keys(1, 32), u64::MAX, 0);
         kv.append(1, 32);
         kv.release(1); // 2 cached blocks, refcount 1 (index only)
         // A new unshared request needs 3 blocks: eviction must free them.
@@ -591,8 +714,9 @@ mod tests {
         let mut kv = cache(); // 4 SRAM blocks
         kv.enable_prefix_cache();
         let ks = keys(5, 32);
-        kv.admit_prefixed(1, &ks, u64::MAX); // 2 registered blocks, live
+        kv.admit_prefixed(1, &ks, u64::MAX, 0); // 2 registered blocks, live
         kv.append(1, 32);
+        kv.note_prefilled(1, 32, 0);
         // Fill the remaining 2 blocks with an unshared request, then ask
         // for more: the live prefix blocks must not be reclaimed.
         kv.admit(2);
@@ -601,7 +725,7 @@ mod tests {
         assert_eq!(a.hbm_bytes, 16 * 8);
         assert_eq!(kv.stats().prefix_evictions, 0);
         // Request 1 still matches its prefix for a sharer.
-        assert_eq!(kv.peek_prefix(&ks, u64::MAX), 32);
+        assert_eq!(kv.peek_prefix(&ks, u64::MAX, 0), 32);
     }
 
     #[test]
@@ -609,9 +733,30 @@ mod tests {
         let mut kv = cache();
         kv.enable_prefix_cache();
         let ks = keys(2, 48);
-        kv.admit_prefixed(1, &ks, u64::MAX);
+        kv.admit_prefixed(1, &ks, u64::MAX, 0);
+        kv.note_prefilled(1, 48, 0);
         // Cap below the cached 48 tokens: match stops at a block boundary.
-        assert_eq!(kv.admit_prefixed(2, &ks, 40), Some(32));
+        assert_eq!(kv.admit_prefixed(2, &ks, 40, 0), Some(32));
+    }
+
+    #[test]
+    fn seeded_prefixes_match_from_their_landing_cycle() {
+        let mut kv = cache();
+        kv.enable_prefix_cache();
+        let ks = keys(4, 32);
+        // A migrated copy lands at cycle 2000.
+        assert_eq!(kv.seed_prefix(&ks, 2000), 32);
+        assert_eq!(kv.peek_prefix(&ks, u64::MAX, 1999), 0);
+        assert_eq!(kv.peek_prefix(&ks, u64::MAX, 2000), 32);
+        assert_eq!(kv.admit_prefixed(9, &ks, u64::MAX, 2500), Some(32));
+        // Seeded blocks are index-owned and evictable once cold: an
+        // unshared request needing 3 of the 4 blocks forces at least one
+        // eviction of the seeded pair.
+        kv.release(9);
+        kv.admit(10);
+        let a = kv.append(10, 48);
+        assert_eq!(a.sram_bytes, 48 * 8);
+        assert!(kv.stats().prefix_evictions >= 1);
     }
 
     #[test]
@@ -658,7 +803,9 @@ mod tests {
             let mut tokens: HashMap<u64, u64> = HashMap::new();
             let mut next_id = 0u64;
             let mut live: Vec<u64> = Vec::new();
+            let mut now = 0u64;
             for _ in 0..rng.range(1, 60) {
+                now += 1;
                 let roll = rng.f64();
                 if roll < 0.4 {
                     let scope = rng.range_u64(1, 4);
@@ -666,8 +813,11 @@ mod tests {
                     let id = next_id;
                     next_id += 1;
                     let ks = keys(scope, prefix_tokens);
-                    if let Some(matched) = kv.admit_prefixed(id, &ks, u64::MAX) {
+                    if let Some(matched) = kv.admit_prefixed(id, &ks, u64::MAX, now) {
                         assert!(matched <= prefix_tokens);
+                        // Emulate the producing prefill completing at once
+                        // so later admissions keep exercising sharing.
+                        kv.note_prefilled(id, prefix_tokens, now);
                         tokens.insert(id, matched);
                         live.push(id);
                     }

@@ -15,11 +15,21 @@
 //! owner besides the index itself are candidates, ordered by last use then
 //! node id — fully deterministic (no HashMap iteration order leaks into
 //! behaviour; the map is only ever *probed* by key).
+//!
+//! Matching is **in-flight aware**: a node registered at admission time is
+//! [`PENDING`] until the producing prefill actually completes
+//! ([`PrefixIndex::mark_ready`]), and [`PrefixIndex::lookup`]/
+//! [`PrefixIndex::peek`] only match nodes whose `ready_at` is at or before
+//! the probing cycle — so a just-registered block never counts as a hit
+//! (and never skips prefill work) before its KV physically exists.
 
 use std::collections::HashMap;
 
 /// Sentinel parent for root-level nodes.
 pub const NO_NODE: u32 = u32::MAX;
+
+/// `ready_at` sentinel for blocks whose producing prefill is in flight.
+pub const PENDING: u64 = u64::MAX;
 
 /// One token block of a shareable prefix: the content hash of the block
 /// and how many tokens it holds (full blocks hold `block_tokens`; the
@@ -39,6 +49,9 @@ struct Node {
     last_use: u64,
     n_children: u32,
     live: bool,
+    /// Cycle at which the block's KV is materialised ([`PENDING`] while
+    /// the producing prefill is still in flight).
+    ready_at: u64,
 }
 
 /// A matched or registered prefix block.
@@ -88,15 +101,20 @@ impl PrefixIndex {
         (n.live && n.tokens == key.tokens).then_some(ix)
     }
 
-    /// Longest cached prefix of `keys`, capped at `max_tokens`. Touches
+    /// Longest cached-and-ready prefix of `keys`, capped at `max_tokens`:
+    /// only nodes whose producing prefill completed at or before cycle
+    /// `at` match (registered-but-in-flight blocks are invisible). Touches
     /// every matched node's LRU stamp. Read-only peek via `peek`.
-    pub fn lookup(&mut self, keys: &[BlockKey], max_tokens: u64) -> Vec<PrefixBlock> {
+    pub fn lookup(&mut self, keys: &[BlockKey], max_tokens: u64, at: u64) -> Vec<PrefixBlock> {
         let now = self.bump();
         let mut out = Vec::new();
         let mut parent = NO_NODE;
         let mut tokens = 0u64;
         for &key in keys {
             let Some(ix) = self.child(parent, key) else { break };
+            if self.nodes[ix as usize].ready_at > at {
+                break;
+            }
             if tokens + key.tokens > max_tokens {
                 break;
             }
@@ -112,13 +130,17 @@ impl PrefixIndex {
         out
     }
 
-    /// Matched token count for `keys` without mutating LRU state (used to
-    /// agree on a common match length across pipeline stages).
-    pub fn peek(&self, keys: &[BlockKey], max_tokens: u64) -> u64 {
+    /// Matched ready token count for `keys` at cycle `at` without mutating
+    /// LRU state (used to agree on a common match length across pipeline
+    /// stages, and by the cluster router's read-only probe).
+    pub fn peek(&self, keys: &[BlockKey], max_tokens: u64, at: u64) -> u64 {
         let mut parent = NO_NODE;
         let mut tokens = 0u64;
         for &key in keys {
             let Some(ix) = self.child(parent, key) else { break };
+            if self.nodes[ix as usize].ready_at > at {
+                break;
+            }
             if tokens + key.tokens > max_tokens {
                 break;
             }
@@ -128,10 +150,13 @@ impl PrefixIndex {
         tokens
     }
 
-    /// Register `block` as the child of `parent` for `key`. Returns the new
-    /// node (the caller must hold one reference on `block` for the index).
-    /// `parent` is `NO_NODE` for the first block of a prefix.
-    pub fn insert(&mut self, parent: u32, key: BlockKey, block: u32) -> u32 {
+    /// Register `block` as the child of `parent` for `key`, usable by
+    /// matches from cycle `ready_at` on (pass [`PENDING`] at admission
+    /// time and [`PrefixIndex::mark_ready`] it when the producing prefill
+    /// completes). Returns the new node (the caller must hold one
+    /// reference on `block` for the index). `parent` is `NO_NODE` for the
+    /// first block of a prefix.
+    pub fn insert(&mut self, parent: u32, key: BlockKey, block: u32, ready_at: u64) -> u32 {
         debug_assert!(
             self.child(parent, key).is_none(),
             "duplicate prefix insert"
@@ -145,6 +170,7 @@ impl PrefixIndex {
             last_use: now,
             n_children: 0,
             live: true,
+            ready_at,
         };
         let ix = match self.free_slots.pop() {
             Some(slot) => {
@@ -161,6 +187,16 @@ impl PrefixIndex {
             self.nodes[parent as usize].n_children += 1;
         }
         ix
+    }
+
+    /// Record that `node`'s KV exists from cycle `now` on (the producing
+    /// prefill completed, or a migrated copy landed). Keeps the earliest
+    /// readiness if called twice.
+    pub fn mark_ready(&mut self, node: u32, now: u64) {
+        let n = &mut self.nodes[node as usize];
+        if n.live && now < n.ready_at {
+            n.ready_at = now;
+        }
     }
 
     /// Evict the least-recently-used leaf whose block `can_evict` (i.e. is
@@ -203,54 +239,77 @@ mod tests {
     #[test]
     fn empty_index_matches_nothing() {
         let mut ix = PrefixIndex::new();
-        assert!(ix.lookup(&[key(1), key(2)], u64::MAX).is_empty());
-        assert_eq!(ix.peek(&[key(1)], u64::MAX), 0);
+        assert!(ix.lookup(&[key(1), key(2)], u64::MAX, 0).is_empty());
+        assert_eq!(ix.peek(&[key(1)], u64::MAX, 0), 0);
     }
 
     #[test]
     fn longest_prefix_match_walks_the_trie() {
         let mut ix = PrefixIndex::new();
-        let a = ix.insert(NO_NODE, key(1), 10);
-        let b = ix.insert(a, key(2), 11);
-        ix.insert(b, key(3), 12);
-        let m = ix.lookup(&[key(1), key(2), key(9)], u64::MAX);
+        let a = ix.insert(NO_NODE, key(1), 10, 0);
+        let b = ix.insert(a, key(2), 11, 0);
+        ix.insert(b, key(3), 12, 0);
+        let m = ix.lookup(&[key(1), key(2), key(9)], u64::MAX, 0);
         assert_eq!(m.len(), 2);
         assert_eq!(m[0].block, 10);
         assert_eq!(m[1].block, 11);
         // Full path matches all three.
-        assert_eq!(ix.peek(&[key(1), key(2), key(3)], u64::MAX), 48);
+        assert_eq!(ix.peek(&[key(1), key(2), key(3)], u64::MAX, 0), 48);
         // A different first block matches nothing.
-        assert!(ix.lookup(&[key(7)], u64::MAX).is_empty());
+        assert!(ix.lookup(&[key(7)], u64::MAX, 0).is_empty());
     }
 
     #[test]
     fn partial_terminal_block_requires_exact_token_count() {
         let mut ix = PrefixIndex::new();
-        let a = ix.insert(NO_NODE, key(1), 10);
-        ix.insert(a, BlockKey { hash: 2, tokens: 5 }, 11);
+        let a = ix.insert(NO_NODE, key(1), 10, 0);
+        ix.insert(a, BlockKey { hash: 2, tokens: 5 }, 11, 0);
         // Same hash, different fill: no match past the first block.
-        assert_eq!(ix.peek(&[key(1), key(2)], u64::MAX), 16);
-        assert_eq!(ix.peek(&[key(1), BlockKey { hash: 2, tokens: 5 }], u64::MAX), 21);
+        assert_eq!(ix.peek(&[key(1), key(2)], u64::MAX, 0), 16);
+        assert_eq!(
+            ix.peek(&[key(1), BlockKey { hash: 2, tokens: 5 }], u64::MAX, 0),
+            21
+        );
     }
 
     #[test]
     fn max_tokens_caps_the_match() {
         let mut ix = PrefixIndex::new();
-        let a = ix.insert(NO_NODE, key(1), 10);
-        ix.insert(a, key(2), 11);
-        let m = ix.lookup(&[key(1), key(2)], 16);
+        let a = ix.insert(NO_NODE, key(1), 10, 0);
+        ix.insert(a, key(2), 11, 0);
+        let m = ix.lookup(&[key(1), key(2)], 16, 0);
         assert_eq!(m.len(), 1);
-        assert_eq!(ix.peek(&[key(1), key(2)], 20), 16);
+        assert_eq!(ix.peek(&[key(1), key(2)], 20, 0), 16);
+    }
+
+    #[test]
+    fn pending_blocks_are_invisible_until_marked_ready() {
+        let mut ix = PrefixIndex::new();
+        let a = ix.insert(NO_NODE, key(1), 10, PENDING);
+        let b = ix.insert(a, key(2), 11, PENDING);
+        // In flight: nothing matches at any finite cycle.
+        assert_eq!(ix.peek(&[key(1), key(2)], u64::MAX, 1_000_000), 0);
+        assert!(ix.lookup(&[key(1), key(2)], u64::MAX, 1_000_000).is_empty());
+        // First block's prefill completes at cycle 500: it matches from
+        // then on, but the still-pending continuation does not.
+        ix.mark_ready(a, 500);
+        assert_eq!(ix.peek(&[key(1), key(2)], u64::MAX, 499), 0);
+        assert_eq!(ix.peek(&[key(1), key(2)], u64::MAX, 500), 16);
+        ix.mark_ready(b, 800);
+        assert_eq!(ix.peek(&[key(1), key(2)], u64::MAX, 800), 32);
+        // mark_ready keeps the earliest readiness.
+        ix.mark_ready(b, 900);
+        assert_eq!(ix.peek(&[key(1), key(2)], u64::MAX, 800), 32);
     }
 
     #[test]
     fn lru_eviction_prefers_cold_leaves_and_respects_refcounts() {
         let mut ix = PrefixIndex::new();
-        let a = ix.insert(NO_NODE, key(1), 10);
-        ix.insert(a, key(2), 11);
-        ix.insert(NO_NODE, key(5), 12);
+        let a = ix.insert(NO_NODE, key(1), 10, 0);
+        ix.insert(a, key(2), 11, 0);
+        ix.insert(NO_NODE, key(5), 12, 0);
         // Touch the second root so block 12 is no longer the coldest leaf…
-        ix.lookup(&[key(5)], u64::MAX);
+        ix.lookup(&[key(5)], u64::MAX, 0);
         // …leaving block 11 (leaf of the first path) as the LRU victim.
         assert_eq!(ix.evict_lru(|_| true), Some(11));
         // Now block 10 is a leaf again; a refcount guard can protect it.
@@ -263,8 +322,8 @@ mod tests {
     #[test]
     fn interior_nodes_are_never_evicted() {
         let mut ix = PrefixIndex::new();
-        let a = ix.insert(NO_NODE, key(1), 10);
-        ix.insert(a, key(2), 11);
+        let a = ix.insert(NO_NODE, key(1), 10, 0);
+        ix.insert(a, key(2), 11, 0);
         // Block 10 backs an interior node: only 11 is evictable.
         assert_eq!(ix.evict_lru(|_| true), Some(11));
     }
@@ -272,11 +331,11 @@ mod tests {
     #[test]
     fn slots_are_recycled_after_eviction() {
         let mut ix = PrefixIndex::new();
-        ix.insert(NO_NODE, key(1), 10);
+        ix.insert(NO_NODE, key(1), 10, 0);
         assert_eq!(ix.evict_lru(|_| true), Some(10));
-        let again = ix.insert(NO_NODE, key(3), 20);
+        let again = ix.insert(NO_NODE, key(3), 20, 0);
         assert_eq!(again, 0, "freed slot reused");
-        assert_eq!(ix.peek(&[key(3)], u64::MAX), 16);
+        assert_eq!(ix.peek(&[key(3)], u64::MAX, 0), 16);
         assert_eq!(ix.n_cached(), 1);
     }
 }

@@ -1,0 +1,671 @@
+//! Multi-chip serving cluster: N independent [`ChipSim`]s behind a
+//! streamed admission frontend and a pluggable [`Router`].
+//!
+//! The single-chip drivers pre-load a whole trace into one scheduler; the
+//! cluster driver instead *streams* — requests are released into a
+//! cluster-level queue at their arrival times and routed to a chip based
+//! on the chips' state **at that moment** (queue depth, KV occupancy,
+//! prefix-cache contents). Three routing policies ship:
+//!
+//! - [`RouterPolicy::RoundRobin`] — static, state-blind baseline.
+//! - [`RouterPolicy::LeastLoaded`] — minimises `(pending requests, KV
+//!   occupancy)` at admission.
+//! - [`RouterPolicy::PrefixAware`] — probes every chip's prefix index
+//!   (read-only, in-flight-aware) and routes to the chip holding the
+//!   longest cached-and-ready prefix of the prompt; falls back to
+//!   least-loaded on a miss. When the holder chip is overloaded (pending
+//!   work exceeds the lightest chip's by the configured migration gap,
+//!   `ClusterConfig::migrate_load_gap`), it routes to the lightest chip and
+//!   *migrates* the matched prefix KV over the inter-chip fabric
+//!   ([`crate::sim::interconnect`]) — charging the transfer's latency and
+//!   bandwidth rather than recomputing the prefill.
+//!
+//! Every chip runs its own [`Scheduler`] (fusion, disagg, or hybrid —
+//! mixes are allowed via [`simulate_cluster_mixed`]); the driver
+//! interleaves chips deterministically by their earliest actionable cycle
+//! and rolls per-chip [`Metrics`] up into a cluster aggregate.
+
+use crate::config::{ChipConfig, ModelConfig, WorkloadConfig};
+use crate::memmgr::prefix::BlockKey;
+use crate::memmgr::KV_BLOCK_TOKENS;
+use crate::serving::metrics::{CacheStats, Metrics};
+use crate::serving::request::{self, Request};
+use crate::serving::scheduler::{Scheduler, SchedulerConfig};
+use crate::sim::chip::ChipSim;
+use crate::sim::interconnect::{Interconnect, InterconnectConfig, InterconnectStats};
+use crate::util::units::{cycles_to_secs, secs_to_cycles, Cycle};
+use std::collections::VecDeque;
+
+/// Routing policy selector (CLI `--router`, experiment sweeps).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouterPolicy {
+    RoundRobin,
+    LeastLoaded,
+    PrefixAware,
+}
+
+impl RouterPolicy {
+    /// All policies, in sweep order.
+    pub const ALL: [RouterPolicy; 3] = [
+        RouterPolicy::RoundRobin,
+        RouterPolicy::LeastLoaded,
+        RouterPolicy::PrefixAware,
+    ];
+
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "rr" | "round-robin" | "roundrobin" => RouterPolicy::RoundRobin,
+            "least" | "least-loaded" | "ll" => RouterPolicy::LeastLoaded,
+            "prefix" | "prefix-aware" | "hit-aware" => RouterPolicy::PrefixAware,
+            other => anyhow::bail!("unknown router {other:?} (rr|least|prefix)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RouterPolicy::RoundRobin => "rr",
+            RouterPolicy::LeastLoaded => "least",
+            RouterPolicy::PrefixAware => "prefix",
+        }
+    }
+
+    /// Instantiate the policy. `migrate_load_gap` only affects
+    /// [`RouterPolicy::PrefixAware`].
+    pub fn build(&self, migrate_load_gap: usize) -> Box<dyn Router> {
+        match self {
+            RouterPolicy::RoundRobin => Box::new(RoundRobinRouter { next: 0 }),
+            RouterPolicy::LeastLoaded => Box::new(LeastLoadedRouter),
+            RouterPolicy::PrefixAware => Box::new(PrefixAwareRouter {
+                load_gap: migrate_load_gap,
+            }),
+        }
+    }
+}
+
+/// One chip's routing-relevant state at an admission instant.
+#[derive(Debug, Clone, Copy)]
+pub struct ChipView {
+    /// Requests enqueued on the chip but not yet retired.
+    pub pending_work: usize,
+    /// KV occupancy of the admission-limiting tier, in per-mille
+    /// (integer so routing comparisons are exact and deterministic).
+    pub kv_occupancy_milli: u64,
+    /// Longest cached-and-ready prefix (tokens) the chip could share with
+    /// this request (0 when the prompt has no shareable prefix, the chip
+    /// holds none of it, or its prefill is still in flight).
+    pub prefix_match: u64,
+}
+
+impl ChipView {
+    fn load_key(&self) -> (usize, u64) {
+        (self.pending_work, self.kv_occupancy_milli)
+    }
+}
+
+/// Where a request goes, and whether its prefix KV migrates first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RouteDecision {
+    pub chip: usize,
+    /// `Some(holder)`: stream the matched prefix from `holder`'s cache to
+    /// `chip` over the interconnect before admission (charged, not free).
+    pub migrate_from: Option<usize>,
+}
+
+/// A cluster admission router: one decision per arriving request, based on
+/// read-only per-chip state snapshots.
+pub trait Router {
+    fn name(&self) -> &'static str;
+
+    /// Does this policy read [`ChipView::prefix_match`]? The driver skips
+    /// the per-arrival trie probes (every stage of every pipe of every
+    /// chip) for policies that never look at them.
+    fn wants_prefix(&self) -> bool {
+        false
+    }
+
+    fn route(&mut self, req: &Request, views: &[ChipView]) -> RouteDecision;
+}
+
+/// Chip with the least `(pending work, KV occupancy)`, ties on index.
+fn least_loaded(views: &[ChipView]) -> usize {
+    views
+        .iter()
+        .enumerate()
+        .min_by_key(|(i, v)| (v.load_key(), *i))
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+/// Static round-robin (the state-blind baseline).
+struct RoundRobinRouter {
+    next: usize,
+}
+
+impl Router for RoundRobinRouter {
+    fn name(&self) -> &'static str {
+        "rr"
+    }
+
+    fn route(&mut self, _req: &Request, views: &[ChipView]) -> RouteDecision {
+        let chip = self.next % views.len().max(1);
+        self.next = (self.next + 1) % views.len().max(1);
+        RouteDecision {
+            chip,
+            migrate_from: None,
+        }
+    }
+}
+
+/// Least `(queue depth, KV occupancy)` at each admission.
+struct LeastLoadedRouter;
+
+impl Router for LeastLoadedRouter {
+    fn name(&self) -> &'static str {
+        "least"
+    }
+
+    fn route(&mut self, _req: &Request, views: &[ChipView]) -> RouteDecision {
+        RouteDecision {
+            chip: least_loaded(views),
+            migrate_from: None,
+        }
+    }
+}
+
+/// Longest-ready-prefix-first, least-loaded fallback, migration under
+/// holder overload.
+struct PrefixAwareRouter {
+    load_gap: usize,
+}
+
+impl Router for PrefixAwareRouter {
+    fn name(&self) -> &'static str {
+        "prefix"
+    }
+
+    fn wants_prefix(&self) -> bool {
+        true
+    }
+
+    fn route(&mut self, _req: &Request, views: &[ChipView]) -> RouteDecision {
+        let lightest = least_loaded(views);
+        // Longest ready match wins; ties go to the less loaded holder,
+        // then to the lower chip index (deterministic).
+        let holder = views
+            .iter()
+            .enumerate()
+            .filter(|(_, v)| v.prefix_match > 0)
+            .min_by_key(|(i, v)| (std::cmp::Reverse(v.prefix_match), v.load_key(), *i))
+            .map(|(i, _)| i);
+        match holder {
+            None => RouteDecision {
+                chip: lightest,
+                migrate_from: None,
+            },
+            Some(h) => {
+                let overloaded = views[h].pending_work
+                    > views[lightest].pending_work.saturating_add(self.load_gap);
+                if overloaded && h != lightest {
+                    // Queueing on the holder would cost more than moving
+                    // the KV: migrate the prefix to the lightest chip.
+                    RouteDecision {
+                        chip: lightest,
+                        migrate_from: Some(h),
+                    }
+                } else {
+                    RouteDecision {
+                        chip: h,
+                        migrate_from: None,
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Cluster topology + policy configuration.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Per-chip hardware (the cluster is homogeneous; heterogeneous chips
+    /// are a ROADMAP follow-up).
+    pub chip: ChipConfig,
+    pub n_chips: usize,
+    /// Scheduler every chip runs ([`simulate_cluster_mixed`] overrides).
+    pub sched: SchedulerConfig,
+    pub router: RouterPolicy,
+    pub interconnect: InterconnectConfig,
+    /// Pending-work excess over the lightest chip above which the prefix
+    /// router migrates the matched KV instead of queueing on the holder.
+    pub migrate_load_gap: usize,
+}
+
+impl ClusterConfig {
+    pub fn new(
+        chip: ChipConfig,
+        n_chips: usize,
+        sched: SchedulerConfig,
+        router: RouterPolicy,
+    ) -> Self {
+        ClusterConfig {
+            chip,
+            n_chips: n_chips.max(1),
+            sched,
+            router,
+            interconnect: InterconnectConfig::default(),
+            migrate_load_gap: 8,
+        }
+    }
+}
+
+/// Per-chip metrics plus the cluster-level rollup inputs.
+#[derive(Debug)]
+pub struct ClusterMetrics {
+    pub per_chip: Vec<Metrics>,
+    /// Requests admitted per chip (the routing histogram).
+    pub routed: Vec<usize>,
+    /// Prefix migrations the router performed.
+    pub migrations: u64,
+    pub interconnect: InterconnectStats,
+    freq_mhz: f64,
+}
+
+impl ClusterMetrics {
+    /// Total completed requests across chips.
+    pub fn n_requests(&self) -> usize {
+        self.per_chip.iter().map(|m| m.n_requests()).sum()
+    }
+
+    /// Merge every chip's records and cache counters into one [`Metrics`]
+    /// (cluster-level TTFT/TBT distributions, throughput over the global
+    /// makespan, aggregate cache rates).
+    pub fn aggregate(&self) -> Metrics {
+        let mut out = Metrics::new(self.freq_mhz);
+        for m in &self.per_chip {
+            out.absorb(m);
+        }
+        out
+    }
+}
+
+/// The `keys` prefix covering exactly the first `tokens` matched tokens.
+fn keys_prefix(keys: &[BlockKey], tokens: u64) -> Vec<BlockKey> {
+    let mut out = Vec::new();
+    let mut cum = 0u64;
+    for &k in keys {
+        if cum + k.tokens > tokens {
+            break;
+        }
+        cum += k.tokens;
+        out.push(k);
+    }
+    out
+}
+
+/// A migrated request waiting for its KV to land on the target chip.
+struct Transit {
+    landing: Cycle,
+    dst: usize,
+    req: Request,
+    keys: Vec<BlockKey>,
+}
+
+/// Simulate a synthetic workload on the cluster.
+pub fn simulate_cluster(
+    cfg: &ClusterConfig,
+    model: &ModelConfig,
+    workload: &WorkloadConfig,
+) -> anyhow::Result<ClusterMetrics> {
+    simulate_cluster_requests(cfg, model, request::generate(workload))
+}
+
+/// Simulate an explicit (arrival-sorted) request list on the cluster,
+/// every chip running `cfg.sched`.
+pub fn simulate_cluster_requests(
+    cfg: &ClusterConfig,
+    model: &ModelConfig,
+    reqs: Vec<Request>,
+) -> anyhow::Result<ClusterMetrics> {
+    let scheds: Vec<Box<dyn Scheduler>> = (0..cfg.n_chips.max(1))
+        .map(|_| cfg.sched.build())
+        .collect();
+    simulate_cluster_mixed(cfg, model, reqs, scheds)
+}
+
+/// Simulate with an explicit per-chip scheduler list (mixed policies:
+/// e.g. chip 0 fused, chip 1 disaggregated). `scheds.len()` must equal
+/// `cfg.n_chips`; requests must be sorted by arrival time.
+pub fn simulate_cluster_mixed(
+    cfg: &ClusterConfig,
+    model: &ModelConfig,
+    reqs: Vec<Request>,
+    mut scheds: Vec<Box<dyn Scheduler>>,
+) -> anyhow::Result<ClusterMetrics> {
+    let n = cfg.n_chips.max(1);
+    anyhow::ensure!(
+        scheds.len() == n,
+        "cluster has {n} chips but {} schedulers",
+        scheds.len()
+    );
+    let freq = cfg.chip.freq_mhz;
+    let mut chips: Vec<ChipSim> = (0..n).map(|_| ChipSim::new(cfg.chip.clone())).collect();
+    let max_tokens = reqs.iter().map(|r| r.total_tokens()).max().unwrap_or(1);
+    for (i, s) in scheds.iter_mut().enumerate() {
+        s.prepare(&mut chips[i], model, max_tokens)?;
+    }
+    let mut icn = Interconnect::new(cfg.interconnect, n, freq);
+    let mut router = cfg.router.build(cfg.migrate_load_gap);
+
+    let total = reqs.len();
+    let mut stream: VecDeque<Request> = reqs.into();
+    let mut transit: Vec<Transit> = Vec::new();
+    // `(request id, true arrival cycle, destination chip)` of every
+    // migration — used to rebase recorded arrivals after the run.
+    let mut migrated_log: Vec<(u64, Cycle, usize)> = Vec::new();
+    let mut per_chip: Vec<Metrics> = (0..n).map(|_| Metrics::new(freq)).collect();
+    let mut routed = vec![0usize; n];
+    let mut migrations = 0u64;
+    let mut done = 0usize;
+    let mut guard = 0u64;
+
+    while done < total {
+        guard += 1;
+        anyhow::ensure!(
+            guard < 64_000_000,
+            "cluster livelock: {done}/{total} requests done"
+        );
+        // Three event sources: the arrival stream, in-flight migrations,
+        // and the chips themselves. Process the earliest; ties prefer
+        // admissions (arrival, then transit) so routing always sees every
+        // request released up to the chips' next actionable cycle.
+        let arr_t = stream
+            .front()
+            .map(|r| secs_to_cycles(r.arrival_s, freq))
+            .unwrap_or(Cycle::MAX);
+        let tra = transit
+            .iter()
+            .enumerate()
+            .min_by_key(|(k, t)| (t.landing, *k))
+            .map(|(k, t)| (k, t.landing));
+        let tra_t = tra.map(|(_, c)| c).unwrap_or(Cycle::MAX);
+        let act = (0..n)
+            .filter_map(|i| scheds[i].next_action(&chips[i]).map(|t| (t, i)))
+            .min();
+        let act_t = act.map(|(t, _)| t).unwrap_or(Cycle::MAX);
+        anyhow::ensure!(
+            arr_t != Cycle::MAX || tra_t != Cycle::MAX || act_t != Cycle::MAX,
+            "cluster deadlock: {done}/{total} requests done, nothing actionable"
+        );
+
+        if arr_t <= tra_t && arr_t <= act_t {
+            // Release one arrival and route it on current chip state.
+            let req = stream.pop_front().expect("arr_t finite");
+            let now = secs_to_cycles(req.arrival_s, freq);
+            let keys = req.block_keys(KV_BLOCK_TOKENS);
+            let limit = (req.input_len as u64).saturating_sub(1);
+            let probe = router.wants_prefix() && !keys.is_empty();
+            // In-flight migrations count toward their destination's load,
+            // so a transfer window cannot look like an idle chip (which
+            // would flood it with duplicate migrations).
+            let mut transit_load = vec![0usize; n];
+            for t in &transit {
+                transit_load[t.dst] += 1;
+            }
+            let views: Vec<ChipView> = scheds
+                .iter()
+                .enumerate()
+                .map(|(i, s)| ChipView {
+                    pending_work: s.pending_work() + transit_load[i],
+                    kv_occupancy_milli: (s.kv_utilization() * 1000.0).round() as u64,
+                    prefix_match: if probe {
+                        s.probe_prefix(&keys, limit, now)
+                    } else {
+                        0
+                    },
+                })
+                .collect();
+            let d = router.route(&req, &views);
+            anyhow::ensure!(d.chip < n, "router returned chip {} of {n}", d.chip);
+            match d.migrate_from {
+                Some(src) if src != d.chip && views[src].prefix_match > 0 => {
+                    // A migration of this prefix may already be in flight
+                    // (co-arriving turns of one conversation while the
+                    // holder stays overloaded): piggyback on it instead of
+                    // paying a duplicate transfer of the same bytes.
+                    let dup = transit
+                        .iter()
+                        .find(|t| !t.keys.is_empty() && t.keys.first() == keys.first())
+                        .map(|t| (t.dst, t.landing));
+                    // Piggybacked requests carry no seed keys (the
+                    // original transit seeds the cache for both).
+                    let (dst, landing, transit_keys) = match dup {
+                        Some((dst, landing)) => (dst, landing, Vec::new()),
+                        None => {
+                            // Stream the matched prefix KV across the
+                            // fabric; the request (and its seeded blocks)
+                            // reach the target chip when the last byte
+                            // lands.
+                            let matched = views[src].prefix_match;
+                            let bytes = matched * model.kv_bytes_per_token();
+                            let landing = icn.transfer(src, d.chip, bytes, now);
+                            migrations += 1;
+                            (d.chip, landing, keys_prefix(&keys, matched))
+                        }
+                    };
+                    // Admission is deferred to the landing instant so the
+                    // request actually matches the migrated copy; the
+                    // recorded arrival is rebased afterwards so TTFT
+                    // charges the wait.
+                    routed[dst] += 1;
+                    migrated_log.push((req.id, now, dst));
+                    let mut req = req;
+                    req.arrival_s = req.arrival_s.max(cycles_to_secs(landing, freq));
+                    transit.push(Transit {
+                        landing,
+                        dst,
+                        req,
+                        keys: transit_keys,
+                    });
+                }
+                _ => {
+                    routed[d.chip] += 1;
+                    scheds[d.chip].enqueue(req);
+                }
+            }
+        } else if tra_t <= act_t {
+            // A migrated prefix landed: seed the target chip's cache and
+            // release the request there. Readiness is derived from the
+            // request's (seconds-rounded) arrival so the float round-trip
+            // can never land the admission one cycle before the seed.
+            let (k, _) = tra.expect("tra_t finite");
+            let t = transit.swap_remove(k);
+            let ready = secs_to_cycles(t.req.arrival_s, freq).min(t.landing);
+            scheds[t.dst].import_prefix(&t.keys, ready);
+            scheds[t.dst].enqueue(t.req);
+        } else {
+            let (_, i) = act.expect("act_t finite");
+            done += scheds[i].step(&mut chips[i], model, &mut per_chip[i])?;
+        }
+    }
+
+    // Migrated requests were admitted at their KV-landing instant;
+    // restore their true frontend arrivals so TTFT includes the transfer
+    // wait instead of hiding it.
+    for &(id, arrival, dst) in &migrated_log {
+        per_chip[dst].rebase_arrival(id, arrival);
+    }
+    for (i, s) in scheds.iter().enumerate() {
+        let mut hw = CacheStats::default();
+        s.collect_cache_stats(&mut hw);
+        per_chip[i].cache.merge(&hw);
+    }
+    Ok(ClusterMetrics {
+        per_chip,
+        routed,
+        migrations,
+        interconnect: icn.stats(),
+        freq_mhz: freq,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PrefixSharing;
+    use crate::serving::pd_fusion::FusionConfig;
+
+    fn views(loads: &[usize]) -> Vec<ChipView> {
+        loads
+            .iter()
+            .map(|&pending_work| ChipView {
+                pending_work,
+                kv_occupancy_milli: 0,
+                prefix_match: 0,
+            })
+            .collect()
+    }
+
+    fn req() -> Request {
+        Request {
+            id: 0,
+            arrival_s: 0.0,
+            input_len: 128,
+            output_len: 8,
+            prefix: crate::serving::request::Prefix::default(),
+        }
+    }
+
+    #[test]
+    fn router_policy_parses_and_names() {
+        assert_eq!(RouterPolicy::parse("rr").unwrap(), RouterPolicy::RoundRobin);
+        assert_eq!(
+            RouterPolicy::parse("least-loaded").unwrap(),
+            RouterPolicy::LeastLoaded
+        );
+        assert_eq!(
+            RouterPolicy::parse("prefix").unwrap(),
+            RouterPolicy::PrefixAware
+        );
+        assert!(RouterPolicy::parse("magic").is_err());
+        for p in RouterPolicy::ALL {
+            assert_eq!(p.build(0).name(), p.name());
+        }
+    }
+
+    #[test]
+    fn round_robin_cycles_chips() {
+        let mut r = RouterPolicy::RoundRobin.build(0);
+        let v = views(&[5, 0, 0]);
+        let picks: Vec<usize> = (0..6).map(|_| r.route(&req(), &v).chip).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_loaded_breaks_ties_on_kv_then_index() {
+        let mut r = RouterPolicy::LeastLoaded.build(0);
+        assert_eq!(r.route(&req(), &views(&[3, 1, 2])).chip, 1);
+        let mut v = views(&[2, 2, 2]);
+        v[1].kv_occupancy_milli = 500;
+        assert_eq!(r.route(&req(), &v).chip, 0);
+    }
+
+    #[test]
+    fn prefix_router_follows_the_longest_ready_match() {
+        let mut r = RouterPolicy::PrefixAware.build(8);
+        let mut v = views(&[0, 3, 3]);
+        v[1].prefix_match = 512;
+        v[2].prefix_match = 1024;
+        let d = r.route(&req(), &v);
+        assert_eq!(d.chip, 2);
+        assert_eq!(d.migrate_from, None);
+        // No match anywhere: least-loaded fallback.
+        assert_eq!(r.route(&req(), &views(&[4, 1, 2])).chip, 1);
+    }
+
+    #[test]
+    fn prefix_router_migrates_off_an_overloaded_holder() {
+        let mut r = RouterPolicy::PrefixAware.build(4);
+        let mut v = views(&[20, 0, 1]);
+        v[0].prefix_match = 1024;
+        let d = r.route(&req(), &v);
+        assert_eq!(d.chip, 1);
+        assert_eq!(d.migrate_from, Some(0));
+        // Within the gap: stay on the holder.
+        let mut v = views(&[3, 0, 1]);
+        v[0].prefix_match = 1024;
+        let d = r.route(&req(), &v);
+        assert_eq!(d.chip, 0);
+        assert_eq!(d.migrate_from, None);
+    }
+
+    #[test]
+    fn cluster_serves_a_small_workload_on_every_router() {
+        let model = ModelConfig::qwen3_4b();
+        let mut w = WorkloadConfig::shared_prefix(8);
+        w.prefix = Some(PrefixSharing {
+            n_groups: 2,
+            shared_prefix_len: 256,
+            turns: 2,
+            think_time_s: 1.0,
+        });
+        for router in RouterPolicy::ALL {
+            let cfg = ClusterConfig::new(
+                ChipConfig::large_core(),
+                2,
+                SchedulerConfig::Fusion(FusionConfig {
+                    prefix_cache: true,
+                    ..FusionConfig::default()
+                }),
+                router,
+            );
+            let cm = simulate_cluster(&cfg, &model, &w)
+                .unwrap_or_else(|e| panic!("{} failed: {e:#}", router.name()));
+            assert_eq!(cm.n_requests(), 8, "{}", router.name());
+            assert_eq!(cm.routed.iter().sum::<usize>(), 8, "{}", router.name());
+            let agg = cm.aggregate();
+            assert_eq!(agg.n_requests(), 8);
+            for r in agg.records() {
+                assert!(r.first_token >= r.arrival, "{}: {r:?}", router.name());
+                assert!(r.finish >= r.first_token, "{}: {r:?}", router.name());
+            }
+        }
+    }
+
+    #[test]
+    fn single_chip_cluster_matches_the_batch_driver() {
+        // With one chip and any router, streamed admission must reproduce
+        // the single-chip simulate_requests timeline record for record
+        // (same scheduler, same arrival order, same pipe assignment).
+        let model = ModelConfig::qwen3_4b();
+        let w = WorkloadConfig::sharegpt_like(6).with_seed(3);
+        let reqs = request::generate(&w);
+        let cfg = ClusterConfig::new(
+            ChipConfig::large_core(),
+            1,
+            SchedulerConfig::Fusion(FusionConfig::default()),
+            RouterPolicy::LeastLoaded,
+        );
+        let cm = simulate_cluster_requests(&cfg, &model, reqs.clone()).unwrap();
+        let mut chip = ChipSim::new(ChipConfig::large_core());
+        let mut sched = crate::serving::scheduler::FusionScheduler::new(FusionConfig::default());
+        let m = crate::serving::scheduler::simulate_requests(&mut chip, &model, reqs, &mut sched)
+            .unwrap();
+        let mut a = cm.aggregate().records().to_vec();
+        let mut b = m.records().to_vec();
+        a.sort_by_key(|r| r.id);
+        b.sort_by_key(|r| r.id);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn mixed_scheduler_cluster_requires_matching_lengths() {
+        let model = ModelConfig::qwen3_4b();
+        let cfg = ClusterConfig::new(
+            ChipConfig::large_core(),
+            2,
+            SchedulerConfig::Fusion(FusionConfig::default()),
+            RouterPolicy::RoundRobin,
+        );
+        let err = simulate_cluster_mixed(&cfg, &model, Vec::new(), Vec::new());
+        assert!(err.is_err());
+    }
+}

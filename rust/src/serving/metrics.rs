@@ -128,6 +128,28 @@ impl Metrics {
         self.records.push(r);
     }
 
+    /// Rewrite one record's arrival to an earlier cycle. The cluster
+    /// driver admits a migrated request at its KV-landing instant but its
+    /// TTFT must count from the true frontend arrival — this restores it
+    /// after the run (keeps the earlier of the two, preserving the
+    /// `first_token >= arrival` invariant).
+    pub fn rebase_arrival(&mut self, id: u64, arrival: Cycle) {
+        if let Some(r) = self.records.iter_mut().find(|r| r.id == id) {
+            r.arrival = r.arrival.min(arrival);
+        }
+    }
+
+    /// Fold another run's records and cache counters into this rollup
+    /// (cluster aggregation; both sides must share one clock frequency).
+    pub fn absorb(&mut self, other: &Metrics) {
+        debug_assert!(
+            self.freq_mhz == other.freq_mhz || other.records.is_empty(),
+            "absorbing metrics across clock domains"
+        );
+        self.records.extend_from_slice(&other.records);
+        self.cache.merge(&other.cache);
+    }
+
     pub fn n_requests(&self) -> usize {
         self.records.len()
     }

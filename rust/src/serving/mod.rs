@@ -14,7 +14,11 @@
 //!   NoC KV transfer and optional heterogeneous decode cores (§4.3.1);
 //!   config + wrappers.
 //! - [`metrics`]: TTFT / TBT / e2e / throughput / SLO attainment.
+//! - [`cluster`]: the multi-chip layer — N `ChipSim`s behind a streamed
+//!   admission frontend and a pluggable router (round-robin, least-loaded,
+//!   prefix-hit-aware with charged cross-chip KV migration).
 
+pub mod cluster;
 pub mod layout;
 pub mod metrics;
 pub mod pd_disagg;
@@ -24,6 +28,10 @@ pub mod scheduler;
 pub mod trace;
 pub mod worker;
 
+pub use cluster::{
+    simulate_cluster, simulate_cluster_mixed, simulate_cluster_requests, ClusterConfig,
+    ClusterMetrics, Router, RouterPolicy,
+};
 pub use layout::PipelineLayout;
 pub use metrics::{CacheStats, Metrics, RequestRecord};
 pub use pd_disagg::{simulate_disagg, DisaggConfig};

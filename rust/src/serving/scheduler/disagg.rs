@@ -6,6 +6,7 @@
 use super::pipe;
 use super::Scheduler;
 use crate::config::ModelConfig;
+use crate::memmgr::prefix::BlockKey;
 use crate::model::{BatchItem, IterBatch};
 use crate::parallel::pd_placement::{assign, PdAssignment};
 use crate::serving::metrics::{Metrics, RequestRecord};
@@ -73,6 +74,31 @@ impl DisaggScheduler {
             queue: VecDeque::new(),
         }
     }
+
+    /// Earliest actionable prefill `(pipeline, cycle)` and decode
+    /// `(group, cycle)` — one selection rule shared by `step` (which acts
+    /// on it) and `next_action` (which only reports it), so the two can
+    /// never disagree about what is actionable.
+    fn actions(&self, chip: &ChipSim) -> (Option<(usize, Cycle)>, Option<(usize, Cycle)>) {
+        let freq = chip.cfg.freq_mhz;
+        let prefill = if self.queue.is_empty() {
+            None
+        } else {
+            let arrival = secs_to_cycles(self.queue.front().unwrap().arrival_s, freq);
+            self.pipelines
+                .iter()
+                .enumerate()
+                .map(|(i, p)| (i, p[0].now(chip).max(arrival)))
+                .min_by_key(|&(_, t)| t)
+        };
+        let decode = self
+            .groups
+            .iter()
+            .enumerate()
+            .filter_map(|(i, g)| g.next_action(chip).map(|t| (i, t)))
+            .min_by_key(|&(_, t)| t);
+        (prefill, decode)
+    }
 }
 
 impl Scheduler for DisaggScheduler {
@@ -80,11 +106,11 @@ impl Scheduler for DisaggScheduler {
         "disagg"
     }
 
-    fn init(
+    fn prepare(
         &mut self,
         chip: &mut ChipSim,
         model: &ModelConfig,
-        reqs: Vec<Request>,
+        max_tokens: usize,
     ) -> anyhow::Result<()> {
         let cfg = &self.cfg;
         let a: PdAssignment = assign(
@@ -118,13 +144,8 @@ impl Scheduler for DisaggScheduler {
                 .collect::<Vec<_>>()
         };
         let core = chip.cfg.core;
-        self.queue = reqs.into();
-        let max_tokens = self
-            .queue
-            .iter()
-            .map(|r| r.total_tokens())
-            .max()
-            .unwrap_or(1);
+        self.queue = VecDeque::new();
+        let max_tokens = max_tokens.max(1);
         self.pipelines = a
             .prefill_pipelines
             .iter()
@@ -175,6 +196,10 @@ impl Scheduler for DisaggScheduler {
         Ok(())
     }
 
+    fn enqueue(&mut self, req: Request) {
+        self.queue.push_back(req);
+    }
+
     fn step(
         &mut self,
         chip: &mut ChipSim,
@@ -182,24 +207,7 @@ impl Scheduler for DisaggScheduler {
         metrics: &mut Metrics,
     ) -> anyhow::Result<usize> {
         let freq = chip.cfg.freq_mhz;
-        // Earliest actionable prefill (any pipeline, next queued request).
-        let prefill_action: Option<(usize, Cycle)> = if self.queue.is_empty() {
-            None
-        } else {
-            let arrival = secs_to_cycles(self.queue.front().unwrap().arrival_s, freq);
-            self.pipelines
-                .iter()
-                .enumerate()
-                .map(|(i, p)| (i, p[0].now(chip).max(arrival)))
-                .min_by_key(|&(_, t)| t)
-        };
-        // Earliest actionable decode tick.
-        let decode_action: Option<(usize, Cycle)> = self
-            .groups
-            .iter()
-            .enumerate()
-            .filter_map(|(i, g)| g.next_action(chip).map(|t| (i, t)))
-            .min_by_key(|&(_, t)| t);
+        let (prefill_action, decode_action) = self.actions(chip);
 
         match (prefill_action, decode_action) {
             (Some((pi, tp_)), Some((_, td))) if tp_ <= td => run_prefill(
@@ -235,6 +243,56 @@ impl Scheduler for DisaggScheduler {
         }
     }
 
+    fn next_action(&self, chip: &ChipSim) -> Option<Cycle> {
+        let (prefill, decode) = self.actions(chip);
+        match (prefill.map(|(_, t)| t), decode.map(|(_, t)| t)) {
+            (None, None) => None,
+            (a, b) => Some(a.unwrap_or(Cycle::MAX).min(b.unwrap_or(Cycle::MAX))),
+        }
+    }
+
+    fn pending_work(&self) -> usize {
+        self.queue.len() + self.groups.iter().map(|g| g.load()).sum::<usize>()
+    }
+
+    fn kv_utilization(&self) -> f64 {
+        // Decode groups gate steady-state admission (their KV holds the
+        // whole-request residency); prefill pipelines only stage prompts.
+        if self.groups.is_empty() {
+            return 0.0;
+        }
+        self.groups
+            .iter()
+            .map(|g| g.worker.kv.utilization())
+            .sum::<f64>()
+            / self.groups.len() as f64
+    }
+
+    fn probe_prefix(&self, keys: &[BlockKey], limit: u64, at: Cycle) -> u64 {
+        // Prefill pipelines hold the prefix caches; an incoming prompt may
+        // run on any of them, so report the best pipeline's ready match.
+        self.pipelines
+            .iter()
+            .map(|p| {
+                p.iter()
+                    .map(|s| s.peek_prefix(keys, limit, at))
+                    .min()
+                    .unwrap_or(0)
+            })
+            .max()
+            .unwrap_or(0)
+    }
+
+    fn import_prefix(&mut self, keys: &[BlockKey], ready_at: Cycle) {
+        // Prompts are pulled by whichever prefill pipeline frees first, so
+        // a migrated copy must be visible to all of them.
+        for p in &mut self.pipelines {
+            for s in p.iter_mut() {
+                s.kv.seed_prefix(keys, ready_at);
+            }
+        }
+    }
+
     fn collect_cache_stats(&self, out: &mut crate::serving::metrics::CacheStats) {
         let workers = self
             .pipelines
@@ -264,10 +322,11 @@ fn run_prefill(
     let r = queue.pop_front().expect("caller checked");
     let arrival = secs_to_cycles(r.arrival_s, freq);
     pipeline[0].advance_to(chip, arrival);
+    let now = pipeline[0].now(chip);
 
     let mut matched = 0u64;
     if prefix_cache {
-        matched = pipe::admit_with_prefix(pipeline, &r, model, metrics);
+        matched = pipe::admit_with_prefix(pipeline, &r, model, metrics, now);
     } else {
         for s in pipeline.iter_mut() {
             s.admit(r.id);
@@ -290,6 +349,13 @@ fn run_prefill(
         }
     }
     let first_token = finish;
+    if prefix_cache {
+        // The whole prompt is prefilled in one shot: every prefix block
+        // this request registered is matchable from `finish` on.
+        for s in pipeline.iter_mut() {
+            s.note_prefilled(r.id, r.input_len as u64, finish);
+        }
+    }
 
     if r.output_len <= 1 {
         for s in pipeline.iter_mut() {

@@ -7,16 +7,20 @@
 use super::pipe::{self, Pipe};
 use super::Scheduler;
 use crate::config::ModelConfig;
+use crate::memmgr::prefix::BlockKey;
 use crate::serving::metrics::Metrics;
 use crate::serving::pd_fusion::FusionConfig;
 use crate::serving::request::Request;
 use crate::sim::chip::ChipSim;
+use crate::util::units::Cycle;
 
 /// The fused scheduler: N identical pipelines, requests statically
 /// round-robined across them, decode-first budget batching within each.
 pub struct FusionScheduler {
     cfg: FusionConfig,
     pipes: Vec<Pipe>,
+    /// Round-robin cursor: the pipe the next [`Scheduler::enqueue`] targets.
+    next_pipe: usize,
 }
 
 impl FusionScheduler {
@@ -24,6 +28,7 @@ impl FusionScheduler {
         FusionScheduler {
             cfg,
             pipes: Vec::new(),
+            next_pipe: 0,
         }
     }
 
@@ -38,19 +43,21 @@ impl Scheduler for FusionScheduler {
         "fusion"
     }
 
-    fn init(
+    fn prepare(
         &mut self,
         chip: &mut ChipSim,
         model: &ModelConfig,
-        reqs: Vec<Request>,
+        max_tokens: usize,
     ) -> anyhow::Result<()> {
-        let max_tokens = reqs.iter().map(|r| r.total_tokens()).max().unwrap_or(1);
-        self.pipes = pipe::build_pipes(chip, model, &self.cfg, max_tokens)?;
-        let n = self.pipes.len();
-        for (i, r) in reqs.into_iter().enumerate() {
-            self.pipes[i % n].queue.push_back(r);
-        }
+        self.pipes = pipe::build_pipes(chip, model, &self.cfg, max_tokens.max(1))?;
+        self.next_pipe = 0;
         Ok(())
+    }
+
+    fn enqueue(&mut self, req: Request) {
+        let n = self.pipes.len();
+        self.pipes[self.next_pipe % n].queue.push_back(req);
+        self.next_pipe = (self.next_pipe + 1) % n;
     }
 
     fn step(
@@ -79,6 +86,26 @@ impl Scheduler for FusionScheduler {
             false,
             &mut no_handoffs,
         ))
+    }
+
+    fn next_action(&self, chip: &ChipSim) -> Option<Cycle> {
+        pipe::earliest_action(&self.pipes, chip)
+    }
+
+    fn pending_work(&self) -> usize {
+        pipe::total_pending(&self.pipes)
+    }
+
+    fn kv_utilization(&self) -> f64 {
+        pipe::mean_kv_utilization(&self.pipes)
+    }
+
+    fn probe_prefix(&self, keys: &[BlockKey], limit: u64, at: Cycle) -> u64 {
+        pipe::best_prefix_match(&self.pipes, keys, limit, at)
+    }
+
+    fn import_prefix(&mut self, keys: &[BlockKey], ready_at: Cycle) {
+        pipe::seed_all(&mut self.pipes, keys, ready_at);
     }
 
     fn collect_cache_stats(&self, out: &mut crate::serving::metrics::CacheStats) {

@@ -28,12 +28,13 @@
 use super::pipe::{self, Handoff, PendingDecode, Pipe};
 use super::Scheduler;
 use crate::config::ModelConfig;
+use crate::memmgr::prefix::BlockKey;
 use crate::serving::metrics::Metrics;
 use crate::serving::pd_fusion::FusionConfig;
 use crate::serving::request::Request;
 use crate::sim::chip::ChipSim;
 use crate::sim::noc::Coord;
-use crate::util::units::cycles_to_secs;
+use crate::util::units::{cycles_to_secs, Cycle};
 
 /// Hybrid scheduler configuration: the fused-pipeline knobs plus the
 /// adaptation controller's.
@@ -86,6 +87,8 @@ pub struct HybridScheduler {
     cfg: HybridConfig,
     pipes: Vec<Pipe>,
     roles: Vec<Role>,
+    /// Round-robin cursor: the pipe the next [`Scheduler::enqueue`] targets.
+    next_pipe: usize,
     steps: u64,
     last_change: u64,
     up_votes: u32,
@@ -99,6 +102,7 @@ impl HybridScheduler {
             cfg,
             pipes: Vec::new(),
             roles: Vec::new(),
+            next_pipe: 0,
             steps: 0,
             last_change: 0,
             up_votes: 0,
@@ -262,27 +266,29 @@ impl Scheduler for HybridScheduler {
         "hybrid"
     }
 
-    fn init(
+    fn prepare(
         &mut self,
         chip: &mut ChipSim,
         model: &ModelConfig,
-        reqs: Vec<Request>,
+        max_tokens: usize,
     ) -> anyhow::Result<()> {
-        let max_tokens = reqs.iter().map(|r| r.total_tokens()).max().unwrap_or(1);
-        self.pipes = pipe::build_pipes(chip, model, &self.cfg.fusion, max_tokens)?;
+        self.pipes = pipe::build_pipes(chip, model, &self.cfg.fusion, max_tokens.max(1))?;
         self.roles = vec![Role::Fused; self.pipes.len()];
-        // Same static round-robin assignment as fusion: a dedicated
-        // prefill pipe prefills its own share and hands decode phases off.
-        let n = self.pipes.len();
-        for (i, r) in reqs.into_iter().enumerate() {
-            self.pipes[i % n].queue.push_back(r);
-        }
+        self.next_pipe = 0;
         self.steps = 0;
         self.last_change = 0;
         self.up_votes = 0;
         self.down_votes = 0;
         self.repartitions = 0;
         Ok(())
+    }
+
+    fn enqueue(&mut self, req: Request) {
+        // Same static round-robin assignment as fusion: a dedicated
+        // prefill pipe prefills its own share and hands decode phases off.
+        let n = self.pipes.len();
+        self.pipes[self.next_pipe % n].queue.push_back(req);
+        self.next_pipe = (self.next_pipe + 1) % n;
     }
 
     fn step(
@@ -320,6 +326,26 @@ impl Scheduler for HybridScheduler {
             self.dispatch_handoff(chip, model, pi, h)?;
         }
         Ok(completions)
+    }
+
+    fn next_action(&self, chip: &ChipSim) -> Option<Cycle> {
+        pipe::earliest_action(&self.pipes, chip)
+    }
+
+    fn pending_work(&self) -> usize {
+        pipe::total_pending(&self.pipes)
+    }
+
+    fn kv_utilization(&self) -> f64 {
+        pipe::mean_kv_utilization(&self.pipes)
+    }
+
+    fn probe_prefix(&self, keys: &[BlockKey], limit: u64, at: Cycle) -> u64 {
+        pipe::best_prefix_match(&self.pipes, keys, limit, at)
+    }
+
+    fn import_prefix(&mut self, keys: &[BlockKey], ready_at: Cycle) {
+        pipe::seed_all(&mut self.pipes, keys, ready_at);
     }
 
     fn collect_cache_stats(&self, out: &mut crate::serving::metrics::CacheStats) {

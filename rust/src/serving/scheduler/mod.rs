@@ -22,31 +22,64 @@ pub use fusion::FusionScheduler;
 pub use hybrid::{HybridConfig, HybridScheduler};
 
 use crate::config::{ModelConfig, WorkloadConfig};
+use crate::memmgr::prefix::BlockKey;
 use crate::serving::metrics::Metrics;
 use crate::serving::pd_disagg::DisaggConfig;
 use crate::serving::pd_fusion::FusionConfig;
 use crate::serving::request::{self, Request};
 use crate::sim::chip::ChipSim;
+use crate::util::units::Cycle;
 
 /// An iteration-level serving scheduler driving a [`ChipSim`].
 ///
-/// Lifecycle: [`Scheduler::init`] once with the full (arrival-sorted)
-/// request trace, then [`Scheduler::step`] until the driver has seen every
-/// request complete. Schedulers own their placement, batching, and
-/// admission state; the driver owns time-keeping-free orchestration (the
-/// simulated clock lives in the [`ChipSim`] cores).
+/// Two lifecycles share the same implementation:
+///
+/// - **Batch (single chip):** [`Scheduler::init`] once with the full
+///   (arrival-sorted) request trace, then [`Scheduler::step`] until the
+///   driver has seen every request complete.
+/// - **Streamed (cluster):** [`Scheduler::prepare`] once, then the
+///   [cluster driver](crate::serving::cluster) interleaves
+///   [`Scheduler::enqueue`] (releasing requests at their arrival times)
+///   with [`Scheduler::step`], using [`Scheduler::next_action`] to order
+///   chips against the arrival stream.
+///
+/// Schedulers own their placement, batching, and admission state; drivers
+/// own time-keeping-free orchestration (the simulated clock lives in the
+/// [`ChipSim`] cores). The probe methods ([`Scheduler::pending_work`],
+/// [`Scheduler::kv_utilization`], [`Scheduler::probe_prefix`]) are the
+/// read-only signals cluster routers steer by.
 pub trait Scheduler {
     /// Short policy name (used in tables and error messages).
     fn name(&self) -> &'static str;
 
-    /// Build placement and per-worker state for `reqs` on `chip`.
-    /// `reqs` must be sorted by arrival time.
+    /// Build placement and per-worker state on `chip`, sized for requests
+    /// of up to `max_tokens` prompt+output tokens.
+    fn prepare(
+        &mut self,
+        chip: &mut ChipSim,
+        model: &ModelConfig,
+        max_tokens: usize,
+    ) -> anyhow::Result<()>;
+
+    /// Hand one request to the scheduler's admission queues. Must be
+    /// called in arrival order, after [`Scheduler::prepare`].
+    fn enqueue(&mut self, req: Request);
+
+    /// Batch bootstrap: [`Scheduler::prepare`] sized for `reqs`, then
+    /// [`Scheduler::enqueue`] each. `reqs` must be sorted by arrival time.
     fn init(
         &mut self,
         chip: &mut ChipSim,
         model: &ModelConfig,
         reqs: Vec<Request>,
-    ) -> anyhow::Result<()>;
+    ) -> anyhow::Result<()> {
+        let max_tokens = reqs.iter().map(|r| r.total_tokens()).max().unwrap_or(1);
+        self.prepare(chip, model, max_tokens)?;
+        for r in reqs {
+            self.enqueue(r);
+        }
+        Ok(())
+    }
 
     /// Run one scheduling step at the earliest actionable simulated time,
     /// recording completed requests into `metrics`. Returns the number of
@@ -57,6 +90,38 @@ pub trait Scheduler {
         model: &ModelConfig,
         metrics: &mut Metrics,
     ) -> anyhow::Result<usize>;
+
+    /// Earliest cycle at which [`Scheduler::step`] can do useful work, or
+    /// `None` while fully idle (the cluster driver then waits for the next
+    /// arrival). Calling `step` when this is `None` is an error.
+    fn next_action(&self, chip: &ChipSim) -> Option<Cycle>;
+
+    /// Requests enqueued but not yet retired (queued + in flight) — the
+    /// router's queue-depth signal.
+    fn pending_work(&self) -> usize;
+
+    /// Mean occupancy of the admission-limiting KV tier in `[0, 1]` — the
+    /// router's memory-pressure signal.
+    fn kv_utilization(&self) -> f64 {
+        0.0
+    }
+
+    /// Longest cached-and-ready prompt prefix (tokens) an admission with
+    /// `keys` could share at cycle `at`, capped at `limit` — the
+    /// prefix-hit-aware router's read-only probe. Policies without a
+    /// prefix cache report 0.
+    fn probe_prefix(&self, keys: &[BlockKey], limit: u64, at: Cycle) -> u64 {
+        let _ = (keys, limit, at);
+        0
+    }
+
+    /// Seed a migrated prefix copy (cluster KV transfer) into the
+    /// scheduler's caches, matchable from cycle `ready_at` on by any
+    /// later admission. Best-effort; policies without a prefix cache
+    /// ignore it.
+    fn import_prefix(&mut self, keys: &[BlockKey], ready_at: Cycle) {
+        let _ = (keys, ready_at);
+    }
 
     /// Fold worker-level prefix-cache / memo counters (COW copies,
     /// evictions, memo hits) into `out`. The driver calls this once after

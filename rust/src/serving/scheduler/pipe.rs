@@ -9,6 +9,7 @@
 //! transfer) instead of decoding locally.
 
 use crate::config::ModelConfig;
+use crate::memmgr::prefix::BlockKey;
 use crate::model::{BatchItem, IterBatch};
 use crate::serving::layout::PipelineLayout;
 use crate::serving::metrics::{CacheStats, Metrics, RequestRecord};
@@ -120,28 +121,30 @@ pub(crate) fn build_pipes(
     Ok(pipes)
 }
 
-/// Prefix-cache admission over a slice of pipeline stages: match the
-/// longest cached prefix — committing the *minimum* across stages so every
-/// stage skips the same chunks (SRAM pressure can differ per stage) — and
-/// record the request-level cache metrics. At least one prompt token
-/// always prefills (it produces the first output token). Returns the
-/// matched token count. Shared by the fusion/hybrid tick and the disagg
-/// prefill pipeline so cache accounting cannot diverge between policies.
+/// Prefix-cache admission over a slice of pipeline stages at cycle `now`:
+/// match the longest cached-and-ready prefix — committing the *minimum*
+/// across stages so every stage skips the same chunks (SRAM pressure can
+/// differ per stage) — and record the request-level cache metrics. At
+/// least one prompt token always prefills (it produces the first output
+/// token). Returns the matched token count. Shared by the fusion/hybrid
+/// tick and the disagg prefill pipeline so cache accounting cannot
+/// diverge between policies.
 pub(crate) fn admit_with_prefix(
     stages: &mut [StageWorker],
     r: &Request,
     model: &ModelConfig,
     metrics: &mut Metrics,
+    now: Cycle,
 ) -> u64 {
     let keys = r.block_keys(crate::memmgr::KV_BLOCK_TOKENS);
     let limit = (r.input_len as u64).saturating_sub(1);
     let matched = stages
         .iter()
-        .map(|s| s.peek_prefix(&keys, limit))
+        .map(|s| s.peek_prefix(&keys, limit, now))
         .min()
         .unwrap_or(0);
     for s in stages.iter_mut() {
-        s.admit_prefixed(r.id, &keys, matched);
+        s.admit_prefixed(r.id, &keys, matched, now);
     }
     metrics.cache.prefix_lookups += 1;
     if matched > 0 {
@@ -151,6 +154,45 @@ pub(crate) fn admit_with_prefix(
     }
     metrics.cache.prefill_tokens_total += r.input_len as u64;
     matched
+}
+
+/// Pipe-set folds shared by the fusion and hybrid schedulers' cluster
+/// probes — one implementation so the two policies cannot drift.
+pub(crate) fn earliest_action(pipes: &[Pipe], chip: &ChipSim) -> Option<Cycle> {
+    let freq = chip.cfg.freq_mhz;
+    pipes.iter().filter_map(|p| p.next_action(chip, freq)).min()
+}
+
+pub(crate) fn total_pending(pipes: &[Pipe]) -> usize {
+    pipes.iter().map(|p| p.pending_work()).sum()
+}
+
+pub(crate) fn mean_kv_utilization(pipes: &[Pipe]) -> f64 {
+    if pipes.is_empty() {
+        return 0.0;
+    }
+    pipes.iter().map(|p| p.kv_utilization()).sum::<f64>() / pipes.len() as f64
+}
+
+/// Best pipe wins: the router cares whether *some* admission could share;
+/// static round-robin admission may still land elsewhere, so this is an
+/// optimistic upper bound (cache-affinity-aware pipe selection is a
+/// ROADMAP follow-up).
+pub(crate) fn best_prefix_match(pipes: &[Pipe], keys: &[BlockKey], limit: u64, at: Cycle) -> u64 {
+    pipes
+        .iter()
+        .map(|p| p.probe_prefix(keys, limit, at))
+        .max()
+        .unwrap_or(0)
+}
+
+/// Seed every pipe: static round-robin admission may land the migrated
+/// request on any of them, and a seeded-but-unused copy is cheap
+/// (evictable, index-owned) next to a recomputed prefill.
+pub(crate) fn seed_all(pipes: &mut [Pipe], keys: &[BlockKey], ready_at: Cycle) {
+    for p in pipes {
+        p.seed_prefix(keys, ready_at);
+    }
 }
 
 /// Fold worker-level sharing/memo counters (COW, evictions, memo hits)
@@ -291,6 +333,41 @@ impl Pipe {
         }
     }
 
+    /// Requests on this pipe that have not retired yet (queued, pending
+    /// transfer, or in flight) — the cluster router's queue-depth signal.
+    pub(crate) fn pending_work(&self) -> usize {
+        self.queue.len()
+            + self.pending.len()
+            + self.active.iter().filter(|a| !a.is_done()).count()
+    }
+
+    /// Longest cached-and-ready prefix for `keys` usable by an admission
+    /// on this pipe at cycle `at` — the minimum across stages, the same
+    /// rule [`admit_with_prefix`] commits to.
+    pub(crate) fn probe_prefix(&self, keys: &[BlockKey], limit: u64, at: Cycle) -> u64 {
+        self.stages
+            .iter()
+            .map(|s| s.peek_prefix(keys, limit, at))
+            .min()
+            .unwrap_or(0)
+    }
+
+    /// Mean occupancy of the stages' admission-limiting KV tier.
+    pub(crate) fn kv_utilization(&self) -> f64 {
+        if self.stages.is_empty() {
+            return 0.0;
+        }
+        self.stages.iter().map(|s| s.kv.utilization()).sum::<f64>() / self.stages.len() as f64
+    }
+
+    /// Seed a migrated prefix copy into every stage cache, matchable from
+    /// `ready_at` (when the inter-chip transfer lands).
+    pub(crate) fn seed_prefix(&mut self, keys: &[BlockKey], ready_at: Cycle) {
+        for s in &mut self.stages {
+            s.kv.seed_prefix(keys, ready_at);
+        }
+    }
+
     /// Decode-phase load (pending + active decodes) — the hybrid router's
     /// least-loaded signal.
     pub(crate) fn decode_load(&self) -> usize {
@@ -345,7 +422,7 @@ impl Pipe {
             let r = self.queue.pop_front().unwrap();
             let mut matched = 0u64;
             if cfg.prefix_cache {
-                matched = admit_with_prefix(&mut self.stages, &r, model, metrics);
+                matched = admit_with_prefix(&mut self.stages, &r, model, metrics, now);
             } else {
                 for s in &mut self.stages {
                     s.admit(r.id);
@@ -405,15 +482,26 @@ impl Pipe {
 
         // Update request states.
         let mut newly_prefilled: Vec<u64> = Vec::new();
+        let mut prefill_progress: Vec<(u64, u64)> = Vec::new();
         for (i, chunk) in plan.prefill_idx {
             let a = &mut self.active[i];
             a.prefilled += chunk;
+            if cfg.prefix_cache {
+                prefill_progress.push((a.req.id, a.prefilled));
+            }
             if !a.is_prefilling() {
                 // Final prefill chunk emits the first output token.
                 a.first_token = Some(finish);
                 a.generated = 1;
                 a.ready_at = finish;
                 newly_prefilled.push(a.req.id);
+            }
+        }
+        // In-flight-aware matching: prefix blocks registered at admission
+        // become matchable exactly as the producing prefill passes them.
+        for &(id, upto) in &prefill_progress {
+            for s in &mut self.stages {
+                s.note_prefilled(id, upto, finish);
             }
         }
         for i in plan.decode_idx {

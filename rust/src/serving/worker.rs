@@ -103,18 +103,30 @@ impl StageWorker {
         self.kv.admit(request)
     }
 
-    /// Longest cached prefix available for `keys` (no commitment), capped
-    /// at `max_tokens`.
-    pub fn peek_prefix(&self, keys: &[BlockKey], max_tokens: u64) -> u64 {
-        self.kv.peek_prefix(keys, max_tokens)
+    /// Longest cached-and-ready prefix available for `keys` at cycle `at`
+    /// (no commitment), capped at `max_tokens`.
+    pub fn peek_prefix(&self, keys: &[BlockKey], max_tokens: u64, at: Cycle) -> u64 {
+        self.kv.peek_prefix(keys, max_tokens, at)
     }
 
-    /// Admit with prefix sharing; returns the matched token count (0 when
-    /// the prefix cache is disabled or nothing matched).
-    pub fn admit_prefixed(&mut self, request: u64, keys: &[BlockKey], max_match: u64) -> u64 {
+    /// Admit with prefix sharing at cycle `at`; returns the matched token
+    /// count (0 when the prefix cache is disabled or nothing matched).
+    pub fn admit_prefixed(
+        &mut self,
+        request: u64,
+        keys: &[BlockKey],
+        max_match: u64,
+        at: Cycle,
+    ) -> u64 {
         self.kv
-            .admit_prefixed(request, keys, max_match)
+            .admit_prefixed(request, keys, max_match, at)
             .unwrap_or(0)
+    }
+
+    /// Report `request`'s prefill covering its first `upto` prompt tokens
+    /// by cycle `now` — makes the prefix blocks it registered matchable.
+    pub fn note_prefilled(&mut self, request: u64, upto: u64, now: Cycle) {
+        self.kv.note_prefilled(request, upto, now);
     }
 
     pub fn release(&mut self, request: u64) {

@@ -1,0 +1,188 @@
+//! Lightweight inter-chip interconnect cost model.
+//!
+//! The multi-chip cluster layer (`serving::cluster`) connects N
+//! independent [`super::chip::ChipSim`]s through a chip-to-chip fabric —
+//! think PCIe/CXL or a scale-out serdes link: one to two orders of
+//! magnitude less bandwidth than the on-chip NoC, plus a fixed per-hop
+//! latency. Cross-chip KV migration (prefix-hit-aware routing) is charged
+//! against this model.
+//!
+//! The model is intentionally simpler than the on-chip NoC: each chip has
+//! one egress port modelled as a busy-interval [`Timeline`], so
+//! simultaneous migrations out of the same chip serialise (bandwidth
+//! contention) while transfers from different chips proceed in parallel.
+//! The switch fabric itself is assumed non-blocking — the per-chip serdes
+//! is the bottleneck in practice.
+
+use crate::sim::engine::Timeline;
+use crate::util::units::{gbps_to_bytes_per_cycle, Cycle};
+
+/// Inter-chip fabric parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct InterconnectConfig {
+    /// One-way base latency per transfer in microseconds (serdes + switch
+    /// traversal), independent of size.
+    pub latency_us: f64,
+    /// Per-chip egress bandwidth in GB/s.
+    pub bw_gbps: f64,
+}
+
+impl Default for InterconnectConfig {
+    fn default() -> Self {
+        // PCIe5 x16-class chip-to-chip link: ~64 GB/s, ~2 us one way —
+        // far below the 128 GB/s on-chip NoC links, far above recompute.
+        InterconnectConfig {
+            latency_us: 2.0,
+            bw_gbps: 64.0,
+        }
+    }
+}
+
+/// Aggregate fabric statistics for one cluster run.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct InterconnectStats {
+    pub transfers: u64,
+    pub bytes: u64,
+    /// Total egress serialisation cycles.
+    pub busy_cycles: Cycle,
+    /// Cycles transfers waited behind earlier ones on the same egress port.
+    pub contention_cycles: Cycle,
+}
+
+/// The fabric: one egress timeline per chip.
+#[derive(Debug)]
+pub struct Interconnect {
+    cfg: InterconnectConfig,
+    latency_cycles: Cycle,
+    /// `1 / egress bytes-per-cycle` (hoisted division, like the NoC).
+    inv_bytes_per_cycle: f64,
+    egress: Vec<Timeline>,
+    stats: InterconnectStats,
+}
+
+impl Interconnect {
+    /// Build a fabric for `n_chips` chips clocked at `freq_mhz` (cycle
+    /// accounting shares the chips' clock domain).
+    pub fn new(cfg: InterconnectConfig, n_chips: usize, freq_mhz: f64) -> Self {
+        let bpc = gbps_to_bytes_per_cycle(cfg.bw_gbps, freq_mhz);
+        Interconnect {
+            cfg,
+            // 1 us at `freq_mhz` MHz is exactly `freq_mhz` cycles.
+            latency_cycles: (cfg.latency_us * freq_mhz).round() as Cycle,
+            inv_bytes_per_cycle: if bpc > 0.0 { 1.0 / bpc } else { 0.0 },
+            egress: vec![Timeline::new(); n_chips],
+            stats: InterconnectStats::default(),
+        }
+    }
+
+    pub fn config(&self) -> InterconnectConfig {
+        self.cfg
+    }
+
+    /// Serialisation cycles for `bytes` on one egress port.
+    fn ser_cycles(&self, bytes: u64) -> Cycle {
+        let x = bytes as f64 * self.inv_bytes_per_cycle;
+        let t = x as Cycle;
+        (t + u64::from((t as f64) < x)).max(1)
+    }
+
+    /// Move `bytes` from chip `src` to chip `dst`, issued no earlier than
+    /// `earliest`; returns the cycle the last byte lands at `dst`.
+    /// Same-chip or empty transfers are free.
+    pub fn transfer(&mut self, src: usize, dst: usize, bytes: u64, earliest: Cycle) -> Cycle {
+        if src == dst || bytes == 0 {
+            return earliest;
+        }
+        let ser = self.ser_cycles(bytes);
+        let start = self.egress[src].reserve(earliest, ser);
+        self.stats.transfers += 1;
+        self.stats.bytes += bytes;
+        self.stats.busy_cycles += ser;
+        self.stats.contention_cycles += start - earliest;
+        start + ser + self.latency_cycles
+    }
+
+    /// Uncontended landing estimate for `bytes` issued at `earliest`,
+    /// without reserving egress time (planning probes).
+    pub fn estimate(&self, bytes: u64, earliest: Cycle) -> Cycle {
+        if bytes == 0 {
+            return earliest;
+        }
+        earliest + self.ser_cycles(bytes) + self.latency_cycles
+    }
+
+    pub fn stats(&self) -> InterconnectStats {
+        self.stats
+    }
+
+    pub fn reset(&mut self) {
+        for e in &mut self.egress {
+            e.reset();
+        }
+        self.stats = InterconnectStats::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fabric() -> Interconnect {
+        // 64 GB/s at 500 MHz = 128 B/cycle; 2 us = 1000 cycles latency.
+        Interconnect::new(InterconnectConfig::default(), 4, 500.0)
+    }
+
+    #[test]
+    fn uncontended_transfer_is_latency_plus_serialisation() {
+        let mut f = fabric();
+        // 128_000 bytes / 128 B/cyc = 1000 ser cycles + 1000 latency.
+        let landing = f.transfer(0, 1, 128_000, 500);
+        assert_eq!(landing, 500 + 1000 + 1000);
+        assert_eq!(f.stats().transfers, 1);
+        assert_eq!(f.stats().bytes, 128_000);
+        assert_eq!(f.stats().contention_cycles, 0);
+    }
+
+    #[test]
+    fn same_chip_and_empty_transfers_are_free() {
+        let mut f = fabric();
+        assert_eq!(f.transfer(2, 2, 1 << 20, 77), 77);
+        assert_eq!(f.transfer(0, 1, 0, 77), 77);
+        assert_eq!(f.stats().transfers, 0);
+    }
+
+    #[test]
+    fn same_source_egress_serialises() {
+        let mut f = fabric();
+        let a = f.transfer(0, 1, 128_000, 0);
+        let b = f.transfer(0, 2, 128_000, 0);
+        // Second transfer waits for the first to clear the egress port.
+        assert_eq!(b, a + 1000);
+        assert_eq!(f.stats().contention_cycles, 1000);
+    }
+
+    #[test]
+    fn different_sources_do_not_contend() {
+        let mut f = fabric();
+        let a = f.transfer(0, 2, 128_000, 0);
+        let b = f.transfer(1, 2, 128_000, 0);
+        assert_eq!(a, b);
+        assert_eq!(f.stats().contention_cycles, 0);
+    }
+
+    #[test]
+    fn estimate_matches_uncontended_transfer() {
+        let mut f = fabric();
+        let est = f.estimate(64_000, 123);
+        assert_eq!(f.transfer(3, 0, 64_000, 123), est);
+    }
+
+    #[test]
+    fn reset_clears_ports_and_stats() {
+        let mut f = fabric();
+        f.transfer(0, 1, 1 << 20, 0);
+        f.reset();
+        assert_eq!(f.stats(), InterconnectStats::default());
+        assert_eq!(f.transfer(0, 1, 128_000, 0), 2000);
+    }
+}

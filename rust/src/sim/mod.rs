@@ -18,12 +18,15 @@
 //!
 //! [`engine`] provides the event queue / resource timelines shared by all
 //! three; [`core`] and [`chip`] assemble them into NPU cores on a mesh;
-//! [`tracer`] collects utilization and phase statistics.
+//! [`tracer`] collects utilization and phase statistics; [`interconnect`]
+//! adds the lightweight chip-to-chip fabric the multi-chip cluster layer
+//! charges its KV migrations against.
 
 pub mod chip;
 pub mod compute;
 pub mod core;
 pub mod engine;
+pub mod interconnect;
 pub mod memory;
 pub mod noc;
 pub mod tracer;
@@ -31,3 +34,4 @@ pub mod tracer;
 pub use chip::ChipSim;
 pub use core::CoreSim;
 pub use engine::{EventQueue, Timeline};
+pub use interconnect::{Interconnect, InterconnectConfig, InterconnectStats};

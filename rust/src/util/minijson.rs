@@ -1,0 +1,336 @@
+//! Minimal JSON parser for the offline workspace (no serde).
+//!
+//! The serving bench emits `BENCH_serving.json` with hand-rolled
+//! formatting; the CI bench gate (`tools/bench_check.rs`) needs to read it
+//! (and the committed `BENCH_baseline.json`) back *structurally* to
+//! compare metric fields within a tolerance. This is a strict
+//! recursive-descent parser over the JSON grammar — objects keep their key
+//! order (emission order is deterministic, so row matching can rely on
+//! it), numbers are `f64`, and inputs must be a single complete value.
+
+/// A parsed JSON value. Object keys keep insertion order.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Object field lookup (first match; `None` on non-objects).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(kv) => kv.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s.as_str()),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v.as_slice()),
+            _ => None,
+        }
+    }
+
+    /// `get(key)` then `as_f64` (the common metric-field access).
+    pub fn num(&self, key: &str) -> Option<f64> {
+        self.get(key).and_then(|v| v.as_f64())
+    }
+
+    /// `get(key)` then `as_str`.
+    pub fn str(&self, key: &str) -> Option<&str> {
+        self.get(key).and_then(|v| v.as_str())
+    }
+}
+
+/// Parse one complete JSON value (trailing whitespace allowed).
+pub fn parse(text: &str) -> anyhow::Result<Json> {
+    let mut p = Parser {
+        b: text.as_bytes(),
+        i: 0,
+    };
+    p.skip_ws();
+    let v = p.value()?;
+    p.skip_ws();
+    anyhow::ensure!(
+        p.i == p.b.len(),
+        "trailing content at byte {} of {}",
+        p.i,
+        p.b.len()
+    );
+    Ok(v)
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while matches!(self.b.get(self.i), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn expect(&mut self, c: u8) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.peek() == Some(c),
+            "expected {:?} at byte {}",
+            c as char,
+            self.i
+        );
+        self.i += 1;
+        Ok(())
+    }
+
+    fn lit(&mut self, s: &str) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.b[self.i..].starts_with(s.as_bytes()),
+            "expected `{s}` at byte {}",
+            self.i
+        );
+        self.i += s.len();
+        Ok(())
+    }
+
+    fn value(&mut self) -> anyhow::Result<Json> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => {
+                self.lit("true")?;
+                Ok(Json::Bool(true))
+            }
+            Some(b'f') => {
+                self.lit("false")?;
+                Ok(Json::Bool(false))
+            }
+            Some(b'n') => {
+                self.lit("null")?;
+                Ok(Json::Null)
+            }
+            Some(_) => self.number(),
+            None => anyhow::bail!("unexpected end of input"),
+        }
+    }
+
+    fn object(&mut self) -> anyhow::Result<Json> {
+        self.expect(b'{')?;
+        let mut kv = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(Json::Obj(kv));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            let val = self.value()?;
+            kv.push((key, val));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Json::Obj(kv));
+                }
+                _ => anyhow::bail!("expected ',' or '}}' at byte {}", self.i),
+            }
+        }
+    }
+
+    fn array(&mut self) -> anyhow::Result<Json> {
+        self.expect(b'[')?;
+        let mut out = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(Json::Arr(out));
+        }
+        loop {
+            out.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Json::Arr(out));
+                }
+                _ => anyhow::bail!("expected ',' or ']' at byte {}", self.i),
+            }
+        }
+    }
+
+    fn string(&mut self) -> anyhow::Result<String> {
+        self.expect(b'"')?;
+        let mut out: Vec<u8> = Vec::new();
+        loop {
+            let Some(c) = self.peek() else {
+                anyhow::bail!("unterminated string");
+            };
+            self.i += 1;
+            match c {
+                b'"' => {
+                    return Ok(String::from_utf8(out)?);
+                }
+                b'\\' => {
+                    let Some(e) = self.peek() else {
+                        anyhow::bail!("unterminated escape");
+                    };
+                    self.i += 1;
+                    let ch = match e {
+                        b'"' => '"',
+                        b'\\' => '\\',
+                        b'/' => '/',
+                        b'n' => '\n',
+                        b't' => '\t',
+                        b'r' => '\r',
+                        b'b' => '\u{8}',
+                        b'f' => '\u{c}',
+                        b'u' => {
+                            anyhow::ensure!(
+                                self.i + 4 <= self.b.len(),
+                                "truncated \\u escape at byte {}",
+                                self.i
+                            );
+                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])?;
+                            let code = u32::from_str_radix(hex, 16)?;
+                            self.i += 4;
+                            // Surrogate pairs are not needed for our ASCII
+                            // metric files; map lone surrogates to U+FFFD.
+                            char::from_u32(code).unwrap_or('\u{fffd}')
+                        }
+                        other => anyhow::bail!("bad escape \\{} at byte {}", other as char, self.i),
+                    };
+                    let mut buf = [0u8; 4];
+                    out.extend_from_slice(ch.encode_utf8(&mut buf).as_bytes());
+                }
+                _ => out.push(c),
+            }
+        }
+    }
+
+    fn number(&mut self) -> anyhow::Result<Json> {
+        let start = self.i;
+        while matches!(
+            self.peek(),
+            Some(b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        ) {
+            self.i += 1;
+        }
+        anyhow::ensure!(self.i > start, "expected a value at byte {start}");
+        let s = std::str::from_utf8(&self.b[start..self.i])?;
+        let x: f64 = s
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad number `{s}` at byte {start}"))?;
+        Ok(Json::Num(x))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars() {
+        assert_eq!(parse("null").unwrap(), Json::Null);
+        assert_eq!(parse("true").unwrap(), Json::Bool(true));
+        assert_eq!(parse(" false ").unwrap(), Json::Bool(false));
+        assert_eq!(parse("-12.5e2").unwrap(), Json::Num(-1250.0));
+        assert_eq!(parse("\"hi\"").unwrap(), Json::Str("hi".into()));
+    }
+
+    #[test]
+    fn parses_nested_structures_in_order() {
+        let j = parse(r#"{"a": [1, 2, {"b": "c"}], "d": {"e": null}}"#).unwrap();
+        let arr = j.get("a").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 3);
+        assert_eq!(arr[0].as_f64(), Some(1.0));
+        assert_eq!(arr[2].str("b"), Some("c"));
+        assert_eq!(j.get("d").unwrap().get("e"), Some(&Json::Null));
+        if let Json::Obj(kv) = &j {
+            assert_eq!(kv[0].0, "a");
+            assert_eq!(kv[1].0, "d");
+        } else {
+            panic!("not an object");
+        }
+    }
+
+    #[test]
+    fn string_escapes_decode() {
+        let j = parse(r#""a\"b\\c\ndA""#).unwrap();
+        assert_eq!(j.as_str(), Some("a\"b\\c\ndA"));
+    }
+
+    #[test]
+    fn rejects_malformed_input() {
+        assert!(parse("").is_err());
+        assert!(parse("{").is_err());
+        assert!(parse("[1,]").is_err());
+        assert!(parse("{\"a\" 1}").is_err());
+        assert!(parse("12 34").is_err());
+        assert!(parse("\"open").is_err());
+        assert!(parse("1.2.3").is_err());
+    }
+
+    #[test]
+    fn empty_containers() {
+        assert_eq!(parse("[]").unwrap(), Json::Arr(vec![]));
+        assert_eq!(parse("{}").unwrap(), Json::Obj(vec![]));
+        assert_eq!(parse("[ ]").unwrap(), Json::Arr(vec![]));
+    }
+
+    #[test]
+    fn bench_shaped_document_round_trips_fields() {
+        let text = r#"{
+  "bench": "serving",
+  "prefix_cache": [
+    {"system": "fusion", "prefix_cache": true, "tokens_per_s": 123.456, "ttft_p99_s": 0.025}
+  ],
+  "cluster": [
+    {"workload": "shared-prefix", "sched": "fusion", "router": "prefix", "chips": 2, "ttft_p50_s": 0.0125}
+  ]
+}"#;
+        let j = parse(text).unwrap();
+        assert_eq!(j.str("bench"), Some("serving"));
+        let rows = j.get("prefix_cache").unwrap().as_arr().unwrap();
+        assert_eq!(rows[0].num("tokens_per_s"), Some(123.456));
+        assert_eq!(rows[0].get("prefix_cache").unwrap().as_bool(), Some(true));
+        let cluster = j.get("cluster").unwrap().as_arr().unwrap();
+        assert_eq!(cluster[0].num("chips"), Some(2.0));
+        assert_eq!(cluster[0].str("router"), Some("prefix"));
+    }
+}

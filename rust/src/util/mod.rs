@@ -1,5 +1,6 @@
 //! In-tree substrates for functionality that would normally come from
-//! external crates (`rand`, `clap`, `toml`, `proptest`, `criterion`).
+//! external crates (`rand`, `clap`, `toml`, `serde_json`, `proptest`,
+//! `criterion`).
 //!
 //! The build environment is fully offline and the vendored crate set only
 //! contains the `xla` dependency closure, so these are implemented from
@@ -8,6 +9,7 @@
 pub mod bench;
 pub mod cli;
 pub mod logging;
+pub mod minijson;
 pub mod minitoml;
 pub mod prop;
 pub mod rng;

@@ -1,0 +1,183 @@
+//! Cluster-layer regression tests: golden determinism vectors for every
+//! router policy (pinned RNG workloads), and conservation properties —
+//! every admitted request completes on exactly one chip, and the
+//! aggregate rollup neither loses nor invents tokens.
+
+use npusim::config::{ChipConfig, ModelConfig, PrefixSharing, WorkloadConfig};
+use npusim::serving::cluster::{self, ClusterConfig, ClusterMetrics, RouterPolicy};
+use npusim::serving::pd_disagg::DisaggConfig;
+use npusim::serving::pd_fusion::FusionConfig;
+use npusim::serving::request;
+use npusim::serving::scheduler::{HybridConfig, SchedulerConfig};
+use std::collections::HashSet;
+use std::fmt::Write as _;
+
+fn shared_workload(n: usize, seed: u64) -> WorkloadConfig {
+    WorkloadConfig::shared_prefix(n)
+        .with_seed(seed)
+        .with_prefix(PrefixSharing {
+            n_groups: 2,
+            shared_prefix_len: 384,
+            turns: 2,
+            think_time_s: 1.0,
+        })
+}
+
+fn fusion_cached() -> SchedulerConfig {
+    SchedulerConfig::Fusion(FusionConfig {
+        prefix_cache: true,
+        ..FusionConfig::default()
+    })
+}
+
+fn run_cluster(
+    sched: SchedulerConfig,
+    router: RouterPolicy,
+    chips: usize,
+    w: &WorkloadConfig,
+) -> ClusterMetrics {
+    let cfg = ClusterConfig::new(ChipConfig::large_core(), chips, sched, router);
+    cluster::simulate_cluster(&cfg, &ModelConfig::qwen3_4b(), w)
+        .unwrap_or_else(|e| panic!("{} cluster failed: {e:#}", router.name()))
+}
+
+/// Canonical text rendering: per-chip request timelines plus the routing
+/// histogram — any cycle-level or routing drift shows up as a byte diff.
+fn summarize(cm: &ClusterMetrics) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "routed={:?} migrations={}", cm.routed, cm.migrations);
+    for (i, m) in cm.per_chip.iter().enumerate() {
+        let mut records = m.records().to_vec();
+        records.sort_by_key(|r| r.id);
+        let _ = writeln!(out, "chip{i} n={}", m.n_requests());
+        for r in records {
+            let _ = writeln!(
+                out,
+                "  id={} arrival={} first={} finish={} in={} out={}",
+                r.id, r.arrival, r.first_token, r.finish, r.input_tokens, r.output_tokens
+            );
+        }
+    }
+    out
+}
+
+#[test]
+fn every_router_is_deterministic_across_runs() {
+    let w = shared_workload(10, 17);
+    for router in RouterPolicy::ALL {
+        let a = summarize(&run_cluster(fusion_cached(), router, 2, &w));
+        let b = summarize(&run_cluster(fusion_cached(), router, 2, &w));
+        assert!(!a.is_empty());
+        assert_eq!(a, b, "{} router not deterministic", router.name());
+    }
+}
+
+#[test]
+fn routers_actually_route_differently() {
+    // Round-robin and least-loaded/prefix-aware must not all collapse to
+    // the same placement on a skewed shared-prefix workload (guards
+    // against the views being ignored).
+    let w = shared_workload(12, 23);
+    let rr = run_cluster(fusion_cached(), RouterPolicy::RoundRobin, 2, &w);
+    let prefix = run_cluster(fusion_cached(), RouterPolicy::PrefixAware, 2, &w);
+    assert_ne!(
+        summarize(&rr),
+        summarize(&prefix),
+        "prefix-aware routing is indistinguishable from round-robin"
+    );
+}
+
+#[test]
+fn every_request_completes_on_exactly_one_chip() {
+    // The cluster exactly-once property, across routers, schedulers and
+    // chip counts: the union of per-chip completions is a permutation of
+    // the request ids, and output tokens are conserved through the rollup.
+    let systems = [
+        fusion_cached(),
+        SchedulerConfig::Disagg(DisaggConfig {
+            prefix_cache: true,
+            ..DisaggConfig::p42_d21()
+        }),
+        SchedulerConfig::Hybrid(HybridConfig {
+            fusion: FusionConfig {
+                prefix_cache: true,
+                ..FusionConfig::default()
+            },
+            ..HybridConfig::default()
+        }),
+    ];
+    for (si, sched) in systems.into_iter().enumerate() {
+        for router in RouterPolicy::ALL {
+            for chips in [2usize, 3] {
+                let w = shared_workload(9, 31 + si as u64);
+                let reqs = request::generate(&w);
+                let expected_out: u64 = reqs.iter().map(|r| r.output_len as u64).sum();
+                let expected_ids: Vec<u64> = {
+                    let mut ids: Vec<u64> = reqs.iter().map(|r| r.id).collect();
+                    ids.sort_unstable();
+                    ids
+                };
+                let cm = run_cluster(sched, router, chips, &w);
+                // Exactly one completion per id, across all chips.
+                let mut seen = HashSet::new();
+                let mut ids = Vec::new();
+                for m in &cm.per_chip {
+                    for r in m.records() {
+                        assert!(
+                            seen.insert(r.id),
+                            "request {} completed on more than one chip ({}, {} chips)",
+                            r.id,
+                            router.name(),
+                            chips
+                        );
+                        ids.push(r.id);
+                    }
+                }
+                ids.sort_unstable();
+                assert_eq!(ids, expected_ids, "{} on {chips} chips", router.name());
+                // Routing histogram accounts for every admission.
+                assert_eq!(cm.routed.iter().sum::<usize>(), reqs.len());
+                assert_eq!(cm.routed.len(), chips);
+                // Token conservation through the rollup.
+                let agg = cm.aggregate();
+                let out: u64 = agg.records().iter().map(|r| r.output_tokens).sum();
+                assert_eq!(out, expected_out, "{} on {chips} chips", router.name());
+                let per_chip_out: u64 = cm
+                    .per_chip
+                    .iter()
+                    .flat_map(|m| m.records())
+                    .map(|r| r.output_tokens)
+                    .sum();
+                assert_eq!(per_chip_out, out, "rollup lost or invented tokens");
+            }
+        }
+    }
+}
+
+#[test]
+fn migrations_are_charged_on_the_interconnect() {
+    // Force migration pressure: a tiny load gap and a strongly skewed
+    // prefix workload. If any migration happens, interconnect bytes must
+    // be non-zero (the transfer is charged, not free).
+    let w = WorkloadConfig::shared_prefix(16)
+        .with_seed(5)
+        .with_prefix(PrefixSharing {
+            n_groups: 1,
+            shared_prefix_len: 512,
+            turns: 2,
+            think_time_s: 0.2,
+        });
+    let mut cfg = ClusterConfig::new(
+        ChipConfig::large_core(),
+        2,
+        fusion_cached(),
+        RouterPolicy::PrefixAware,
+    );
+    cfg.migrate_load_gap = 0;
+    let cm = cluster::simulate_cluster(&cfg, &ModelConfig::qwen3_4b(), &w).unwrap();
+    assert_eq!(cm.n_requests(), 16);
+    if cm.migrations > 0 {
+        assert!(cm.interconnect.transfers >= cm.migrations);
+        assert!(cm.interconnect.bytes > 0, "migration moved zero bytes");
+    }
+}

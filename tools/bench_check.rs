@@ -1,0 +1,301 @@
+//! CI bench gate: compare `BENCH_serving.json` against the committed
+//! `BENCH_baseline.json` and fail on regression.
+//!
+//! ```text
+//! bench_check <current.json> <baseline.json> [--tolerance 0.15]
+//! ```
+//!
+//! Three layers of gating, all simulated (machine-independent) metrics —
+//! wall-clock fields are deliberately ignored:
+//!
+//! 1. **Structure**: the current file must contain the full prefix-cache
+//!    grid (3 schedulers × cache on/off) and the full cluster grid
+//!    (shared-prefix + poisson workloads × fusion/disagg/hybrid ×
+//!    rr/least/prefix routers on ≥ 2 chips).
+//! 2. **Invariants**: on the shared-prefix workload the prefix-hit-aware
+//!    router must beat round-robin on TTFT p50 for the fusion system (the
+//!    cluster acceptance property), and cache-on must not lose TTFT.
+//! 3. **Numbers**: `tokens_per_s` must not drop, and `ttft_p99_s` must
+//!    not rise, by more than the tolerance against the matching baseline
+//!    row. A baseline marked `"provisional": true` skips this layer (the
+//!    numeric baseline is then bootstrapped by the next refresh:
+//!    `cargo run --release -p npusim -- experiment bench --fast &&
+//!    cp BENCH_serving.json BENCH_baseline.json`).
+
+use npusim::util::minijson::{self, Json};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(&args) {
+        Ok(()) => println!("bench_check: OK"),
+        Err(e) => {
+            eprintln!("bench_check: FAIL\n{e:#}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn load(path: &str) -> anyhow::Result<Json> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+    minijson::parse(&text).map_err(|e| e.context(format!("parsing {path}")))
+}
+
+fn run(args: &[String]) -> anyhow::Result<()> {
+    let mut positional: Vec<&String> = Vec::new();
+    let mut tolerance = 0.15f64;
+    let mut i = 0;
+    while i < args.len() {
+        if args[i] == "--tolerance" {
+            tolerance = args
+                .get(i + 1)
+                .and_then(|v| v.parse::<f64>().ok())
+                .ok_or_else(|| anyhow::anyhow!("--tolerance needs a number"))?;
+            i += 2;
+        } else if args[i].starts_with("--") {
+            anyhow::bail!("unknown flag {}", args[i]);
+        } else {
+            positional.push(&args[i]);
+            i += 1;
+        }
+    }
+    anyhow::ensure!(
+        positional.len() == 2,
+        "usage: bench_check <current.json> <baseline.json> [--tolerance 0.15]"
+    );
+    let current = load(positional[0])?;
+    let baseline = load(positional[1])?;
+
+    let mut violations: Vec<String> = Vec::new();
+    check_structure(&current, &mut violations);
+    check_invariants(&current, &mut violations);
+    if baseline
+        .get("provisional")
+        .and_then(|v| v.as_bool())
+        .unwrap_or(false)
+    {
+        println!(
+            "bench_check: baseline is provisional — structural + invariant gates only; \
+             refresh it with `experiment bench --fast` and commit to arm the numeric gate"
+        );
+    } else {
+        check_numbers(&current, &baseline, tolerance, &mut violations);
+    }
+
+    anyhow::ensure!(
+        violations.is_empty(),
+        "{} violation(s):\n  - {}",
+        violations.len(),
+        violations.join("\n  - ")
+    );
+    Ok(())
+}
+
+fn rows<'a>(j: &'a Json, key: &str) -> Vec<&'a Json> {
+    j.get(key)
+        .and_then(|v| v.as_arr())
+        .map(|a| a.iter().collect())
+        .unwrap_or_default()
+}
+
+/// Find the cluster row for `(workload, sched, router)` at the smallest
+/// chip count.
+fn cluster_row<'a>(
+    cluster: &[&'a Json],
+    workload: &str,
+    sched: &str,
+    router: &str,
+) -> Option<&'a Json> {
+    cluster
+        .iter()
+        .filter(|r| {
+            r.str("workload") == Some(workload)
+                && r.str("sched") == Some(sched)
+                && r.str("router") == Some(router)
+        })
+        .min_by_key(|r| r.num("chips").unwrap_or(f64::MAX) as u64)
+        .copied()
+}
+
+fn check_structure(current: &Json, violations: &mut Vec<String>) {
+    let prefix = rows(current, "prefix_cache");
+    for system in ["fusion", "disagg", "hybrid"] {
+        for cache_on in [false, true] {
+            let found = prefix.iter().any(|r| {
+                r.str("system") == Some(system)
+                    && r.get("prefix_cache").and_then(|v| v.as_bool()) == Some(cache_on)
+            });
+            if !found {
+                violations.push(format!(
+                    "prefix_cache row missing: system={system} cache_on={cache_on}"
+                ));
+            }
+        }
+    }
+    let cluster = rows(current, "cluster");
+    for workload in ["shared-prefix", "poisson"] {
+        for sched in ["fusion", "disagg", "hybrid"] {
+            for router in ["rr", "least", "prefix"] {
+                match cluster_row(&cluster, workload, sched, router) {
+                    None => {
+                        violations.push(format!("cluster row missing: {workload}/{sched}/{router}"))
+                    }
+                    Some(r) => {
+                        if r.num("chips").unwrap_or(0.0) < 2.0 {
+                            violations.push(format!(
+                                "cluster row {workload}/{sched}/{router} runs on < 2 chips"
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn check_invariants(current: &Json, violations: &mut Vec<String>) {
+    // The cluster acceptance property: hit-aware routing beats static
+    // round-robin on median TTFT when there is something to hit.
+    let cluster = rows(current, "cluster");
+    let rr = cluster_row(&cluster, "shared-prefix", "fusion", "rr")
+        .and_then(|r| r.num("ttft_p50_s"));
+    let prefix = cluster_row(&cluster, "shared-prefix", "fusion", "prefix")
+        .and_then(|r| r.num("ttft_p50_s"));
+    match (rr, prefix) {
+        (Some(rr), Some(prefix)) => {
+            if prefix >= rr {
+                violations.push(format!(
+                    "prefix-aware router does not beat round-robin on shared-prefix \
+                     fusion TTFT p50 ({prefix} vs {rr})"
+                ));
+            }
+        }
+        _ => violations.push("cannot evaluate prefix-vs-rr TTFT p50 invariant".into()),
+    }
+    // Prefix caching must not hurt mean TTFT on any scheduler.
+    for system in ["fusion", "disagg", "hybrid"] {
+        if let Some(cut) = current
+            .get("ttft_reduction_pct")
+            .and_then(|o| o.num(system))
+        {
+            if cut < 0.0 {
+                violations.push(format!(
+                    "prefix cache regressed {system} mean TTFT by {:.1}%",
+                    -cut
+                ));
+            }
+        }
+    }
+}
+
+/// One directional comparison: `cur` must not be worse than `base` by more
+/// than `tol` (relative). `higher_is_better` picks the bad direction.
+fn check_metric(
+    what: &str,
+    cur: Option<f64>,
+    base: Option<f64>,
+    tol: f64,
+    higher_is_better: bool,
+    violations: &mut Vec<String>,
+) {
+    let (Some(cur), Some(base)) = (cur, base) else {
+        violations.push(format!("{what}: metric missing"));
+        return;
+    };
+    // Both effectively zero: nothing to compare.
+    if base.abs() < 1e-9 && cur.abs() < 1e-9 {
+        return;
+    }
+    let denom = base.abs().max(1e-9);
+    let drift = (cur - base) / denom;
+    let bad = if higher_is_better { -drift } else { drift };
+    if bad > tol {
+        violations.push(format!(
+            "{what}: {cur:.6} vs baseline {base:.6} ({:+.1}% drift exceeds {:.0}% tolerance)",
+            drift * 100.0,
+            tol * 100.0
+        ));
+    } else if bad < -tol {
+        println!(
+            "bench_check: note — {what} improved beyond tolerance \
+             ({cur:.6} vs {base:.6}); consider refreshing the baseline"
+        );
+    }
+}
+
+fn check_numbers(current: &Json, baseline: &Json, tol: f64, violations: &mut Vec<String>) {
+    // Prefix-cache grid: match rows on (system, cache flag).
+    let cur_rows = rows(current, "prefix_cache");
+    let base_rows = rows(baseline, "prefix_cache");
+    for b in &base_rows {
+        let (system, cache_on) = (
+            b.str("system").unwrap_or(""),
+            b.get("prefix_cache").and_then(|v| v.as_bool()),
+        );
+        let Some(c) = cur_rows.iter().find(|r| {
+            r.str("system") == Some(system)
+                && r.get("prefix_cache").and_then(|v| v.as_bool()) == cache_on
+        }) else {
+            violations.push(format!(
+                "prefix_cache row disappeared: {system}/{cache_on:?}"
+            ));
+            continue;
+        };
+        let tag = format!("prefix_cache {system}/cache={}", cache_on.unwrap_or(false));
+        check_metric(
+            &format!("{tag} tokens_per_s"),
+            c.num("tokens_per_s"),
+            b.num("tokens_per_s"),
+            tol,
+            true,
+            violations,
+        );
+        check_metric(
+            &format!("{tag} ttft_p99_s"),
+            c.num("ttft_p99_s"),
+            b.num("ttft_p99_s"),
+            tol,
+            false,
+            violations,
+        );
+    }
+    // Cluster grid: match rows on (workload, sched, router, chips).
+    let cur_cluster = rows(current, "cluster");
+    let base_cluster = rows(baseline, "cluster");
+    for b in &base_cluster {
+        let key = (
+            b.str("workload").unwrap_or(""),
+            b.str("sched").unwrap_or(""),
+            b.str("router").unwrap_or(""),
+            b.num("chips").unwrap_or(0.0) as u64,
+        );
+        let Some(c) = cur_cluster.iter().find(|r| {
+            (
+                r.str("workload").unwrap_or(""),
+                r.str("sched").unwrap_or(""),
+                r.str("router").unwrap_or(""),
+                r.num("chips").unwrap_or(0.0) as u64,
+            ) == key
+        }) else {
+            violations.push(format!("cluster row disappeared: {key:?}"));
+            continue;
+        };
+        let tag = format!("cluster {}/{}/{}/{}", key.0, key.1, key.2, key.3);
+        check_metric(
+            &format!("{tag} tokens_per_s"),
+            c.num("tokens_per_s"),
+            b.num("tokens_per_s"),
+            tol,
+            true,
+            violations,
+        );
+        check_metric(
+            &format!("{tag} ttft_p99_s"),
+            c.num("ttft_p99_s"),
+            b.num("ttft_p99_s"),
+            tol,
+            false,
+            violations,
+        );
+    }
+}
