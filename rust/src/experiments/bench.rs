@@ -2,8 +2,10 @@
 //! (1) the prefix-sharing paged-KV win on a shared-prefix / multi-turn
 //! conversational trace across all three schedulers, (2) the
 //! operator-latency memoization speedup on a fig13-style hardware sweep,
-//! and (3) the multi-chip cluster grid (router × scheduler on 2 chips,
-//! via [`cluster_study::bench_grid`]) — and writes all three to
+//! (3) the multi-chip cluster grid (router × scheduler on 2 chips, via
+//! [`cluster_study::bench_grid`]), and (4) the two-tier prefix-cache
+//! ablation (SRAM-only vs HBM tier vs +cross-pipe NoC, via
+//! [`tier_study::bench_rows`]) — and writes all four to
 //! `BENCH_serving.json` (wall-clock sim time, simulated tokens/s,
 //! TTFT/TBT p50/p99, prefix-cache hit rate, memo hit rate). CI gates this
 //! file against `BENCH_baseline.json` with `tools/bench_check`.
@@ -14,6 +16,7 @@
 
 use crate::config::{ArrivalProcess, ChipConfig, ModelConfig, PrefixSharing, WorkloadConfig};
 use crate::experiments::cluster_study::{self, ClusterRun};
+use crate::experiments::tier_study::{self, TierRun};
 use crate::experiments::Opts;
 use crate::serving::metrics::Metrics;
 use crate::serving::pd_disagg::DisaggConfig;
@@ -252,6 +255,7 @@ fn render_json(
     memo: &MemoStudy,
     shared_fraction: f64,
     cluster: &[ClusterRun],
+    tier: &[TierRun],
 ) -> String {
     let mut j = String::new();
     let _ = writeln!(j, "{{");
@@ -314,6 +318,32 @@ fn render_json(
         );
     }
     let _ = writeln!(j, "  ],");
+    let _ = writeln!(j, "  \"tier\": [");
+    for (i, r) in tier.iter().enumerate() {
+        let _ = writeln!(
+            j,
+            "    {{\"config\": \"{}\", \"hbm_tier\": {}, \"cross_pipe\": {}, \
+             \"tokens_per_s\": {:.3}, \"ttft_p50_s\": {:.6}, \"ttft_p99_s\": {:.6}, \
+             \"prefix_hit_rate\": {:.4}, \"prefill_tokens_skipped\": {}, \
+             \"tier_demotions\": {}, \"tier_promotions\": {}, \"tier_dropped\": {}, \
+             \"prefix_evictions\": {}, \"noc_imports\": {}}}{}",
+            r.config,
+            r.hbm_tier,
+            r.cross_pipe,
+            r.tok_s,
+            r.ttft_p50_s,
+            r.ttft_p99_s,
+            r.hit_rate,
+            r.tokens_skipped,
+            r.demotions,
+            r.promotions,
+            r.dropped,
+            r.evictions,
+            r.noc_imports,
+            if i + 1 < tier.len() { "," } else { "" }
+        );
+    }
+    let _ = writeln!(j, "  ],");
     let _ = writeln!(
         j,
         "  \"memo\": {{\"sweep\": \"fig13-mini\", \"wall_off_s\": {:.6}, \"wall_on_s\": {:.6}, \
@@ -330,6 +360,7 @@ pub fn run(opts: &Opts) -> anyhow::Result<Vec<Table>> {
     let runs = prefix_study(&reqs)?;
     let memo = memo_study(opts)?;
     let cluster = cluster_study::bench_grid(opts)?;
+    let tier = tier_study::bench_rows(opts)?;
 
     let mut t1 = Table::new(
         "bench — prefix-sharing paged KV on the shared-prefix trace (Qwen3-4B, 64 cores)",
@@ -412,29 +443,53 @@ pub fn run(opts: &Opts) -> anyhow::Result<Vec<Table>> {
         ]);
     }
 
+    let mut t4 = Table::new(
+        "bench — two-tier prefix cache (pressured shared-prefix trace, 16 MB SRAM/core)",
+        &[
+            "config",
+            "tok/s",
+            "TTFT p50 (s)",
+            "tokens skipped",
+            "demote/promote/drop",
+            "NoC imports",
+        ],
+    );
+    for r in &tier {
+        t4.row(&[
+            r.config.to_string(),
+            f3(r.tok_s),
+            f3(r.ttft_p50_s),
+            r.tokens_skipped.to_string(),
+            format!("{}/{}/{}", r.demotions, r.promotions, r.dropped),
+            r.noc_imports.to_string(),
+        ]);
+    }
+
     let cluster_rr = cluster_study::ttft_p50(&cluster, "shared-prefix", "fusion", "rr");
     let cluster_prefix = cluster_study::ttft_p50(&cluster, "shared-prefix", "fusion", "prefix");
     println!(
         "bench: shared tokens {:.1}%  |  fusion TTFT cut {:.1}%  |  memo speedup {:.2}x (hit rate {:.1}%)  |  \
-         cluster TTFT p50 rr {:.4}s vs prefix {:.4}s",
+         cluster TTFT p50 rr {:.4}s vs prefix {:.4}s  |  tier skips {} -> {}",
         shared_fraction * 100.0,
         ttft_reduction_pct(&runs, "fusion"),
         memo.speedup,
         memo.memo_hit_rate * 100.0,
         cluster_rr.unwrap_or(0.0),
-        cluster_prefix.unwrap_or(0.0)
+        cluster_prefix.unwrap_or(0.0),
+        tier_study::tokens_skipped(&tier, "sram-only").unwrap_or(0),
+        tier_study::tokens_skipped(&tier, "two-tier+noc").unwrap_or(0)
     );
 
     // BENCH_serving.json: one copy beside the CSVs, one at the repo root
     // (the canonical location the README documents and CI gates on).
     if let Some(dir) = &opts.out_dir {
-        let json = render_json(&runs, &memo, shared_fraction, &cluster);
+        let json = render_json(&runs, &memo, shared_fraction, &cluster, &tier);
         std::fs::create_dir_all(dir)?;
         std::fs::write(dir.join("BENCH_serving.json"), &json)?;
         std::fs::write("BENCH_serving.json", &json)?;
     }
 
-    Ok(vec![t1, t2, t3])
+    Ok(vec![t1, t2, t3, t4])
 }
 
 #[cfg(test)]
@@ -522,7 +577,22 @@ mod tests {
             migrations: 3,
             icn_mb: 1.5,
         }];
-        let j = render_json(&runs, &memo, 0.6, &cluster);
+        let tier = vec![TierRun {
+            config: "two-tier+noc",
+            hbm_tier: true,
+            cross_pipe: true,
+            tok_s: 120.0,
+            ttft_p50_s: 0.008,
+            ttft_p99_s: 0.04,
+            hit_rate: 0.9,
+            tokens_skipped: 4096,
+            demotions: 7,
+            promotions: 5,
+            dropped: 1,
+            evictions: 0,
+            noc_imports: 2,
+        }];
+        let j = render_json(&runs, &memo, 0.6, &cluster, &tier);
         assert!(j.starts_with("{\n"));
         assert!(j.trim_end().ends_with('}'));
         assert_eq!(j.matches('{').count(), j.matches('}').count());
@@ -530,5 +600,7 @@ mod tests {
         assert!(j.contains("\"system\": \"fusion\""));
         assert!(j.contains("\"router\": \"prefix\""));
         assert!(j.contains("\"chips\": 2"));
+        assert!(j.contains("\"config\": \"two-tier+noc\""));
+        assert!(j.contains("\"tier_demotions\": 7"));
     }
 }

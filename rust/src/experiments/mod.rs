@@ -16,8 +16,9 @@
 //! | `fig14` | PD disaggregation vs PD fusion | [`fig14`] |
 //! | `headline` | ours vs T10 / WaferLLM / WSC-LLM | [`headline`] |
 //! | `hybrid_study` | fusion vs disagg vs adaptive hybrid | [`hybrid_study`] |
-//! | `bench` | prefix-cache + memoization + cluster bench → `BENCH_serving.json` | [`bench`] |
+//! | `bench` | prefix-cache + memoization + cluster + tier bench → `BENCH_serving.json` | [`bench`] |
 //! | `cluster_study` | multi-chip: chips × router × scheduler | [`cluster_study`] |
+//! | `tier_study` | two-tier prefix cache: SRAM-only vs HBM tier vs +cross-pipe NoC | [`tier_study`] |
 
 pub mod ablations;
 pub mod bench;
@@ -34,6 +35,7 @@ pub mod headline;
 pub mod hybrid_study;
 pub mod reference_hw;
 pub mod table2;
+pub mod tier_study;
 
 use crate::util::table::Table;
 use std::path::PathBuf;
@@ -78,7 +80,7 @@ impl Opts {
 /// All experiment ids, in paper order.
 pub const ALL: &[&str] = &[
     "table2", "fig7a", "fig7b", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13", "fig14",
-    "headline", "ablations", "hybrid_study", "bench", "cluster_study",
+    "headline", "ablations", "hybrid_study", "bench", "cluster_study", "tier_study",
 ];
 
 /// Run one experiment by id; returns its tables (already printed).
@@ -99,6 +101,7 @@ pub fn run(id: &str, opts: &Opts) -> anyhow::Result<Vec<Table>> {
         "hybrid_study" => hybrid_study::run(opts)?,
         "bench" => bench::run(opts)?,
         "cluster_study" => cluster_study::run(opts)?,
+        "tier_study" => tier_study::run(opts)?,
         other => anyhow::bail!("unknown experiment {other:?} (try one of {ALL:?})"),
     };
     for t in &tables {

@@ -52,6 +52,7 @@ fn dispatch(args: &Args) -> Result<()> {
                  npusim experiment bench            # emits BENCH_serving.json\n      \
                  npusim simulate --mode fusion --model qwen3_4b --input 512 --output 64\n      \
                  npusim simulate --mode hybrid --shared-prefix 1024 --prefix-cache --memo\n      \
+                 npusim simulate --prefix-cache --hbm-tier --cross-pipe --shared-prefix 1024\n      \
                  npusim simulate --chips 4 --router prefix --prefix-cache --shared-prefix 1024\n      \
                  npusim serve --prompt \"1,2,3,4\""
             );
@@ -110,14 +111,18 @@ fn chip_from(args: &Args) -> Result<ChipConfig> {
 
 /// Fusion-pipeline knobs shared by `--mode fusion` and `--mode hybrid`.
 fn fusion_cfg_from(args: &Args) -> Result<FusionConfig> {
+    let defaults = FusionConfig::default();
     Ok(FusionConfig {
         tp: args.opt_parse_or("tp", 4)?,
         stages: args.opt_parse_or("stages", 4)?,
         chunk: args.opt_parse_or("chunk", 256)?,
         budget: args.opt_parse_or("budget", 288)?,
         prefix_cache: args.flag("prefix-cache"),
+        hbm_tier: args.flag("hbm-tier"),
+        cross_pipe: args.flag("cross-pipe"),
+        affinity_gap: args.opt_parse_or("affinity-gap", defaults.affinity_gap)?,
         memo: args.flag("memo"),
-        ..FusionConfig::default()
+        ..defaults
     })
 }
 
@@ -128,6 +133,8 @@ fn disagg_cfg_from(args: &Args) -> Result<DisaggConfig> {
         n_decode: args.opt_parse_or("decode-cores", 21)?,
         prefill_stages: args.opt_parse_or("stages", 6)?,
         prefix_cache: args.flag("prefix-cache"),
+        hbm_tier: args.flag("hbm-tier"),
+        cross_pipe: args.flag("cross-pipe"),
         memo: args.flag("memo"),
         ..DisaggConfig::default()
     })
@@ -247,6 +254,21 @@ fn print_metrics(name: &str, m: &Metrics, chip: &ChipSim) {
         ]);
         t.row(&["COW copies".into(), c.cow_copies.to_string()]);
         t.row(&["prefix evictions".into(), c.prefix_evictions.to_string()]);
+        if c.tier_demotions + c.tier_promotions + c.tier_dropped > 0 {
+            t.row(&[
+                "HBM tier demotions/promotions/drops".into(),
+                format!(
+                    "{}/{}/{}",
+                    c.tier_demotions, c.tier_promotions, c.tier_dropped
+                ),
+            ]);
+        }
+        if c.noc_prefix_imports > 0 {
+            t.row(&[
+                "cross-pipe NoC imports (tokens)".into(),
+                format!("{} ({})", c.noc_prefix_imports, c.noc_prefix_tokens),
+            ]);
+        }
     }
     if c.memo_hits + c.memo_misses > 0 {
         t.row(&[
@@ -312,6 +334,9 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     };
 
     let mode = args.opt_or("mode", "fusion");
+    if (args.flag("hbm-tier") || args.flag("cross-pipe")) && !args.flag("prefix-cache") {
+        anyhow::bail!("--hbm-tier and --cross-pipe extend the prefix cache: pass --prefix-cache");
+    }
 
     // Multi-chip cluster path (`--chips N --router rr|least|prefix`): N
     // identical chips behind streamed admission and the chosen router.

@@ -19,9 +19,22 @@
 //! eviction reclaims cold leaves — blocks referenced by live requests are
 //! never evicted. With the cache disabled, every code path is the
 //! pre-prefix-sharing one and simulations reproduce bit-for-bit.
+//!
+//! With [`KvCache::enable_hbm_tier`] the cache becomes **two-tier**: SRAM
+//! pressure *demotes* cold prefix blocks to a bounded HBM region instead
+//! of dropping them (their node stays in the trie, marked
+//! [`Tier::Hbm`]), and a later hit *re-promotes* them into fresh SRAM
+//! blocks. Both directions are bandwidth-priced: the cache accumulates the
+//! moved bytes and the owning worker drains them
+//! ([`KvCache::drain_tier_traffic`]) into charged HBM accesses on its
+//! cores, so a promotion costs an HBM→SRAM stream — far cheaper than the
+//! prefill recompute it replaces, but never free. The HBM tier itself is
+//! capacity-bounded: when it overflows, the coldest demoted leaves are
+//! dropped for real. With the tier disabled (the default), demotion never
+//! happens and behaviour is bit-identical to the single-tier cache.
 
 use super::blocks::{BlockAllocator, Chain};
-use super::prefix::{BlockKey, PrefixBlock, PrefixIndex, NO_NODE, PENDING};
+use super::prefix::{BlockKey, PrefixBlock, PrefixIndex, Tier, TierMatch, NO_NODE, PENDING};
 use super::ring::{RingAlloc, RingBuffer};
 use std::collections::HashMap;
 
@@ -100,6 +113,27 @@ pub struct KvStats {
     pub cow_copies: u64,
     /// Cached blocks reclaimed by ref-count-aware LRU eviction.
     pub prefix_evictions: u64,
+    /// Cold prefix blocks demoted SRAM→HBM instead of dropped.
+    pub tier_demotions: u64,
+    /// Demoted prefix blocks re-promoted to SRAM on a hit.
+    pub tier_promotions: u64,
+    /// Demoted blocks dropped for real when the HBM tier overflowed.
+    pub tier_dropped: u64,
+    /// Bytes streamed SRAM→HBM by demotions (charged as HBM writes).
+    pub demoted_bytes: u64,
+    /// Bytes streamed HBM→SRAM by promotions (charged as HBM reads).
+    pub promoted_bytes: u64,
+}
+
+/// The bounded HBM region holding demoted prefix blocks, plus the
+/// not-yet-charged transfer bytes the owning worker drains into HBM
+/// accesses.
+#[derive(Debug, Default)]
+struct HbmTier {
+    capacity_bytes: u64,
+    used_bytes: u64,
+    pending_promote_bytes: u64,
+    pending_demote_bytes: u64,
 }
 
 /// Multi-grained KV cache for one worker group.
@@ -118,6 +152,8 @@ pub struct KvCache {
     overflow_bytes: u64,
     /// `Some` once prefix sharing is enabled.
     prefix: Option<PrefixIndex>,
+    /// `Some` once the HBM prefix tier is enabled (requires `prefix`).
+    hbm_tier: Option<HbmTier>,
     stats: KvStats,
 }
 
@@ -144,6 +180,7 @@ impl KvCache {
             entries: HashMap::new(),
             overflow_bytes: 0,
             prefix: None,
+            hbm_tier: None,
             stats: KvStats::default(),
         }
     }
@@ -156,8 +193,58 @@ impl KvCache {
         }
     }
 
+    /// Is prefix sharing enabled on this cache?
     pub fn prefix_enabled(&self) -> bool {
         self.prefix.is_some()
+    }
+
+    /// Turn on the HBM prefix tier: SRAM pressure demotes cold prefix
+    /// blocks into a `capacity_bytes`-bounded HBM region instead of
+    /// dropping them, and hits on demoted blocks re-promote at charged
+    /// HBM→SRAM cost. The region is **carved out of the HBM ring** (it
+    /// must be called before any admission), so demoted bytes occupy
+    /// real, admission-visible capacity — modeled HBM occupancy can never
+    /// exceed the physical part. No-op unless the prefix cache is enabled,
+    /// when `capacity_bytes` is zero, or when the ring cannot spare the
+    /// region (SRAM-only chips, or a ring smaller than the request).
+    pub fn enable_hbm_tier(&mut self, capacity_bytes: u64) {
+        if self.prefix.is_none() || capacity_bytes == 0 || self.hbm_tier.is_some() {
+            return;
+        }
+        debug_assert!(self.entries.is_empty(), "enable_hbm_tier after admission");
+        let cap = self.hbm.capacity();
+        if cap < capacity_bytes {
+            return;
+        }
+        self.hbm = RingBuffer::new(cap - capacity_bytes);
+        self.hbm_tier = Some(HbmTier {
+            capacity_bytes,
+            ..HbmTier::default()
+        });
+    }
+
+    /// Is the HBM prefix tier enabled on this cache?
+    pub fn hbm_tier_enabled(&self) -> bool {
+        self.hbm_tier.is_some()
+    }
+
+    /// Bytes currently held by demoted prefix blocks in the HBM tier.
+    pub fn hbm_tier_used_bytes(&self) -> u64 {
+        self.hbm_tier.as_ref().map(|t| t.used_bytes).unwrap_or(0)
+    }
+
+    /// Take the HBM bytes moved by tier promotions/demotions since the
+    /// last drain, as `(promoted HBM→SRAM reads, demoted SRAM→HBM
+    /// writes)`. The owning worker charges them on its cores so the tier
+    /// is bandwidth-priced, not free.
+    pub fn drain_tier_traffic(&mut self) -> (u64, u64) {
+        match self.hbm_tier.as_mut() {
+            Some(t) => (
+                std::mem::take(&mut t.pending_promote_bytes),
+                std::mem::take(&mut t.pending_demote_bytes),
+            ),
+            None => (0, 0),
+        }
     }
 
     /// Sharing / eviction counters.
@@ -208,6 +295,17 @@ impl KvCache {
             .unwrap_or(0)
     }
 
+    /// Like [`KvCache::peek_prefix`] but split by residency tier: how much
+    /// of the match is SRAM-resident (free) versus HBM-demoted
+    /// (promotion-priced). Routers and pipe selection score the two
+    /// differently.
+    pub fn peek_prefix_tiered(&self, keys: &[BlockKey], max_tokens: u64, at: u64) -> TierMatch {
+        self.prefix
+            .as_ref()
+            .map(|ix| ix.peek_tiered(keys, max_tokens, at))
+            .unwrap_or_default()
+    }
+
     /// Admit a request with prefix sharing at cycle `at`: match the
     /// longest cached prefix of `keys` (at most `max_match_tokens` tokens)
     /// whose producing prefills have completed by `at`, share those
@@ -243,7 +341,12 @@ impl KvCache {
             return Some(0);
         }
 
-        // 1. Share the longest cached-and-ready prefix.
+        // 1. Share the longest cached-and-ready prefix. Demoted blocks are
+        //    re-promoted into fresh SRAM blocks first (charged HBM→SRAM);
+        //    when SRAM cannot host a promotion even after demoting colder
+        //    blocks, the match stops there. Tier state is re-read per node
+        //    — a promotion's own demotion chain may have moved (or, on an
+        //    overflowing HBM tier, dropped) a later matched node.
         self.stats.prefix_lookups += 1;
         let matched: Vec<PrefixBlock> = self
             .prefix
@@ -251,13 +354,28 @@ impl KvCache {
             .expect("prefix enabled")
             .lookup(keys, max_match_tokens, at);
         let mut matched_tokens = 0u64;
+        let mut parent = NO_NODE;
+        let mut kept = 0usize;
         for m in &matched {
-            self.sram.retain(m.block);
-            entry.chain.push(m.block);
+            let ix = self.prefix.as_ref().expect("prefix enabled");
+            if !ix.is_live(m.node) {
+                break;
+            }
+            let block = match ix.tier_of(m.node) {
+                Tier::Sram => ix.block_of(m.node),
+                Tier::Hbm => match self.promote_node(m.node) {
+                    Some(b) => b,
+                    None => break,
+                },
+            };
+            self.sram.retain(block);
+            entry.chain.push(block);
             matched_tokens += m.tokens;
             let fill = m.tokens * self.bytes_per_token;
             entry.cap_bytes += fill;
             entry.frozen_tail_fill = (m.tokens < self.block_tokens).then_some(fill);
+            parent = m.node;
+            kept += 1;
         }
         entry.res.sram_bytes = matched_tokens * self.bytes_per_token;
         if matched_tokens > 0 {
@@ -270,9 +388,8 @@ impl KvCache {
         //    PENDING (the owner's prefill fills them; they become
         //    matchable chunk by chunk as `note_prefilled` reports the
         //    prefill reaching them — never before the KV exists).
-        let mut parent = matched.last().map(|m| m.node).unwrap_or(NO_NODE);
         let mut prefix_end = matched_tokens;
-        for &key in keys.iter().skip(matched.len()) {
+        for &key in keys.iter().skip(kept) {
             // A capped or readiness-bounded match can leave already-cached
             // continuations: never re-register them (that would orphan the
             // cached node).
@@ -332,10 +449,15 @@ impl KvCache {
     }
 
     /// Seed the cache with an externally produced copy of a prefix
-    /// (cluster KV migration): registers blocks for `keys`, ready from
-    /// cycle `ready_at` (when the inter-chip transfer lands). Blocks
-    /// already cached just have their readiness advanced. Best-effort
-    /// under SRAM pressure; returns the token length of the seeded path.
+    /// (cluster KV migration, cross-pipe NoC import): registers blocks
+    /// for `keys`, ready from cycle `ready_at` (when the transfer lands).
+    /// Blocks already cached just have their readiness advanced.
+    /// Best-effort under SRAM pressure; returns the token length of the
+    /// seeded path. A seed never extends *past* an HBM-demoted node: a
+    /// fresh SRAM child under an HBM parent would pin the parent's bytes
+    /// in the tier (the overflow drop loop only removes leaves), making
+    /// the tier's capacity bound unenforceable — the walk stops there and
+    /// the remainder of the copy is dropped.
     pub fn seed_prefix(&mut self, keys: &[BlockKey], ready_at: u64) -> u64 {
         if self.prefix.is_none() {
             return 0;
@@ -343,11 +465,13 @@ impl KvCache {
         let mut parent = NO_NODE;
         let mut tokens = 0u64;
         for &key in keys {
-            let existing = self
-                .prefix
-                .as_ref()
-                .expect("prefix enabled")
-                .child_of(parent, key);
+            let (existing, parent_demoted) = {
+                let ix = self.prefix.as_ref().expect("prefix enabled");
+                (
+                    ix.child_of(parent, key),
+                    parent != NO_NODE && ix.tier_of(parent) == Tier::Hbm,
+                )
+            };
             if let Some(node) = existing {
                 self.prefix
                     .as_mut()
@@ -356,6 +480,9 @@ impl KvCache {
                 tokens += key.tokens;
                 parent = node;
                 continue;
+            }
+            if parent_demoted {
+                break; // never create an SRAM child under a demoted parent
             }
             let Some(blk) = self.alloc_block() else {
                 break;
@@ -374,19 +501,81 @@ impl KvCache {
         tokens
     }
 
-    /// Allocate one SRAM block, reclaiming cold cached prefix blocks via
-    /// ref-count-aware LRU eviction when the free list is empty. Only
-    /// leaves referenced by nobody but the index are evictable.
+    /// Allocate one SRAM block, reclaiming cold cached prefix blocks when
+    /// the free list is empty. With the HBM tier enabled the coldest
+    /// evictable block is *demoted* (its bytes move to the HBM tier and
+    /// the node stays matchable); without it — or when nothing is
+    /// demotable — the coldest evictable leaf is dropped as before. Only
+    /// blocks referenced by nobody but the index qualify either way.
     fn alloc_block(&mut self) -> Option<u32> {
         if let Some(b) = self.sram.alloc() {
             return Some(b);
         }
-        let ix = self.prefix.as_mut()?;
-        let sram = &self.sram;
+        let bpt = self.bytes_per_token;
+        let KvCache {
+            prefix,
+            hbm_tier,
+            sram,
+            stats,
+            ..
+        } = self;
+        let ix = prefix.as_mut()?;
+        if let Some(tier) = hbm_tier.as_mut() {
+            if let Some((node, block)) = ix.demote_lru(|b| sram.refcount(b) == 1) {
+                let fill = ix.tokens_of(node) * bpt;
+                sram.release_block(block);
+                tier.used_bytes += fill;
+                tier.pending_demote_bytes += fill;
+                stats.tier_demotions += 1;
+                stats.demoted_bytes += fill;
+                // Bound the HBM tier: drop the coldest demoted leaves
+                // until the region fits again.
+                while tier.used_bytes > tier.capacity_bytes {
+                    let Some(tokens) = ix.drop_lru_hbm() else { break };
+                    tier.used_bytes = tier.used_bytes.saturating_sub(tokens * bpt);
+                    stats.tier_dropped += 1;
+                }
+                return sram.alloc();
+            }
+            // Nothing demotable (every SRAM node is shared with a live
+            // request): fall through to the plain drop path, which will
+            // find nothing either — kept for symmetry with tier-off.
+        }
         let victim = ix.evict_lru(|b| sram.refcount(b) == 1)?;
-        self.sram.release_block(victim);
-        self.stats.prefix_evictions += 1;
-        self.sram.alloc()
+        sram.release_block(victim);
+        stats.prefix_evictions += 1;
+        sram.alloc()
+    }
+
+    /// Re-promote a demoted prefix node into a fresh SRAM block (the
+    /// index's reference), charging the HBM→SRAM stream. Returns the new
+    /// block, or `None` when SRAM cannot host it — or when the allocation
+    /// attempt's own demotion chain dropped the node from an overflowing
+    /// HBM tier in the meantime.
+    fn promote_node(&mut self, node: u32) -> Option<u32> {
+        let blk = self.alloc_block()?;
+        let ix = self.prefix.as_ref().expect("promote implies prefix");
+        if !ix.is_live(node) || ix.tier_of(node) != Tier::Hbm {
+            // Dropped (or already re-promoted) while making room: return
+            // the block and report no promotion.
+            self.sram.release_block(blk);
+            return None;
+        }
+        let fill = ix.tokens_of(node) * self.bytes_per_token;
+        let KvCache {
+            prefix,
+            hbm_tier,
+            stats,
+            ..
+        } = self;
+        prefix.as_mut().expect("promote implies prefix").promote(node, blk);
+        if let Some(tier) = hbm_tier.as_mut() {
+            tier.used_bytes = tier.used_bytes.saturating_sub(fill);
+            tier.pending_promote_bytes += fill;
+        }
+        stats.tier_promotions += 1;
+        stats.promoted_bytes += fill;
+        Some(blk)
     }
 
     /// Append `n_tokens` of KV for request `id`. New tokens fill SRAM
@@ -757,6 +946,187 @@ mod tests {
         let a = kv.append(10, 48);
         assert_eq!(a.sram_bytes, 48 * 8);
         assert!(kv.stats().prefix_evictions >= 1);
+    }
+
+    #[test]
+    fn hbm_tier_demotes_instead_of_dropping_and_repromotes_on_hit() {
+        let mut kv = cache(); // 4 SRAM blocks
+        kv.enable_prefix_cache();
+        kv.enable_hbm_tier(1024); // carved out of the test ring (8 KiB)
+        assert!(kv.hbm_tier_enabled());
+        let ks = keys(1, 32);
+        kv.admit_prefixed(1, &ks, u64::MAX, 0);
+        kv.append(1, 32);
+        kv.note_prefilled(1, 32, 10);
+        kv.release(1); // 2 cached blocks, refcount 1 (index only)
+        // Pressure: an unshared request needs 3 blocks; with the tier on,
+        // the coldest prefix block is demoted, not dropped.
+        kv.admit(2);
+        let a = kv.append(2, 48);
+        assert_eq!(a.sram_bytes, 48 * 8);
+        let s = kv.stats();
+        assert_eq!(s.prefix_evictions, 0, "tier must demote, not drop");
+        assert_eq!(s.tier_demotions, 1);
+        assert_eq!(s.demoted_bytes, 16 * 8);
+        assert_eq!(kv.hbm_tier_used_bytes(), 16 * 8);
+        // The demoted block still matches — split across tiers.
+        let m = kv.peek_prefix_tiered(&ks, u64::MAX, 10);
+        assert_eq!(m.total(), 32);
+        assert_eq!(m.hbm_tokens, 16);
+        assert_eq!(m.sram_tokens, 16);
+        // Free the pressure; a re-admission promotes the demoted block
+        // back into SRAM at charged HBM→SRAM cost.
+        kv.release(2);
+        assert_eq!(kv.admit_prefixed(3, &ks, u64::MAX, 10), Some(32));
+        let s = kv.stats();
+        assert_eq!(s.tier_promotions, 1);
+        assert_eq!(s.promoted_bytes, 16 * 8);
+        assert_eq!(kv.hbm_tier_used_bytes(), 0);
+        assert_eq!(kv.residency(3).sram_bytes, 32 * 8);
+        // Both directions drain exactly once as chargeable traffic.
+        assert_eq!(kv.drain_tier_traffic(), (16 * 8, 16 * 8));
+        assert_eq!(kv.drain_tier_traffic(), (0, 0));
+        // Demote→promote conserved the cached path: the sharer releases
+        // and the whole prefix still matches from the fast tier.
+        kv.release(3);
+        let m = kv.peek_prefix_tiered(&ks, u64::MAX, 10);
+        assert_eq!(m.sram_tokens, 32);
+        assert_eq!(m.hbm_tokens, 0);
+    }
+
+    #[test]
+    fn hbm_tier_capacity_bounds_demotions_with_lru_drops() {
+        let mut kv = cache(); // 4 SRAM blocks
+        kv.enable_prefix_cache();
+        kv.enable_hbm_tier(16 * 8); // exactly one demoted block fits
+        let ks = keys(2, 32);
+        kv.admit_prefixed(1, &ks, u64::MAX, 0);
+        kv.append(1, 32);
+        kv.note_prefilled(1, 32, 0);
+        kv.release(1);
+        // 4 blocks of pressure: both cached blocks demote; the second
+        // demotion overflows the tier and drops the colder leaf for real.
+        kv.admit(2);
+        let a = kv.append(2, 64);
+        assert_eq!(a.sram_bytes, 64 * 8);
+        let s = kv.stats();
+        assert_eq!(s.tier_demotions, 2);
+        assert_eq!(s.tier_dropped, 1);
+        assert_eq!(kv.hbm_tier_used_bytes(), 16 * 8);
+    }
+
+    #[test]
+    fn hbm_tier_region_is_carved_out_of_the_ring() {
+        // 4 max-length buffers fit the plain ring; carving the tier's
+        // region leaves room for 3 — demoted bytes occupy real,
+        // admission-visible HBM capacity, never phantom space.
+        let mut kv = cache();
+        kv.enable_prefix_cache();
+        kv.enable_hbm_tier(2048); // one whole request buffer's worth
+        assert!(kv.hbm_tier_enabled());
+        for id in 0..3 {
+            assert!(kv.admit(id), "id={id}");
+        }
+        assert!(!kv.can_admit(), "tier bytes must be admission-visible");
+        // A tier larger than the ring is refused (SRAM-only regime).
+        let mut tiny = KvCache::new(2 * 16 * 8, 16, 0, 8, 256);
+        tiny.enable_prefix_cache();
+        tiny.enable_hbm_tier(1 << 20);
+        assert!(!tiny.hbm_tier_enabled());
+    }
+
+    #[test]
+    fn hbm_tier_without_pressure_is_inert() {
+        // Same op sequence on tier-on and tier-off caches, never exceeding
+        // SRAM: stats and residency must agree exactly (the tier only
+        // changes behaviour at the eviction point).
+        let mut on = cache();
+        on.enable_prefix_cache();
+        on.enable_hbm_tier(1024);
+        assert!(on.hbm_tier_enabled());
+        let mut off = cache();
+        off.enable_prefix_cache();
+        let ks = keys(4, 32);
+        for kv in [&mut on, &mut off] {
+            assert_eq!(kv.admit_prefixed(1, &ks, u64::MAX, 0), Some(0));
+            kv.append(1, 33);
+            kv.note_prefilled(1, 33, 5);
+            assert_eq!(kv.admit_prefixed(2, &ks, u64::MAX, 5), Some(32));
+            kv.release(1);
+            kv.release(2);
+        }
+        assert_eq!(on.stats(), off.stats());
+        assert_eq!(on.hbm_tier_used_bytes(), 0);
+        assert_eq!(on.drain_tier_traffic(), (0, 0));
+    }
+
+    #[test]
+    fn prop_demote_promote_conserves_bytes_and_refcounts() {
+        // Random admit/append/release mixes on a tiny SRAM pool with the
+        // HBM tier enabled: per-request residency must equal matched +
+        // appended tokens (promotions included), physical SRAM never
+        // exceeds capacity, the HBM tier never exceeds its own bound, and
+        // draining everything reclaims every block exactly once (the
+        // allocator panics on double frees — demote/promote must not leak
+        // or double-count a block).
+        check("kv tier conservation", 48, |rng| {
+            let n_blocks = rng.range_u64(2, 10);
+            let tier_cap = rng.range_u64(1, 6) * 16 * 8;
+            let mut kv = KvCache::new(n_blocks * 16 * 8, 16, 1 << 20, 8, 2048);
+            kv.enable_prefix_cache();
+            kv.enable_hbm_tier(tier_cap);
+            let mut tokens: HashMap<u64, u64> = HashMap::new();
+            let mut next_id = 0u64;
+            let mut live: Vec<u64> = Vec::new();
+            let mut now = 0u64;
+            for _ in 0..rng.range(1, 60) {
+                now += 1;
+                let roll = rng.f64();
+                if roll < 0.4 {
+                    let scope = rng.range_u64(1, 4);
+                    let prefix_tokens = rng.range_u64(1, 64);
+                    let id = next_id;
+                    next_id += 1;
+                    let ks = keys(scope, prefix_tokens);
+                    if let Some(matched) = kv.admit_prefixed(id, &ks, u64::MAX, now) {
+                        assert!(matched <= prefix_tokens);
+                        kv.note_prefilled(id, prefix_tokens, now);
+                        tokens.insert(id, matched);
+                        live.push(id);
+                    }
+                } else if roll < 0.8 && !live.is_empty() {
+                    let id = *rng.choose(&live);
+                    let n = rng.range_u64(1, 48);
+                    let t = tokens.get_mut(&id).unwrap();
+                    if *t + n <= 2048 {
+                        kv.append(id, n);
+                        *t += n;
+                    }
+                } else if !live.is_empty() {
+                    let i = rng.range(0, live.len());
+                    let id = live.swap_remove(i);
+                    kv.release(id);
+                    tokens.remove(&id);
+                }
+                for (&id, &t) in &tokens {
+                    assert_eq!(kv.residency(id).total(), t * 8, "id={id}");
+                }
+                assert!(kv.sram_physical_bytes() <= n_blocks * 16 * 8);
+                assert!(kv.hbm_tier_used_bytes() <= tier_cap, "tier overflow");
+                assert_eq!(kv.overflow_bytes(), 0);
+            }
+            // Byte conservation across the tier: everything demoted either
+            // came back (promoted), was dropped, or still sits in HBM.
+            let s = kv.stats();
+            assert!(s.promoted_bytes + kv.hbm_tier_used_bytes() <= s.demoted_bytes);
+            // Drain: evicting until dry must reclaim every block exactly
+            // once, demotions included.
+            for id in live {
+                kv.release(id);
+            }
+            while kv.alloc_block().is_some() {}
+            assert_eq!(kv.sram_free_bytes(), 0);
+        });
     }
 
     #[test]

@@ -18,7 +18,10 @@
 //!   hashes behind prefix caching: admission matches the longest cached
 //!   prefix, shares its ref-counted blocks (copy-on-write on divergence),
 //!   and ref-count-aware LRU eviction keeps hot shared prefixes resident
-//!   under pressure.
+//!   under pressure. With the **HBM tier** enabled
+//!   ([`KvCache::enable_hbm_tier`]) eviction becomes demotion: cold
+//!   prefixes move to a bounded HBM region and re-promote on a hit at
+//!   charged HBM→SRAM transfer cost instead of being recomputed.
 //! - [`planner`] computes the SRAM budget split between activations,
 //!   communication staging, temporaries, KV blocks, and resident weights
 //!   (in that priority order — §4.2 "weight and activation management").
@@ -32,7 +35,7 @@ pub mod ring;
 pub use blocks::BlockAllocator;
 pub use kv::{KvCache, KvResidency, KvStats};
 pub use planner::SramPlan;
-pub use prefix::{BlockKey, PrefixIndex};
+pub use prefix::{BlockKey, PrefixIndex, Tier, TierMatch};
 pub use ring::RingBuffer;
 
 /// Tokens per fine-grained SRAM KV block — the prefix-cache hash

@@ -16,6 +16,14 @@
 //! node id — fully deterministic (no HashMap iteration order leaks into
 //! behaviour; the map is only ever *probed* by key).
 //!
+//! With the **HBM tier** enabled (see [`super::kv::KvCache`]), eviction
+//! becomes *demotion*: a cold node keeps its place in the trie but drops
+//! its SRAM block and moves to [`Tier::Hbm`] ([`PrefixIndex::demote_lru`]).
+//! Demoted nodes still match lookups — at a charged HBM→SRAM promotion
+//! cost ([`PrefixIndex::promote`]) instead of a full prefill recompute —
+//! and only leave the trie when the HBM tier itself overflows
+//! ([`PrefixIndex::drop_lru_hbm`]).
+//!
 //! Matching is **in-flight aware**: a node registered at admission time is
 //! [`PENDING`] until the producing prefill actually completes
 //! ([`PrefixIndex::mark_ready`]), and [`PrefixIndex::lookup`]/
@@ -30,6 +38,57 @@ pub const NO_NODE: u32 = u32::MAX;
 
 /// `ready_at` sentinel for blocks whose producing prefill is in flight.
 pub const PENDING: u64 = u64::MAX;
+
+/// Which memory tier a cached prefix block currently lives in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tier {
+    /// Fast tier: the node owns an SRAM block and matches for free.
+    Sram,
+    /// Capacity tier: the KV bytes were demoted to HBM; a match must first
+    /// re-promote them into a fresh SRAM block at charged transfer cost.
+    Hbm,
+}
+
+/// A tier-split prefix match: how many matched tokens are SRAM-resident
+/// versus demoted to HBM (promotion-priced). Routing and pipe selection
+/// score the two tiers differently — both beat a recompute.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TierMatch {
+    /// Matched tokens whose blocks are SRAM-resident (free to share).
+    pub sram_tokens: u64,
+    /// Matched tokens whose blocks are HBM-demoted (promotion-priced).
+    pub hbm_tokens: u64,
+}
+
+impl TierMatch {
+    /// Total matched tokens across both tiers.
+    pub fn total(&self) -> u64 {
+        self.sram_tokens + self.hbm_tokens
+    }
+
+    /// Deterministic integer affinity score: a fast-tier token counts
+    /// double an HBM-tier token (both replace recompute; only one pays a
+    /// promotion transfer).
+    pub fn score(&self) -> u64 {
+        2 * self.sram_tokens + self.hbm_tokens
+    }
+}
+
+/// The `keys` prefix covering exactly the first `tokens` matched tokens
+/// (block-aligned truncation helper shared by the cluster router's KV
+/// migration and the cross-pipe NoC import).
+pub fn keys_prefix(keys: &[BlockKey], tokens: u64) -> Vec<BlockKey> {
+    let mut out = Vec::new();
+    let mut cum = 0u64;
+    for &k in keys {
+        if cum + k.tokens > tokens {
+            break;
+        }
+        cum += k.tokens;
+        out.push(k);
+    }
+    out
+}
 
 /// One token block of a shareable prefix: the content hash of the block
 /// and how many tokens it holds (full blocks hold `block_tokens`; the
@@ -48,18 +107,32 @@ struct Node {
     tokens: u64,
     last_use: u64,
     n_children: u32,
+    /// Live children still on the SRAM tier. Demotion proceeds
+    /// leaf-upward (only nodes with `n_sram_children == 0` qualify), so a
+    /// demoted subtree is always drainable by [`PrefixIndex::drop_lru_hbm`]
+    /// leaf by leaf — the HBM tier's capacity bound stays enforceable.
+    n_sram_children: u32,
     live: bool,
     /// Cycle at which the block's KV is materialised ([`PENDING`] while
     /// the producing prefill is still in flight).
     ready_at: u64,
+    /// Residency tier. `block` is only meaningful while [`Tier::Sram`];
+    /// demotion frees the SRAM block and promotion assigns a fresh one.
+    tier: Tier,
 }
 
 /// A matched or registered prefix block.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct PrefixBlock {
+    /// Index node backing this block.
     pub node: u32,
+    /// SRAM block id (stale while `tier` is [`Tier::Hbm`] — the caller
+    /// must promote first and use the fresh block).
     pub block: u32,
+    /// Tokens this block contributes to the matched prefix.
     pub tokens: u64,
+    /// Residency tier at lookup time.
+    pub tier: Tier,
 }
 
 /// The trie of cached prefix blocks for one [`super::kv::KvCache`].
@@ -124,6 +197,7 @@ impl PrefixIndex {
                 node: ix,
                 block: self.nodes[ix as usize].block,
                 tokens: key.tokens,
+                tier: self.nodes[ix as usize].tier,
             });
             parent = ix;
         }
@@ -132,22 +206,32 @@ impl PrefixIndex {
 
     /// Matched ready token count for `keys` at cycle `at` without mutating
     /// LRU state (used to agree on a common match length across pipeline
-    /// stages, and by the cluster router's read-only probe).
+    /// stages, and by the cluster router's read-only probe). Counts both
+    /// tiers — a demoted block still replaces a recompute.
     pub fn peek(&self, keys: &[BlockKey], max_tokens: u64, at: u64) -> u64 {
+        self.peek_tiered(keys, max_tokens, at).total()
+    }
+
+    /// Like [`PrefixIndex::peek`] but split by residency tier, so callers
+    /// can price SRAM hits and promotion-priced HBM hits differently.
+    pub fn peek_tiered(&self, keys: &[BlockKey], max_tokens: u64, at: u64) -> TierMatch {
         let mut parent = NO_NODE;
-        let mut tokens = 0u64;
+        let mut m = TierMatch::default();
         for &key in keys {
             let Some(ix) = self.child(parent, key) else { break };
             if self.nodes[ix as usize].ready_at > at {
                 break;
             }
-            if tokens + key.tokens > max_tokens {
+            if m.total() + key.tokens > max_tokens {
                 break;
             }
-            tokens += key.tokens;
+            match self.nodes[ix as usize].tier {
+                Tier::Sram => m.sram_tokens += key.tokens,
+                Tier::Hbm => m.hbm_tokens += key.tokens,
+            }
             parent = ix;
         }
-        tokens
+        m
     }
 
     /// Register `block` as the child of `parent` for `key`, usable by
@@ -169,8 +253,10 @@ impl PrefixIndex {
             tokens: key.tokens,
             last_use: now,
             n_children: 0,
+            n_sram_children: 0,
             live: true,
             ready_at,
+            tier: Tier::Sram,
         };
         let ix = match self.free_slots.pop() {
             Some(slot) => {
@@ -185,6 +271,7 @@ impl PrefixIndex {
         self.children.insert((parent, key.hash), ix);
         if parent != NO_NODE {
             self.nodes[parent as usize].n_children += 1;
+            self.nodes[parent as usize].n_sram_children += 1;
         }
         ix
     }
@@ -199,19 +286,101 @@ impl PrefixIndex {
         }
     }
 
-    /// Evict the least-recently-used leaf whose block `can_evict` (i.e. is
-    /// referenced by nobody but the index). Returns the evicted block so
-    /// the caller can drop the index's reference. Deterministic: ties on
-    /// `last_use` break on node id.
+    /// Evict the least-recently-used SRAM-resident leaf whose block
+    /// `can_evict` (i.e. is referenced by nobody but the index). Returns
+    /// the evicted block so the caller can drop the index's reference.
+    /// Deterministic: ties on `last_use` break on node id.
     pub fn evict_lru(&mut self, can_evict: impl Fn(u32) -> bool) -> Option<u32> {
         let victim = self
             .nodes
             .iter()
             .enumerate()
-            .filter(|(_, n)| n.live && n.n_children == 0 && can_evict(n.block))
+            .filter(|(_, n)| {
+                n.live && n.tier == Tier::Sram && n.n_children == 0 && can_evict(n.block)
+            })
             .min_by_key(|(ix, n)| (n.last_use, *ix))
             .map(|(ix, _)| ix as u32)?;
         Some(self.remove(victim))
+    }
+
+    /// Demote the least-recently-used SRAM-resident node whose block
+    /// `can_evict` to the HBM tier: the node stays in the trie (and stays
+    /// matchable, at promotion cost) but releases its SRAM block, which is
+    /// returned as `(node, block)` for the caller to free. Demotion
+    /// proceeds leaf-upward: only nodes with no SRAM-resident children
+    /// qualify (a node whose children are all demoted counts), so demoted
+    /// subtrees are always Hbm-closed downward and the overflow drop loop
+    /// can drain them leaf by leaf. Interior nodes still become demotable
+    /// once their subtree has demoted — demotion never deadlocks SRAM
+    /// reclamation and never breaks the trie structure.
+    pub fn demote_lru(&mut self, can_evict: impl Fn(u32) -> bool) -> Option<(u32, u32)> {
+        let victim = self
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| {
+                n.live && n.tier == Tier::Sram && n.n_sram_children == 0 && can_evict(n.block)
+            })
+            .min_by_key(|(ix, n)| (n.last_use, *ix))
+            .map(|(ix, _)| ix as u32)?;
+        let block = self.nodes[victim as usize].block;
+        let parent = self.nodes[victim as usize].parent;
+        self.nodes[victim as usize].tier = Tier::Hbm;
+        if parent != NO_NODE {
+            self.nodes[parent as usize].n_sram_children -= 1;
+        }
+        Some((victim, block))
+    }
+
+    /// Re-materialise a demoted node in SRAM: assign it the freshly
+    /// allocated `block` (whose single reference now belongs to the index)
+    /// and move it back to the fast tier.
+    pub fn promote(&mut self, node: u32, block: u32) {
+        let parent = self.nodes[node as usize].parent;
+        let n = &mut self.nodes[node as usize];
+        debug_assert!(n.live && n.tier == Tier::Hbm, "promote of node {node}");
+        n.block = block;
+        n.tier = Tier::Sram;
+        if parent != NO_NODE {
+            self.nodes[parent as usize].n_sram_children += 1;
+        }
+    }
+
+    /// Drop the least-recently-used HBM-tier leaf from the trie entirely
+    /// (true eviction — the HBM tier overflowed). Returns the dropped
+    /// node's token count for capacity accounting.
+    pub fn drop_lru_hbm(&mut self) -> Option<u64> {
+        let victim = self
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| n.live && n.tier == Tier::Hbm && n.n_children == 0)
+            .min_by_key(|(ix, n)| (n.last_use, *ix))
+            .map(|(ix, _)| ix as u32)?;
+        let tokens = self.nodes[victim as usize].tokens;
+        self.remove(victim);
+        Some(tokens)
+    }
+
+    /// Is `node` still a live trie entry? (A concurrent demotion chain can
+    /// drop an HBM leaf between a lookup and its promotion.)
+    pub fn is_live(&self, node: u32) -> bool {
+        self.nodes[node as usize].live
+    }
+
+    /// Current residency tier of a live node.
+    pub fn tier_of(&self, node: u32) -> Tier {
+        self.nodes[node as usize].tier
+    }
+
+    /// SRAM block of a live [`Tier::Sram`] node.
+    pub fn block_of(&self, node: u32) -> u32 {
+        self.nodes[node as usize].block
+    }
+
+    /// Token count of a live node.
+    pub fn tokens_of(&self, node: u32) -> u64 {
+        self.nodes[node as usize].tokens
     }
 
     /// Remove one leaf node, returning its block.
@@ -221,6 +390,9 @@ impl PrefixIndex {
         self.children.remove(&(n.parent, n.hash));
         if n.parent != NO_NODE {
             self.nodes[n.parent as usize].n_children -= 1;
+            if n.tier == Tier::Sram {
+                self.nodes[n.parent as usize].n_sram_children -= 1;
+            }
         }
         self.nodes[ix as usize].live = false;
         self.free_slots.push(ix);
@@ -326,6 +498,79 @@ mod tests {
         ix.insert(a, key(2), 11, 0);
         // Block 10 backs an interior node: only 11 is evictable.
         assert_eq!(ix.evict_lru(|_| true), Some(11));
+    }
+
+    #[test]
+    fn demotion_keeps_the_node_matchable_and_frees_its_block() {
+        let mut ix = PrefixIndex::new();
+        let a = ix.insert(NO_NODE, key(1), 10, 0);
+        let b = ix.insert(a, key(2), 11, 0);
+        // Leaf-upward: the leaf demotes first even though the root is
+        // colder (an interior node with SRAM children never demotes, so
+        // demoted subtrees stay drainable).
+        assert_eq!(ix.demote_lru(|_| true), Some((b, 11)));
+        assert_eq!(ix.tier_of(b), Tier::Hbm);
+        // Still matches — but split reports the HBM-tier portion.
+        let m = ix.peek_tiered(&[key(1), key(2)], u64::MAX, 0);
+        assert_eq!(m.sram_tokens, 16);
+        assert_eq!(m.hbm_tokens, 16);
+        assert_eq!(m.total(), 32);
+        assert_eq!(ix.peek(&[key(1), key(2)], u64::MAX, 0), 32);
+        // With its subtree demoted, the root becomes demotable too.
+        assert_eq!(ix.demote_lru(|_| true), Some((a, 10)));
+        assert_eq!(
+            ix.peek_tiered(&[key(1), key(2)], u64::MAX, 0).hbm_tokens,
+            32
+        );
+        // Promotion restores the fast tier with fresh blocks (path order,
+        // as admission promotes).
+        ix.promote(a, 42);
+        ix.promote(b, 43);
+        assert_eq!(ix.tier_of(a), Tier::Sram);
+        assert_eq!(ix.block_of(a), 42);
+        assert_eq!(ix.block_of(b), 43);
+        assert_eq!(
+            ix.peek_tiered(&[key(1), key(2)], u64::MAX, 0).hbm_tokens,
+            0
+        );
+    }
+
+    #[test]
+    fn demoted_nodes_are_invisible_to_sram_eviction() {
+        let mut ix = PrefixIndex::new();
+        let a = ix.insert(NO_NODE, key(1), 10, 0);
+        assert_eq!(ix.demote_lru(|_| true), Some((a, 10)));
+        // evict_lru must not return the stale block of an HBM node.
+        assert_eq!(ix.evict_lru(|_| true), None);
+        assert_eq!(ix.demote_lru(|_| true), None);
+        // The HBM drop path reclaims it instead.
+        assert_eq!(ix.drop_lru_hbm(), Some(16));
+        assert_eq!(ix.n_cached(), 0);
+        assert!(!ix.is_live(a));
+    }
+
+    #[test]
+    fn hbm_drop_respects_leaves_and_lru_order() {
+        let mut ix = PrefixIndex::new();
+        let a = ix.insert(NO_NODE, key(1), 10, 0);
+        let b = ix.insert(a, key(2), 11, 0);
+        ix.demote_lru(|_| true); // b (leaf-upward)
+        ix.demote_lru(|_| true); // a
+        // a is interior: only the leaf b may drop first.
+        assert_eq!(ix.drop_lru_hbm(), Some(16));
+        assert!(!ix.is_live(b));
+        assert!(ix.is_live(a));
+        assert_eq!(ix.drop_lru_hbm(), Some(16));
+        assert_eq!(ix.drop_lru_hbm(), None);
+    }
+
+    #[test]
+    fn keys_prefix_truncates_on_block_boundaries() {
+        let ks = [key(1), key(2), BlockKey { hash: 3, tokens: 5 }];
+        assert_eq!(keys_prefix(&ks, 37).len(), 3);
+        assert_eq!(keys_prefix(&ks, 36).len(), 2);
+        assert_eq!(keys_prefix(&ks, 31).len(), 1);
+        assert_eq!(keys_prefix(&ks, 0).len(), 0);
     }
 
     #[test]

@@ -11,8 +11,10 @@
 //! - [`RouterPolicy::LeastLoaded`] — minimises `(pending requests, KV
 //!   occupancy)` at admission.
 //! - [`RouterPolicy::PrefixAware`] — probes every chip's prefix index
-//!   (read-only, in-flight-aware) and routes to the chip holding the
-//!   longest cached-and-ready prefix of the prompt; falls back to
+//!   (read-only, in-flight-aware, **tier-split**: an SRAM-resident hit
+//!   outranks an equal-length HBM-demoted one, which pays a re-promotion
+//!   stream) and routes to the chip holding the best cached-and-ready
+//!   prefix of the prompt; falls back to
 //!   least-loaded on a miss. When the holder chip is overloaded (pending
 //!   work exceeds the lightest chip's by the configured migration gap,
 //!   `ClusterConfig::migrate_load_gap`), it routes to the lightest chip and
@@ -26,7 +28,7 @@
 //! and rolls per-chip [`Metrics`] up into a cluster aggregate.
 
 use crate::config::{ChipConfig, ModelConfig, WorkloadConfig};
-use crate::memmgr::prefix::BlockKey;
+use crate::memmgr::prefix::{keys_prefix, BlockKey, TierMatch};
 use crate::memmgr::KV_BLOCK_TOKENS;
 use crate::serving::metrics::{CacheStats, Metrics};
 use crate::serving::request::{self, Request};
@@ -91,14 +93,30 @@ pub struct ChipView {
     /// (integer so routing comparisons are exact and deterministic).
     pub kv_occupancy_milli: u64,
     /// Longest cached-and-ready prefix (tokens) the chip could share with
-    /// this request (0 when the prompt has no shareable prefix, the chip
-    /// holds none of it, or its prefill is still in flight).
+    /// this request, across both cache tiers (0 when the prompt has no
+    /// shareable prefix, the chip holds none of it, or its prefill is
+    /// still in flight).
     pub prefix_match: u64,
+    /// The SRAM-resident portion of `prefix_match` — the two-tier hit
+    /// quality signal: a fast-tier match shares for free, an HBM-demoted
+    /// one pays a re-promotion stream first.
+    pub prefix_sram: u64,
 }
 
 impl ChipView {
     fn load_key(&self) -> (usize, u64) {
         (self.pending_work, self.kv_occupancy_milli)
+    }
+
+    /// Tier-weighted match score, the prefix router's ranking key —
+    /// delegated to [`TierMatch::score`] so the weighting cannot drift
+    /// from the in-chip pipe-affinity scoring.
+    fn match_score(&self) -> u64 {
+        TierMatch {
+            sram_tokens: self.prefix_sram,
+            hbm_tokens: self.prefix_match.saturating_sub(self.prefix_sram),
+        }
+        .score()
     }
 }
 
@@ -189,13 +207,14 @@ impl Router for PrefixAwareRouter {
 
     fn route(&mut self, _req: &Request, views: &[ChipView]) -> RouteDecision {
         let lightest = least_loaded(views);
-        // Longest ready match wins; ties go to the less loaded holder,
-        // then to the lower chip index (deterministic).
+        // Best tier-weighted match wins (an SRAM-resident hit outranks an
+        // equal-length HBM-demoted one); ties go to the less loaded
+        // holder, then to the lower chip index (deterministic).
         let holder = views
             .iter()
             .enumerate()
             .filter(|(_, v)| v.prefix_match > 0)
-            .min_by_key(|(i, v)| (std::cmp::Reverse(v.prefix_match), v.load_key(), *i))
+            .min_by_key(|(i, v)| (std::cmp::Reverse(v.match_score()), v.load_key(), *i))
             .map(|(i, _)| i);
         match holder {
             None => RouteDecision {
@@ -285,20 +304,6 @@ impl ClusterMetrics {
         }
         out
     }
-}
-
-/// The `keys` prefix covering exactly the first `tokens` matched tokens.
-fn keys_prefix(keys: &[BlockKey], tokens: u64) -> Vec<BlockKey> {
-    let mut out = Vec::new();
-    let mut cum = 0u64;
-    for &k in keys {
-        if cum + k.tokens > tokens {
-            break;
-        }
-        cum += k.tokens;
-        out.push(k);
-    }
-    out
 }
 
 /// A migrated request waiting for its KV to land on the target chip.
@@ -413,14 +418,18 @@ pub fn simulate_cluster_mixed(
             let views: Vec<ChipView> = scheds
                 .iter()
                 .enumerate()
-                .map(|(i, s)| ChipView {
-                    pending_work: s.pending_work() + transit_load[i],
-                    kv_occupancy_milli: (s.kv_utilization() * 1000.0).round() as u64,
-                    prefix_match: if probe {
-                        s.probe_prefix(&keys, limit, now)
+                .map(|(i, s)| {
+                    let hit = if probe {
+                        s.probe_prefix_tiered(&keys, limit, now)
                     } else {
-                        0
-                    },
+                        TierMatch::default()
+                    };
+                    ChipView {
+                        pending_work: s.pending_work() + transit_load[i],
+                        kv_occupancy_milli: (s.kv_utilization() * 1000.0).round() as u64,
+                        prefix_match: hit.total(),
+                        prefix_sram: hit.sram_tokens,
+                    }
                 })
                 .collect();
             let d = router.route(&req, &views);
@@ -468,7 +477,7 @@ pub fn simulate_cluster_mixed(
                 }
                 _ => {
                     routed[d.chip] += 1;
-                    scheds[d.chip].enqueue(req);
+                    scheds[d.chip].enqueue(&mut chips[d.chip], req);
                 }
             }
         } else if tra_t <= act_t {
@@ -480,7 +489,7 @@ pub fn simulate_cluster_mixed(
             let t = transit.swap_remove(k);
             let ready = secs_to_cycles(t.req.arrival_s, freq).min(t.landing);
             scheds[t.dst].import_prefix(&t.keys, ready);
-            scheds[t.dst].enqueue(t.req);
+            scheds[t.dst].enqueue(&mut chips[t.dst], t.req);
         } else {
             let (_, i) = act.expect("act_t finite");
             done += scheds[i].step(&mut chips[i], model, &mut per_chip[i])?;
@@ -520,6 +529,7 @@ mod tests {
                 pending_work,
                 kv_occupancy_milli: 0,
                 prefix_match: 0,
+                prefix_sram: 0,
             })
             .collect()
     }
@@ -579,6 +589,23 @@ mod tests {
         assert_eq!(d.migrate_from, None);
         // No match anywhere: least-loaded fallback.
         assert_eq!(r.route(&req(), &views(&[4, 1, 2])).chip, 1);
+    }
+
+    #[test]
+    fn prefix_router_prefers_fast_tier_matches_at_equal_length() {
+        // Two chips hold the same-length match, but chip 2's is entirely
+        // SRAM-resident while chip 1's is HBM-demoted: the router must
+        // pick the hit that shares for free over the one that pays a
+        // promotion stream.
+        let mut r = RouterPolicy::PrefixAware.build(8);
+        let mut v = views(&[1, 1, 1]);
+        v[1].prefix_match = 512; // all demoted (prefix_sram 0)
+        v[2].prefix_match = 512;
+        v[2].prefix_sram = 512;
+        assert_eq!(r.route(&req(), &v).chip, 2);
+        // Length still dominates tier quality.
+        v[1].prefix_match = 2048;
+        assert_eq!(r.route(&req(), &v).chip, 1);
     }
 
     #[test]

@@ -48,7 +48,11 @@ impl RequestRecord {
 /// when both features are off).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CacheStats {
-    /// Admissions that consulted the prefix cache.
+    /// Admissions that consulted the prefix cache with a non-empty set of
+    /// shareable-prefix keys — the hit-rate denominator. Requests with
+    /// nothing shareable (and admissions on cache-disabled workers, e.g.
+    /// the prefix-off chips of a mixed cluster) are excluded, so the rate
+    /// measures how often a consultable prompt actually hit.
     pub prefix_lookups: u64,
     /// Admissions that matched a non-empty cached prefix.
     pub prefix_hits: u64,
@@ -62,8 +66,19 @@ pub struct CacheStats {
     pub cow_copies: u64,
     /// Cached prefix blocks reclaimed by LRU eviction (summed).
     pub prefix_evictions: u64,
-    /// Operator-latency memo hits / misses (summed over workers).
+    /// Cold prefix blocks demoted SRAM→HBM instead of dropped (summed).
+    pub tier_demotions: u64,
+    /// Demoted prefix blocks re-promoted to SRAM on a hit (summed).
+    pub tier_promotions: u64,
+    /// Demoted blocks dropped for real when the HBM tier overflowed.
+    pub tier_dropped: u64,
+    /// Cross-pipe prefix imports streamed over the on-chip NoC.
+    pub noc_prefix_imports: u64,
+    /// Prompt tokens whose cached KV was imported from a sibling pipe.
+    pub noc_prefix_tokens: u64,
+    /// Operator-latency memo hits (summed over workers).
     pub memo_hits: u64,
+    /// Operator-latency memo misses (summed over workers).
     pub memo_misses: u64,
 }
 
@@ -92,6 +107,8 @@ impl CacheStats {
         self.memo_hits as f64 / total as f64
     }
 
+    /// Fold another run's counters into this one (cluster rollups, worker
+    /// sweeps).
     pub fn merge(&mut self, o: &CacheStats) {
         self.prefix_lookups += o.prefix_lookups;
         self.prefix_hits += o.prefix_hits;
@@ -100,6 +117,11 @@ impl CacheStats {
         self.kv_bytes_deduped += o.kv_bytes_deduped;
         self.cow_copies += o.cow_copies;
         self.prefix_evictions += o.prefix_evictions;
+        self.tier_demotions += o.tier_demotions;
+        self.tier_promotions += o.tier_promotions;
+        self.tier_dropped += o.tier_dropped;
+        self.noc_prefix_imports += o.noc_prefix_imports;
+        self.noc_prefix_tokens += o.noc_prefix_tokens;
         self.memo_hits += o.memo_hits;
         self.memo_misses += o.memo_misses;
     }
@@ -128,14 +150,19 @@ impl Metrics {
         self.records.push(r);
     }
 
-    /// Rewrite one record's arrival to an earlier cycle. The cluster
-    /// driver admits a migrated request at its KV-landing instant but its
+    /// Rewrite one record's arrival to an earlier cycle, returning whether
+    /// the record exists yet. The cluster driver (and the cross-pipe NoC
+    /// import) admit a migrated request at its KV-landing instant but its
     /// TTFT must count from the true frontend arrival — this restores it
-    /// after the run (keeps the earlier of the two, preserving the
+    /// after completion (keeps the earlier of the two, preserving the
     /// `first_token >= arrival` invariant).
-    pub fn rebase_arrival(&mut self, id: u64, arrival: Cycle) {
-        if let Some(r) = self.records.iter_mut().find(|r| r.id == id) {
-            r.arrival = r.arrival.min(arrival);
+    pub fn rebase_arrival(&mut self, id: u64, arrival: Cycle) -> bool {
+        match self.records.iter_mut().find(|r| r.id == id) {
+            Some(r) => {
+                r.arrival = r.arrival.min(arrival);
+                true
+            }
+            None => false,
         }
     }
 
@@ -297,6 +324,11 @@ mod tests {
             kv_bytes_deduped: 4096,
             cow_copies: 2,
             prefix_evictions: 1,
+            tier_demotions: 5,
+            tier_promotions: 3,
+            tier_dropped: 1,
+            noc_prefix_imports: 2,
+            noc_prefix_tokens: 256,
             memo_hits: 30,
             memo_misses: 10,
         };
@@ -308,6 +340,9 @@ mod tests {
         assert_eq!(a.prefix_lookups, 16);
         assert_eq!(a.kv_bytes_deduped, 8192);
         assert_eq!(a.memo_hits, 60);
+        assert_eq!(a.tier_demotions, 10);
+        assert_eq!(a.tier_promotions, 6);
+        assert_eq!(a.noc_prefix_tokens, 512);
         // Rates are scale-invariant under self-merge.
         assert!((a.prefix_hit_rate() - 0.75).abs() < 1e-9);
     }

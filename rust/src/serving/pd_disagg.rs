@@ -45,6 +45,15 @@ pub struct DisaggConfig {
     /// Prefix-sharing KV caching on the prefill pipelines (off = legacy
     /// bit-exact behaviour).
     pub prefix_cache: bool,
+    /// Two-tier prefix cache on the prefill pipelines: cold prefix blocks
+    /// demote to a bounded HBM region and re-promote on a hit at charged
+    /// HBM→SRAM cost (requires `prefix_cache`).
+    pub hbm_tier: bool,
+    /// Cache-affinity prompt pull: a queued prompt is pulled by the
+    /// prefill pipeline holding its longest cached-and-ready prefix
+    /// (ties → earliest available) instead of by whichever pipeline frees
+    /// first (requires `prefix_cache`).
+    pub cross_pipe: bool,
     /// Operator-latency memoization (approximate fast path, off by
     /// default).
     pub memo: bool,
@@ -66,6 +75,8 @@ impl DisaggConfig {
             max_decode_batch: 32,
             kv_share: 0.6,
             prefix_cache: false,
+            hbm_tier: false,
+            cross_pipe: false,
             memo: false,
         }
     }

@@ -41,6 +41,23 @@ pub struct FusionConfig {
     /// prompt prefix and skip those prefill chunks (off = legacy bit-exact
     /// behaviour).
     pub prefix_cache: bool,
+    /// Two-tier prefix cache: SRAM pressure demotes cold prefix blocks to
+    /// a bounded HBM region instead of dropping them; hits on demoted
+    /// blocks re-promote at charged HBM→SRAM cost. Requires
+    /// `prefix_cache`; off = single-tier bit-exact behaviour.
+    pub hbm_tier: bool,
+    /// Cross-pipe prefix sharing: `enqueue` becomes cache-affinity-aware
+    /// (requests score pipes by probed prefix overlap minus load gap
+    /// instead of round-robin), and when the holding pipe is overloaded
+    /// the matched KV is imported to a lighter pipe over the on-chip NoC
+    /// (charged, delayed-landing) instead of recomputed. Requires
+    /// `prefix_cache`; off = static round-robin bit-exact behaviour.
+    pub cross_pipe: bool,
+    /// Pending-work excess over the lightest pipe above which the
+    /// cache-affinity router imports the matched KV to the lightest pipe
+    /// instead of queueing on the holder (the affinity weight knob; only
+    /// read with `cross_pipe`).
+    pub affinity_gap: usize,
     /// Operator-latency memoization (approximate fast path, off by
     /// default — see [`crate::model::memo`]).
     pub memo: bool,
@@ -60,6 +77,9 @@ impl Default for FusionConfig {
             max_batch: 32,
             kv_share: 0.6,
             prefix_cache: false,
+            hbm_tier: false,
+            cross_pipe: false,
+            affinity_gap: 4,
             memo: false,
         }
     }

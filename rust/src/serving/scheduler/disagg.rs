@@ -6,7 +6,8 @@
 use super::pipe;
 use super::Scheduler;
 use crate::config::ModelConfig;
-use crate::memmgr::prefix::BlockKey;
+use crate::memmgr::prefix::{BlockKey, TierMatch};
+use crate::memmgr::KV_BLOCK_TOKENS;
 use crate::model::{BatchItem, IterBatch};
 use crate::parallel::pd_placement::{assign, PdAssignment};
 use crate::serving::metrics::{Metrics, RequestRecord};
@@ -55,6 +56,13 @@ impl DecodeGroup {
     }
 }
 
+/// Upper bound on how long the cache-affinity pull may delay a prompt past
+/// the earliest-available prefill pipeline, per matched token (the order
+/// of the per-token prefill work a hit replaces): waiting on a busy holder
+/// longer than the recompute it saves can only lose, so beyond this the
+/// pull falls back to earliest-available.
+const AFFINITY_WAIT_CYCLES_PER_TOKEN: Cycle = 512;
+
 /// The disaggregated scheduler: prompts queue globally, prefill pipelines
 /// pull whole prompts, decode groups continuously batch transferred
 /// requests.
@@ -79,17 +87,62 @@ impl DisaggScheduler {
     /// `(group, cycle)` — one selection rule shared by `step` (which acts
     /// on it) and `next_action` (which only reports it), so the two can
     /// never disagree about what is actionable.
+    ///
+    /// With `cross_pipe` the prefill pull is **cache-affinity-aware**: the
+    /// front prompt goes to the pipeline holding its best cached-and-ready
+    /// prefix (tier-weighted score; ties → earliest available, then lower
+    /// index) instead of whichever pipeline frees first, so a correctly
+    /// routed request no longer lands on a non-caching pipeline.
     fn actions(&self, chip: &ChipSim) -> (Option<(usize, Cycle)>, Option<(usize, Cycle)>) {
         let freq = chip.cfg.freq_mhz;
         let prefill = if self.queue.is_empty() {
             None
         } else {
-            let arrival = secs_to_cycles(self.queue.front().unwrap().arrival_s, freq);
-            self.pipelines
+            let front = self.queue.front().unwrap();
+            let arrival = secs_to_cycles(front.arrival_s, freq);
+            let cands: Vec<(usize, Cycle)> = self
+                .pipelines
                 .iter()
                 .enumerate()
                 .map(|(i, p)| (i, p[0].now(chip).max(arrival)))
-                .min_by_key(|&(_, t)| t)
+                .collect();
+            let t_min = cands.iter().map(|&(_, t)| t).min().unwrap_or(0);
+            // Probing here (rather than only at pull time) keeps `step`
+            // and `next_action` agreeing on the chosen pipeline; the walk
+            // is O(pipelines × stages × prefix blocks) of pure trie
+            // probes, small next to one simulated iteration.
+            let affinity = if self.cfg.cross_pipe && self.cfg.prefix_cache {
+                let keys = front.block_keys(KV_BLOCK_TOKENS);
+                let limit = (front.input_len as u64).saturating_sub(1);
+                if keys.is_empty() {
+                    None
+                } else {
+                    cands
+                        .iter()
+                        .map(|&(i, t)| {
+                            let m = self.pipelines[i]
+                                .iter()
+                                .map(|s| s.peek_prefix_tiered(&keys, limit, t))
+                                .min_by_key(|m| (m.total(), m.sram_tokens))
+                                .unwrap_or_default();
+                            (i, t, m)
+                        })
+                        // A holder only wins while the extra wait stays
+                        // under what recomputing the match would cost —
+                        // unbounded waiting would starve the prompt behind
+                        // one popular pipeline.
+                        .filter(|&(_, t, m)| {
+                            m.total() > 0
+                                && t <= t_min
+                                    .saturating_add(m.total() * AFFINITY_WAIT_CYCLES_PER_TOKEN)
+                        })
+                        .min_by_key(|&(i, t, m)| (std::cmp::Reverse(m.score()), t, i))
+                        .map(|(i, t, _)| (i, t))
+                }
+            } else {
+                None
+            };
+            affinity.or_else(|| cands.into_iter().min_by_key(|&(_, t)| t))
         };
         let decode = self
             .groups
@@ -166,6 +219,7 @@ impl Scheduler for DisaggScheduler {
                             max_tokens,
                         )
                         .with_prefix_cache(cfg.prefix_cache)
+                        .with_hbm_tier(cfg.prefix_cache && cfg.hbm_tier)
                         .with_memo(cfg.memo)
                     })
                     .collect()
@@ -196,7 +250,10 @@ impl Scheduler for DisaggScheduler {
         Ok(())
     }
 
-    fn enqueue(&mut self, req: Request) {
+    fn enqueue(&mut self, chip: &mut ChipSim, req: Request) {
+        // Prompts queue globally; the cache-affinity decision (which
+        // pipeline pulls the prompt) happens at pull time in `actions`.
+        let _ = chip;
         self.queue.push_back(req);
     }
 
@@ -283,6 +340,19 @@ impl Scheduler for DisaggScheduler {
             .unwrap_or(0)
     }
 
+    fn probe_prefix_tiered(&self, keys: &[BlockKey], limit: u64, at: Cycle) -> TierMatch {
+        self.pipelines
+            .iter()
+            .map(|p| {
+                p.iter()
+                    .map(|s| s.peek_prefix_tiered(keys, limit, at))
+                    .min_by_key(|m| (m.total(), m.sram_tokens))
+                    .unwrap_or_default()
+            })
+            .max_by_key(|m| (m.score(), m.total()))
+            .unwrap_or_default()
+    }
+
     fn import_prefix(&mut self, keys: &[BlockKey], ready_at: Cycle) {
         // Prompts are pulled by whichever prefill pipeline frees first, so
         // a migrated copy must be visible to all of them.
@@ -326,7 +396,7 @@ fn run_prefill(
 
     let mut matched = 0u64;
     if prefix_cache {
-        matched = pipe::admit_with_prefix(pipeline, &r, model, metrics, now);
+        matched = pipe::admit_with_prefix(chip, pipeline, &r, model, metrics, now);
     } else {
         for s in pipeline.iter_mut() {
             s.admit(r.id);

@@ -1,40 +1,195 @@
 //! PD fusion behind the [`Scheduler`] trait: every pipeline co-locates
 //! chunked prefill and decode under a per-iteration token budget
 //! (§4.3.2). The policy logic lives in [`super::pipe`]; this type owns the
-//! pipeline set, static request assignment, and earliest-actionable-pipe
+//! pipeline set, request-to-pipe assignment, and earliest-actionable-pipe
 //! selection.
+//!
+//! Request assignment is static round-robin by default. With
+//! `FusionConfig::cross_pipe` (and the prefix cache on) it becomes
+//! **cache-affinity-aware**: [`Scheduler::enqueue`] scores pipes by probed
+//! tier-weighted prefix overlap against load (`pipe::route_request`) and,
+//! when the holding pipe is overloaded, imports the matched KV to a
+//! lighter pipe over the on-chip NoC (`pipe::stream_prefix_over_noc`) —
+//! charged and delayed-landing, deduplicated against imports already in
+//! flight — instead of recomputing the prefill.
 
 use super::pipe::{self, Pipe};
 use super::Scheduler;
 use crate::config::ModelConfig;
-use crate::memmgr::prefix::BlockKey;
-use crate::serving::metrics::Metrics;
+use crate::memmgr::prefix::{keys_prefix, BlockKey, TierMatch};
+use crate::memmgr::KV_BLOCK_TOKENS;
+use crate::serving::metrics::{CacheStats, Metrics};
 use crate::serving::pd_fusion::FusionConfig;
 use crate::serving::request::Request;
 use crate::sim::chip::ChipSim;
-use crate::util::units::Cycle;
+use crate::util::units::{cycles_to_secs, secs_to_cycles, Cycle};
 
-/// The fused scheduler: N identical pipelines, requests statically
-/// round-robined across them, decode-first budget batching within each.
+/// The cross-pipe affinity bookkeeping shared by the fusion and hybrid
+/// schedulers: NoC-import sizing, in-flight-transfer dedup, deferred
+/// arrivals to restore, and the import counters — one struct so the two
+/// policies cannot drift.
+#[derive(Debug, Default)]
+pub(crate) struct AffinityState {
+    /// Whole-model KV bytes per token (NoC import sizing), set by
+    /// [`Scheduler::prepare`].
+    kv_bytes_per_token: u64,
+    /// `(request id, true arrival cycle)` of NoC-imported requests whose
+    /// admission was deferred to the KV landing; their recorded arrivals
+    /// are restored after completion so TTFT charges the transfer wait.
+    rebase: Vec<(u64, Cycle)>,
+    /// In-flight imports as `(first matched key, dst pipe, landing)`:
+    /// co-arriving requests sharing one prefix piggyback on the transfer
+    /// already in the air instead of paying a duplicate copy of the same
+    /// bytes (the pipe-level twin of the cluster driver's transit dedup).
+    inflight: Vec<(BlockKey, usize, Cycle)>,
+    noc_imports: u64,
+    noc_import_tokens: u64,
+}
+
+impl AffinityState {
+    /// Reset for a fresh [`Scheduler::prepare`].
+    pub(crate) fn reset(&mut self, kv_bytes_per_token: u64) {
+        self.kv_bytes_per_token = kv_bytes_per_token;
+        self.rebase.clear();
+        self.inflight.clear();
+        self.noc_imports = 0;
+        self.noc_import_tokens = 0;
+    }
+
+    /// Cross-pipe prefix imports performed so far (observability).
+    pub(crate) fn noc_imports(&self) -> u64 {
+        self.noc_imports
+    }
+
+    /// Shared fusion/hybrid enqueue: static round-robin via `next_pipe`,
+    /// or — with `cross_pipe` on a multi-pipe layout — cache-affinity
+    /// routing with a charged, delayed-landing NoC import off overloaded
+    /// holders (deduplicated against imports already in flight).
+    pub(crate) fn enqueue(
+        &mut self,
+        chip: &mut ChipSim,
+        pipes: &mut [Pipe],
+        cfg: &FusionConfig,
+        next_pipe: &mut usize,
+        req: Request,
+    ) {
+        let n = pipes.len();
+        if !(cfg.prefix_cache && cfg.cross_pipe && n > 1) {
+            pipes[*next_pipe % n].queue.push_back(req);
+            *next_pipe = (*next_pipe + 1) % n;
+            return;
+        }
+        let freq = chip.cfg.freq_mhz;
+        let at = secs_to_cycles(req.arrival_s, freq);
+        // Landed imports are visible to the probes from here on; only the
+        // still-in-transit ones are piggyback targets.
+        self.inflight.retain(|&(_, _, landing)| landing > at);
+        let keys = req.block_keys(KV_BLOCK_TOKENS);
+        let limit = (req.input_len as u64).saturating_sub(1);
+        let route = pipe::route_request(pipes, &keys, limit, at, cfg.affinity_gap);
+        match route.import_from {
+            Some(src) if src != route.pipe && route.match_tokens > 0 => {
+                // An import of this prefix may already be in the air
+                // (co-arriving turns of one conversation while the holder
+                // stays overloaded): ride it instead of paying a
+                // duplicate transfer of the same bytes.
+                let dup = keys.first().and_then(|k0| {
+                    self.inflight
+                        .iter()
+                        .find(|e| e.0 == *k0)
+                        .map(|e| (e.1, e.2))
+                });
+                let (dst, landing) = match dup {
+                    Some(hit) => hit,
+                    None => {
+                        let landing = pipe::stream_prefix_over_noc(
+                            chip,
+                            pipes,
+                            src,
+                            route.pipe,
+                            route.match_tokens,
+                            self.kv_bytes_per_token,
+                            at,
+                        );
+                        self.noc_imports += 1;
+                        self.noc_import_tokens += route.match_tokens;
+                        if let Some(&k0) = keys.first() {
+                            self.inflight.push((k0, route.pipe, landing));
+                        }
+                        (route.pipe, landing)
+                    }
+                };
+                // Defer the admission to the landing instant so the
+                // request actually matches the imported copy; the true
+                // arrival is restored in the metrics after completion.
+                // Seeding readiness is derived from the (seconds-rounded)
+                // deferred arrival so the float round-trip can never land
+                // the admission one cycle before the seed — the same
+                // guard the cluster driver applies to its transits.
+                let id = req.id;
+                let mut req = req;
+                req.arrival_s = req.arrival_s.max(cycles_to_secs(landing, freq));
+                if dup.is_none() {
+                    let ready = secs_to_cycles(req.arrival_s, freq).min(landing);
+                    pipes[dst].seed_prefix(&keys_prefix(&keys, route.match_tokens), ready);
+                }
+                pipes[dst].queue.push_back(req);
+                self.rebase.push((id, at));
+            }
+            _ => {
+                pipes[route.pipe].queue.push_back(req);
+            }
+        }
+    }
+
+    /// Restore the true arrivals of completed NoC-imported requests
+    /// (their enqueue-time arrival was bumped to the KV landing). Entries
+    /// whose request has not completed yet stay pending.
+    pub(crate) fn on_completions(&mut self, metrics: &mut Metrics) {
+        if !self.rebase.is_empty() {
+            self.rebase
+                .retain(|&(id, arrival)| !metrics.rebase_arrival(id, arrival));
+        }
+    }
+
+    /// Fold the import counters into a run's cache stats.
+    pub(crate) fn collect(&self, out: &mut CacheStats) {
+        out.noc_prefix_imports += self.noc_imports;
+        out.noc_prefix_tokens += self.noc_import_tokens;
+    }
+}
+
+/// The fused scheduler: N identical pipelines, requests assigned by
+/// round-robin (or cache affinity with `cross_pipe`), decode-first budget
+/// batching within each.
 pub struct FusionScheduler {
     cfg: FusionConfig,
     pipes: Vec<Pipe>,
-    /// Round-robin cursor: the pipe the next [`Scheduler::enqueue`] targets.
+    /// Round-robin cursor: the pipe the next [`Scheduler::enqueue`]
+    /// targets while affinity routing is off.
     next_pipe: usize,
+    affinity: AffinityState,
 }
 
 impl FusionScheduler {
+    /// Build an (un-prepared) scheduler for `cfg`.
     pub fn new(cfg: FusionConfig) -> Self {
         FusionScheduler {
             cfg,
             pipes: Vec::new(),
             next_pipe: 0,
+            affinity: AffinityState::default(),
         }
     }
 
     /// Number of data-parallel pipelines after `init`.
     pub fn n_pipelines(&self) -> usize {
         self.pipes.len()
+    }
+
+    /// Cross-pipe prefix imports performed so far (observability).
+    pub fn noc_imports(&self) -> u64 {
+        self.affinity.noc_imports()
     }
 }
 
@@ -51,13 +206,13 @@ impl Scheduler for FusionScheduler {
     ) -> anyhow::Result<()> {
         self.pipes = pipe::build_pipes(chip, model, &self.cfg, max_tokens.max(1))?;
         self.next_pipe = 0;
+        self.affinity.reset(model.kv_bytes_per_token());
         Ok(())
     }
 
-    fn enqueue(&mut self, req: Request) {
-        let n = self.pipes.len();
-        self.pipes[self.next_pipe % n].queue.push_back(req);
-        self.next_pipe = (self.next_pipe + 1) % n;
+    fn enqueue(&mut self, chip: &mut ChipSim, req: Request) {
+        self.affinity
+            .enqueue(chip, &mut self.pipes, &self.cfg, &mut self.next_pipe, req);
     }
 
     fn step(
@@ -76,7 +231,7 @@ impl Scheduler for FusionScheduler {
             .min_by_key(|&(_, t)| t)
             .ok_or_else(|| anyhow::anyhow!("fusion deadlock: no actionable pipeline"))?;
         let mut no_handoffs = Vec::new();
-        Ok(self.pipes[pi].tick(
+        let completions = self.pipes[pi].tick(
             chip,
             model,
             &self.cfg,
@@ -85,7 +240,11 @@ impl Scheduler for FusionScheduler {
             freq,
             false,
             &mut no_handoffs,
-        ))
+        );
+        if completions > 0 {
+            self.affinity.on_completions(metrics);
+        }
+        Ok(completions)
     }
 
     fn next_action(&self, chip: &ChipSim) -> Option<Cycle> {
@@ -104,6 +263,10 @@ impl Scheduler for FusionScheduler {
         pipe::best_prefix_match(&self.pipes, keys, limit, at)
     }
 
+    fn probe_prefix_tiered(&self, keys: &[BlockKey], limit: u64, at: Cycle) -> TierMatch {
+        pipe::best_prefix_match_tiered(&self.pipes, keys, limit, at)
+    }
+
     fn import_prefix(&mut self, keys: &[BlockKey], ready_at: Cycle) {
         pipe::seed_all(&mut self.pipes, keys, ready_at);
     }
@@ -112,13 +275,15 @@ impl Scheduler for FusionScheduler {
         for p in &self.pipes {
             p.collect_cache_stats(out);
         }
+        self.affinity.collect(out);
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{ChipConfig, WorkloadConfig};
+    use crate::config::{ChipConfig, PrefixSharing, WorkloadConfig};
+    use crate::serving::request;
     use crate::serving::scheduler::simulate;
 
     #[test]
@@ -151,5 +316,82 @@ mod tests {
             .expect("layout fits");
         // 8x8 chip, TP=4 (2x2 cells), 4 stages -> 4 data-parallel pipes.
         assert_eq!(sched.n_pipelines(), 4);
+    }
+
+    /// A shared-prefix trace whose conversation turns are spread by think
+    /// time, so turn N's prefix is cached-and-ready when turn N+1 arrives.
+    fn turny_workload(n: usize) -> WorkloadConfig {
+        WorkloadConfig::shared_prefix(n)
+            .with_seed(29)
+            .with_prefix(PrefixSharing {
+                n_groups: n / 2,
+                shared_prefix_len: 512,
+                turns: 2,
+                think_time_s: 1.5,
+            })
+    }
+
+    #[test]
+    fn cross_pipe_affinity_lifts_prefill_tokens_skipped() {
+        // Round-robin admission scatters conversation turns across pipes,
+        // so a turn often lands off the pipe caching its context; affinity
+        // routing (or the NoC import) recovers those hits. Affinity needs
+        // admission-time cache state, so this runs through the streamed
+        // one-chip cluster driver (batch init enqueues against cold
+        // caches, where affinity degrades to least-loaded by design).
+        use crate::serving::cluster::{self, ClusterConfig, RouterPolicy};
+        let model = ModelConfig::qwen3_4b();
+        let reqs = request::generate(&turny_workload(12));
+        let base = FusionConfig {
+            prefix_cache: true,
+            ..FusionConfig::default()
+        };
+        let run = |cfg: FusionConfig| {
+            let ccfg = ClusterConfig::new(
+                ChipConfig::large_core(),
+                1,
+                crate::serving::scheduler::SchedulerConfig::Fusion(cfg),
+                RouterPolicy::RoundRobin,
+            );
+            cluster::simulate_cluster_requests(&ccfg, &model, reqs.clone())
+                .unwrap()
+                .aggregate()
+        };
+        let m_rr = run(base);
+        let m_aff = run(FusionConfig {
+            cross_pipe: true,
+            hbm_tier: true,
+            ..base
+        });
+        assert_eq!(m_aff.n_requests(), m_rr.n_requests());
+        assert!(
+            m_aff.cache.prefill_tokens_skipped > m_rr.cache.prefill_tokens_skipped,
+            "affinity {} !> round-robin {}",
+            m_aff.cache.prefill_tokens_skipped,
+            m_rr.cache.prefill_tokens_skipped
+        );
+        for r in m_aff.records() {
+            assert!(r.first_token >= r.arrival, "{r:?}");
+            assert!(r.finish >= r.first_token, "{r:?}");
+        }
+    }
+
+    #[test]
+    fn cross_pipe_off_keeps_round_robin_assignment() {
+        // The golden guard at the policy level: with the new flags off,
+        // enqueue still round-robins — pipe queues receive exactly the
+        // interleaved request sequence.
+        let mut chip = ChipSim::new(ChipConfig::large_core());
+        let model = ModelConfig::qwen3_4b();
+        let mut sched = FusionScheduler::new(FusionConfig::default());
+        let reqs = request::generate(&WorkloadConfig::fixed_ratio(64, 4, 8));
+        sched.prepare(&mut chip, &model, 128).unwrap();
+        for r in reqs {
+            sched.enqueue(&mut chip, r);
+        }
+        for (i, p) in sched.pipes.iter().enumerate() {
+            let ids: Vec<u64> = p.queue.iter().map(|r| r.id).collect();
+            assert_eq!(ids, vec![i as u64, i as u64 + 4], "pipe {i}");
+        }
     }
 }

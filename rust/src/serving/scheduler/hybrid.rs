@@ -25,10 +25,11 @@
 //! identical to [`FusionScheduler`](super::fusion::FusionScheduler) —
 //! asserted bit-for-bit by the tests below.
 
+use super::fusion::AffinityState;
 use super::pipe::{self, Handoff, PendingDecode, Pipe};
 use super::Scheduler;
 use crate::config::ModelConfig;
-use crate::memmgr::prefix::BlockKey;
+use crate::memmgr::prefix::{BlockKey, TierMatch};
 use crate::serving::metrics::Metrics;
 use crate::serving::pd_fusion::FusionConfig;
 use crate::serving::request::Request;
@@ -87,13 +88,16 @@ pub struct HybridScheduler {
     cfg: HybridConfig,
     pipes: Vec<Pipe>,
     roles: Vec<Role>,
-    /// Round-robin cursor: the pipe the next [`Scheduler::enqueue`] targets.
+    /// Round-robin cursor: the pipe the next [`Scheduler::enqueue`]
+    /// targets while affinity routing is off.
     next_pipe: usize,
     steps: u64,
     last_change: u64,
     up_votes: u32,
     down_votes: u32,
     repartitions: u64,
+    /// Cross-pipe affinity bookkeeping (shared with the fusion policy).
+    affinity: AffinityState,
 }
 
 impl HybridScheduler {
@@ -108,6 +112,7 @@ impl HybridScheduler {
             up_votes: 0,
             down_votes: 0,
             repartitions: 0,
+            affinity: AffinityState::default(),
         }
     }
 
@@ -280,15 +285,22 @@ impl Scheduler for HybridScheduler {
         self.up_votes = 0;
         self.down_votes = 0;
         self.repartitions = 0;
+        self.affinity.reset(model.kv_bytes_per_token());
         Ok(())
     }
 
-    fn enqueue(&mut self, req: Request) {
-        // Same static round-robin assignment as fusion: a dedicated
-        // prefill pipe prefills its own share and hands decode phases off.
-        let n = self.pipes.len();
-        self.pipes[self.next_pipe % n].queue.push_back(req);
-        self.next_pipe = (self.next_pipe + 1) % n;
+    fn enqueue(&mut self, chip: &mut ChipSim, req: Request) {
+        // Same assignment policy as fusion: static round-robin, or
+        // cache-affinity routing with charged NoC imports under
+        // `cross_pipe` (a dedicated prefill pipe still prefills its share
+        // and hands decode phases off).
+        self.affinity.enqueue(
+            chip,
+            &mut self.pipes,
+            &self.cfg.fusion,
+            &mut self.next_pipe,
+            req,
+        );
     }
 
     fn step(
@@ -325,6 +337,9 @@ impl Scheduler for HybridScheduler {
         for h in handoffs {
             self.dispatch_handoff(chip, model, pi, h)?;
         }
+        if completions > 0 {
+            self.affinity.on_completions(metrics);
+        }
         Ok(completions)
     }
 
@@ -344,6 +359,10 @@ impl Scheduler for HybridScheduler {
         pipe::best_prefix_match(&self.pipes, keys, limit, at)
     }
 
+    fn probe_prefix_tiered(&self, keys: &[BlockKey], limit: u64, at: Cycle) -> TierMatch {
+        pipe::best_prefix_match_tiered(&self.pipes, keys, limit, at)
+    }
+
     fn import_prefix(&mut self, keys: &[BlockKey], ready_at: Cycle) {
         pipe::seed_all(&mut self.pipes, keys, ready_at);
     }
@@ -352,6 +371,7 @@ impl Scheduler for HybridScheduler {
         for p in &self.pipes {
             p.collect_cache_stats(out);
         }
+        self.affinity.collect(out);
     }
 }
 

@@ -22,7 +22,7 @@ pub use fusion::FusionScheduler;
 pub use hybrid::{HybridConfig, HybridScheduler};
 
 use crate::config::{ModelConfig, WorkloadConfig};
-use crate::memmgr::prefix::BlockKey;
+use crate::memmgr::prefix::{BlockKey, TierMatch};
 use crate::serving::metrics::Metrics;
 use crate::serving::pd_disagg::DisaggConfig;
 use crate::serving::pd_fusion::FusionConfig;
@@ -62,8 +62,13 @@ pub trait Scheduler {
     ) -> anyhow::Result<()>;
 
     /// Hand one request to the scheduler's admission queues. Must be
-    /// called in arrival order, after [`Scheduler::prepare`].
-    fn enqueue(&mut self, req: Request);
+    /// called in arrival order, after [`Scheduler::prepare`]. The chip is
+    /// passed mutably because cache-affinity-aware policies may act on the
+    /// hardware at admission time (e.g. the fusion/hybrid `cross_pipe`
+    /// path streams a matched prefix between pipes over the NoC when the
+    /// holding pipe is overloaded); policies without such behaviour simply
+    /// ignore it.
+    fn enqueue(&mut self, chip: &mut ChipSim, req: Request);
 
     /// Batch bootstrap: [`Scheduler::prepare`] sized for `reqs`, then
     /// [`Scheduler::enqueue`] each. `reqs` must be sorted by arrival time.
@@ -76,7 +81,7 @@ pub trait Scheduler {
         let max_tokens = reqs.iter().map(|r| r.total_tokens()).max().unwrap_or(1);
         self.prepare(chip, model, max_tokens)?;
         for r in reqs {
-            self.enqueue(r);
+            self.enqueue(chip, r);
         }
         Ok(())
     }
@@ -113,6 +118,17 @@ pub trait Scheduler {
     fn probe_prefix(&self, keys: &[BlockKey], limit: u64, at: Cycle) -> u64 {
         let _ = (keys, limit, at);
         0
+    }
+
+    /// Tier-split [`Scheduler::probe_prefix`]: how much of the best match
+    /// is SRAM-resident versus demoted to the HBM tier (re-promotion
+    /// priced). Routers use the split to rank two-tier hit quality.
+    /// Policies without tiering report their whole match as fast-tier.
+    fn probe_prefix_tiered(&self, keys: &[BlockKey], limit: u64, at: Cycle) -> TierMatch {
+        TierMatch {
+            sram_tokens: self.probe_prefix(keys, limit, at),
+            hbm_tokens: 0,
+        }
     }
 
     /// Seed a migrated prefix copy (cluster KV transfer) into the

@@ -7,9 +7,17 @@
 //! *prefill-only* mode, where freshly prefilled requests are extracted as
 //! [`Handoff`]s (their decode phase runs on a fused pipe after a NoC KV
 //! transfer) instead of decoding locally.
+//!
+//! With `FusionConfig::cross_pipe` the pipe set also shares prefix caches
+//! chip-wide: [`route_request`] scores pipes by probed (tier-weighted)
+//! prefix overlap against load instead of round-robin, and
+//! [`stream_prefix_over_noc`] streams a matched prefix from an overloaded
+//! holder pipe to a lighter one over the on-chip NoC — charged and
+//! delayed-landing, exactly like the cluster layer's inter-chip migration,
+//! so a sibling-pipe hit costs a KV transfer rather than a recompute.
 
 use crate::config::ModelConfig;
-use crate::memmgr::prefix::BlockKey;
+use crate::memmgr::prefix::{BlockKey, TierMatch};
 use crate::model::{BatchItem, IterBatch};
 use crate::serving::layout::PipelineLayout;
 use crate::serving::metrics::{CacheStats, Metrics, RequestRecord};
@@ -109,6 +117,7 @@ pub(crate) fn build_pipes(
                         max_tokens,
                     )
                     .with_prefix_cache(cfg.prefix_cache)
+                    .with_hbm_tier(cfg.prefix_cache && cfg.hbm_tier)
                     .with_memo(cfg.memo)
                 })
                 .collect(),
@@ -126,10 +135,21 @@ pub(crate) fn build_pipes(
 /// across stages so every stage skips the same chunks (SRAM pressure can
 /// differ per stage) — and record the request-level cache metrics. At
 /// least one prompt token always prefills (it produces the first output
-/// token). Returns the matched token count. Shared by the fusion/hybrid
-/// tick and the disagg prefill pipeline so cache accounting cannot
-/// diverge between policies.
+/// token). HBM-demoted matches are re-promoted during admission and their
+/// HBM→SRAM streams charged on the stages; a promotion that fails under
+/// extreme SRAM pressure shortens the committed match (the running
+/// minimum of the per-stage actuals), so no stage skips chunks whose KV
+/// it never stored. The min-rule is safe in the *skip* direction only: a
+/// stage that already committed a longer match before a later stage's
+/// promotion failed keeps its extra shared blocks and re-appends the
+/// re-prefilled tokens, so its residency (and attention pricing) runs
+/// pessimistically high by up to the shortened delta for that request's
+/// lifetime — accepted, since the failure needs SRAM so exhausted that
+/// even demotion found no victim. Returns the matched token count.
+/// Shared by the fusion/hybrid tick and the disagg prefill pipeline so
+/// cache accounting cannot diverge between policies.
 pub(crate) fn admit_with_prefix(
+    chip: &mut ChipSim,
     stages: &mut [StageWorker],
     r: &Request,
     model: &ModelConfig,
@@ -138,19 +158,26 @@ pub(crate) fn admit_with_prefix(
 ) -> u64 {
     let keys = r.block_keys(crate::memmgr::KV_BLOCK_TOKENS);
     let limit = (r.input_len as u64).saturating_sub(1);
-    let matched = stages
+    let mut matched = stages
         .iter()
         .map(|s| s.peek_prefix(&keys, limit, now))
         .min()
         .unwrap_or(0);
     for s in stages.iter_mut() {
-        s.admit_prefixed(r.id, &keys, matched, now);
+        matched = matched.min(s.admit_prefixed(r.id, &keys, matched, now));
+        s.charge_tier_traffic(chip);
     }
-    metrics.cache.prefix_lookups += 1;
-    if matched > 0 {
-        metrics.cache.prefix_hits += 1;
-        metrics.cache.prefill_tokens_skipped += matched;
-        metrics.cache.kv_bytes_deduped += matched * model.kv_bytes_per_token();
+    // Hit-rate denominator scoping: only admissions that actually consult
+    // the index (non-empty shareable-prefix keys) count as lookups, so
+    // unshareable prompts — and, in mixed clusters, whole cache-disabled
+    // chips — cannot dilute the rate.
+    if !keys.is_empty() {
+        metrics.cache.prefix_lookups += 1;
+        if matched > 0 {
+            metrics.cache.prefix_hits += 1;
+            metrics.cache.prefill_tokens_skipped += matched;
+            metrics.cache.kv_bytes_deduped += matched * model.kv_bytes_per_token();
+        }
     }
     metrics.cache.prefill_tokens_total += r.input_len as u64;
     matched
@@ -174,16 +201,136 @@ pub(crate) fn mean_kv_utilization(pipes: &[Pipe]) -> f64 {
     pipes.iter().map(|p| p.kv_utilization()).sum::<f64>() / pipes.len() as f64
 }
 
-/// Best pipe wins: the router cares whether *some* admission could share;
-/// static round-robin admission may still land elsewhere, so this is an
-/// optimistic upper bound (cache-affinity-aware pipe selection is a
-/// ROADMAP follow-up).
+/// Best pipe wins: the router cares whether *some* admission could share.
+/// Under static round-robin admission this is an optimistic upper bound;
+/// with `cross_pipe` on, [`route_request`] actually steers the admission
+/// to (or imports from) the best pipe, making the probe accurate.
 pub(crate) fn best_prefix_match(pipes: &[Pipe], keys: &[BlockKey], limit: u64, at: Cycle) -> u64 {
     pipes
         .iter()
         .map(|p| p.probe_prefix(keys, limit, at))
         .max()
         .unwrap_or(0)
+}
+
+/// Tier-split variant of [`best_prefix_match`]: the best pipe's match by
+/// affinity score (fast-tier tokens weigh double), ties by total then by
+/// pipe order — the cluster router's two-tier hit-quality probe.
+pub(crate) fn best_prefix_match_tiered(
+    pipes: &[Pipe],
+    keys: &[BlockKey],
+    limit: u64,
+    at: Cycle,
+) -> TierMatch {
+    pipes
+        .iter()
+        .map(|p| p.probe_prefix_tiered(keys, limit, at))
+        .max_by_key(|m| (m.score(), m.total()))
+        .unwrap_or_default()
+}
+
+/// Where a cache-affinity-routed request goes, and whether its matched
+/// prefix KV is imported from a sibling pipe first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) struct PipeRoute {
+    /// Destination pipe of the admission.
+    pub pipe: usize,
+    /// `Some(holder)`: stream the matched prefix from `holder`'s caches to
+    /// `pipe` over the NoC before admission (charged, delayed landing).
+    pub import_from: Option<usize>,
+    /// The holder's total ready match in tokens (what an import moves).
+    pub match_tokens: u64,
+}
+
+/// Cache-affinity pipe selection (`cross_pipe`): score each pipe by probed
+/// tier-weighted prefix overlap against its load. The longest-scoring
+/// holder wins (ties → lighter load, then lower index); with no match the
+/// request goes to the least-loaded pipe. A holder whose pending work
+/// exceeds the lightest pipe's by more than `affinity_gap` is considered
+/// overloaded: the request is routed to the lightest pipe and the match is
+/// imported over the NoC instead of queueing behind the backlog —
+/// the same queue-versus-transfer tradeoff the cluster router makes
+/// between chips.
+pub(crate) fn route_request(
+    pipes: &[Pipe],
+    keys: &[BlockKey],
+    limit: u64,
+    at: Cycle,
+    affinity_gap: usize,
+) -> PipeRoute {
+    let loads: Vec<usize> = pipes.iter().map(|p| p.pending_work()).collect();
+    let lightest = (0..pipes.len())
+        .min_by_key(|&i| (loads[i], i))
+        .unwrap_or(0);
+    if keys.is_empty() {
+        return PipeRoute {
+            pipe: lightest,
+            import_from: None,
+            match_tokens: 0,
+        };
+    }
+    let hits: Vec<TierMatch> = pipes
+        .iter()
+        .map(|p| p.probe_prefix_tiered(keys, limit, at))
+        .collect();
+    let holder = (0..pipes.len())
+        .filter(|&i| hits[i].total() > 0)
+        .min_by_key(|&i| (std::cmp::Reverse(hits[i].score()), loads[i], i));
+    match holder {
+        None => PipeRoute {
+            pipe: lightest,
+            import_from: None,
+            match_tokens: 0,
+        },
+        Some(h) => {
+            let overloaded = loads[h] > loads[lightest].saturating_add(affinity_gap);
+            if overloaded && h != lightest {
+                PipeRoute {
+                    pipe: lightest,
+                    import_from: Some(h),
+                    match_tokens: hits[h].total(),
+                }
+            } else {
+                PipeRoute {
+                    pipe: h,
+                    import_from: None,
+                    match_tokens: hits[h].total(),
+                }
+            }
+        }
+    }
+}
+
+/// Stream a matched prefix's KV from pipe `src`'s caches toward pipe
+/// `dst` over the on-chip NoC — stage by stage, each stage moving its
+/// layer-share from its lead core to the destination stage's lead core.
+/// Returns the landing cycle (no earlier than `at`). The transfer is
+/// charged on the mesh (link occupancy + contention), mirroring the
+/// cluster layer's inter-chip migration one level down the hierarchy; the
+/// caller seeds `dst`'s caches (see `Pipe::seed_prefix`) once it knows
+/// the deferred admission instant.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn stream_prefix_over_noc(
+    chip: &mut ChipSim,
+    pipes: &[Pipe],
+    src: usize,
+    dst: usize,
+    tokens: u64,
+    kv_bytes_per_token: u64,
+    at: Cycle,
+) -> Cycle {
+    let total = tokens * kv_bytes_per_token;
+    let total_layers: usize = pipes[src].stages.iter().map(|s| s.exec.layers).sum();
+    let n_stages = pipes[src].stages.len().min(pipes[dst].stages.len());
+    let mut landing = at;
+    for s in 0..n_stages {
+        let bytes = total * pipes[src].stages[s].exec.layers as u64 / total_layers.max(1) as u64;
+        let from = pipes[src].stages[s].group.coords[0];
+        let to = pipes[dst].stages[s].group.coords[0];
+        let t = chip.send(from, to, bytes, OpClass::KvTransfer);
+        landing = landing.max(t.finish);
+    }
+    landing
 }
 
 /// Seed every pipe: static round-robin admission may land the migrated
@@ -205,6 +352,9 @@ pub(crate) fn collect_worker_stats<'a>(
         let k = s.kv.stats();
         out.cow_copies += k.cow_copies;
         out.prefix_evictions += k.prefix_evictions;
+        out.tier_demotions += k.tier_demotions;
+        out.tier_promotions += k.tier_promotions;
+        out.tier_dropped += k.tier_dropped;
         if let Some(m) = &s.memo {
             out.memo_hits += m.hits;
             out.memo_misses += m.misses;
@@ -352,6 +502,17 @@ impl Pipe {
             .unwrap_or(0)
     }
 
+    /// Tier-split [`Pipe::probe_prefix`]: the most conservative stage view
+    /// (smallest total, then smallest fast-tier share), matching the
+    /// min-across-stages rule admission commits to.
+    pub(crate) fn probe_prefix_tiered(&self, keys: &[BlockKey], limit: u64, at: Cycle) -> TierMatch {
+        self.stages
+            .iter()
+            .map(|s| s.peek_prefix_tiered(keys, limit, at))
+            .min_by_key(|m| (m.total(), m.sram_tokens))
+            .unwrap_or_default()
+    }
+
     /// Mean occupancy of the stages' admission-limiting KV tier.
     pub(crate) fn kv_utilization(&self) -> f64 {
         if self.stages.is_empty() {
@@ -422,7 +583,7 @@ impl Pipe {
             let r = self.queue.pop_front().unwrap();
             let mut matched = 0u64;
             if cfg.prefix_cache {
-                matched = admit_with_prefix(&mut self.stages, &r, model, metrics, now);
+                matched = admit_with_prefix(chip, &mut self.stages, &r, model, metrics, now);
             } else {
                 for s in &mut self.stages {
                     s.admit(r.id);

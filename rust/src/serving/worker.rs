@@ -4,7 +4,7 @@
 
 use crate::config::{ChipConfig, CoreConfig, ModelConfig};
 use crate::memmgr::planner::{plan, PlanRequest};
-use crate::memmgr::prefix::BlockKey;
+use crate::memmgr::prefix::{BlockKey, TierMatch};
 use crate::memmgr::{KvCache, KV_BLOCK_TOKENS};
 use crate::model::exec::{group_now, run_iteration_memo, ExecConfig};
 use crate::model::memo::LatencyMemo;
@@ -12,7 +12,14 @@ use crate::model::IterBatch;
 use crate::parallel::partition::PartitionStrategy;
 use crate::parallel::placement::TpGroup;
 use crate::sim::chip::ChipSim;
+use crate::sim::tracer::OpClass;
 use crate::util::units::Cycle;
+
+/// Fraction (denominator) of a worker's HBM KV region reserved for the
+/// demoted-prefix tier when [`StageWorker::with_hbm_tier`] enables it: the
+/// tier gets `1/HBM_TIER_SHARE_DIV` of the post-weight HBM capacity —
+/// plenty for cold prefixes while leaving the spill ring untouched.
+pub const HBM_TIER_SHARE_DIV: u64 = 8;
 
 /// One TP group ready to execute iterations.
 #[derive(Debug)]
@@ -86,6 +93,19 @@ impl StageWorker {
         self
     }
 
+    /// Enable the demoted-prefix HBM tier on this worker (builder style;
+    /// call after [`StageWorker::with_prefix_cache`] — the tier requires
+    /// the prefix cache). Reserves `1/`[`HBM_TIER_SHARE_DIV`] of the
+    /// worker's HBM KV capacity for cold demoted prefixes; no-op on
+    /// SRAM-only chips (nothing to demote into).
+    pub fn with_hbm_tier(mut self, on: bool) -> Self {
+        if on {
+            let cap = self.kv.hbm_free_bytes() / HBM_TIER_SHARE_DIV;
+            self.kv.enable_hbm_tier(cap);
+        }
+        self
+    }
+
     /// Enable operator-latency memoization on this worker (builder style).
     pub fn with_memo(mut self, on: bool) -> Self {
         if on {
@@ -107,6 +127,27 @@ impl StageWorker {
     /// (no commitment), capped at `max_tokens`.
     pub fn peek_prefix(&self, keys: &[BlockKey], max_tokens: u64, at: Cycle) -> u64 {
         self.kv.peek_prefix(keys, max_tokens, at)
+    }
+
+    /// Like [`StageWorker::peek_prefix`] but split by residency tier
+    /// (SRAM-resident vs HBM-demoted match tokens).
+    pub fn peek_prefix_tiered(&self, keys: &[BlockKey], max_tokens: u64, at: Cycle) -> TierMatch {
+        self.kv.peek_prefix_tiered(keys, max_tokens, at)
+    }
+
+    /// Charge the HBM streams of tier promotions/demotions accumulated
+    /// since the last drain on every core of this group: the HBM tier is
+    /// bandwidth-priced through the same transaction-level channel model
+    /// as KV spill, so moving a cold prefix is cheap but never free. No-op
+    /// (and allocation-free) while the tier is off.
+    pub fn charge_tier_traffic(&mut self, chip: &mut ChipSim) {
+        let (promoted, demoted) = self.kv.drain_tier_traffic();
+        let bytes = promoted + demoted;
+        if bytes > 0 {
+            for &c in &self.group.coords {
+                chip.core_mut(c).hbm_access(bytes, OpClass::KvSpill);
+            }
+        }
     }
 
     /// Admit with prefix sharing at cycle `at`; returns the matched token
@@ -145,9 +186,11 @@ impl StageWorker {
         }
     }
 
-    /// Execute one iteration; returns the finish cycle.
+    /// Execute one iteration; returns the finish cycle. Appends inside the
+    /// iteration may demote cold prefixes under SRAM pressure — that tier
+    /// traffic is charged on the group right after the iteration.
     pub fn run(&mut self, chip: &mut ChipSim, model: &ModelConfig, batch: &IterBatch) -> Cycle {
-        run_iteration_memo(
+        let t = run_iteration_memo(
             chip,
             &self.group,
             model,
@@ -156,7 +199,9 @@ impl StageWorker {
             batch,
             &mut self.kv,
             self.memo.as_mut(),
-        )
+        );
+        self.charge_tier_traffic(chip);
+        group_now(chip, &self.group).max(t)
     }
 
     /// Activation bytes handed to the next pipeline stage for a batch of

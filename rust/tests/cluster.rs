@@ -155,6 +155,43 @@ fn every_request_completes_on_exactly_one_chip() {
 }
 
 #[test]
+fn mixed_cluster_hit_rate_denominator_scopes_to_cache_enabled_admissions() {
+    // One chip caches, one does not (a mixed cluster): the rollup's
+    // hit-rate denominator must count only consultations on the
+    // cache-enabled chip — admissions on the prefix-off chip (and
+    // unshareable prompts anywhere) cannot dilute the rate.
+    use npusim::serving::scheduler::Scheduler;
+    let w = shared_workload(10, 47);
+    let reqs = request::generate(&w);
+    let cfg = ClusterConfig::new(
+        ChipConfig::large_core(),
+        2,
+        fusion_cached(),
+        RouterPolicy::RoundRobin,
+    );
+    let scheds: Vec<Box<dyn Scheduler>> = vec![
+        fusion_cached().build(),
+        SchedulerConfig::Fusion(FusionConfig::default()).build(), // cache off
+    ];
+    let cm =
+        cluster::simulate_cluster_mixed(&cfg, &ModelConfig::qwen3_4b(), reqs, scheds).unwrap();
+    assert_eq!(cm.n_requests(), 10);
+    // Round-robin puts half the (all-shareable) requests on each chip:
+    // only chip 0's admissions may count as lookups.
+    let shareable_on_chip0 = cm.routed[0] as u64;
+    let agg = cm.aggregate();
+    assert_eq!(
+        agg.cache.prefix_lookups, shareable_on_chip0,
+        "hit-rate denominator must equal cache-enabled consultations"
+    );
+    // The cache-off chip contributes zero cache counters of any kind.
+    assert_eq!(cm.per_chip[1].cache.prefix_lookups, 0);
+    assert_eq!(cm.per_chip[1].cache.prefix_hits, 0);
+    // And the rate is therefore internally consistent.
+    assert!(agg.cache.prefix_hits <= agg.cache.prefix_lookups);
+}
+
+#[test]
 fn migrations_are_charged_on_the_interconnect() {
     // Force migration pressure: a tiny load gap and a strongly skewed
     // prefix workload. If any migration happens, interconnect bytes must

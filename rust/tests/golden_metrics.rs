@@ -112,12 +112,15 @@ fn different_seeds_change_the_timeline() {
 
 #[test]
 fn prefix_cache_and_memo_are_off_by_default() {
-    // The golden vectors above pin the *default* configurations: both new
-    // features must stay opt-in for those vectors to stay meaningful.
+    // The golden vectors above pin the *default* configurations: every
+    // opt-in feature must stay opt-in for those vectors to stay
+    // meaningful — including the two-tier cache and cross-pipe sharing.
     let f = FusionConfig::default();
     assert!(!f.prefix_cache && !f.memo);
+    assert!(!f.hbm_tier && !f.cross_pipe);
     let d = DisaggConfig::default();
     assert!(!d.prefix_cache && !d.memo);
+    assert!(!d.hbm_tier && !d.cross_pipe);
 }
 
 #[test]
@@ -172,6 +175,83 @@ fn shared_prefix_runs_are_byte_stable_and_cache_changes_the_timeline() {
     let off = run_once(&SchedulerConfig::Fusion(FusionConfig::default()), &w);
     let on = run_once(&systems[0], &w);
     assert_ne!(off, on, "prefix cache had no effect on a shared trace");
+}
+
+#[test]
+fn hbm_tier_and_cross_pipe_off_pin_single_tier_behaviour() {
+    // The tier golden vector: with `--hbm-tier --cross-pipe` off, the
+    // prefix-cache-on timeline must be bit-identical to the pre-tier
+    // implementation — and, since the tier only acts at the eviction
+    // point, enabling `hbm_tier` on a pressure-free shared trace must
+    // also reproduce it bit-for-bit.
+    let w = WorkloadConfig::shared_prefix(8).with_seed(13);
+    let single_tier = run_once(
+        &SchedulerConfig::Fusion(FusionConfig {
+            prefix_cache: true,
+            ..FusionConfig::default()
+        }),
+        &w,
+    );
+    // Byte-stable across runs (the vector itself).
+    assert_eq!(
+        single_tier,
+        run_once(
+            &SchedulerConfig::Fusion(FusionConfig {
+                prefix_cache: true,
+                ..FusionConfig::default()
+            }),
+            &w,
+        )
+    );
+    // The tier only acts at the eviction point: without evictions it is
+    // bit-inert; with evictions it must be demoting instead.
+    let run_metrics = |cfg: FusionConfig| {
+        let model = ModelConfig::qwen3_4b();
+        let mut chip = ChipSim::new(ChipConfig::large_core());
+        let mut sched = SchedulerConfig::Fusion(cfg).build();
+        scheduler::simulate(&mut chip, &model, &w, sched.as_mut()).unwrap()
+    };
+    let off = run_metrics(FusionConfig {
+        prefix_cache: true,
+        ..FusionConfig::default()
+    });
+    let on = run_metrics(FusionConfig {
+        prefix_cache: true,
+        hbm_tier: true,
+        ..FusionConfig::default()
+    });
+    if off.cache.prefix_evictions == 0 {
+        assert_eq!(
+            single_tier,
+            summarize(&on),
+            "hbm_tier perturbed an eviction-free run"
+        );
+        assert_eq!(on.cache.tier_demotions, 0);
+    } else {
+        assert!(
+            on.cache.tier_demotions > 0,
+            "pressure evicted {} blocks but the tier never demoted",
+            off.cache.prefix_evictions
+        );
+        assert_eq!(on.cache.prefix_evictions, 0, "tier must demote, not drop");
+    }
+}
+
+#[test]
+fn two_tier_cross_pipe_runs_are_deterministic() {
+    // The feature-on golden vector: the full two-tier + cross-pipe
+    // configuration must be byte-stable across runs on the pressured
+    // streamed path (the one-chip cluster driver, where affinity routing
+    // actually sees warm caches).
+    use npusim::experiments::{tier_study, Opts};
+    let a = tier_study::bench_rows(&Opts::fast()).unwrap();
+    let b = tier_study::bench_rows(&Opts::fast()).unwrap();
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.tokens_skipped, y.tokens_skipped, "{}", x.config);
+        assert_eq!(x.promotions, y.promotions, "{}", x.config);
+        assert_eq!(x.noc_imports, y.noc_imports, "{}", x.config);
+        assert_eq!(x.ttft_p99_s, y.ttft_p99_s, "{}", x.config);
+    }
 }
 
 #[test]

@@ -9,12 +9,15 @@
 //! wall-clock fields are deliberately ignored:
 //!
 //! 1. **Structure**: the current file must contain the full prefix-cache
-//!    grid (3 schedulers × cache on/off) and the full cluster grid
+//!    grid (3 schedulers × cache on/off), the full cluster grid
 //!    (shared-prefix + poisson workloads × fusion/disagg/hybrid ×
-//!    rr/least/prefix routers on ≥ 2 chips).
+//!    rr/least/prefix routers on ≥ 2 chips), and the tier ablation
+//!    (sram-only / hbm-tier / two-tier+noc).
 //! 2. **Invariants**: on the shared-prefix workload the prefix-hit-aware
 //!    router must beat round-robin on TTFT p50 for the fusion system (the
-//!    cluster acceptance property), and cache-on must not lose TTFT.
+//!    cluster acceptance property), cache-on must not lose TTFT, and the
+//!    two-tier configuration must skip strictly more prefill tokens than
+//!    SRAM-only caching (cross-pipe/HBM hits replace recomputation).
 //! 3. **Numbers**: `tokens_per_s` must not drop, and `ttft_p99_s` must
 //!    not rise, by more than the tolerance against the matching baseline
 //!    row. A baseline marked `"provisional": true` skips this layer (the
@@ -151,6 +154,19 @@ fn check_structure(current: &Json, violations: &mut Vec<String>) {
             }
         }
     }
+    let tier = rows(current, "tier");
+    for config in ["sram-only", "hbm-tier", "two-tier+noc"] {
+        if !tier.iter().any(|r| r.str("config") == Some(config)) {
+            violations.push(format!("tier row missing: {config}"));
+        }
+    }
+}
+
+/// `prefill_tokens_skipped` of one tier-ablation row.
+fn tier_skipped(tier: &[&Json], config: &str) -> Option<f64> {
+    tier.iter()
+        .find(|r| r.str("config") == Some(config))
+        .and_then(|r| r.num("prefill_tokens_skipped"))
 }
 
 fn check_invariants(current: &Json, violations: &mut Vec<String>) {
@@ -185,6 +201,22 @@ fn check_invariants(current: &Json, violations: &mut Vec<String>) {
                 ));
             }
         }
+    }
+    // The tier acceptance property: two-tier + cross-pipe sharing must
+    // replace recomputation that SRAM-only caching performs.
+    let tier = rows(current, "tier");
+    match (
+        tier_skipped(&tier, "sram-only"),
+        tier_skipped(&tier, "two-tier+noc"),
+    ) {
+        (Some(base), Some(two)) => {
+            if two <= base {
+                violations.push(format!(
+                    "two-tier+noc does not skip more prefill than sram-only ({two} vs {base})"
+                ));
+            }
+        }
+        _ => violations.push("cannot evaluate two-tier-vs-sram-only skip invariant".into()),
     }
 }
 
@@ -291,6 +323,32 @@ fn check_numbers(current: &Json, baseline: &Json, tol: f64, violations: &mut Vec
         );
         check_metric(
             &format!("{tag} ttft_p99_s"),
+            c.num("ttft_p99_s"),
+            b.num("ttft_p99_s"),
+            tol,
+            false,
+            violations,
+        );
+    }
+    // Tier ablation: match rows on config label.
+    let cur_tier = rows(current, "tier");
+    let base_tier = rows(baseline, "tier");
+    for b in &base_tier {
+        let config = b.str("config").unwrap_or("");
+        let Some(c) = cur_tier.iter().find(|r| r.str("config") == Some(config)) else {
+            violations.push(format!("tier row disappeared: {config}"));
+            continue;
+        };
+        check_metric(
+            &format!("tier {config} tokens_per_s"),
+            c.num("tokens_per_s"),
+            b.num("tokens_per_s"),
+            tol,
+            true,
+            violations,
+        );
+        check_metric(
+            &format!("tier {config} ttft_p99_s"),
             c.num("ttft_p99_s"),
             b.num("ttft_p99_s"),
             tol,
