@@ -16,6 +16,7 @@
 
 use crate::config::{ArrivalProcess, ChipConfig, ModelConfig, PrefixSharing, WorkloadConfig};
 use crate::experiments::cluster_study::{self, ClusterRun};
+use crate::experiments::plan_study::{self, PlanRun};
 use crate::experiments::tier_study::{self, TierRun};
 use crate::experiments::Opts;
 use crate::serving::metrics::Metrics;
@@ -256,6 +257,7 @@ fn render_json(
     shared_fraction: f64,
     cluster: &[ClusterRun],
     tier: &[TierRun],
+    plan: &[PlanRun],
 ) -> String {
     let mut j = String::new();
     let _ = writeln!(j, "{{");
@@ -344,6 +346,25 @@ fn render_json(
         );
     }
     let _ = writeln!(j, "  ],");
+    let _ = writeln!(j, "  \"plan\": [");
+    for (i, r) in plan.iter().enumerate() {
+        let _ = writeln!(
+            j,
+            "    {{\"plan\": \"{}\", \"auto\": {}, \"analytic_score\": {:.1}, \
+             \"analytic_rank\": {}, \"sim_makespan_s\": {:.6}, \"sim_rank\": {}, \
+             \"tokens_per_s\": {:.3}, \"ttft_p50_s\": {:.6}}}{}",
+            r.plan,
+            r.auto,
+            r.analytic_score,
+            r.analytic_rank,
+            r.sim_makespan_s,
+            r.sim_rank,
+            r.tok_s,
+            r.ttft_p50_s,
+            if i + 1 < plan.len() { "," } else { "" }
+        );
+    }
+    let _ = writeln!(j, "  ],");
     let _ = writeln!(
         j,
         "  \"memo\": {{\"sweep\": \"fig13-mini\", \"wall_off_s\": {:.6}, \"wall_on_s\": {:.6}, \
@@ -361,6 +382,7 @@ pub fn run(opts: &Opts) -> anyhow::Result<Vec<Table>> {
     let memo = memo_study(opts)?;
     let cluster = cluster_study::bench_grid(opts)?;
     let tier = tier_study::bench_rows(opts)?;
+    let plan = plan_study::bench_rows(opts)?;
 
     let mut t1 = Table::new(
         "bench — prefix-sharing paged KV on the shared-prefix trace (Qwen3-4B, 64 cores)",
@@ -465,6 +487,28 @@ pub fn run(opts: &Opts) -> anyhow::Result<Vec<Table>> {
         ]);
     }
 
+    let mut t5 = Table::new(
+        "bench — deployment plans: analytic rank vs simulated (512:48 trace, 64 cores)",
+        &[
+            "plan",
+            "analytic rank",
+            "sim rank",
+            "sim makespan (s)",
+            "tok/s",
+            "TTFT p50 (s)",
+        ],
+    );
+    for r in &plan {
+        t5.row(&[
+            if r.auto { "auto".into() } else { r.plan.clone() },
+            r.analytic_rank.to_string(),
+            r.sim_rank.to_string(),
+            f3(r.sim_makespan_s),
+            f3(r.tok_s),
+            f3(r.ttft_p50_s),
+        ]);
+    }
+
     let cluster_rr = cluster_study::ttft_p50(&cluster, "shared-prefix", "fusion", "rr");
     let cluster_prefix = cluster_study::ttft_p50(&cluster, "shared-prefix", "fusion", "prefix");
     println!(
@@ -483,13 +527,13 @@ pub fn run(opts: &Opts) -> anyhow::Result<Vec<Table>> {
     // BENCH_serving.json: one copy beside the CSVs, one at the repo root
     // (the canonical location the README documents and CI gates on).
     if let Some(dir) = &opts.out_dir {
-        let json = render_json(&runs, &memo, shared_fraction, &cluster, &tier);
+        let json = render_json(&runs, &memo, shared_fraction, &cluster, &tier, &plan);
         std::fs::create_dir_all(dir)?;
         std::fs::write(dir.join("BENCH_serving.json"), &json)?;
         std::fs::write("BENCH_serving.json", &json)?;
     }
 
-    Ok(vec![t1, t2, t3, t4])
+    Ok(vec![t1, t2, t3, t4, t5])
 }
 
 #[cfg(test)]
@@ -592,7 +636,17 @@ mod tests {
             evictions: 0,
             noc_imports: 2,
         }];
-        let j = render_json(&runs, &memo, 0.6, &cluster, &tier);
+        let plan = vec![PlanRun {
+            plan: "auto".into(),
+            auto: true,
+            analytic_score: 1.5e8,
+            analytic_rank: 1,
+            sim_makespan_s: 0.42,
+            sim_rank: 1,
+            tok_s: 900.0,
+            ttft_p50_s: 0.02,
+        }];
+        let j = render_json(&runs, &memo, 0.6, &cluster, &tier, &plan);
         assert!(j.starts_with("{\n"));
         assert!(j.trim_end().ends_with('}'));
         assert_eq!(j.matches('{').count(), j.matches('}').count());
@@ -602,5 +656,7 @@ mod tests {
         assert!(j.contains("\"chips\": 2"));
         assert!(j.contains("\"config\": \"two-tier+noc\""));
         assert!(j.contains("\"tier_demotions\": 7"));
+        assert!(j.contains("\"plan\": \"auto\""));
+        assert!(j.contains("\"sim_rank\": 1"));
     }
 }

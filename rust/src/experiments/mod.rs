@@ -16,9 +16,10 @@
 //! | `fig14` | PD disaggregation vs PD fusion | [`fig14`] |
 //! | `headline` | ours vs T10 / WaferLLM / WSC-LLM | [`headline`] |
 //! | `hybrid_study` | fusion vs disagg vs adaptive hybrid | [`hybrid_study`] |
-//! | `bench` | prefix-cache + memoization + cluster + tier bench → `BENCH_serving.json` | [`bench`] |
+//! | `bench` | prefix-cache + memoization + cluster + tier + plan bench → `BENCH_serving.json` | [`bench`] |
 //! | `cluster_study` | multi-chip: chips × router × scheduler | [`cluster_study`] |
 //! | `tier_study` | two-tier prefix cache: SRAM-only vs HBM tier vs +cross-pipe NoC | [`tier_study`] |
+//! | `plan_study` | auto-planner: analytic plan ranking vs simulated | [`plan_study`] |
 
 pub mod ablations;
 pub mod bench;
@@ -33,6 +34,7 @@ pub mod fig8;
 pub mod fig9;
 pub mod headline;
 pub mod hybrid_study;
+pub mod plan_study;
 pub mod reference_hw;
 pub mod table2;
 pub mod tier_study;
@@ -80,7 +82,7 @@ impl Opts {
 /// All experiment ids, in paper order.
 pub const ALL: &[&str] = &[
     "table2", "fig7a", "fig7b", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13", "fig14",
-    "headline", "ablations", "hybrid_study", "bench", "cluster_study", "tier_study",
+    "headline", "ablations", "hybrid_study", "bench", "cluster_study", "tier_study", "plan_study",
 ];
 
 /// Run one experiment by id; returns its tables (already printed).
@@ -102,6 +104,7 @@ pub fn run(id: &str, opts: &Opts) -> anyhow::Result<Vec<Table>> {
         "bench" => bench::run(opts)?,
         "cluster_study" => cluster_study::run(opts)?,
         "tier_study" => tier_study::run(opts)?,
+        "plan_study" => plan_study::run(opts)?,
         other => anyhow::bail!("unknown experiment {other:?} (try one of {ALL:?})"),
     };
     for t in &tables {

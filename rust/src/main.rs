@@ -12,6 +12,7 @@ use anyhow::{Context, Result};
 use npusim::config::{ChipConfig, ModelConfig, WorkloadConfig};
 use npusim::coordinator::{Coordinator, GenRequest};
 use npusim::experiments::{self, Opts};
+use npusim::parallel::plan::{self, DeploymentPlan};
 use npusim::serving::cluster::{
     simulate_cluster, simulate_cluster_requests, ClusterConfig, ClusterMetrics, RouterPolicy,
 };
@@ -51,6 +52,7 @@ fn dispatch(args: &Args) -> Result<()> {
                  e.g.  npusim experiment fig9\n      npusim experiment all --fast\n      \
                  npusim experiment bench            # emits BENCH_serving.json\n      \
                  npusim simulate --mode fusion --model qwen3_4b --input 512 --output 64\n      \
+                 npusim simulate --plan auto --input 512 --output 64   # auto-planned deployment\n      \
                  npusim simulate --mode hybrid --shared-prefix 1024 --prefix-cache --memo\n      \
                  npusim simulate --prefix-cache --hbm-tier --cross-pipe --shared-prefix 1024\n      \
                  npusim simulate --chips 4 --router prefix --prefix-cache --shared-prefix 1024\n      \
@@ -109,6 +111,17 @@ fn chip_from(args: &Args) -> Result<ChipConfig> {
     Ok(chip)
 }
 
+/// `--hbm-tier-frac` with bound validation (plan-settable knob; the
+/// default is the former fixed 1/8 carve).
+fn tier_frac_from(args: &Args) -> Result<f64> {
+    let f = args.opt_parse_or("hbm-tier-frac", plan::DEFAULT_HBM_TIER_FRAC)?;
+    anyhow::ensure!(
+        f > 0.0 && f < 1.0,
+        "--hbm-tier-frac must be a fraction in (0, 1), got {f}"
+    );
+    Ok(f)
+}
+
 /// Fusion-pipeline knobs shared by `--mode fusion` and `--mode hybrid`.
 fn fusion_cfg_from(args: &Args) -> Result<FusionConfig> {
     let defaults = FusionConfig::default();
@@ -119,6 +132,7 @@ fn fusion_cfg_from(args: &Args) -> Result<FusionConfig> {
         budget: args.opt_parse_or("budget", 288)?,
         prefix_cache: args.flag("prefix-cache"),
         hbm_tier: args.flag("hbm-tier"),
+        hbm_tier_frac: tier_frac_from(args)?,
         cross_pipe: args.flag("cross-pipe"),
         affinity_gap: args.opt_parse_or("affinity-gap", defaults.affinity_gap)?,
         memo: args.flag("memo"),
@@ -134,10 +148,70 @@ fn disagg_cfg_from(args: &Args) -> Result<DisaggConfig> {
         prefill_stages: args.opt_parse_or("stages", 6)?,
         prefix_cache: args.flag("prefix-cache"),
         hbm_tier: args.flag("hbm-tier"),
+        hbm_tier_frac: tier_frac_from(args)?,
         cross_pipe: args.flag("cross-pipe"),
         memo: args.flag("memo"),
         ..DisaggConfig::default()
     })
+}
+
+/// Resolve `--plan auto|<preset>` into a concrete [`DeploymentPlan`]:
+/// `auto` searches the feasible space for the (chip, model, workload)
+/// triple and prints the top analytic candidates; a preset name loads it
+/// directly. Cache/feature flags (`--prefix-cache --hbm-tier --cross-pipe
+/// --memo --hbm-tier-frac --affinity-gap`) compose on top of the plan's
+/// layout.
+fn plan_from(
+    args: &Args,
+    which: &str,
+    chip: &ChipConfig,
+    model: &ModelConfig,
+    workload: &WorkloadConfig,
+) -> Result<DeploymentPlan> {
+    let mut plan = if which == "auto" {
+        let ranked = plan::auto_plan(chip, model, workload)?;
+        let mut t = Table::new(
+            &format!(
+                "auto-planner — top candidates of {} feasible ({} / {} / {})",
+                ranked.len(),
+                chip.name,
+                model.name,
+                workload.name
+            ),
+            &["rank", "plan", "prefill cyc/tok", "decode cyc/tok", "score (Mcyc)"],
+        );
+        for (i, c) in ranked.iter().take(5).enumerate() {
+            t.row(&[
+                (i + 1).to_string(),
+                c.plan.name.clone(),
+                f3(c.score.prefill_cycles_per_token),
+                f3(c.score.decode_cycles_per_token),
+                f3(c.score.total_cycles / 1e6),
+            ]);
+        }
+        t.print();
+        ranked.into_iter().next().expect("auto_plan non-empty").plan
+    } else {
+        DeploymentPlan::preset(which)?
+    };
+    if args.flag("prefix-cache") {
+        plan.prefix_cache = true;
+    }
+    if args.flag("hbm-tier") {
+        plan.hbm_tier = true;
+    }
+    if args.flag("cross-pipe") {
+        plan.cross_pipe = true;
+    }
+    if args.flag("memo") {
+        plan.memo = true;
+    }
+    plan.hbm_tier_frac = tier_frac_from(args)?;
+    if let Some(gap) = args.opt_parse::<usize>("affinity-gap")? {
+        plan.affinity_gap = gap;
+    }
+    println!("{}", plan.summary());
+    Ok(plan)
 }
 
 /// Hybrid controller knobs for `--mode hybrid`.
@@ -344,6 +418,85 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     if n_chips <= 1 && (args.opt("router").is_some() || args.opt("migrate-gap").is_some()) {
         anyhow::bail!("--router/--migrate-gap need a multi-chip cluster: pass --chips N (N > 1)");
     }
+
+    // First-class deployment plan (`--plan auto|<preset>`): TP strategy,
+    // placement, pipeline depth and PD mode come from the searched (or
+    // preset) plan instead of `--mode`/`--tp`/`--stages`.
+    if let Some(which) = args.opt("plan") {
+        // The plan owns the layout: a legacy layout flag alongside --plan
+        // would be silently ignored, so reject the conflict outright
+        // (the same stance `--router` without `--chips` takes above).
+        for legacy in [
+            "mode",
+            "tp",
+            "stages",
+            "chunk",
+            "budget",
+            "prefill-cores",
+            "decode-cores",
+            "window",
+            "hysteresis",
+            "min-dwell",
+        ] {
+            anyhow::ensure!(
+                args.opt(legacy).is_none(),
+                "--{legacy} conflicts with --plan: the plan decides the layout \
+                 (use --plan auto or edit a preset instead)"
+            );
+        }
+        // The planner must rank against the traffic that will actually
+        // run: on trace replay, distil the trace into a surrogate
+        // workload (mean prompt/output lengths, request count) instead of
+        // the synthetic default the trace overrides.
+        let plan_workload = match &trace {
+            Some(reqs) if !reqs.is_empty() => {
+                let n = reqs.len();
+                let mean_in = reqs.iter().map(|r| r.input_len).sum::<usize>() / n;
+                let mean_out = reqs.iter().map(|r| r.output_len).sum::<usize>() / n;
+                let mut w = WorkloadConfig::fixed_ratio(mean_in.max(1), mean_out.max(1), n);
+                w.name = format!("trace≈{}", w.name);
+                w
+            }
+            _ => workload.clone(),
+        };
+        let plan = plan_from(args, which, &chip_cfg, &model, &plan_workload)?;
+        if n_chips > 1 {
+            let router = RouterPolicy::parse(args.opt_or("router", "least"))?;
+            let mut cluster_cfg = ClusterConfig::from_plan(chip_cfg, n_chips, &plan, router)?;
+            if let Some(gap) = args.opt_parse::<usize>("migrate-gap")? {
+                cluster_cfg.migrate_load_gap = gap;
+            }
+            let cm = match trace {
+                Some(reqs) => simulate_cluster_requests(&cluster_cfg, &model, reqs)?,
+                None => simulate_cluster(&cluster_cfg, &model, &workload)?,
+            };
+            print_cluster(
+                &format!(
+                    "plan {} × {n_chips} chips / {} router / {} / {}",
+                    plan.name,
+                    router.name(),
+                    model.name,
+                    workload.name
+                ),
+                &cm,
+            );
+            return Ok(());
+        }
+        let sys = SchedulerConfig::from_plan(&plan)?;
+        let mut chip = ChipSim::new(chip_cfg);
+        let mut sched = sys.build();
+        let metrics = match trace {
+            Some(reqs) => scheduler::simulate_requests(&mut chip, &model, reqs, sched.as_mut())?,
+            None => scheduler::simulate(&mut chip, &model, &workload, sched.as_mut())?,
+        };
+        print_metrics(
+            &format!("plan {} / {} / {}", plan.name, model.name, workload.name),
+            &metrics,
+            &chip,
+        );
+        return Ok(());
+    }
+
     if n_chips > 1 {
         let router = RouterPolicy::parse(args.opt_or("router", "least"))?;
         let mut cluster_cfg =

@@ -204,23 +204,29 @@ impl KvCache {
     /// HBM→SRAM cost. The region is **carved out of the HBM ring** (it
     /// must be called before any admission), so demoted bytes occupy
     /// real, admission-visible capacity — modeled HBM occupancy can never
-    /// exceed the physical part. No-op unless the prefix cache is enabled,
-    /// when `capacity_bytes` is zero, or when the ring cannot spare the
-    /// region (SRAM-only chips, or a ring smaller than the request).
-    pub fn enable_hbm_tier(&mut self, capacity_bytes: u64) {
+    /// exceed the physical part.
+    ///
+    /// The carve is bound-validated: the region must leave the spill ring
+    /// able to hold at least one per-request reservation, otherwise
+    /// enabling the tier would make every admission fail. Out-of-bound
+    /// requests (SRAM-only chips, a region bigger than the ring, or one
+    /// that would starve admission) refuse the tier and leave the ring
+    /// untouched; returns whether the tier was enabled.
+    pub fn enable_hbm_tier(&mut self, capacity_bytes: u64) -> bool {
         if self.prefix.is_none() || capacity_bytes == 0 || self.hbm_tier.is_some() {
-            return;
+            return false;
         }
         debug_assert!(self.entries.is_empty(), "enable_hbm_tier after admission");
         let cap = self.hbm.capacity();
-        if cap < capacity_bytes {
-            return;
+        if cap < capacity_bytes || cap - capacity_bytes < self.max_request_bytes {
+            return false;
         }
         self.hbm = RingBuffer::new(cap - capacity_bytes);
         self.hbm_tier = Some(HbmTier {
             capacity_bytes,
             ..HbmTier::default()
         });
+        true
     }
 
     /// Is the HBM prefix tier enabled on this cache?
@@ -1031,8 +1037,25 @@ mod tests {
         // A tier larger than the ring is refused (SRAM-only regime).
         let mut tiny = KvCache::new(2 * 16 * 8, 16, 0, 8, 256);
         tiny.enable_prefix_cache();
-        tiny.enable_hbm_tier(1 << 20);
+        assert!(!tiny.enable_hbm_tier(1 << 20));
         assert!(!tiny.hbm_tier_enabled());
+    }
+
+    #[test]
+    fn hbm_tier_carve_must_leave_room_for_one_request() {
+        // Bound validation: a carve that would starve admission (the
+        // remaining ring cannot hold even one per-request reservation) is
+        // refused and leaves the ring untouched; the largest valid carve
+        // is accepted.
+        let mut kv = cache(); // ring 8192 B, 2048 B per request
+        kv.enable_prefix_cache();
+        assert!(!kv.enable_hbm_tier(8192 - 2048 + 1));
+        assert!(!kv.hbm_tier_enabled());
+        assert_eq!(kv.hbm_free_bytes(), 8192);
+        assert!(kv.enable_hbm_tier(8192 - 2048));
+        assert!(kv.hbm_tier_enabled());
+        assert!(kv.admit(1), "one admission must still fit");
+        assert!(!kv.can_admit());
     }
 
     #[test]

@@ -24,6 +24,13 @@ use crate::util::units::{ceil_div, Cycle};
 pub struct ExecConfig {
     /// GEMM partition strategy within the group.
     pub strategy: PartitionStrategy,
+    /// Phase-aware partition switch (Fig. 9): `Some((small, thresh))`
+    /// routes GEMMs whose M dimension is below `thresh` to `small` instead
+    /// of [`ExecConfig::strategy`] — the K partition moves results
+    /// (`M·N`) instead of weights (`K·N`), so it wins for decode steps and
+    /// short chunks while AllGather/2-D win for long prefill. `None`
+    /// (the default) is the static pre-plan behaviour, bit-identical.
+    pub small_m: Option<(PartitionStrategy, u64)>,
     /// Transformer layers this group executes per iteration (its pipeline
     /// stage depth).
     pub layers: usize,
@@ -35,8 +42,25 @@ impl ExecConfig {
     pub fn new(strategy: PartitionStrategy, layers: usize, with_logits: bool) -> Self {
         ExecConfig {
             strategy,
+            small_m: None,
             layers,
             with_logits,
+        }
+    }
+
+    /// Enable the phase-aware switch (builder style). A `threshold` of 0
+    /// disables it (every GEMM keeps [`ExecConfig::strategy`]).
+    pub fn with_small_m(mut self, small: PartitionStrategy, threshold: u64) -> Self {
+        self.small_m = (threshold > 0).then_some((small, threshold));
+        self
+    }
+
+    /// The partition strategy a GEMM of `m` rows runs with under this
+    /// config — what every [`dist_gemm`] call inside the iteration uses.
+    pub fn strategy_for(&self, m: u64) -> PartitionStrategy {
+        match self.small_m {
+            Some((small, thresh)) if m < thresh => small,
+            _ => self.strategy,
         }
     }
 }
@@ -340,6 +364,9 @@ fn run_layer(
     let kvd = model.kv_dim() as u64;
     let layer_w = (model.layer_weight_bytes() / tp).max(1);
     let frac = |w_bytes: u64| hbm_layer * w_bytes / layer_w;
+    // Phase-aware partition (Fig. 9): every GEMM of this iteration shares
+    // the batch's M, so one selection covers the whole layer.
+    let strategy = exec.strategy_for(m);
 
     // Pre-attention RMSNorm.
     let t0 = chip.sync(&group.coords);
@@ -348,7 +375,7 @@ fn run_layer(
 
     // QKV projection.
     let w_qkv = h * (qd + 2 * kvd) * dtype / tp;
-    dist_gemm(chip, group, exec.strategy, m, h, qd + 2 * kvd, frac(w_qkv));
+    dist_gemm(chip, group, strategy, m, h, qd + 2 * kvd, frac(w_qkv));
 
     // RoPE on Q and K.
     let t0 = group_now(chip, group);
@@ -360,7 +387,7 @@ fn run_layer(
 
     // Output projection + residual.
     let w_o = qd * h * dtype / tp;
-    dist_gemm(chip, group, exec.strategy, m, qd, h, frac(w_o));
+    dist_gemm(chip, group, strategy, m, qd, h, frac(w_o));
     let t0 = group_now(chip, group);
     let resid = compute::vector_cycles(&cfg.core, m * ceil_div(h, tp), 1);
     uniform_op(chip, group, OpClass::Vector, t0, resid);
@@ -371,9 +398,9 @@ fn run_layer(
 
     // FFN (dense or MoE) + residual.
     if model.moe.is_some() {
-        ffn_moe(chip, group, cfg, model, exec.strategy, m, hbm_layer);
+        ffn_moe(chip, group, cfg, model, strategy, m, hbm_layer);
     } else {
-        ffn_dense(chip, group, cfg, model, exec.strategy, m, hbm_layer);
+        ffn_dense(chip, group, cfg, model, strategy, m, hbm_layer);
     }
     let t0 = group_now(chip, group);
     uniform_op(chip, group, OpClass::Vector, t0, resid);
@@ -773,6 +800,45 @@ mod tests {
             );
         }
         finish
+    }
+
+    #[test]
+    fn phase_switch_selects_by_m() {
+        let exec = ExecConfig::new(PartitionStrategy::OneDimMN, 2, false)
+            .with_small_m(PartitionStrategy::OneDimK, 512);
+        assert_eq!(exec.strategy_for(1), PartitionStrategy::OneDimK);
+        assert_eq!(exec.strategy_for(511), PartitionStrategy::OneDimK);
+        assert_eq!(exec.strategy_for(512), PartitionStrategy::OneDimMN);
+        assert_eq!(exec.strategy_for(8192), PartitionStrategy::OneDimMN);
+        // Threshold 0 disables the switch entirely.
+        let off = ExecConfig::new(PartitionStrategy::OneDimMN, 2, false)
+            .with_small_m(PartitionStrategy::OneDimK, 0);
+        assert!(off.small_m.is_none());
+        assert_eq!(off.strategy_for(1), PartitionStrategy::OneDimMN);
+    }
+
+    #[test]
+    fn phase_aware_run_matches_the_static_strategy_it_selects() {
+        // A sub-threshold prefill under the switch must land exactly on
+        // the K-partition timeline, and a super-threshold one exactly on
+        // the MN timeline — the switch changes *which* strategy runs, not
+        // how it runs.
+        let run_with = |m: u64, exec: ExecConfig| {
+            let (mut chip, group) = setup(4);
+            let model = ModelConfig::qwen3_4b();
+            let p = plan(&chip.cfg.core, &model, &PlanRequest::default());
+            let mut kv = kv_for(&model, &p, 2, 4);
+            kv.admit(1);
+            let b = IterBatch::new(vec![BatchItem::prefill(1, m, m)]);
+            run_iteration(&mut chip, &group, &model, &p, &exec, &b, &mut kv)
+        };
+        let switched = ExecConfig::new(PartitionStrategy::OneDimMN, 2, false)
+            .with_small_m(PartitionStrategy::OneDimK, 1024);
+        let k = ExecConfig::new(PartitionStrategy::OneDimK, 2, false);
+        let mn = ExecConfig::new(PartitionStrategy::OneDimMN, 2, false);
+        assert_eq!(run_with(256, switched), run_with(256, k));
+        assert_eq!(run_with(2048, switched), run_with(2048, mn));
+        assert_ne!(run_with(256, switched), run_with(256, mn));
     }
 
     #[test]

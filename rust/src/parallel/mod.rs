@@ -11,11 +11,18 @@
 //!   simulated mesh (contention-aware).
 //! - [`pd_placement`]: DP-prioritized vs PP-prioritized core placement for
 //!   PD disaggregation (Fig. 6).
+//! - [`layout`]: mesh carving into pipeline-stage cells of TP groups.
+//! - [`plan`]: the first-class [`plan::DeploymentPlan`] and the analytic
+//!   auto-planner searching TP strategy × placement × PD mode over the
+//!   Table-2 / placement / SRAM-planner cost models.
 
 pub mod collectives;
+pub mod layout;
 pub mod partition;
 pub mod pd_placement;
 pub mod placement;
+pub mod plan;
 
 pub use partition::PartitionStrategy;
 pub use placement::{Placement, Region, TpGroup};
+pub use plan::{DeploymentPlan, PdMode};

@@ -45,6 +45,15 @@ impl PartitionStrategy {
                     .rev()
                     .find(|r| tp % r == 0 && *r * *r <= tp)
                     .unwrap_or(1);
+                // A 1×tp grid is not a 2-D partition at all: its "row ring"
+                // is the whole group and the column rings are single cores,
+                // so it silently degenerates to the 1-D cost while claiming
+                // the 2-D label (prime tp always lands here).
+                anyhow::ensure!(
+                    rows > 1,
+                    "2d partition needs a non-degenerate grid, but tp={tp} only \
+                     factors as 1x{tp}; use \"mn\" or \"k\" instead"
+                );
                 PartitionStrategy::TwoDim {
                     rows,
                     cols: tp / rows,
@@ -238,6 +247,23 @@ mod tests {
             PartitionStrategy::TwoDim { rows: 2, cols: 4 }
         );
         assert!(PartitionStrategy::parse("bogus", 4).is_err());
+    }
+
+    #[test]
+    fn parse_2d_rejects_degenerate_grids() {
+        // Prime tp only factors as 1×tp — identical to the 1-D cost while
+        // claiming the 2-D label. The parse must refuse, pointing at the
+        // honest alternatives.
+        for tp in [2usize, 3, 5, 7, 13] {
+            let err = PartitionStrategy::parse("2d", tp).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains("mn") && msg.contains('k'), "tp={tp}: {msg}");
+        }
+        // Composite tp with a square-ish factorization still parses.
+        assert_eq!(
+            PartitionStrategy::parse("2d", 6).unwrap(),
+            PartitionStrategy::TwoDim { rows: 2, cols: 3 }
+        );
     }
 
     #[test]

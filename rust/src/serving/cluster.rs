@@ -274,6 +274,22 @@ impl ClusterConfig {
             migrate_load_gap: 8,
         }
     }
+
+    /// Build a cluster where every chip runs the deployment a
+    /// [`crate::parallel::plan::DeploymentPlan`] describes.
+    pub fn from_plan(
+        chip: ChipConfig,
+        n_chips: usize,
+        plan: &crate::parallel::plan::DeploymentPlan,
+        router: RouterPolicy,
+    ) -> anyhow::Result<Self> {
+        Ok(Self::new(
+            chip,
+            n_chips,
+            SchedulerConfig::from_plan(plan)?,
+            router,
+        ))
+    }
 }
 
 /// Per-chip metrics plus the cluster-level rollup inputs.

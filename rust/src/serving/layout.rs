@@ -1,179 +1,7 @@
-//! Chip layout for serving: carve the mesh into pipeline stages of TP
-//! groups (the "divide all NPU cores into multiple pipelines" step of
-//! §4.1's core-placement design).
+//! Back-compat shim: the pipeline-layout geometry moved to
+//! [`crate::parallel::layout`] so the auto-planner
+//! ([`crate::parallel::plan`]) can use it as its fusion feasibility test
+//! without the parallel layer reaching up into serving. Existing serving
+//! call sites keep importing from here.
 
-use crate::parallel::placement::{Placement, Region, TpGroup};
-
-/// Factor `tp` into the squarest `(r, c)` grid with `r ≤ rows` and
-/// `c ≤ cols` so a TP group occupies a compact rectangle.
-pub fn tp_rect(tp: usize, rows: usize, cols: usize) -> (usize, usize) {
-    let mut best = (1usize, tp);
-    for r in 1..=tp {
-        if tp % r != 0 {
-            continue;
-        }
-        let c = tp / r;
-        if r <= rows && c <= cols {
-            // Prefer the squarest feasible factorization.
-            let cur = best.0.abs_diff(best.1);
-            if r.abs_diff(c) < cur || best.0 > rows || best.1 > cols {
-                best = (r, c);
-            }
-        }
-    }
-    best
-}
-
-/// Tile the chip into `tp`-core rectangular cells, ordered boustrophedon so
-/// consecutive cells (= consecutive pipeline stages) are physically
-/// adjacent and inter-stage activation hops stay short.
-pub fn carve_stage_cells(rows: usize, cols: usize, tp: usize) -> Vec<Region> {
-    let (cr, cc) = tp_rect(tp, rows, cols);
-    let grid_rows = rows / cr;
-    let grid_cols = cols / cc;
-    let mut cells = Vec::with_capacity(grid_rows * grid_cols);
-    for gr in 0..grid_rows {
-        let cols_iter: Vec<usize> = if gr % 2 == 0 {
-            (0..grid_cols).collect()
-        } else {
-            (0..grid_cols).rev().collect()
-        };
-        for gc in cols_iter {
-            cells.push(Region::new(gr * cr, gc * cc, cr, cc));
-        }
-    }
-    cells
-}
-
-/// A full data-parallel layout: `pipelines[p][s]` is the TP group of
-/// pipeline `p`'s stage `s`.
-#[derive(Debug, Clone)]
-pub struct PipelineLayout {
-    pub pipelines: Vec<Vec<TpGroup>>,
-    pub tp: usize,
-    pub stages: usize,
-}
-
-impl PipelineLayout {
-    /// Build as many `stages`-deep pipelines of TP-`tp` groups as fit on a
-    /// `rows × cols` chip. Cells left over stay idle (reported by
-    /// [`PipelineLayout::idle_cores`]).
-    pub fn build(
-        rows: usize,
-        cols: usize,
-        tp: usize,
-        stages: usize,
-        placement: Placement,
-    ) -> anyhow::Result<Self> {
-        anyhow::ensure!(tp > 0 && stages > 0, "bad tp/stages");
-        let cells = carve_stage_cells(rows, cols, tp);
-        anyhow::ensure!(
-            cells.len() >= stages,
-            "chip has {} cells of {tp} cores; cannot fit {stages} stages",
-            cells.len()
-        );
-        let n_pipelines = cells.len() / stages;
-        let mut pipelines = Vec::with_capacity(n_pipelines);
-        for p in 0..n_pipelines {
-            let mut stage_groups = Vec::with_capacity(stages);
-            for s in 0..stages {
-                stage_groups.push(TpGroup::place(cells[p * stages + s], placement));
-            }
-            pipelines.push(stage_groups);
-        }
-        Ok(PipelineLayout {
-            pipelines,
-            tp,
-            stages,
-        })
-    }
-
-    pub fn n_pipelines(&self) -> usize {
-        self.pipelines.len()
-    }
-
-    /// Cores used by the layout.
-    pub fn used_cores(&self) -> usize {
-        self.n_pipelines() * self.stages * self.tp
-    }
-
-    /// Cores left idle on a `rows × cols` chip.
-    pub fn idle_cores(&self, rows: usize, cols: usize) -> usize {
-        rows * cols - self.used_cores()
-    }
-
-    /// Layer counts per stage for a `layers`-layer model (earlier stages
-    /// take the remainder).
-    pub fn layers_per_stage(&self, layers: usize) -> Vec<usize> {
-        let base = layers / self.stages;
-        let extra = layers % self.stages;
-        (0..self.stages)
-            .map(|s| base + usize::from(s < extra))
-            .collect()
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use std::collections::HashSet;
-
-    #[test]
-    fn tp_rect_prefers_square() {
-        assert_eq!(tp_rect(4, 8, 8), (2, 2));
-        assert_eq!(tp_rect(16, 8, 8), (4, 4));
-        assert_eq!(tp_rect(8, 8, 8), (2, 4));
-        assert_eq!(tp_rect(2, 8, 8), (1, 2));
-    }
-
-    #[test]
-    fn cells_tile_the_chip_disjointly() {
-        let cells = carve_stage_cells(8, 8, 4);
-        assert_eq!(cells.len(), 16);
-        let mut seen = HashSet::new();
-        for cell in &cells {
-            for c in cell.coords() {
-                assert!(seen.insert(c), "overlap at {c:?}");
-            }
-        }
-        assert_eq!(seen.len(), 64);
-    }
-
-    #[test]
-    fn boustrophedon_cells_are_adjacent() {
-        let cells = carve_stage_cells(8, 8, 4);
-        for pair in cells.windows(2) {
-            let (a, b) = (pair[0], pair[1]);
-            // Adjacent cells share a border: center distance == cell size.
-            let dr = a.row0.abs_diff(b.row0);
-            let dc = a.col0.abs_diff(b.col0);
-            assert!(dr + dc == 2, "cells {a:?} -> {b:?} not adjacent");
-        }
-    }
-
-    #[test]
-    fn fig13_layouts_fit() {
-        // 256 cores, TP=4: 64 cells; stages 12/18/32 -> 5/3/2 pipelines.
-        for (stages, pipes) in [(12usize, 5usize), (18, 3), (32, 2)] {
-            let l = PipelineLayout::build(16, 16, 4, stages, Placement::Ring).unwrap();
-            assert_eq!(l.n_pipelines(), pipes, "stages={stages}");
-            assert!(l.idle_cores(16, 16) < 16 * 16);
-        }
-    }
-
-    #[test]
-    fn layers_split_evenly() {
-        let l = PipelineLayout::build(8, 8, 4, 3, Placement::Ring).unwrap();
-        assert_eq!(l.layers_per_stage(36), vec![12, 12, 12]);
-        assert_eq!(l.layers_per_stage(37), vec![13, 12, 12]);
-        assert_eq!(
-            l.layers_per_stage(36).iter().sum::<usize>(),
-            36
-        );
-    }
-
-    #[test]
-    fn too_many_stages_rejected() {
-        assert!(PipelineLayout::build(4, 4, 4, 5, Placement::Ring).is_err());
-    }
-}
+pub use crate::parallel::layout::{carve_stage_cells, tp_rect, PipelineLayout};

@@ -18,6 +18,7 @@
 use crate::config::{ModelConfig, WorkloadConfig};
 use crate::parallel::partition::PartitionStrategy;
 use crate::parallel::pd_placement::PdPlacementPolicy;
+use crate::parallel::plan::{DeploymentPlan, PdMode};
 use crate::serving::metrics::Metrics;
 use crate::serving::request::Request;
 use crate::serving::scheduler::{self, DisaggScheduler};
@@ -39,6 +40,10 @@ pub struct DisaggConfig {
     pub prefill_strategy: PartitionStrategy,
     /// Partition for the decode GEMVs (M=batch is small → AllReduce).
     pub decode_strategy: PartitionStrategy,
+    /// Fig. 9 phase switch on the prefill pipelines: prompts shorter than
+    /// this run `decode_strategy` instead of `prefill_strategy` (the K
+    /// partition wins while `M < hidden/2`). `0` = static.
+    pub m_threshold: u64,
     /// Max concurrent decode requests per group.
     pub max_decode_batch: usize,
     pub kv_share: f64,
@@ -49,6 +54,9 @@ pub struct DisaggConfig {
     /// demote to a bounded HBM region and re-promote on a hit at charged
     /// HBM→SRAM cost (requires `prefix_cache`).
     pub hbm_tier: bool,
+    /// Fraction of each prefill worker's post-weight HBM KV capacity
+    /// carved for the demoted-prefix tier (only read with `hbm_tier`).
+    pub hbm_tier_frac: f64,
     /// Cache-affinity prompt pull: a queued prompt is pulled by the
     /// prefill pipeline holding its longest cached-and-ready prefix
     /// (ties → earliest available) instead of by whichever pipeline frees
@@ -60,25 +68,54 @@ pub struct DisaggConfig {
 }
 
 impl DisaggConfig {
-    /// The paper's balanced optimum on the 64-core chip: P42/D21 at TP 7
-    /// (Fig. 11's "superior overall performance" configuration).
-    pub fn p42_d21() -> Self {
-        DisaggConfig {
-            n_prefill: 42,
-            n_decode: 21,
-            prefill_tp: 7,
-            prefill_stages: 3,
-            decode_tp: 7,
+    /// Project a [`DeploymentPlan`] (whose mode must be
+    /// [`PdMode::Disagg`]) onto the disaggregation knobs.
+    pub fn from_plan(plan: &DeploymentPlan) -> anyhow::Result<Self> {
+        let PdMode::Disagg {
+            n_prefill,
+            n_decode,
+            prefill_stages,
+            decode_tp,
+        } = plan.mode
+        else {
+            anyhow::bail!("plan {} is not a disaggregation plan", plan.name);
+        };
+        // `plan.stages` mirrors the mode's prefill depth for reporting;
+        // a disagreement means the plan was hand-built inconsistently and
+        // some consumer would silently read the wrong half.
+        anyhow::ensure!(
+            plan.stages == prefill_stages,
+            "plan {}: stages ({}) disagrees with its disagg prefill_stages ({})",
+            plan.name,
+            plan.stages,
+            prefill_stages
+        );
+        Ok(DisaggConfig {
+            n_prefill,
+            n_decode,
+            prefill_tp: plan.tp,
+            prefill_stages,
+            decode_tp,
             policy: PdPlacementPolicy::PpPrioritized,
-            prefill_strategy: PartitionStrategy::OneDimMN,
-            decode_strategy: PartitionStrategy::OneDimK,
-            max_decode_batch: 32,
-            kv_share: 0.6,
-            prefix_cache: false,
-            hbm_tier: false,
-            cross_pipe: false,
-            memo: false,
-        }
+            prefill_strategy: plan.prefill_strategy,
+            decode_strategy: plan.decode_strategy,
+            m_threshold: plan.m_threshold,
+            max_decode_batch: plan.max_batch,
+            kv_share: plan.kv_share,
+            prefix_cache: plan.prefix_cache,
+            hbm_tier: plan.hbm_tier,
+            hbm_tier_frac: plan.hbm_tier_frac,
+            cross_pipe: plan.cross_pipe,
+            memo: plan.memo,
+        })
+    }
+
+    /// The paper's balanced optimum on the 64-core chip: P42/D21 at TP 7
+    /// (Fig. 11's "superior overall performance" configuration) —
+    /// projected from [`DeploymentPlan::disagg_default`] so the preset and
+    /// the config cannot drift.
+    pub fn p42_d21() -> Self {
+        Self::from_plan(&DeploymentPlan::disagg_default()).expect("static disagg preset")
     }
 
     /// A `P<p>/D<d>` ratio preset on the 64-core chip (Fig. 11 sweep).
@@ -139,6 +176,23 @@ mod tests {
         let w = WorkloadConfig::fixed_ratio(256, 16, 8);
         let m = run(&w, &DisaggConfig::default());
         assert_eq!(m.n_requests(), 8);
+    }
+
+    #[test]
+    fn p42_d21_pins_the_paper_preset_through_the_plan() {
+        // `p42_d21` now projects from `DeploymentPlan::disagg_default()`;
+        // pin the values the golden vectors were recorded with.
+        let d = DisaggConfig::p42_d21();
+        assert_eq!((d.n_prefill, d.n_decode), (42, 21));
+        assert_eq!((d.prefill_tp, d.prefill_stages, d.decode_tp), (7, 3, 7));
+        assert_eq!(d.policy, PdPlacementPolicy::PpPrioritized);
+        assert_eq!(d.prefill_strategy, PartitionStrategy::OneDimMN);
+        assert_eq!(d.decode_strategy, PartitionStrategy::OneDimK);
+        assert_eq!(d.m_threshold, 0, "phase switch must default off");
+        assert_eq!(d.max_decode_batch, 32);
+        assert_eq!(d.kv_share, 0.6);
+        // A fusion plan cannot masquerade as a disagg config.
+        assert!(DisaggConfig::from_plan(&DeploymentPlan::fusion_default()).is_err());
     }
 
     #[test]

@@ -15,6 +15,7 @@
 use crate::config::{ModelConfig, WorkloadConfig};
 use crate::parallel::partition::PartitionStrategy;
 use crate::parallel::placement::Placement;
+use crate::parallel::plan::{DeploymentPlan, PdMode};
 use crate::serving::metrics::Metrics;
 use crate::serving::request::Request;
 use crate::serving::scheduler::{self, FusionScheduler};
@@ -28,7 +29,14 @@ pub struct FusionConfig {
     /// Pipeline stages (fewer stages = more layers and more DP pipelines).
     pub stages: usize,
     pub placement: Placement,
+    /// Partition strategy for large-M GEMMs (and, with `m_threshold` 0,
+    /// for everything — the pre-plan behaviour).
     pub strategy: PartitionStrategy,
+    /// Partition strategy GEMMs below `m_threshold` fall back to
+    /// (Fig. 9's phase-aware switch; only read when `m_threshold > 0`).
+    pub small_m_strategy: PartitionStrategy,
+    /// Per-GEMM M threshold of the phase switch; `0` = static strategy.
+    pub m_threshold: u64,
     /// Chunked-prefill chunk size in tokens.
     pub chunk: usize,
     /// Per-iteration token budget (decode=1 unit, prefill chunk=`chunk`).
@@ -46,6 +54,10 @@ pub struct FusionConfig {
     /// blocks re-promote at charged HBM→SRAM cost. Requires
     /// `prefix_cache`; off = single-tier bit-exact behaviour.
     pub hbm_tier: bool,
+    /// Fraction of each worker's post-weight HBM KV capacity carved out
+    /// for the demoted-prefix tier (only read with `hbm_tier`; the former
+    /// fixed 1/8 share is the default).
+    pub hbm_tier_frac: f64,
     /// Cross-pipe prefix sharing: `enqueue` becomes cache-affinity-aware
     /// (requests score pipes by probed prefix overlap minus load gap
     /// instead of round-robin), and when the holding pipe is overloaded
@@ -63,25 +75,39 @@ pub struct FusionConfig {
     pub memo: bool,
 }
 
+impl FusionConfig {
+    /// Project a [`DeploymentPlan`] onto the fused-pipeline knobs — the
+    /// only constructor besides [`FusionConfig::default`] (which is this,
+    /// applied to [`DeploymentPlan::fusion_default`], so hardcoded
+    /// defaults cannot drift from the plan presets).
+    pub fn from_plan(plan: &DeploymentPlan) -> Self {
+        FusionConfig {
+            tp: plan.tp,
+            stages: plan.stages,
+            placement: plan.placement,
+            strategy: plan.prefill_strategy,
+            small_m_strategy: plan.decode_strategy,
+            m_threshold: plan.m_threshold,
+            chunk: plan.chunk,
+            budget: plan.budget,
+            max_batch: plan.max_batch,
+            kv_share: plan.kv_share,
+            prefix_cache: plan.prefix_cache,
+            hbm_tier: plan.hbm_tier,
+            hbm_tier_frac: plan.hbm_tier_frac,
+            cross_pipe: plan.cross_pipe,
+            affinity_gap: plan.affinity_gap,
+            memo: plan.memo,
+        }
+    }
+}
+
 impl Default for FusionConfig {
     fn default() -> Self {
         // §4.3.2: fusion prefers TP for both phases; chunked prefill keeps
         // the GEMM M small, where the AllReduce partition wins (§5.6).
-        FusionConfig {
-            tp: 4,
-            stages: 4,
-            placement: Placement::Ring,
-            strategy: PartitionStrategy::OneDimK,
-            chunk: 256,
-            budget: 288,
-            max_batch: 32,
-            kv_share: 0.6,
-            prefix_cache: false,
-            hbm_tier: false,
-            cross_pipe: false,
-            affinity_gap: 4,
-            memo: false,
-        }
+        debug_assert_eq!(DeploymentPlan::fusion_default().mode, PdMode::Fusion);
+        Self::from_plan(&DeploymentPlan::fusion_default())
     }
 }
 
@@ -118,6 +144,23 @@ mod tests {
         let mut chip = ChipSim::new(ChipConfig::large_core());
         let model = ModelConfig::qwen3_4b();
         simulate_fusion(&mut chip, &model, workload, cfg).unwrap()
+    }
+
+    #[test]
+    fn default_pins_the_legacy_hardcoded_layout() {
+        // `Default` now projects from `DeploymentPlan::fusion_default()`;
+        // this pin keeps the plan preset honest about the values every
+        // golden vector was recorded with.
+        let f = FusionConfig::default();
+        assert_eq!((f.tp, f.stages), (4, 4));
+        assert_eq!(f.placement, Placement::Ring);
+        assert_eq!(f.strategy, PartitionStrategy::OneDimK);
+        assert_eq!(f.small_m_strategy, PartitionStrategy::OneDimK);
+        assert_eq!(f.m_threshold, 0, "phase switch must default off");
+        assert_eq!((f.chunk, f.budget, f.max_batch), (256, 288, 32));
+        assert_eq!(f.kv_share, 0.6);
+        assert_eq!(f.hbm_tier_frac, 0.125, "the former fixed 1/8 carve");
+        assert_eq!(f.affinity_gap, 4);
     }
 
     #[test]

@@ -207,19 +207,27 @@ impl Scheduler for DisaggScheduler {
                     .iter()
                     .enumerate()
                     .map(|(s, g)| {
+                        // Whole prompts stream through these pipelines, so
+                        // the Fig. 9 phase switch matters here: short
+                        // prompts (M below the plan threshold) fall back
+                        // to the AllReduce partition per dist_gemm call.
+                        let exec = crate::model::exec::ExecConfig::new(
+                            cfg.prefill_strategy,
+                            lps[s].max(1),
+                            s + 1 == stages.len(),
+                        )
+                        .with_small_m(cfg.decode_strategy, cfg.m_threshold);
                         StageWorker::new(
                             &core,
                             model,
                             g.clone(),
-                            cfg.prefill_strategy,
-                            lps[s].max(1),
-                            s + 1 == stages.len(),
+                            exec,
                             2048,
                             cfg.kv_share,
                             max_tokens,
                         )
                         .with_prefix_cache(cfg.prefix_cache)
-                        .with_hbm_tier(cfg.prefix_cache && cfg.hbm_tier)
+                        .with_hbm_tier(cfg.prefix_cache && cfg.hbm_tier, cfg.hbm_tier_frac)
                         .with_memo(cfg.memo)
                     })
                     .collect()
@@ -235,9 +243,7 @@ impl Scheduler for DisaggScheduler {
                     &decode_core,
                     model,
                     g.clone(),
-                    cfg.decode_strategy,
-                    layers,
-                    true,
+                    crate::model::exec::ExecConfig::new(cfg.decode_strategy, layers, true),
                     cfg.max_decode_batch,
                     cfg.kv_share,
                     max_tokens,

@@ -30,6 +30,8 @@ use super::pipe::{self, Handoff, PendingDecode, Pipe};
 use super::Scheduler;
 use crate::config::ModelConfig;
 use crate::memmgr::prefix::{BlockKey, TierMatch};
+use crate::memmgr::KV_BLOCK_TOKENS;
+use crate::parallel::plan::DeploymentPlan;
 use crate::serving::metrics::Metrics;
 use crate::serving::pd_fusion::FusionConfig;
 use crate::serving::request::Request;
@@ -58,6 +60,18 @@ pub struct HybridConfig {
     pub ttft_slo_s: f64,
     /// TBT SLO target; sustained violations vote for more fused pipes.
     pub tbt_slo_s: f64,
+}
+
+impl HybridConfig {
+    /// Project a [`DeploymentPlan`] onto the hybrid knobs: the fused
+    /// layout comes from the plan, the controller keeps its defaults
+    /// (they are workload-adaptive, not deployment-shaped).
+    pub fn from_plan(plan: &DeploymentPlan) -> Self {
+        HybridConfig {
+            fusion: FusionConfig::from_plan(plan),
+            ..Self::default()
+        }
+    }
 }
 
 impl Default for HybridConfig {
@@ -231,9 +245,17 @@ impl HybridScheduler {
         self.repartitions += 1;
     }
 
-    /// Move a freshly prefilled request to the least-loaded fused pipe:
-    /// stream its KV shards over the NoC (disagg-style), then enqueue it
-    /// for decode admission there.
+    /// Move a freshly prefilled request to a fused pipe: stream its KV
+    /// shards over the NoC (disagg-style), then enqueue it for decode
+    /// admission there.
+    ///
+    /// Target selection is **cache-affinity-aware** (the ROADMAP tier
+    /// follow-up): with the prefix cache on, candidates are scored by the
+    /// same tier-weighted `probe_prefix` overlap `enqueue` routes by — a
+    /// fused pipe already holding the request's context keeps related
+    /// turns co-located — falling back to least decode load on ties (and
+    /// exactly least-loaded, the legacy rule, when nothing matches or the
+    /// cache is off).
     fn dispatch_handoff(
         &mut self,
         chip: &mut ChipSim,
@@ -241,9 +263,31 @@ impl HybridScheduler {
         src_pipe: usize,
         h: Handoff,
     ) -> anyhow::Result<()> {
+        let affinity: Vec<u64> = if self.cfg.fusion.prefix_cache {
+            let keys = h.req.block_keys(KV_BLOCK_TOKENS);
+            let limit = (h.req.input_len as u64).saturating_sub(1);
+            self.pipes
+                .iter()
+                .map(|p| {
+                    if keys.is_empty() {
+                        0
+                    } else {
+                        p.probe_prefix_tiered(&keys, limit, h.ready_at).score()
+                    }
+                })
+                .collect()
+        } else {
+            vec![0; self.pipes.len()]
+        };
         let dst = (0..self.pipes.len())
             .filter(|&i| self.roles[i] == Role::Fused)
-            .min_by_key(|&i| (self.pipes[i].decode_load(), i))
+            .min_by_key(|&i| {
+                (
+                    std::cmp::Reverse(affinity[i]),
+                    self.pipes[i].decode_load(),
+                    i,
+                )
+            })
             .ok_or_else(|| anyhow::anyhow!("hybrid scheduler has no fused pipeline"))?;
         let total_kv = h.req.input_len as u64 * model.kv_bytes_per_token();
         let src_stages: Vec<(Vec<Coord>, usize)> = self.pipes[src_pipe]
@@ -482,6 +526,34 @@ mod tests {
             "dwell violated: {} repartitions",
             sched.repartitions()
         );
+    }
+
+    #[test]
+    fn affinity_aware_handoffs_serve_shared_prefix_traffic() {
+        // Dedicated-prefill handoffs under the prefix cache route by
+        // tier-weighted cache overlap (least-loaded on ties): the run must
+        // stay deterministic and conserve every request/token.
+        let model = ModelConfig::qwen3_4b();
+        let w = crate::config::WorkloadConfig::shared_prefix(10).with_seed(23);
+        let cfg = eager(FusionConfig {
+            prefix_cache: true,
+            ..FusionConfig::default()
+        });
+        let run = || {
+            let mut chip = ChipSim::new(ChipConfig::large_core());
+            let mut sched = HybridScheduler::new(cfg);
+            let m = simulate(&mut chip, &model, &w, &mut sched).unwrap();
+            (m.records().to_vec(), sched.repartitions())
+        };
+        let (a, ra) = run();
+        let (b, rb) = run();
+        assert_eq!(a, b, "affinity handoff broke determinism");
+        assert_eq!(ra, rb);
+        assert_eq!(a.len(), 10);
+        for r in &a {
+            assert!(r.first_token >= r.arrival, "{r:?}");
+            assert!(r.finish >= r.first_token, "{r:?}");
+        }
     }
 
     #[test]

@@ -156,6 +156,19 @@ pub enum SchedulerConfig {
 }
 
 impl SchedulerConfig {
+    /// Build the scheduler configuration a
+    /// [`DeploymentPlan`](crate::parallel::plan::DeploymentPlan) describes
+    /// — the one entry point the CLI's `--plan` and the planner
+    /// experiments construct schedulers through.
+    pub fn from_plan(plan: &crate::parallel::plan::DeploymentPlan) -> anyhow::Result<Self> {
+        use crate::parallel::plan::PdMode;
+        Ok(match plan.mode {
+            PdMode::Fusion => SchedulerConfig::Fusion(FusionConfig::from_plan(plan)),
+            PdMode::Hybrid => SchedulerConfig::Hybrid(HybridConfig::from_plan(plan)),
+            PdMode::Disagg { .. } => SchedulerConfig::Disagg(DisaggConfig::from_plan(plan)?),
+        })
+    }
+
     pub fn name(&self) -> &'static str {
         match self {
             SchedulerConfig::Fusion(_) => "fusion",
@@ -237,6 +250,36 @@ mod tests {
                 assert!(r.finish >= r.first_token, "{}: {r:?}", cfg.name());
             }
         }
+    }
+
+    #[test]
+    fn every_plan_preset_builds_a_scheduler_that_serves() {
+        let model = ModelConfig::qwen3_4b();
+        let w = WorkloadConfig::fixed_ratio(96, 8, 3);
+        for plan in crate::parallel::plan::DeploymentPlan::presets() {
+            let cfg = SchedulerConfig::from_plan(&plan)
+                .unwrap_or_else(|e| panic!("{}: {e:#}", plan.name));
+            let mut chip = ChipSim::new(ChipConfig::large_core());
+            let mut sched = cfg.build();
+            let m = simulate(&mut chip, &model, &w, sched.as_mut())
+                .unwrap_or_else(|e| panic!("{} failed: {e:#}", plan.name));
+            assert_eq!(m.n_requests(), 3, "{}", plan.name);
+        }
+    }
+
+    #[test]
+    fn default_plan_projections_match_the_legacy_defaults() {
+        // The `--plan` unset path must stay bit-identical: the fusion /
+        // disagg / hybrid presets must project onto exactly the configs
+        // the schedulers defaulted to before plans existed.
+        use crate::parallel::plan::DeploymentPlan;
+        let f = FusionConfig::from_plan(&DeploymentPlan::fusion_default());
+        let fd = FusionConfig::default();
+        assert_eq!(format!("{f:?}"), format!("{fd:?}"));
+        let d = DisaggConfig::from_plan(&DeploymentPlan::disagg_default()).unwrap();
+        assert_eq!(format!("{d:?}"), format!("{:?}", DisaggConfig::default()));
+        let h = HybridConfig::from_plan(&DeploymentPlan::hybrid_default());
+        assert_eq!(format!("{h:?}"), format!("{:?}", HybridConfig::default()));
     }
 
     #[test]

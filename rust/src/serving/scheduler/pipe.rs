@@ -105,19 +105,23 @@ pub(crate) fn build_pipes(
                 .iter()
                 .enumerate()
                 .map(|(s, g)| {
+                    let exec = crate::model::exec::ExecConfig::new(
+                        cfg.strategy,
+                        lps[s].max(1),
+                        s + 1 == groups.len(),
+                    )
+                    .with_small_m(cfg.small_m_strategy, cfg.m_threshold);
                     StageWorker::new(
                         &core,
                         model,
                         g.clone(),
-                        cfg.strategy,
-                        lps[s].max(1),
-                        s + 1 == groups.len(),
+                        exec,
                         cfg.budget.max(cfg.chunk),
                         cfg.kv_share,
                         max_tokens,
                     )
                     .with_prefix_cache(cfg.prefix_cache)
-                    .with_hbm_tier(cfg.prefix_cache && cfg.hbm_tier)
+                    .with_hbm_tier(cfg.prefix_cache && cfg.hbm_tier, cfg.hbm_tier_frac)
                     .with_memo(cfg.memo)
                 })
                 .collect(),

@@ -9,17 +9,12 @@ use crate::memmgr::{KvCache, KV_BLOCK_TOKENS};
 use crate::model::exec::{group_now, run_iteration_memo, ExecConfig};
 use crate::model::memo::LatencyMemo;
 use crate::model::IterBatch;
-use crate::parallel::partition::PartitionStrategy;
 use crate::parallel::placement::TpGroup;
 use crate::sim::chip::ChipSim;
 use crate::sim::tracer::OpClass;
 use crate::util::units::Cycle;
 
-/// Fraction (denominator) of a worker's HBM KV region reserved for the
-/// demoted-prefix tier when [`StageWorker::with_hbm_tier`] enables it: the
-/// tier gets `1/HBM_TIER_SHARE_DIV` of the post-weight HBM capacity —
-/// plenty for cold prefixes while leaving the spill ring untouched.
-pub const HBM_TIER_SHARE_DIV: u64 = 8;
+pub use crate::parallel::plan::DEFAULT_HBM_TIER_FRAC;
 
 /// One TP group ready to execute iterations.
 #[derive(Debug)]
@@ -33,7 +28,8 @@ pub struct StageWorker {
 }
 
 impl StageWorker {
-    /// Build a worker for `layers` of `model` on `group`.
+    /// Build a worker executing `exec` (strategy + phase switch + stage
+    /// layer range + logits flag) on `group`.
     ///
     /// * `core`: the hardware resources of this group's cores (decode
     ///   workers pass the heterogeneous decode-core config).
@@ -42,19 +38,17 @@ impl StageWorker {
     /// * `max_tokens`: longest request (prompt + output) this worker must
     ///   hold KV for — sizes the per-request HBM reservation, so admission
     ///   control reflects the actual workload rather than `max_context`.
-    #[allow(clippy::too_many_arguments)]
     pub fn new(
         core: &CoreConfig,
         model: &ModelConfig,
         group: TpGroup,
-        strategy: PartitionStrategy,
-        layers: usize,
-        with_logits: bool,
+        exec: ExecConfig,
         iter_tokens: usize,
         kv_share: f64,
         max_tokens: usize,
     ) -> Self {
         let tp = group.len().max(1);
+        let layers = exec.layers;
         let p = plan(
             core,
             model,
@@ -78,7 +72,7 @@ impl StageWorker {
         );
         StageWorker {
             group,
-            exec: ExecConfig::new(strategy, layers, with_logits),
+            exec,
             plan: p,
             kv,
             memo: None,
@@ -95,13 +89,25 @@ impl StageWorker {
 
     /// Enable the demoted-prefix HBM tier on this worker (builder style;
     /// call after [`StageWorker::with_prefix_cache`] — the tier requires
-    /// the prefix cache). Reserves `1/`[`HBM_TIER_SHARE_DIV`] of the
-    /// worker's HBM KV capacity for cold demoted prefixes; no-op on
-    /// SRAM-only chips (nothing to demote into).
-    pub fn with_hbm_tier(mut self, on: bool) -> Self {
+    /// the prefix cache). Reserves `frac` of the worker's post-weight HBM
+    /// KV capacity for cold demoted prefixes
+    /// ([`DEFAULT_HBM_TIER_FRAC`] = the former fixed 1/8 share); no-op on
+    /// SRAM-only chips (nothing to demote into) and when the carve would
+    /// leave the spill ring unable to hold even one request
+    /// ([`KvCache::enable_hbm_tier`] validates that bound).
+    pub fn with_hbm_tier(mut self, on: bool, frac: f64) -> Self {
         if on {
-            let cap = self.kv.hbm_free_bytes() / HBM_TIER_SHARE_DIV;
-            self.kv.enable_hbm_tier(cap);
+            let cap = (self.kv.hbm_free_bytes() as f64 * frac.clamp(0.0, 1.0)) as u64;
+            // cap == 0 is the documented SRAM-only no-op; a non-zero carve
+            // that gets refused must not pass silently — the run would
+            // report zero demotions and look like the tier was exercised
+            // when it never existed.
+            if !self.kv.enable_hbm_tier(cap) && cap > 0 {
+                crate::log_warn!(
+                    "HBM tier refused on a worker: carve of {cap} bytes (frac {frac}) \
+                     would starve the spill ring; running single-tier"
+                );
+            }
         }
         self
     }
@@ -226,9 +232,7 @@ mod tests {
             &chip.cfg.core,
             &model,
             group,
-            PartitionStrategy::OneDimK,
-            4,
-            true,
+            ExecConfig::new(crate::parallel::partition::PartitionStrategy::OneDimK, 4, true),
             512,
             0.5,
             2048,
@@ -267,5 +271,28 @@ mod tests {
         let w = worker(&chip);
         w.advance_to(&mut chip, 12345);
         assert_eq!(w.now(&chip), 12345);
+    }
+
+    #[test]
+    fn hbm_tier_frac_scales_the_carve() {
+        let chip = ChipSim::new(ChipConfig::large_core());
+        let free = worker(&chip).kv.hbm_free_bytes();
+        let mk = |frac: f64| {
+            let mut w = worker(&chip);
+            w.kv.enable_prefix_cache();
+            w.with_hbm_tier(true, frac)
+        };
+        // The default fraction reproduces the former fixed 1/8 carve
+        // exactly (integer division and f64 * 0.125 agree bit-for-bit).
+        let d = mk(DEFAULT_HBM_TIER_FRAC);
+        assert!(d.kv.hbm_tier_enabled());
+        assert_eq!(d.kv.hbm_free_bytes(), free - free / 8);
+        // A bigger fraction carves a bigger region.
+        let big = mk(0.5);
+        assert!(big.kv.hbm_free_bytes() < d.kv.hbm_free_bytes());
+        // Out-of-range fractions clamp instead of wrapping.
+        let z = mk(-1.0);
+        assert!(!z.kv.hbm_tier_enabled());
+        assert_eq!(z.kv.hbm_free_bytes(), free);
     }
 }

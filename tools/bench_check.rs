@@ -11,13 +11,17 @@
 //! 1. **Structure**: the current file must contain the full prefix-cache
 //!    grid (3 schedulers × cache on/off), the full cluster grid
 //!    (shared-prefix + poisson workloads × fusion/disagg/hybrid ×
-//!    rr/least/prefix routers on ≥ 2 chips), and the tier ablation
-//!    (sram-only / hbm-tier / two-tier+noc).
+//!    rr/least/prefix routers on ≥ 2 chips), the tier ablation
+//!    (sram-only / hbm-tier / two-tier+noc), and the deployment-plan
+//!    study (one auto row plus the named presets).
 //! 2. **Invariants**: on the shared-prefix workload the prefix-hit-aware
 //!    router must beat round-robin on TTFT p50 for the fusion system (the
-//!    cluster acceptance property), cache-on must not lose TTFT, and the
+//!    cluster acceptance property), cache-on must not lose TTFT, the
 //!    two-tier configuration must skip strictly more prefill tokens than
-//!    SRAM-only caching (cross-pipe/HBM hits replace recomputation).
+//!    SRAM-only caching (cross-pipe/HBM hits replace recomputation), and
+//!    the auto plan's simulated wall-clock must not exceed the worst
+//!    enumerated preset's (the planner may not pick a known-bad
+//!    deployment).
 //! 3. **Numbers**: `tokens_per_s` must not drop, and `ttft_p99_s` must
 //!    not rise, by more than the tolerance against the matching baseline
 //!    row. A baseline marked `"provisional": true` skips this layer (the
@@ -160,6 +164,18 @@ fn check_structure(current: &Json, violations: &mut Vec<String>) {
             violations.push(format!("tier row missing: {config}"));
         }
     }
+    let plan = rows(current, "plan");
+    if !plan
+        .iter()
+        .any(|r| r.get("auto").and_then(|v| v.as_bool()) == Some(true))
+    {
+        violations.push("plan section has no auto row".into());
+    }
+    for preset in ["fusion", "fusion-mn", "disagg"] {
+        if !plan.iter().any(|r| r.str("plan") == Some(preset)) {
+            violations.push(format!("plan row missing: {preset}"));
+        }
+    }
 }
 
 /// `prefill_tokens_skipped` of one tier-ablation row.
@@ -217,6 +233,29 @@ fn check_invariants(current: &Json, violations: &mut Vec<String>) {
             }
         }
         _ => violations.push("cannot evaluate two-tier-vs-sram-only skip invariant".into()),
+    }
+    // The planner acceptance property: the auto plan's simulated
+    // wall-clock must not exceed the worst enumerated preset's.
+    let plan = rows(current, "plan");
+    let auto = plan
+        .iter()
+        .find(|r| r.get("auto").and_then(|v| v.as_bool()) == Some(true))
+        .and_then(|r| r.num("sim_makespan_s"));
+    let worst_preset = plan
+        .iter()
+        .filter(|r| r.get("auto").and_then(|v| v.as_bool()) == Some(false))
+        .filter_map(|r| r.num("sim_makespan_s"))
+        .fold(f64::NEG_INFINITY, f64::max);
+    match auto {
+        Some(auto) if worst_preset.is_finite() => {
+            if auto > worst_preset {
+                violations.push(format!(
+                    "auto plan's simulated makespan {auto} exceeds the worst preset's \
+                     {worst_preset}"
+                ));
+            }
+        }
+        _ => violations.push("cannot evaluate auto-plan-vs-worst-preset invariant".into()),
     }
 }
 
@@ -325,6 +364,32 @@ fn check_numbers(current: &Json, baseline: &Json, tol: f64, violations: &mut Vec
             &format!("{tag} ttft_p99_s"),
             c.num("ttft_p99_s"),
             b.num("ttft_p99_s"),
+            tol,
+            false,
+            violations,
+        );
+    }
+    // Plan study: match rows on the plan label.
+    let cur_plan = rows(current, "plan");
+    let base_plan = rows(baseline, "plan");
+    for b in &base_plan {
+        let label = b.str("plan").unwrap_or("");
+        let Some(c) = cur_plan.iter().find(|r| r.str("plan") == Some(label)) else {
+            violations.push(format!("plan row disappeared: {label}"));
+            continue;
+        };
+        check_metric(
+            &format!("plan {label} tokens_per_s"),
+            c.num("tokens_per_s"),
+            b.num("tokens_per_s"),
+            tol,
+            true,
+            violations,
+        );
+        check_metric(
+            &format!("plan {label} sim_makespan_s"),
+            c.num("sim_makespan_s"),
+            b.num("sim_makespan_s"),
             tol,
             false,
             violations,
