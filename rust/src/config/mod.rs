@@ -14,4 +14,4 @@ mod workload;
 pub use chip::{ChipConfig, CoreConfig, MemSimMode, NocConfig, NocSimMode};
 pub use loader::load_sim_config;
 pub use model::{ModelConfig, MoeConfig};
-pub use workload::{ArrivalProcess, LenDist, PrefixSharing, WorkloadConfig};
+pub use workload::{ArrivalProcess, LenDist, PrefixSharing, PriorityMix, WorkloadConfig};

@@ -61,6 +61,16 @@ pub enum ArrivalProcess {
         burst_size: usize,
         period_s: f64,
     },
+    /// Flash crowd: Poisson at `base_rate` until `spike_start_s`, then at
+    /// `peak_rate` for `spike_len_s` seconds, then back to `base_rate`.
+    /// The overload-study arrival process — `peak_rate` is picked past the
+    /// sustainable service rate so admission control actually engages.
+    FlashCrowd {
+        base_rate: f64,
+        peak_rate: f64,
+        spike_start_s: f64,
+        spike_len_s: f64,
+    },
 }
 
 /// Shared-prefix / multi-turn structure of a conversational workload
@@ -90,6 +100,41 @@ impl Default for PrefixSharing {
     }
 }
 
+/// Priority-class mix of a workload: the probability that a generated
+/// request is high- or low-priority (the remainder is normal). The
+/// default mix is empty — every request is normal-priority and the
+/// generator draws **no** extra random numbers, so pre-priority traces
+/// stay bit-identical (pinned by `tests/golden_metrics.rs`).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct PriorityMix {
+    /// Fraction of requests sampled as high-priority, in `[0, 1]`.
+    pub high: f64,
+    /// Fraction of requests sampled as low-priority, in `[0, 1]`.
+    pub low: f64,
+}
+
+impl PriorityMix {
+    /// True when every request is normal-priority (the inert default).
+    pub fn is_uniform(&self) -> bool {
+        self.high <= 0.0 && self.low <= 0.0
+    }
+
+    /// Parse a `"HIGH:LOW"` fraction pair (e.g. `"0.2:0.5"`), as taken
+    /// by the CLI's `--priority-mix` flag.
+    pub fn parse(s: &str) -> anyhow::Result<PriorityMix> {
+        let (h, l) = s
+            .split_once(':')
+            .ok_or_else(|| anyhow::anyhow!("--priority-mix wants HIGH:LOW, e.g. 0.2:0.5"))?;
+        let high: f64 = h.trim().parse()?;
+        let low: f64 = l.trim().parse()?;
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&high) && (0.0..=1.0).contains(&low) && high + low <= 1.0,
+            "priority mix fractions must be in [0, 1] and sum to at most 1, got {high}:{low}"
+        );
+        Ok(PriorityMix { high, low })
+    }
+}
+
 /// A complete workload description.
 #[derive(Debug, Clone, PartialEq)]
 pub struct WorkloadConfig {
@@ -103,6 +148,8 @@ pub struct WorkloadConfig {
     /// requests; `input_len` then means the whole prompt, otherwise it
     /// means the fresh per-turn user tokens on top of the shared context).
     pub prefix: Option<PrefixSharing>,
+    /// Priority-class mix (default: everything normal, no extra RNG draws).
+    pub priority_mix: PriorityMix,
 }
 
 impl WorkloadConfig {
@@ -127,6 +174,7 @@ impl WorkloadConfig {
             n_requests,
             seed: 2025,
             prefix: None,
+            priority_mix: PriorityMix::default(),
         }
     }
 
@@ -151,6 +199,7 @@ impl WorkloadConfig {
             n_requests,
             seed: 2025,
             prefix: None,
+            priority_mix: PriorityMix::default(),
         }
     }
 
@@ -174,6 +223,7 @@ impl WorkloadConfig {
             n_requests,
             seed: 2025,
             prefix: None,
+            priority_mix: PriorityMix::default(),
         }
     }
 
@@ -201,6 +251,7 @@ impl WorkloadConfig {
             n_requests,
             seed: 2025,
             prefix: None,
+            priority_mix: PriorityMix::default(),
         }
     }
 
@@ -215,6 +266,7 @@ impl WorkloadConfig {
             n_requests,
             seed: 2025,
             prefix: None,
+            priority_mix: PriorityMix::default(),
         }
     }
 
@@ -233,11 +285,17 @@ impl WorkloadConfig {
             n_requests,
             seed: 2025,
             prefix: Some(PrefixSharing::default()),
+            priority_mix: PriorityMix::default(),
         }
     }
 
     pub fn with_prefix(mut self, prefix: PrefixSharing) -> Self {
         self.prefix = Some(prefix);
+        self
+    }
+
+    pub fn with_priority_mix(mut self, mix: PriorityMix) -> Self {
+        self.priority_mix = mix;
         self
     }
 
@@ -292,6 +350,17 @@ mod tests {
     fn decode_dominated_is_output_heavy() {
         let w = WorkloadConfig::decode_dominated(10);
         assert!(w.output_len.mean() > 3.0 * w.input_len.mean());
+    }
+
+    #[test]
+    fn priority_mix_parses_and_validates() {
+        let m = PriorityMix::parse("0.2:0.5").unwrap();
+        assert_eq!(m, PriorityMix { high: 0.2, low: 0.5 });
+        assert!(!m.is_uniform());
+        assert!(PriorityMix::default().is_uniform());
+        assert!(PriorityMix::parse("0.8:0.5").is_err(), "sum > 1");
+        assert!(PriorityMix::parse("1.5:0.0").is_err(), "out of range");
+        assert!(PriorityMix::parse("nonsense").is_err());
     }
 
     #[test]

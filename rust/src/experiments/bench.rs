@@ -3,12 +3,15 @@
 //! conversational trace across all three schedulers, (2) the
 //! operator-latency memoization speedup on a fig13-style hardware sweep,
 //! (3) the multi-chip cluster grid (router × scheduler on 2 chips, via
-//! [`cluster_study::bench_grid`]), and (4) the two-tier prefix-cache
+//! [`cluster_study::bench_grid`]), (4) the two-tier prefix-cache
 //! ablation (SRAM-only vs HBM tier vs +cross-pipe NoC, via
-//! [`tier_study::bench_rows`]) — and writes all four to
+//! [`tier_study::bench_rows`]), and (5) the overload control plane
+//! (FIFO vs shed/defer under a 2x flash crowd, via
+//! [`overload_study::bench_rows`]) — and writes all of it to
 //! `BENCH_serving.json` (wall-clock sim time, simulated tokens/s,
-//! TTFT/TBT p50/p99, prefix-cache hit rate, memo hit rate). CI gates this
-//! file against `BENCH_baseline.json` with `tools/bench_check`.
+//! TTFT/TBT p50/p99, prefix-cache hit rate, memo hit rate,
+//! goodput-under-SLO). CI gates this file against `BENCH_baseline.json`
+//! with `tools/bench_check`.
 //!
 //! ```sh
 //! cargo run --release -p npusim -- experiment bench
@@ -16,6 +19,7 @@
 
 use crate::config::{ArrivalProcess, ChipConfig, ModelConfig, PrefixSharing, WorkloadConfig};
 use crate::experiments::cluster_study::{self, ClusterRun};
+use crate::experiments::overload_study::{self, OverloadRun};
 use crate::experiments::plan_study::{self, PlanRun};
 use crate::experiments::tier_study::{self, TierRun};
 use crate::experiments::Opts;
@@ -258,6 +262,7 @@ fn render_json(
     cluster: &[ClusterRun],
     tier: &[TierRun],
     plan: &[PlanRun],
+    slo: &[OverloadRun],
 ) -> String {
     let mut j = String::new();
     let _ = writeln!(j, "{{");
@@ -365,6 +370,31 @@ fn render_json(
         );
     }
     let _ = writeln!(j, "  ],");
+    let _ = writeln!(j, "  \"slo\": [");
+    for (i, r) in slo.iter().enumerate() {
+        let _ = writeln!(
+            j,
+            "    {{\"policy\": \"{}\", \"offered\": {}, \"completed\": {}, \"shed\": {}, \
+             \"deferrals\": {}, \"preemptions\": {}, \"resumes\": {}, \"slo_ttft_s\": {:.6}, \
+             \"goodput_tok_s\": {:.3}, \"tokens_per_s\": {:.3}, \"shed_rate\": {:.4}, \
+             \"ttft_p99_high_s\": {:.6}, \"ttft_p99_low_s\": {:.6}}}{}",
+            r.policy,
+            r.offered,
+            r.completed,
+            r.shed,
+            r.deferrals,
+            r.preemptions,
+            r.resumes,
+            r.slo_ttft_s,
+            r.goodput_tok_s,
+            r.tok_s,
+            r.shed_rate,
+            r.ttft_p99_high_s,
+            r.ttft_p99_low_s,
+            if i + 1 < slo.len() { "," } else { "" }
+        );
+    }
+    let _ = writeln!(j, "  ],");
     let _ = writeln!(
         j,
         "  \"memo\": {{\"sweep\": \"fig13-mini\", \"wall_off_s\": {:.6}, \"wall_on_s\": {:.6}, \
@@ -383,6 +413,7 @@ pub fn run(opts: &Opts) -> anyhow::Result<Vec<Table>> {
     let cluster = cluster_study::bench_grid(opts)?;
     let tier = tier_study::bench_rows(opts)?;
     let plan = plan_study::bench_rows(opts)?;
+    let slo = overload_study::bench_rows(opts)?;
 
     let mut t1 = Table::new(
         "bench — prefix-sharing paged KV on the shared-prefix trace (Qwen3-4B, 64 cores)",
@@ -509,6 +540,30 @@ pub fn run(opts: &Opts) -> anyhow::Result<Vec<Table>> {
         ]);
     }
 
+    let mut t6 = Table::new(
+        "bench — overload control plane (flash crowd at 2x sustainable rate, 2 chips)",
+        &[
+            "policy",
+            "offered",
+            "completed",
+            "shed",
+            "goodput tok/s (SLO)",
+            "TTFT p99 high (s)",
+            "TTFT p99 low (s)",
+        ],
+    );
+    for r in &slo {
+        t6.row(&[
+            r.policy.to_string(),
+            r.offered.to_string(),
+            r.completed.to_string(),
+            format!("{} ({:.0}%)", r.shed, r.shed_rate * 100.0),
+            f3(r.goodput_tok_s),
+            f3(r.ttft_p99_high_s),
+            f3(r.ttft_p99_low_s),
+        ]);
+    }
+
     let cluster_rr = cluster_study::ttft_p50(&cluster, "shared-prefix", "fusion", "rr");
     let cluster_prefix = cluster_study::ttft_p50(&cluster, "shared-prefix", "fusion", "prefix");
     println!(
@@ -527,13 +582,13 @@ pub fn run(opts: &Opts) -> anyhow::Result<Vec<Table>> {
     // BENCH_serving.json: one copy beside the CSVs, one at the repo root
     // (the canonical location the README documents and CI gates on).
     if let Some(dir) = &opts.out_dir {
-        let json = render_json(&runs, &memo, shared_fraction, &cluster, &tier, &plan);
+        let json = render_json(&runs, &memo, shared_fraction, &cluster, &tier, &plan, &slo);
         std::fs::create_dir_all(dir)?;
         std::fs::write(dir.join("BENCH_serving.json"), &json)?;
         std::fs::write("BENCH_serving.json", &json)?;
     }
 
-    Ok(vec![t1, t2, t3, t4, t5])
+    Ok(vec![t1, t2, t3, t4, t5, t6])
 }
 
 #[cfg(test)]
@@ -646,7 +701,22 @@ mod tests {
             tok_s: 900.0,
             ttft_p50_s: 0.02,
         }];
-        let j = render_json(&runs, &memo, 0.6, &cluster, &tier, &plan);
+        let slo = vec![OverloadRun {
+            policy: "drop",
+            offered: 96,
+            completed: 60,
+            shed: 36,
+            deferrals: 0,
+            preemptions: 4,
+            resumes: 4,
+            slo_ttft_s: 0.05,
+            goodput_tok_s: 800.0,
+            tok_s: 850.0,
+            shed_rate: 0.375,
+            ttft_p99_high_s: 0.02,
+            ttft_p99_low_s: 0.4,
+        }];
+        let j = render_json(&runs, &memo, 0.6, &cluster, &tier, &plan, &slo);
         assert!(j.starts_with("{\n"));
         assert!(j.trim_end().ends_with('}'));
         assert_eq!(j.matches('{').count(), j.matches('}').count());
@@ -658,5 +728,8 @@ mod tests {
         assert!(j.contains("\"tier_demotions\": 7"));
         assert!(j.contains("\"plan\": \"auto\""));
         assert!(j.contains("\"sim_rank\": 1"));
+        assert!(j.contains("\"policy\": \"drop\""));
+        assert!(j.contains("\"goodput_tok_s\": 800.000"));
+        assert!(j.contains("\"shed_rate\": 0.3750"));
     }
 }

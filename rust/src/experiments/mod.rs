@@ -20,6 +20,7 @@
 //! | `cluster_study` | multi-chip: chips × router × scheduler | [`cluster_study`] |
 //! | `tier_study` | two-tier prefix cache: SRAM-only vs HBM tier vs +cross-pipe NoC | [`tier_study`] |
 //! | `plan_study` | auto-planner: analytic plan ranking vs simulated | [`plan_study`] |
+//! | `overload_study` | flash crowd at 2x load: FIFO vs shed/defer control plane | [`overload_study`] |
 
 pub mod ablations;
 pub mod bench;
@@ -34,6 +35,7 @@ pub mod fig8;
 pub mod fig9;
 pub mod headline;
 pub mod hybrid_study;
+pub mod overload_study;
 pub mod plan_study;
 pub mod reference_hw;
 pub mod table2;
@@ -83,6 +85,7 @@ impl Opts {
 pub const ALL: &[&str] = &[
     "table2", "fig7a", "fig7b", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13", "fig14",
     "headline", "ablations", "hybrid_study", "bench", "cluster_study", "tier_study", "plan_study",
+    "overload_study",
 ];
 
 /// Run one experiment by id; returns its tables (already printed).
@@ -105,6 +108,7 @@ pub fn run(id: &str, opts: &Opts) -> anyhow::Result<Vec<Table>> {
         "cluster_study" => cluster_study::run(opts)?,
         "tier_study" => tier_study::run(opts)?,
         "plan_study" => plan_study::run(opts)?,
+        "overload_study" => overload_study::run(opts)?,
         other => anyhow::bail!("unknown experiment {other:?} (try one of {ALL:?})"),
     };
     for t in &tables {

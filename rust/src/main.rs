@@ -9,12 +9,13 @@
 //! ```
 
 use anyhow::{Context, Result};
-use npusim::config::{ChipConfig, ModelConfig, WorkloadConfig};
+use npusim::config::{ChipConfig, ModelConfig, PriorityMix, WorkloadConfig};
 use npusim::coordinator::{Coordinator, GenRequest};
 use npusim::experiments::{self, Opts};
 use npusim::parallel::plan::{self, DeploymentPlan};
 use npusim::serving::cluster::{
     simulate_cluster, simulate_cluster_requests, ClusterConfig, ClusterMetrics, RouterPolicy,
+    ShedPolicy,
 };
 use npusim::serving::pd_disagg::{simulate_disagg, DisaggConfig};
 use npusim::serving::pd_fusion::{simulate_fusion, FusionConfig};
@@ -56,6 +57,7 @@ fn dispatch(args: &Args) -> Result<()> {
                  npusim simulate --mode hybrid --shared-prefix 1024 --prefix-cache --memo\n      \
                  npusim simulate --prefix-cache --hbm-tier --cross-pipe --shared-prefix 1024\n      \
                  npusim simulate --chips 4 --router prefix --prefix-cache --shared-prefix 1024\n      \
+                 npusim simulate --chips 2 --priority-mix 0.2:0.3 --shed-policy drop --slo-ttft 1.0\n      \
                  npusim serve --prompt \"1,2,3,4\""
             );
             Ok(())
@@ -236,7 +238,18 @@ fn sched_cfg_from(args: &Args, mode: &str) -> Result<SchedulerConfig> {
     })
 }
 
-fn print_cluster(name: &str, cm: &ClusterMetrics) {
+/// Overload control-plane knobs shared by both cluster paths
+/// (`--shed-policy none|drop|defer`, `--queue-cap N`, `--slo-ttft S`).
+fn apply_control_plane(args: &Args, mut cfg: ClusterConfig) -> Result<ClusterConfig> {
+    if let Some(policy) = args.opt("shed-policy") {
+        let cap = args.opt_parse_or("queue-cap", cfg.queue_cap)?;
+        cfg = cfg.with_shed(ShedPolicy::parse(policy)?, cap);
+    }
+    cfg.slo_ttft_s = args.opt_parse_or("slo-ttft", cfg.slo_ttft_s)?;
+    Ok(cfg)
+}
+
+fn print_cluster(name: &str, cm: &ClusterMetrics, slo_ttft_s: f64) {
     let mut t = Table::new(
         &format!("cluster serving — {name}"),
         &[
@@ -285,6 +298,29 @@ fn print_cluster(name: &str, cm: &ClusterMetrics) {
             "prefix cache: hit rate {:.1}%, {} prefill tokens skipped",
             c.prefix_hit_rate() * 100.0,
             c.prefill_tokens_skipped
+        );
+    }
+    // Control-plane lines only when the overload machinery actually ran,
+    // so legacy invocations keep byte-identical output.
+    let ctl = &agg.control;
+    if ctl.shed_requests + ctl.deferrals + ctl.preemptions + ctl.resumes > 0 {
+        println!(
+            "control plane: shed {} (H/N/L {}/{}/{}), deferrals {}, preemptions {}, \
+             resumes {} (mean resume wait {:.0} cyc)",
+            ctl.shed_requests,
+            ctl.shed_by_class[2],
+            ctl.shed_by_class[1],
+            ctl.shed_by_class[0],
+            ctl.deferrals,
+            ctl.preemptions,
+            ctl.resumes,
+            ctl.mean_resume_wait()
+        );
+        println!(
+            "goodput under SLO (TTFT<{:.2}s, TBT<50ms): {:.1} tok/s  |  shed rate {:.1}%",
+            slo_ttft_s,
+            agg.goodput_tokens_per_s(slo_ttft_s, 0.050),
+            agg.shed_rate() * 100.0
         );
     }
 }
@@ -398,6 +434,14 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         workload.name = format!("{}+prefix{shared}", workload.name);
     }
 
+    // Priority classes (`--priority-mix HIGH:LOW`, e.g. `0.2:0.3`): the
+    // remainder of the mass is normal-priority. Unset = every request is
+    // normal and the generator stays bit-identical to the legacy trace.
+    if let Some(mix) = args.opt("priority-mix") {
+        workload = workload.with_priority_mix(PriorityMix::parse(mix)?);
+        workload.name = format!("{}+prio{mix}", workload.name);
+    }
+
     // Trace replay (`--trace file.jsonl`) overrides the synthetic workload.
     let trace = match args.opt("trace") {
         Some(path) => Some(npusim::serving::trace::load_jsonl(
@@ -417,6 +461,17 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let n_chips = args.opt_parse_or::<usize>("chips", 1)?;
     if n_chips <= 1 && (args.opt("router").is_some() || args.opt("migrate-gap").is_some()) {
         anyhow::bail!("--router/--migrate-gap need a multi-chip cluster: pass --chips N (N > 1)");
+    }
+    // The overload control plane (admission shedding, SLO accounting)
+    // lives in the cluster frontend, so its knobs need `--chips`.
+    if n_chips <= 1
+        && (args.opt("shed-policy").is_some()
+            || args.opt("queue-cap").is_some()
+            || args.opt("slo-ttft").is_some())
+    {
+        anyhow::bail!(
+            "--shed-policy/--queue-cap/--slo-ttft need a multi-chip cluster: pass --chips N (N > 1)"
+        );
     }
 
     // First-class deployment plan (`--plan auto|<preset>`): TP strategy,
@@ -466,6 +521,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             if let Some(gap) = args.opt_parse::<usize>("migrate-gap")? {
                 cluster_cfg.migrate_load_gap = gap;
             }
+            cluster_cfg = apply_control_plane(args, cluster_cfg)?;
             let cm = match trace {
                 Some(reqs) => simulate_cluster_requests(&cluster_cfg, &model, reqs)?,
                 None => simulate_cluster(&cluster_cfg, &model, &workload)?,
@@ -479,6 +535,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
                     workload.name
                 ),
                 &cm,
+                cluster_cfg.slo_ttft_s,
             );
             return Ok(());
         }
@@ -504,6 +561,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         if let Some(gap) = args.opt_parse::<usize>("migrate-gap")? {
             cluster_cfg.migrate_load_gap = gap;
         }
+        cluster_cfg = apply_control_plane(args, cluster_cfg)?;
         let cm = match trace {
             Some(reqs) => simulate_cluster_requests(&cluster_cfg, &model, reqs)?,
             None => simulate_cluster(&cluster_cfg, &model, &workload)?,
@@ -516,6 +574,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
                 workload.name
             ),
             &cm,
+            cluster_cfg.slo_ttft_s,
         );
         return Ok(());
     }

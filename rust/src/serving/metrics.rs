@@ -1,6 +1,7 @@
 //! Serving metrics: TTFT, TBT, end-to-end latency, throughput, SLO
 //! attainment — the quantities every figure in §5.5 reports.
 
+use crate::serving::request::Priority;
 use crate::util::stats::Summary;
 use crate::util::units::{cycles_to_secs, Cycle};
 
@@ -15,6 +16,8 @@ pub struct RequestRecord {
     pub finish: Cycle,
     pub input_tokens: u64,
     pub output_tokens: u64,
+    /// Scheduling class the request ran under.
+    pub priority: Priority,
 }
 
 impl RequestRecord {
@@ -127,6 +130,50 @@ impl CacheStats {
     }
 }
 
+/// Control-plane counters of one serving run: overload shedding and
+/// deferral at the cluster frontend, plus preemption/resume activity
+/// inside the chips. All zero with uniform priorities and no shed policy
+/// — the golden vectors pin that.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ControlStats {
+    /// Requests refused admission by the overload policy. A shed request
+    /// never produces a [`RequestRecord`] — shed and completed are
+    /// disjoint by construction.
+    pub shed_requests: u64,
+    /// Shed requests split by class (indexed by [`Priority::index`]).
+    pub shed_by_class: [u64; 3],
+    /// Admissions postponed by the `defer` policy (each retry counts).
+    pub deferrals: u64,
+    /// In-flight decodes parked so higher-priority work could run.
+    pub preemptions: u64,
+    /// Parked requests re-admitted from their parked KV (no recompute).
+    pub resumes: u64,
+    /// Total cycles resumed requests spent parked (resume latency sum).
+    pub resume_wait_cycles: u64,
+}
+
+impl ControlStats {
+    /// Mean park→resume latency in cycles (0 when nothing resumed).
+    pub fn mean_resume_wait(&self) -> f64 {
+        if self.resumes == 0 {
+            return 0.0;
+        }
+        self.resume_wait_cycles as f64 / self.resumes as f64
+    }
+
+    /// Fold another run's counters into this one (cluster rollups).
+    pub fn merge(&mut self, o: &ControlStats) {
+        self.shed_requests += o.shed_requests;
+        for (a, b) in self.shed_by_class.iter_mut().zip(o.shed_by_class) {
+            *a += b;
+        }
+        self.deferrals += o.deferrals;
+        self.preemptions += o.preemptions;
+        self.resumes += o.resumes;
+        self.resume_wait_cycles += o.resume_wait_cycles;
+    }
+}
+
 /// Aggregated metrics over a serving run.
 #[derive(Debug, Clone, Default)]
 pub struct Metrics {
@@ -134,6 +181,9 @@ pub struct Metrics {
     freq_mhz: f64,
     /// Prefix-cache / memo counters (filled by the schedulers).
     pub cache: CacheStats,
+    /// Control-plane counters (filled by the schedulers and the cluster
+    /// admission frontend).
+    pub control: ControlStats,
 }
 
 impl Metrics {
@@ -142,6 +192,7 @@ impl Metrics {
             records: Vec::new(),
             freq_mhz,
             cache: CacheStats::default(),
+            control: ControlStats::default(),
         }
     }
 
@@ -175,6 +226,7 @@ impl Metrics {
         );
         self.records.extend_from_slice(&other.records);
         self.cache.merge(&other.cache);
+        self.control.merge(&other.control);
     }
 
     pub fn n_requests(&self) -> usize {
@@ -245,12 +297,57 @@ impl Metrics {
         let ok = self
             .records
             .iter()
-            .filter(|r| {
-                cycles_to_secs(r.ttft(), self.freq_mhz) <= ttft_target_s
-                    && r.tbt_secs(self.freq_mhz) <= tbt_target_s
-            })
+            .filter(|r| self.meets_slo(r, ttft_target_s, tbt_target_s))
             .count();
         ok as f64 / self.records.len() as f64
+    }
+
+    fn meets_slo(&self, r: &RequestRecord, ttft_target_s: f64, tbt_target_s: f64) -> bool {
+        cycles_to_secs(r.ttft(), self.freq_mhz) <= ttft_target_s
+            && r.tbt_secs(self.freq_mhz) <= tbt_target_s
+    }
+
+    /// **Goodput under SLO**: output tokens/s counting only requests that
+    /// met both latency targets — the overload-study headline. Shed or
+    /// SLO-violating requests contribute to the makespan but not to the
+    /// numerator, so an overloaded FIFO frontend scores low even at full
+    /// raw throughput.
+    pub fn goodput_tokens_per_s(&self, ttft_target_s: f64, tbt_target_s: f64) -> f64 {
+        let span = cycles_to_secs(self.makespan(), self.freq_mhz);
+        if span <= 0.0 {
+            return 0.0;
+        }
+        let tokens: u64 = self
+            .records
+            .iter()
+            .filter(|r| self.meets_slo(r, ttft_target_s, tbt_target_s))
+            .map(|r| r.output_tokens)
+            .sum();
+        tokens as f64 / span
+    }
+
+    /// Fraction of offered requests the admission policy shed.
+    pub fn shed_rate(&self) -> f64 {
+        let offered = self.control.shed_requests + self.records.len() as u64;
+        if offered == 0 {
+            return 0.0;
+        }
+        self.control.shed_requests as f64 / offered as f64
+    }
+
+    /// TTFT distribution in seconds restricted to one priority class.
+    pub fn ttft_s_of(&self, class: Priority) -> Summary {
+        Summary::from_samples(
+            self.records
+                .iter()
+                .filter(|r| r.priority == class)
+                .map(|r| cycles_to_secs(r.ttft(), self.freq_mhz)),
+        )
+    }
+
+    /// Completed-request count of one priority class.
+    pub fn n_requests_of(&self, class: Priority) -> usize {
+        self.records.iter().filter(|r| r.priority == class).count()
     }
 }
 
@@ -266,6 +363,7 @@ mod tests {
             finish,
             input_tokens: 100,
             output_tokens: out,
+            priority: Priority::Normal,
         }
     }
 

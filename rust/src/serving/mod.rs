@@ -30,13 +30,13 @@ pub mod worker;
 
 pub use cluster::{
     simulate_cluster, simulate_cluster_mixed, simulate_cluster_requests, ClusterConfig,
-    ClusterMetrics, Router, RouterPolicy,
+    ClusterMetrics, Router, RouterPolicy, ShedPolicy,
 };
 pub use layout::PipelineLayout;
 pub use metrics::{CacheStats, Metrics, RequestRecord};
 pub use pd_disagg::{simulate_disagg, DisaggConfig};
 pub use pd_fusion::{simulate_fusion, FusionConfig};
-pub use request::{Prefix, Request};
+pub use request::{Prefix, Priority, Request};
 pub use scheduler::{HybridConfig, HybridScheduler, Scheduler, SchedulerConfig};
 pub use trace::{load_jsonl, parse_jsonl};
 pub use worker::StageWorker;

@@ -5,9 +5,50 @@
 //! plus shared-prefix / multi-turn conversational traces for the
 //! prefix-caching study.
 
-use crate::config::{ArrivalProcess, PrefixSharing, WorkloadConfig};
+use crate::config::{ArrivalProcess, PrefixSharing, PriorityMix, WorkloadConfig};
 use crate::memmgr::prefix::BlockKey;
 use crate::util::rng::Rng;
+
+/// Scheduling class of a request, carried end-to-end from the workload
+/// generator through routing, admission and per-pipe batching. The
+/// derive order makes comparisons read naturally:
+/// `Low < Normal < High`, so "may `a` preempt `b`" is
+/// `a.priority > b.priority`. `Normal` is the default — a trace with no
+/// mix configured behaves exactly like the pre-priority simulator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum Priority {
+    Low,
+    #[default]
+    Normal,
+    High,
+}
+
+impl Priority {
+    /// All classes, lowest first (matches the derive order).
+    pub const ALL: [Priority; 3] = [Priority::Low, Priority::Normal, Priority::High];
+
+    /// Stable index for per-class counters (`0 = low, 1 = normal, 2 = high`).
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::Low => "low",
+            Priority::Normal => "normal",
+            Priority::High => "high",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Priority> {
+        match s {
+            "low" => Ok(Priority::Low),
+            "normal" => Ok(Priority::Normal),
+            "high" => Ok(Priority::High),
+            other => anyhow::bail!("unknown priority {other:?} (low|normal|high)"),
+        }
+    }
+}
 
 /// Content identity of a request's shareable prompt prefix, at two scopes:
 ///
@@ -51,6 +92,8 @@ pub struct Request {
     pub output_len: usize,
     /// Shareable-prefix identity (default: nothing shareable).
     pub prefix: Prefix,
+    /// Scheduling class (default: [`Priority::Normal`]).
+    pub priority: Priority,
 }
 
 impl Request {
@@ -143,6 +186,40 @@ fn next_arrival(
                 *t
             }
         }
+        ArrivalProcess::FlashCrowd {
+            base_rate,
+            peak_rate,
+            spike_start_s,
+            spike_len_s,
+        } => {
+            // Inhomogeneous Poisson with a rectangular rate spike: the
+            // next gap is drawn at the rate in force *now*, which is the
+            // standard thinning-free approximation for step rates.
+            let rate = if *t >= spike_start_s && *t < spike_start_s + spike_len_s {
+                peak_rate
+            } else {
+                base_rate
+            };
+            *t += rng.exponential(rate);
+            *t
+        }
+    }
+}
+
+/// Sample a priority class from the workload's mix. The inert default mix
+/// performs **no** RNG draw, so traces generated before priorities existed
+/// keep their exact byte-level timelines (pinned by golden tests).
+fn sample_priority(mix: &PriorityMix, rng: &mut Rng) -> Priority {
+    if mix.is_uniform() {
+        return Priority::Normal;
+    }
+    let u = rng.f64();
+    if u < mix.high {
+        Priority::High
+    } else if u < mix.high + mix.low {
+        Priority::Low
+    } else {
+        Priority::Normal
     }
 }
 
@@ -167,6 +244,7 @@ fn generate_plain(w: &WorkloadConfig) -> Vec<Request> {
             input_len: w.input_len.sample(&mut rng).max(1),
             output_len: w.output_len.sample(&mut rng).max(1),
             prefix: Prefix::default(),
+            priority: sample_priority(&w.priority_mix, &mut rng),
         });
     }
     out.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
@@ -214,6 +292,7 @@ fn generate_shared(w: &WorkloadConfig, ps: PrefixSharing) -> Vec<Request> {
                     conv_id: conv,
                     conv_tokens: conv_tokens.min(u32::MAX as usize) as u32,
                 },
+                priority: sample_priority(&w.priority_mix, &mut rng),
             });
             context = input_len + output_len;
             id += 1;
@@ -332,6 +411,7 @@ mod tests {
             input_len: 200,
             output_len: 8,
             prefix: ps,
+            priority: Priority::Normal,
         };
         // Same group, different conversation: shares the group blocks.
         let b = Request {
@@ -340,6 +420,7 @@ mod tests {
             input_len: 150,
             output_len: 8,
             prefix: Prefix { conv_id: 101, ..ps },
+            priority: Priority::Normal,
         };
         let (ka, kb) = (a.block_keys(16), b.block_keys(16));
         // 40 tokens = 2 full group blocks + 1 partial block still fully
@@ -383,6 +464,7 @@ mod tests {
                 conv_id: 100,
                 conv_tokens: 210,
             },
+            priority: Priority::Normal,
         };
         let kc = c.block_keys(16);
         assert_eq!(kc[0], ka[0]);
@@ -395,6 +477,80 @@ mod tests {
             ..a
         };
         assert!(d.block_keys(16).is_empty());
+    }
+
+    #[test]
+    fn default_mix_generates_all_normal_without_perturbing_the_trace() {
+        // A workload with no priority mix must generate the exact same
+        // lengths/arrivals as before priorities existed (no RNG draws),
+        // with every request normal-class.
+        let w = WorkloadConfig::sharegpt_like(32);
+        let reqs = generate(&w);
+        assert!(reqs.iter().all(|r| r.priority == Priority::Normal));
+        // And turning the mix on changes only the priorities: the
+        // (id, arrival, lengths) tuples stay identical because the
+        // priority draw happens after the length draws of each request.
+        let mixed = generate(
+            &w.clone()
+                .with_priority_mix(crate::config::PriorityMix { high: 0.25, low: 0.25 }),
+        );
+        assert_eq!(reqs.len(), mixed.len());
+        for (a, b) in reqs.iter().zip(&mixed) {
+            assert_eq!(
+                (a.id, a.arrival_s, a.input_len, a.output_len),
+                (b.id, b.arrival_s, b.input_len, b.output_len)
+            );
+        }
+        assert!(mixed.iter().any(|r| r.priority == Priority::High));
+        assert!(mixed.iter().any(|r| r.priority == Priority::Low));
+    }
+
+    #[test]
+    fn flash_crowd_spike_compresses_arrival_gaps() {
+        let mut w = WorkloadConfig::sharegpt_like(200);
+        w = w.with_arrival(ArrivalProcess::FlashCrowd {
+            base_rate: 2.0,
+            peak_rate: 50.0,
+            spike_start_s: 5.0,
+            spike_len_s: 10.0,
+        });
+        let reqs = generate(&w);
+        for pair in reqs.windows(2) {
+            assert!(pair[0].arrival_s <= pair[1].arrival_s);
+        }
+        let mean_gap = |lo: f64, hi: f64| {
+            let pts: Vec<f64> = reqs
+                .iter()
+                .map(|r| r.arrival_s)
+                .filter(|a| (lo..hi).contains(a))
+                .collect();
+            if pts.len() < 2 {
+                f64::INFINITY
+            } else {
+                (pts[pts.len() - 1] - pts[0]) / (pts.len() - 1) as f64
+            }
+        };
+        let before = mean_gap(0.0, 5.0);
+        let during = mean_gap(5.0, 15.0);
+        assert!(
+            during < before / 4.0,
+            "spike gap {during} not ≪ base gap {before}"
+        );
+        // Deterministic for the seed.
+        assert_eq!(reqs, generate(&w));
+    }
+
+    #[test]
+    fn priority_ordering_reads_naturally() {
+        assert!(Priority::High > Priority::Normal);
+        assert!(Priority::Normal > Priority::Low);
+        assert_eq!(Priority::default(), Priority::Normal);
+        assert_eq!(Priority::Low.index(), 0);
+        assert_eq!(Priority::High.index(), 2);
+        for p in Priority::ALL {
+            assert_eq!(Priority::parse(p.name()).unwrap(), p);
+        }
+        assert!(Priority::parse("urgent").is_err());
     }
 
     #[test]

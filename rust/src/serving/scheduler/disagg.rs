@@ -83,22 +83,44 @@ impl DisaggScheduler {
         }
     }
 
-    /// Earliest actionable prefill `(pipeline, cycle)` and decode
-    /// `(group, cycle)` — one selection rule shared by `step` (which acts
-    /// on it) and `next_action` (which only reports it), so the two can
-    /// never disagree about what is actionable.
+    /// The prompt the next prefill pull takes: the highest-class *arrived*
+    /// prompt (stable FIFO within a class), falling back to the front —
+    /// whose arrival sets the wake-up time — while nothing has arrived.
+    /// Uniform-priority queues always pick the front (the arrived set is a
+    /// prefix of the arrival-sorted queue), reducing to the legacy pull.
+    fn next_prompt(&self, chip: &ChipSim, freq: f64) -> Option<usize> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let t_ref = self
+            .pipelines
+            .iter()
+            .map(|p| p[0].now(chip))
+            .min()
+            .unwrap_or(0);
+        Some(
+            (0..self.queue.len())
+                .filter(|&i| secs_to_cycles(self.queue[i].arrival_s, freq) <= t_ref)
+                .min_by_key(|&i| (std::cmp::Reverse(self.queue[i].priority), i))
+                .unwrap_or(0),
+        )
+    }
+
+    /// Earliest actionable prefill `(pipeline, queue index, cycle)` and
+    /// decode `(group, cycle)` — one selection rule shared by `step`
+    /// (which acts on it) and `next_action` (which only reports it), so
+    /// the two can never disagree about what is actionable.
     ///
     /// With `cross_pipe` the prefill pull is **cache-affinity-aware**: the
-    /// front prompt goes to the pipeline holding its best cached-and-ready
+    /// pulled prompt goes to the pipeline holding its best cached-and-ready
     /// prefix (tier-weighted score; ties → earliest available, then lower
     /// index) instead of whichever pipeline frees first, so a correctly
     /// routed request no longer lands on a non-caching pipeline.
-    fn actions(&self, chip: &ChipSim) -> (Option<(usize, Cycle)>, Option<(usize, Cycle)>) {
+    #[allow(clippy::type_complexity)]
+    fn actions(&self, chip: &ChipSim) -> (Option<(usize, usize, Cycle)>, Option<(usize, Cycle)>) {
         let freq = chip.cfg.freq_mhz;
-        let prefill = if self.queue.is_empty() {
-            None
-        } else {
-            let front = self.queue.front().unwrap();
+        let prefill = if let Some(qi) = self.next_prompt(chip, freq) {
+            let front = &self.queue[qi];
             let arrival = secs_to_cycles(front.arrival_s, freq);
             let cands: Vec<(usize, Cycle)> = self
                 .pipelines
@@ -142,7 +164,11 @@ impl DisaggScheduler {
             } else {
                 None
             };
-            affinity.or_else(|| cands.into_iter().min_by_key(|&(_, t)| t))
+            affinity
+                .or_else(|| cands.into_iter().min_by_key(|&(_, t)| t))
+                .map(|(i, t)| (i, qi, t))
+        } else {
+            None
         };
         let decode = self
             .groups
@@ -273,21 +299,23 @@ impl Scheduler for DisaggScheduler {
         let (prefill_action, decode_action) = self.actions(chip);
 
         match (prefill_action, decode_action) {
-            (Some((pi, tp_)), Some((_, td))) if tp_ <= td => run_prefill(
+            (Some((pi, qi, tp_)), Some((_, td))) if tp_ <= td => run_prefill(
                 chip,
                 model,
                 &mut self.pipelines[pi],
                 &mut self.queue,
+                qi,
                 &mut self.groups,
                 metrics,
                 freq,
                 self.cfg.prefix_cache,
             ),
-            (Some((pi, _)), None) => run_prefill(
+            (Some((pi, qi, _)), None) => run_prefill(
                 chip,
                 model,
                 &mut self.pipelines[pi],
                 &mut self.queue,
+                qi,
                 &mut self.groups,
                 metrics,
                 freq,
@@ -308,7 +336,7 @@ impl Scheduler for DisaggScheduler {
 
     fn next_action(&self, chip: &ChipSim) -> Option<Cycle> {
         let (prefill, decode) = self.actions(chip);
-        match (prefill.map(|(_, t)| t), decode.map(|(_, t)| t)) {
+        match (prefill.map(|(_, _, t)| t), decode.map(|(_, t)| t)) {
             (None, None) => None,
             (a, b) => Some(a.unwrap_or(Cycle::MAX).min(b.unwrap_or(Cycle::MAX))),
         }
@@ -329,6 +357,16 @@ impl Scheduler for DisaggScheduler {
             .map(|g| g.worker.kv.utilization())
             .sum::<f64>()
             / self.groups.len() as f64
+    }
+
+    fn backpressure(&self) -> f64 {
+        // Decode-group admission slots gate steady-state throughput; the
+        // global prompt queue measured against twice those slots, max'd
+        // with decode KV occupancy, is how saturated this chip looks to
+        // the cluster frontend.
+        let slots = self.cfg.max_decode_batch.max(1) * self.groups.len().max(1);
+        let q = (self.pending_work() as f64 / (2 * slots) as f64).min(1.0);
+        q.max(self.kv_utilization())
     }
 
     fn probe_prefix(&self, keys: &[BlockKey], limit: u64, at: Cycle) -> u64 {
@@ -390,12 +428,13 @@ fn run_prefill(
     model: &ModelConfig,
     pipeline: &mut [StageWorker],
     queue: &mut VecDeque<Request>,
+    qi: usize,
     groups: &mut [DecodeGroup],
     metrics: &mut Metrics,
     freq: f64,
     prefix_cache: bool,
 ) -> anyhow::Result<usize> {
-    let r = queue.pop_front().expect("caller checked");
+    let r = queue.remove(qi).expect("caller checked");
     let arrival = secs_to_cycles(r.arrival_s, freq);
     pipeline[0].advance_to(chip, arrival);
     let now = pipeline[0].now(chip);
@@ -444,6 +483,7 @@ fn run_prefill(
             finish,
             input_tokens: r.input_len as u64,
             output_tokens: 1,
+            priority: r.priority,
         });
         return Ok(1);
     }
@@ -534,6 +574,7 @@ fn decode_tick(
                 finish,
                 input_tokens: a.req.input_len as u64,
                 output_tokens: a.req.output_len as u64,
+                priority: a.req.priority,
             });
             completions += 1;
         } else {

@@ -259,6 +259,10 @@ impl Scheduler for FusionScheduler {
         pipe::mean_kv_utilization(&self.pipes)
     }
 
+    fn backpressure(&self) -> f64 {
+        pipe::backpressure(&self.pipes, self.cfg.max_batch)
+    }
+
     fn probe_prefix(&self, keys: &[BlockKey], limit: u64, at: Cycle) -> u64 {
         pipe::best_prefix_match(&self.pipes, keys, limit, at)
     }

@@ -399,6 +399,10 @@ impl Scheduler for HybridScheduler {
         pipe::mean_kv_utilization(&self.pipes)
     }
 
+    fn backpressure(&self) -> f64 {
+        pipe::backpressure(&self.pipes, self.cfg.fusion.max_batch)
+    }
+
     fn probe_prefix(&self, keys: &[BlockKey], limit: u64, at: Cycle) -> u64 {
         pipe::best_prefix_match(&self.pipes, keys, limit, at)
     }

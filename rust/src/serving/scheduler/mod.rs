@@ -111,6 +111,17 @@ pub trait Scheduler {
         0.0
     }
 
+    /// Backpressure in `[0, 1]`: how close this chip is to refusing new
+    /// work — the signal the cluster frontend's shed/defer admission
+    /// throttles by (`1.0` = saturated). The default derives it from the
+    /// queue-depth and memory-pressure probes; policies override it with
+    /// their pipe-level saturation (the most-loaded pipe governs, since
+    /// one saturated pipe stalls every request routed to it).
+    fn backpressure(&self) -> f64 {
+        let queued = (self.pending_work() as f64 / 16.0).min(1.0);
+        queued.max(self.kv_utilization())
+    }
+
     /// Longest cached-and-ready prompt prefix (tokens) an admission with
     /// `keys` could share at cycle `at`, capped at `limit` — the
     /// prefix-hit-aware router's read-only probe. Policies without a

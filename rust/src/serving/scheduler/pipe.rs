@@ -22,13 +22,18 @@ use crate::model::{BatchItem, IterBatch};
 use crate::serving::layout::PipelineLayout;
 use crate::serving::metrics::{CacheStats, Metrics, RequestRecord};
 use crate::serving::pd_fusion::FusionConfig;
-use crate::serving::request::Request;
+use crate::serving::request::{Priority, Request};
 use crate::serving::worker::StageWorker;
 use crate::sim::chip::ChipSim;
 use crate::sim::noc::Coord;
 use crate::sim::tracer::OpClass;
 use crate::util::units::{secs_to_cycles, Cycle};
 use std::collections::VecDeque;
+
+/// How many times one request may be preempted before it becomes
+/// non-preemptible — bounds worst-case starvation so a steady high-class
+/// stream cannot livelock a parked low-class decode.
+pub(crate) const MAX_PREEMPTIONS: u8 = 3;
 
 /// In-flight request state on a pipe.
 #[derive(Debug, Clone, Copy)]
@@ -42,6 +47,24 @@ pub(crate) struct Active {
     /// Earliest cycle the next decode step may start (autoregressive
     /// dependency — this is what makes deep pipelines hurt decode).
     pub ready_at: Cycle,
+    /// Times this request has been preempted (capped at
+    /// [`MAX_PREEMPTIONS`]); survives park/resume cycles.
+    pub preemptions: u8,
+}
+
+/// A preempted decode-phase request parked off the pipe: its KV was
+/// spilled to the HBM channel and its slot freed for a higher class.
+/// Resumption re-appends the KV (reload charged on the same channel) and
+/// continues decoding from `generated` — prefill is never recomputed and
+/// `first_token` is preserved, so the retired record's token counts and
+/// TTFT are exactly what an unpreempted run would have produced.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct Parked {
+    pub req: Request,
+    pub generated: u64,
+    pub first_token: Option<Cycle>,
+    pub parked_at: Cycle,
+    pub preemptions: u8,
 }
 
 impl Active {
@@ -79,6 +102,9 @@ pub(crate) struct Pipe {
     /// Transferred decode-phase requests not yet admitted to the KV cache
     /// (always empty under pure fusion).
     pub pending: VecDeque<PendingDecode>,
+    /// Preempted decode-phase requests awaiting resumption (always empty
+    /// under uniform priorities — preemption only fires across classes).
+    pub parked: Vec<Parked>,
 }
 
 /// Carve the chip into fused pipelines per the fusion layout knobs.
@@ -128,6 +154,7 @@ pub(crate) fn build_pipes(
             queue: VecDeque::new(),
             active: Vec::new(),
             pending: VecDeque::new(),
+            parked: Vec::new(),
         })
         .collect();
     anyhow::ensure!(!pipes.is_empty(), "no pipelines fit the chip");
@@ -417,12 +444,18 @@ pub(crate) fn plan_batch(
     let mut budget = cfg.budget as u64;
     let mut decode_idx = Vec::new();
     let mut prefill_idx = Vec::new();
+    // Token budget and microbatch slots go to the highest class first; the
+    // sort is stable, so uniform-priority batches keep the legacy index
+    // order bit-for-bit.
+    let mut order: Vec<usize> = (0..active.len()).collect();
+    order.sort_by_key(|&i| std::cmp::Reverse(active[i].req.priority));
     let n_ready = active
         .iter()
         .filter(|a| !a.is_done() && !a.is_prefilling() && a.ready_at <= now)
         .count();
     let micro_cap = n_ready.div_ceil(n_stages.max(1)).max(1);
-    for (i, a) in active.iter().enumerate() {
+    for &i in &order {
+        let a = &active[i];
         if a.is_done() {
             continue;
         }
@@ -435,7 +468,8 @@ pub(crate) fn plan_batch(
             budget -= 1;
         }
     }
-    for (i, a) in active.iter().enumerate() {
+    for &i in &order {
+        let a = &active[i];
         if a.is_prefilling() && budget > 0 {
             let remaining = a.req.input_len as u64 - a.prefilled;
             let chunk = remaining.min(cfg.chunk as u64).min(budget);
@@ -449,6 +483,47 @@ pub(crate) fn plan_batch(
         decode_idx,
         prefill_idx,
     }
+}
+
+/// Price one stage's share of a parked request's KV spill (or reload) on
+/// the group cores' HBM channel — the same transaction-priced path as KV
+/// spill, so preemption is never free. Returns the landing cycle (equals
+/// the cores' clock on SRAM-only chips, where the channel is absent and
+/// the spill degrades to a free park).
+pub(crate) fn charge_kv_swap(
+    chip: &mut ChipSim,
+    stage: &StageWorker,
+    model: &ModelConfig,
+    tokens: u64,
+) -> Cycle {
+    let tp = stage.group.len().max(1) as u64;
+    let bytes = (model.kv_bytes_per_token_layer() * stage.exec.layers as u64 / tp).max(1) * tokens;
+    let mut done = 0;
+    for &c in &stage.group.coords {
+        done = done.max(chip.core_mut(c).hbm_access(bytes, OpClass::KvSpill));
+    }
+    done
+}
+
+/// Highest-class arrived request in `queue` (stable FIFO within a class:
+/// uniform-priority queues reduce to the legacy front-of-queue pick).
+pub(crate) fn best_arrived_idx(queue: &VecDeque<Request>, now: Cycle, freq: f64) -> Option<usize> {
+    (0..queue.len())
+        .filter(|&i| secs_to_cycles(queue[i].arrival_s, freq) <= now)
+        .min_by_key(|&i| (std::cmp::Reverse(queue[i].priority), i))
+}
+
+/// Saturation of the most-loaded pipe in `[0, 1]`: queue depth measured
+/// against twice the admission slots, max'd with KV occupancy — the
+/// chip-side signal the cluster frontend throttles admissions by.
+pub(crate) fn backpressure(pipes: &[Pipe], max_batch: usize) -> f64 {
+    pipes
+        .iter()
+        .map(|p| {
+            let q = p.pending_work() as f64 / (2 * max_batch.max(1)) as f64;
+            q.min(1.0).max(p.kv_utilization())
+        })
+        .fold(0.0, f64::max)
 }
 
 impl Pipe {
@@ -476,6 +551,10 @@ impl Pipe {
         if let Some(t) = next_decode {
             return Some(now.max(t));
         }
+        if !self.parked.is_empty() {
+            // No actives left, so resumption capacity exists: tick now.
+            return Some(now);
+        }
         let pending = self.pending.front().map(|p| p.ready_at);
         let queued = self
             .queue
@@ -492,6 +571,7 @@ impl Pipe {
     pub(crate) fn pending_work(&self) -> usize {
         self.queue.len()
             + self.pending.len()
+            + self.parked.len()
             + self.active.iter().filter(|a| !a.is_done()).count()
     }
 
@@ -557,6 +637,60 @@ impl Pipe {
         queued + inflight
     }
 
+    /// Park the best preemption victim strictly below `class`: a
+    /// decode-phase active (prefills are never torn mid-chunk, and a
+    /// decode whose step is still in flight through the stages is left
+    /// alone) that has been preempted fewer than [`MAX_PREEMPTIONS`]
+    /// times. Lowest class first, then the one with the most work left
+    /// (freeing the slot longest), then index. The victim's KV spill is
+    /// charged on the stages' HBM channel and released; returns whether a
+    /// victim was parked. Never fires under uniform priorities — the
+    /// strict `<` keeps same-class workloads preemption-free.
+    pub(crate) fn preempt_below(
+        &mut self,
+        chip: &mut ChipSim,
+        model: &ModelConfig,
+        class: Priority,
+        now: Cycle,
+        metrics: &mut Metrics,
+    ) -> bool {
+        let victim = (0..self.active.len())
+            .filter(|&i| {
+                let a = &self.active[i];
+                a.req.priority < class
+                    && !a.is_prefilling()
+                    && !a.is_done()
+                    && a.ready_at <= now
+                    && a.preemptions < MAX_PREEMPTIONS
+            })
+            .min_by_key(|&i| {
+                let a = &self.active[i];
+                (
+                    a.req.priority,
+                    std::cmp::Reverse(a.req.output_len as u64 - a.generated),
+                    i,
+                )
+            });
+        let Some(vi) = victim else {
+            return false;
+        };
+        let a = self.active.swap_remove(vi);
+        let tokens = a.req.input_len as u64 + a.generated;
+        for si in 0..self.stages.len() {
+            charge_kv_swap(chip, &self.stages[si], model, tokens);
+            self.stages[si].release(a.req.id);
+        }
+        metrics.control.preemptions += 1;
+        self.parked.push(Parked {
+            req: a.req,
+            generated: a.generated,
+            first_token: a.first_token,
+            parked_at: now,
+            preemptions: a.preemptions + 1,
+        });
+        true
+    }
+
     /// One scheduler iteration on this pipe at time `t`. Returns the number
     /// of retired requests; when `extract_handoffs` is set, requests whose
     /// prefill completed this tick are pushed to `handoffs` (instead of
@@ -576,15 +710,57 @@ impl Pipe {
         self.stages[0].advance_to(chip, t);
         let now = self.stage0_now(chip);
 
-        // Admit arrived requests while capacity lasts.
-        while let Some(front) = self.queue.front() {
-            let arrived = secs_to_cycles(front.arrival_s, freq) <= now;
+        // Resume parked (preempted) requests while capacity lasts, highest
+        // class first (FIFO within a class). Their KV was spilled at
+        // preemption; re-admission re-appends it and charges the reload
+        // stream, so resumption is priced but prefill never recomputes.
+        while !self.parked.is_empty()
+            && self.active.len() < cfg.max_batch
+            && self.stages.iter().all(|s| s.can_admit())
+        {
+            let pi = (0..self.parked.len())
+                .min_by_key(|&i| (std::cmp::Reverse(self.parked[i].req.priority), i))
+                .unwrap();
+            let p = self.parked.remove(pi);
+            let tokens = p.req.input_len as u64 + p.generated;
+            let mut landed = now;
+            for s in &mut self.stages {
+                s.admit(p.req.id);
+                s.kv.append(p.req.id, tokens);
+            }
+            for s in &self.stages {
+                landed = landed.max(charge_kv_swap(chip, s, model, tokens));
+            }
+            metrics.control.resumes += 1;
+            metrics.control.resume_wait_cycles += landed.saturating_sub(p.parked_at);
+            self.active.push(Active {
+                req: p.req,
+                prefilled: p.req.input_len as u64,
+                generated: p.generated,
+                first_token: p.first_token,
+                ready_at: landed,
+                preemptions: p.preemptions,
+            });
+        }
+
+        // Admit arrived requests while capacity lasts — highest class
+        // first (stable FIFO within a class, so uniform-priority queues
+        // reduce to the legacy front-of-queue order bit-for-bit). A
+        // saturated pipe may make room for a higher class by preempting
+        // the lowest-class decode-phase active below it.
+        loop {
+            let Some(qi) = best_arrived_idx(&self.queue, now, freq) else {
+                break;
+            };
             let capacity =
                 self.active.len() < cfg.max_batch && self.stages.iter().all(|s| s.can_admit());
-            if !arrived || !capacity {
-                break;
+            if !capacity {
+                if !self.preempt_below(chip, model, self.queue[qi].priority, now, metrics) {
+                    break;
+                }
+                continue;
             }
-            let r = self.queue.pop_front().unwrap();
+            let r = self.queue.remove(qi).unwrap();
             let mut matched = 0u64;
             if cfg.prefix_cache {
                 matched = admit_with_prefix(chip, &mut self.stages, &r, model, metrics, now);
@@ -599,6 +775,7 @@ impl Pipe {
                 generated: 0,
                 first_token: None,
                 ready_at: 0,
+                preemptions: 0,
             });
         }
 
@@ -622,6 +799,7 @@ impl Pipe {
                 generated: 1,
                 first_token: Some(p.first_token),
                 ready_at: p.ready_at,
+                preemptions: 0,
             });
         }
 
@@ -693,6 +871,7 @@ impl Pipe {
                     finish,
                     input_tokens: a.req.input_len as u64,
                     output_tokens: a.req.output_len as u64,
+                    priority: a.req.priority,
                 });
                 completions += 1;
             } else if extract_handoffs && newly_prefilled.contains(&self.active[i].req.id) {
@@ -725,6 +904,7 @@ mod tests {
             input_len: input,
             output_len: output,
             prefix: crate::serving::request::Prefix::default(),
+            priority: Priority::Normal,
         }
     }
 
@@ -735,6 +915,7 @@ mod tests {
             generated,
             first_token: Some(1),
             ready_at,
+            preemptions: 0,
         }
     }
 
@@ -745,6 +926,7 @@ mod tests {
             generated: 0,
             first_token: None,
             ready_at: 0,
+            preemptions: 0,
         }
     }
 
@@ -836,5 +1018,57 @@ mod tests {
         let plan = plan_batch(&active, 0, 4, &cfg);
         assert!(plan.decode_idx.is_empty());
         assert_eq!(plan.prefill_idx, vec![(0, 256)]);
+    }
+
+    #[test]
+    fn high_class_decodes_win_the_microbatch_slots() {
+        // 4 ready decodes, 4 stages → micro_cap 1: the lone slot goes to
+        // the High request even though it sits last.
+        let mut active: Vec<Active> = (0..4).map(|i| decoding(i, 64, 16, 2, 0)).collect();
+        active[3].req.priority = Priority::High;
+        let plan = plan_batch(&active, 0, 4, &FusionConfig::default());
+        assert_eq!(plan.decode_idx, vec![3]);
+        // Uniform priorities keep the legacy index order exactly.
+        active[3].req.priority = Priority::Normal;
+        let plan = plan_batch(&active, 0, 4, &FusionConfig::default());
+        assert_eq!(plan.decode_idx, vec![0]);
+    }
+
+    #[test]
+    fn priority_budget_goes_to_high_prefills_first() {
+        let cfg = FusionConfig {
+            budget: 256,
+            chunk: 256,
+            ..FusionConfig::default()
+        };
+        let mut active = vec![prefilling(1, 512, 0), prefilling(2, 512, 0)];
+        active[1].req.priority = Priority::High;
+        let plan = plan_batch(&active, 0, 1, &cfg);
+        assert_eq!(plan.prefill_idx, vec![(1, 256)]);
+    }
+
+    #[test]
+    fn arrived_pick_is_priority_then_fifo() {
+        let freq = 1000.0;
+        let mut queue: VecDeque<Request> = VecDeque::new();
+        queue.push_back(req(1, 64, 8));
+        let mut low = req(2, 64, 8);
+        low.priority = Priority::Low;
+        queue.push_back(low);
+        let mut high = req(3, 64, 8);
+        high.priority = Priority::High;
+        high.arrival_s = 1.0;
+        queue.push_back(high);
+        let now_early = secs_to_cycles(0.5, freq);
+        // High has not arrived yet: FIFO among the arrived same-or-lower.
+        assert_eq!(best_arrived_idx(&queue, now_early, freq), Some(0));
+        let now_late = secs_to_cycles(2.0, freq);
+        assert_eq!(best_arrived_idx(&queue, now_late, freq), Some(2));
+        // Uniform priorities pick the front, like the legacy loop.
+        for r in queue.iter_mut() {
+            r.priority = Priority::Normal;
+        }
+        assert_eq!(best_arrived_idx(&queue, now_late, freq), Some(0));
+        assert_eq!(best_arrived_idx(&VecDeque::new(), now_late, freq), None);
     }
 }

@@ -9,7 +9,7 @@
 //! without a JSON dependency: top-level numeric fields are extracted by
 //! key; nested arrays/objects (e.g. Mooncake's `hash_ids`) are skipped.
 
-use crate::serving::request::Request;
+use crate::serving::request::{Priority, Request};
 use anyhow::{Context, Result};
 use std::path::Path;
 
@@ -24,6 +24,16 @@ fn field_f64(line: &str, key: &str) -> Option<f64> {
         .find(|c: char| !(c.is_ascii_digit() || c == '.' || c == '-' || c == 'e' || c == 'E' || c == '+'))
         .unwrap_or(rest.len());
     rest[..end].parse().ok()
+}
+
+/// Extract a top-level string field from one flat JSON object line.
+fn field_str<'a>(line: &'a str, key: &str) -> Option<&'a str> {
+    let pat = format!("\"{key}\"");
+    let at = line.find(&pat)?;
+    let rest = &line[at + pat.len()..];
+    let colon = rest.find(':')?;
+    let rest = rest[colon + 1..].trim_start().strip_prefix('"')?;
+    Some(&rest[..rest.find('"')?])
 }
 
 /// Parse one trace line; returns `None` for blank/comment lines.
@@ -51,12 +61,19 @@ fn parse_line(line: &str, id: u64) -> Result<Option<Request>> {
         conv_id: field_f64(line, "conv_id").unwrap_or(0.0) as u64,
         conv_tokens: field_f64(line, "conv_len").unwrap_or(0.0) as u32,
     };
+    // Optional scheduling class (our JSONL extension): `"priority":
+    // "low"|"normal"|"high"`; absent means normal.
+    let priority = match field_str(line, "priority") {
+        Some(s) => Priority::parse(s).with_context(|| format!("trace line {id}"))?,
+        None => Priority::default(),
+    };
     Ok(Some(Request {
         id,
         arrival_s,
         input_len: (input as usize).max(1),
         output_len: (output as usize).max(1),
         prefix,
+        priority,
     }))
 }
 
@@ -104,9 +121,14 @@ pub fn to_jsonl(reqs: &[Request]) -> String {
                 p.group_id, p.group_tokens, p.conv_id, p.conv_tokens
             )
         };
+        let priority_field = if r.priority == Priority::default() {
+            String::new()
+        } else {
+            format!(", \"priority\": \"{}\"", r.priority.name())
+        };
         let _ = writeln!(
             out,
-            "{{\"timestamp\": {}, \"input_length\": {}, \"output_length\": {}{prefix_fields}, \"hash_ids\": []}}",
+            "{{\"timestamp\": {}, \"input_length\": {}, \"output_length\": {}{prefix_fields}{priority_field}, \"hash_ids\": []}}",
             (r.arrival_s * 1e3).round() as u64,
             r.input_len,
             r.output_len
@@ -142,6 +164,22 @@ mod tests {
         let reqs = parse_jsonl(text).unwrap();
         assert_eq!(reqs[0].input_len, 42);
         assert_eq!(reqs[0].output_len, 17);
+    }
+
+    #[test]
+    fn parses_and_round_trips_priority() {
+        let text = r#"{"timestamp": 0, "input_length": 10, "output_length": 4, "priority": "high"}
+{"timestamp": 1, "input_length": 10, "output_length": 4}"#;
+        let reqs = parse_jsonl(text).unwrap();
+        assert_eq!(reqs[0].priority, Priority::High);
+        assert_eq!(reqs[1].priority, Priority::Normal);
+        let again = parse_jsonl(&to_jsonl(&reqs)).unwrap();
+        assert_eq!(again[0].priority, Priority::High);
+        assert_eq!(again[1].priority, Priority::Normal);
+        assert!(parse_jsonl(
+            r#"{"timestamp": 0, "input_length": 1, "output_length": 1, "priority": "urgent"}"#
+        )
+        .is_err());
     }
 
     #[test]

@@ -21,14 +21,31 @@ use super::rng::Rng;
 /// Default number of cases for module property tests.
 pub const DEFAULT_CASES: usize = 256;
 
-/// Run `property` over `cases` generated cases. The property receives a
-/// per-case deterministic RNG; panics are caught, annotated with the case
-/// seed, and re-raised.
+/// Parse a `NPUSIM_PROP_SCALE`-style value: a positive integer multiplier,
+/// anything else (unset, garbage, zero) meaning 1.
+fn scale_from(var: Option<&str>) -> usize {
+    var.and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&v| v >= 1)
+        .unwrap_or(1)
+}
+
+/// `cases` multiplied by the `NPUSIM_PROP_SCALE` environment variable
+/// (default 1). CI's debug job raises it to widen randomized coverage
+/// without slowing local `cargo test` runs; case seeds are unchanged, so
+/// a scaled run replays every unscaled case first.
+pub fn scaled(cases: usize) -> usize {
+    cases.saturating_mul(scale_from(std::env::var("NPUSIM_PROP_SCALE").ok().as_deref()))
+}
+
+/// Run `property` over `cases` generated cases (times the
+/// `NPUSIM_PROP_SCALE` multiplier). The property receives a per-case
+/// deterministic RNG; panics are caught, annotated with the case seed,
+/// and re-raised.
 pub fn check<F>(name: &str, cases: usize, property: F)
 where
     F: Fn(&mut Rng) + std::panic::RefUnwindSafe,
 {
-    check_seeded(name, 0xA5A5_0000, cases, property)
+    check_seeded(name, 0xA5A5_0000, scaled(cases), property)
 }
 
 /// Like [`check`] but with an explicit base seed (use to reproduce a
@@ -83,6 +100,15 @@ mod tests {
         let msg = err.downcast_ref::<String>().unwrap();
         assert!(msg.contains("seed"), "message should carry the seed: {msg}");
         assert!(msg.contains("hit the bad value"));
+    }
+
+    #[test]
+    fn scale_parses_defensively() {
+        assert_eq!(scale_from(None), 1);
+        assert_eq!(scale_from(Some("4")), 4);
+        assert_eq!(scale_from(Some(" 2 ")), 2);
+        assert_eq!(scale_from(Some("0")), 1, "zero would erase coverage");
+        assert_eq!(scale_from(Some("garbage")), 1);
     }
 
     #[test]

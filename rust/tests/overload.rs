@@ -1,0 +1,104 @@
+//! Overload end-to-end: drive a 2-chip cluster well past its measured
+//! sustainable rate with a priority-mixed flash crowd and check the
+//! control-plane contract — the bounded admission queue engages (work is
+//! shed instead of piling up), high-priority traffic stays within its
+//! TTFT SLO while the low class absorbs the shedding, and the run
+//! terminates (the event-budget guard in the cluster driver would error
+//! out otherwise).
+
+use npusim::config::{ChipConfig, ModelConfig};
+use npusim::experiments::overload_study;
+use npusim::serving::cluster::{self, ClusterConfig, RouterPolicy, ShedPolicy};
+use npusim::serving::pd_fusion::FusionConfig;
+use npusim::serving::request::Priority;
+use npusim::serving::scheduler::SchedulerConfig;
+
+fn overload_cluster(shed: ShedPolicy, queue_cap: usize, slo_ttft_s: f64) -> ClusterConfig {
+    let mut cfg = ClusterConfig::new(
+        ChipConfig::large_core(),
+        2,
+        SchedulerConfig::Fusion(FusionConfig {
+            tp: 16,
+            stages: 4,
+            ..FusionConfig::default()
+        }),
+        RouterPolicy::LeastLoaded,
+    )
+    .with_shed(shed, queue_cap);
+    cfg.slo_ttft_s = slo_ttft_s;
+    cfg
+}
+
+#[test]
+fn flash_crowd_backpressure_sheds_low_and_keeps_high_within_slo() {
+    let model = ModelConfig::qwen3_4b();
+    // Calibrate the per-chip service rate, then offer a spike far past
+    // the 2-chip cluster's capacity (the short trace needs a harsh
+    // factor to build the same backlog a long 2x spike would).
+    let per_chip = overload_study::sustainable_rate(&model, 8).unwrap();
+    let slo_ttft_s = overload_study::SLO_SERVICE_PERIODS / per_chip;
+    let reqs = overload_study::flash_crowd_trace(32, per_chip * 2.0, 6.0);
+    let offered = reqs.len();
+    let offered_of =
+        |class: Priority| reqs.iter().filter(|r| r.priority == class).count() as u64;
+    assert!(offered_of(Priority::High) > 0 && offered_of(Priority::Low) > 0);
+
+    let cfg = overload_cluster(ShedPolicy::Drop, 2, slo_ttft_s);
+    // Terminates: the driver's event guard fails the run otherwise.
+    let cm = cluster::simulate_cluster_requests(&cfg, &model, reqs.clone()).unwrap();
+    let agg = cm.aggregate();
+
+    // The bounded queue engaged: overload was refused, not absorbed, and
+    // the books balance exactly.
+    let ctl = &agg.control;
+    assert!(ctl.shed_requests > 0, "overload never tripped the bounded queue");
+    assert_eq!(
+        agg.n_requests() as u64 + ctl.shed_requests,
+        offered as u64,
+        "completed + shed != offered"
+    );
+    assert_eq!(ctl.shed_by_class.iter().sum::<u64>(), ctl.shed_requests);
+
+    // Priority contract: high is never shed and its tail TTFT holds the
+    // SLO; the low class absorbs shedding at least as hard as normal.
+    assert_eq!(ctl.shed_by_class[Priority::High.index()], 0);
+    assert_eq!(
+        agg.n_requests_of(Priority::High) as u64,
+        offered_of(Priority::High),
+        "a high-priority request went missing"
+    );
+    let high_p99 = agg.ttft_s_of(Priority::High).p99();
+    assert!(
+        high_p99 <= slo_ttft_s,
+        "high-priority TTFT p99 {high_p99:.4}s blew the {slo_ttft_s:.4}s SLO"
+    );
+    let shed_frac = |class: Priority| {
+        ctl.shed_by_class[class.index()] as f64 / offered_of(class).max(1) as f64
+    };
+    assert!(ctl.shed_by_class[Priority::Low.index()] > 0, "low never shed");
+    assert!(
+        shed_frac(Priority::Low) >= shed_frac(Priority::Normal),
+        "low class did not absorb shedding first ({:.2} vs {:.2})",
+        shed_frac(Priority::Low),
+        shed_frac(Priority::Normal)
+    );
+}
+
+#[test]
+fn defer_retries_under_the_same_crowd_and_still_terminates() {
+    let model = ModelConfig::qwen3_4b();
+    let per_chip = overload_study::sustainable_rate(&model, 8).unwrap();
+    let slo_ttft_s = overload_study::SLO_SERVICE_PERIODS / per_chip;
+    let reqs = overload_study::flash_crowd_trace(32, per_chip * 2.0, 6.0);
+    let offered = reqs.len() as u64;
+
+    let cfg = overload_cluster(ShedPolicy::Defer, 2, slo_ttft_s);
+    let cm = cluster::simulate_cluster_requests(&cfg, &model, reqs).unwrap();
+    let agg = cm.aggregate();
+    let ctl = &agg.control;
+    assert!(ctl.deferrals > 0, "overload never deferred an arrival");
+    assert_eq!(agg.n_requests() as u64 + ctl.shed_requests, offered);
+    // Bounded retries: nothing loops forever, and each deferred request
+    // retried at most MAX_DEFERRALS times before completing or shedding.
+    assert!(ctl.deferrals <= offered * 8, "deferral retries unbounded");
+}

@@ -1,9 +1,12 @@
 //! Randomized cross-stack invariants: whatever the workload, chip shape
 //! and scheduler configuration, the serving engines must preserve these.
 
-use npusim::config::{ArrivalProcess, ChipConfig, LenDist, ModelConfig, WorkloadConfig};
+use npusim::config::{ArrivalProcess, ChipConfig, LenDist, ModelConfig, PriorityMix, WorkloadConfig};
+use npusim::serving::cluster::{self, ClusterConfig, RouterPolicy, ShedPolicy};
 use npusim::serving::pd_disagg::{simulate_disagg, DisaggConfig};
 use npusim::serving::pd_fusion::{simulate_fusion, FusionConfig};
+use npusim::serving::request;
+use npusim::serving::scheduler::{self, HybridConfig, HybridScheduler, SchedulerConfig};
 use npusim::sim::chip::ChipSim;
 use npusim::util::prop::check;
 
@@ -102,6 +105,124 @@ fn schedulers_agree_on_total_output_tokens() {
         let got: u64 = md.records().iter().map(|r| r.output_tokens).sum();
         assert_eq!(got, expect, "disagg lost/invented tokens");
     });
+}
+
+/// Staggered arrivals + mixed priorities + a tiny batch: the shape that
+/// makes high-priority prefills land while low-priority decodes hold the
+/// slots, so the preemption/park/resume path actually runs.
+fn contended_priority_workload(rng: &mut npusim::util::rng::Rng) -> WorkloadConfig {
+    let n = rng.range(6, 16);
+    let mut w = WorkloadConfig::fixed_ratio(rng.range(16, 96), rng.range(4, 24), n);
+    w.input_len = LenDist::Uniform(16, 128);
+    w.output_len = LenDist::Uniform(4, 32);
+    w.with_arrival(ArrivalProcess::Poisson {
+        rate: rng.range_f64(20.0, 200.0),
+    })
+    .with_priority_mix(PriorityMix {
+        high: rng.range_f64(0.2, 0.4),
+        low: rng.range_f64(0.2, 0.4),
+    })
+    .with_seed(rng.next_u64())
+}
+
+#[test]
+fn preemption_preserves_token_counts_and_exactly_once_completion() {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    // Accumulated across cases so we can prove the machinery engaged at
+    // least once without demanding it per random case.
+    let preemptions = AtomicU64::new(0);
+    let resumes = AtomicU64::new(0);
+    check("preempt/resume conservation", 10, |rng| {
+        let w = contended_priority_workload(rng);
+        let reqs = request::generate(&w);
+        let expect: Vec<(u64, u64)> = reqs.iter().map(|r| (r.id, r.output_len as u64)).collect();
+        let cfg = FusionConfig {
+            tp: 16,
+            stages: *rng.choose(&[1usize, 2]),
+            max_batch: *rng.choose(&[1usize, 2]),
+            ..FusionConfig::default()
+        };
+        let mut chip = ChipSim::new(ChipConfig::large_core());
+        let m = if rng.chance(0.5) {
+            simulate_fusion(&mut chip, &ModelConfig::qwen3_4b(), &w, &cfg).unwrap()
+        } else {
+            let mut sched = HybridScheduler::new(HybridConfig {
+                fusion: cfg,
+                ..HybridConfig::default()
+            });
+            scheduler::simulate(&mut chip, &ModelConfig::qwen3_4b(), &w, &mut sched).unwrap()
+        };
+        // Exactly-once completion, and a preempted-then-resumed request
+        // emits exactly its original token count.
+        assert_eq!(m.n_requests(), w.n_requests);
+        let mut got: Vec<(u64, u64)> = m.records().iter().map(|r| (r.id, r.output_tokens)).collect();
+        got.sort_unstable();
+        assert_eq!(got, expect, "token counts changed under preemption");
+        for r in m.records() {
+            assert!(r.first_token >= r.arrival, "{r:?}");
+            assert!(r.finish >= r.first_token, "{r:?}");
+        }
+        // Every park has a matching un-park: nothing ends stranded.
+        assert_eq!(m.control.preemptions, m.control.resumes, "parked KV leaked");
+        preemptions.fetch_add(m.control.preemptions, Ordering::Relaxed);
+        resumes.fetch_add(m.control.resumes, Ordering::Relaxed);
+    });
+    assert!(
+        preemptions.into_inner() > 0 && resumes.into_inner() > 0,
+        "no case ever preempted: the property never exercised the machinery"
+    );
+}
+
+#[test]
+fn shed_requests_never_complete_and_counts_conserve() {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    let total_shed = AtomicU64::new(0);
+    check("shed conservation", 8, |rng| {
+        let mut w = contended_priority_workload(rng);
+        // Longer prompts so a 2-chip cluster with a unit queue cap is
+        // decisively saturated by the arrival burst.
+        w.input_len = LenDist::Uniform(256, 1024);
+        let reqs = request::generate(&w);
+        let offered: Vec<u64> = reqs.iter().map(|r| r.id).collect();
+        let shed_policy = *rng.choose(&[ShedPolicy::Drop, ShedPolicy::Defer]);
+        let cfg = ClusterConfig::new(
+            ChipConfig::large_core(),
+            2,
+            SchedulerConfig::Fusion(FusionConfig {
+                tp: 16,
+                stages: 2,
+                ..FusionConfig::default()
+            }),
+            RouterPolicy::LeastLoaded,
+        )
+        .with_shed(shed_policy, rng.range(1, 3));
+        let cm = cluster::simulate_cluster_requests(&cfg, &ModelConfig::qwen3_4b(), reqs).unwrap();
+        let agg = cm.aggregate();
+        // Shed and completed partition the offered set: every completion
+        // is an offered id, completed exactly once, and the counts add up.
+        let mut ids: Vec<u64> = agg.records().iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        let mut deduped = ids.clone();
+        deduped.dedup();
+        assert_eq!(ids.len(), deduped.len(), "a request completed twice");
+        assert!(ids.iter().all(|id| offered.contains(id)));
+        assert_eq!(
+            ids.len() as u64 + agg.control.shed_requests,
+            offered.len() as u64,
+            "completed + shed != offered"
+        );
+        // High-priority work is never shed, whatever the policy.
+        assert_eq!(agg.control.shed_by_class[2], 0, "shed a high-priority request");
+        assert_eq!(
+            agg.control.shed_by_class.iter().sum::<u64>(),
+            agg.control.shed_requests
+        );
+        total_shed.fetch_add(agg.control.shed_requests, Ordering::Relaxed);
+    });
+    assert!(
+        total_shed.into_inner() > 0,
+        "no case ever shed: the property never exercised the admission check"
+    );
 }
 
 #[test]

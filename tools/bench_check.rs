@@ -12,16 +12,20 @@
 //!    grid (3 schedulers × cache on/off), the full cluster grid
 //!    (shared-prefix + poisson workloads × fusion/disagg/hybrid ×
 //!    rr/least/prefix routers on ≥ 2 chips), the tier ablation
-//!    (sram-only / hbm-tier / two-tier+noc), and the deployment-plan
-//!    study (one auto row plus the named presets).
+//!    (sram-only / hbm-tier / two-tier+noc), the deployment-plan
+//!    study (one auto row plus the named presets), and the overload
+//!    control-plane study (fifo / drop / defer admission policies).
 //! 2. **Invariants**: on the shared-prefix workload the prefix-hit-aware
 //!    router must beat round-robin on TTFT p50 for the fusion system (the
 //!    cluster acceptance property), cache-on must not lose TTFT, the
 //!    two-tier configuration must skip strictly more prefill tokens than
-//!    SRAM-only caching (cross-pipe/HBM hits replace recomputation), and
-//!    the auto plan's simulated wall-clock must not exceed the worst
+//!    SRAM-only caching (cross-pipe/HBM hits replace recomputation), the
+//!    auto plan's simulated wall-clock must not exceed the worst
 //!    enumerated preset's (the planner may not pick a known-bad
-//!    deployment).
+//!    deployment), and under the 2x flash crowd the priority+shed
+//!    control plane must strictly beat the FIFO/no-shed baseline on
+//!    goodput-under-SLO while conserving requests (completed + shed =
+//!    offered, FIFO shedding nothing).
 //! 3. **Numbers**: `tokens_per_s` must not drop, and `ttft_p99_s` must
 //!    not rise, by more than the tolerance against the matching baseline
 //!    row. A baseline marked `"provisional": true` skips this layer (the
@@ -176,6 +180,17 @@ fn check_structure(current: &Json, violations: &mut Vec<String>) {
             violations.push(format!("plan row missing: {preset}"));
         }
     }
+    let slo = rows(current, "slo");
+    for policy in ["fifo", "drop", "defer"] {
+        if !slo.iter().any(|r| r.str("policy") == Some(policy)) {
+            violations.push(format!("slo row missing: {policy}"));
+        }
+    }
+}
+
+/// The slo-section row of one admission policy.
+fn slo_row<'a>(slo: &[&'a Json], policy: &str) -> Option<&'a Json> {
+    slo.iter().find(|r| r.str("policy") == Some(policy)).copied()
 }
 
 /// `prefill_tokens_skipped` of one tier-ablation row.
@@ -256,6 +271,40 @@ fn check_invariants(current: &Json, violations: &mut Vec<String>) {
             }
         }
         _ => violations.push("cannot evaluate auto-plan-vs-worst-preset invariant".into()),
+    }
+    // The control-plane acceptance property: at 2x load, shedding +
+    // priorities must strictly beat the FIFO/no-shed baseline on
+    // goodput-under-SLO, and every policy must conserve requests.
+    let slo = rows(current, "slo");
+    match (
+        slo_row(&slo, "fifo").and_then(|r| r.num("goodput_tok_s")),
+        slo_row(&slo, "drop").and_then(|r| r.num("goodput_tok_s")),
+    ) {
+        (Some(fifo), Some(drop)) => {
+            if drop <= fifo {
+                violations.push(format!(
+                    "shed/priority control plane does not beat FIFO on goodput-under-SLO \
+                     ({drop} vs {fifo})"
+                ));
+            }
+        }
+        _ => violations.push("cannot evaluate shed-vs-fifo goodput invariant".into()),
+    }
+    for policy in ["fifo", "drop", "defer"] {
+        let Some(r) = slo_row(&slo, policy) else { continue };
+        let (offered, completed, shed) = (
+            r.num("offered").unwrap_or(-1.0),
+            r.num("completed").unwrap_or(-1.0),
+            r.num("shed").unwrap_or(-1.0),
+        );
+        if completed + shed != offered {
+            violations.push(format!(
+                "slo {policy}: completed {completed} + shed {shed} != offered {offered}"
+            ));
+        }
+        if policy == "fifo" && shed != 0.0 {
+            violations.push(format!("slo fifo shed {shed} requests; must shed none"));
+        }
     }
 }
 
@@ -416,6 +465,32 @@ fn check_numbers(current: &Json, baseline: &Json, tol: f64, violations: &mut Vec
             &format!("tier {config} ttft_p99_s"),
             c.num("ttft_p99_s"),
             b.num("ttft_p99_s"),
+            tol,
+            false,
+            violations,
+        );
+    }
+    // Overload control plane: match rows on the policy label.
+    let cur_slo = rows(current, "slo");
+    let base_slo = rows(baseline, "slo");
+    for b in &base_slo {
+        let policy = b.str("policy").unwrap_or("");
+        let Some(c) = cur_slo.iter().find(|r| r.str("policy") == Some(policy)) else {
+            violations.push(format!("slo row disappeared: {policy}"));
+            continue;
+        };
+        check_metric(
+            &format!("slo {policy} goodput_tok_s"),
+            c.num("goodput_tok_s"),
+            b.num("goodput_tok_s"),
+            tol,
+            true,
+            violations,
+        );
+        check_metric(
+            &format!("slo {policy} ttft_p99_high_s"),
+            c.num("ttft_p99_high_s"),
+            b.num("ttft_p99_high_s"),
             tol,
             false,
             violations,
