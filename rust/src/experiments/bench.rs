@@ -5,9 +5,11 @@
 //! (3) the multi-chip cluster grid (router × scheduler on 2 chips, via
 //! [`cluster_study::bench_grid`]), (4) the two-tier prefix-cache
 //! ablation (SRAM-only vs HBM tier vs +cross-pipe NoC, via
-//! [`tier_study::bench_rows`]), and (5) the overload control plane
+//! [`tier_study::bench_rows`]), (5) the overload control plane
 //! (FIFO vs shed/defer under a 2x flash crowd, via
-//! [`overload_study::bench_rows`]) — and writes all of it to
+//! [`overload_study::bench_rows`]), and (6) the fault-tolerance study
+//! (crash recovery vs client resubmission plus degradation windows, via
+//! [`fault_study::bench_rows`]) — and writes all of it to
 //! `BENCH_serving.json` (wall-clock sim time, simulated tokens/s,
 //! TTFT/TBT p50/p99, prefix-cache hit rate, memo hit rate,
 //! goodput-under-SLO). CI gates this file against `BENCH_baseline.json`
@@ -19,6 +21,7 @@
 
 use crate::config::{ArrivalProcess, ChipConfig, ModelConfig, PrefixSharing, WorkloadConfig};
 use crate::experiments::cluster_study::{self, ClusterRun};
+use crate::experiments::fault_study::{self, FaultRun};
 use crate::experiments::overload_study::{self, OverloadRun};
 use crate::experiments::plan_study::{self, PlanRun};
 use crate::experiments::tier_study::{self, TierRun};
@@ -255,6 +258,7 @@ pub fn ttft_reduction_pct(runs: &[SystemRun], system: &str) -> f64 {
 
 /// Hand-rolled JSON (no serde in the offline workspace). All strings are
 /// static identifiers, so no escaping is needed.
+#[allow(clippy::too_many_arguments)]
 fn render_json(
     runs: &[SystemRun],
     memo: &MemoStudy,
@@ -263,6 +267,7 @@ fn render_json(
     tier: &[TierRun],
     plan: &[PlanRun],
     slo: &[OverloadRun],
+    fault: &[FaultRun],
 ) -> String {
     let mut j = String::new();
     let _ = writeln!(j, "{{");
@@ -395,6 +400,36 @@ fn render_json(
         );
     }
     let _ = writeln!(j, "  ],");
+    let _ = writeln!(j, "  \"fault\": [");
+    for (i, r) in fault.iter().enumerate() {
+        let _ = writeln!(
+            j,
+            "    {{\"scenario\": \"{}\", \"chips\": {}, \"offered\": {}, \"completed\": {}, \
+             \"shed\": {}, \"crashes\": {}, \"restarts\": {}, \"degradations\": {}, \
+             \"recovered\": {}, \"retries\": {}, \"recovery_shed\": {}, \
+             \"tokens_recomputed\": {}, \"tokens_restored\": {}, \"mean_detect_s\": {:.6}, \
+             \"slo_ttft_s\": {:.6}, \"goodput_tok_s\": {:.3}, \"tokens_per_s\": {:.3}}}{}",
+            r.scenario,
+            r.chips,
+            r.offered,
+            r.completed,
+            r.shed,
+            r.crashes,
+            r.restarts,
+            r.degradations,
+            r.recovered,
+            r.retries,
+            r.recovery_shed,
+            r.tokens_recomputed,
+            r.tokens_restored,
+            r.mean_detect_s,
+            r.slo_ttft_s,
+            r.goodput_tok_s,
+            r.tok_s,
+            if i + 1 < fault.len() { "," } else { "" }
+        );
+    }
+    let _ = writeln!(j, "  ],");
     let _ = writeln!(
         j,
         "  \"memo\": {{\"sweep\": \"fig13-mini\", \"wall_off_s\": {:.6}, \"wall_on_s\": {:.6}, \
@@ -414,6 +449,7 @@ pub fn run(opts: &Opts) -> anyhow::Result<Vec<Table>> {
     let tier = tier_study::bench_rows(opts)?;
     let plan = plan_study::bench_rows(opts)?;
     let slo = overload_study::bench_rows(opts)?;
+    let fault = fault_study::bench_rows(opts)?;
 
     let mut t1 = Table::new(
         "bench — prefix-sharing paged KV on the shared-prefix trace (Qwen3-4B, 64 cores)",
@@ -564,6 +600,32 @@ pub fn run(opts: &Opts) -> anyhow::Result<Vec<Table>> {
         ]);
     }
 
+    let mut t7 = Table::new(
+        "bench — fault tolerance (steady trace at 0.5x fleet capacity, 4 chips)",
+        &[
+            "scenario",
+            "offered",
+            "completed",
+            "shed",
+            "recovered",
+            "detect (ms)",
+            "goodput tok/s (SLO)",
+            "tok/s",
+        ],
+    );
+    for r in &fault {
+        t7.row(&[
+            r.scenario.to_string(),
+            r.offered.to_string(),
+            r.completed.to_string(),
+            r.shed.to_string(),
+            r.recovered.to_string(),
+            f3(r.mean_detect_s * 1e3),
+            f3(r.goodput_tok_s),
+            f3(r.tok_s),
+        ]);
+    }
+
     let cluster_rr = cluster_study::ttft_p50(&cluster, "shared-prefix", "fusion", "rr");
     let cluster_prefix = cluster_study::ttft_p50(&cluster, "shared-prefix", "fusion", "prefix");
     println!(
@@ -582,13 +644,22 @@ pub fn run(opts: &Opts) -> anyhow::Result<Vec<Table>> {
     // BENCH_serving.json: one copy beside the CSVs, one at the repo root
     // (the canonical location the README documents and CI gates on).
     if let Some(dir) = &opts.out_dir {
-        let json = render_json(&runs, &memo, shared_fraction, &cluster, &tier, &plan, &slo);
+        let json = render_json(
+            &runs,
+            &memo,
+            shared_fraction,
+            &cluster,
+            &tier,
+            &plan,
+            &slo,
+            &fault,
+        );
         std::fs::create_dir_all(dir)?;
         std::fs::write(dir.join("BENCH_serving.json"), &json)?;
         std::fs::write("BENCH_serving.json", &json)?;
     }
 
-    Ok(vec![t1, t2, t3, t4, t5, t6])
+    Ok(vec![t1, t2, t3, t4, t5, t6, t7])
 }
 
 #[cfg(test)]
@@ -716,7 +787,26 @@ mod tests {
             ttft_p99_high_s: 0.02,
             ttft_p99_low_s: 0.4,
         }];
-        let j = render_json(&runs, &memo, 0.6, &cluster, &tier, &plan, &slo);
+        let fault = vec![FaultRun {
+            scenario: "crash_recover",
+            chips: 4,
+            offered: 96,
+            completed: 96,
+            shed: 0,
+            crashes: 1,
+            restarts: 0,
+            degradations: 0,
+            recovered: 3,
+            retries: 3,
+            recovery_shed: 0,
+            tokens_recomputed: 1024,
+            tokens_restored: 256,
+            mean_detect_s: 0.008,
+            slo_ttft_s: 0.05,
+            goodput_tok_s: 780.0,
+            tok_s: 840.0,
+        }];
+        let j = render_json(&runs, &memo, 0.6, &cluster, &tier, &plan, &slo, &fault);
         assert!(j.starts_with("{\n"));
         assert!(j.trim_end().ends_with('}'));
         assert_eq!(j.matches('{').count(), j.matches('}').count());
@@ -731,5 +821,8 @@ mod tests {
         assert!(j.contains("\"policy\": \"drop\""));
         assert!(j.contains("\"goodput_tok_s\": 800.000"));
         assert!(j.contains("\"shed_rate\": 0.3750"));
+        assert!(j.contains("\"scenario\": \"crash_recover\""));
+        assert!(j.contains("\"recovered\": 3"));
+        assert!(j.contains("\"mean_detect_s\": 0.008000"));
     }
 }

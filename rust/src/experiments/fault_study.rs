@@ -1,0 +1,336 @@
+//! `fault_study` — fleet serving under injected faults: the same steady
+//! trace (Poisson at half the 4-chip fleet's sustainable rate) replayed
+//! under four deterministic fault scenarios:
+//!
+//! - `none`           — healthy fleet baseline.
+//! - `crash_recover`  — chip 0 crashes while serving its first request
+//!   and never restarts; the frontend detects the crash within one
+//!   heartbeat, drains the stranded requests, and retries them KV-aware
+//!   on surviving chips with bounded backoff
+//!   ([`RecoveryPolicy::Recover`]).
+//! - `crash_resubmit` — the same crash, but the frontend does nothing:
+//!   each stranded client notices only via its own timeout (set to the
+//!   TTFT SLO) and resubmits from scratch
+//!   ([`RecoveryPolicy::Resubmit`]) — the naive drop-and-resubmit
+//!   baseline recovery must beat.
+//! - `degrade`        — no crash: one chip's outbound links at 0.4x
+//!   bandwidth and another chip's HBM at 0.5x for a mid-trace window;
+//!   degraded chips advertise proportionally shrunk capacity so the
+//!   least-loaded router steers around them.
+//!
+//! The gated acceptance properties (`BENCH_serving.json` `"fault"`
+//! section, checked by `tools/bench_check`):
+//!
+//! 1. **Exactly-once**: `completed + shed == offered` in every scenario —
+//!    a crash strands nothing and duplicates nothing.
+//! 2. **Recovery beats resubmission**: `crash_recover` goodput-under-SLO
+//!    strictly exceeds `crash_resubmit`'s (frontend-driven retry-with-
+//!    backoff re-admits stranded work within milliseconds of detection;
+//!    a client timeout burns a whole SLO budget first).
+//! 3. **Bounded degradation**: losing 1 of N chips costs at most
+//!    `2/N + 0.35` of the healthy goodput (capacity share plus detect /
+//!    re-prefill / queue-shuffle overhead).
+//!
+//! ```sh
+//! cargo run --release -p npusim -- experiment fault_study
+//! ```
+
+use crate::config::{ArrivalProcess, ChipConfig, LenDist, ModelConfig, WorkloadConfig};
+use crate::experiments::{overload_study, Opts};
+use crate::serving::cluster::{self, ClusterConfig, RouterPolicy};
+use crate::serving::faults::{FaultEvent, FaultKind, FaultSchedule, RecoveryPolicy};
+use crate::serving::pd_fusion::FusionConfig;
+use crate::serving::request::{self, Request};
+use crate::serving::scheduler::SchedulerConfig;
+use crate::util::table::{f3, Table};
+
+/// Fleet size of the study — large enough that one chip is a 25% capacity
+/// share and the `2/N` degradation bound is a real constraint.
+pub const FAULT_CHIPS: usize = 4;
+
+/// One fault-scenario cell.
+#[derive(Debug, Clone)]
+pub struct FaultRun {
+    pub scenario: &'static str,
+    pub chips: usize,
+    pub offered: usize,
+    pub completed: usize,
+    pub shed: u64,
+    pub crashes: u64,
+    pub restarts: u64,
+    pub degradations: u64,
+    /// Stranded requests the frontend re-admitted (first retry each).
+    pub recovered: u64,
+    pub retries: u64,
+    /// Recovery retries that exhausted their budget and were shed.
+    pub recovery_shed: u64,
+    pub tokens_recomputed: u64,
+    pub tokens_restored: u64,
+    /// Mean crash-to-detection latency (seconds; heartbeat-bounded).
+    pub mean_detect_s: f64,
+    pub slo_ttft_s: f64,
+    pub goodput_tok_s: f64,
+    pub tok_s: f64,
+}
+
+/// Per-chip scheduler: one chip-wide fused pipeline (as in
+/// `overload_study`), so each chip's queue maps 1:1 onto its probes.
+fn fleet_sched() -> SchedulerConfig {
+    SchedulerConfig::Fusion(FusionConfig {
+        tp: 16,
+        stages: 4,
+        ..FusionConfig::default()
+    })
+}
+
+/// The steady trace of the study: Poisson arrivals at `rate`, lengths in
+/// the overload-study band.
+fn fault_trace(n: usize, rate: f64) -> Vec<Request> {
+    let mut w = WorkloadConfig::fixed_ratio(384, 1, n);
+    w.name = "fault".into();
+    w.input_len = LenDist::Uniform(256, 512);
+    w.output_len = LenDist::Uniform(16, 48);
+    let w = w
+        .with_arrival(ArrivalProcess::Poisson { rate: rate.max(1.0) })
+        .with_seed(7);
+    request::generate(&w)
+}
+
+/// Run one fault scenario; conservation (exactly-once) is asserted here
+/// so *every* caller inherits gate 1.
+fn run_scenario(
+    scenario: &'static str,
+    model: &ModelConfig,
+    reqs: Vec<Request>,
+    slo_ttft_s: f64,
+    faults: Option<FaultSchedule>,
+) -> anyhow::Result<FaultRun> {
+    let offered = reqs.len();
+    let mut cfg = ClusterConfig::new(
+        ChipConfig::large_core(),
+        FAULT_CHIPS,
+        fleet_sched(),
+        RouterPolicy::LeastLoaded,
+    );
+    cfg.slo_ttft_s = slo_ttft_s;
+    let freq = cfg.chip.freq_mhz;
+    if let Some(f) = faults {
+        cfg = cfg.with_faults(f);
+    }
+    let cm = cluster::simulate_cluster_requests(&cfg, model, reqs)?;
+    anyhow::ensure!(
+        cm.conserves(offered),
+        "{scenario}: {} completed + {} shed != {offered} offered",
+        cm.n_requests(),
+        cm.shed_requests()
+    );
+    let agg = cm.aggregate();
+    Ok(FaultRun {
+        scenario,
+        chips: FAULT_CHIPS,
+        offered,
+        completed: cm.n_requests(),
+        shed: cm.shed_requests(),
+        crashes: cm.faults.crashes,
+        restarts: cm.faults.restarts,
+        degradations: cm.faults.degradations,
+        recovered: cm.faults.recovered,
+        retries: cm.faults.retries,
+        recovery_shed: cm.faults.recovery_shed,
+        tokens_recomputed: cm.faults.tokens_recomputed,
+        tokens_restored: cm.faults.tokens_restored,
+        mean_detect_s: cm.faults.mean_detect_s(freq),
+        slo_ttft_s,
+        goodput_tok_s: agg.goodput_tokens_per_s(slo_ttft_s, overload_study::SLO_TBT_S),
+        tok_s: agg.tokens_per_s(),
+    })
+}
+
+/// The four-scenario comparison the bench's `"fault"` section reports.
+pub fn bench_rows(opts: &Opts) -> anyhow::Result<Vec<FaultRun>> {
+    let model = ModelConfig::qwen3_4b();
+    let n = opts.pick(96, 24);
+    let per_chip = overload_study::sustainable_rate(&model, opts.pick(24, 8))?;
+    let slo_ttft_s = overload_study::SLO_SERVICE_PERIODS / per_chip;
+    // Half the fleet's aggregate capacity: headroom for recovery, but
+    // enough load that a dead chip's share is visible.
+    let rate = per_chip * FAULT_CHIPS as f64 * 0.5;
+    let reqs = fault_trace(n, rate);
+    let horizon = n as f64 / rate.max(1.0);
+    // Crash chip 0 a fraction of a service period after the first
+    // arrival: least-loaded routing breaks the initial tie toward chip 0,
+    // so the crash is guaranteed to strand in-flight work (the recovery
+    // path demonstrably fires on every trace).
+    let crash_at = reqs.first().map_or(0.0, |r| r.arrival_s) + 0.2 / per_chip;
+    let crash = |recovery: RecoveryPolicy| {
+        FaultSchedule::new(vec![FaultEvent {
+            at_s: crash_at,
+            chip: 0,
+            kind: FaultKind::ChipCrash {
+                restart_after_s: None,
+            },
+        }])
+        .with_retries(6, 0.002)
+        .with_recovery(recovery)
+    };
+    let degrade = FaultSchedule::new(vec![
+        FaultEvent {
+            at_s: 0.2 * horizon,
+            chip: 1,
+            kind: FaultKind::LinkDegrade {
+                factor: 0.4,
+                duration_s: 0.4 * horizon,
+            },
+        },
+        FaultEvent {
+            at_s: 0.2 * horizon,
+            chip: 2,
+            kind: FaultKind::HbmThrottle {
+                factor: 0.5,
+                duration_s: 0.4 * horizon,
+            },
+        },
+    ]);
+    Ok(vec![
+        run_scenario("none", &model, reqs.clone(), slo_ttft_s, None)?,
+        run_scenario(
+            "crash_recover",
+            &model,
+            reqs.clone(),
+            slo_ttft_s,
+            Some(crash(RecoveryPolicy::Recover)),
+        )?,
+        run_scenario(
+            "crash_resubmit",
+            &model,
+            reqs.clone(),
+            slo_ttft_s,
+            Some(crash(RecoveryPolicy::Resubmit {
+                client_timeout_s: slo_ttft_s,
+            })),
+        )?,
+        run_scenario("degrade", &model, reqs, slo_ttft_s, Some(degrade))?,
+    ])
+}
+
+pub fn run(opts: &Opts) -> anyhow::Result<Vec<Table>> {
+    let runs = bench_rows(opts)?;
+
+    let mut t = Table::new(
+        "fault_study — steady trace at 0.5x fleet capacity under injected faults \
+         (Qwen3-4B, 4 large-core chips)",
+        &[
+            "scenario",
+            "offered",
+            "completed",
+            "shed",
+            "crash/restart/degrade",
+            "recovered",
+            "retries",
+            "tokens recomputed/restored",
+            "detect (ms)",
+            "goodput tok/s (SLO)",
+            "tok/s",
+        ],
+    );
+    for r in &runs {
+        t.row(&[
+            r.scenario.to_string(),
+            r.offered.to_string(),
+            r.completed.to_string(),
+            r.shed.to_string(),
+            format!("{}/{}/{}", r.crashes, r.restarts, r.degradations),
+            r.recovered.to_string(),
+            r.retries.to_string(),
+            format!("{}/{}", r.tokens_recomputed, r.tokens_restored),
+            f3(r.mean_detect_s * 1e3),
+            f3(r.goodput_tok_s),
+            f3(r.tok_s),
+        ]);
+    }
+
+    let by = |s: &str| runs.iter().find(|r| r.scenario == s).unwrap();
+    let (none, rec, res) = (by("none"), by("crash_recover"), by("crash_resubmit"));
+    let floor = 1.0 - 2.0 / FAULT_CHIPS as f64 - 0.35;
+    println!(
+        "fault_study: goodput under SLO (TTFT<{:.4}s) — none {:.1} tok/s, \
+         crash+recover {:.1} ({:.0}% of healthy, bound {:.0}%), crash+resubmit {:.1}; \
+         detection {:.1} ms, {} recovered / {} retries / {} recovery-shed",
+        none.slo_ttft_s,
+        none.goodput_tok_s,
+        rec.goodput_tok_s,
+        if none.goodput_tok_s > 0.0 {
+            rec.goodput_tok_s / none.goodput_tok_s * 100.0
+        } else {
+            0.0
+        },
+        floor.max(0.0) * 100.0,
+        res.goodput_tok_s,
+        rec.mean_detect_s * 1e3,
+        rec.recovered,
+        rec.retries,
+        rec.recovery_shed
+    );
+
+    Ok(vec![t])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fault_trace_is_deterministic_and_sorted() {
+        let reqs = fault_trace(32, 40.0);
+        assert_eq!(reqs.len(), 32);
+        assert_eq!(reqs, fault_trace(32, 40.0));
+        assert!(reqs.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s));
+    }
+
+    #[test]
+    fn gates_hold_at_fast_scale() {
+        // The three bench_check gates, asserted at the same scale CI
+        // smoke-runs: exactly-once (inside run_scenario), recovery
+        // strictly beating client-timeout resubmission, and the bounded
+        // single-chip-crash degradation.
+        let runs = bench_rows(&Opts::fast()).unwrap();
+        assert_eq!(runs.len(), 4);
+        let by = |s: &str| runs.iter().find(|r| r.scenario == s).unwrap();
+        let (none, rec, res, deg) = (
+            by("none"),
+            by("crash_recover"),
+            by("crash_resubmit"),
+            by("degrade"),
+        );
+        assert_eq!(none.crashes + none.degradations, 0);
+        assert_eq!(none.completed, none.offered);
+        for r in [rec, res] {
+            assert_eq!(r.crashes, 1, "{}", r.scenario);
+        }
+        assert!(rec.recovered > 0, "the early crash must strand work");
+        assert!(rec.tokens_recomputed > 0);
+        assert!(
+            rec.mean_detect_s > 0.0
+                && rec.mean_detect_s <= crate::serving::faults::DEFAULT_HEARTBEAT_S + 1e-9,
+            "detection {} outside one heartbeat",
+            rec.mean_detect_s
+        );
+        assert!(
+            rec.goodput_tok_s > res.goodput_tok_s,
+            "recover {} !> resubmit {}",
+            rec.goodput_tok_s,
+            res.goodput_tok_s
+        );
+        let floor = (1.0 - 2.0 / FAULT_CHIPS as f64 - 0.35).max(0.0);
+        assert!(
+            rec.goodput_tok_s >= none.goodput_tok_s * floor,
+            "crash goodput {} below {} x healthy {}",
+            rec.goodput_tok_s,
+            floor,
+            none.goodput_tok_s
+        );
+        assert_eq!(deg.degradations, 2);
+        assert_eq!(deg.crashes, 0);
+        assert!(deg.goodput_tok_s > 0.0);
+    }
+}

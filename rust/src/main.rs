@@ -15,8 +15,9 @@ use npusim::experiments::{self, Opts};
 use npusim::parallel::plan::{self, DeploymentPlan};
 use npusim::serving::cluster::{
     simulate_cluster, simulate_cluster_requests, ClusterConfig, ClusterMetrics, RouterPolicy,
-    ShedPolicy,
+    ShedPolicy, ShedScope,
 };
+use npusim::serving::faults::{FaultSchedule, RecoveryPolicy};
 use npusim::serving::pd_disagg::{simulate_disagg, DisaggConfig};
 use npusim::serving::pd_fusion::{simulate_fusion, FusionConfig};
 use npusim::serving::scheduler::{self, HybridConfig, HybridScheduler, SchedulerConfig};
@@ -58,6 +59,8 @@ fn dispatch(args: &Args) -> Result<()> {
                  npusim simulate --prefix-cache --hbm-tier --cross-pipe --shared-prefix 1024\n      \
                  npusim simulate --chips 4 --router prefix --prefix-cache --shared-prefix 1024\n      \
                  npusim simulate --chips 2 --priority-mix 0.2:0.3 --shed-policy drop --slo-ttft 1.0\n      \
+                 npusim simulate --chips 4 --faults crash:0@0.5 --fault-recovery recover\n      \
+                 npusim simulate --chips 4 --fault-seed 42 --chip-mttf 5.0 --shed-policy drop --shed-scope per-chip\n      \
                  npusim serve --prompt \"1,2,3,4\""
             );
             Ok(())
@@ -138,6 +141,7 @@ fn fusion_cfg_from(args: &Args) -> Result<FusionConfig> {
         cross_pipe: args.flag("cross-pipe"),
         affinity_gap: args.opt_parse_or("affinity-gap", defaults.affinity_gap)?,
         memo: args.flag("memo"),
+        slo_preempt: args.opt_parse::<f64>("slo-preempt")?,
         ..defaults
     })
 }
@@ -238,18 +242,90 @@ fn sched_cfg_from(args: &Args, mode: &str) -> Result<SchedulerConfig> {
     })
 }
 
+/// `--fault-recovery recover|resubmit[:timeout_s]`.
+fn recovery_from(s: &str) -> Result<RecoveryPolicy> {
+    match s {
+        "recover" => Ok(RecoveryPolicy::Recover),
+        "resubmit" => Ok(RecoveryPolicy::Resubmit {
+            client_timeout_s: 1.0,
+        }),
+        other => match other.strip_prefix("resubmit:") {
+            Some(t) => Ok(RecoveryPolicy::Resubmit {
+                client_timeout_s: t
+                    .parse::<f64>()
+                    .context("--fault-recovery resubmit:<timeout seconds>")?,
+            }),
+            None => anyhow::bail!(
+                "unknown recovery policy {other:?} (recover|resubmit[:timeout_s])"
+            ),
+        },
+    }
+}
+
 /// Overload control-plane knobs shared by both cluster paths
-/// (`--shed-policy none|drop|defer`, `--queue-cap N`, `--slo-ttft S`).
+/// (`--shed-policy none|drop|defer`, `--shed-scope global|per-chip`,
+/// `--queue-cap N`, `--slo-ttft S`), plus fault injection
+/// (`--faults SPEC` or `--fault-seed N --chip-mttf S`, tuned by
+/// `--fault-heartbeat/--fault-retries/--fault-backoff/--fault-recovery`).
 fn apply_control_plane(args: &Args, mut cfg: ClusterConfig) -> Result<ClusterConfig> {
     if let Some(policy) = args.opt("shed-policy") {
         let cap = args.opt_parse_or("queue-cap", cfg.queue_cap)?;
         cfg = cfg.with_shed(ShedPolicy::parse(policy)?, cap);
     }
+    if let Some(scope) = args.opt("shed-scope") {
+        cfg = cfg.with_shed_scope(ShedScope::parse(scope)?);
+    }
     cfg.slo_ttft_s = args.opt_parse_or("slo-ttft", cfg.slo_ttft_s)?;
+    // Fault injection: an explicit schedule, or a seeded chaos draw from
+    // a per-chip MTTF over a horizon.
+    let schedule = match (args.opt("faults"), args.opt_parse::<u64>("fault-seed")?) {
+        (Some(_), Some(_)) => {
+            anyhow::bail!("--faults and --fault-seed are mutually exclusive")
+        }
+        (Some(spec), None) => Some(FaultSchedule::parse(spec)?),
+        (None, Some(seed)) => {
+            let mttf = args.opt_parse::<f64>("chip-mttf")?.context(
+                "--fault-seed needs --chip-mttf <seconds> (per-chip mean time to failure)",
+            )?;
+            let horizon = args.opt_parse_or("fault-horizon", 10.0)?;
+            Some(FaultSchedule::seeded(seed, cfg.n_chips, horizon, mttf))
+        }
+        (None, None) => None,
+    };
+    match schedule {
+        Some(mut s) => {
+            if let Some(hb) = args.opt_parse::<f64>("fault-heartbeat")? {
+                s = s.with_heartbeat(hb);
+            }
+            let retries = args.opt_parse_or("fault-retries", s.max_retries)?;
+            let backoff = args.opt_parse_or("fault-backoff", s.retry_backoff_s)?;
+            s = s.with_retries(retries, backoff);
+            if let Some(r) = args.opt("fault-recovery") {
+                s = s.with_recovery(recovery_from(r)?);
+            }
+            cfg = cfg.with_faults(s);
+        }
+        None => {
+            // Tuning knobs without a schedule would be silently inert.
+            for k in [
+                "chip-mttf",
+                "fault-horizon",
+                "fault-heartbeat",
+                "fault-retries",
+                "fault-backoff",
+                "fault-recovery",
+            ] {
+                anyhow::ensure!(
+                    args.opt(k).is_none(),
+                    "--{k} needs a fault schedule: pass --faults SPEC or --fault-seed N"
+                );
+            }
+        }
+    }
     Ok(cfg)
 }
 
-fn print_cluster(name: &str, cm: &ClusterMetrics, slo_ttft_s: f64) {
+fn print_cluster(name: &str, cm: &ClusterMetrics, slo_ttft_s: f64, freq_mhz: f64) {
     let mut t = Table::new(
         &format!("cluster serving — {name}"),
         &[
@@ -321,6 +397,25 @@ fn print_cluster(name: &str, cm: &ClusterMetrics, slo_ttft_s: f64) {
             slo_ttft_s,
             agg.goodput_tokens_per_s(slo_ttft_s, 0.050),
             agg.shed_rate() * 100.0
+        );
+    }
+    // Fault lines only when a fault actually fired, so fault-free runs
+    // keep byte-identical output.
+    let fs = &cm.faults;
+    if fs.crashes + fs.degradations > 0 {
+        println!(
+            "faults: {} crash(es) ({} restarted, mean detection {:.1} ms), {} degradation window(s)",
+            fs.crashes,
+            fs.restarts,
+            fs.mean_detect_s(freq_mhz) * 1e3,
+            fs.degradations
+        );
+    }
+    if fs.recovered + fs.retries + fs.recovery_shed > 0 {
+        println!(
+            "recovery: {} recovered in {} retries ({} shed after the retry budget), \
+             tokens recomputed {} / restored from surviving KV {}",
+            fs.recovered, fs.retries, fs.recovery_shed, fs.tokens_recomputed, fs.tokens_restored
         );
     }
 }
@@ -473,6 +568,26 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             "--shed-policy/--queue-cap/--slo-ttft need a multi-chip cluster: pass --chips N (N > 1)"
         );
     }
+    // Likewise fault injection and recovery: heartbeat detection and
+    // retry routing are frontend machinery.
+    if n_chips <= 1 {
+        for k in [
+            "faults",
+            "fault-seed",
+            "chip-mttf",
+            "fault-horizon",
+            "fault-heartbeat",
+            "fault-retries",
+            "fault-backoff",
+            "fault-recovery",
+            "shed-scope",
+        ] {
+            anyhow::ensure!(
+                args.opt(k).is_none(),
+                "--{k} needs a multi-chip cluster: pass --chips N (N > 1)"
+            );
+        }
+    }
 
     // First-class deployment plan (`--plan auto|<preset>`): TP strategy,
     // placement, pipeline depth and PD mode come from the searched (or
@@ -536,6 +651,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
                 ),
                 &cm,
                 cluster_cfg.slo_ttft_s,
+                cluster_cfg.chip.freq_mhz,
             );
             return Ok(());
         }
@@ -575,6 +691,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             ),
             &cm,
             cluster_cfg.slo_ttft_s,
+            cluster_cfg.chip.freq_mhz,
         );
         return Ok(());
     }

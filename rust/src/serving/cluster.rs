@@ -30,9 +30,10 @@
 use crate::config::{ChipConfig, ModelConfig, WorkloadConfig};
 use crate::memmgr::prefix::{keys_prefix, BlockKey, TierMatch};
 use crate::memmgr::KV_BLOCK_TOKENS;
+use crate::serving::faults::{FaultKind, FaultSchedule, RecoveryPolicy};
 use crate::serving::metrics::{CacheStats, ControlStats, Metrics};
 use crate::serving::request::{self, Priority, Request};
-use crate::serving::scheduler::{Scheduler, SchedulerConfig};
+use crate::serving::scheduler::{Incomplete, Scheduler, SchedulerConfig};
 use crate::sim::chip::ChipSim;
 use crate::sim::interconnect::{Interconnect, InterconnectConfig, InterconnectStats};
 use crate::util::units::{cycles_to_secs, secs_to_cycles, Cycle};
@@ -81,6 +82,45 @@ const MAX_DEFERRALS: u32 = 8;
 /// arrival strictly later than the admission that bounced it even when
 /// the cycle→seconds round-trip rounds down.
 const DEFER_BACKOFF_S: f64 = 1e-4;
+
+/// Load gain of the adaptive defer backoff: the per-deferral step is
+/// `DEFER_BACKOFF_S · (1 + gain · backpressure) · 2^retries`, so a lightly
+/// loaded fleet retries almost immediately while a saturated one spaces
+/// retries out instead of thrashing the admission path. Backpressure is
+/// clamped to `[0, 1]`, so one step never exceeds
+/// `DEFER_BACKOFF_S · (1 + DEFER_LOAD_GAIN) · 2^(MAX_DEFERRALS-1)` and the
+/// deferral chain still terminates within [`MAX_DEFERRALS`] re-timings.
+const DEFER_LOAD_GAIN: f64 = 9.0;
+
+/// Where the shed/defer saturation test looks (CLI `--shed-scope`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ShedScope {
+    /// Shed only when **every** routable chip is saturated for the
+    /// arrival's class (the original cluster-global check).
+    #[default]
+    Global,
+    /// Route first, then shed when the **target** chip is saturated: a
+    /// hot-spotted cluster keeps admitting onto its lightly loaded chips
+    /// instead of waiting for the last chip to fill up.
+    PerChip,
+}
+
+impl ShedScope {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "global" | "cluster" => ShedScope::Global,
+            "per-chip" | "chip" | "perchip" => ShedScope::PerChip,
+            other => anyhow::bail!("unknown shed scope {other:?} (global|per-chip)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShedScope::Global => "global",
+            ShedScope::PerChip => "per-chip",
+        }
+    }
+}
 
 /// Routing policy selector (CLI `--router`, experiment sweeps).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -311,6 +351,13 @@ pub struct ClusterConfig {
     /// (does not gate admission — queue depth and scheduler backpressure
     /// do; this is the SLO the shed policy is protecting).
     pub slo_ttft_s: f64,
+    /// Saturation scope of the shed/defer check (global = legacy).
+    pub shed_scope: ShedScope,
+    /// Deterministic fault schedule (`None` = fault-free, bit-identical to
+    /// the pre-fault driver). With `Some`, the frontend additionally runs
+    /// heartbeat-style failure detection and KV-aware recovery — see
+    /// [`crate::serving::faults`].
+    pub faults: Option<FaultSchedule>,
 }
 
 impl ClusterConfig {
@@ -330,6 +377,8 @@ impl ClusterConfig {
             shed: ShedPolicy::default(),
             queue_cap: 32,
             slo_ttft_s: 2.0,
+            shed_scope: ShedScope::default(),
+            faults: None,
         }
     }
 
@@ -337,6 +386,18 @@ impl ClusterConfig {
     pub fn with_shed(mut self, shed: ShedPolicy, queue_cap: usize) -> Self {
         self.shed = shed;
         self.queue_cap = queue_cap.max(1);
+        self
+    }
+
+    /// Select the shed saturation scope (builder style).
+    pub fn with_shed_scope(mut self, scope: ShedScope) -> Self {
+        self.shed_scope = scope;
+        self
+    }
+
+    /// Attach a deterministic fault schedule (builder style).
+    pub fn with_faults(mut self, faults: FaultSchedule) -> Self {
+        self.faults = Some(faults);
         self
     }
 
@@ -357,11 +418,63 @@ impl ClusterConfig {
     }
 }
 
+/// Fault-plane counters of one cluster run (all zero when
+/// [`ClusterConfig::faults`] is `None`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Chip crashes injected (a crash on an already-down chip is ignored).
+    pub crashes: u64,
+    /// Crashed chips brought back cold after their restart window.
+    pub restarts: u64,
+    /// Link / HBM degradation windows injected.
+    pub degradations: u64,
+    /// Summed crash→detection latency in cycles (heartbeat-bounded).
+    pub detect_cycles: u64,
+    /// Distinct stranded requests re-dispatched onto a surviving chip.
+    pub recovered: u64,
+    /// Recovery dispatches, including repeats and naive resubmissions.
+    pub retries: u64,
+    /// Stranded requests shed after exhausting the retry budget (or when
+    /// no chip could ever serve them again).
+    pub recovery_shed: u64,
+    /// Tokens recovery re-ran: un-restorable prompt prefill plus lost
+    /// decode progress.
+    pub tokens_recomputed: u64,
+    /// Prompt tokens restored from a surviving cross-chip prefix copy
+    /// instead of recomputed.
+    pub tokens_restored: u64,
+}
+
+impl FaultStats {
+    /// Mean crash→detection latency in seconds (0 with no crashes).
+    pub fn mean_detect_s(&self, freq_mhz: f64) -> f64 {
+        if self.crashes == 0 {
+            return 0.0;
+        }
+        cycles_to_secs(self.detect_cycles, freq_mhz) / self.crashes as f64
+    }
+}
+
+/// Recovery accounting of one stranded-then-redispatched request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RecoveryRecord {
+    pub id: u64,
+    /// Which retry attempt this dispatch was (1 = first).
+    pub retries: u32,
+    /// Cycles from the crash that stranded it to this re-admission.
+    pub recovery_cycles: Cycle,
+    /// Prompt tokens re-prefilled plus decode tokens regenerated.
+    pub tokens_recomputed: u64,
+    /// Prompt tokens restored from a surviving cached prefix copy.
+    pub tokens_restored: u64,
+}
+
 /// Per-chip metrics plus the cluster-level rollup inputs.
 #[derive(Debug)]
 pub struct ClusterMetrics {
     pub per_chip: Vec<Metrics>,
-    /// Requests admitted per chip (the routing histogram).
+    /// Requests admitted per chip (the routing histogram; recovery
+    /// re-dispatches count again on their new chip).
     pub routed: Vec<usize>,
     /// Prefix migrations the router performed.
     pub migrations: u64,
@@ -370,6 +483,10 @@ pub struct ClusterMetrics {
     /// chip's [`Metrics`]; preemption/resume counters live per chip).
     pub control: ControlStats,
     pub interconnect: InterconnectStats,
+    /// Fault-plane counters (all zero without a fault schedule).
+    pub faults: FaultStats,
+    /// One record per recovery dispatch, sorted by `(id, retries)`.
+    pub recovery: Vec<RecoveryRecord>,
     freq_mhz: f64,
 }
 
@@ -379,9 +496,17 @@ impl ClusterMetrics {
         self.per_chip.iter().map(|m| m.n_requests()).sum()
     }
 
-    /// Requests the frontend shed (never admitted to any chip).
+    /// Requests the frontend shed (never admitted to any chip, or dropped
+    /// by recovery after exhausting its retry budget).
     pub fn shed_requests(&self) -> u64 {
         self.control.shed_requests
+    }
+
+    /// Exactly-once conservation: every offered request either completed
+    /// or was shed — nothing stranded, nothing served twice. The fault
+    /// study gates on this holding through crashes and recoveries.
+    pub fn conserves(&self, offered: usize) -> bool {
+        self.n_requests() + self.shed_requests() as usize == offered
     }
 
     /// Merge every chip's records and cache counters into one [`Metrics`]
@@ -404,6 +529,248 @@ struct Transit {
     dst: usize,
     req: Request,
     keys: Vec<BlockKey>,
+}
+
+/// One chip's fault-plane health as the frontend tracks it.
+struct ChipHealth {
+    /// `Some(crash_cycle)` while the chip is down.
+    down_since: Option<Cycle>,
+    /// Whether the heartbeat (or a restart) has already discovered the
+    /// crash and drained the stranded work. Until detection the frontend
+    /// still routes to the dead chip — exactly the heartbeat-interval
+    /// blind window the fault study measures.
+    detected: bool,
+    /// Active HBM throttle factor (1.0 = nominal).
+    hbm_factor: f64,
+    /// Active egress-link degradation factor (1.0 = nominal).
+    link_factor: f64,
+}
+
+impl ChipHealth {
+    fn new() -> Self {
+        ChipHealth {
+            down_since: None,
+            detected: false,
+            hbm_factor: 1.0,
+            link_factor: 1.0,
+        }
+    }
+
+    fn up(&self) -> bool {
+        self.down_since.is_none()
+    }
+
+    /// What the frontend believes: a crashed chip stays routable until the
+    /// heartbeat discovers it.
+    fn believed_up(&self) -> bool {
+        self.up() || !self.detected
+    }
+
+    /// Advertised capacity in per-mille of nominal — degraded chips shrink
+    /// it so routers steer proportionally more load elsewhere.
+    fn capacity_milli(&self) -> u64 {
+        (((self.hbm_factor * self.link_factor) * 1000.0).round() as u64).max(1)
+    }
+}
+
+/// Internal control-plane events of the fault machinery, processed as a
+/// fourth event source of the cluster loop (ties broken by insertion
+/// sequence for determinism).
+enum Ctrl {
+    /// Scheduled fault fires (index into `FaultSchedule::events`).
+    Inject(usize),
+    /// Heartbeat probe discovers the crash of `chip` at `crash`.
+    Detect { chip: usize, crash: Cycle },
+    /// A crashed chip comes back cold.
+    Restart { chip: usize },
+    /// A degradation window ends (`hbm`: HBM throttle vs egress link).
+    Expire { chip: usize, hbm: bool },
+    /// A recovered request re-dispatches after its backoff.
+    Retry {
+        req: Request,
+        attempt: u32,
+        crash: Cycle,
+        generated: u64,
+    },
+}
+
+/// Fault-plane runtime state of one cluster run.
+struct FaultRt {
+    schedule: FaultSchedule,
+    health: Vec<ChipHealth>,
+    /// Pending control events as `(cycle, seq, event)`; the earliest
+    /// `(cycle, seq)` fires next.
+    ctrl: Vec<(Cycle, u64, Ctrl)>,
+    seq: u64,
+    /// Recovery attempts per stranded request id.
+    retries: HashMap<u64, u32>,
+    /// First-seen arrival cycle per request id (recovered requests rebase
+    /// to it, so TTFT honestly includes downtime + redo).
+    orig_arrival: HashMap<u64, Cycle>,
+    /// `(id, original arrival)` of every request that entered recovery.
+    rebase: Vec<(u64, Cycle)>,
+    stats: FaultStats,
+    recovery: Vec<RecoveryRecord>,
+}
+
+impl FaultRt {
+    fn new(schedule: FaultSchedule, n: usize, freq: f64) -> Self {
+        let mut f = FaultRt {
+            health: (0..n).map(|_| ChipHealth::new()).collect(),
+            ctrl: Vec::new(),
+            seq: 0,
+            retries: HashMap::new(),
+            orig_arrival: HashMap::new(),
+            rebase: Vec::new(),
+            stats: FaultStats::default(),
+            recovery: Vec::new(),
+            schedule,
+        };
+        for (idx, ev) in f.schedule.events.clone().iter().enumerate() {
+            f.push(secs_to_cycles(ev.at_s, freq), Ctrl::Inject(idx));
+        }
+        f
+    }
+
+    fn push(&mut self, at: Cycle, ev: Ctrl) {
+        self.ctrl.push((at, self.seq, ev));
+        self.seq += 1;
+    }
+
+    /// Cycle of the next pending control event ([`Cycle::MAX`] if none).
+    fn next_cycle(&self) -> Cycle {
+        self.ctrl
+            .iter()
+            .map(|(c, s, _)| (*c, *s))
+            .min()
+            .map(|(c, _)| c)
+            .unwrap_or(Cycle::MAX)
+    }
+
+    /// Remove and return the earliest `(cycle, seq)` control event.
+    fn pop_next(&mut self) -> Option<(Cycle, Ctrl)> {
+        let k = self
+            .ctrl
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, (c, s, _))| (*c, *s))
+            .map(|(k, _)| k)?;
+        let (c, _, ev) = self.ctrl.remove(k);
+        Some((c, ev))
+    }
+
+    /// Earliest pending restart, if any (the all-chips-down fallback).
+    fn restart_pending(&self) -> Option<Cycle> {
+        self.ctrl
+            .iter()
+            .filter(|(_, _, e)| matches!(e, Ctrl::Restart { .. }))
+            .map(|(c, _, _)| *c)
+            .min()
+    }
+}
+
+/// Shared defer-or-shed tail of every admission rejection: re-time the
+/// arrival back into the sorted stream under [`ShedPolicy::Defer`] (with
+/// the load-adaptive exponential backoff), degrade to a shed past
+/// [`MAX_DEFERRALS`] or under [`ShedPolicy::Drop`].
+#[allow(clippy::too_many_arguments)]
+fn reject_arrival(
+    mut req: Request,
+    shed: ShedPolicy,
+    backoff_base_s: f64,
+    retime_floor: Cycle,
+    freq: f64,
+    stream: &mut VecDeque<Request>,
+    deferred: &mut HashMap<u64, u32>,
+    control: &mut ControlStats,
+    done: &mut usize,
+) {
+    let retries = deferred.get(&req.id).copied().unwrap_or(0);
+    if shed == ShedPolicy::Defer && retries < MAX_DEFERRALS {
+        deferred.insert(req.id, retries + 1);
+        control.deferrals += 1;
+        req.arrival_s = (cycles_to_secs(retime_floor, freq).max(req.arrival_s))
+            + backoff_base_s * (1u64 << retries.min(30)) as f64;
+        let at = stream
+            .iter()
+            .position(|r| r.arrival_s > req.arrival_s)
+            .unwrap_or(stream.len());
+        stream.insert(at, req);
+    } else {
+        control.shed_requests += 1;
+        control.shed_by_class[req.priority.index()] += 1;
+        *done += 1;
+    }
+}
+
+/// Load-adaptive defer backoff base: the minimum re-timing step scaled by
+/// the worst probed backpressure across the routable chips.
+fn defer_backoff(scheds: &[Box<dyn Scheduler>], avail: &[usize]) -> f64 {
+    let bp = avail
+        .iter()
+        .map(|&i| scheds[i].backpressure().clamp(0.0, 1.0))
+        .fold(0.0, f64::max);
+    DEFER_BACKOFF_S * (1.0 + DEFER_LOAD_GAIN * bp)
+}
+
+/// Handle one request stranded by a dead chip: bounded-backoff retry under
+/// [`RecoveryPolicy::Recover`], client-timeout resubmission through the
+/// normal (sheddable) stream under [`RecoveryPolicy::Resubmit`], shed once
+/// the retry budget is exhausted. `crash` is when the work was lost, `now`
+/// when the frontend found out.
+#[allow(clippy::too_many_arguments)]
+fn recover_lost(
+    f: &mut FaultRt,
+    control: &mut ControlStats,
+    done: &mut usize,
+    stream: &mut VecDeque<Request>,
+    freq: f64,
+    inc: Incomplete,
+    crash: Cycle,
+    now: Cycle,
+) {
+    let id = inc.req.id;
+    let attempt = f.retries.get(&id).copied().unwrap_or(0) + 1;
+    if attempt > f.schedule.max_retries {
+        control.shed_requests += 1;
+        control.shed_by_class[inc.req.priority.index()] += 1;
+        f.stats.recovery_shed += 1;
+        *done += 1;
+        return;
+    }
+    f.retries.insert(id, attempt);
+    if let Some(&orig) = f.orig_arrival.get(&id) {
+        f.rebase.push((id, orig));
+    }
+    match f.schedule.recovery {
+        RecoveryPolicy::Recover => {
+            let backoff = f.schedule.retry_backoff_s * (1u64 << (attempt - 1).min(30)) as f64;
+            let at = now + secs_to_cycles(backoff, freq).max(1);
+            f.push(
+                at,
+                Ctrl::Retry {
+                    req: inc.req,
+                    attempt,
+                    crash,
+                    generated: inc.generated,
+                },
+            );
+        }
+        RecoveryPolicy::Resubmit { client_timeout_s } => {
+            // The frontend does nothing; the client notices via timeout
+            // and resubmits, paying the full timeout before the request
+            // even re-enters admission (and it can be shed there).
+            let mut req = inc.req;
+            req.arrival_s = (cycles_to_secs(crash, freq) + client_timeout_s)
+                .max(cycles_to_secs(now, freq));
+            let at = stream
+                .iter()
+                .position(|r| r.arrival_s > req.arrival_s)
+                .unwrap_or(stream.len());
+            stream.insert(at, req);
+            f.stats.retries += 1;
+        }
+    }
 }
 
 /// Simulate a synthetic workload on the cluster.
@@ -451,6 +818,18 @@ pub fn simulate_cluster_mixed(
     }
     let mut icn = Interconnect::new(cfg.interconnect, n, freq);
     let mut router = cfg.router.build(cfg.migrate_load_gap);
+    if let Some(s) = &cfg.faults {
+        anyhow::ensure!(
+            s.events.iter().all(|e| e.chip < n),
+            "fault schedule targets a chip >= {n}"
+        );
+    }
+    // Fault-plane runtime (`None` keeps every downstream branch on its
+    // bit-identical fault-free path).
+    let mut fault: Option<FaultRt> = cfg
+        .faults
+        .as_ref()
+        .map(|s| FaultRt::new(s.clone(), n, freq));
 
     let total = reqs.len();
     let mut stream: VecDeque<Request> = reqs.into();
@@ -473,10 +852,13 @@ pub fn simulate_cluster_mixed(
             guard < 64_000_000,
             "cluster livelock: {done}/{total} requests done"
         );
-        // Three event sources: the arrival stream, in-flight migrations,
-        // and the chips themselves. Process the earliest; ties prefer
-        // admissions (arrival, then transit) so routing always sees every
-        // request released up to the chips' next actionable cycle.
+        // Four event sources: the arrival stream, in-flight migrations,
+        // the fault control plane, and the chips themselves. Process the
+        // earliest; ties prefer admissions (arrival, then transit, then
+        // control) so routing always sees every request released up to the
+        // chips' next actionable cycle. Without faults the control source
+        // is permanently idle and the ordering is bit-identical to the
+        // three-source driver.
         let arr_t = stream
             .front()
             .map(|r| secs_to_cycles(r.arrival_s, freq))
@@ -488,18 +870,27 @@ pub fn simulate_cluster_mixed(
             .map(|(k, t)| (k, t.landing));
         let tra_t = tra.map(|(_, c)| c).unwrap_or(Cycle::MAX);
         let act = (0..n)
+            .filter(|&i| fault.as_ref().map_or(true, |f| f.health[i].up()))
             .filter_map(|i| scheds[i].next_action(&chips[i]).map(|t| (t, i)))
             .min();
         let act_t = act.map(|(t, _)| t).unwrap_or(Cycle::MAX);
+        let ctrl_t = fault.as_ref().map_or(Cycle::MAX, |f| f.next_cycle());
         anyhow::ensure!(
-            arr_t != Cycle::MAX || tra_t != Cycle::MAX || act_t != Cycle::MAX,
+            arr_t != Cycle::MAX
+                || tra_t != Cycle::MAX
+                || act_t != Cycle::MAX
+                || ctrl_t != Cycle::MAX,
             "cluster deadlock: {done}/{total} requests done, nothing actionable"
         );
 
-        if arr_t <= tra_t && arr_t <= act_t {
+        if arr_t <= tra_t && arr_t <= ctrl_t && arr_t <= act_t {
             // Release one arrival and route it on current chip state.
             let req = stream.pop_front().expect("arr_t finite");
             let now = secs_to_cycles(req.arrival_s, freq);
+            if let Some(f) = fault.as_mut() {
+                // First-seen arrival, for honest post-recovery TTFT.
+                f.orig_arrival.entry(req.id).or_insert(now);
+            }
             // In-flight migrations count toward their destination's load,
             // so a transfer window cannot look like an idle chip (which
             // would flood it with duplicate migrations).
@@ -507,60 +898,102 @@ pub fn simulate_cluster_mixed(
             for t in &transit {
                 transit_load[t.dst] += 1;
             }
-            // SLO-aware admission control: when every chip is saturated
-            // for this arrival's class — its queue depth (including KV in
-            // transit toward it) exceeds the class cap, or the chip
-            // reports hard backpressure — the frontend sheds or defers
-            // instead of queueing behind work the SLO cannot survive.
-            // Low tolerates `queue_cap`, Normal twice that, High is never
-            // shed; `ShedPolicy::None` skips the check entirely.
-            if cfg.shed != ShedPolicy::None && req.priority != Priority::High {
-                let cap = match req.priority {
-                    Priority::Low => cfg.queue_cap,
-                    _ => cfg.queue_cap.saturating_mul(2),
-                };
-                let overloaded = (0..n).all(|i| {
-                    scheds[i].pending_work() + transit_load[i] >= cap
-                        || scheds[i].backpressure() >= 0.999
-                });
-                if overloaded {
-                    let retries = deferred.get(&req.id).copied().unwrap_or(0);
-                    if cfg.shed == ShedPolicy::Defer && retries < MAX_DEFERRALS {
-                        // Re-time the arrival past the chips' next action
-                        // and slot it back into the (sorted) stream.
-                        deferred.insert(req.id, retries + 1);
-                        control.deferrals += 1;
+            // Chips the frontend believes are alive: all of them without
+            // faults, and until the heartbeat discovers a crash even the
+            // dead one (that blind window is part of the fault model).
+            let avail: Vec<usize> = match fault.as_ref() {
+                Some(f) => (0..n).filter(|&i| f.health[i].believed_up()).collect(),
+                None => (0..n).collect(),
+            };
+            if avail.is_empty() {
+                // Whole-cluster outage: hold the arrival for the next
+                // restart, or shed it when nothing will ever come back.
+                let f = fault.as_mut().expect("outage implies faults");
+                match f.restart_pending() {
+                    Some(rc) => {
                         let mut req = req;
-                        req.arrival_s = (cycles_to_secs(act_t.min(tra_t), freq)
-                            .max(req.arrival_s))
-                            + DEFER_BACKOFF_S;
-                        let at = stream
+                        let at = secs_to_cycles(req.arrival_s, freq).max(rc) + 1;
+                        req.arrival_s = cycles_to_secs(at, freq);
+                        let pos = stream
                             .iter()
                             .position(|r| r.arrival_s > req.arrival_s)
                             .unwrap_or(stream.len());
-                        stream.insert(at, req);
-                    } else {
+                        stream.insert(pos, req);
+                    }
+                    None => {
                         control.shed_requests += 1;
                         control.shed_by_class[req.priority.index()] += 1;
                         done += 1;
                     }
+                }
+                continue;
+            }
+            // SLO-aware admission control: when the saturation test for
+            // this arrival's class fails — queue depth (including KV in
+            // transit toward the chip) exceeds the class cap, or the chip
+            // reports hard backpressure — the frontend sheds or defers
+            // instead of queueing behind work the SLO cannot survive.
+            // Low tolerates `queue_cap`, Normal twice that, High is never
+            // shed; `ShedPolicy::None` skips the check entirely. The
+            // global scope demands every chip be saturated (down chips
+            // count as saturated); the per-chip scope routes first and
+            // tests only the routed target below.
+            let shed_active = cfg.shed != ShedPolicy::None && req.priority != Priority::High;
+            let cap = match req.priority {
+                Priority::Low => cfg.queue_cap,
+                _ => cfg.queue_cap.saturating_mul(2),
+            };
+            if shed_active && cfg.shed_scope == ShedScope::Global {
+                let overloaded = (0..n).all(|i| {
+                    let dead = fault
+                        .as_ref()
+                        .map_or(false, |f| !f.health[i].believed_up());
+                    dead || scheds[i].pending_work() + transit_load[i] >= cap
+                        || scheds[i].backpressure() >= 0.999
+                });
+                if overloaded {
+                    let base = defer_backoff(&scheds, &avail);
+                    reject_arrival(
+                        req,
+                        cfg.shed,
+                        base,
+                        act_t.min(tra_t),
+                        freq,
+                        &mut stream,
+                        &mut deferred,
+                        &mut control,
+                        &mut done,
+                    );
                     continue;
                 }
             }
             let keys = req.block_keys(KV_BLOCK_TOKENS);
             let limit = (req.input_len as u64).saturating_sub(1);
             let probe = router.wants_prefix() && !keys.is_empty();
-            let views: Vec<ChipView> = scheds
+            let views: Vec<ChipView> = avail
                 .iter()
-                .enumerate()
-                .map(|(i, s)| {
-                    let hit = if probe {
+                .map(|&i| {
+                    let s = &scheds[i];
+                    // A dead-but-undiscovered chip cannot stream KV out,
+                    // so it never advertises a prefix match (no migration
+                    // sources among the dead).
+                    let alive = fault.as_ref().map_or(true, |f| f.health[i].up());
+                    let hit = if probe && alive {
                         s.probe_prefix_tiered(&keys, limit, now)
                     } else {
                         TierMatch::default()
                     };
+                    let mut pending = s.pending_work() + transit_load[i];
+                    if let Some(f) = fault.as_ref() {
+                        // Degraded chips advertise proportionally more
+                        // load, so routers steer around them (identity at
+                        // full capacity).
+                        pending = ((pending as u64).saturating_mul(1000)
+                            / f.health[i].capacity_milli())
+                            as usize;
+                    }
                     ChipView {
-                        pending_work: s.pending_work() + transit_load[i],
+                        pending_work: pending,
                         kv_occupancy_milli: (s.kv_utilization() * 1000.0).round() as u64,
                         prefix_match: hit.total(),
                         prefix_sram: hit.sram_tokens,
@@ -568,9 +1001,35 @@ pub fn simulate_cluster_mixed(
                 })
                 .collect();
             let d = router.route(&req, &views);
-            anyhow::ensure!(d.chip < n, "router returned chip {} of {n}", d.chip);
+            anyhow::ensure!(
+                d.chip < avail.len(),
+                "router returned chip {} of {}",
+                d.chip,
+                avail.len()
+            );
+            let target = avail[d.chip];
+            if shed_active && cfg.shed_scope == ShedScope::PerChip {
+                let saturated = views[d.chip].pending_work >= cap
+                    || scheds[target].backpressure() >= 0.999;
+                if saturated {
+                    let base = defer_backoff(&scheds, &avail);
+                    reject_arrival(
+                        req,
+                        cfg.shed,
+                        base,
+                        act_t.min(tra_t),
+                        freq,
+                        &mut stream,
+                        &mut deferred,
+                        &mut control,
+                        &mut done,
+                    );
+                    continue;
+                }
+            }
             match d.migrate_from {
-                Some(src) if src != d.chip && views[src].prefix_match > 0 => {
+                Some(src_v) if avail[src_v] != target && views[src_v].prefix_match > 0 => {
+                    let src = avail[src_v];
                     // A migration of this prefix may already be in flight
                     // (co-arriving turns of one conversation while the
                     // holder stays overloaded): piggyback on it instead of
@@ -588,11 +1047,11 @@ pub fn simulate_cluster_mixed(
                             // fabric; the request (and its seeded blocks)
                             // reach the target chip when the last byte
                             // lands.
-                            let matched = views[src].prefix_match;
+                            let matched = views[src_v].prefix_match;
                             let bytes = matched * model.kv_bytes_per_token();
-                            let landing = icn.transfer(src, d.chip, bytes, now);
+                            let landing = icn.transfer(src, target, bytes, now);
                             migrations += 1;
-                            (d.chip, landing, keys_prefix(&keys, matched))
+                            (target, landing, keys_prefix(&keys, matched))
                         }
                     };
                     // Admission is deferred to the landing instant so the
@@ -611,20 +1070,226 @@ pub fn simulate_cluster_mixed(
                     });
                 }
                 _ => {
-                    routed[d.chip] += 1;
-                    scheds[d.chip].enqueue(&mut chips[d.chip], req);
+                    routed[target] += 1;
+                    scheds[target].enqueue(&mut chips[target], req);
                 }
             }
-        } else if tra_t <= act_t {
+        } else if tra_t <= ctrl_t && tra_t <= act_t {
             // A migrated prefix landed: seed the target chip's cache and
             // release the request there. Readiness is derived from the
             // request's (seconds-rounded) arrival so the float round-trip
             // can never land the admission one cycle before the seed.
             let (k, _) = tra.expect("tra_t finite");
             let t = transit.swap_remove(k);
-            let ready = secs_to_cycles(t.req.arrival_s, freq).min(t.landing);
-            scheds[t.dst].import_prefix(&t.keys, ready);
-            scheds[t.dst].enqueue(&mut chips[t.dst], t.req);
+            let dead = fault.as_ref().map_or(false, |f| !f.health[t.dst].up());
+            if dead {
+                // The destination died while the KV was in flight: the
+                // transfer is lost with it, and the request enters the
+                // recovery path with zero progress.
+                let f = fault.as_mut().expect("dead chip implies faults");
+                recover_lost(
+                    f,
+                    &mut control,
+                    &mut done,
+                    &mut stream,
+                    freq,
+                    Incomplete {
+                        req: t.req,
+                        prefilled: 0,
+                        generated: 0,
+                    },
+                    t.landing,
+                    t.landing,
+                );
+            } else {
+                let ready = secs_to_cycles(t.req.arrival_s, freq).min(t.landing);
+                scheds[t.dst].import_prefix(&t.keys, ready);
+                scheds[t.dst].enqueue(&mut chips[t.dst], t.req);
+            }
+        } else if ctrl_t <= act_t {
+            // Fault control plane: injections, heartbeat detections,
+            // restarts, degradation expiries, and recovery retries.
+            let (now, ev) = fault
+                .as_mut()
+                .expect("ctrl_t finite")
+                .pop_next()
+                .expect("ctrl_t finite");
+            let f = fault.as_mut().expect("ctrl_t finite");
+            match ev {
+                Ctrl::Inject(idx) => {
+                    let ev = f.schedule.events[idx];
+                    let chip = ev.chip;
+                    match ev.kind {
+                        FaultKind::ChipCrash { restart_after_s } => {
+                            if f.health[chip].up() {
+                                f.health[chip].down_since = Some(now);
+                                f.health[chip].detected = false;
+                                f.stats.crashes += 1;
+                                // Detection at the next heartbeat tick
+                                // strictly after the crash.
+                                let hb = secs_to_cycles(f.schedule.heartbeat_s, freq).max(1);
+                                f.push((now / hb + 1) * hb, Ctrl::Detect { chip, crash: now });
+                                if let Some(rs) = restart_after_s {
+                                    let at = now + secs_to_cycles(rs, freq).max(1);
+                                    f.push(at, Ctrl::Restart { chip });
+                                }
+                            }
+                        }
+                        FaultKind::LinkDegrade { factor, duration_s } => {
+                            f.health[chip].link_factor = factor;
+                            icn.set_degrade(chip, factor);
+                            f.stats.degradations += 1;
+                            let at = now + secs_to_cycles(duration_s, freq).max(1);
+                            f.push(at, Ctrl::Expire { chip, hbm: false });
+                        }
+                        FaultKind::HbmThrottle { factor, duration_s } => {
+                            f.health[chip].hbm_factor = factor;
+                            if f.health[chip].up() {
+                                chips[chip].set_hbm_throttle(factor);
+                            }
+                            f.stats.degradations += 1;
+                            let at = now + secs_to_cycles(duration_s, freq).max(1);
+                            f.push(at, Ctrl::Expire { chip, hbm: true });
+                        }
+                    }
+                }
+                Ctrl::Detect { chip, crash } => {
+                    // Heartbeat probe: drain and recover the stranded work
+                    // (skip when a pre-heartbeat restart already did).
+                    if f.health[chip].down_since.is_some() && !f.health[chip].detected {
+                        f.health[chip].detected = true;
+                        f.stats.detect_cycles += now.saturating_sub(crash);
+                        for inc in scheds[chip].drain_incomplete() {
+                            recover_lost(
+                                f,
+                                &mut control,
+                                &mut done,
+                                &mut stream,
+                                freq,
+                                inc,
+                                crash,
+                                now,
+                            );
+                        }
+                    }
+                }
+                Ctrl::Restart { chip } => {
+                    if let Some(crash) = f.health[chip].down_since {
+                        if !f.health[chip].detected {
+                            // Restart outran the heartbeat: the stranded
+                            // work is still discovered only now.
+                            f.health[chip].detected = true;
+                            f.stats.detect_cycles += now.saturating_sub(crash);
+                            for inc in scheds[chip].drain_incomplete() {
+                                recover_lost(
+                                    f,
+                                    &mut control,
+                                    &mut done,
+                                    &mut stream,
+                                    freq,
+                                    inc,
+                                    crash,
+                                    now,
+                                );
+                            }
+                        }
+                        // Cold restart: fresh chip, fresh scheduler, empty
+                        // caches. Mixed-scheduler clusters restart onto
+                        // the uniform `cfg.sched` template.
+                        chips[chip] = ChipSim::new(cfg.chip.clone());
+                        scheds[chip] = cfg.sched.build();
+                        scheds[chip].prepare(&mut chips[chip], model, max_tokens)?;
+                        if f.health[chip].hbm_factor < 1.0 {
+                            // An unexpired HBM throttle survives a reboot.
+                            chips[chip].set_hbm_throttle(f.health[chip].hbm_factor);
+                        }
+                        f.health[chip].down_since = None;
+                        f.health[chip].detected = false;
+                        f.stats.restarts += 1;
+                    }
+                }
+                Ctrl::Expire { chip, hbm } => {
+                    // Overlapping windows on one chip: last writer set the
+                    // factor, earliest expiry restores it.
+                    if hbm {
+                        f.health[chip].hbm_factor = 1.0;
+                        if f.health[chip].up() {
+                            chips[chip].set_hbm_throttle(1.0);
+                        }
+                    } else {
+                        f.health[chip].link_factor = 1.0;
+                        icn.set_degrade(chip, 1.0);
+                    }
+                }
+                Ctrl::Retry {
+                    req,
+                    attempt,
+                    crash,
+                    generated,
+                } => {
+                    let up: Vec<usize> = (0..n).filter(|&i| f.health[i].up()).collect();
+                    if up.is_empty() {
+                        match f.restart_pending() {
+                            // Hold the retry (same attempt) for the next
+                            // restart; the schedule is finite, so this
+                            // terminates.
+                            Some(rc) => f.push(
+                                rc.max(now) + 1,
+                                Ctrl::Retry {
+                                    req,
+                                    attempt,
+                                    crash,
+                                    generated,
+                                },
+                            ),
+                            None => {
+                                control.shed_requests += 1;
+                                control.shed_by_class[req.priority.index()] += 1;
+                                f.stats.recovery_shed += 1;
+                                done += 1;
+                            }
+                        }
+                    } else {
+                        // KV-aware placement: prefer the chip holding the
+                        // longest surviving cached prefix of this prompt;
+                        // ties and misses go least-loaded, then lowest
+                        // index.
+                        let keys = req.block_keys(KV_BLOCK_TOKENS);
+                        let limit = (req.input_len as u64).saturating_sub(1);
+                        let (std::cmp::Reverse(restored), _, c) = up
+                            .iter()
+                            .map(|&i| {
+                                let hit = if keys.is_empty() {
+                                    0
+                                } else {
+                                    scheds[i].probe_prefix_tiered(&keys, limit, now).total()
+                                };
+                                (std::cmp::Reverse(hit), scheds[i].pending_work(), i)
+                            })
+                            .min()
+                            .expect("up is non-empty");
+                        let restored = restored.min(limit);
+                        let recomputed = (req.input_len as u64 - restored) + generated;
+                        let mut req = req;
+                        req.arrival_s = cycles_to_secs(now, freq);
+                        if attempt == 1 {
+                            f.stats.recovered += 1;
+                        }
+                        f.stats.retries += 1;
+                        f.stats.tokens_restored += restored;
+                        f.stats.tokens_recomputed += recomputed;
+                        f.recovery.push(RecoveryRecord {
+                            id: req.id,
+                            retries: attempt,
+                            recovery_cycles: now.saturating_sub(crash),
+                            tokens_recomputed: recomputed,
+                            tokens_restored: restored,
+                        });
+                        routed[c] += 1;
+                        scheds[c].enqueue(&mut chips[c], req);
+                    }
+                }
+            }
         } else {
             let (_, i) = act.expect("act_t finite");
             done += scheds[i].step(&mut chips[i], model, &mut per_chip[i])?;
@@ -637,17 +1302,36 @@ pub fn simulate_cluster_mixed(
     for &(id, arrival, dst) in &migrated_log {
         per_chip[dst].rebase_arrival(id, arrival);
     }
+    // Recovered (and resubmitted) requests were re-admitted long after
+    // their true arrivals; rebase so TTFT honestly charges the downtime,
+    // the detection lag, and the redone work.
+    if let Some(f) = &fault {
+        for &(id, arrival) in &f.rebase {
+            for m in per_chip.iter_mut() {
+                if m.rebase_arrival(id, arrival) {
+                    break;
+                }
+            }
+        }
+    }
     for (i, s) in scheds.iter().enumerate() {
         let mut hw = CacheStats::default();
         s.collect_cache_stats(&mut hw);
         per_chip[i].cache.merge(&hw);
     }
+    let (fault_stats, mut recovery) = match fault {
+        Some(f) => (f.stats, f.recovery),
+        None => (FaultStats::default(), Vec::new()),
+    };
+    recovery.sort_by_key(|r| (r.id, r.retries));
     Ok(ClusterMetrics {
         per_chip,
         routed,
         migrations,
         control,
         interconnect: icn.stats(),
+        faults: fault_stats,
+        recovery,
         freq_mhz: freq,
     })
 }
@@ -938,5 +1622,175 @@ mod tests {
         );
         let err = simulate_cluster_mixed(&cfg, &model, Vec::new(), Vec::new());
         assert!(err.is_err());
+    }
+
+    #[test]
+    fn shed_scope_parses_and_names() {
+        assert_eq!(ShedScope::parse("global").unwrap(), ShedScope::Global);
+        assert_eq!(ShedScope::parse("per-chip").unwrap(), ShedScope::PerChip);
+        assert!(ShedScope::parse("everywhere").is_err());
+        for s in [ShedScope::Global, ShedScope::PerChip] {
+            assert_eq!(ShedScope::parse(s.name()).unwrap(), s);
+        }
+        assert_eq!(ShedScope::default(), ShedScope::Global);
+    }
+
+    fn fault_reqs(n: u64, input_len: usize, output_len: usize) -> Vec<Request> {
+        (0..n)
+            .map(|i| Request {
+                id: i,
+                arrival_s: 0.0001 * i as f64,
+                input_len,
+                output_len,
+                prefix: crate::serving::request::Prefix::default(),
+                priority: Priority::Normal,
+            })
+            .collect()
+    }
+
+    /// An empty fault schedule must leave the run bit-identical to the
+    /// fault-free driver: the control event source stays permanently idle.
+    #[test]
+    fn empty_fault_schedule_is_bit_identical() {
+        let model = ModelConfig::qwen3_4b();
+        let w = WorkloadConfig::sharegpt_like(6).with_seed(11);
+        let reqs = request::generate(&w);
+        let base = ClusterConfig::new(
+            ChipConfig::large_core(),
+            2,
+            SchedulerConfig::Fusion(FusionConfig::default()),
+            RouterPolicy::LeastLoaded,
+        );
+        let a = simulate_cluster_requests(&base, &model, reqs.clone()).unwrap();
+        let faulty = base.clone().with_faults(FaultSchedule::new(Vec::new()));
+        let b = simulate_cluster_requests(&faulty, &model, reqs).unwrap();
+        assert_eq!(a.aggregate().records(), b.aggregate().records());
+        assert_eq!(a.control, b.control);
+        assert_eq!(b.faults, FaultStats::default());
+        assert!(b.recovery.is_empty());
+    }
+
+    /// A mid-run crash with no restart: the stranded requests recover onto
+    /// the surviving chip, every request still completes exactly once with
+    /// its original token counts, and TTFT charges the downtime.
+    #[test]
+    fn crash_recovers_stranded_requests_on_the_surviving_chip() {
+        let model = ModelConfig::qwen3_4b();
+        let reqs = fault_reqs(8, 2048, 16);
+        let cfg = ClusterConfig::new(
+            ChipConfig::large_core(),
+            2,
+            SchedulerConfig::Fusion(FusionConfig::default()),
+            RouterPolicy::RoundRobin,
+        )
+        .with_faults(
+            FaultSchedule::parse("crash:0@0.005")
+                .unwrap()
+                .with_retries(8, 0.002),
+        );
+        let cm = simulate_cluster_requests(&cfg, &model, reqs).unwrap();
+        assert_eq!(cm.faults.crashes, 1);
+        assert_eq!(cm.faults.restarts, 0);
+        assert!(cm.conserves(8), "completed {} shed {}", cm.n_requests(), cm.shed_requests());
+        assert!(cm.faults.recovered > 0, "a 5ms crash must strand work: {:?}", cm.faults);
+        assert!(!cm.recovery.is_empty());
+        let agg = cm.aggregate();
+        for r in agg.records() {
+            assert_eq!(r.input_tokens, 2048, "{r:?}");
+            assert_eq!(r.output_tokens, 16, "{r:?}");
+            assert!(r.first_token >= r.arrival, "{r:?}");
+        }
+        for rec in &cm.recovery {
+            assert!(rec.retries >= 1 && rec.recovery_cycles > 0, "{rec:?}");
+            assert!(rec.tokens_recomputed + rec.tokens_restored >= 2048, "{rec:?}");
+        }
+        // Detection is heartbeat-bounded.
+        assert!(cm.faults.mean_detect_s(500.0) <= crate::serving::faults::DEFAULT_HEARTBEAT_S + 1e-9);
+    }
+
+    /// A crash with a restart window brings the chip back cold; later
+    /// arrivals use it again and everything conserves.
+    #[test]
+    fn crashed_chip_restarts_and_serves_again() {
+        let model = ModelConfig::qwen3_4b();
+        let mut reqs = fault_reqs(8, 1024, 8);
+        // A late tail after the restart point.
+        for (k, r) in reqs.iter_mut().enumerate().skip(6) {
+            r.arrival_s = 0.2 + 0.01 * (k - 6) as f64;
+        }
+        let cfg = ClusterConfig::new(
+            ChipConfig::large_core(),
+            2,
+            SchedulerConfig::Fusion(FusionConfig::default()),
+            RouterPolicy::RoundRobin,
+        )
+        .with_faults(FaultSchedule::parse("crash:0@0.004:0.05").unwrap().with_retries(8, 0.002));
+        let cm = simulate_cluster_requests(&cfg, &model, reqs).unwrap();
+        assert_eq!(cm.faults.crashes, 1);
+        assert_eq!(cm.faults.restarts, 1);
+        assert!(cm.conserves(8), "completed {} shed {}", cm.n_requests(), cm.shed_requests());
+    }
+
+    /// Link and HBM degradation windows slow chips down without losing
+    /// work: no retries, no sheds, full completion, and the windows are
+    /// restored on expiry (stats count both injections).
+    #[test]
+    fn degradation_windows_conserve_all_requests() {
+        let model = ModelConfig::qwen3_4b();
+        let reqs = fault_reqs(6, 512, 8);
+        let cfg = ClusterConfig::new(
+            ChipConfig::large_core(),
+            2,
+            SchedulerConfig::Fusion(FusionConfig::default()),
+            RouterPolicy::LeastLoaded,
+        )
+        .with_faults(FaultSchedule::parse("link:0@0.001:0.25:0.1;hbm:1@0.002:0.5:0.1").unwrap());
+        let cm = simulate_cluster_requests(&cfg, &model, reqs).unwrap();
+        assert_eq!(cm.faults.degradations, 2);
+        assert_eq!(cm.faults.crashes, 0);
+        assert_eq!(cm.shed_requests(), 0);
+        assert_eq!(cm.n_requests(), 6);
+        assert!(cm.recovery.is_empty());
+    }
+
+    /// Per-chip shed scope keeps admitting onto lightly loaded chips while
+    /// one chip is saturated; work is conserved either way.
+    #[test]
+    fn per_chip_scope_conserves_and_sheds_no_more_than_global() {
+        let model = ModelConfig::qwen3_4b();
+        let reqs: Vec<Request> = (0..12)
+            .map(|i| Request {
+                id: i,
+                arrival_s: 0.0001 * i as f64,
+                input_len: 2048,
+                output_len: 8,
+                prefix: crate::serving::request::Prefix::default(),
+                priority: if i % 2 == 0 { Priority::Normal } else { Priority::Low },
+            })
+            .collect();
+        let base = ClusterConfig::new(
+            ChipConfig::large_core(),
+            2,
+            SchedulerConfig::Fusion(FusionConfig::default()),
+            RouterPolicy::LeastLoaded,
+        )
+        .with_shed(ShedPolicy::Drop, 2);
+        let global = simulate_cluster_requests(&base, &model, reqs.clone()).unwrap();
+        let per_chip = simulate_cluster_requests(
+            &base.clone().with_shed_scope(ShedScope::PerChip),
+            &model,
+            reqs,
+        )
+        .unwrap();
+        assert!(global.conserves(12));
+        assert!(per_chip.conserves(12));
+        // Least-loaded routing targets the lightest chip, so the per-chip
+        // test is at least as permissive as demanding every chip be full.
+        assert!(
+            per_chip.shed_requests() <= global.shed_requests(),
+            "per-chip shed {} vs global {}",
+            per_chip.shed_requests(),
+            global.shed_requests()
+        );
     }
 }

@@ -1,0 +1,315 @@
+//! Deterministic fault injection for the multi-chip cluster.
+//!
+//! A [`FaultSchedule`] is a plain, sorted list of timed [`FaultEvent`]s —
+//! chip crashes (with optional restart), interconnect link degradation,
+//! and HBM throttling — consumed by the cluster driver
+//! ([`crate::serving::cluster`]). Schedules are built three ways:
+//! explicitly ([`FaultSchedule::new`]), from a compact CLI spec string
+//! ([`FaultSchedule::parse`]), or drawn from a seeded RNG
+//! ([`FaultSchedule::seeded`]) so chaos runs replay bit-for-bit and golden
+//! tests can pin them.
+//!
+//! The schedule also carries the *recovery* knobs the frontend uses when a
+//! crash strands in-flight requests: the heartbeat probe interval bounding
+//! detection latency, the bounded retry budget with exponential backoff,
+//! and the [`RecoveryPolicy`] (frontend-driven recovery vs the naive
+//! client-timeout resubmit baseline the bench gates against).
+
+use crate::util::rng::Rng;
+
+/// What a [`FaultEvent`] does to its target chip.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// The chip dies: its clock stops, queued and in-flight requests are
+    /// lost (KV included), and routers must steer around it. With
+    /// `restart_after_s` the chip comes back cold (fresh scheduler, empty
+    /// caches) after that downtime.
+    ChipCrash { restart_after_s: Option<f64> },
+    /// The chip's interconnect egress runs at `factor` × nominal bandwidth
+    /// for `duration_s` (e.g. `0.25` = quarter speed). `factor` ∈ (0, 1].
+    LinkDegrade { factor: f64, duration_s: f64 },
+    /// The chip's HBM channels run at `factor` × nominal bandwidth for
+    /// `duration_s`. `factor` ∈ (0, 1].
+    HbmThrottle { factor: f64, duration_s: f64 },
+}
+
+/// One timed fault against one chip.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    /// Injection time, in trace seconds.
+    pub at_s: f64,
+    /// Target chip index in the cluster.
+    pub chip: usize,
+    pub kind: FaultKind,
+}
+
+/// How the frontend handles requests stranded by a crash.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RecoveryPolicy {
+    /// Heartbeat-driven recovery: on detection the dead chip's in-flight
+    /// requests re-enter at the frontend as retries (bounded, backed off),
+    /// re-prefilling on a surviving chip and reusing any cross-chip prefix
+    /// copy that outlived the crash.
+    Recover,
+    /// The naive baseline: the frontend does nothing; each stranded
+    /// request is resubmitted by its client after `client_timeout_s` and
+    /// re-enters the normal (sheddable) admission path.
+    Resubmit { client_timeout_s: f64 },
+}
+
+/// Default heartbeat probe interval (seconds): detection latency is at
+/// most one interval after the crash.
+pub const DEFAULT_HEARTBEAT_S: f64 = 0.01;
+/// Default bounded retry budget per stranded request.
+pub const DEFAULT_MAX_RETRIES: u32 = 3;
+/// Default base of the retry backoff (seconds, doubled per attempt).
+pub const DEFAULT_RETRY_BACKOFF_S: f64 = 0.002;
+
+/// A deterministic, replayable fault schedule plus the recovery knobs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSchedule {
+    /// Events sorted by `(at_s, chip)`; ties keep insertion order.
+    pub events: Vec<FaultEvent>,
+    /// Heartbeat probe interval in seconds; a crash at `t` is detected at
+    /// the next probe tick strictly after `t`.
+    pub heartbeat_s: f64,
+    /// Retry budget per stranded request before it is shed.
+    pub max_retries: u32,
+    /// Base retry backoff in seconds (attempt `k` waits `base · 2^(k-1)`).
+    pub retry_backoff_s: f64,
+    pub recovery: RecoveryPolicy,
+}
+
+impl FaultSchedule {
+    /// Build a schedule from explicit events (stably sorted by time, then
+    /// chip, so injection order is deterministic regardless of input
+    /// order).
+    pub fn new(mut events: Vec<FaultEvent>) -> Self {
+        events.sort_by(|a, b| {
+            a.at_s
+                .partial_cmp(&b.at_s)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.chip.cmp(&b.chip))
+        });
+        FaultSchedule {
+            events,
+            heartbeat_s: DEFAULT_HEARTBEAT_S,
+            max_retries: DEFAULT_MAX_RETRIES,
+            retry_backoff_s: DEFAULT_RETRY_BACKOFF_S,
+            recovery: RecoveryPolicy::Recover,
+        }
+    }
+
+    /// Draw a schedule from a seeded RNG: exponential inter-fault gaps at
+    /// fleet rate `n_chips / mttf_s` over `[0, horizon_s)`, uniform target
+    /// chip, and a deterministic mix of crash / link / HBM faults. Same
+    /// seed → byte-identical schedule.
+    pub fn seeded(seed: u64, n_chips: usize, horizon_s: f64, mttf_s: f64) -> Self {
+        let mut rng = Rng::new(seed ^ 0xFA_17_5C_0E_D0_1E_55_AAu64);
+        let mut events = Vec::new();
+        let n = n_chips.max(1);
+        let rate = n as f64 / mttf_s.max(1e-9);
+        let mut t = 0.0f64;
+        loop {
+            t += rng.exponential(rate);
+            if t >= horizon_s {
+                break;
+            }
+            let chip = rng.range(0, n);
+            let kind = match rng.range(0, 3) {
+                0 => FaultKind::ChipCrash {
+                    restart_after_s: if rng.chance(0.5) {
+                        Some(mttf_s * (0.02 + 0.08 * rng.f64()))
+                    } else {
+                        None
+                    },
+                },
+                1 => FaultKind::LinkDegrade {
+                    factor: 0.2 + 0.6 * rng.f64(),
+                    duration_s: mttf_s * (0.01 + 0.04 * rng.f64()),
+                },
+                _ => FaultKind::HbmThrottle {
+                    factor: 0.3 + 0.5 * rng.f64(),
+                    duration_s: mttf_s * (0.01 + 0.04 * rng.f64()),
+                },
+            };
+            events.push(FaultEvent { at_s: t, chip, kind });
+        }
+        FaultSchedule::new(events)
+    }
+
+    /// Parse the compact `--faults` spec: semicolon-separated entries of
+    /// - `crash:CHIP@T` — chip `CHIP` dies at `T` seconds, no restart;
+    /// - `crash:CHIP@T:RESTART` — …and restarts after `RESTART` seconds;
+    /// - `link:CHIP@T:FACTOR:DURATION` — egress at `FACTOR`× bandwidth;
+    /// - `hbm:CHIP@T:FACTOR:DURATION` — HBM at `FACTOR`× bandwidth.
+    pub fn parse(spec: &str) -> anyhow::Result<Self> {
+        let mut events = Vec::new();
+        for entry in spec.split(';').filter(|e| !e.trim().is_empty()) {
+            let entry = entry.trim();
+            let (kind_s, rest) = entry
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("fault entry `{entry}`: expected KIND:CHIP@T..."))?;
+            let mut parts = rest.split(':');
+            let target = parts.next().unwrap_or("");
+            let (chip_s, t_s) = target
+                .split_once('@')
+                .ok_or_else(|| anyhow::anyhow!("fault entry `{entry}`: expected CHIP@T"))?;
+            let chip: usize = chip_s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("fault entry `{entry}`: bad chip `{chip_s}`"))?;
+            let at_s: f64 = t_s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("fault entry `{entry}`: bad time `{t_s}`"))?;
+            let mut num = |name: &str| -> anyhow::Result<f64> {
+                parts
+                    .next()
+                    .ok_or_else(|| anyhow::anyhow!("fault entry `{entry}`: missing {name}"))?
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("fault entry `{entry}`: bad {name}"))
+            };
+            let kind = match kind_s {
+                "crash" => FaultKind::ChipCrash {
+                    restart_after_s: match num("restart") {
+                        Ok(v) => Some(v),
+                        Err(_) => None,
+                    },
+                },
+                "link" => {
+                    let factor = num("factor")?;
+                    let duration_s = num("duration")?;
+                    FaultKind::LinkDegrade { factor, duration_s }
+                }
+                "hbm" => {
+                    let factor = num("factor")?;
+                    let duration_s = num("duration")?;
+                    FaultKind::HbmThrottle { factor, duration_s }
+                }
+                other => anyhow::bail!("unknown fault kind `{other}` (crash|link|hbm)"),
+            };
+            if let FaultKind::LinkDegrade { factor, .. } | FaultKind::HbmThrottle { factor, .. } =
+                kind
+            {
+                anyhow::ensure!(
+                    factor > 0.0 && factor <= 1.0,
+                    "fault entry `{entry}`: factor must be in (0, 1]"
+                );
+            }
+            anyhow::ensure!(at_s >= 0.0, "fault entry `{entry}`: time must be >= 0");
+            events.push(FaultEvent { at_s, chip, kind });
+        }
+        anyhow::ensure!(!events.is_empty(), "empty fault spec");
+        Ok(FaultSchedule::new(events))
+    }
+
+    /// Override the heartbeat probe interval.
+    pub fn with_heartbeat(mut self, heartbeat_s: f64) -> Self {
+        self.heartbeat_s = heartbeat_s.max(1e-6);
+        self
+    }
+
+    /// Override the retry budget.
+    pub fn with_retries(mut self, max_retries: u32, retry_backoff_s: f64) -> Self {
+        self.max_retries = max_retries;
+        self.retry_backoff_s = retry_backoff_s.max(0.0);
+        self
+    }
+
+    /// Override the recovery policy.
+    pub fn with_recovery(mut self, recovery: RecoveryPolicy) -> Self {
+        self.recovery = recovery;
+        self
+    }
+
+    /// True when the schedule contains at least one crash (used by reports
+    /// and sanity checks; degradation-only schedules never retry).
+    pub fn has_crash(&self) -> bool {
+        self.events
+            .iter()
+            .any(|e| matches!(e.kind, FaultKind::ChipCrash { .. }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn explicit_events_sort_by_time_then_chip() {
+        let s = FaultSchedule::new(vec![
+            FaultEvent {
+                at_s: 2.0,
+                chip: 1,
+                kind: FaultKind::ChipCrash { restart_after_s: None },
+            },
+            FaultEvent {
+                at_s: 1.0,
+                chip: 3,
+                kind: FaultKind::HbmThrottle { factor: 0.5, duration_s: 1.0 },
+            },
+            FaultEvent {
+                at_s: 1.0,
+                chip: 0,
+                kind: FaultKind::LinkDegrade { factor: 0.25, duration_s: 1.0 },
+            },
+        ]);
+        let order: Vec<(f64, usize)> = s.events.iter().map(|e| (e.at_s, e.chip)).collect();
+        assert_eq!(order, vec![(1.0, 0), (1.0, 3), (2.0, 1)]);
+    }
+
+    #[test]
+    fn seeded_schedules_replay_bit_for_bit() {
+        let a = FaultSchedule::seeded(42, 4, 10.0, 2.0);
+        let b = FaultSchedule::seeded(42, 4, 10.0, 2.0);
+        assert_eq!(a, b);
+        assert!(!a.events.is_empty(), "10s horizon at 2s MTTF must fault");
+        for e in &a.events {
+            assert!(e.at_s >= 0.0 && e.at_s < 10.0);
+            assert!(e.chip < 4);
+            if let FaultKind::LinkDegrade { factor, .. }
+            | FaultKind::HbmThrottle { factor, .. } = e.kind
+            {
+                assert!(factor > 0.0 && factor <= 1.0, "{e:?}");
+            }
+        }
+        let c = FaultSchedule::seeded(43, 4, 10.0, 2.0);
+        assert_ne!(a, c, "different seeds must differ");
+    }
+
+    #[test]
+    fn parse_round_trips_the_three_kinds() {
+        let s = FaultSchedule::parse("crash:1@0.5;crash:2@0.75:0.3;link:0@1.0:0.25:0.5;hbm:3@0.2:0.4:0.1")
+            .unwrap();
+        assert_eq!(s.events.len(), 4);
+        assert_eq!(
+            s.events[0],
+            FaultEvent {
+                at_s: 0.2,
+                chip: 3,
+                kind: FaultKind::HbmThrottle { factor: 0.4, duration_s: 0.1 },
+            }
+        );
+        assert_eq!(
+            s.events[1].kind,
+            FaultKind::ChipCrash { restart_after_s: None }
+        );
+        assert_eq!(
+            s.events[2].kind,
+            FaultKind::ChipCrash { restart_after_s: Some(0.3) }
+        );
+        assert_eq!(
+            s.events[3].kind,
+            FaultKind::LinkDegrade { factor: 0.25, duration_s: 0.5 }
+        );
+        assert!(s.has_crash());
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(FaultSchedule::parse("").is_err());
+        assert!(FaultSchedule::parse("crash:xx@1").is_err());
+        assert!(FaultSchedule::parse("melt:0@1").is_err());
+        assert!(FaultSchedule::parse("link:0@1.0:1.5:0.5").is_err(), "factor > 1");
+        assert!(FaultSchedule::parse("hbm:0@1.0:0.5").is_err(), "missing duration");
+    }
+}

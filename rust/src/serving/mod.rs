@@ -17,8 +17,12 @@
 //! - [`cluster`]: the multi-chip layer — N `ChipSim`s behind a streamed
 //!   admission frontend and a pluggable router (round-robin, least-loaded,
 //!   prefix-hit-aware with charged cross-chip KV migration).
+//! - [`faults`]: deterministic fault injection (chip crashes, link
+//!   degradation, HBM throttling) and the recovery-policy knobs the
+//!   cluster frontend replays them with.
 
 pub mod cluster;
+pub mod faults;
 pub mod layout;
 pub mod metrics;
 pub mod pd_disagg;
@@ -30,13 +34,14 @@ pub mod worker;
 
 pub use cluster::{
     simulate_cluster, simulate_cluster_mixed, simulate_cluster_requests, ClusterConfig,
-    ClusterMetrics, Router, RouterPolicy, ShedPolicy,
+    ClusterMetrics, FaultStats, RecoveryRecord, Router, RouterPolicy, ShedPolicy, ShedScope,
 };
+pub use faults::{FaultEvent, FaultKind, FaultSchedule, RecoveryPolicy};
 pub use layout::PipelineLayout;
 pub use metrics::{CacheStats, Metrics, RequestRecord};
 pub use pd_disagg::{simulate_disagg, DisaggConfig};
 pub use pd_fusion::{simulate_fusion, FusionConfig};
 pub use request::{Prefix, Priority, Request};
-pub use scheduler::{HybridConfig, HybridScheduler, Scheduler, SchedulerConfig};
+pub use scheduler::{HybridConfig, HybridScheduler, Incomplete, Scheduler, SchedulerConfig};
 pub use trace::{load_jsonl, parse_jsonl};
 pub use worker::StageWorker;

@@ -73,6 +73,13 @@ pub struct FusionConfig {
     /// Operator-latency memoization (approximate fast path, off by
     /// default — see [`crate::model::memo`]).
     pub memo: bool,
+    /// SLO-deadline-triggered preemption (CLI `--slo-preempt`): a queued
+    /// request that has burned more than half this TTFT budget (seconds)
+    /// waiting for capacity preempts as if one priority class higher, so a
+    /// projected TTFT breach can evict equal-class decodes — not only on
+    /// priority. `None` (the default) keeps the legacy priority-only
+    /// preemption bit-identical.
+    pub slo_preempt: Option<f64>,
 }
 
 impl FusionConfig {
@@ -98,6 +105,7 @@ impl FusionConfig {
             cross_pipe: plan.cross_pipe,
             affinity_gap: plan.affinity_gap,
             memo: plan.memo,
+            slo_preempt: None,
         }
     }
 }
@@ -161,6 +169,7 @@ mod tests {
         assert_eq!(f.kv_share, 0.6);
         assert_eq!(f.hbm_tier_frac, 0.125, "the former fixed 1/8 carve");
         assert_eq!(f.affinity_gap, 4);
+        assert!(f.slo_preempt.is_none(), "SLO preemption must default off");
     }
 
     #[test]

@@ -407,6 +407,32 @@ impl Scheduler for DisaggScheduler {
         }
     }
 
+    fn drain_incomplete(&mut self) -> Vec<super::Incomplete> {
+        // Prefill runs whole-prompt inside one step, so between steps a
+        // request is either queued (nothing computed) or in a decode
+        // group (fully prefilled, part-decoded).
+        let mut out: Vec<super::Incomplete> = self
+            .queue
+            .drain(..)
+            .map(|req| super::Incomplete {
+                req,
+                prefilled: 0,
+                generated: 0,
+            })
+            .collect();
+        for g in &mut self.groups {
+            for d in g.pending.drain(..).chain(g.active.drain(..)) {
+                out.push(super::Incomplete {
+                    req: d.req,
+                    prefilled: d.req.input_len as u64,
+                    generated: d.generated,
+                });
+            }
+        }
+        out.sort_by_key(|i| i.req.id);
+        out
+    }
+
     fn collect_cache_stats(&self, out: &mut crate::serving::metrics::CacheStats) {
         let workers = self
             .pipelines

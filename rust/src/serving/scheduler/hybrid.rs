@@ -415,6 +415,16 @@ impl Scheduler for HybridScheduler {
         pipe::seed_all(&mut self.pipes, keys, ready_at);
     }
 
+    fn drain_incomplete(&mut self) -> Vec<super::Incomplete> {
+        let mut out: Vec<super::Incomplete> = self
+            .pipes
+            .iter_mut()
+            .flat_map(|p| p.drain_incomplete())
+            .collect();
+        out.sort_by_key(|i| i.req.id);
+        out
+    }
+
     fn collect_cache_stats(&self, out: &mut crate::serving::metrics::CacheStats) {
         for p in &self.pipes {
             p.collect_cache_stats(out);

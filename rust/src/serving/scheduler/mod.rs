@@ -30,6 +30,19 @@ use crate::serving::request::{self, Request};
 use crate::sim::chip::ChipSim;
 use crate::util::units::Cycle;
 
+/// One request stranded inside a scheduler when its chip dies: the
+/// original request plus how far it had progressed (the progress is lost —
+/// its KV died with the chip — but recovery accounting reports it as
+/// tokens to recompute).
+#[derive(Debug, Clone)]
+pub struct Incomplete {
+    pub req: Request,
+    /// Prompt tokens already prefilled on the dead chip.
+    pub prefilled: u64,
+    /// Output tokens already generated on the dead chip.
+    pub generated: u64,
+}
+
 /// An iteration-level serving scheduler driving a [`ChipSim`].
 ///
 /// Two lifecycles share the same implementation:
@@ -148,6 +161,17 @@ pub trait Scheduler {
     /// ignore it.
     fn import_prefix(&mut self, keys: &[BlockKey], ready_at: Cycle) {
         let _ = (keys, ready_at);
+    }
+
+    /// Remove and return every request this scheduler still holds —
+    /// queued, mid-prefill, decoding, parked, or awaiting handoff — in
+    /// ascending request-id order. The cluster frontend calls this when
+    /// the chip is declared dead so the stranded requests can be recovered
+    /// on surviving chips; afterwards the scheduler holds no in-flight
+    /// work. The default (for policies without internal queues) reports
+    /// nothing.
+    fn drain_incomplete(&mut self) -> Vec<Incomplete> {
+        Vec::new()
     }
 
     /// Fold worker-level prefix-cache / memo counters (COW copies,

@@ -691,6 +691,46 @@ impl Pipe {
         true
     }
 
+    /// Remove and return every request this pipe still holds — queued,
+    /// in flight, transferred-but-unadmitted, or parked — for crash
+    /// recovery. Stage KV is *not* released: the chip is dead and the
+    /// pipe is discarded (or rebuilt cold on restart) by the caller.
+    pub(crate) fn drain_incomplete(&mut self) -> Vec<super::Incomplete> {
+        use super::Incomplete;
+        let mut out = Vec::new();
+        for req in self.queue.drain(..) {
+            out.push(Incomplete {
+                req,
+                prefilled: 0,
+                generated: 0,
+            });
+        }
+        // Completed actives retire within their own tick, so everything
+        // still here is genuinely unfinished.
+        for a in self.active.drain(..) {
+            out.push(Incomplete {
+                req: a.req,
+                prefilled: a.prefilled,
+                generated: a.generated,
+            });
+        }
+        for p in self.pending.drain(..) {
+            out.push(Incomplete {
+                req: p.req,
+                prefilled: p.req.input_len as u64,
+                generated: 1,
+            });
+        }
+        for p in self.parked.drain(..) {
+            out.push(Incomplete {
+                req: p.req,
+                prefilled: p.req.input_len as u64,
+                generated: p.generated,
+            });
+        }
+        out
+    }
+
     /// One scheduler iteration on this pipe at time `t`. Returns the number
     /// of retired requests; when `extract_handoffs` is set, requests whose
     /// prefill completed this tick are pushed to `handoffs` (instead of
@@ -755,7 +795,25 @@ impl Pipe {
             let capacity =
                 self.active.len() < cfg.max_batch && self.stages.iter().all(|s| s.can_admit());
             if !capacity {
-                if !self.preempt_below(chip, model, self.queue[qi].priority, now, metrics) {
+                let mut class = self.queue[qi].priority;
+                // SLO-deadline-triggered preemption (opt-in via
+                // `slo_preempt`): a candidate that has already burned more
+                // than half its TTFT budget in the queue preempts as if
+                // one class higher, so a projected breach can evict
+                // equal-class work — not only strictly lower classes.
+                // `None` (the default) never reaches this branch's extra
+                // arithmetic, keeping the legacy path bit-identical.
+                if let Some(slo) = cfg.slo_preempt {
+                    let waited =
+                        now.saturating_sub(secs_to_cycles(self.queue[qi].arrival_s, freq));
+                    if waited > secs_to_cycles(slo * 0.5, freq) {
+                        class = match class {
+                            Priority::Low => Priority::Normal,
+                            _ => Priority::High,
+                        };
+                    }
+                }
+                if !self.preempt_below(chip, model, class, now, metrics) {
                     break;
                 }
                 continue;

@@ -57,6 +57,18 @@ impl ChipSim {
         self.cores[i] = fresh;
     }
 
+    /// Throttle every core's HBM channel to `factor` × nominal bandwidth
+    /// (fault injection; `1.0` restores the nominal rate exactly). Unlike
+    /// [`ChipSim::set_core_config`] this keeps clocks, tracers, and
+    /// in-flight bank state intact — only future accesses slow down.
+    pub fn set_hbm_throttle(&mut self, factor: f64) {
+        for core in &mut self.cores {
+            if core.hbm.present() {
+                core.hbm.set_throttle(factor);
+            }
+        }
+    }
+
     /// Point-to-point transfer: waits for the source core, moves the bytes
     /// over the NoC, and advances the destination core to the arrival time.
     pub fn send(&mut self, src: Coord, dst: Coord, bytes: u64, class: OpClass) -> Transfer {

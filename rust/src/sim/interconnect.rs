@@ -57,6 +57,11 @@ pub struct Interconnect {
     /// `1 / egress bytes-per-cycle` (hoisted division, like the NoC).
     inv_bytes_per_cycle: f64,
     egress: Vec<Timeline>,
+    /// Per-source bandwidth degradation factor in `(0, 1]` (fault
+    /// injection: a flaky serdes link runs at `factor` × nominal). `1.0`
+    /// — the default — divides serialisation by exactly 1, so the
+    /// fault-free path is bit-identical.
+    degrade: Vec<f64>,
     stats: InterconnectStats,
 }
 
@@ -71,19 +76,32 @@ impl Interconnect {
             latency_cycles: (cfg.latency_us * freq_mhz).round() as Cycle,
             inv_bytes_per_cycle: if bpc > 0.0 { 1.0 / bpc } else { 0.0 },
             egress: vec![Timeline::new(); n_chips],
+            degrade: vec![1.0; n_chips],
             stats: InterconnectStats::default(),
         }
+    }
+
+    /// Degrade (or restore, with `1.0`) chip `src`'s egress bandwidth.
+    pub fn set_degrade(&mut self, src: usize, factor: f64) {
+        assert!(factor > 0.0 && factor <= 1.0, "degrade factor {factor}");
+        self.degrade[src] = factor;
     }
 
     pub fn config(&self) -> InterconnectConfig {
         self.cfg
     }
 
-    /// Serialisation cycles for `bytes` on one egress port.
-    fn ser_cycles(&self, bytes: u64) -> Cycle {
-        let x = bytes as f64 * self.inv_bytes_per_cycle;
+    /// Serialisation cycles for `bytes` on one egress port at `factor` ×
+    /// nominal bandwidth.
+    fn ser_cycles_at(&self, bytes: u64, factor: f64) -> Cycle {
+        let x = bytes as f64 * self.inv_bytes_per_cycle / factor;
         let t = x as Cycle;
         (t + u64::from((t as f64) < x)).max(1)
+    }
+
+    /// Serialisation cycles for `bytes` at nominal bandwidth.
+    fn ser_cycles(&self, bytes: u64) -> Cycle {
+        self.ser_cycles_at(bytes, 1.0)
     }
 
     /// Move `bytes` from chip `src` to chip `dst`, issued no earlier than
@@ -93,7 +111,7 @@ impl Interconnect {
         if src == dst || bytes == 0 {
             return earliest;
         }
-        let ser = self.ser_cycles(bytes);
+        let ser = self.ser_cycles_at(bytes, self.degrade[src]);
         let start = self.egress[src].reserve(earliest, ser);
         self.stats.transfers += 1;
         self.stats.bytes += bytes;
@@ -118,6 +136,9 @@ impl Interconnect {
     pub fn reset(&mut self) {
         for e in &mut self.egress {
             e.reset();
+        }
+        for d in &mut self.degrade {
+            *d = 1.0;
         }
         self.stats = InterconnectStats::default();
     }
@@ -175,6 +196,22 @@ mod tests {
         let mut f = fabric();
         let est = f.estimate(64_000, 123);
         assert_eq!(f.transfer(3, 0, 64_000, 123), est);
+    }
+
+    #[test]
+    fn degraded_source_serialises_slower_and_restores_exactly() {
+        let mut f = fabric();
+        f.set_degrade(0, 0.25); // quarter bandwidth: 4x serialisation.
+        assert_eq!(f.transfer(0, 1, 128_000, 0), 4000 + 1000);
+        // Other sources are unaffected.
+        assert_eq!(f.transfer(1, 2, 128_000, 0), 1000 + 1000);
+        f.set_degrade(0, 1.0);
+        let mut clean = fabric();
+        assert_eq!(
+            f.transfer(0, 2, 128_000, 10_000),
+            clean.transfer(0, 2, 128_000, 10_000),
+            "restored link must be bit-exact once its backlog clears"
+        );
     }
 
     #[test]

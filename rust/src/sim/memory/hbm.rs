@@ -73,7 +73,10 @@ pub struct HbmChannel {
     window: OutstandingWindow,
     /// Intrinsic access latency (activation + CAS + PHY), cycles.
     access_latency: Cycle,
-    /// Data-bus bytes per core cycle.
+    /// Nominal (fault-free) data-bus bytes per core cycle; the baseline
+    /// [`HbmChannel::set_throttle`] scales from.
+    base_bytes_per_cycle: f64,
+    /// Data-bus bytes per core cycle (nominal × current throttle factor).
     bytes_per_cycle: f64,
     /// `1 / bytes_per_cycle` (hoisted: the burst loop is the simulator's
     /// hottest path and division/libm-ceil dominated it — §Perf opt 1).
@@ -102,6 +105,7 @@ impl HbmChannel {
             req_bus: Timeline::new(),
             window: OutstandingWindow::new(chip.hbm_outstanding.max(1)),
             access_latency: chip.hbm_latency_cycles,
+            base_bytes_per_cycle: core.hbm_bytes_per_cycle(chip.freq_mhz),
             bytes_per_cycle: core.hbm_bytes_per_cycle(chip.freq_mhz),
             inv_bytes_per_cycle: {
                 let bpc = core.hbm_bytes_per_cycle(chip.freq_mhz);
@@ -125,6 +129,21 @@ impl HbmChannel {
     /// Whether this channel has any bandwidth at all.
     pub fn present(&self) -> bool {
         self.bytes_per_cycle > 0.0
+    }
+
+    /// Throttle the data bus to `factor` × nominal bandwidth (fault
+    /// injection: thermal/RAS throttling). `factor = 1.0` restores the
+    /// nominal rate exactly, so the fault-free path is bit-identical.
+    /// Accesses already timed keep their completion cycles; only future
+    /// bursts see the new rate.
+    pub fn set_throttle(&mut self, factor: f64) {
+        assert!(factor > 0.0 && factor <= 1.0, "throttle factor {factor}");
+        self.bytes_per_cycle = self.base_bytes_per_cycle * factor;
+        self.inv_bytes_per_cycle = if self.bytes_per_cycle > 0.0 {
+            1.0 / self.bytes_per_cycle
+        } else {
+            0.0
+        };
     }
 
     /// Submit an access of `bytes` at `issue`; returns the completion cycle
@@ -230,6 +249,7 @@ impl HbmChannel {
         self.window.reset();
         self.next_bank = 0;
         self.stats = HbmStats::default();
+        self.set_throttle(1.0);
     }
 }
 
@@ -301,6 +321,24 @@ mod tests {
         }
         // The flat model ignores contention entirely.
         assert!(td > tf, "detailed {td} vs fast {tf}");
+    }
+
+    #[test]
+    fn throttle_scales_fast_mode_and_restores_exactly() {
+        let mut c = chan(MemSimMode::Fast);
+        assert_eq!(c.access(0, 24_000), 160);
+        c.set_throttle(0.5); // 120 B/cycle: 60 + 200 = 260.
+        assert_eq!(c.access(0, 24_000), 260);
+        c.set_throttle(1.0);
+        assert_eq!(c.access(0, 24_000), 160, "factor 1.0 must be bit-exact");
+    }
+
+    #[test]
+    fn reset_clears_throttle() {
+        let mut c = chan(MemSimMode::Fast);
+        c.set_throttle(0.25);
+        c.reset();
+        assert_eq!(c.access(0, 24_000), 160);
     }
 
     #[test]

@@ -1,0 +1,159 @@
+//! Fault-tolerance end-to-end: crash a chip mid-run and check the
+//! recovery contract — every offered request is either completed exactly
+//! once or shed exactly once (no duplicates, no stranded work), recovered
+//! requests reproduce their original token counts bit-for-bit, seeded
+//! chaos schedules replay deterministically, and the load-adaptive defer
+//! backoff still terminates under sustained overload.
+
+use npusim::config::{ChipConfig, ModelConfig, WorkloadConfig};
+use npusim::serving::cluster::{self, ClusterConfig, RouterPolicy, ShedPolicy, ShedScope};
+use npusim::serving::faults::{FaultSchedule, RecoveryPolicy};
+use npusim::serving::pd_fusion::FusionConfig;
+use npusim::serving::request::{self, Prefix, Priority, Request};
+use npusim::serving::scheduler::SchedulerConfig;
+
+fn fleet(n_chips: usize) -> ClusterConfig {
+    ClusterConfig::new(
+        ChipConfig::large_core(),
+        n_chips,
+        SchedulerConfig::Fusion(FusionConfig::default()),
+        RouterPolicy::LeastLoaded,
+    )
+}
+
+fn burst(n: u64, input_len: usize, output_len: usize) -> Vec<Request> {
+    (0..n)
+        .map(|i| Request {
+            id: i,
+            arrival_s: 0.0005 * i as f64,
+            input_len,
+            output_len,
+            prefix: Prefix::default(),
+            priority: Priority::Normal,
+        })
+        .collect()
+}
+
+/// Recovered requests must re-run to their exact original shape: the
+/// completion record of a request that died with a chip is
+/// indistinguishable (tokens-wise) from an undisturbed run's.
+#[test]
+fn recovered_requests_reproduce_exact_token_counts() {
+    let model = ModelConfig::qwen3_4b();
+    let reqs = burst(10, 1536, 12);
+    let offered = reqs.len();
+    let cfg = fleet(2).with_faults(
+        FaultSchedule::parse("crash:0@0.004")
+            .unwrap()
+            .with_retries(8, 0.002),
+    );
+    let cm = cluster::simulate_cluster_requests(&cfg, &model, reqs.clone()).unwrap();
+    assert_eq!(cm.faults.crashes, 1);
+    assert!(cm.faults.recovered > 0, "{:?}", cm.faults);
+    assert!(cm.conserves(offered));
+    assert_eq!(cm.shed_requests(), 0, "retry budget 8 must absorb one crash");
+    let agg = cm.aggregate();
+    assert_eq!(agg.n_requests(), offered);
+    for rec in agg.records() {
+        let orig = &reqs[rec.id as usize];
+        assert_eq!(rec.input_tokens, orig.input_len as u64, "{rec:?}");
+        assert_eq!(rec.output_tokens, orig.output_len as u64, "{rec:?}");
+        assert!(rec.first_token >= rec.arrival && rec.finish >= rec.first_token, "{rec:?}");
+    }
+    // Recovery accounting is consistent: every retry recomputed at least
+    // the tokens the prefix cache could not restore.
+    for r in &cm.recovery {
+        assert!(r.tokens_recomputed > 0, "{r:?}");
+    }
+}
+
+/// Exactly-once partition under a harsher schedule: two crashes (one with
+/// a restart), a tiny retry budget, and an overload-sized burst. Completed
+/// and shed must tile the offered set with no overlap and no leftovers —
+/// the run terminating at all also exercises the driver's event guard.
+#[test]
+fn completions_and_sheds_partition_offered_work_exactly_once() {
+    let model = ModelConfig::qwen3_4b();
+    let reqs = burst(16, 1024, 8);
+    let offered = reqs.len();
+    for (policy, tag) in [
+        (RecoveryPolicy::Recover, "recover"),
+        (RecoveryPolicy::Resubmit { client_timeout_s: 0.01 }, "resubmit"),
+    ] {
+        let cfg = fleet(2).with_faults(
+            FaultSchedule::parse("crash:0@0.003:0.08;crash:1@0.25")
+                .unwrap()
+                .with_retries(2, 0.002)
+                .with_recovery(policy),
+        );
+        let cm = cluster::simulate_cluster_requests(&cfg, &model, reqs.clone()).unwrap();
+        assert!(
+            cm.conserves(offered),
+            "{tag}: completed {} + shed {} != offered {offered}",
+            cm.n_requests(),
+            cm.shed_requests()
+        );
+        // No record id appears twice (exactly-once, not at-least-once).
+        let agg = cm.aggregate();
+        let mut ids: Vec<u64> = agg.records().iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        let before = ids.len();
+        ids.dedup();
+        assert_eq!(ids.len(), before, "{tag}: duplicated completion");
+        assert!(cm.faults.crashes >= 1, "{tag}");
+    }
+}
+
+/// Seeded chaos is replayable: the same seed yields the same schedule, and
+/// the same schedule yields bit-identical metrics, fault stats, and
+/// recovery logs across runs.
+#[test]
+fn seeded_chaos_runs_are_bit_identical() {
+    let model = ModelConfig::qwen3_4b();
+    let w = WorkloadConfig::sharegpt_like(24).with_seed(5);
+    let reqs = request::generate(&w);
+    let s1 = FaultSchedule::seeded(42, 3, 2.0, 1.5).with_retries(4, 0.002);
+    let s2 = FaultSchedule::seeded(42, 3, 2.0, 1.5).with_retries(4, 0.002);
+    assert_eq!(s1, s2, "seeded schedule must be a pure function of the seed");
+    assert_ne!(
+        FaultSchedule::seeded(43, 3, 2.0, 1.5),
+        FaultSchedule::seeded(42, 3, 2.0, 1.5),
+        "different seeds should draw different fault histories"
+    );
+    let run = |s: FaultSchedule| {
+        cluster::simulate_cluster_requests(&fleet(3).with_faults(s), &model, reqs.clone()).unwrap()
+    };
+    let a = run(s1);
+    let b = run(s2);
+    assert_eq!(a.aggregate().records(), b.aggregate().records());
+    assert_eq!(a.control, b.control);
+    assert_eq!(a.faults, b.faults);
+    assert_eq!(a.recovery, b.recovery);
+    assert!(a.conserves(reqs.len()));
+}
+
+/// Satellite: the load-adaptive defer backoff must terminate under
+/// sustained overload — every offered request resolves to completed or
+/// shed within the bounded re-timing chain, per shed scope.
+#[test]
+fn adaptive_defer_terminates_under_sustained_overload() {
+    let model = ModelConfig::qwen3_4b();
+    let reqs = burst(24, 2048, 8);
+    let offered = reqs.len();
+    for scope in [ShedScope::Global, ShedScope::PerChip] {
+        let cfg = fleet(2)
+            .with_shed(ShedPolicy::Defer, 2)
+            .with_shed_scope(scope);
+        // Terminating at all is the property: a non-decaying retry chain
+        // would trip the driver's event-budget guard and error out.
+        let cm = cluster::simulate_cluster_requests(&cfg, &model, reqs.clone()).unwrap();
+        assert!(
+            cm.conserves(offered),
+            "{}: completed {} + shed {} != {offered}",
+            scope.name(),
+            cm.n_requests(),
+            cm.shed_requests()
+        );
+        assert!(cm.control.deferrals > 0, "{}: overload must defer", scope.name());
+    }
+}

@@ -13,8 +13,10 @@
 //!    (shared-prefix + poisson workloads × fusion/disagg/hybrid ×
 //!    rr/least/prefix routers on ≥ 2 chips), the tier ablation
 //!    (sram-only / hbm-tier / two-tier+noc), the deployment-plan
-//!    study (one auto row plus the named presets), and the overload
-//!    control-plane study (fifo / drop / defer admission policies).
+//!    study (one auto row plus the named presets), the overload
+//!    control-plane study (fifo / drop / defer admission policies), and
+//!    the fault study (none / crash_recover / crash_resubmit / degrade
+//!    scenarios on a ≥ 4-chip fleet).
 //! 2. **Invariants**: on the shared-prefix workload the prefix-hit-aware
 //!    router must beat round-robin on TTFT p50 for the fusion system (the
 //!    cluster acceptance property), cache-on must not lose TTFT, the
@@ -25,7 +27,12 @@
 //!    deployment), and under the 2x flash crowd the priority+shed
 //!    control plane must strictly beat the FIFO/no-shed baseline on
 //!    goodput-under-SLO while conserving requests (completed + shed =
-//!    offered, FIFO shedding nothing).
+//!    offered, FIFO shedding nothing). The fault study adds exactly-once
+//!    under faults (completed + shed = offered in every scenario, with a
+//!    crash actually injected), frontend recovery strictly beating
+//!    client-timeout resubmission on goodput-under-SLO, and the bounded
+//!    single-chip-crash degradation (crash_recover goodput ≥ healthy ×
+//!    (1 − 2/chips − 0.35)).
 //! 3. **Numbers**: `tokens_per_s` must not drop, and `ttft_p99_s` must
 //!    not rise, by more than the tolerance against the matching baseline
 //!    row. A baseline marked `"provisional": true` skips this layer (the
@@ -186,11 +193,30 @@ fn check_structure(current: &Json, violations: &mut Vec<String>) {
             violations.push(format!("slo row missing: {policy}"));
         }
     }
+    let fault = rows(current, "fault");
+    for scenario in ["none", "crash_recover", "crash_resubmit", "degrade"] {
+        match fault_row(&fault, scenario) {
+            None => violations.push(format!("fault row missing: {scenario}")),
+            Some(r) => {
+                if r.num("chips").unwrap_or(0.0) < 4.0 {
+                    violations.push(format!("fault row {scenario} runs on < 4 chips"));
+                }
+            }
+        }
+    }
 }
 
 /// The slo-section row of one admission policy.
 fn slo_row<'a>(slo: &[&'a Json], policy: &str) -> Option<&'a Json> {
     slo.iter().find(|r| r.str("policy") == Some(policy)).copied()
+}
+
+/// The fault-section row of one scenario.
+fn fault_row<'a>(fault: &[&'a Json], scenario: &str) -> Option<&'a Json> {
+    fault
+        .iter()
+        .find(|r| r.str("scenario") == Some(scenario))
+        .copied()
 }
 
 /// `prefill_tokens_skipped` of one tier-ablation row.
@@ -305,6 +331,60 @@ fn check_invariants(current: &Json, violations: &mut Vec<String>) {
         if policy == "fifo" && shed != 0.0 {
             violations.push(format!("slo fifo shed {shed} requests; must shed none"));
         }
+    }
+    // The fault-tolerance acceptance properties.
+    let fault = rows(current, "fault");
+    for scenario in ["none", "crash_recover", "crash_resubmit", "degrade"] {
+        let Some(r) = fault_row(&fault, scenario) else { continue };
+        // Exactly-once: a crash must strand nothing and duplicate nothing.
+        let (offered, completed, shed) = (
+            r.num("offered").unwrap_or(-1.0),
+            r.num("completed").unwrap_or(-1.0),
+            r.num("shed").unwrap_or(-1.0),
+        );
+        if completed + shed != offered {
+            violations.push(format!(
+                "fault {scenario}: completed {completed} + shed {shed} != offered {offered}"
+            ));
+        }
+    }
+    match (
+        fault_row(&fault, "none"),
+        fault_row(&fault, "crash_recover"),
+        fault_row(&fault, "crash_resubmit"),
+    ) {
+        (Some(none), Some(rec), Some(res)) => {
+            if rec.num("crashes").unwrap_or(0.0) < 1.0 {
+                violations.push("fault crash_recover injected no crash".into());
+            }
+            if rec.num("recovered").unwrap_or(0.0) <= 0.0 {
+                violations.push("fault crash_recover recovered no stranded requests".into());
+            }
+            let (g_none, g_rec, g_res) = (
+                none.num("goodput_tok_s").unwrap_or(0.0),
+                rec.num("goodput_tok_s").unwrap_or(0.0),
+                res.num("goodput_tok_s").unwrap_or(0.0),
+            );
+            // Frontend recovery must strictly beat waiting out a client
+            // timeout and resubmitting from scratch.
+            if g_rec <= g_res {
+                violations.push(format!(
+                    "fault recovery does not beat drop-and-resubmit on goodput-under-SLO \
+                     ({g_rec} vs {g_res})"
+                ));
+            }
+            // Losing 1 of N chips costs at most its capacity share (~2/N,
+            // accounting for queue shuffle) plus recovery overhead.
+            let chips = rec.num("chips").unwrap_or(4.0).max(1.0);
+            let floor = (1.0 - 2.0 / chips - 0.35).max(0.0);
+            if g_rec < g_none * floor {
+                violations.push(format!(
+                    "single-chip crash degrades goodput below the bound: {g_rec} < \
+                     {g_none} x {floor:.3}"
+                ));
+            }
+        }
+        _ => violations.push("cannot evaluate fault-recovery invariants".into()),
     }
 }
 
@@ -491,6 +571,35 @@ fn check_numbers(current: &Json, baseline: &Json, tol: f64, violations: &mut Vec
             &format!("slo {policy} ttft_p99_high_s"),
             c.num("ttft_p99_high_s"),
             b.num("ttft_p99_high_s"),
+            tol,
+            false,
+            violations,
+        );
+    }
+    // Fault study: match rows on the scenario label.
+    let cur_fault = rows(current, "fault");
+    let base_fault = rows(baseline, "fault");
+    for b in &base_fault {
+        let scenario = b.str("scenario").unwrap_or("");
+        let Some(c) = cur_fault
+            .iter()
+            .find(|r| r.str("scenario") == Some(scenario))
+        else {
+            violations.push(format!("fault row disappeared: {scenario}"));
+            continue;
+        };
+        check_metric(
+            &format!("fault {scenario} goodput_tok_s"),
+            c.num("goodput_tok_s"),
+            b.num("goodput_tok_s"),
+            tol,
+            true,
+            violations,
+        );
+        check_metric(
+            &format!("fault {scenario} mean_detect_s"),
+            c.num("mean_detect_s"),
+            b.num("mean_detect_s"),
             tol,
             false,
             violations,
