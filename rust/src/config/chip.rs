@@ -236,6 +236,29 @@ impl ChipConfig {
         }
     }
 
+    /// Compute-heavy fleet variant for prefill-role chips: a wider
+    /// systolic array (and matching vector width) buys prompt-processing
+    /// throughput, while HBM stays at the large-core baseline — long
+    /// prefills are MAC-bound, not bandwidth-bound.
+    pub fn prefill_optimized() -> Self {
+        let mut c = Self::large_core();
+        c.name = "prefill-opt-64".into();
+        c.core.sa_dim = 192;
+        c.core.vector_lanes = 192;
+        c
+    }
+
+    /// HBM-heavy fleet variant for decode-role chips: decode is memory-
+    /// bound (A-IO), so the array shrinks and per-core HBM bandwidth
+    /// doubles relative to the large-core baseline.
+    pub fn decode_optimized() -> Self {
+        let mut c = Self::large_core();
+        c.name = "decode-opt-64".into();
+        c.core.sa_dim = 96;
+        c.core.hbm_bw_gbps = 240.0;
+        c
+    }
+
     /// Set both simulation modes at once (Fig. 7-right's mode comparison).
     pub fn with_sim_modes(mut self, mem: MemSimMode, noc: NocSimMode) -> Self {
         self.mem_mode = mem;
@@ -296,6 +319,28 @@ mod tests {
     fn preset_core_counts_match_table3() {
         assert_eq!(ChipConfig::large_core().n_cores(), 64);
         assert_eq!(ChipConfig::small_core().n_cores(), 256);
+    }
+
+    #[test]
+    fn fleet_variants_specialize_against_baseline() {
+        let base = ChipConfig::large_core();
+        let p = ChipConfig::prefill_optimized();
+        let d = ChipConfig::decode_optimized();
+        p.validate().unwrap();
+        d.validate().unwrap();
+        // Same mesh and clock as the baseline (fleets require uniform freq).
+        assert_eq!(p.n_cores(), base.n_cores());
+        assert_eq!(p.freq_mhz, base.freq_mhz);
+        assert_eq!(d.freq_mhz, base.freq_mhz);
+        // Prefill variant: more MACs, baseline HBM.
+        assert!(p.core.peak_macs_per_cycle() > base.core.peak_macs_per_cycle());
+        assert_eq!(p.core.hbm_bw_gbps, base.core.hbm_bw_gbps);
+        // Decode variant: fewer MACs, more HBM bandwidth.
+        assert!(d.core.peak_macs_per_cycle() < base.core.peak_macs_per_cycle());
+        assert!(d.core.hbm_bw_gbps > base.core.hbm_bw_gbps);
+        // Distinct names so bench rows are self-describing.
+        assert_ne!(p.name, base.name);
+        assert_ne!(d.name, base.name);
     }
 
     #[test]

@@ -7,9 +7,12 @@
 //! ablation (SRAM-only vs HBM tier vs +cross-pipe NoC, via
 //! [`tier_study::bench_rows`]), (5) the overload control plane
 //! (FIFO vs shed/defer under a 2x flash crowd, via
-//! [`overload_study::bench_rows`]), and (6) the fault-tolerance study
+//! [`overload_study::bench_rows`]), (6) the fault-tolerance study
 //! (crash recovery vs client resubmission plus degradation windows, via
-//! [`fault_study::bench_rows`]) — and writes all of it to
+//! [`fault_study::bench_rows`]), and (7) the fleet-specialization study
+//! (planned heterogeneous prefill/decode fleet vs homogeneous fused at
+//! equal chip count, via [`fleet_study::bench_rows`]) — and writes all
+//! of it to
 //! `BENCH_serving.json` (wall-clock sim time, simulated tokens/s,
 //! TTFT/TBT p50/p99, prefix-cache hit rate, memo hit rate,
 //! goodput-under-SLO). CI gates this file against `BENCH_baseline.json`
@@ -22,6 +25,7 @@
 use crate::config::{ArrivalProcess, ChipConfig, ModelConfig, PrefixSharing, WorkloadConfig};
 use crate::experiments::cluster_study::{self, ClusterRun};
 use crate::experiments::fault_study::{self, FaultRun};
+use crate::experiments::fleet_study::{self, FleetRun};
 use crate::experiments::overload_study::{self, OverloadRun};
 use crate::experiments::plan_study::{self, PlanRun};
 use crate::experiments::tier_study::{self, TierRun};
@@ -268,6 +272,7 @@ fn render_json(
     plan: &[PlanRun],
     slo: &[OverloadRun],
     fault: &[FaultRun],
+    fleet: &[FleetRun],
 ) -> String {
     let mut j = String::new();
     let _ = writeln!(j, "{{");
@@ -430,6 +435,33 @@ fn render_json(
         );
     }
     let _ = writeln!(j, "  ],");
+    let _ = writeln!(j, "  \"fleet\": [");
+    for (i, r) in fleet.iter().enumerate() {
+        let _ = writeln!(
+            j,
+            "    {{\"fleet\": \"{}\", \"chips\": {}, \"n_prefill\": {}, \"n_decode\": {}, \
+             \"disaggregated\": {}, \"offered\": {}, \"completed\": {}, \"shed\": {}, \
+             \"handoffs\": {}, \"crashes\": {}, \"tokens_exact\": {}, \"icn_mb\": {:.3}, \
+             \"slo_ttft_s\": {:.6}, \"goodput_tok_s\": {:.3}, \"tokens_per_s\": {:.3}}}{}",
+            r.fleet,
+            r.chips,
+            r.n_prefill,
+            r.n_decode,
+            r.disaggregated,
+            r.offered,
+            r.completed,
+            r.shed,
+            r.handoffs,
+            r.crashes,
+            r.tokens_exact,
+            r.icn_mb,
+            r.slo_ttft_s,
+            r.goodput_tok_s,
+            r.tok_s,
+            if i + 1 < fleet.len() { "," } else { "" }
+        );
+    }
+    let _ = writeln!(j, "  ],");
     let _ = writeln!(
         j,
         "  \"memo\": {{\"sweep\": \"fig13-mini\", \"wall_off_s\": {:.6}, \"wall_on_s\": {:.6}, \
@@ -450,6 +482,7 @@ pub fn run(opts: &Opts) -> anyhow::Result<Vec<Table>> {
     let plan = plan_study::bench_rows(opts)?;
     let slo = overload_study::bench_rows(opts)?;
     let fault = fault_study::bench_rows(opts)?;
+    let fleet = fleet_study::bench_rows(opts)?;
 
     let mut t1 = Table::new(
         "bench — prefix-sharing paged KV on the shared-prefix trace (Qwen3-4B, 64 cores)",
@@ -626,6 +659,34 @@ pub fn run(opts: &Opts) -> anyhow::Result<Vec<Table>> {
         ]);
     }
 
+    let mut t8 = Table::new(
+        "bench — fleet specialization (prefill-heavy trace, 4 chips, planned silicon per role)",
+        &[
+            "fleet",
+            "P/D chips",
+            "offered",
+            "completed",
+            "shed",
+            "handoffs",
+            "tokens exact",
+            "goodput tok/s (SLO)",
+            "tok/s",
+        ],
+    );
+    for r in &fleet {
+        t8.row(&[
+            r.fleet.to_string(),
+            format!("{}/{}", r.n_prefill, r.n_decode),
+            r.offered.to_string(),
+            r.completed.to_string(),
+            r.shed.to_string(),
+            r.handoffs.to_string(),
+            r.tokens_exact.to_string(),
+            f3(r.goodput_tok_s),
+            f3(r.tok_s),
+        ]);
+    }
+
     let cluster_rr = cluster_study::ttft_p50(&cluster, "shared-prefix", "fusion", "rr");
     let cluster_prefix = cluster_study::ttft_p50(&cluster, "shared-prefix", "fusion", "prefix");
     println!(
@@ -653,13 +714,14 @@ pub fn run(opts: &Opts) -> anyhow::Result<Vec<Table>> {
             &plan,
             &slo,
             &fault,
+            &fleet,
         );
         std::fs::create_dir_all(dir)?;
         std::fs::write(dir.join("BENCH_serving.json"), &json)?;
         std::fs::write("BENCH_serving.json", &json)?;
     }
 
-    Ok(vec![t1, t2, t3, t4, t5, t6, t7])
+    Ok(vec![t1, t2, t3, t4, t5, t6, t7, t8])
 }
 
 #[cfg(test)]
@@ -806,7 +868,24 @@ mod tests {
             goodput_tok_s: 780.0,
             tok_s: 840.0,
         }];
-        let j = render_json(&runs, &memo, 0.6, &cluster, &tier, &plan, &slo, &fault);
+        let fleet = vec![FleetRun {
+            fleet: "fleet-planned",
+            chips: 4,
+            n_prefill: 2,
+            n_decode: 2,
+            disaggregated: true,
+            offered: 96,
+            completed: 96,
+            shed: 0,
+            handoffs: 96,
+            crashes: 0,
+            tokens_exact: true,
+            slo_ttft_s: 0.1,
+            goodput_tok_s: 910.0,
+            tok_s: 930.0,
+            icn_mb: 48.25,
+        }];
+        let j = render_json(&runs, &memo, 0.6, &cluster, &tier, &plan, &slo, &fault, &fleet);
         assert!(j.starts_with("{\n"));
         assert!(j.trim_end().ends_with('}'));
         assert_eq!(j.matches('{').count(), j.matches('}').count());
@@ -824,5 +903,9 @@ mod tests {
         assert!(j.contains("\"scenario\": \"crash_recover\""));
         assert!(j.contains("\"recovered\": 3"));
         assert!(j.contains("\"mean_detect_s\": 0.008000"));
+        assert!(j.contains("\"fleet\": \"fleet-planned\""));
+        assert!(j.contains("\"disaggregated\": true"));
+        assert!(j.contains("\"handoffs\": 96"));
+        assert!(j.contains("\"tokens_exact\": true"));
     }
 }

@@ -113,7 +113,7 @@ fn run_scenario(
         RouterPolicy::LeastLoaded,
     );
     cfg.slo_ttft_s = slo_ttft_s;
-    let freq = cfg.chip.freq_mhz;
+    let freq = cfg.freq_mhz();
     if let Some(f) = faults {
         cfg = cfg.with_faults(f);
     }

@@ -1,0 +1,299 @@
+//! `fleet_study` — cluster-level PD disaggregation over heterogeneous
+//! chips: the same prefill-heavy trace (ShareGPT-like prompt band,
+//! short outputs, Poisson arrivals) served by
+//!
+//! - `homog-fused`         — the best homogeneous fused fleet
+//!   ([`plan::plan_fleet_fused`]): every chip a `large_core` clone running
+//!   the top fused plan over its share of the workload.
+//! - `fleet-planned`       — whatever [`plan::plan_fleet`] picks for this
+//!   workload at equal chip count. On a prefill-heavy mix the planner
+//!   must choose the role-specialized fleet: compute-heavy prefill chips
+//!   streaming finished prompt KV to HBM-heavy decode chips over the
+//!   interconnect ([`crate::sim::interconnect`]).
+//! - `fleet-planned-crash` — the planned fleet with a decode chip crashed
+//!   mid-trace and never restarted ([`RecoveryPolicy::Recover`]).
+//!
+//! The gated acceptance properties (`BENCH_serving.json` `"fleet"`
+//! section, checked by `tools/bench_check`):
+//!
+//! 1. **Specialization pays**: on the prefill-heavy mix the planned
+//!    fleet is disaggregated, performs cross-chip handoffs, and its
+//!    goodput-under-SLO strictly beats the homogeneous fused fleet at
+//!    equal chip count.
+//! 2. **Exactly-once across the handoff**: `completed + shed == offered`
+//!    in every scenario, and every completed request reports exactly its
+//!    offered input/output token counts (`tokens_exact`) — splitting a
+//!    request into prefill and decode legs neither loses nor duplicates
+//!    tokens, including under a decode-chip crash.
+//!
+//! ```sh
+//! cargo run --release -p npusim -- experiment fleet_study
+//! ```
+
+use crate::config::{ArrivalProcess, ChipConfig, LenDist, ModelConfig, WorkloadConfig};
+use crate::experiments::{overload_study, Opts};
+use crate::parallel::plan::{self, FleetPlan};
+use crate::serving::cluster::{self, ClusterConfig, ClusterMetrics, RouterPolicy};
+use crate::serving::faults::{FaultEvent, FaultKind, FaultSchedule, RecoveryPolicy};
+use crate::serving::fleet::FleetSpec;
+use crate::serving::request::{self, Request};
+use crate::sim::interconnect::InterconnectConfig;
+use crate::util::table::{f3, Table};
+use std::collections::HashMap;
+
+/// Fleet size of the study: enough chips that the planner has a real
+/// prefill/decode staffing choice to make.
+pub const FLEET_CHIPS: usize = 4;
+
+/// One fleet-scenario cell.
+#[derive(Debug, Clone)]
+pub struct FleetRun {
+    pub fleet: &'static str,
+    pub chips: usize,
+    pub n_prefill: usize,
+    pub n_decode: usize,
+    pub disaggregated: bool,
+    pub offered: usize,
+    pub completed: usize,
+    pub shed: u64,
+    /// Prefill→decode cross-chip KV handoffs (0 for homogeneous fleets).
+    pub handoffs: u64,
+    pub crashes: u64,
+    /// Every completed request reports exactly its offered input/output
+    /// token counts (exactly-once across the leg split).
+    pub tokens_exact: bool,
+    pub slo_ttft_s: f64,
+    pub goodput_tok_s: f64,
+    pub tok_s: f64,
+    /// Interconnect traffic (migrations + handoffs), MB.
+    pub icn_mb: f64,
+}
+
+/// The prefill-heavy trace of the study: ShareGPT-like long prompts,
+/// short outputs, Poisson arrivals at `rate`.
+fn fleet_workload(n: usize, rate: f64) -> WorkloadConfig {
+    let mut w = WorkloadConfig::fixed_ratio(768, 32, n);
+    w.name = "fleet-prefill-heavy".into();
+    w.input_len = LenDist::Uniform(512, 1024);
+    w.output_len = LenDist::Uniform(16, 48);
+    w.with_arrival(ArrivalProcess::Poisson { rate: rate.max(1.0) })
+        .with_seed(13)
+}
+
+/// Exactly-once token accounting: every completed record must carry its
+/// request's offered input/output token counts, so a fleet handoff can
+/// neither lose nor double-count a token.
+fn tokens_exact(reqs: &[Request], cm: &ClusterMetrics) -> bool {
+    let want: HashMap<u64, (u64, u64)> = reqs
+        .iter()
+        .map(|r| (r.id, (r.input_len as u64, r.output_len as u64)))
+        .collect();
+    cm.aggregate().records().iter().all(|rec| {
+        want.get(&rec.id)
+            .is_some_and(|&(i, o)| rec.input_tokens == i && rec.output_tokens == o)
+    })
+}
+
+/// Run one planned fleet over the trace; conservation (exactly-once) is
+/// asserted here so every caller inherits gate 2.
+fn run_fleet(
+    name: &'static str,
+    model: &ModelConfig,
+    fleet: &FleetPlan,
+    reqs: Vec<Request>,
+    slo_ttft_s: f64,
+    faults: Option<FaultSchedule>,
+) -> anyhow::Result<FleetRun> {
+    let offered = reqs.len();
+    let spec = FleetSpec::from_plan_fleet(fleet)?;
+    let mut b = ClusterConfig::builder(spec)
+        .router(RouterPolicy::LeastLoaded)
+        .slo_ttft_s(slo_ttft_s);
+    if let Some(f) = faults {
+        b = b.faults(f);
+    }
+    let cfg = b.build();
+    let cm = cluster::simulate_cluster_requests(&cfg, model, reqs.clone())?;
+    anyhow::ensure!(
+        cm.conserves(offered),
+        "{name}: {} completed + {} shed != {offered} offered",
+        cm.n_requests(),
+        cm.shed_requests()
+    );
+    let exact = tokens_exact(&reqs, &cm);
+    let agg = cm.aggregate();
+    Ok(FleetRun {
+        fleet: name,
+        chips: fleet.chips.len(),
+        n_prefill: fleet.n_prefill(),
+        n_decode: fleet.n_decode(),
+        disaggregated: fleet.disaggregated,
+        offered,
+        completed: cm.n_requests(),
+        shed: cm.shed_requests(),
+        handoffs: cm.handoffs,
+        crashes: cm.faults.crashes,
+        tokens_exact: exact,
+        slo_ttft_s,
+        goodput_tok_s: agg.goodput_tokens_per_s(slo_ttft_s, overload_study::SLO_TBT_S),
+        tok_s: agg.tokens_per_s(),
+        icn_mb: cm.interconnect.bytes as f64 / (1 << 20) as f64,
+    })
+}
+
+/// The three-scenario comparison the bench's `"fleet"` section reports.
+pub fn bench_rows(opts: &Opts) -> anyhow::Result<Vec<FleetRun>> {
+    let model = ModelConfig::qwen3_4b();
+    let n = opts.pick(96, 24);
+    let per_chip = overload_study::sustainable_rate(&model, opts.pick(24, 8))?;
+    // Prompts here are roughly twice the calibration mix's, so 0.4x the
+    // nominal fleet rate is a prefill-pressured (not saturated) operating
+    // point, and the SLO stretches by the same factor.
+    let rate = per_chip * FLEET_CHIPS as f64 * 0.4;
+    let slo_ttft_s = 2.0 * overload_study::SLO_SERVICE_PERIODS / per_chip;
+    let w = fleet_workload(n, rate);
+    let reqs = request::generate(&w);
+    let icn = InterconnectConfig::default();
+    let chip = ChipConfig::large_core();
+    let homog = plan::plan_fleet_fused(&chip, &model, &w, FLEET_CHIPS)?;
+    let planned = plan::plan_fleet(&chip, &model, &w, FLEET_CHIPS, &icn)?;
+    // Crash the first decode chip mid-trace (prefill chips lead the
+    // planned fleet's chip list) and never restart it.
+    let crash_chip = planned.n_prefill().min(FLEET_CHIPS - 1);
+    let horizon = n as f64 / rate.max(1.0);
+    let crash = FaultSchedule::new(vec![FaultEvent {
+        at_s: 0.3 * horizon,
+        chip: crash_chip,
+        kind: FaultKind::ChipCrash {
+            restart_after_s: None,
+        },
+    }])
+    .with_retries(6, 0.002)
+    .with_recovery(RecoveryPolicy::Recover);
+    Ok(vec![
+        run_fleet("homog-fused", &model, &homog, reqs.clone(), slo_ttft_s, None)?,
+        run_fleet("fleet-planned", &model, &planned, reqs.clone(), slo_ttft_s, None)?,
+        run_fleet(
+            "fleet-planned-crash",
+            &model,
+            &planned,
+            reqs,
+            slo_ttft_s,
+            Some(crash),
+        )?,
+    ])
+}
+
+pub fn run(opts: &Opts) -> anyhow::Result<Vec<Table>> {
+    let runs = bench_rows(opts)?;
+
+    let mut t = Table::new(
+        "fleet_study — fleet-level PD disaggregation on a prefill-heavy trace \
+         (Qwen3-4B, 4 chips, planned silicon per role)",
+        &[
+            "fleet",
+            "P/D chips",
+            "offered",
+            "completed",
+            "shed",
+            "handoffs",
+            "crashes",
+            "tokens exact",
+            "icn MB",
+            "goodput tok/s (SLO)",
+            "tok/s",
+        ],
+    );
+    for r in &runs {
+        t.row(&[
+            r.fleet.to_string(),
+            format!("{}/{}", r.n_prefill, r.n_decode),
+            r.offered.to_string(),
+            r.completed.to_string(),
+            r.shed.to_string(),
+            r.handoffs.to_string(),
+            r.crashes.to_string(),
+            r.tokens_exact.to_string(),
+            f3(r.icn_mb),
+            f3(r.goodput_tok_s),
+            f3(r.tok_s),
+        ]);
+    }
+
+    let by = |s: &str| runs.iter().find(|r| r.fleet == s).unwrap();
+    let (homog, planned) = (by("homog-fused"), by("fleet-planned"));
+    println!(
+        "fleet_study: goodput under SLO (TTFT<{:.4}s) — homog-fused {:.1} tok/s vs \
+         planned {} P{}/D{} {:.1} tok/s ({:+.0}%), {} handoffs moved {:.2} MB of KV",
+        planned.slo_ttft_s,
+        homog.goodput_tok_s,
+        if planned.disaggregated { "fleet-disagg" } else { "fleet-fused" },
+        planned.n_prefill,
+        planned.n_decode,
+        planned.goodput_tok_s,
+        if homog.goodput_tok_s > 0.0 {
+            (planned.goodput_tok_s / homog.goodput_tok_s - 1.0) * 100.0
+        } else {
+            0.0
+        },
+        planned.handoffs,
+        planned.icn_mb
+    );
+
+    Ok(vec![t])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fleet_trace_is_deterministic_and_prefill_heavy() {
+        let w = fleet_workload(32, 40.0);
+        let reqs = request::generate(&w);
+        assert_eq!(reqs.len(), 32);
+        assert_eq!(reqs, request::generate(&w));
+        assert!(reqs.windows(2).all(|p| p[0].arrival_s <= p[1].arrival_s));
+        for r in &reqs {
+            assert!(r.input_len >= 512 && r.input_len <= 1024);
+            assert!(r.output_len >= 16 && r.output_len <= 48);
+            assert!(r.input_len > 8 * r.output_len, "prefill-heavy by construction");
+        }
+    }
+
+    #[test]
+    fn gates_hold_at_fast_scale() {
+        // The bench_check gates, asserted at the same scale CI smoke-runs:
+        // exactly-once (inside run_fleet), token exactness across the leg
+        // split, the planner choosing specialization on a prefill-heavy
+        // mix, and specialization strictly beating the homogeneous fused
+        // fleet on goodput-under-SLO at equal chip count.
+        let runs = bench_rows(&Opts::fast()).unwrap();
+        assert_eq!(runs.len(), 3);
+        let by = |s: &str| runs.iter().find(|r| r.fleet == s).unwrap();
+        let (homog, planned, crash) =
+            (by("homog-fused"), by("fleet-planned"), by("fleet-planned-crash"));
+        for r in &runs {
+            assert_eq!(r.chips, FLEET_CHIPS, "{}", r.fleet);
+            assert!(r.tokens_exact, "{}: token counts drifted across the handoff", r.fleet);
+        }
+        assert!(!homog.disaggregated);
+        assert_eq!(homog.handoffs, 0);
+        assert_eq!(homog.completed, homog.offered);
+        assert!(
+            planned.disaggregated,
+            "the planner must specialize on a prefill-heavy mix"
+        );
+        assert!(planned.n_prefill >= 1 && planned.n_decode >= 1);
+        assert!(planned.handoffs > 0, "a disaggregated fleet must hand off");
+        assert!(planned.icn_mb > 0.0);
+        assert!(
+            planned.goodput_tok_s > homog.goodput_tok_s,
+            "planned fleet {} !> homogeneous {}",
+            planned.goodput_tok_s,
+            homog.goodput_tok_s
+        );
+        assert_eq!(crash.crashes, 1);
+        assert!(crash.handoffs > 0);
+    }
+}

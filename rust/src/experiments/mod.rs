@@ -22,11 +22,13 @@
 //! | `plan_study` | auto-planner: analytic plan ranking vs simulated | [`plan_study`] |
 //! | `overload_study` | flash crowd at 2x load: FIFO vs shed/defer control plane | [`overload_study`] |
 //! | `fault_study` | injected faults: crash recovery vs resubmit, degradation windows | [`fault_study`] |
+//! | `fleet_study` | fleet-level PD disaggregation: planned heterogeneous fleet vs homogeneous fused | [`fleet_study`] |
 
 pub mod ablations;
 pub mod bench;
 pub mod cluster_study;
 pub mod fault_study;
+pub mod fleet_study;
 pub mod fig10;
 pub mod fig11;
 pub mod fig12;
@@ -87,7 +89,7 @@ impl Opts {
 pub const ALL: &[&str] = &[
     "table2", "fig7a", "fig7b", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13", "fig14",
     "headline", "ablations", "hybrid_study", "bench", "cluster_study", "tier_study", "plan_study",
-    "overload_study", "fault_study",
+    "overload_study", "fault_study", "fleet_study",
 ];
 
 /// Run one experiment by id; returns its tables (already printed).
@@ -112,6 +114,7 @@ pub fn run(id: &str, opts: &Opts) -> anyhow::Result<Vec<Table>> {
         "plan_study" => plan_study::run(opts)?,
         "overload_study" => overload_study::run(opts)?,
         "fault_study" => fault_study::run(opts)?,
+        "fleet_study" => fleet_study::run(opts)?,
         other => anyhow::bail!("unknown experiment {other:?} (try one of {ALL:?})"),
     };
     for t in &tables {

@@ -12,11 +12,12 @@ use anyhow::{Context, Result};
 use npusim::config::{ChipConfig, ModelConfig, PriorityMix, WorkloadConfig};
 use npusim::coordinator::{Coordinator, GenRequest};
 use npusim::experiments::{self, Opts};
-use npusim::parallel::plan::{self, DeploymentPlan};
+use npusim::parallel::plan::{self, ChipRole, DeploymentPlan};
 use npusim::serving::cluster::{
     simulate_cluster, simulate_cluster_requests, ClusterConfig, ClusterMetrics, RouterPolicy,
     ShedPolicy, ShedScope,
 };
+use npusim::serving::fleet::{ChipSpec, FleetSpec};
 use npusim::serving::faults::{FaultSchedule, RecoveryPolicy};
 use npusim::serving::pd_disagg::{simulate_disagg, DisaggConfig};
 use npusim::serving::pd_fusion::{simulate_fusion, FusionConfig};
@@ -60,6 +61,8 @@ fn dispatch(args: &Args) -> Result<()> {
                  npusim simulate --chips 4 --router prefix --prefix-cache --shared-prefix 1024\n      \
                  npusim simulate --chips 2 --priority-mix 0.2:0.3 --shed-policy drop --slo-ttft 1.0\n      \
                  npusim simulate --chips 4 --faults crash:0@0.5 --fault-recovery recover\n      \
+                 npusim simulate --chips 4 --roles p,p,d,d        # fleet PD disaggregation\n      \
+                 npusim simulate --chips 4 --fleet auto           # planner picks roles\n      \
                  npusim simulate --chips 4 --fault-seed 42 --chip-mttf 5.0 --shed-policy drop --shed-scope per-chip\n      \
                  npusim serve --prompt \"1,2,3,4\""
             );
@@ -288,7 +291,7 @@ fn apply_control_plane(args: &Args, mut cfg: ClusterConfig) -> Result<ClusterCon
                 "--fault-seed needs --chip-mttf <seconds> (per-chip mean time to failure)",
             )?;
             let horizon = args.opt_parse_or("fault-horizon", 10.0)?;
-            Some(FaultSchedule::seeded(seed, cfg.n_chips, horizon, mttf))
+            Some(FaultSchedule::seeded(seed, cfg.n_chips(), horizon, mttf))
         }
         (None, None) => None,
     };
@@ -323,6 +326,38 @@ fn apply_control_plane(args: &Args, mut cfg: ClusterConfig) -> Result<ClusterCon
         }
     }
     Ok(cfg)
+}
+
+/// `--roles p,d,g,...` (one entry per chip): a role-specialized fleet.
+/// Prefill chips get the compute-heavy silicon variant, decode chips the
+/// HBM-heavy one; general chips keep the CLI-selected chip.
+fn fleet_from_roles(
+    spec: &str,
+    n_chips: usize,
+    general: ChipConfig,
+    sched: SchedulerConfig,
+) -> Result<FleetSpec> {
+    let roles = spec
+        .split(',')
+        .map(|s| ChipRole::parse(s.trim()))
+        .collect::<Result<Vec<_>>>()?;
+    anyhow::ensure!(
+        roles.len() == n_chips,
+        "--roles lists {} chips but --chips is {n_chips}",
+        roles.len()
+    );
+    let chips = roles
+        .into_iter()
+        .map(|role| {
+            let hw = match role {
+                ChipRole::Prefill => ChipConfig::prefill_optimized(),
+                ChipRole::Decode => ChipConfig::decode_optimized(),
+                ChipRole::General => general.clone(),
+            };
+            ChipSpec::new(hw, sched).with_role(role)
+        })
+        .collect();
+    Ok(FleetSpec::new(chips))
 }
 
 fn print_cluster(name: &str, cm: &ClusterMetrics, slo_ttft_s: f64, freq_mhz: f64) {
@@ -557,6 +592,11 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     if n_chips <= 1 && (args.opt("router").is_some() || args.opt("migrate-gap").is_some()) {
         anyhow::bail!("--router/--migrate-gap need a multi-chip cluster: pass --chips N (N > 1)");
     }
+    // Fleet specialization (`--fleet auto` or `--roles p,d,...`) is
+    // cluster-frontend machinery as well.
+    if n_chips <= 1 && (args.opt("fleet").is_some() || args.opt("roles").is_some()) {
+        anyhow::bail!("--fleet/--roles need a multi-chip cluster: pass --chips N (N > 1)");
+    }
     // The overload control plane (admission shedding, SLO accounting)
     // lives in the cluster frontend, so its knobs need `--chips`.
     if n_chips <= 1
@@ -593,6 +633,11 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     // placement, pipeline depth and PD mode come from the searched (or
     // preset) plan instead of `--mode`/`--tp`/`--stages`.
     if let Some(which) = args.opt("plan") {
+        // Two planning paths cannot both decide the deployment.
+        anyhow::ensure!(
+            args.opt("fleet").is_none() && args.opt("roles").is_none(),
+            "--fleet/--roles conflict with --plan: use one planning path"
+        );
         // The plan owns the layout: a legacy layout flag alongside --plan
         // would be silently ignored, so reject the conflict outright
         // (the same stance `--router` without `--chips` takes above).
@@ -651,7 +696,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
                 ),
                 &cm,
                 cluster_cfg.slo_ttft_s,
-                cluster_cfg.chip.freq_mhz,
+                cluster_cfg.freq_mhz(),
             );
             return Ok(());
         }
@@ -672,8 +717,54 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 
     if n_chips > 1 {
         let router = RouterPolicy::parse(args.opt_or("router", "least"))?;
-        let mut cluster_cfg =
-            ClusterConfig::new(chip_cfg, n_chips, sched_cfg_from(args, mode)?, router);
+        anyhow::ensure!(
+            args.opt("fleet").is_none() || args.opt("roles").is_none(),
+            "--fleet plans chip roles itself: pass either --fleet auto or --roles, not both"
+        );
+        let (label, fleet) = if let Some(which) = args.opt("fleet") {
+            // The fleet planner owns each chip's scheduler layout, so the
+            // single-chip layout flags would be silently ignored alongside
+            // it (the same stance --plan takes).
+            for legacy in [
+                "mode",
+                "tp",
+                "stages",
+                "chunk",
+                "budget",
+                "prefill-cores",
+                "decode-cores",
+                "window",
+                "hysteresis",
+                "min-dwell",
+            ] {
+                anyhow::ensure!(
+                    args.opt(legacy).is_none(),
+                    "--{legacy} conflicts with --fleet: the fleet planner decides each \
+                     chip's layout"
+                );
+            }
+            anyhow::ensure!(which == "auto", "unknown fleet mode {which:?} (auto)");
+            let fp = plan::plan_fleet(
+                &chip_cfg,
+                &model,
+                &workload,
+                n_chips,
+                &npusim::sim::interconnect::InterconnectConfig::default(),
+            )?;
+            println!("fleet plan: {}", fp.summary());
+            (fp.name.clone(), FleetSpec::from_plan_fleet(&fp)?)
+        } else if let Some(spec) = args.opt("roles") {
+            (
+                format!("{mode}+roles[{spec}]"),
+                fleet_from_roles(spec, n_chips, chip_cfg, sched_cfg_from(args, mode)?)?,
+            )
+        } else {
+            (
+                mode.to_string(),
+                FleetSpec::homogeneous(chip_cfg, n_chips, sched_cfg_from(args, mode)?),
+            )
+        };
+        let mut cluster_cfg = ClusterConfig::builder(fleet).router(router).build();
         if let Some(gap) = args.opt_parse::<usize>("migrate-gap")? {
             cluster_cfg.migrate_load_gap = gap;
         }
@@ -682,16 +773,19 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             Some(reqs) => simulate_cluster_requests(&cluster_cfg, &model, reqs)?,
             None => simulate_cluster(&cluster_cfg, &model, &workload)?,
         };
+        if cm.handoffs > 0 {
+            println!("fleet handoffs: {} prefill→decode KV transfers", cm.handoffs);
+        }
         print_cluster(
             &format!(
-                "{mode} × {n_chips} chips / {} router / {} / {}",
+                "{label} × {n_chips} chips / {} router / {} / {}",
                 router.name(),
                 model.name,
                 workload.name
             ),
             &cm,
             cluster_cfg.slo_ttft_s,
-            cluster_cfg.chip.freq_mhz,
+            cluster_cfg.freq_mhz(),
         );
         return Ok(());
     }

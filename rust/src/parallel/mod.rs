@@ -25,4 +25,4 @@ pub mod plan;
 
 pub use partition::PartitionStrategy;
 pub use placement::{Placement, Region, TpGroup};
-pub use plan::{DeploymentPlan, PdMode};
+pub use plan::{ChipRole, DeploymentPlan, FleetChipPlan, FleetPlan, PdMode};

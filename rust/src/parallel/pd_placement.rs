@@ -84,6 +84,33 @@ impl PdAssignment {
     }
 }
 
+/// Split `n` fleet chips between prefill and decode roles so the slower
+/// stage of the prefill→decode pipeline is as fast as possible:
+/// minimise `max(prefill_work / n_p, decode_work / n_d)` over
+/// `n_p + n_d = n`, both at least 1. Work units are arbitrary but must be
+/// commensurable (the fleet planner passes analytic cycles). Ties prefer
+/// more decode chips — the memory-bound phase scales worse in practice.
+///
+/// The same bottleneck criterion the intra-chip [`assign`] ratio sweep
+/// (Fig. 11) optimises, lifted to whole chips.
+pub fn fleet_split(prefill_work: f64, decode_work: f64, n: usize) -> (usize, usize) {
+    assert!(n >= 2, "a disaggregated fleet needs at least 2 chips");
+    let p = prefill_work.max(0.0);
+    let d = decode_work.max(0.0);
+    let mut best = (1usize, n - 1);
+    let mut best_cost = f64::INFINITY;
+    for n_p in 1..n {
+        let n_d = n - n_p;
+        let cost = (p / n_p as f64).max(d / n_d as f64);
+        // Strict `<`: earlier (smaller n_p, larger n_d) splits win ties.
+        if cost < best_cost {
+            best_cost = cost;
+            best = (n_p, n_d);
+        }
+    }
+    best
+}
+
 /// Build a TP group from an arbitrary coordinate list, interleaving the
 /// order so logical ring neighbours stay within ~2 hops even on straight
 /// column segments.
@@ -365,6 +392,21 @@ mod tests {
     #[test]
     fn too_many_cores_rejected() {
         assert!(assign(4, 4, 12, 8, 4, 1, 4, PdPlacementPolicy::PpPrioritized).is_err());
+    }
+
+    #[test]
+    fn fleet_split_balances_the_bottleneck() {
+        // Equal work, 4 chips: 2/2.
+        assert_eq!(fleet_split(100.0, 100.0, 4), (2, 2));
+        // Prefill-heavy 3:1 on 4 chips: 3 prefill, 1 decode.
+        assert_eq!(fleet_split(300.0, 100.0, 4), (3, 1));
+        // Decode-heavy: decode gets the chips, prefill keeps >= 1.
+        assert_eq!(fleet_split(10.0, 1000.0, 4), (1, 3));
+        // Ties prefer decode chips.
+        assert_eq!(fleet_split(0.0, 0.0, 4), (1, 3));
+        // Both sides always staffed.
+        let (p, d) = fleet_split(1e9, 1e-9, 2);
+        assert_eq!((p, d), (1, 1));
     }
 
     #[test]

@@ -29,8 +29,10 @@ use crate::config::{ChipConfig, CoreConfig, ModelConfig, WorkloadConfig};
 use crate::memmgr::planner::{plan as sram_plan, PlanRequest, SramPlan};
 use crate::parallel::layout::PipelineLayout;
 use crate::parallel::partition::{partition_cost, PartitionStrategy};
-use crate::parallel::pd_placement::{assign, PdPlacementPolicy};
+use crate::parallel::pd_placement::{assign, fleet_split, PdPlacementPolicy};
 use crate::parallel::placement::Placement;
+use crate::sim::interconnect::InterconnectConfig;
+use crate::util::cli::CliEnum;
 
 /// Default fraction of a worker's post-weight HBM KV capacity carved out
 /// for the demoted-prefix tier (the former fixed 1/8 share, now a plan
@@ -717,6 +719,218 @@ pub fn auto_plan(
     Ok(cands)
 }
 
+/// Role of one chip in a fleet: cluster-level PD disaggregation assigns
+/// prompt processing and token generation to different chips, connected by
+/// the inter-chip fabric.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ChipRole {
+    /// Runs prompt processing only; streams finished KV to a decode chip.
+    Prefill,
+    /// Runs decode legs handed off (with their KV) by prefill chips.
+    Decode,
+    /// Serves whole requests end to end (homogeneous fleets).
+    #[default]
+    General,
+}
+
+impl CliEnum for ChipRole {
+    const WHAT: &'static str = "chip role";
+    const TABLE: &'static [(&'static str, &'static [&'static str], ChipRole)] = &[
+        ("prefill", &["p"], ChipRole::Prefill),
+        ("decode", &["d"], ChipRole::Decode),
+        ("general", &["g", "any"], ChipRole::General),
+    ];
+}
+
+impl ChipRole {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Self::parse_cli(s)
+    }
+
+    pub fn name(self) -> &'static str {
+        self.cli_name()
+    }
+}
+
+/// One chip of a planned fleet: its hardware variant, the deployment plan
+/// it runs, and its serving role.
+#[derive(Debug, Clone)]
+pub struct FleetChipPlan {
+    pub hw: ChipConfig,
+    pub plan: DeploymentPlan,
+    pub role: ChipRole,
+}
+
+/// A fleet-level deployment decision from [`plan_fleet`]: either a
+/// role-specialized heterogeneous fleet (compute-heavy prefill chips +
+/// HBM-heavy decode chips) or the best homogeneous fused fleet.
+#[derive(Debug, Clone)]
+pub struct FleetPlan {
+    pub name: String,
+    /// Per-chip assignment, prefill chips first (deterministic order).
+    pub chips: Vec<FleetChipPlan>,
+    /// Whether the fleet splits prefill and decode across chips.
+    pub disaggregated: bool,
+    /// Analytic fleet makespan estimate in cycles — the decision key.
+    pub est_cycles: f64,
+}
+
+impl FleetPlan {
+    pub fn n_prefill(&self) -> usize {
+        self.chips.iter().filter(|c| c.role == ChipRole::Prefill).count()
+    }
+
+    pub fn n_decode(&self) -> usize {
+        self.chips.iter().filter(|c| c.role == ChipRole::Decode).count()
+    }
+
+    /// One-line human summary for CLI output and experiment tables.
+    pub fn summary(&self) -> String {
+        let roles: Vec<String> = self
+            .chips
+            .iter()
+            .map(|c| format!("{}:{}", c.role.name(), c.hw.name))
+            .collect();
+        format!(
+            "{} ({} chips: {}) est {:.3e} cycles",
+            self.name,
+            self.chips.len(),
+            roles.join(", "),
+            self.est_cycles
+        )
+    }
+}
+
+/// The best homogeneous fused fleet: every chip a clone of `chip` running
+/// the top fused plan of [`auto_plan`] over its 1/n share of the workload.
+pub fn plan_fleet_fused(
+    chip: &ChipConfig,
+    model: &ModelConfig,
+    workload: &WorkloadConfig,
+    n_chips: usize,
+) -> anyhow::Result<FleetPlan> {
+    let n_chips = n_chips.max(1);
+    let mut wl_chip = workload.clone();
+    wl_chip.n_requests = workload.n_requests.div_ceil(n_chips).max(1);
+    let cands = auto_plan(chip, model, &wl_chip)?;
+    let fused = cands
+        .iter()
+        .find(|c| matches!(c.plan.mode, PdMode::Fusion | PdMode::Hybrid))
+        .ok_or_else(|| anyhow::anyhow!("no feasible fused plan for {}", chip.name))?;
+    Ok(FleetPlan {
+        name: format!("fleet-fused-x{n_chips}"),
+        chips: vec![
+            FleetChipPlan {
+                hw: chip.clone(),
+                plan: fused.plan.clone(),
+                role: ChipRole::General,
+            };
+            n_chips
+        ],
+        disaggregated: false,
+        est_cycles: fused.score.total_cycles,
+    })
+}
+
+/// The heterogeneous role-split fleet for `n_chips` (≥ 2): compute-heavy
+/// [`ChipConfig::prefill_optimized`] chips paired with HBM-heavy
+/// [`ChipConfig::decode_optimized`] chips, each running the fused shape
+/// that best serves its phase, with the chip count split by
+/// [`fleet_split`] and every request's prompt-KV handoff charged at the
+/// fabric's egress cost. Errors if no fused shape fits either variant.
+pub fn plan_fleet_disagg(
+    chip: &ChipConfig,
+    model: &ModelConfig,
+    workload: &WorkloadConfig,
+    n_chips: usize,
+    icn: &InterconnectConfig,
+) -> anyhow::Result<FleetPlan> {
+    anyhow::ensure!(n_chips >= 2, "a disaggregated fleet needs >= 2 chips");
+    let pre_hw = ChipConfig::prefill_optimized();
+    let dec_hw = ChipConfig::decode_optimized();
+    // Best fused shape on each specialized variant, rated by the phase it
+    // will actually run.
+    let best_by = |hw: &ChipConfig, key: fn(&PlanScore) -> f64| -> Option<PlanCandidate> {
+        enumerate_plans(hw, model, workload)
+            .into_iter()
+            .filter(|c| c.plan.mode == PdMode::Fusion)
+            .min_by(|a, b| {
+                key(&a.score)
+                    .total_cmp(&key(&b.score))
+                    .then_with(|| a.plan.name.cmp(&b.plan.name))
+            })
+    };
+    let pre_cand = best_by(&pre_hw, |s| s.prefill_cycles_per_token)
+        .ok_or_else(|| anyhow::anyhow!("no feasible fused plan for {}", pre_hw.name))?;
+    let dec_cand = best_by(&dec_hw, |s| s.decode_cycles_per_token)
+        .ok_or_else(|| anyhow::anyhow!("no feasible fused plan for {}", dec_hw.name))?;
+
+    let (prefill_tokens, decode_tokens, mean_in, _) = workload_tokens(workload);
+    let prefill_work = prefill_tokens * pre_cand.score.prefill_cycles_per_token;
+    let decode_work = decode_tokens * dec_cand.score.decode_cycles_per_token;
+    let (n_p, n_d) = fleet_split(prefill_work, decode_work, n_chips);
+
+    // Each request ships its whole prompt KV (plus the first generated
+    // token's) across the fabric once; transfers out of the same prefill
+    // chip serialise on its egress port.
+    let n_reqs = workload.n_requests.max(1) as f64;
+    let handoff_bytes = (mean_in + 1) * model.kv_bytes_per_token();
+    let handoff_cycles = icn.transfer_s(handoff_bytes) * chip.freq_mhz * 1e6;
+    let egress_per_chip = (n_reqs / n_p as f64) * handoff_cycles;
+    let est_disagg =
+        (prefill_work / n_p as f64 + egress_per_chip).max(decode_work / n_d as f64);
+
+    let mut pre_plan = pre_cand.plan.clone();
+    pre_plan.name = format!("fleet-prefill:{}", pre_plan.name);
+    let mut dec_plan = dec_cand.plan.clone();
+    // Decode chips must honour the seeded handoff prefix or they would
+    // recompute the whole prompt the prefill chip already processed.
+    dec_plan.prefix_cache = true;
+    dec_plan.name = format!("fleet-decode:{}", dec_plan.name);
+    let mut chips = Vec::with_capacity(n_chips);
+    for _ in 0..n_p {
+        chips.push(FleetChipPlan {
+            hw: pre_hw.clone(),
+            plan: pre_plan.clone(),
+            role: ChipRole::Prefill,
+        });
+    }
+    for _ in 0..n_d {
+        chips.push(FleetChipPlan {
+            hw: dec_hw.clone(),
+            plan: dec_plan.clone(),
+            role: ChipRole::Decode,
+        });
+    }
+    Ok(FleetPlan {
+        name: format!("fleet-disagg-p{n_p}d{n_d}"),
+        chips,
+        disaggregated: true,
+        est_cycles: est_disagg,
+    })
+}
+
+/// Extend [`auto_plan`] to a fleet of `n_chips`: evaluate the best
+/// homogeneous fused fleet ([`plan_fleet_fused`]) against the
+/// role-specialized heterogeneous fleet ([`plan_fleet_disagg`]) and pick
+/// whichever the analytic makespan estimate favours for this workload.
+pub fn plan_fleet(
+    chip: &ChipConfig,
+    model: &ModelConfig,
+    workload: &WorkloadConfig,
+    n_chips: usize,
+    icn: &InterconnectConfig,
+) -> anyhow::Result<FleetPlan> {
+    let homogeneous = plan_fleet_fused(chip, model, workload, n_chips)?;
+    if n_chips < 2 {
+        return Ok(homogeneous);
+    }
+    match plan_fleet_disagg(chip, model, workload, n_chips, icn) {
+        Ok(disagg) if disagg.est_cycles < homogeneous.est_cycles => Ok(disagg),
+        _ => Ok(homogeneous),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -800,6 +1014,67 @@ mod tests {
         }
         assert!(DeploymentPlan::preset("warp-drive").is_err());
         assert_eq!(DeploymentPlan::presets().len(), 6);
+    }
+
+    #[test]
+    fn chip_role_parses_uniformly() {
+        assert_eq!(ChipRole::parse("prefill").unwrap(), ChipRole::Prefill);
+        assert_eq!(ChipRole::parse("p").unwrap(), ChipRole::Prefill);
+        assert_eq!(ChipRole::parse("d").unwrap(), ChipRole::Decode);
+        assert_eq!(ChipRole::parse("any").unwrap(), ChipRole::General);
+        assert_eq!(ChipRole::Decode.name(), "decode");
+        let err = ChipRole::parse("oracle").unwrap_err().to_string();
+        assert_eq!(err, "unknown chip role \"oracle\" (prefill|decode|general)");
+    }
+
+    #[test]
+    fn fleet_planner_is_deterministic_and_well_formed() {
+        let chip = ChipConfig::large_core();
+        let model = ModelConfig::qwen3_4b();
+        let w = WorkloadConfig::sharegpt_like(16);
+        let icn = InterconnectConfig::default();
+        let a = plan_fleet(&chip, &model, &w, 4, &icn).unwrap();
+        let b = plan_fleet(&chip, &model, &w, 4, &icn).unwrap();
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.est_cycles, b.est_cycles);
+        assert_eq!(a.chips.len(), 4);
+        assert!(a.est_cycles.is_finite() && a.est_cycles > 0.0);
+        assert!(!a.summary().is_empty());
+        if a.disaggregated {
+            assert!(a.n_prefill() >= 1 && a.n_decode() >= 1);
+            assert_eq!(a.n_prefill() + a.n_decode(), 4);
+        } else {
+            assert!(a.chips.iter().all(|c| c.role == ChipRole::General));
+        }
+        // A single chip can never disaggregate.
+        let solo = plan_fleet(&chip, &model, &w, 1, &icn).unwrap();
+        assert!(!solo.disaggregated);
+        assert_eq!(solo.chips.len(), 1);
+    }
+
+    #[test]
+    fn forced_disagg_fleet_staffs_both_roles_with_specialized_silicon() {
+        let chip = ChipConfig::large_core();
+        let model = ModelConfig::qwen3_4b();
+        let w = WorkloadConfig::sharegpt_like(16);
+        let icn = InterconnectConfig::default();
+        let f = plan_fleet_disagg(&chip, &model, &w, 4, &icn).unwrap();
+        assert!(f.disaggregated);
+        assert_eq!(f.n_prefill() + f.n_decode(), 4);
+        for c in &f.chips {
+            match c.role {
+                ChipRole::Prefill => assert_eq!(c.hw.name, "prefill-opt-64"),
+                ChipRole::Decode => {
+                    assert_eq!(c.hw.name, "decode-opt-64");
+                    // Decode chips must honour handoff prefix seeds.
+                    assert!(c.plan.prefix_cache);
+                }
+                ChipRole::General => panic!("disagg fleet has no general chips"),
+            }
+        }
+        // Prefill chips come first, so role order is deterministic.
+        assert_eq!(f.chips[0].role, ChipRole::Prefill);
+        assert!(plan_fleet_disagg(&chip, &model, &w, 1, &icn).is_err());
     }
 
     #[test]

@@ -30,14 +30,24 @@
 use crate::config::{ChipConfig, ModelConfig, WorkloadConfig};
 use crate::memmgr::prefix::{keys_prefix, BlockKey, TierMatch};
 use crate::memmgr::KV_BLOCK_TOKENS;
+use crate::parallel::plan::ChipRole;
 use crate::serving::faults::{FaultKind, FaultSchedule, RecoveryPolicy};
-use crate::serving::metrics::{CacheStats, ControlStats, Metrics};
-use crate::serving::request::{self, Priority, Request};
+use crate::serving::fleet::FleetSpec;
+use crate::serving::metrics::{CacheStats, ControlStats, Metrics, RequestRecord};
+use crate::serving::request::{self, Prefix, Priority, Request};
 use crate::serving::scheduler::{Incomplete, Scheduler, SchedulerConfig};
 use crate::sim::chip::ChipSim;
 use crate::sim::interconnect::{Interconnect, InterconnectConfig, InterconnectStats};
+use crate::util::cli::CliEnum;
 use crate::util::units::{cycles_to_secs, secs_to_cycles, Cycle};
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
+
+/// High bit of a request id, reserved to tag the prefill leg of a
+/// fleet-disaggregated request so leg records cannot collide with real
+/// ids. The decode leg keeps the original id (the merged record reports
+/// under it), and its synthetic handoff [`Prefix`] uses the same bit to
+/// keep its conversation scope private to the request.
+const FLEET_LEG_BIT: u64 = 1 << 63;
 
 /// Frontend overload response (CLI `--shed-policy`). With
 /// [`ShedPolicy::None`] (the default) the admission path is bit-identical
@@ -55,22 +65,22 @@ pub enum ShedPolicy {
     Defer,
 }
 
+impl CliEnum for ShedPolicy {
+    const WHAT: &'static str = "shed policy";
+    const TABLE: &'static [(&'static str, &'static [&'static str], ShedPolicy)] = &[
+        ("none", &["off"], ShedPolicy::None),
+        ("drop", &["shed"], ShedPolicy::Drop),
+        ("defer", &[], ShedPolicy::Defer),
+    ];
+}
+
 impl ShedPolicy {
     pub fn parse(s: &str) -> anyhow::Result<Self> {
-        Ok(match s {
-            "none" | "off" => ShedPolicy::None,
-            "drop" | "shed" => ShedPolicy::Drop,
-            "defer" => ShedPolicy::Defer,
-            other => anyhow::bail!("unknown shed policy {other:?} (none|drop|defer)"),
-        })
+        Self::parse_cli(s)
     }
 
     pub fn name(&self) -> &'static str {
-        match self {
-            ShedPolicy::None => "none",
-            ShedPolicy::Drop => "drop",
-            ShedPolicy::Defer => "defer",
-        }
+        self.cli_name()
     }
 }
 
@@ -105,20 +115,21 @@ pub enum ShedScope {
     PerChip,
 }
 
+impl CliEnum for ShedScope {
+    const WHAT: &'static str = "shed scope";
+    const TABLE: &'static [(&'static str, &'static [&'static str], ShedScope)] = &[
+        ("global", &["cluster"], ShedScope::Global),
+        ("per-chip", &["chip", "perchip"], ShedScope::PerChip),
+    ];
+}
+
 impl ShedScope {
     pub fn parse(s: &str) -> anyhow::Result<Self> {
-        Ok(match s {
-            "global" | "cluster" => ShedScope::Global,
-            "per-chip" | "chip" | "perchip" => ShedScope::PerChip,
-            other => anyhow::bail!("unknown shed scope {other:?} (global|per-chip)"),
-        })
+        Self::parse_cli(s)
     }
 
     pub fn name(&self) -> &'static str {
-        match self {
-            ShedScope::Global => "global",
-            ShedScope::PerChip => "per-chip",
-        }
+        self.cli_name()
     }
 }
 
@@ -130,6 +141,15 @@ pub enum RouterPolicy {
     PrefixAware,
 }
 
+impl CliEnum for RouterPolicy {
+    const WHAT: &'static str = "router";
+    const TABLE: &'static [(&'static str, &'static [&'static str], RouterPolicy)] = &[
+        ("rr", &["round-robin", "roundrobin"], RouterPolicy::RoundRobin),
+        ("least", &["least-loaded", "ll"], RouterPolicy::LeastLoaded),
+        ("prefix", &["prefix-aware", "hit-aware"], RouterPolicy::PrefixAware),
+    ];
+}
+
 impl RouterPolicy {
     /// All policies, in sweep order.
     pub const ALL: [RouterPolicy; 3] = [
@@ -139,20 +159,11 @@ impl RouterPolicy {
     ];
 
     pub fn parse(s: &str) -> anyhow::Result<Self> {
-        Ok(match s {
-            "rr" | "round-robin" | "roundrobin" => RouterPolicy::RoundRobin,
-            "least" | "least-loaded" | "ll" => RouterPolicy::LeastLoaded,
-            "prefix" | "prefix-aware" | "hit-aware" => RouterPolicy::PrefixAware,
-            other => anyhow::bail!("unknown router {other:?} (rr|least|prefix)"),
-        })
+        Self::parse_cli(s)
     }
 
     pub fn name(&self) -> &'static str {
-        match self {
-            RouterPolicy::RoundRobin => "rr",
-            RouterPolicy::LeastLoaded => "least",
-            RouterPolicy::PrefixAware => "prefix",
-        }
+        self.cli_name()
     }
 
     /// Instantiate the policy. `migrate_load_gap` only affects
@@ -327,14 +338,17 @@ impl Router for PrefixAwareRouter {
 }
 
 /// Cluster topology + policy configuration.
+///
+/// Construction goes through [`ClusterBuilder`] (one typed path); the
+/// legacy homogeneous constructors ([`ClusterConfig::new`] and the
+/// `with_*` chain) are thin shims over it.
 #[derive(Debug, Clone)]
 pub struct ClusterConfig {
-    /// Per-chip hardware (the cluster is homogeneous; heterogeneous chips
-    /// are a ROADMAP follow-up).
-    pub chip: ChipConfig,
-    pub n_chips: usize,
-    /// Scheduler every chip runs ([`simulate_cluster_mixed`] overrides).
-    pub sched: SchedulerConfig,
+    /// Per-chip fleet description: hardware, scheduler, plan provenance,
+    /// and serving role. Role-specialized fleets switch the frontend into
+    /// cross-chip PD disaggregation (prefill legs on prefill chips, decode
+    /// legs handed off with their KV over the interconnect).
+    pub fleet: FleetSpec,
     pub router: RouterPolicy,
     pub interconnect: InterconnectConfig,
     /// Pending-work excess over the lightest chip above which the prefix
@@ -361,44 +375,63 @@ pub struct ClusterConfig {
 }
 
 impl ClusterConfig {
+    /// Start the one construction path: a typed builder over a fleet.
+    pub fn builder(fleet: FleetSpec) -> ClusterBuilder {
+        ClusterBuilder::new(fleet)
+    }
+
+    /// Legacy homogeneous constructor: `n_chips` clones of one
+    /// `(chip, sched)` pair. Thin shim over [`ClusterBuilder`].
     pub fn new(
         chip: ChipConfig,
         n_chips: usize,
         sched: SchedulerConfig,
         router: RouterPolicy,
     ) -> Self {
-        ClusterConfig {
-            chip,
-            n_chips: n_chips.max(1),
-            sched,
-            router,
-            interconnect: InterconnectConfig::default(),
-            migrate_load_gap: 8,
-            shed: ShedPolicy::default(),
-            queue_cap: 32,
-            slo_ttft_s: 2.0,
-            shed_scope: ShedScope::default(),
-            faults: None,
+        Self::builder(FleetSpec::homogeneous(chip, n_chips, sched))
+            .router(router)
+            .build()
+    }
+
+    /// Number of chips in the fleet.
+    pub fn n_chips(&self) -> usize {
+        self.fleet.n_chips()
+    }
+
+    /// The fleet's shared clock (chips are validated to one clock domain).
+    pub fn freq_mhz(&self) -> f64 {
+        self.fleet.freq_mhz()
+    }
+
+    /// Re-open this config as a builder (the `with_*` shims route through
+    /// it so every mutation shares the single construction path).
+    fn to_builder(self) -> ClusterBuilder {
+        ClusterBuilder {
+            fleet: self.fleet,
+            router: self.router,
+            interconnect: self.interconnect,
+            migrate_load_gap: self.migrate_load_gap,
+            shed: self.shed,
+            queue_cap: self.queue_cap,
+            slo_ttft_s: self.slo_ttft_s,
+            shed_scope: self.shed_scope,
+            faults: self.faults,
         }
     }
 
-    /// Enable SLO-aware overload control (builder style).
-    pub fn with_shed(mut self, shed: ShedPolicy, queue_cap: usize) -> Self {
-        self.shed = shed;
-        self.queue_cap = queue_cap.max(1);
-        self
+    /// Enable SLO-aware overload control (legacy shim).
+    pub fn with_shed(self, shed: ShedPolicy, queue_cap: usize) -> Self {
+        self.to_builder().shed(shed, queue_cap).build()
     }
 
-    /// Select the shed saturation scope (builder style).
-    pub fn with_shed_scope(mut self, scope: ShedScope) -> Self {
-        self.shed_scope = scope;
-        self
+    /// Select the shed saturation scope (legacy shim).
+    pub fn with_shed_scope(self, scope: ShedScope) -> Self {
+        self.to_builder().shed_scope(scope).build()
     }
 
-    /// Attach a deterministic fault schedule (builder style).
-    pub fn with_faults(mut self, faults: FaultSchedule) -> Self {
-        self.faults = Some(faults);
-        self
+    /// Attach a deterministic fault schedule (legacy shim).
+    pub fn with_faults(self, faults: FaultSchedule) -> Self {
+        self.to_builder().faults(faults).build()
     }
 
     /// Build a cluster where every chip runs the deployment a
@@ -415,6 +448,88 @@ impl ClusterConfig {
             SchedulerConfig::from_plan(plan)?,
             router,
         ))
+    }
+}
+
+/// The single typed construction path for [`ClusterConfig`]: defaults
+/// match the pre-redesign positional constructor exactly.
+#[derive(Debug, Clone)]
+pub struct ClusterBuilder {
+    fleet: FleetSpec,
+    router: RouterPolicy,
+    interconnect: InterconnectConfig,
+    migrate_load_gap: usize,
+    shed: ShedPolicy,
+    queue_cap: usize,
+    slo_ttft_s: f64,
+    shed_scope: ShedScope,
+    faults: Option<FaultSchedule>,
+}
+
+impl ClusterBuilder {
+    pub fn new(fleet: FleetSpec) -> Self {
+        ClusterBuilder {
+            fleet,
+            router: RouterPolicy::RoundRobin,
+            interconnect: InterconnectConfig::default(),
+            migrate_load_gap: 8,
+            shed: ShedPolicy::default(),
+            queue_cap: 32,
+            slo_ttft_s: 2.0,
+            shed_scope: ShedScope::default(),
+            faults: None,
+        }
+    }
+
+    pub fn router(mut self, router: RouterPolicy) -> Self {
+        self.router = router;
+        self
+    }
+
+    pub fn interconnect(mut self, icn: InterconnectConfig) -> Self {
+        self.interconnect = icn;
+        self
+    }
+
+    pub fn migrate_load_gap(mut self, gap: usize) -> Self {
+        self.migrate_load_gap = gap;
+        self
+    }
+
+    /// Enable SLO-aware overload control.
+    pub fn shed(mut self, shed: ShedPolicy, queue_cap: usize) -> Self {
+        self.shed = shed;
+        self.queue_cap = queue_cap.max(1);
+        self
+    }
+
+    pub fn shed_scope(mut self, scope: ShedScope) -> Self {
+        self.shed_scope = scope;
+        self
+    }
+
+    pub fn slo_ttft_s(mut self, slo: f64) -> Self {
+        self.slo_ttft_s = slo;
+        self
+    }
+
+    pub fn faults(mut self, faults: FaultSchedule) -> Self {
+        self.faults = Some(faults);
+        self
+    }
+
+    pub fn build(self) -> ClusterConfig {
+        ClusterConfig {
+            fleet: self.fleet,
+            router: self.router,
+            interconnect: self.interconnect,
+            migrate_load_gap: self.migrate_load_gap,
+            shed: self.shed,
+            queue_cap: self.queue_cap,
+            slo_ttft_s: self.slo_ttft_s,
+            shed_scope: self.shed_scope,
+            faults: self.faults,
+        }
     }
 }
 
@@ -483,6 +598,9 @@ pub struct ClusterMetrics {
     /// chip's [`Metrics`]; preemption/resume counters live per chip).
     pub control: ControlStats,
     pub interconnect: InterconnectStats,
+    /// Prefill→decode cross-chip KV handoffs the fleet frontend performed
+    /// (0 unless the fleet is role-specialized).
+    pub handoffs: u64,
     /// Fault-plane counters (all zero without a fault schedule).
     pub faults: FaultStats,
     /// One record per recovery dispatch, sorted by `(id, retries)`.
@@ -529,6 +647,9 @@ struct Transit {
     dst: usize,
     req: Request,
     keys: Vec<BlockKey>,
+    /// Whether this is a fleet decode leg (its synthetic handoff keys must
+    /// not be mistaken for a migratable trace prefix by the dedup check).
+    leg: bool,
 }
 
 /// One chip's fault-plane health as the frontend tracks it.
@@ -783,35 +904,43 @@ pub fn simulate_cluster(
 }
 
 /// Simulate an explicit (arrival-sorted) request list on the cluster,
-/// every chip running `cfg.sched`.
+/// each chip running the scheduler its fleet spec names.
 pub fn simulate_cluster_requests(
     cfg: &ClusterConfig,
     model: &ModelConfig,
     reqs: Vec<Request>,
 ) -> anyhow::Result<ClusterMetrics> {
-    let scheds: Vec<Box<dyn Scheduler>> = (0..cfg.n_chips.max(1))
-        .map(|_| cfg.sched.build())
-        .collect();
+    let scheds: Vec<Box<dyn Scheduler>> = cfg.fleet.chips.iter().map(|c| c.sched.build()).collect();
     simulate_cluster_mixed(cfg, model, reqs, scheds)
 }
 
 /// Simulate with an explicit per-chip scheduler list (mixed policies:
 /// e.g. chip 0 fused, chip 1 disaggregated). `scheds.len()` must equal
-/// `cfg.n_chips`; requests must be sorted by arrival time.
+/// the fleet size; requests must be sorted by arrival time.
 pub fn simulate_cluster_mixed(
     cfg: &ClusterConfig,
     model: &ModelConfig,
     reqs: Vec<Request>,
     mut scheds: Vec<Box<dyn Scheduler>>,
 ) -> anyhow::Result<ClusterMetrics> {
-    let n = cfg.n_chips.max(1);
+    cfg.fleet.validate()?;
+    let n = cfg.fleet.n_chips();
     anyhow::ensure!(
         scheds.len() == n,
         "cluster has {n} chips but {} schedulers",
         scheds.len()
     );
-    let freq = cfg.chip.freq_mhz;
-    let mut chips: Vec<ChipSim> = (0..n).map(|_| ChipSim::new(cfg.chip.clone())).collect();
+    anyhow::ensure!(
+        reqs.iter().all(|r| r.id & FLEET_LEG_BIT == 0),
+        "request ids must not use the reserved fleet-leg bit"
+    );
+    let freq = cfg.fleet.freq_mhz();
+    let mut chips: Vec<ChipSim> = cfg
+        .fleet
+        .chips
+        .iter()
+        .map(|c| ChipSim::new(c.hw.clone()))
+        .collect();
     let max_tokens = reqs.iter().map(|r| r.total_tokens()).max().unwrap_or(1);
     for (i, s) in scheds.iter_mut().enumerate() {
         s.prepare(&mut chips[i], model, max_tokens)?;
@@ -831,7 +960,10 @@ pub fn simulate_cluster_mixed(
         .as_ref()
         .map(|s| FaultRt::new(s.clone(), n, freq));
 
-    let total = reqs.len();
+    // `total` counts retirements the loop must wait for; each fleet
+    // handoff adds one (the decode leg retires separately from its
+    // prefill leg).
+    let mut total = reqs.len();
     let mut stream: VecDeque<Request> = reqs.into();
     let mut transit: Vec<Transit> = Vec::new();
     // `(request id, true arrival cycle, destination chip)` of every
@@ -843,6 +975,30 @@ pub fn simulate_cluster_mixed(
     let mut control = ControlStats::default();
     // Deferral retries by request id (Defer policy only).
     let mut deferred: HashMap<u64, u32> = HashMap::new();
+    // Fleet PD disaggregation: role-specialized fleets split each request
+    // into a prefill leg (routed among prefill-capable chips) and a decode
+    // leg created at prefill completion and shipped — with its prompt KV —
+    // to a decode-capable chip over the interconnect.
+    let fleet_disagg = cfg.fleet.is_disaggregated();
+    let prefill_ok: Vec<bool> = cfg
+        .fleet
+        .chips
+        .iter()
+        .map(|c| c.role != ChipRole::Decode)
+        .collect();
+    let decode_ok: Vec<bool> = cfg
+        .fleet
+        .chips
+        .iter()
+        .map(|c| c.role != ChipRole::Prefill)
+        .collect();
+    // Original request of each in-flight prefill leg, keyed by leg id.
+    let mut handoff: HashMap<u64, Request> = HashMap::new();
+    // Ids that entered the cluster as decode legs (role-aware recovery).
+    let mut decode_ids: HashSet<u64> = HashSet::new();
+    // Per-chip high-water mark into its record list (completion scan).
+    let mut rec_cursor = vec![0usize; n];
+    let mut handoffs = 0u64;
     let mut done = 0usize;
     let mut guard = 0u64;
 
@@ -900,10 +1056,17 @@ pub fn simulate_cluster_mixed(
             }
             // Chips the frontend believes are alive: all of them without
             // faults, and until the heartbeat discovers a crash even the
-            // dead one (that blind window is part of the fault model).
+            // dead one (that blind window is part of the fault model). In
+            // a role-specialized fleet, arrivals (prefill legs) route only
+            // among prefill-capable chips.
             let avail: Vec<usize> = match fault.as_ref() {
                 Some(f) => (0..n).filter(|&i| f.health[i].believed_up()).collect(),
                 None => (0..n).collect(),
+            };
+            let avail: Vec<usize> = if fleet_disagg {
+                avail.into_iter().filter(|&i| prefill_ok[i]).collect()
+            } else {
+                avail
             };
             if avail.is_empty() {
                 // Whole-cluster outage: hold the arrival for the next
@@ -944,7 +1107,10 @@ pub fn simulate_cluster_mixed(
                 _ => cfg.queue_cap.saturating_mul(2),
             };
             if shed_active && cfg.shed_scope == ShedScope::Global {
-                let overloaded = (0..n).all(|i| {
+                // Saturation ranges over the chips this arrival could
+                // actually route to (decode-role chips never take
+                // arrivals, so they cannot keep admission open).
+                let overloaded = (0..n).filter(|&i| !fleet_disagg || prefill_ok[i]).all(|i| {
                     let dead = fault
                         .as_ref()
                         .map_or(false, |f| !f.health[i].believed_up());
@@ -967,6 +1133,31 @@ pub fn simulate_cluster_mixed(
                     continue;
                 }
             }
+            // Fleet PD disaggregation: admit only the *prefill leg* here —
+            // the prompt plus the first generated token. The decode leg is
+            // created at the leg's completion and handed off, with its
+            // prompt KV, to a decode-capable chip over the interconnect.
+            // Single-token requests have no decode leg and run whole, as
+            // does a decode leg re-entering the stream via client
+            // resubmission (its prefill leg already completed once;
+            // splitting again would double-merge that leg's record).
+            let req = if fleet_disagg
+                && req.output_len >= 2
+                && req.id & FLEET_LEG_BIT == 0
+                && !decode_ids.contains(&req.id)
+            {
+                let mut leg = req;
+                leg.id = req.id | FLEET_LEG_BIT;
+                leg.output_len = 1;
+                if let Some(f) = fault.as_mut() {
+                    let a = *f.orig_arrival.get(&req.id).unwrap_or(&now);
+                    f.orig_arrival.entry(leg.id).or_insert(a);
+                }
+                handoff.insert(leg.id, req);
+                leg
+            } else {
+                req
+            };
             let keys = req.block_keys(KV_BLOCK_TOKENS);
             let limit = (req.input_len as u64).saturating_sub(1);
             let probe = router.wants_prefix() && !keys.is_empty();
@@ -1036,7 +1227,7 @@ pub fn simulate_cluster_mixed(
                     // paying a duplicate transfer of the same bytes.
                     let dup = transit
                         .iter()
-                        .find(|t| !t.keys.is_empty() && t.keys.first() == keys.first())
+                        .find(|t| !t.leg && !t.keys.is_empty() && t.keys.first() == keys.first())
                         .map(|t| (t.dst, t.landing));
                     // Piggybacked requests carry no seed keys (the
                     // original transit seeds the cache for both).
@@ -1067,6 +1258,7 @@ pub fn simulate_cluster_mixed(
                         dst,
                         req,
                         keys: transit_keys,
+                        leg: false,
                     });
                 }
                 _ => {
@@ -1194,10 +1386,10 @@ pub fn simulate_cluster_mixed(
                             }
                         }
                         // Cold restart: fresh chip, fresh scheduler, empty
-                        // caches. Mixed-scheduler clusters restart onto
-                        // the uniform `cfg.sched` template.
-                        chips[chip] = ChipSim::new(cfg.chip.clone());
-                        scheds[chip] = cfg.sched.build();
+                        // caches, rebuilt from this chip's own spec so a
+                        // heterogeneous fleet keeps its silicon and role.
+                        chips[chip] = ChipSim::new(cfg.fleet.chips[chip].hw.clone());
+                        scheds[chip] = cfg.fleet.chips[chip].sched.build();
                         scheds[chip].prepare(&mut chips[chip], model, max_tokens)?;
                         if f.health[chip].hbm_factor < 1.0 {
                             // An unexpired HBM throttle survives a reboot.
@@ -1228,6 +1420,28 @@ pub fn simulate_cluster_mixed(
                     generated,
                 } => {
                     let up: Vec<usize> = (0..n).filter(|&i| f.health[i].up()).collect();
+                    // Role-aware retry: a prefill leg (or a request whose
+                    // decode leg has not been created yet) goes back to a
+                    // prefill-capable chip, a decode leg to a
+                    // decode-capable one. If no capable chip is up, fall
+                    // back to any up chip rather than shed — a wrong-role
+                    // chip can still serve the request, just suboptimally.
+                    let up: Vec<usize> = if fleet_disagg && !up.is_empty() {
+                        let wants_prefill =
+                            req.id & FLEET_LEG_BIT != 0 || !decode_ids.contains(&req.id);
+                        let capable: Vec<usize> = up
+                            .iter()
+                            .copied()
+                            .filter(|&i| if wants_prefill { prefill_ok[i] } else { decode_ok[i] })
+                            .collect();
+                        if capable.is_empty() {
+                            up
+                        } else {
+                            capable
+                        }
+                    } else {
+                        up
+                    };
                     if up.is_empty() {
                         match f.restart_pending() {
                             // Hold the retry (same attempt) for the next
@@ -1293,6 +1507,77 @@ pub fn simulate_cluster_mixed(
         } else {
             let (_, i) = act.expect("act_t finite");
             done += scheds[i].step(&mut chips[i], model, &mut per_chip[i])?;
+            // Fleet PD disaggregation: scan records this step finished for
+            // prefill legs, and hand each one's decode leg — with its
+            // prompt KV — to a decode-capable chip over the interconnect.
+            if fleet_disagg {
+                while rec_cursor[i] < per_chip[i].records().len() {
+                    let r = per_chip[i].records()[rec_cursor[i]];
+                    rec_cursor[i] += 1;
+                    if r.id & FLEET_LEG_BIT == 0 {
+                        continue;
+                    }
+                    let Some(orig) = handoff.remove(&r.id) else {
+                        continue;
+                    };
+                    // The decode leg resumes the original request one
+                    // token in. Its synthetic conversation prefix covers
+                    // the whole prompt so the transit-seeded KV blocks
+                    // match at enqueue; the leg-tagged `conv_id` keeps
+                    // that coverage private to this request (genuine
+                    // group-prefix sharing still uses `group_id`).
+                    let mut leg = orig;
+                    leg.output_len = orig.output_len - 1;
+                    leg.prefix = Prefix {
+                        group_id: orig.prefix.group_id,
+                        group_tokens: orig.prefix.group_tokens,
+                        conv_id: orig.id | FLEET_LEG_BIT,
+                        conv_tokens: orig.input_len as u32,
+                    };
+                    // Least-loaded believed-up decode-capable chip, with
+                    // in-flight transfers counted toward their target; if
+                    // none is believed up, any up chip beats discarding a
+                    // finished prefill.
+                    let mut transit_load = vec![0usize; n];
+                    for t in &transit {
+                        transit_load[t.dst] += 1;
+                    }
+                    let believed = |j: usize| {
+                        fault.as_ref().map_or(true, |f| f.health[j].believed_up())
+                    };
+                    let dst = (0..n)
+                        .filter(|&j| decode_ok[j] && believed(j))
+                        .min_by_key(|&j| (scheds[j].pending_work() + transit_load[j], j))
+                        .or_else(|| {
+                            (0..n)
+                                .filter(|&j| believed(j))
+                                .min_by_key(|&j| {
+                                    (scheds[j].pending_work() + transit_load[j], j)
+                                })
+                        })
+                        .expect("the chip that just stepped is believed up");
+                    let keys = leg.block_keys(KV_BLOCK_TOKENS);
+                    // Prompt KV plus the first generated token's entry.
+                    let bytes = (orig.input_len as u64 + 1) * model.kv_bytes_per_token();
+                    let landing = icn.transfer(i, dst, bytes, act_t.max(r.finish));
+                    leg.arrival_s = cycles_to_secs(landing, freq);
+                    decode_ids.insert(orig.id);
+                    routed[dst] += 1;
+                    handoffs += 1;
+                    // The decode leg is a new unit of work the loop must
+                    // wait for (`total` grows only here, never at the
+                    // split, so a recovery-shed prefill leg cannot strand
+                    // the loop waiting on a leg that will never exist).
+                    total += 1;
+                    transit.push(Transit {
+                        landing,
+                        dst,
+                        req: leg,
+                        keys,
+                        leg: true,
+                    });
+                }
+            }
         }
     }
 
@@ -1314,6 +1599,24 @@ pub fn simulate_cluster_mixed(
             }
         }
     }
+    // Fold each prefill-leg record into its decode leg so every original
+    // request surfaces as exactly one record: decode-leg finish, true
+    // (earliest) arrival and first token, summed output tokens. A prefill
+    // leg whose decode leg was recovery-shed stays unmerged and is
+    // dropped — the request already counted once as shed. Runs after both
+    // rebase passes so the merge sees final arrivals.
+    if fleet_disagg {
+        let mut legs: Vec<RequestRecord> = Vec::new();
+        for m in per_chip.iter_mut() {
+            legs.extend(m.drain_records(|r| r.id & FLEET_LEG_BIT != 0));
+        }
+        legs.sort_by_key(|r| r.id);
+        for p in legs {
+            let id = p.id & !FLEET_LEG_BIT;
+            let merged = per_chip.iter_mut().any(|m| m.merge_handoff(id, &p));
+            let _ = merged; // unmerged = decode leg shed; drop the orphan
+        }
+    }
     for (i, s) in scheds.iter().enumerate() {
         let mut hw = CacheStats::default();
         s.collect_cache_stats(&mut hw);
@@ -1330,6 +1633,7 @@ pub fn simulate_cluster_mixed(
         migrations,
         control,
         interconnect: icn.stats(),
+        handoffs,
         faults: fault_stats,
         recovery,
         freq_mhz: freq,
@@ -1792,5 +2096,134 @@ mod tests {
             per_chip.shed_requests(),
             global.shed_requests()
         );
+    }
+
+    /// Satellite contract of the API redesign: the legacy positional
+    /// constructor and its `with_*` chain are thin shims over the builder,
+    /// so the two paths must agree field for field.
+    #[test]
+    fn legacy_constructors_equal_builder_field_for_field() {
+        let sched = SchedulerConfig::Fusion(FusionConfig::default());
+        let legacy = ClusterConfig::new(
+            ChipConfig::large_core(),
+            2,
+            sched,
+            RouterPolicy::LeastLoaded,
+        )
+        .with_shed(ShedPolicy::Drop, 4)
+        .with_shed_scope(ShedScope::PerChip)
+        .with_faults(FaultSchedule::parse("crash:0@0.005").unwrap());
+        let built = ClusterConfig::builder(FleetSpec::homogeneous(
+            ChipConfig::large_core(),
+            2,
+            sched,
+        ))
+        .router(RouterPolicy::LeastLoaded)
+        .shed(ShedPolicy::Drop, 4)
+        .shed_scope(ShedScope::PerChip)
+        .faults(FaultSchedule::parse("crash:0@0.005").unwrap())
+        .build();
+        assert_eq!(format!("{legacy:?}"), format!("{built:?}"));
+    }
+
+    fn fleet_disagg_cfg(n_prefill: usize, n_decode: usize) -> ClusterConfig {
+        use crate::serving::fleet::ChipSpec;
+        let sched = SchedulerConfig::Fusion(FusionConfig {
+            prefix_cache: true,
+            ..FusionConfig::default()
+        });
+        let mut chips = Vec::new();
+        for _ in 0..n_prefill {
+            chips.push(
+                ChipSpec::new(ChipConfig::prefill_optimized(), sched)
+                    .with_role(ChipRole::Prefill),
+            );
+        }
+        for _ in 0..n_decode {
+            chips.push(
+                ChipSpec::new(ChipConfig::decode_optimized(), sched)
+                    .with_role(ChipRole::Decode),
+            );
+        }
+        ClusterConfig::builder(FleetSpec::new(chips))
+            .router(RouterPolicy::LeastLoaded)
+            .build()
+    }
+
+    /// A role-specialized fleet splits every multi-token request into a
+    /// prefill leg and a decode leg joined by a cross-chip KV handoff; the
+    /// merged records must cover every request exactly once with its exact
+    /// token counts, and the handoff bytes must actually cross the fabric.
+    #[test]
+    fn fleet_disaggregation_hands_off_and_conserves_tokens() {
+        let model = ModelConfig::qwen3_4b();
+        let reqs = fault_reqs(6, 512, 8);
+        let cfg = fleet_disagg_cfg(1, 1);
+        let cm = simulate_cluster_requests(&cfg, &model, reqs).unwrap();
+        assert_eq!(cm.handoffs, 6);
+        assert!(cm.conserves(6), "completed {} shed {}", cm.n_requests(), cm.shed_requests());
+        // Prefill legs all admit on chip 0, decode legs all land on chip 1.
+        assert_eq!(cm.routed, vec![6, 6]);
+        assert!(cm.interconnect.transfers >= 6);
+        assert!(cm.interconnect.bytes > 0);
+        let agg = cm.aggregate();
+        let mut ids: Vec<u64> = agg.records().iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..6).collect::<Vec<u64>>(), "one merged record per request");
+        for r in agg.records() {
+            assert_eq!(r.input_tokens, 512, "{r:?}");
+            assert_eq!(r.output_tokens, 8, "{r:?}");
+            assert!(r.first_token >= r.arrival && r.finish >= r.first_token, "{r:?}");
+        }
+    }
+
+    /// Single-token outputs have no decode leg: they run whole on a
+    /// prefill-capable chip, and the fleet performs no handoff for them.
+    #[test]
+    fn fleet_disaggregation_keeps_single_token_requests_whole() {
+        let model = ModelConfig::qwen3_4b();
+        let reqs = fault_reqs(4, 256, 1);
+        let cfg = fleet_disagg_cfg(1, 1);
+        let cm = simulate_cluster_requests(&cfg, &model, reqs).unwrap();
+        assert_eq!(cm.handoffs, 0);
+        assert_eq!(cm.routed, vec![4, 0]);
+        assert!(cm.conserves(4));
+        for r in cm.aggregate().records() {
+            assert_eq!(r.output_tokens, 1, "{r:?}");
+        }
+    }
+
+    /// Crashing a decode chip mid-run must not break exactly-once token
+    /// conservation: stranded decode legs recover onto the surviving
+    /// decode chip and every merged record keeps its exact token counts.
+    #[test]
+    fn decode_chip_crash_conserves_tokens_across_handoff() {
+        let model = ModelConfig::qwen3_4b();
+        let reqs = fault_reqs(8, 512, 16);
+        let mut cfg = fleet_disagg_cfg(1, 2);
+        // Chip 1 is the first decode chip; crash it while decode legs run.
+        cfg = cfg.with_faults(
+            FaultSchedule::parse("crash:1@0.01").unwrap().with_retries(8, 0.002),
+        );
+        let cm = simulate_cluster_requests(&cfg, &model, reqs).unwrap();
+        assert_eq!(cm.faults.crashes, 1);
+        assert!(cm.conserves(8), "completed {} shed {}", cm.n_requests(), cm.shed_requests());
+        assert!(cm.handoffs >= 8, "every request hands off once: {}", cm.handoffs);
+        for r in cm.aggregate().records() {
+            assert_eq!(r.input_tokens, 512, "{r:?}");
+            assert_eq!(r.output_tokens, 16, "{r:?}");
+            assert!(r.first_token >= r.arrival && r.finish >= r.first_token, "{r:?}");
+        }
+    }
+
+    /// Reserved-bit hygiene: the driver rejects trace ids that collide
+    /// with the fleet leg tag instead of silently mis-merging them.
+    #[test]
+    fn driver_rejects_ids_using_the_reserved_leg_bit() {
+        let model = ModelConfig::qwen3_4b();
+        let mut reqs = fault_reqs(1, 64, 2);
+        reqs[0].id |= FLEET_LEG_BIT;
+        let cfg = fleet_disagg_cfg(1, 1);
+        assert!(simulate_cluster_requests(&cfg, &model, reqs).is_err());
     }
 }

@@ -185,7 +185,13 @@ impl FaultSchedule {
                     let duration_s = num("duration")?;
                     FaultKind::HbmThrottle { factor, duration_s }
                 }
-                other => anyhow::bail!("unknown fault kind `{other}` (crash|link|hbm)"),
+                other => {
+                    return Err(crate::util::cli::unknown_variant(
+                        "fault kind",
+                        other,
+                        "crash|link|hbm",
+                    ))
+                }
             };
             if let FaultKind::LinkDegrade { factor, .. } | FaultKind::HbmThrottle { factor, .. } =
                 kind

@@ -1,0 +1,207 @@
+//! Per-chip fleet description for the cluster layer.
+//!
+//! The pre-redesign `ClusterConfig` cloned one `(ChipConfig,
+//! SchedulerConfig)` across N identical chips. A [`FleetSpec`] instead
+//! describes each chip individually — its hardware variant, the scheduler
+//! it runs, the deployment plan that scheduler was projected from, and its
+//! serving [`ChipRole`] — which is what cluster-level PD disaggregation
+//! over heterogeneous chips needs: compute-heavy prefill chips streaming
+//! finished KV to HBM-heavy decode chips.
+
+use crate::config::ChipConfig;
+use crate::parallel::plan::{ChipRole, DeploymentPlan, FleetPlan};
+use crate::serving::scheduler::SchedulerConfig;
+
+/// One chip of the fleet.
+#[derive(Debug, Clone)]
+pub struct ChipSpec {
+    /// Hardware configuration of this chip.
+    pub hw: ChipConfig,
+    /// Scheduler the chip runs (also the template a restart rebuilds from).
+    pub sched: SchedulerConfig,
+    /// Provenance: the deployment plan `sched` was projected from, if any.
+    pub plan: Option<DeploymentPlan>,
+    /// Serving role in the fleet.
+    pub role: ChipRole,
+}
+
+impl ChipSpec {
+    /// A general-purpose chip (no plan provenance).
+    pub fn new(hw: ChipConfig, sched: SchedulerConfig) -> Self {
+        ChipSpec {
+            hw,
+            sched,
+            plan: None,
+            role: ChipRole::General,
+        }
+    }
+
+    /// Project a chip spec from a deployment plan (keeps the plan as
+    /// provenance).
+    pub fn from_plan(hw: ChipConfig, plan: &DeploymentPlan) -> anyhow::Result<Self> {
+        let sched = SchedulerConfig::from_plan(plan)?;
+        Ok(ChipSpec {
+            hw,
+            sched,
+            plan: Some(plan.clone()),
+            role: ChipRole::General,
+        })
+    }
+
+    pub fn with_role(mut self, role: ChipRole) -> Self {
+        self.role = role;
+        self
+    }
+}
+
+/// The whole fleet, one [`ChipSpec`] per chip.
+#[derive(Debug, Clone)]
+pub struct FleetSpec {
+    pub chips: Vec<ChipSpec>,
+}
+
+impl FleetSpec {
+    pub fn new(chips: Vec<ChipSpec>) -> Self {
+        FleetSpec { chips }
+    }
+
+    /// The legacy shape: `n` identical general-purpose chips.
+    pub fn homogeneous(hw: ChipConfig, n: usize, sched: SchedulerConfig) -> Self {
+        FleetSpec {
+            chips: (0..n.max(1)).map(|_| ChipSpec::new(hw.clone(), sched)).collect(),
+        }
+    }
+
+    /// Materialize a planned fleet ([`crate::parallel::plan::plan_fleet`])
+    /// into runnable chip specs.
+    pub fn from_plan_fleet(fleet: &FleetPlan) -> anyhow::Result<Self> {
+        let chips = fleet
+            .chips
+            .iter()
+            .map(|c| Ok(ChipSpec::from_plan(c.hw.clone(), &c.plan)?.with_role(c.role)))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(FleetSpec { chips })
+    }
+
+    pub fn n_chips(&self) -> usize {
+        self.chips.len()
+    }
+
+    /// The fleet's shared clock (validated uniform).
+    pub fn freq_mhz(&self) -> f64 {
+        self.chips.first().map(|c| c.hw.freq_mhz).unwrap_or(0.0)
+    }
+
+    /// Chips that may run prompt processing (prefill or general role).
+    pub fn prefill_capable(&self) -> Vec<usize> {
+        (0..self.chips.len())
+            .filter(|&i| self.chips[i].role != ChipRole::Decode)
+            .collect()
+    }
+
+    /// Chips that may run decode legs (decode or general role).
+    pub fn decode_capable(&self) -> Vec<usize> {
+        (0..self.chips.len())
+            .filter(|&i| self.chips[i].role != ChipRole::Prefill)
+            .collect()
+    }
+
+    /// Whether any chip is role-specialized: if so, the cluster frontend
+    /// splits each request into a prefill leg and a decode leg with a
+    /// cross-chip KV handoff between them.
+    pub fn is_disaggregated(&self) -> bool {
+        self.chips.iter().any(|c| c.role != ChipRole::General)
+    }
+
+    /// Structural checks the cluster driver relies on: a non-empty fleet,
+    /// one shared clock domain (the event loop and the fabric count cycles
+    /// in it), valid chips, and — when role-specialized — at least one
+    /// chip on each side of the prefill→decode handoff.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.chips.is_empty(), "empty fleet");
+        let freq = self.chips[0].hw.freq_mhz;
+        for (i, c) in self.chips.iter().enumerate() {
+            c.hw.validate()?;
+            anyhow::ensure!(
+                c.hw.freq_mhz == freq,
+                "fleet chips must share one clock domain: chip {i} runs {} MHz, chip 0 runs {freq} MHz",
+                c.hw.freq_mhz
+            );
+        }
+        if self.is_disaggregated() {
+            anyhow::ensure!(
+                !self.prefill_capable().is_empty(),
+                "role-specialized fleet has no prefill-capable chip"
+            );
+            anyhow::ensure!(
+                !self.decode_capable().is_empty(),
+                "role-specialized fleet has no decode-capable chip"
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serving::pd_fusion::FusionConfig;
+
+    fn sched() -> SchedulerConfig {
+        SchedulerConfig::Fusion(FusionConfig::default())
+    }
+
+    #[test]
+    fn homogeneous_fleet_matches_legacy_shape() {
+        let f = FleetSpec::homogeneous(ChipConfig::large_core(), 4, sched());
+        assert_eq!(f.n_chips(), 4);
+        assert!(!f.is_disaggregated());
+        assert_eq!(f.prefill_capable(), vec![0, 1, 2, 3]);
+        assert_eq!(f.decode_capable(), vec![0, 1, 2, 3]);
+        f.validate().unwrap();
+        // Zero chips clamps to one, like the legacy `n_chips.max(1)`.
+        assert_eq!(FleetSpec::homogeneous(ChipConfig::large_core(), 0, sched()).n_chips(), 1);
+    }
+
+    #[test]
+    fn role_split_fleet_partitions_capabilities() {
+        let f = FleetSpec::new(vec![
+            ChipSpec::new(ChipConfig::prefill_optimized(), sched()).with_role(ChipRole::Prefill),
+            ChipSpec::new(ChipConfig::prefill_optimized(), sched()).with_role(ChipRole::Prefill),
+            ChipSpec::new(ChipConfig::decode_optimized(), sched()).with_role(ChipRole::Decode),
+            ChipSpec::new(ChipConfig::large_core(), sched()),
+        ]);
+        assert!(f.is_disaggregated());
+        assert_eq!(f.prefill_capable(), vec![0, 1, 3]);
+        assert_eq!(f.decode_capable(), vec![2, 3]);
+        f.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_broken_fleets() {
+        // Empty.
+        assert!(FleetSpec::new(vec![]).validate().is_err());
+        // Mixed clock domains.
+        let mut slow = ChipConfig::large_core();
+        slow.freq_mhz = 250.0;
+        let f = FleetSpec::new(vec![
+            ChipSpec::new(ChipConfig::large_core(), sched()),
+            ChipSpec::new(slow, sched()),
+        ]);
+        assert!(f.validate().is_err());
+        // All-prefill disaggregated fleet: nobody can decode.
+        let f = FleetSpec::new(vec![
+            ChipSpec::new(ChipConfig::large_core(), sched()).with_role(ChipRole::Prefill),
+            ChipSpec::new(ChipConfig::large_core(), sched()).with_role(ChipRole::Prefill),
+        ]);
+        assert!(f.validate().is_err());
+    }
+
+    #[test]
+    fn chip_spec_from_plan_keeps_provenance() {
+        let plan = DeploymentPlan::fusion_default();
+        let s = ChipSpec::from_plan(ChipConfig::large_core(), &plan).unwrap();
+        assert_eq!(s.plan.as_ref().unwrap().name, plan.name);
+        assert_eq!(s.role, ChipRole::General);
+    }
+}

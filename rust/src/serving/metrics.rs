@@ -217,6 +217,43 @@ impl Metrics {
         }
     }
 
+    /// Remove and return every record matching `pred` (order preserved).
+    /// The cluster's fleet handoff uses this to pull completed prefill-leg
+    /// records out of the per-chip rollups before merging them into their
+    /// decode legs.
+    pub fn drain_records(&mut self, mut pred: impl FnMut(&RequestRecord) -> bool) -> Vec<RequestRecord> {
+        let mut out = Vec::new();
+        self.records.retain(|r| {
+            if pred(r) {
+                out.push(*r);
+                false
+            } else {
+                true
+            }
+        });
+        out
+    }
+
+    /// Fold a completed prefill-leg record into the decode-leg record with
+    /// `id` (fleet handoff): the merged record keeps the decode finish,
+    /// takes the prefill leg's first token and the earlier arrival, and
+    /// sums the output tokens — so TTFT counts from the true frontend
+    /// arrival to the token the prefill chip emitted, and TBT absorbs the
+    /// cross-chip KV-transfer gap. Returns whether `id` was found.
+    pub fn merge_handoff(&mut self, id: u64, prefill: &RequestRecord) -> bool {
+        match self.records.iter_mut().find(|r| r.id == id) {
+            Some(r) => {
+                r.arrival = r.arrival.min(prefill.arrival);
+                r.first_token = r.first_token.min(prefill.first_token);
+                debug_assert!(r.first_token >= r.arrival && r.finish >= r.first_token, "{r:?}");
+                r.input_tokens = prefill.input_tokens;
+                r.output_tokens += prefill.output_tokens;
+                true
+            }
+            None => false,
+        }
+    }
+
     /// Fold another run's records and cache counters into this rollup
     /// (cluster aggregation; both sides must share one clock frequency).
     pub fn absorb(&mut self, other: &Metrics) {
@@ -399,6 +436,34 @@ mod tests {
         m.record(rec(2, 0, 500_000_000, 600_000_000, 2)); // ttft 1s
         assert!((m.slo_attainment(0.1, 0.5) - 0.5).abs() < 1e-9);
         assert!((m.slo_attainment(2.0, 0.5) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn drain_records_removes_matches_in_order() {
+        let mut m = Metrics::new(500.0);
+        m.record(rec(1, 0, 10, 20, 1));
+        m.record(rec(1 << 63 | 2, 0, 10, 20, 1));
+        m.record(rec(3, 0, 10, 20, 1));
+        m.record(rec(1 << 63 | 4, 0, 10, 20, 1));
+        let legs = m.drain_records(|r| r.id & (1 << 63) != 0);
+        assert_eq!(legs.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1 << 63 | 2, 1 << 63 | 4]);
+        assert_eq!(m.records().iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3]);
+    }
+
+    #[test]
+    fn merge_handoff_folds_prefill_leg_into_decode_leg() {
+        let mut m = Metrics::new(500.0);
+        // Decode leg: admitted at KV landing (5000), 7 tokens generated.
+        m.record(rec(9, 5000, 6000, 13_000, 7));
+        // Prefill leg: true arrival 0, first token at 3000, 1 token.
+        let p = rec(1 << 63 | 9, 0, 3000, 3500, 1);
+        assert!(m.merge_handoff(9, &p));
+        let r = m.records()[0];
+        assert_eq!(r.arrival, 0);
+        assert_eq!(r.first_token, 3000);
+        assert_eq!(r.finish, 13_000);
+        assert_eq!(r.output_tokens, 8);
+        assert!(!m.merge_handoff(42, &p));
     }
 
     #[test]

@@ -14,15 +14,21 @@
 //!   NoC KV transfer and optional heterogeneous decode cores (§4.3.1);
 //!   config + wrappers.
 //! - [`metrics`]: TTFT / TBT / e2e / throughput / SLO attainment.
+//! - [`fleet`]: per-chip fleet description (`ChipSpec` hardware +
+//!   scheduler + role, `FleetSpec`) — the cluster's construction input,
+//!   including role-specialized heterogeneous fleets.
 //! - [`cluster`]: the multi-chip layer — N `ChipSim`s behind a streamed
 //!   admission frontend and a pluggable router (round-robin, least-loaded,
-//!   prefix-hit-aware with charged cross-chip KV migration).
+//!   prefix-hit-aware with charged cross-chip KV migration); when the
+//!   fleet is role-specialized it splits each request into a prefill leg
+//!   and a decode leg with a cross-chip KV handoff between them.
 //! - [`faults`]: deterministic fault injection (chip crashes, link
 //!   degradation, HBM throttling) and the recovery-policy knobs the
 //!   cluster frontend replays them with.
 
 pub mod cluster;
 pub mod faults;
+pub mod fleet;
 pub mod layout;
 pub mod metrics;
 pub mod pd_disagg;
@@ -33,10 +39,12 @@ pub mod trace;
 pub mod worker;
 
 pub use cluster::{
-    simulate_cluster, simulate_cluster_mixed, simulate_cluster_requests, ClusterConfig,
-    ClusterMetrics, FaultStats, RecoveryRecord, Router, RouterPolicy, ShedPolicy, ShedScope,
+    simulate_cluster, simulate_cluster_mixed, simulate_cluster_requests, ClusterBuilder,
+    ClusterConfig, ClusterMetrics, FaultStats, RecoveryRecord, Router, RouterPolicy, ShedPolicy,
+    ShedScope,
 };
 pub use faults::{FaultEvent, FaultKind, FaultSchedule, RecoveryPolicy};
+pub use fleet::{ChipSpec, FleetSpec};
 pub use layout::PipelineLayout;
 pub use metrics::{CacheStats, Metrics, RequestRecord};
 pub use pd_disagg::{simulate_disagg, DisaggConfig};

@@ -38,6 +38,15 @@ impl Default for InterconnectConfig {
     }
 }
 
+impl InterconnectConfig {
+    /// Analytic contention-free transfer time in seconds: base latency
+    /// plus serialisation at nominal bandwidth. Used by the fleet planner
+    /// to price prefill→decode KV handoffs without building a fabric.
+    pub fn transfer_s(&self, bytes: u64) -> f64 {
+        self.latency_us * 1e-6 + bytes as f64 / (self.bw_gbps.max(1e-9) * 1e9)
+    }
+}
+
 /// Aggregate fabric statistics for one cluster run.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct InterconnectStats {
@@ -212,6 +221,15 @@ mod tests {
             clean.transfer(0, 2, 128_000, 10_000),
             "restored link must be bit-exact once its backlog clears"
         );
+    }
+
+    #[test]
+    fn analytic_transfer_s_matches_fabric_cycles() {
+        // 128_000 B at 64 GB/s = 2 us serialisation + 2 us latency = 4 us;
+        // at 500 MHz that is the fabric's 2000 cycles.
+        let cfg = InterconnectConfig::default();
+        let s = cfg.transfer_s(128_000);
+        assert!((s * 500e6 - 2000.0).abs() < 1e-6, "s={s}");
     }
 
     #[test]

@@ -5,6 +5,51 @@
 
 use std::collections::BTreeMap;
 
+/// Uniform unknown-variant error shared by [`CliEnum`] and ad-hoc flag
+/// parsers whose variants carry payloads (e.g. fault-event kinds).
+pub fn unknown_variant(what: &str, got: &str, variants: &str) -> anyhow::Error {
+    anyhow::anyhow!("unknown {what} {got:?} ({variants})")
+}
+
+/// A small closed CLI enum: one table of `(canonical name, aliases, value)`
+/// per variant drives flag parsing, `--help` variant lists, and error
+/// messages uniformly, instead of each enum hand-rolling a stringly-typed
+/// `parse`/`name` pair.
+pub trait CliEnum: Sized + Copy + PartialEq + 'static {
+    /// What the flag selects, for error messages (e.g. `"router"`).
+    const WHAT: &'static str;
+    /// One row per variant: canonical name, accepted aliases, value.
+    const TABLE: &'static [(&'static str, &'static [&'static str], Self)];
+
+    /// `a|b|c` list of canonical names (help text and error messages).
+    fn variants() -> String {
+        Self::TABLE
+            .iter()
+            .map(|(n, _, _)| *n)
+            .collect::<Vec<_>>()
+            .join("|")
+    }
+
+    /// Parse a flag value; canonical names and aliases both accepted.
+    fn parse_cli(s: &str) -> anyhow::Result<Self> {
+        for (name, aliases, v) in Self::TABLE {
+            if *name == s || aliases.contains(&s) {
+                return Ok(*v);
+            }
+        }
+        Err(unknown_variant(Self::WHAT, s, &Self::variants()))
+    }
+
+    /// Canonical name of this variant.
+    fn cli_name(self) -> &'static str {
+        Self::TABLE
+            .iter()
+            .find(|(_, _, v)| *v == self)
+            .map(|(n, _, _)| *n)
+            .expect("every variant has a TABLE row")
+    }
+}
+
 /// Parsed arguments: a subcommand, positional args, and `--key value` opts.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
@@ -128,5 +173,34 @@ mod tests {
         let a = sv(&["x", "--fast", "--tp", "4"]);
         assert!(a.flag("fast"));
         assert_eq!(a.opt("tp"), Some("4"));
+    }
+
+    #[derive(Debug, Clone, Copy, PartialEq)]
+    enum Fruit {
+        Apple,
+        Pear,
+    }
+
+    impl CliEnum for Fruit {
+        const WHAT: &'static str = "fruit";
+        const TABLE: &'static [(&'static str, &'static [&'static str], Fruit)] = &[
+            ("apple", &["a"], Fruit::Apple),
+            ("pear", &[], Fruit::Pear),
+        ];
+    }
+
+    #[test]
+    fn cli_enum_parses_names_and_aliases() {
+        assert_eq!(Fruit::parse_cli("apple").unwrap(), Fruit::Apple);
+        assert_eq!(Fruit::parse_cli("a").unwrap(), Fruit::Apple);
+        assert_eq!(Fruit::parse_cli("pear").unwrap(), Fruit::Pear);
+        assert_eq!(Fruit::Pear.cli_name(), "pear");
+        assert_eq!(Fruit::variants(), "apple|pear");
+    }
+
+    #[test]
+    fn cli_enum_error_lists_variants() {
+        let err = Fruit::parse_cli("mango").unwrap_err().to_string();
+        assert_eq!(err, "unknown fruit \"mango\" (apple|pear)");
     }
 }

@@ -192,6 +192,38 @@ fn mixed_cluster_hit_rate_denominator_scopes_to_cache_enabled_admissions() {
 }
 
 #[test]
+fn homogeneous_fleet_spec_is_bit_identical_to_the_legacy_constructor() {
+    // The FleetSpec redesign must be a pure refactor for homogeneous
+    // fleets: on the pinned router-determinism vectors, a cluster built
+    // through `ClusterConfig::builder(FleetSpec::homogeneous(...))` must
+    // replay byte-for-byte what the legacy `(chip, n, sched, router)`
+    // constructor produces — same routing histogram, same per-chip
+    // cycle-level timelines.
+    use npusim::serving::fleet::FleetSpec;
+    let w = shared_workload(10, 17);
+    let model = ModelConfig::qwen3_4b();
+    for router in RouterPolicy::ALL {
+        let legacy = ClusterConfig::new(ChipConfig::large_core(), 2, fusion_cached(), router);
+        let fleet = ClusterConfig::builder(FleetSpec::homogeneous(
+            ChipConfig::large_core(),
+            2,
+            fusion_cached(),
+        ))
+        .router(router)
+        .build();
+        let a = summarize(&cluster::simulate_cluster(&legacy, &model, &w).unwrap());
+        let b = summarize(&cluster::simulate_cluster(&fleet, &model, &w).unwrap());
+        assert!(!a.is_empty());
+        assert_eq!(
+            a,
+            b,
+            "{} router: homogeneous FleetSpec diverged from the legacy constructor",
+            router.name()
+        );
+    }
+}
+
+#[test]
 fn migrations_are_charged_on_the_interconnect() {
     // Force migration pressure: a tiny load gap and a strongly skewed
     // prefix workload. If any migration happens, interconnect bytes must

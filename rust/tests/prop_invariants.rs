@@ -226,6 +226,81 @@ fn shed_requests_never_complete_and_counts_conserve() {
 }
 
 #[test]
+fn fleet_disaggregation_preserves_per_request_token_counts() {
+    use npusim::parallel::plan::ChipRole;
+    use npusim::serving::fleet::{ChipSpec, FleetSpec};
+    use std::sync::atomic::{AtomicU64, Ordering};
+    let total_handoffs = AtomicU64::new(0);
+    check("fleet handoff conservation", 8, |rng| {
+        // Mixed prompt/output lengths (including single-token outputs,
+        // which must stay whole on the prefill side) over a random
+        // prefill/decode staffing split.
+        let n = rng.range(4, 12);
+        let mut w = WorkloadConfig::fixed_ratio(256, 8, n);
+        w.input_len = LenDist::Uniform(64, 512);
+        w.output_len = LenDist::Uniform(1, 32);
+        let w = w
+            .with_arrival(ArrivalProcess::Poisson {
+                rate: rng.range_f64(2.0, 40.0),
+            })
+            .with_seed(rng.next_u64());
+        let reqs = request::generate(&w);
+        let mut expect: Vec<(u64, u64, u64)> = reqs
+            .iter()
+            .map(|r| (r.id, r.input_len as u64, r.output_len as u64))
+            .collect();
+        expect.sort_unstable();
+        let sched = SchedulerConfig::Fusion(FusionConfig {
+            tp: 16,
+            stages: 2,
+            prefix_cache: true,
+            ..FusionConfig::default()
+        });
+        let (n_prefill, n_decode) = *rng.choose(&[(1usize, 1usize), (2, 1), (1, 2)]);
+        let mut chips = Vec::new();
+        for _ in 0..n_prefill {
+            chips.push(
+                ChipSpec::new(ChipConfig::prefill_optimized(), sched).with_role(ChipRole::Prefill),
+            );
+        }
+        for _ in 0..n_decode {
+            chips.push(
+                ChipSpec::new(ChipConfig::decode_optimized(), sched).with_role(ChipRole::Decode),
+            );
+        }
+        let cfg = ClusterConfig::builder(FleetSpec::new(chips))
+            .router(RouterPolicy::LeastLoaded)
+            .build();
+        let cm =
+            cluster::simulate_cluster_requests(&cfg, &ModelConfig::qwen3_4b(), reqs).unwrap();
+        // No shed policy is armed, so exactly-once means every offered
+        // request completes...
+        assert!(cm.conserves(expect.len()));
+        assert_eq!(cm.shed_requests(), 0);
+        // ...and each merged record carries exactly its offered token
+        // counts: the prefill→decode split neither loses, duplicates,
+        // nor re-attributes a single token.
+        let agg = cm.aggregate();
+        let mut got: Vec<(u64, u64, u64)> = agg
+            .records()
+            .iter()
+            .map(|r| (r.id, r.input_tokens, r.output_tokens))
+            .collect();
+        got.sort_unstable();
+        assert_eq!(got, expect, "token counts drifted across the fleet handoff");
+        for r in agg.records() {
+            assert!(r.first_token >= r.arrival, "{r:?}");
+            assert!(r.finish >= r.first_token, "{r:?}");
+        }
+        total_handoffs.fetch_add(cm.handoffs, Ordering::Relaxed);
+    });
+    assert!(
+        total_handoffs.into_inner() > 0,
+        "no case ever handed off: the property never exercised the fleet split"
+    );
+}
+
+#[test]
 fn simulated_time_is_monotone_in_workload_size() {
     check("monotone makespan", 6, |rng| {
         let base_n = rng.range(1, 3);

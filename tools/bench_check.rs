@@ -14,9 +14,11 @@
 //!    rr/least/prefix routers on ≥ 2 chips), the tier ablation
 //!    (sram-only / hbm-tier / two-tier+noc), the deployment-plan
 //!    study (one auto row plus the named presets), the overload
-//!    control-plane study (fifo / drop / defer admission policies), and
-//!    the fault study (none / crash_recover / crash_resubmit / degrade
-//!    scenarios on a ≥ 4-chip fleet).
+//!    control-plane study (fifo / drop / defer admission policies), the
+//!    fault study (none / crash_recover / crash_resubmit / degrade
+//!    scenarios on a ≥ 4-chip fleet), and the fleet-specialization study
+//!    (homog-fused / fleet-planned / fleet-planned-crash at one equal
+//!    chip count).
 //! 2. **Invariants**: on the shared-prefix workload the prefix-hit-aware
 //!    router must beat round-robin on TTFT p50 for the fusion system (the
 //!    cluster acceptance property), cache-on must not lose TTFT, the
@@ -32,7 +34,13 @@
 //!    crash actually injected), frontend recovery strictly beating
 //!    client-timeout resubmission on goodput-under-SLO, and the bounded
 //!    single-chip-crash degradation (crash_recover goodput ≥ healthy ×
-//!    (1 − 2/chips − 0.35)).
+//!    (1 − 2/chips − 0.35)). The fleet study adds the specialization
+//!    property — the planned heterogeneous fleet is disaggregated,
+//!    performs cross-chip KV handoffs, and strictly beats the
+//!    homogeneous fused fleet on goodput-under-SLO at equal chip
+//!    count — and exactly-once across the prefill→decode handoff
+//!    (completed + shed = offered with exact per-request token counts
+//!    in every fleet scenario, including under a decode-chip crash).
 //! 3. **Numbers**: `tokens_per_s` must not drop, and `ttft_p99_s` must
 //!    not rise, by more than the tolerance against the matching baseline
 //!    row. A baseline marked `"provisional": true` skips this layer (the
@@ -204,6 +212,27 @@ fn check_structure(current: &Json, violations: &mut Vec<String>) {
             }
         }
     }
+    let fleet = rows(current, "fleet");
+    let mut fleet_chips: Option<u64> = None;
+    for name in ["homog-fused", "fleet-planned", "fleet-planned-crash"] {
+        match fleet_row(&fleet, name) {
+            None => violations.push(format!("fleet row missing: {name}")),
+            Some(r) => {
+                let chips = r.num("chips").unwrap_or(0.0) as u64;
+                if chips < 2 {
+                    violations.push(format!("fleet row {name} runs on < 2 chips"));
+                }
+                // Specialization must be compared at equal chip count.
+                match fleet_chips {
+                    None => fleet_chips = Some(chips),
+                    Some(c) if c != chips => violations.push(format!(
+                        "fleet row {name} runs on {chips} chips, others on {c}"
+                    )),
+                    Some(_) => {}
+                }
+            }
+        }
+    }
 }
 
 /// The slo-section row of one admission policy.
@@ -217,6 +246,11 @@ fn fault_row<'a>(fault: &[&'a Json], scenario: &str) -> Option<&'a Json> {
         .iter()
         .find(|r| r.str("scenario") == Some(scenario))
         .copied()
+}
+
+/// The fleet-section row of one fleet configuration.
+fn fleet_row<'a>(fleet: &[&'a Json], name: &str) -> Option<&'a Json> {
+    fleet.iter().find(|r| r.str("fleet") == Some(name)).copied()
 }
 
 /// `prefill_tokens_skipped` of one tier-ablation row.
@@ -385,6 +419,64 @@ fn check_invariants(current: &Json, violations: &mut Vec<String>) {
             }
         }
         _ => violations.push("cannot evaluate fault-recovery invariants".into()),
+    }
+    // The fleet-specialization acceptance properties.
+    let fleet = rows(current, "fleet");
+    for name in ["homog-fused", "fleet-planned", "fleet-planned-crash"] {
+        let Some(r) = fleet_row(&fleet, name) else { continue };
+        // Exactly-once across the prefill→decode handoff: splitting a
+        // request into legs must neither lose nor duplicate it...
+        let (offered, completed, shed) = (
+            r.num("offered").unwrap_or(-1.0),
+            r.num("completed").unwrap_or(-1.0),
+            r.num("shed").unwrap_or(-1.0),
+        );
+        if completed + shed != offered {
+            violations.push(format!(
+                "fleet {name}: completed {completed} + shed {shed} != offered {offered}"
+            ));
+        }
+        // ...nor drift a single token of any completed request.
+        if r.get("tokens_exact").and_then(|v| v.as_bool()) != Some(true) {
+            violations.push(format!(
+                "fleet {name}: per-request token counts drifted across the handoff"
+            ));
+        }
+    }
+    match (
+        fleet_row(&fleet, "homog-fused"),
+        fleet_row(&fleet, "fleet-planned"),
+        fleet_row(&fleet, "fleet-planned-crash"),
+    ) {
+        (Some(homog), Some(planned), Some(crash)) => {
+            if homog.num("handoffs").unwrap_or(-1.0) != 0.0 {
+                violations.push("fleet homog-fused performed cross-chip handoffs".into());
+            }
+            if planned.get("disaggregated").and_then(|v| v.as_bool()) != Some(true) {
+                violations
+                    .push("fleet planner did not specialize on the prefill-heavy mix".into());
+            }
+            if planned.num("handoffs").unwrap_or(0.0) < 1.0 {
+                violations.push("fleet fleet-planned performed no cross-chip handoffs".into());
+            }
+            // Specialization must pay: the planned heterogeneous fleet
+            // strictly beats the homogeneous fused fleet on
+            // goodput-under-SLO at equal chip count.
+            let (g_homog, g_planned) = (
+                homog.num("goodput_tok_s").unwrap_or(0.0),
+                planned.num("goodput_tok_s").unwrap_or(0.0),
+            );
+            if g_planned <= g_homog {
+                violations.push(format!(
+                    "planned fleet does not beat homogeneous fused on goodput-under-SLO \
+                     ({g_planned} vs {g_homog})"
+                ));
+            }
+            if crash.num("crashes").unwrap_or(0.0) < 1.0 {
+                violations.push("fleet fleet-planned-crash injected no crash".into());
+            }
+        }
+        _ => violations.push("cannot evaluate fleet-specialization invariants".into()),
     }
 }
 
@@ -602,6 +694,32 @@ fn check_numbers(current: &Json, baseline: &Json, tol: f64, violations: &mut Vec
             b.num("mean_detect_s"),
             tol,
             false,
+            violations,
+        );
+    }
+    // Fleet study: match rows on the fleet label.
+    let cur_fleet = rows(current, "fleet");
+    let base_fleet = rows(baseline, "fleet");
+    for b in &base_fleet {
+        let name = b.str("fleet").unwrap_or("");
+        let Some(c) = cur_fleet.iter().find(|r| r.str("fleet") == Some(name)) else {
+            violations.push(format!("fleet row disappeared: {name}"));
+            continue;
+        };
+        check_metric(
+            &format!("fleet {name} goodput_tok_s"),
+            c.num("goodput_tok_s"),
+            b.num("goodput_tok_s"),
+            tol,
+            true,
+            violations,
+        );
+        check_metric(
+            &format!("fleet {name} tokens_per_s"),
+            c.num("tokens_per_s"),
+            b.num("tokens_per_s"),
+            tol,
+            true,
             violations,
         );
     }
