@@ -71,6 +71,17 @@ pub enum ArrivalProcess {
         spike_start_s: f64,
         spike_len_s: f64,
     },
+    /// Diurnal load: an inhomogeneous Poisson process whose rate follows a
+    /// raised-cosine day/night cycle between `base_rate` (trough) and
+    /// `peak_rate` (crest) with period `period_s` seconds — the
+    /// adaptive-orchestration trace shape (long traces exhibit load
+    /// structure instead of a flat average). The `scale_study` experiment
+    /// replays this at both simulation levels.
+    Diurnal {
+        base_rate: f64,
+        peak_rate: f64,
+        period_s: f64,
+    },
 }
 
 /// Shared-prefix / multi-turn structure of a conversational workload

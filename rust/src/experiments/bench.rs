@@ -11,7 +11,10 @@
 //! (crash recovery vs client resubmission plus degradation windows, via
 //! [`fault_study::bench_rows`]), and (7) the fleet-specialization study
 //! (planned heterogeneous prefill/decode fleet vs homogeneous fused at
-//! equal chip count, via [`fleet_study::bench_rows`]) — and writes all
+//! equal chip count, via [`fleet_study::bench_rows`]), and (8) the
+//! two-speed simulation study (transaction-level vs parallel stepping vs
+//! the calibrated analytic surrogate on a 16-chip diurnal trace, via
+//! [`scale_study::bench_rows`]) — and writes all
 //! of it to
 //! `BENCH_serving.json` (wall-clock sim time, simulated tokens/s,
 //! TTFT/TBT p50/p99, prefix-cache hit rate, memo hit rate,
@@ -28,6 +31,7 @@ use crate::experiments::fault_study::{self, FaultRun};
 use crate::experiments::fleet_study::{self, FleetRun};
 use crate::experiments::overload_study::{self, OverloadRun};
 use crate::experiments::plan_study::{self, PlanRun};
+use crate::experiments::scale_study::{self, ScaleRun};
 use crate::experiments::tier_study::{self, TierRun};
 use crate::experiments::Opts;
 use crate::serving::metrics::Metrics;
@@ -273,6 +277,7 @@ fn render_json(
     slo: &[OverloadRun],
     fault: &[FaultRun],
     fleet: &[FleetRun],
+    scale: &[ScaleRun],
 ) -> String {
     let mut j = String::new();
     let _ = writeln!(j, "{{");
@@ -462,6 +467,35 @@ fn render_json(
         );
     }
     let _ = writeln!(j, "  ],");
+    let _ = writeln!(j, "  \"scale\": [");
+    for (i, r) in scale.iter().enumerate() {
+        let _ = writeln!(
+            j,
+            "    {{\"level\": \"{}\", \"chips\": {}, \"sim_threads\": {}, \"offered\": {}, \
+             \"completed\": {}, \"shed\": {}, \"events\": {}, \"wall_s\": {:.6}, \
+             \"events_per_s\": {:.3}, \"ttft_ms\": {:.4}, \"tbt_ms\": {:.4}, \
+             \"goodput_tok_s\": {:.3}, \"speedup\": {:.3}, \"ttft_err\": {:.4}, \
+             \"tbt_err\": {:.4}, \"goodput_err\": {:.4}}}{}",
+            r.level,
+            r.chips,
+            r.sim_threads,
+            r.offered,
+            r.completed,
+            r.shed,
+            r.events,
+            r.wall_s,
+            r.events_per_s,
+            r.ttft_ms,
+            r.tbt_ms,
+            r.goodput_tok_s,
+            r.speedup,
+            r.ttft_err,
+            r.tbt_err,
+            r.goodput_err,
+            if i + 1 < scale.len() { "," } else { "" }
+        );
+    }
+    let _ = writeln!(j, "  ],");
     let _ = writeln!(
         j,
         "  \"memo\": {{\"sweep\": \"fig13-mini\", \"wall_off_s\": {:.6}, \"wall_on_s\": {:.6}, \
@@ -483,6 +517,7 @@ pub fn run(opts: &Opts) -> anyhow::Result<Vec<Table>> {
     let slo = overload_study::bench_rows(opts)?;
     let fault = fault_study::bench_rows(opts)?;
     let fleet = fleet_study::bench_rows(opts)?;
+    let scale = scale_study::bench_rows(opts)?;
 
     let mut t1 = Table::new(
         "bench — prefix-sharing paged KV on the shared-prefix trace (Qwen3-4B, 64 cores)",
@@ -687,6 +722,34 @@ pub fn run(opts: &Opts) -> anyhow::Result<Vec<Table>> {
         ]);
     }
 
+    let mut t9 = Table::new(
+        "bench — two-speed simulation (16 chips, diurnal trace, txn vs parallel vs surrogate)",
+        &[
+            "level",
+            "threads",
+            "events",
+            "wall (s)",
+            "events/s",
+            "speedup",
+            "ttft err",
+            "tbt err",
+            "goodput err",
+        ],
+    );
+    for r in &scale {
+        t9.row(&[
+            r.level.to_string(),
+            r.sim_threads.to_string(),
+            r.events.to_string(),
+            f3(r.wall_s),
+            f3(r.events_per_s),
+            f3(r.speedup),
+            f3(r.ttft_err),
+            f3(r.tbt_err),
+            f3(r.goodput_err),
+        ]);
+    }
+
     let cluster_rr = cluster_study::ttft_p50(&cluster, "shared-prefix", "fusion", "rr");
     let cluster_prefix = cluster_study::ttft_p50(&cluster, "shared-prefix", "fusion", "prefix");
     println!(
@@ -715,13 +778,14 @@ pub fn run(opts: &Opts) -> anyhow::Result<Vec<Table>> {
             &slo,
             &fault,
             &fleet,
+            &scale,
         );
         std::fs::create_dir_all(dir)?;
         std::fs::write(dir.join("BENCH_serving.json"), &json)?;
         std::fs::write("BENCH_serving.json", &json)?;
     }
 
-    Ok(vec![t1, t2, t3, t4, t5, t6, t7, t8])
+    Ok(vec![t1, t2, t3, t4, t5, t6, t7, t8, t9])
 }
 
 #[cfg(test)]
@@ -885,7 +949,27 @@ mod tests {
             tok_s: 930.0,
             icn_mb: 48.25,
         }];
-        let j = render_json(&runs, &memo, 0.6, &cluster, &tier, &plan, &slo, &fault, &fleet);
+        let scale = vec![ScaleRun {
+            level: "fast",
+            chips: 16,
+            sim_threads: 1,
+            offered: 512,
+            completed: 512,
+            shed: 0,
+            events: 150_000,
+            wall_s: 0.8,
+            events_per_s: 187_500.0,
+            ttft_ms: 21.5,
+            tbt_ms: 9.8,
+            goodput_tok_s: 1200.0,
+            ttft_err: 0.031,
+            tbt_err: 0.012,
+            goodput_err: 0.004,
+            speedup: 7.2,
+        }];
+        let j = render_json(
+            &runs, &memo, 0.6, &cluster, &tier, &plan, &slo, &fault, &fleet, &scale,
+        );
         assert!(j.starts_with("{\n"));
         assert!(j.trim_end().ends_with('}'));
         assert_eq!(j.matches('{').count(), j.matches('}').count());
@@ -907,5 +991,10 @@ mod tests {
         assert!(j.contains("\"disaggregated\": true"));
         assert!(j.contains("\"handoffs\": 96"));
         assert!(j.contains("\"tokens_exact\": true"));
+        assert!(j.contains("\"scale\": ["));
+        assert!(j.contains("\"level\": \"fast\""));
+        assert!(j.contains("\"sim_threads\": 1"));
+        assert!(j.contains("\"speedup\": 7.200"));
+        assert!(j.contains("\"ttft_err\": 0.0310"));
     }
 }

@@ -23,6 +23,7 @@
 //! | `overload_study` | flash crowd at 2x load: FIFO vs shed/defer control plane | [`overload_study`] |
 //! | `fault_study` | injected faults: crash recovery vs resubmit, degradation windows | [`fault_study`] |
 //! | `fleet_study` | fleet-level PD disaggregation: planned heterogeneous fleet vs homogeneous fused | [`fleet_study`] |
+//! | `scale_study` | two-speed simulation: parallel chip stepping + calibrated analytic fast path | [`scale_study`] |
 
 pub mod ablations;
 pub mod bench;
@@ -42,6 +43,7 @@ pub mod hybrid_study;
 pub mod overload_study;
 pub mod plan_study;
 pub mod reference_hw;
+pub mod scale_study;
 pub mod table2;
 pub mod tier_study;
 
@@ -89,7 +91,7 @@ impl Opts {
 pub const ALL: &[&str] = &[
     "table2", "fig7a", "fig7b", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13", "fig14",
     "headline", "ablations", "hybrid_study", "bench", "cluster_study", "tier_study", "plan_study",
-    "overload_study", "fault_study", "fleet_study",
+    "overload_study", "fault_study", "fleet_study", "scale_study",
 ];
 
 /// Run one experiment by id; returns its tables (already printed).
@@ -115,6 +117,7 @@ pub fn run(id: &str, opts: &Opts) -> anyhow::Result<Vec<Table>> {
         "overload_study" => overload_study::run(opts)?,
         "fault_study" => fault_study::run(opts)?,
         "fleet_study" => fleet_study::run(opts)?,
+        "scale_study" => scale_study::run(opts)?,
         other => anyhow::bail!("unknown experiment {other:?} (try one of {ALL:?})"),
     };
     for t in &tables {

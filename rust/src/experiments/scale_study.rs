@@ -1,0 +1,319 @@
+//! `scale_study` — the two-speed simulation study: one large diurnal
+//! trace replayed on a 16-chip fused fleet at every simulation
+//! configuration the engine offers,
+//!
+//! - `txn`      — the transaction-level reference: every GEMM, vector op
+//!   and NoC collective priced by the detailed core model, chips stepped
+//!   by the sequential event loop (`--sim-threads 1`).
+//! - `txn-par8` — the same transaction-level simulation stepped by the
+//!   conservative-window parallel scheduler (`--sim-threads 8`). By
+//!   construction it must be **byte-identical** to `txn`; this row
+//!   asserts that and reports the wall-clock effect of parallel stepping.
+//! - `fast`     — the calibrated analytic surrogate
+//!   ([`crate::model::memo::Surrogate`], `--sim-level fast`): the first
+//!   batch of each shape class runs the detailed path to calibrate a
+//!   closed-form roofline, every later batch replays the corrected
+//!   analytic prediction.
+//!
+//! The gated acceptance properties (`BENCH_serving.json` `"scale"`
+//! section, checked by `tools/bench_check`):
+//!
+//! 1. **The fast path is actually fast**: `speedup` (txn wall-clock over
+//!    fast wall-clock) is strictly > 1 at smoke scale and ≥ 5 at full
+//!    trace scale.
+//! 2. **The fast path is still honest**: fast-level TTFT, TBT and
+//!    goodput-under-SLO land within ±10% of the transaction-level run,
+//!    and both levels conserve requests exactly
+//!    (`completed + shed == offered`).
+//!
+//! ```sh
+//! cargo run --release -p npusim -- experiment scale_study
+//! ```
+
+use crate::config::{ArrivalProcess, ChipConfig, LenDist, ModelConfig, WorkloadConfig};
+use crate::experiments::{overload_study, Opts};
+use crate::model::memo::SimLevel;
+use crate::serving::cluster::{self, ClusterConfig, ClusterMetrics, RouterPolicy};
+use crate::serving::fleet::FleetSpec;
+use crate::serving::pd_fusion::FusionConfig;
+use crate::serving::request::{self, Request};
+use crate::serving::scheduler::SchedulerConfig;
+use crate::util::table::{f3, Table};
+use std::time::Instant;
+
+/// Fleet size of the study — the ISSUE's "16+ chip fleet".
+pub const SCALE_CHIPS: usize = 16;
+
+/// Fast-vs-txn metric tolerance the bench gate arms (±10%).
+pub const FAST_ERR_TOL: f64 = 0.10;
+
+/// One simulation-level cell.
+#[derive(Debug, Clone)]
+pub struct ScaleRun {
+    pub level: &'static str,
+    pub chips: usize,
+    pub sim_threads: usize,
+    pub offered: usize,
+    pub completed: usize,
+    pub shed: u64,
+    /// Simulated work retired: total tokens (input + output) across all
+    /// completed requests — the event-count proxy `events_per_s` is
+    /// normalized by.
+    pub events: u64,
+    pub wall_s: f64,
+    pub events_per_s: f64,
+    pub ttft_ms: f64,
+    pub tbt_ms: f64,
+    pub goodput_tok_s: f64,
+    /// Relative error vs the `txn` reference row (0 for `txn` itself).
+    pub ttft_err: f64,
+    pub tbt_err: f64,
+    pub goodput_err: f64,
+    /// txn wall-clock / this row's wall-clock (1 for `txn` itself).
+    pub speedup: f64,
+}
+
+/// The diurnal trace of the study: ShareGPT-like lengths, arrivals on a
+/// raised-cosine day curve so the fleet sees both a trough and a crest.
+fn scale_workload(n: usize, base_rate: f64, peak_rate: f64) -> WorkloadConfig {
+    let mut w = WorkloadConfig::fixed_ratio(256, 64, n);
+    w.name = "scale-diurnal".into();
+    w.input_len = LenDist::Uniform(64, 512);
+    w.output_len = LenDist::Uniform(16, 96);
+    w.with_arrival(ArrivalProcess::Diurnal {
+        base_rate,
+        peak_rate,
+        // Two full day-cycles over the trace: crest → trough → crest.
+        period_s: (n as f64 / ((base_rate + peak_rate) * 0.5)).max(1.0) / 2.0,
+    })
+    .with_seed(29)
+}
+
+fn scale_sched(level: SimLevel) -> SchedulerConfig {
+    SchedulerConfig::Fusion(FusionConfig {
+        tp: 16,
+        stages: 4,
+        sim_level: level,
+        ..FusionConfig::default()
+    })
+}
+
+/// Run one simulation-level cell and wall-clock it. Conservation
+/// (exactly-once) is asserted here so every caller inherits gate 2's
+/// structural half.
+fn run_level(
+    level: &'static str,
+    model: &ModelConfig,
+    reqs: Vec<Request>,
+    sim_level: SimLevel,
+    sim_threads: usize,
+    slo_ttft_s: f64,
+) -> anyhow::Result<(ScaleRun, ClusterMetrics)> {
+    let offered = reqs.len();
+    let spec = FleetSpec::homogeneous(
+        ChipConfig::large_core(),
+        SCALE_CHIPS,
+        scale_sched(sim_level),
+    );
+    let cfg = ClusterConfig::builder(spec)
+        .router(RouterPolicy::LeastLoaded)
+        .sim_threads(sim_threads)
+        .build();
+    let start = Instant::now();
+    let cm = cluster::simulate_cluster_requests(&cfg, model, reqs)?;
+    let wall_s = start.elapsed().as_secs_f64().max(1e-9);
+    anyhow::ensure!(
+        cm.conserves(offered),
+        "{level}: {} completed + {} shed != {offered} offered",
+        cm.n_requests(),
+        cm.shed_requests()
+    );
+    let agg = cm.aggregate();
+    let events: u64 = agg
+        .records()
+        .iter()
+        .map(|r| r.input_tokens + r.output_tokens)
+        .sum();
+    Ok((
+        ScaleRun {
+            level,
+            chips: SCALE_CHIPS,
+            sim_threads,
+            offered,
+            completed: cm.n_requests(),
+            shed: cm.shed_requests(),
+            events,
+            wall_s,
+            events_per_s: events as f64 / wall_s,
+            ttft_ms: agg.ttft_s().mean() * 1e3,
+            tbt_ms: agg.tbt_s().mean() * 1e3,
+            goodput_tok_s: agg.goodput_tokens_per_s(slo_ttft_s, overload_study::SLO_TBT_S),
+            ttft_err: 0.0,
+            tbt_err: 0.0,
+            goodput_err: 0.0,
+            speedup: 1.0,
+        },
+        cm,
+    ))
+}
+
+fn rel_err(x: f64, reference: f64) -> f64 {
+    if reference.abs() < 1e-12 {
+        if x.abs() < 1e-12 {
+            0.0
+        } else {
+            f64::INFINITY
+        }
+    } else {
+        (x - reference).abs() / reference.abs()
+    }
+}
+
+/// The three-row comparison the bench's `"scale"` section reports:
+/// `txn` (reference), `txn-par8` (asserted byte-identical), `fast`
+/// (error-scored against `txn`).
+pub fn bench_rows(opts: &Opts) -> anyhow::Result<Vec<ScaleRun>> {
+    let model = ModelConfig::qwen3_4b();
+    let n = opts.pick(512, 48);
+    let per_chip = overload_study::sustainable_rate(&model, opts.pick(24, 8))?;
+    // The diurnal curve averages (base + peak) / 2 = 0.5x the fleet's
+    // sustainable rate: the crest pressures it, the trough drains it.
+    let fleet = per_chip * SCALE_CHIPS as f64;
+    let w = scale_workload(n, fleet * 0.2, fleet * 0.8);
+    let slo_ttft_s = 2.0 * overload_study::SLO_SERVICE_PERIODS / per_chip;
+    let reqs = request::generate(&w);
+
+    let (txn, txn_cm) = run_level("txn", &model, reqs.clone(), SimLevel::Txn, 1, slo_ttft_s)?;
+    let (mut par, par_cm) =
+        run_level("txn-par8", &model, reqs.clone(), SimLevel::Txn, 8, slo_ttft_s)?;
+    // The conservative-window parallel scheduler must be bit-identical to
+    // the sequential event loop — not "close", identical.
+    anyhow::ensure!(
+        format!("{:?}", txn_cm.aggregate().records()) == format!("{:?}", par_cm.aggregate().records()),
+        "parallel stepping diverged from the sequential transaction-level schedule"
+    );
+    let (mut fast, _) = run_level("fast", &model, reqs, SimLevel::Fast, 1, slo_ttft_s)?;
+
+    par.speedup = txn.wall_s / par.wall_s;
+    fast.speedup = txn.wall_s / fast.wall_s;
+    fast.ttft_err = rel_err(fast.ttft_ms, txn.ttft_ms);
+    fast.tbt_err = rel_err(fast.tbt_ms, txn.tbt_ms);
+    fast.goodput_err = rel_err(fast.goodput_tok_s, txn.goodput_tok_s);
+    Ok(vec![txn, par, fast])
+}
+
+pub fn run(opts: &Opts) -> anyhow::Result<Vec<Table>> {
+    let runs = bench_rows(opts)?;
+
+    let mut t = Table::new(
+        "scale_study — two-speed simulation: transaction-level vs calibrated \
+         analytic surrogate (Qwen3-4B, 16 chips, diurnal trace)",
+        &[
+            "level",
+            "threads",
+            "offered",
+            "completed",
+            "shed",
+            "events",
+            "wall s",
+            "events/s",
+            "ttft ms",
+            "tbt ms",
+            "goodput tok/s",
+            "speedup",
+            "ttft err",
+            "tbt err",
+            "goodput err",
+        ],
+    );
+    for r in &runs {
+        t.row(&[
+            r.level.to_string(),
+            r.sim_threads.to_string(),
+            r.offered.to_string(),
+            r.completed.to_string(),
+            r.shed.to_string(),
+            r.events.to_string(),
+            f3(r.wall_s),
+            f3(r.events_per_s),
+            f3(r.ttft_ms),
+            f3(r.tbt_ms),
+            f3(r.goodput_tok_s),
+            f3(r.speedup),
+            f3(r.ttft_err),
+            f3(r.tbt_err),
+            f3(r.goodput_err),
+        ]);
+    }
+
+    let by = |s: &str| runs.iter().find(|r| r.level == s).unwrap();
+    let (txn, fast) = (by("txn"), by("fast"));
+    println!(
+        "scale_study: fast path {:.1}x faster than transaction-level \
+         ({:.0} vs {:.0} simulated tok per wall-s), errors ttft {:+.1}% \
+         tbt {:+.1}% goodput {:+.1}% (gate ±{:.0}%)",
+        fast.speedup,
+        fast.events_per_s,
+        txn.events_per_s,
+        fast.ttft_err * 100.0,
+        fast.tbt_err * 100.0,
+        fast.goodput_err * 100.0,
+        FAST_ERR_TOL * 100.0
+    );
+
+    Ok(vec![t])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_trace_is_deterministic_and_diurnal() {
+        let w = scale_workload(64, 4.0, 32.0);
+        let reqs = request::generate(&w);
+        assert_eq!(reqs.len(), 64);
+        assert_eq!(reqs, request::generate(&w));
+        assert!(reqs.windows(2).all(|p| p[0].arrival_s <= p[1].arrival_s));
+        assert!(matches!(w.arrival, ArrivalProcess::Diurnal { .. }));
+    }
+
+    #[test]
+    fn gates_hold_at_fast_scale() {
+        // The bench_check gates, asserted at the same scale CI smoke-runs:
+        // exactly-once at every level (inside run_level), parallel
+        // stepping byte-identical to sequential (inside bench_rows), the
+        // surrogate strictly faster than the transaction-level run, and
+        // its TTFT/TBT/goodput within the ±10% tolerance band.
+        let runs = bench_rows(&Opts::fast()).unwrap();
+        assert_eq!(runs.len(), 3);
+        let by = |s: &str| runs.iter().find(|r| r.level == s).unwrap();
+        let (txn, par, fast) = (by("txn"), by("txn-par8"), by("fast"));
+        for r in &runs {
+            assert_eq!(r.chips, SCALE_CHIPS, "{}", r.level);
+            assert_eq!(r.completed as u64 + r.shed, r.offered as u64, "{}", r.level);
+            assert!(r.events > 0 && r.wall_s > 0.0, "{}", r.level);
+        }
+        assert_eq!(txn.sim_threads, 1);
+        assert_eq!(par.sim_threads, 8);
+        // Parallel stepping retires the same tokens through the same
+        // schedule; identical records were already ensured in bench_rows.
+        assert_eq!(par.events, txn.events);
+        assert_eq!(par.ttft_ms, txn.ttft_ms);
+        assert_eq!(par.tbt_ms, txn.tbt_ms);
+        assert!(
+            fast.speedup > 1.0,
+            "surrogate must beat the detailed path: {:.2}x",
+            fast.speedup
+        );
+        assert!(
+            fast.ttft_err <= FAST_ERR_TOL
+                && fast.tbt_err <= FAST_ERR_TOL
+                && fast.goodput_err <= FAST_ERR_TOL,
+            "fast-vs-txn error out of band: ttft {:.3} tbt {:.3} goodput {:.3}",
+            fast.ttft_err,
+            fast.tbt_err,
+            fast.goodput_err
+        );
+    }
+}

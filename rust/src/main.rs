@@ -12,6 +12,7 @@ use anyhow::{Context, Result};
 use npusim::config::{ChipConfig, ModelConfig, PriorityMix, WorkloadConfig};
 use npusim::coordinator::{Coordinator, GenRequest};
 use npusim::experiments::{self, Opts};
+use npusim::model::memo::SimLevel;
 use npusim::parallel::plan::{self, ChipRole, DeploymentPlan};
 use npusim::serving::cluster::{
     simulate_cluster, simulate_cluster_requests, ClusterConfig, ClusterMetrics, RouterPolicy,
@@ -64,6 +65,7 @@ fn dispatch(args: &Args) -> Result<()> {
                  npusim simulate --chips 4 --roles p,p,d,d        # fleet PD disaggregation\n      \
                  npusim simulate --chips 4 --fleet auto           # planner picks roles\n      \
                  npusim simulate --chips 4 --fault-seed 42 --chip-mttf 5.0 --shed-policy drop --shed-scope per-chip\n      \
+                 npusim simulate --chips 16 --sim-level fast --sim-threads 8   # two-speed simulation\n      \
                  npusim serve --prompt \"1,2,3,4\""
             );
             Ok(())
@@ -144,9 +146,18 @@ fn fusion_cfg_from(args: &Args) -> Result<FusionConfig> {
         cross_pipe: args.flag("cross-pipe"),
         affinity_gap: args.opt_parse_or("affinity-gap", defaults.affinity_gap)?,
         memo: args.flag("memo"),
+        sim_level: sim_level_from(args)?,
         slo_preempt: args.opt_parse::<f64>("slo-preempt")?,
         ..defaults
     })
+}
+
+/// `--sim-level txn|fast` (default txn, the bit-exact transaction level).
+fn sim_level_from(args: &Args) -> Result<SimLevel> {
+    match args.opt("sim-level") {
+        Some(s) => SimLevel::parse(s),
+        None => Ok(SimLevel::Txn),
+    }
 }
 
 /// Disaggregation knobs for `--mode disagg`.
@@ -160,6 +171,7 @@ fn disagg_cfg_from(args: &Args) -> Result<DisaggConfig> {
         hbm_tier_frac: tier_frac_from(args)?,
         cross_pipe: args.flag("cross-pipe"),
         memo: args.flag("memo"),
+        sim_level: sim_level_from(args)?,
         ..DisaggConfig::default()
     })
 }
@@ -279,6 +291,7 @@ fn apply_control_plane(args: &Args, mut cfg: ClusterConfig) -> Result<ClusterCon
         cfg = cfg.with_shed_scope(ShedScope::parse(scope)?);
     }
     cfg.slo_ttft_s = args.opt_parse_or("slo-ttft", cfg.slo_ttft_s)?;
+    cfg.sim_threads = args.opt_parse_or("sim-threads", cfg.sim_threads)?.max(1);
     // Fault injection: an explicit schedule, or a seeded chaos draw from
     // a per-chip MTTF over a horizon.
     let schedule = match (args.opt("faults"), args.opt_parse::<u64>("fault-seed")?) {

@@ -16,11 +16,52 @@
 //! cross-group contention is under-modelled. With the memo disabled the
 //! execution path is bit-identical to the detailed simulator.
 
+use crate::config::{ChipConfig, ModelConfig};
 use crate::memmgr::{KvCache, KV_BLOCK_TOKENS};
 use crate::model::batch::{IterBatch, Phase};
+use crate::parallel::partition::PartitionStrategy;
+use crate::sim::compute;
 use crate::sim::tracer::OpClass;
+use crate::util::cli::CliEnum;
 use crate::util::units::Cycle;
 use std::collections::HashMap;
+
+/// Simulation fidelity level (CLI `--sim-level`).
+///
+/// `Txn` is the transaction-level simulator: every operator reserves NoC
+/// links, HBM banks and compute timelines. `Fast` replaces iteration
+/// execution with the calibrated analytic [`Surrogate`] — closed-form
+/// per-op latency (GEMM roofline over compute/HBM, ring-collective costs
+/// over the placement) scaled by a per-shape-class ratio measured against
+/// one transaction-level run of that shape class. KV bookkeeping stays
+/// exact in both levels, so token conservation and exactly-once completion
+/// hold regardless of level; only latency is approximated.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SimLevel {
+    /// Transaction-level (bit-identical to the historical simulator).
+    #[default]
+    Txn,
+    /// Calibrated analytic surrogate (approximate, orders faster).
+    Fast,
+}
+
+impl CliEnum for SimLevel {
+    const WHAT: &'static str = "sim level";
+    const TABLE: &'static [(&'static str, &'static [&'static str], SimLevel)] = &[
+        ("txn", &["transaction", "detailed"], SimLevel::Txn),
+        ("fast", &["analytic", "surrogate"], SimLevel::Fast),
+    ];
+}
+
+impl SimLevel {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Self::parse_cli(s)
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.cli_name()
+    }
+}
 
 /// HBM residency bucket width for memo keys.
 const HBM_BUCKET_BYTES: u64 = 256 << 10;
@@ -120,6 +161,209 @@ fn mix(h: u64, v: u64) -> u64 {
     z ^ (z >> 31)
 }
 
+/// Execution-shape parameters of one GEMM/attention/vector inventory —
+/// everything [`Surrogate::analytic_iteration_cycles`] needs besides the
+/// batch itself. All fields are constant per worker.
+#[derive(Debug, Clone, Copy)]
+pub struct SurrogateShape {
+    /// Tensor-parallel degree of the worker's group.
+    pub tp: u64,
+    /// HBM-resident weight bytes of this worker's layer shard (from the
+    /// SRAM plan) — sets the weight-stream roofline.
+    pub weight_hbm_bytes: u64,
+}
+
+/// Calibrated analytic latency surrogate (`--sim-level fast`).
+///
+/// The closed form prices one iteration from first principles: per-GEMM
+/// systolic/vector/SRAM roofline ([`compute::matmul_cycles`]) on the
+/// partition-sharded shapes, ring-collective bytes over the NoC link
+/// bandwidth (the Table-2 cost model: AllReduce `2(p−1)/p·M·N`, AllGather
+/// `(p−1)/p·M·K`), per-item attention over the KV length, and the
+/// per-layer HBM weight stream as a lower bound. Closed forms drift from
+/// the transaction-level simulator (no contention, no bank conflicts), so
+/// each *shape class* — phase mix, log₂ batch tokens, KV-length bucket —
+/// is calibrated once: its first occurrence runs transaction-level and the
+/// measured/analytic ratio corrects every later prediction in the class.
+#[derive(Debug, Default)]
+pub struct Surrogate {
+    ratios: HashMap<u64, f64>,
+    /// Transaction-level calibration runs performed (one per shape class).
+    pub calibrations: u64,
+    /// Iterations priced analytically instead of simulated.
+    pub replays: u64,
+}
+
+impl Surrogate {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Shape-class signature of `batch`: phase mix (prefill / decode /
+    /// mixed), log₂ bucket of total query tokens and of batch width, total
+    /// KV length in 1 Ki-token buckets, and the logit-token count. Coarser
+    /// than [`LatencyMemo::key_layer`] by design — within a class the
+    /// analytic form tracks the residual scaling, so one calibration run
+    /// covers the whole bucket.
+    pub fn key(batch: &IterBatch) -> u64 {
+        let mut phase_class = 0u64;
+        let mut kv_total = 0u64;
+        for item in &batch.items {
+            phase_class |= match item.phase {
+                Phase::Prefill => 1,
+                Phase::Decode => 2,
+            };
+            kv_total += item.kv_tokens;
+        }
+        let log2 = |v: u64| 64 - v.max(1).leading_zeros() as u64;
+        let mut h = 0x5355_5252_4F47_4154u64; // "SURROGAT" tag
+        for v in [
+            phase_class,
+            log2(batch.total_q_tokens()),
+            log2(batch.items.len() as u64),
+            kv_total / 1024,
+            batch.logit_tokens(),
+        ] {
+            h = mix(h, v);
+        }
+        h
+    }
+
+    /// Number of calibrated shape classes.
+    pub fn len(&self) -> usize {
+        self.ratios.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ratios.is_empty()
+    }
+
+    /// Predicted duration for a calibrated shape class, or `None` when the
+    /// class still needs its transaction-level calibration run.
+    pub fn predict(&mut self, key: u64, analytic: f64) -> Option<Cycle> {
+        let r = *self.ratios.get(&key)?;
+        self.replays += 1;
+        Some(((analytic * r).round() as Cycle).max(1))
+    }
+
+    /// Record the measured duration of the shape class's transaction-level
+    /// calibration run.
+    pub fn calibrate(&mut self, key: u64, measured: Cycle, analytic: f64) {
+        self.calibrations += 1;
+        let ratio = if analytic > 0.0 {
+            measured as f64 / analytic
+        } else {
+            1.0
+        };
+        self.ratios.insert(key, ratio.max(f64::MIN_POSITIVE));
+    }
+
+    /// Closed-form iteration latency in cycles (before ratio correction).
+    /// Mirrors the op inventory of [`crate::model::exec::run_iteration`]:
+    /// per layer RMSNorm ×2, QKV / output / FFN GEMMs on the
+    /// partition-sharded shapes plus their ring-collective traffic, RoPE,
+    /// per-item attention, residual adds; the per-layer HBM weight stream
+    /// as a roofline floor; and the vocab-sharded logits GEMM against its
+    /// embedding stream.
+    pub fn analytic_iteration_cycles(
+        cfg: &ChipConfig,
+        model: &ModelConfig,
+        exec: &crate::model::exec::ExecConfig,
+        shape: SurrogateShape,
+        batch: &IterBatch,
+    ) -> f64 {
+        let core = &cfg.core;
+        let m = batch.total_q_tokens();
+        if m == 0 {
+            return 0.0;
+        }
+        let tp = shape.tp.max(1);
+        let h = model.hidden as u64;
+        let qd = model.q_dim() as u64;
+        let kvd = model.kv_dim() as u64;
+        let dtype = model.dtype_bytes;
+        let strategy = exec.strategy_for(m);
+        let link_bpc = cfg.noc.link_bytes_per_cycle(cfg.freq_mhz).max(1e-9);
+        let hbm_bpc = core.hbm_bytes_per_cycle(cfg.freq_mhz).max(1e-9);
+
+        // One `[m,k]×[k,n]` GEMM: compute on the per-core shard + ring
+        // collective bytes over one NoC link.
+        let gemm = |m: u64, k: u64, n: u64| -> f64 {
+            let (pm, pk, pn, comm_bytes) = match strategy {
+                PartitionStrategy::InputOnly => (m.div_ceil(tp), k, n, 0.0),
+                PartitionStrategy::OneDimMN => (
+                    m,
+                    k,
+                    n.div_ceil(tp),
+                    ((tp - 1) * m * k * dtype) as f64 / tp as f64,
+                ),
+                PartitionStrategy::OneDimK => (
+                    m,
+                    k.div_ceil(tp),
+                    n,
+                    (2 * (tp - 1) * m * n * dtype) as f64 / tp as f64,
+                ),
+                PartitionStrategy::TwoDim { rows, cols } => {
+                    let (r, c) = (rows.max(1) as u64, cols.max(1) as u64);
+                    (
+                        m,
+                        k.div_ceil(r),
+                        n.div_ceil(c),
+                        (2 * (r - 1) * m * n.div_ceil(c) * dtype) as f64 / r as f64
+                            + ((c - 1) * m * k.div_ceil(r) * dtype) as f64 / c as f64,
+                    )
+                }
+            };
+            compute::matmul_cycles(cfg, core, pm, pk, pn) as f64 + comm_bytes / link_bpc
+        };
+
+        let mut layer = 0.0;
+        layer += 2.0 * compute::rmsnorm_cycles(core, m, h.div_ceil(tp)) as f64;
+        layer += gemm(m, h, qd + 2 * kvd);
+        layer += compute::rope_cycles(core, m, (qd + kvd).div_ceil(tp)) as f64;
+        let heads = (model.heads as u64).div_ceil(tp).max(1);
+        for item in &batch.items {
+            layer += compute::attention_cycles(
+                cfg,
+                core,
+                heads,
+                item.q_tokens,
+                item.kv_tokens.max(1),
+                model.head_dim as u64,
+            ) as f64;
+        }
+        layer += gemm(m, qd, h);
+        layer += 2.0 * compute::vector_cycles(core, m * h.div_ceil(tp), 1) as f64;
+        // FFN; MoE layers are priced as their active-expert dense
+        // equivalent (the calibration ratio absorbs dispatch/combine).
+        let inter = match &model.moe {
+            Some(moe) => moe.expert_intermediate as u64 * moe.top_k as u64,
+            None => model.intermediate as u64,
+        };
+        layer += gemm(m, h, 2 * inter);
+        layer += compute::swiglu_cycles(core, m, inter.div_ceil(tp)) as f64;
+        layer += gemm(m, inter, h);
+
+        // Weight-stream roofline: a layer can never finish before its HBM
+        // weight shard has streamed in.
+        let layers = exec.layers.max(1) as u64;
+        let hbm_layer = (shape.weight_hbm_bytes / layers) as f64 / hbm_bpc;
+        let mut total = layers as f64 * layer.max(hbm_layer);
+
+        if exec.with_logits {
+            let lm = batch.logit_tokens();
+            if lm > 0 {
+                let vocab_shard = (model.vocab as u64).div_ceil(tp);
+                let logits = compute::matmul_cycles(cfg, core, lm, h, vocab_shard) as f64
+                    + compute::rmsnorm_cycles(core, lm, h.div_ceil(tp)) as f64;
+                let embed = (vocab_shard * h * dtype) as f64 / hbm_bpc;
+                total += logits.max(embed);
+            }
+        }
+        total
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -155,6 +399,63 @@ mod tests {
         assert_ne!(LatencyMemo::key_layer(&d, &kv), LatencyMemo::key_layer(&p, &kv));
         let two = IterBatch::new(vec![BatchItem::decode(1, 256), BatchItem::decode(2, 256)]);
         assert_ne!(LatencyMemo::key_layer(&d, &kv), LatencyMemo::key_layer(&two, &kv));
+    }
+
+    #[test]
+    fn sim_level_parses_and_defaults_to_txn() {
+        assert_eq!(SimLevel::default(), SimLevel::Txn);
+        assert_eq!(SimLevel::parse("txn").unwrap(), SimLevel::Txn);
+        assert_eq!(SimLevel::parse("fast").unwrap(), SimLevel::Fast);
+        assert_eq!(SimLevel::parse("analytic").unwrap(), SimLevel::Fast);
+        assert!(SimLevel::parse("warp").is_err());
+    }
+
+    #[test]
+    fn surrogate_keys_bucket_shape_classes() {
+        // Same phase/size bucket → same class.
+        let a = IterBatch::new(vec![BatchItem::decode(1, 100)]);
+        let b = IterBatch::new(vec![BatchItem::decode(9, 300)]);
+        assert_eq!(Surrogate::key(&a), Surrogate::key(&b));
+        // Phase flip or a KV jump past the bucket edge → new class.
+        let p = IterBatch::new(vec![BatchItem::prefill(1, 100, 100)]);
+        assert_ne!(Surrogate::key(&a), Surrogate::key(&p));
+        let far = IterBatch::new(vec![BatchItem::decode(1, 5000)]);
+        assert_ne!(Surrogate::key(&a), Surrogate::key(&far));
+    }
+
+    #[test]
+    fn surrogate_predicts_only_after_calibration() {
+        let mut s = Surrogate::new();
+        let key = 7u64;
+        assert_eq!(s.predict(key, 1000.0), None);
+        s.calibrate(key, 2000, 1000.0); // measured 2× analytic
+        assert_eq!(s.predict(key, 1000.0), Some(2000));
+        // Ratio scales across the bucket.
+        assert_eq!(s.predict(key, 500.0), Some(1000));
+        assert_eq!((s.calibrations, s.replays), (1, 2));
+    }
+
+    #[test]
+    fn analytic_cycles_scale_with_batch_and_kv() {
+        use crate::config::ChipConfig;
+        use crate::model::exec::ExecConfig;
+        use crate::parallel::partition::PartitionStrategy;
+        let cfg = ChipConfig::large_core();
+        let model = crate::config::ModelConfig::qwen3_4b();
+        let exec = ExecConfig::new(PartitionStrategy::OneDimK, 4, true);
+        let shape = SurrogateShape {
+            tp: 4,
+            weight_hbm_bytes: 1 << 30,
+        };
+        let at = |b: &IterBatch| Surrogate::analytic_iteration_cycles(&cfg, &model, &exec, shape, b);
+        let small = at(&IterBatch::new(vec![BatchItem::prefill(1, 128, 128)]));
+        let big = at(&IterBatch::new(vec![BatchItem::prefill(1, 1024, 1024)]));
+        assert!(small > 0.0);
+        assert!(big > small, "more tokens must cost more: {big} vs {small}");
+        let short_kv = at(&IterBatch::new(vec![BatchItem::decode(1, 128)]));
+        let long_kv = at(&IterBatch::new(vec![BatchItem::decode(1, 8192)]));
+        assert!(long_kv > short_kv, "longer KV must cost more");
+        assert_eq!(at(&IterBatch::new(vec![])), 0.0);
     }
 
     #[test]

@@ -27,6 +27,7 @@
 
 use crate::config::{ChipConfig, CoreConfig, ModelConfig, WorkloadConfig};
 use crate::memmgr::planner::{plan as sram_plan, PlanRequest, SramPlan};
+use crate::model::memo::SimLevel;
 use crate::parallel::layout::PipelineLayout;
 use crate::parallel::partition::{partition_cost, PartitionStrategy};
 use crate::parallel::pd_placement::{assign, fleet_split, PdPlacementPolicy};
@@ -113,6 +114,9 @@ pub struct DeploymentPlan {
     pub cross_pipe: bool,
     pub affinity_gap: usize,
     pub memo: bool,
+    /// Simulation fidelity: transaction-level (default) or the calibrated
+    /// analytic surrogate (`--sim-level fast`).
+    pub sim_level: SimLevel,
 }
 
 impl DeploymentPlan {
@@ -139,6 +143,7 @@ impl DeploymentPlan {
             cross_pipe: false,
             affinity_gap: 4,
             memo: false,
+            sim_level: SimLevel::Txn,
         }
     }
 
@@ -169,6 +174,7 @@ impl DeploymentPlan {
             cross_pipe: false,
             affinity_gap: 4,
             memo: false,
+            sim_level: SimLevel::Txn,
         }
     }
 

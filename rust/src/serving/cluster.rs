@@ -372,6 +372,14 @@ pub struct ClusterConfig {
     /// heartbeat-style failure detection and KV-aware recovery — see
     /// [`crate::serving::faults`].
     pub faults: Option<FaultSchedule>,
+    /// Worker threads advancing independent chips inside each conservative
+    /// synchronization window (CLI `--sim-threads`). `1` (the default)
+    /// keeps the literal sequential event loop; any `N > 1` is
+    /// byte-identical to it by construction — see the window invariant at
+    /// [`simulate_cluster_mixed`]. The `NPUSIM_SIM_THREADS` env var
+    /// overrides a default of 1 (so CI can exercise the parallel path
+    /// across the whole suite without touching call sites).
+    pub sim_threads: usize,
 }
 
 impl ClusterConfig {
@@ -416,6 +424,7 @@ impl ClusterConfig {
             slo_ttft_s: self.slo_ttft_s,
             shed_scope: self.shed_scope,
             faults: self.faults,
+            sim_threads: self.sim_threads,
         }
     }
 
@@ -464,6 +473,7 @@ pub struct ClusterBuilder {
     slo_ttft_s: f64,
     shed_scope: ShedScope,
     faults: Option<FaultSchedule>,
+    sim_threads: usize,
 }
 
 impl ClusterBuilder {
@@ -478,6 +488,7 @@ impl ClusterBuilder {
             slo_ttft_s: 2.0,
             shed_scope: ShedScope::default(),
             faults: None,
+            sim_threads: 1,
         }
     }
 
@@ -518,6 +529,13 @@ impl ClusterBuilder {
         self
     }
 
+    /// Worker threads for the conservative-window parallel stepping path
+    /// (clamped to at least 1).
+    pub fn sim_threads(mut self, threads: usize) -> Self {
+        self.sim_threads = threads.max(1);
+        self
+    }
+
     pub fn build(self) -> ClusterConfig {
         ClusterConfig {
             fleet: self.fleet,
@@ -529,6 +547,7 @@ impl ClusterBuilder {
             slo_ttft_s: self.slo_ttft_s,
             shed_scope: self.shed_scope,
             faults: self.faults,
+            sim_threads: self.sim_threads,
         }
     }
 }
@@ -1001,6 +1020,7 @@ pub fn simulate_cluster_mixed(
     let mut handoffs = 0u64;
     let mut done = 0usize;
     let mut guard = 0u64;
+    let par_threads = effective_sim_threads(cfg.sim_threads);
 
     while done < total {
         guard += 1;
@@ -1504,6 +1524,39 @@ pub fn simulate_cluster_mixed(
                     }
                 }
             }
+        } else if par_threads > 1 && !fleet_disagg {
+            // Conservative-window parallel stepping (`--sim-threads N`).
+            // Reaching this branch means the earliest event is a chip
+            // action *strictly* below every other source (the branch chain
+            // above admits arrivals/transit/control on ties), so every
+            // chip action before `window = min(arr_t, tra_t, ctrl_t)` is
+            // chip-local: in this fault-free-or-static window the act arm
+            // touches only `scheds[i]`/`chips[i]`/`per_chip[i]` plus the
+            // commutative `done` counter, and chip health cannot change
+            // (health transitions are control events, which are >= the
+            // window by construction). Draining each chip independently
+            // until its next action reaches the window therefore performs
+            // exactly the act events the sequential loop would, in the
+            // same per-chip order — the rollup is byte-identical. The
+            // fleet-disagg act arm routes handoffs through shared state,
+            // so role-specialized fleets keep the sequential path.
+            let window = arr_t.min(tra_t).min(ctrl_t);
+            let up: Vec<bool> = (0..n)
+                .map(|i| fault.as_ref().map_or(true, |f| f.health[i].up()))
+                .collect();
+            let (retired, steps) = drain_window(
+                &mut scheds,
+                &mut chips,
+                &mut per_chip,
+                &up,
+                window,
+                par_threads,
+                model,
+            )?;
+            done += retired;
+            // Mirror the sequential guard: one tick per drained act event
+            // (the loop head already charged this pass's tick).
+            guard += steps.saturating_sub(1);
         } else {
             let (_, i) = act.expect("act_t finite");
             done += scheds[i].step(&mut chips[i], model, &mut per_chip[i])?;
@@ -1638,6 +1691,86 @@ pub fn simulate_cluster_mixed(
         recovery,
         freq_mhz: freq,
     })
+}
+
+/// Worker-thread count actually used by the cluster driver: an explicit
+/// [`ClusterConfig::sim_threads`] wins; a default of 1 can be overridden
+/// by the `NPUSIM_SIM_THREADS` env var (how CI runs the whole suite over
+/// the parallel path without touching call sites). Always at least 1.
+pub fn effective_sim_threads(cfg_threads: usize) -> usize {
+    if cfg_threads != 1 {
+        return cfg_threads.max(1);
+    }
+    std::env::var("NPUSIM_SIM_THREADS")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .unwrap_or(1)
+        .max(1)
+}
+
+/// Advance every up chip whose next action is strictly before `window`,
+/// spreading chips round-robin over `threads` scoped worker threads.
+///
+/// Safety of the parallelism is structural, not locked: each lane owns a
+/// disjoint set of `(scheduler, chip, metrics)` triples by `&mut`
+/// borrow-splitting, and within the window a chip's actions touch nothing
+/// outside its triple (see the call-site invariant). Lanes are joined in
+/// index order and their retirement/step counts summed, so the result —
+/// like the per-chip state — is independent of thread interleaving.
+fn drain_window(
+    scheds: &mut [Box<dyn Scheduler>],
+    chips: &mut [ChipSim],
+    per_chip: &mut [Metrics],
+    up: &[bool],
+    window: Cycle,
+    threads: usize,
+    model: &ModelConfig,
+) -> anyhow::Result<(usize, u64)> {
+    let mut lanes: Vec<Vec<(&mut Box<dyn Scheduler>, &mut ChipSim, &mut Metrics)>> =
+        (0..threads).map(|_| Vec::new()).collect();
+    for (i, ((s, c), m)) in scheds
+        .iter_mut()
+        .zip(chips.iter_mut())
+        .zip(per_chip.iter_mut())
+        .enumerate()
+    {
+        if up[i] {
+            lanes[i % threads].push((s, c, m));
+        }
+    }
+    let results: Vec<anyhow::Result<(usize, u64)>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = lanes
+            .into_iter()
+            .map(|lane| {
+                scope.spawn(move || {
+                    let (mut retired, mut steps) = (0usize, 0u64);
+                    for (s, c, m) in lane {
+                        while s.next_action(c).is_some_and(|t| t < window) {
+                            steps += 1;
+                            anyhow::ensure!(
+                                steps < 64_000_000,
+                                "cluster livelock inside a parallel window"
+                            );
+                            retired += s.step(c, model, m)?;
+                        }
+                    }
+                    Ok((retired, steps))
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("sim worker thread panicked"))
+            .collect()
+    });
+    let mut retired = 0usize;
+    let mut steps = 0u64;
+    for r in results {
+        let (lane_retired, lane_steps) = r?;
+        retired += lane_retired;
+        steps += lane_steps;
+    }
+    Ok((retired, steps))
 }
 
 #[cfg(test)]
@@ -1972,6 +2105,41 @@ mod tests {
         assert_eq!(a.control, b.control);
         assert_eq!(b.faults, FaultStats::default());
         assert!(b.recovery.is_empty());
+    }
+
+    #[test]
+    fn parallel_window_stepping_is_bit_identical() {
+        // The tentpole invariant: any `--sim-threads N` produces the same
+        // rollup as the sequential loop, per chip and per record.
+        let model = ModelConfig::qwen3_4b();
+        let w = WorkloadConfig::sharegpt_like(10).with_seed(5);
+        let reqs = request::generate(&w);
+        let base = ClusterConfig::new(
+            ChipConfig::large_core(),
+            4,
+            SchedulerConfig::Fusion(FusionConfig::default()),
+            RouterPolicy::LeastLoaded,
+        );
+        let seq = simulate_cluster_requests(&base, &model, reqs.clone()).unwrap();
+        for threads in [2, 8] {
+            let mut cfg = base.clone();
+            cfg.sim_threads = threads;
+            let par = simulate_cluster_requests(&cfg, &model, reqs.clone()).unwrap();
+            assert_eq!(
+                format!("{seq:?}"),
+                format!("{par:?}"),
+                "threads={threads} diverged from the sequential schedule"
+            );
+        }
+    }
+
+    #[test]
+    fn effective_sim_threads_prefers_explicit_config() {
+        // An explicit non-default config wins regardless of environment;
+        // the floor is 1. (The env fallback itself is exercised by the CI
+        // matrix leg, not here — tests must not mutate global env.)
+        assert_eq!(effective_sim_threads(4), 4);
+        assert_eq!(effective_sim_threads(0), 1);
     }
 
     /// A mid-run crash with no restart: the stranded requests recover onto

@@ -17,6 +17,7 @@
 
 use crate::config::{ModelConfig, WorkloadConfig};
 use crate::parallel::partition::PartitionStrategy;
+use crate::model::memo::SimLevel;
 use crate::parallel::pd_placement::PdPlacementPolicy;
 use crate::parallel::plan::{DeploymentPlan, PdMode};
 use crate::serving::metrics::Metrics;
@@ -65,6 +66,10 @@ pub struct DisaggConfig {
     /// Operator-latency memoization (approximate fast path, off by
     /// default).
     pub memo: bool,
+    /// Simulation fidelity (`--sim-level`): transaction-level (default)
+    /// or the calibrated analytic surrogate — see
+    /// [`crate::model::memo::Surrogate`].
+    pub sim_level: SimLevel,
 }
 
 impl DisaggConfig {
@@ -107,6 +112,7 @@ impl DisaggConfig {
             hbm_tier_frac: plan.hbm_tier_frac,
             cross_pipe: plan.cross_pipe,
             memo: plan.memo,
+            sim_level: plan.sim_level,
         })
     }
 

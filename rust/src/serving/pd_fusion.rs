@@ -13,6 +13,7 @@
 //! are convenience wrappers kept for the original call sites.
 
 use crate::config::{ModelConfig, WorkloadConfig};
+use crate::model::memo::SimLevel;
 use crate::parallel::partition::PartitionStrategy;
 use crate::parallel::placement::Placement;
 use crate::parallel::plan::{DeploymentPlan, PdMode};
@@ -73,6 +74,10 @@ pub struct FusionConfig {
     /// Operator-latency memoization (approximate fast path, off by
     /// default — see [`crate::model::memo`]).
     pub memo: bool,
+    /// Simulation fidelity (`--sim-level`): transaction-level (default,
+    /// bit-identical to the historical simulator) or the calibrated
+    /// analytic surrogate — see [`crate::model::memo::Surrogate`].
+    pub sim_level: SimLevel,
     /// SLO-deadline-triggered preemption (CLI `--slo-preempt`): a queued
     /// request that has burned more than half this TTFT budget (seconds)
     /// waiting for capacity preempts as if one priority class higher, so a
@@ -105,6 +110,7 @@ impl FusionConfig {
             cross_pipe: plan.cross_pipe,
             affinity_gap: plan.affinity_gap,
             memo: plan.memo,
+            sim_level: plan.sim_level,
             slo_preempt: None,
         }
     }
@@ -170,6 +176,11 @@ mod tests {
         assert_eq!(f.hbm_tier_frac, 0.125, "the former fixed 1/8 carve");
         assert_eq!(f.affinity_gap, 4);
         assert!(f.slo_preempt.is_none(), "SLO preemption must default off");
+        assert_eq!(
+            f.sim_level,
+            SimLevel::Txn,
+            "the surrogate must default off — txn is the bit-exact level"
+        );
     }
 
     #[test]

@@ -203,6 +203,20 @@ fn next_arrival(
             *t += rng.exponential(rate);
             *t
         }
+        ArrivalProcess::Diurnal {
+            base_rate,
+            peak_rate,
+            period_s,
+        } => {
+            // Raised-cosine rate cycle starting at the trough; like
+            // FlashCrowd, each gap is drawn at the rate in force *now*
+            // (thinning-free approximation — exact in the limit of gaps
+            // short against the period).
+            let phase = (*t / period_s.max(1e-9)) * std::f64::consts::TAU;
+            let rate = base_rate + (peak_rate - base_rate) * 0.5 * (1.0 - phase.cos());
+            *t += rng.exponential(rate.max(1e-9));
+            *t
+        }
     }
 }
 
@@ -535,6 +549,35 @@ mod tests {
         assert!(
             during < before / 4.0,
             "spike gap {during} not ≪ base gap {before}"
+        );
+        // Deterministic for the seed.
+        assert_eq!(reqs, generate(&w));
+    }
+
+    #[test]
+    fn diurnal_arrivals_crest_at_half_period() {
+        let mut w = WorkloadConfig::sharegpt_like(300);
+        w = w.with_arrival(ArrivalProcess::Diurnal {
+            base_rate: 1.0,
+            peak_rate: 30.0,
+            period_s: 40.0,
+        });
+        let reqs = generate(&w);
+        for pair in reqs.windows(2) {
+            assert!(pair[0].arrival_s <= pair[1].arrival_s);
+        }
+        // The crest (around t = period/2) must pack arrivals much denser
+        // than the trough at the start of the cycle.
+        let count = |lo: f64, hi: f64| {
+            reqs.iter()
+                .filter(|r| (lo..hi).contains(&r.arrival_s))
+                .count()
+        };
+        let trough = count(0.0, 5.0).max(1);
+        let crest = count(15.0, 25.0);
+        assert!(
+            crest > 4 * trough,
+            "crest {crest} not ≫ trough {trough} arrivals"
         );
         // Deterministic for the seed.
         assert_eq!(reqs, generate(&w));

@@ -255,6 +255,7 @@ impl Scheduler for DisaggScheduler {
                         .with_prefix_cache(cfg.prefix_cache)
                         .with_hbm_tier(cfg.prefix_cache && cfg.hbm_tier, cfg.hbm_tier_frac)
                         .with_memo(cfg.memo)
+                        .with_sim_level(cfg.sim_level)
                     })
                     .collect()
             })
@@ -274,7 +275,8 @@ impl Scheduler for DisaggScheduler {
                     cfg.kv_share,
                     max_tokens,
                 )
-                .with_memo(cfg.memo),
+                .with_memo(cfg.memo)
+                .with_sim_level(cfg.sim_level),
                 pending: VecDeque::new(),
                 active: Vec::new(),
             })

@@ -61,7 +61,12 @@ pub struct Incomplete {
 /// [`ChipSim`] cores). The probe methods ([`Scheduler::pending_work`],
 /// [`Scheduler::kv_utilization`], [`Scheduler::probe_prefix`]) are the
 /// read-only signals cluster routers steer by.
-pub trait Scheduler {
+///
+/// `Send` is a supertrait so the cluster driver can advance independent
+/// chips on worker threads inside a conservative synchronization window
+/// (`--sim-threads`); scheduler state is plain owned data, so every
+/// implementation satisfies it automatically.
+pub trait Scheduler: Send {
     /// Short policy name (used in tables and error messages).
     fn name(&self) -> &'static str;
 

@@ -149,6 +149,7 @@ pub(crate) fn build_pipes(
                     .with_prefix_cache(cfg.prefix_cache)
                     .with_hbm_tier(cfg.prefix_cache && cfg.hbm_tier, cfg.hbm_tier_frac)
                     .with_memo(cfg.memo)
+                    .with_sim_level(cfg.sim_level)
                 })
                 .collect(),
             queue: VecDeque::new(),

@@ -7,7 +7,7 @@ use crate::memmgr::planner::{plan, PlanRequest};
 use crate::memmgr::prefix::{BlockKey, TierMatch};
 use crate::memmgr::{KvCache, KV_BLOCK_TOKENS};
 use crate::model::exec::{group_now, run_iteration_memo, ExecConfig};
-use crate::model::memo::LatencyMemo;
+use crate::model::memo::{LatencyMemo, SimLevel, Surrogate, SurrogateShape};
 use crate::model::IterBatch;
 use crate::parallel::placement::TpGroup;
 use crate::sim::chip::ChipSim;
@@ -25,6 +25,9 @@ pub struct StageWorker {
     pub kv: KvCache,
     /// Operator-latency memo (None = fully detailed simulation).
     pub memo: Option<LatencyMemo>,
+    /// Calibrated analytic surrogate (`--sim-level fast`; None = the
+    /// transaction-level path, bit-identical to the historical simulator).
+    pub surrogate: Option<Surrogate>,
 }
 
 impl StageWorker {
@@ -76,6 +79,7 @@ impl StageWorker {
             plan: p,
             kv,
             memo: None,
+            surrogate: None,
         }
     }
 
@@ -116,6 +120,19 @@ impl StageWorker {
     pub fn with_memo(mut self, on: bool) -> Self {
         if on {
             self.memo = Some(LatencyMemo::new());
+        }
+        self
+    }
+
+    /// Select the simulation fidelity level on this worker (builder
+    /// style). [`SimLevel::Txn`] (the default) leaves the worker
+    /// bit-identical to the historical transaction-level simulator;
+    /// [`SimLevel::Fast`] prices iterations through the calibrated
+    /// analytic [`Surrogate`] after one transaction-level calibration run
+    /// per shape class.
+    pub fn with_sim_level(mut self, level: SimLevel) -> Self {
+        if level == SimLevel::Fast {
+            self.surrogate = Some(Surrogate::new());
         }
         self
     }
@@ -196,6 +213,9 @@ impl StageWorker {
     /// iteration may demote cold prefixes under SRAM pressure — that tier
     /// traffic is charged on the group right after the iteration.
     pub fn run(&mut self, chip: &mut ChipSim, model: &ModelConfig, batch: &IterBatch) -> Cycle {
+        if self.surrogate.is_some() {
+            return self.run_fast(chip, model, batch);
+        }
         let t = run_iteration_memo(
             chip,
             &self.group,
@@ -208,6 +228,72 @@ impl StageWorker {
         );
         self.charge_tier_traffic(chip);
         group_now(chip, &self.group).max(t)
+    }
+
+    /// `--sim-level fast`: the first iteration of each shape class runs
+    /// transaction-level to calibrate the analytic surrogate; every later
+    /// iteration of the class keeps exact KV bookkeeping (append, spill
+    /// writeback, tier traffic — token conservation is not approximated)
+    /// but replaces operator execution with one uniform group advance of
+    /// the surrogate-predicted duration.
+    fn run_fast(&mut self, chip: &mut ChipSim, model: &ModelConfig, batch: &IterBatch) -> Cycle {
+        if batch.is_empty() {
+            return group_now(chip, &self.group);
+        }
+        let shape = SurrogateShape {
+            tp: self.group.len().max(1) as u64,
+            weight_hbm_bytes: self.plan.weight_hbm_bytes,
+        };
+        let key = Surrogate::key(batch);
+        let analytic =
+            Surrogate::analytic_iteration_cycles(&chip.cfg, model, &self.exec, shape, batch);
+        let predicted = self
+            .surrogate
+            .as_mut()
+            .expect("run_fast requires a surrogate")
+            .predict(key, analytic);
+        let Some(dur) = predicted else {
+            // Calibration miss: run this shape class once at transaction
+            // level and record the measured/analytic ratio.
+            let t0 = chip.sync(&self.group.coords);
+            let t = run_iteration_memo(
+                chip,
+                &self.group,
+                model,
+                &self.plan,
+                &self.exec,
+                batch,
+                &mut self.kv,
+                None,
+            );
+            let t1 = group_now(chip, &self.group).max(t);
+            self.surrogate
+                .as_mut()
+                .expect("run_fast requires a surrogate")
+                .calibrate(key, t1.saturating_sub(t0), analytic);
+            self.charge_tier_traffic(chip);
+            return t1;
+        };
+        // Replay: exact KV appends (spill writeback charged like the
+        // detailed path), then one group-uniform advance by the predicted
+        // duration, recorded as Gemm time so utilization stays plausible.
+        let mut spill_bytes = 0;
+        for item in &batch.items {
+            spill_bytes += self.kv.append(item.request, item.q_tokens).hbm_bytes;
+        }
+        if spill_bytes > 0 {
+            for &c in &self.group.coords {
+                chip.core_mut(c).hbm_access(spill_bytes, OpClass::KvSpill);
+            }
+        }
+        let t0 = chip.sync(&self.group.coords);
+        for &c in &self.group.coords {
+            let core = chip.core_mut(c);
+            core.tracer.record(OpClass::Gemm, dur);
+            core.advance_to(t0 + dur);
+        }
+        self.charge_tier_traffic(chip);
+        group_now(chip, &self.group).max(t0 + dur)
     }
 
     /// Activation bytes handed to the next pipeline stage for a batch of
@@ -253,6 +339,39 @@ mod tests {
         let b2 = IterBatch::new(vec![BatchItem::decode(1, 257)]);
         let t2 = w.run(&mut chip, &model, &b2);
         assert!(t2 > t);
+    }
+
+    #[test]
+    fn fast_level_calibrates_once_then_replays() {
+        let mut chip = ChipSim::new(ChipConfig::large_core());
+        let model = ModelConfig::qwen3_4b();
+        let mut w = worker(&chip).with_sim_level(SimLevel::Fast);
+        assert!(w.admit(1));
+        let prefill = IterBatch::new(vec![BatchItem::prefill(1, 256, 256)]);
+        let t = w.run(&mut chip, &model, &prefill);
+        assert!(t > 0);
+        let sur = w.surrogate.as_ref().unwrap();
+        assert_eq!((sur.calibrations, sur.replays), (1, 0));
+        // Decode steps: first one calibrates its class, the rest replay
+        // and keep advancing time monotonically.
+        let mut last = t;
+        for kv_len in 257..270 {
+            let b = IterBatch::new(vec![BatchItem::decode(1, kv_len)]);
+            let now = w.run(&mut chip, &model, &b);
+            assert!(now > last, "time must advance: {now} vs {last}");
+            last = now;
+        }
+        let sur = w.surrogate.as_ref().unwrap();
+        assert!(sur.calibrations >= 2);
+        assert!(sur.replays >= 10, "replays {} calibrations {}", sur.replays, sur.calibrations);
+    }
+
+    #[test]
+    fn txn_level_is_the_default_and_keeps_the_detailed_path() {
+        let chip = ChipSim::new(ChipConfig::large_core());
+        let w = worker(&chip).with_sim_level(SimLevel::Txn);
+        assert!(w.surrogate.is_none());
+        assert!(worker(&chip).surrogate.is_none());
     }
 
     #[test]

@@ -9,6 +9,13 @@
 //!   (a NoC link, an HBM data bus, a bank, a systolic array). Reserving a
 //!   duration returns the actual start cycle — the event-driven equivalent
 //!   of waiting on the resource.
+//!
+//! Both are strictly deterministic (FIFO tie-breaks, no wall-clock, no
+//! map-iteration order). That determinism is what lets the cluster driver
+//! ([`crate::serving::cluster`]) step independent chips on worker threads
+//! under a conservative window and still reproduce the sequential
+//! schedule byte-for-byte: within a window each chip's events replay in
+//! exactly the order this queue would have produced them.
 
 use crate::util::units::Cycle;
 use std::cmp::Reverse;

@@ -301,6 +301,73 @@ fn fleet_disaggregation_preserves_per_request_token_counts() {
 }
 
 #[test]
+fn parallel_stepping_is_byte_identical_across_thread_counts() {
+    use npusim::serving::faults::{FaultEvent, FaultKind, FaultSchedule, RecoveryPolicy};
+    use npusim::serving::fleet::FleetSpec;
+    // The conservative-window parallel scheduler must reproduce the
+    // sequential schedule byte-for-byte at every worker thread count —
+    // across routers (the PR-3 golden-vector scenarios) and under a
+    // seeded mid-trace chip crash with recovery.
+    let model = ModelConfig::qwen3_4b();
+    let sched = SchedulerConfig::Fusion(FusionConfig {
+        tp: 16,
+        stages: 2,
+        prefix_cache: true,
+        ..FusionConfig::default()
+    });
+    let run = |router: RouterPolicy, faults: Option<FaultSchedule>, threads: usize| {
+        let mut b = ClusterConfig::builder(FleetSpec::homogeneous(
+            ChipConfig::large_core(),
+            4,
+            sched,
+        ))
+        .router(router)
+        .sim_threads(threads);
+        if let Some(f) = faults {
+            b = b.faults(f);
+        }
+        let w = WorkloadConfig::sharegpt_like(12).with_seed(2025);
+        let cm = cluster::simulate_cluster(&b.build(), &model, &w).unwrap();
+        format!("{cm:?}")
+    };
+    let crash = || {
+        Some(
+            FaultSchedule::new(vec![FaultEvent {
+                at_s: 0.05,
+                chip: 1,
+                kind: FaultKind::ChipCrash {
+                    restart_after_s: Some(0.2),
+                },
+            }])
+            .with_retries(6, 0.002)
+            .with_recovery(RecoveryPolicy::Recover),
+        )
+    };
+    for router in [
+        RouterPolicy::RoundRobin,
+        RouterPolicy::LeastLoaded,
+        RouterPolicy::PrefixAware,
+    ] {
+        let seq = run(router, None, 1);
+        for threads in [2usize, 8] {
+            assert_eq!(
+                seq,
+                run(router, None, threads),
+                "{router:?} diverged at {threads} sim threads"
+            );
+        }
+    }
+    let seq = run(RouterPolicy::LeastLoaded, crash(), 1);
+    for threads in [2usize, 8] {
+        assert_eq!(
+            seq,
+            run(RouterPolicy::LeastLoaded, crash(), threads),
+            "seeded-fault scenario diverged at {threads} sim threads"
+        );
+    }
+}
+
+#[test]
 fn simulated_time_is_monotone_in_workload_size() {
     check("monotone makespan", 6, |rng| {
         let base_n = rng.range(1, 3);

@@ -1,0 +1,196 @@
+//! Differential tests for the two-speed simulation: the calibrated
+//! analytic fast path (`--sim-level fast`) replayed against the
+//! transaction-level reference on the same traces.
+//!
+//! Three layers:
+//!
+//! 1. **Golden pin**: with the flag unset (or explicitly `txn`) the
+//!    simulation must stay byte-identical to the detailed path — the
+//!    surrogate is strictly opt-in.
+//! 2. **Structural invariants at the fast level**: token conservation
+//!    (every completed request reports exactly its offered input/output
+//!    token counts) and exactly-once completion (every offered request
+//!    finishes exactly once) hold on randomized small workloads, because
+//!    the fast path keeps the exact KV/scheduler bookkeeping and only
+//!    substitutes iteration latency.
+//! 3. **Metric agreement**: fast-level makespan / mean TTFT / mean TBT
+//!    land within a loose tolerance band of the transaction-level run on
+//!    every randomized workload (the tight ±10% band is gated at bench
+//!    scale by `scale_study` + `tools/bench_check`; here the traces are
+//!    tiny, so calibration cost amortizes over fewer replays).
+
+use npusim::config::{ChipConfig, ModelConfig, WorkloadConfig};
+use npusim::model::memo::SimLevel;
+use npusim::serving::metrics::Metrics;
+use npusim::serving::pd_disagg::DisaggConfig;
+use npusim::serving::pd_fusion::FusionConfig;
+use npusim::serving::request::{self, Request};
+use npusim::serving::scheduler::{self, SchedulerConfig};
+use npusim::sim::chip::ChipSim;
+use std::collections::HashMap;
+use std::fmt::Write as _;
+
+/// Canonical byte rendering (mirrors `golden_metrics`): every integer
+/// field of every record, sorted by id, plus the makespan.
+fn summarize(m: &Metrics) -> String {
+    let mut records: Vec<_> = m.records().to_vec();
+    records.sort_by_key(|r| r.id);
+    let mut out = String::new();
+    let _ = writeln!(out, "n={} makespan={}", m.n_requests(), m.makespan());
+    for r in records {
+        let _ = writeln!(
+            out,
+            "id={} arrival={} first={} finish={} in={} out={}",
+            r.id, r.arrival, r.first_token, r.finish, r.input_tokens, r.output_tokens
+        );
+    }
+    out
+}
+
+fn run_level(sys: &SchedulerConfig, w: &WorkloadConfig) -> Metrics {
+    let model = ModelConfig::qwen3_4b();
+    let mut chip = ChipSim::new(ChipConfig::large_core());
+    let mut sched = sys.build();
+    scheduler::simulate(&mut chip, &model, w, sched.as_mut())
+        .unwrap_or_else(|e| panic!("{} failed: {e:#}", sys.name()))
+}
+
+fn fusion_at(level: SimLevel) -> SchedulerConfig {
+    SchedulerConfig::Fusion(FusionConfig {
+        sim_level: level,
+        ..FusionConfig::default()
+    })
+}
+
+fn disagg_at(level: SimLevel) -> SchedulerConfig {
+    SchedulerConfig::Disagg(DisaggConfig {
+        sim_level: level,
+        ..DisaggConfig::p42_d21()
+    })
+}
+
+/// The randomized small-workload pool the property tests replay: mixed
+/// prefill/decode ratios and lengths across independent seeds.
+fn workload_pool() -> Vec<WorkloadConfig> {
+    let mut pool = Vec::new();
+    for seed in [3u64, 17, 41] {
+        pool.push(WorkloadConfig::sharegpt_like(5).with_seed(seed));
+    }
+    pool.push(WorkloadConfig::fixed_ratio(256, 24, 6).with_seed(7));
+    pool.push(WorkloadConfig::fixed_ratio(64, 48, 5).with_seed(23));
+    pool
+}
+
+/// Token conservation + exactly-once: every offered request completes
+/// exactly once carrying exactly its offered token counts.
+fn assert_exactly_once(tag: &str, reqs: &[Request], m: &Metrics) {
+    let want: HashMap<u64, (u64, u64)> = reqs
+        .iter()
+        .map(|r| (r.id, (r.input_len as u64, r.output_len as u64)))
+        .collect();
+    assert_eq!(
+        m.n_requests(),
+        reqs.len(),
+        "{tag}: completed != offered (lost or duplicated requests)"
+    );
+    let mut seen: HashMap<u64, u32> = HashMap::new();
+    for rec in m.records() {
+        *seen.entry(rec.id).or_insert(0) += 1;
+        let (i, o) = want
+            .get(&rec.id)
+            .unwrap_or_else(|| panic!("{tag}: unknown request id {}", rec.id));
+        assert_eq!(
+            (rec.input_tokens, rec.output_tokens),
+            (*i, *o),
+            "{tag}: request {} token counts drifted",
+            rec.id
+        );
+    }
+    assert!(
+        seen.values().all(|&c| c == 1),
+        "{tag}: some request completed more than once"
+    );
+}
+
+fn rel_err(x: f64, reference: f64) -> f64 {
+    if reference.abs() < 1e-12 {
+        return if x.abs() < 1e-12 { 0.0 } else { f64::INFINITY };
+    }
+    (x - reference).abs() / reference.abs()
+}
+
+/// Loose agreement band of the tiny-trace property tests; the tight ±10%
+/// band is enforced at bench scale by `scale_study`.
+const SMALL_TRACE_TOL: f64 = 0.30;
+
+#[test]
+fn txn_level_is_byte_identical_to_the_flag_unset_default() {
+    // The golden pin: `sim_level: Txn` (and the default, which must be
+    // Txn) cannot perturb a single cycle of the detailed schedule.
+    assert_eq!(SimLevel::default(), SimLevel::Txn);
+    for w in workload_pool() {
+        let base = summarize(&run_level(
+            &SchedulerConfig::Fusion(FusionConfig::default()),
+            &w,
+        ));
+        let txn = summarize(&run_level(&fusion_at(SimLevel::Txn), &w));
+        assert_eq!(base, txn, "explicit txn diverged from default on {}", w.name);
+        let d_base = summarize(&run_level(
+            &SchedulerConfig::Disagg(DisaggConfig::p42_d21()),
+            &w,
+        ));
+        let d_txn = summarize(&run_level(&disagg_at(SimLevel::Txn), &w));
+        assert_eq!(d_base, d_txn, "disagg txn diverged from default on {}", w.name);
+    }
+}
+
+#[test]
+fn fast_level_conserves_tokens_exactly_once_on_random_workloads() {
+    // Layer 2: the surrogate replaces iteration *latency*, never token
+    // bookkeeping — conservation must be exact, not approximate.
+    for w in workload_pool() {
+        let reqs = request::generate(&w);
+        for (tag, sys) in [
+            ("fusion/fast", fusion_at(SimLevel::Fast)),
+            ("disagg/fast", disagg_at(SimLevel::Fast)),
+        ] {
+            let m = run_level(&sys, &w);
+            assert_exactly_once(&format!("{tag} on {}", w.name), &reqs, &m);
+        }
+    }
+}
+
+#[test]
+fn fast_level_is_deterministic() {
+    // Calibration state is per-run, so two fresh fast-level runs of the
+    // same trace must agree byte-for-byte.
+    for w in workload_pool().into_iter().take(2) {
+        let a = summarize(&run_level(&fusion_at(SimLevel::Fast), &w));
+        let b = summarize(&run_level(&fusion_at(SimLevel::Fast), &w));
+        assert_eq!(a, b, "fast level not deterministic on {}", w.name);
+    }
+}
+
+#[test]
+fn fast_level_tracks_txn_metrics_within_tolerance() {
+    // Layer 3: differential metric agreement on every pooled workload.
+    for w in workload_pool() {
+        let txn = run_level(&fusion_at(SimLevel::Txn), &w);
+        let fast = run_level(&fusion_at(SimLevel::Fast), &w);
+        let pairs = [
+            ("makespan", fast.makespan() as f64, txn.makespan() as f64),
+            ("ttft_mean", fast.ttft_s().mean(), txn.ttft_s().mean()),
+            ("tbt_mean", fast.tbt_s().mean(), txn.tbt_s().mean()),
+        ];
+        for (name, f, t) in pairs {
+            let err = rel_err(f, t);
+            assert!(
+                err <= SMALL_TRACE_TOL,
+                "{name} on {}: fast {f} vs txn {t} ({:.1}% > {:.0}%)",
+                w.name,
+                err * 100.0,
+                SMALL_TRACE_TOL * 100.0
+            );
+        }
+    }
+}

@@ -16,9 +16,10 @@
 //!    study (one auto row plus the named presets), the overload
 //!    control-plane study (fifo / drop / defer admission policies), the
 //!    fault study (none / crash_recover / crash_resubmit / degrade
-//!    scenarios on a ≥ 4-chip fleet), and the fleet-specialization study
+//!    scenarios on a ≥ 4-chip fleet), the fleet-specialization study
 //!    (homog-fused / fleet-planned / fleet-planned-crash at one equal
-//!    chip count).
+//!    chip count), and the two-speed simulation study (txn / txn-par8 /
+//!    fast rows on a ≥ 16-chip fleet).
 //! 2. **Invariants**: on the shared-prefix workload the prefix-hit-aware
 //!    router must beat round-robin on TTFT p50 for the fusion system (the
 //!    cluster acceptance property), cache-on must not lose TTFT, the
@@ -41,6 +42,13 @@
 //!    count — and exactly-once across the prefill→decode handoff
 //!    (completed + shed = offered with exact per-request token counts
 //!    in every fleet scenario, including under a decode-chip crash).
+//!    The scale study adds the two-speed tolerance gate: the calibrated
+//!    analytic fast path must be strictly faster than the
+//!    transaction-level reference (`speedup` > 1) while landing its
+//!    TTFT, TBT and goodput-under-SLO within ±10% of it, the parallel
+//!    txn-par8 row must report metrics identical to sequential txn
+//!    (conservative-window stepping is bit-exact by construction), and
+//!    every level must conserve requests (completed + shed = offered).
 //! 3. **Numbers**: `tokens_per_s` must not drop, and `ttft_p99_s` must
 //!    not rise, by more than the tolerance against the matching baseline
 //!    row. A baseline marked `"provisional": true` skips this layer (the
@@ -233,6 +241,17 @@ fn check_structure(current: &Json, violations: &mut Vec<String>) {
             }
         }
     }
+    let scale = rows(current, "scale");
+    for level in ["txn", "txn-par8", "fast"] {
+        match scale_row(&scale, level) {
+            None => violations.push(format!("scale row missing: {level}")),
+            Some(r) => {
+                if r.num("chips").unwrap_or(0.0) < 16.0 {
+                    violations.push(format!("scale row {level} runs on < 16 chips"));
+                }
+            }
+        }
+    }
 }
 
 /// The slo-section row of one admission policy.
@@ -251,6 +270,11 @@ fn fault_row<'a>(fault: &[&'a Json], scenario: &str) -> Option<&'a Json> {
 /// The fleet-section row of one fleet configuration.
 fn fleet_row<'a>(fleet: &[&'a Json], name: &str) -> Option<&'a Json> {
     fleet.iter().find(|r| r.str("fleet") == Some(name)).copied()
+}
+
+/// The scale-section row of one simulation level.
+fn scale_row<'a>(scale: &[&'a Json], level: &str) -> Option<&'a Json> {
+    scale.iter().find(|r| r.str("level") == Some(level)).copied()
 }
 
 /// `prefill_tokens_skipped` of one tier-ablation row.
@@ -477,6 +501,60 @@ fn check_invariants(current: &Json, violations: &mut Vec<String>) {
             }
         }
         _ => violations.push("cannot evaluate fleet-specialization invariants".into()),
+    }
+    // The two-speed simulation acceptance properties.
+    let scale = rows(current, "scale");
+    for level in ["txn", "txn-par8", "fast"] {
+        let Some(r) = scale_row(&scale, level) else { continue };
+        // Every simulation level must conserve requests exactly.
+        let (offered, completed, shed) = (
+            r.num("offered").unwrap_or(-1.0),
+            r.num("completed").unwrap_or(-1.0),
+            r.num("shed").unwrap_or(-1.0),
+        );
+        if completed + shed != offered {
+            violations.push(format!(
+                "scale {level}: completed {completed} + shed {shed} != offered {offered}"
+            ));
+        }
+    }
+    match (
+        scale_row(&scale, "txn"),
+        scale_row(&scale, "txn-par8"),
+        scale_row(&scale, "fast"),
+    ) {
+        (Some(txn), Some(par), Some(fast)) => {
+            // Parallel stepping must be bit-exact, not merely close: the
+            // simulated metrics of the 8-thread run equal the sequential
+            // run's to the last printed digit.
+            for metric in ["events", "ttft_ms", "tbt_ms", "goodput_tok_s"] {
+                let (p, t) = (par.num(metric), txn.num(metric));
+                if p != t {
+                    violations.push(format!(
+                        "scale txn-par8 {metric} {p:?} != sequential txn {t:?} \
+                         (parallel stepping must be bit-identical)"
+                    ));
+                }
+            }
+            // The calibrated surrogate must actually be faster...
+            let speedup = fast.num("speedup").unwrap_or(0.0);
+            if speedup <= 1.0 {
+                violations.push(format!(
+                    "scale fast path is not faster than transaction-level (speedup {speedup})"
+                ));
+            }
+            // ...while staying inside the ±10% error band on every
+            // user-visible metric.
+            for metric in ["ttft_err", "tbt_err", "goodput_err"] {
+                let err = fast.num(metric).unwrap_or(f64::INFINITY);
+                if err > 0.10 {
+                    violations.push(format!(
+                        "scale fast-vs-txn {metric} {err} exceeds the 10% tolerance band"
+                    ));
+                }
+            }
+        }
+        _ => violations.push("cannot evaluate two-speed simulation invariants".into()),
     }
 }
 
@@ -720,6 +798,35 @@ fn check_numbers(current: &Json, baseline: &Json, tol: f64, violations: &mut Vec
             b.num("tokens_per_s"),
             tol,
             true,
+            violations,
+        );
+    }
+    // Scale study: match rows on the level label. Only the simulated
+    // metrics are gated — wall_s / events_per_s / speedup are wall-clock
+    // and machine-dependent (speedup's > 1 floor lives in the invariant
+    // layer instead).
+    let cur_scale = rows(current, "scale");
+    let base_scale = rows(baseline, "scale");
+    for b in &base_scale {
+        let level = b.str("level").unwrap_or("");
+        let Some(c) = cur_scale.iter().find(|r| r.str("level") == Some(level)) else {
+            violations.push(format!("scale row disappeared: {level}"));
+            continue;
+        };
+        check_metric(
+            &format!("scale {level} goodput_tok_s"),
+            c.num("goodput_tok_s"),
+            b.num("goodput_tok_s"),
+            tol,
+            true,
+            violations,
+        );
+        check_metric(
+            &format!("scale {level} ttft_ms"),
+            c.num("ttft_ms"),
+            b.num("ttft_ms"),
+            tol,
+            false,
             violations,
         );
     }
