@@ -11,10 +11,12 @@
 //! (crash recovery vs client resubmission plus degradation windows, via
 //! [`fault_study::bench_rows`]), and (7) the fleet-specialization study
 //! (planned heterogeneous prefill/decode fleet vs homogeneous fused at
-//! equal chip count, via [`fleet_study::bench_rows`]), and (8) the
+//! equal chip count, via [`fleet_study::bench_rows`]), (8) the
 //! two-speed simulation study (transaction-level vs parallel stepping vs
 //! the calibrated analytic surrogate on a 16-chip diurnal trace, via
-//! [`scale_study::bench_rows`]) — and writes all
+//! [`scale_study::bench_rows`]), and (9) the speculative-decoding study
+//! (vanilla decode vs the gamma × acceptance grid with exact token
+//! conservation, via [`spec_study::bench_rows`]) — and writes all
 //! of it to
 //! `BENCH_serving.json` (wall-clock sim time, simulated tokens/s,
 //! TTFT/TBT p50/p99, prefix-cache hit rate, memo hit rate,
@@ -32,6 +34,7 @@ use crate::experiments::fleet_study::{self, FleetRun};
 use crate::experiments::overload_study::{self, OverloadRun};
 use crate::experiments::plan_study::{self, PlanRun};
 use crate::experiments::scale_study::{self, ScaleRun};
+use crate::experiments::spec_study::{self, SpecRun};
 use crate::experiments::tier_study::{self, TierRun};
 use crate::experiments::Opts;
 use crate::serving::metrics::Metrics;
@@ -278,6 +281,7 @@ fn render_json(
     fault: &[FaultRun],
     fleet: &[FleetRun],
     scale: &[ScaleRun],
+    spec: &[SpecRun],
 ) -> String {
     let mut j = String::new();
     let _ = writeln!(j, "{{");
@@ -496,6 +500,40 @@ fn render_json(
         );
     }
     let _ = writeln!(j, "  ],");
+    let _ = writeln!(j, "  \"spec\": [");
+    for (i, r) in spec.iter().enumerate() {
+        let _ = writeln!(
+            j,
+            "    {{\"policy\": \"{}\", \"gamma\": {}, \"acceptance\": {:.4}, \"offered\": {}, \
+             \"completed\": {}, \"shed\": {}, \"tokens_exact\": {}, \
+             \"acceptance_observed\": {:.4}, \"tbt_p50_ms\": {:.4}, \"tbt_p99_ms\": {:.4}, \
+             \"goodput_tok_s\": {:.3}, \"tokens_per_s\": {:.3}, \
+             \"tokens_per_weight_stream\": {:.4}, \"verify_steps\": {}, \"verify_m_p50\": {}, \
+             \"verify_above_threshold\": {}, \"m_threshold\": {}, \"preemptions\": {}, \
+             \"resumes\": {}}}{}",
+            r.label,
+            r.gamma,
+            r.acceptance,
+            r.offered,
+            r.completed,
+            r.shed,
+            r.tokens_exact,
+            r.acceptance_observed,
+            r.tbt_p50_ms,
+            r.tbt_p99_ms,
+            r.goodput_tok_s,
+            r.tok_s,
+            r.tokens_per_weight_stream,
+            r.verify_steps,
+            r.verify_m_p50,
+            r.verify_above_threshold,
+            r.m_threshold,
+            r.preemptions,
+            r.resumes,
+            if i + 1 < spec.len() { "," } else { "" }
+        );
+    }
+    let _ = writeln!(j, "  ],");
     let _ = writeln!(
         j,
         "  \"memo\": {{\"sweep\": \"fig13-mini\", \"wall_off_s\": {:.6}, \"wall_on_s\": {:.6}, \
@@ -518,6 +556,7 @@ pub fn run(opts: &Opts) -> anyhow::Result<Vec<Table>> {
     let fault = fault_study::bench_rows(opts)?;
     let fleet = fleet_study::bench_rows(opts)?;
     let scale = scale_study::bench_rows(opts)?;
+    let spec = spec_study::bench_rows(opts)?;
 
     let mut t1 = Table::new(
         "bench — prefix-sharing paged KV on the shared-prefix trace (Qwen3-4B, 64 cores)",
@@ -750,6 +789,34 @@ pub fn run(opts: &Opts) -> anyhow::Result<Vec<Table>> {
         ]);
     }
 
+    let mut t10 = Table::new(
+        "bench — speculative decoding (vanilla vs gamma × acceptance, Qwen3-4B, 64 cores)",
+        &[
+            "policy",
+            "offered",
+            "completed",
+            "accept obs",
+            "TBT p50 (ms)",
+            "goodput tok/s (SLO)",
+            "tok/weight-stream",
+            "verify M ≥ thresh",
+            "tokens exact",
+        ],
+    );
+    for r in &spec {
+        t10.row(&[
+            r.label.clone(),
+            r.offered.to_string(),
+            r.completed.to_string(),
+            f3(r.acceptance_observed),
+            f3(r.tbt_p50_ms),
+            f3(r.goodput_tok_s),
+            f3(r.tokens_per_weight_stream),
+            format!("{}/{}", r.verify_above_threshold, r.verify_steps),
+            r.tokens_exact.to_string(),
+        ]);
+    }
+
     let cluster_rr = cluster_study::ttft_p50(&cluster, "shared-prefix", "fusion", "rr");
     let cluster_prefix = cluster_study::ttft_p50(&cluster, "shared-prefix", "fusion", "prefix");
     println!(
@@ -779,13 +846,14 @@ pub fn run(opts: &Opts) -> anyhow::Result<Vec<Table>> {
             &fault,
             &fleet,
             &scale,
+            &spec,
         );
         std::fs::create_dir_all(dir)?;
         std::fs::write(dir.join("BENCH_serving.json"), &json)?;
         std::fs::write("BENCH_serving.json", &json)?;
     }
 
-    Ok(vec![t1, t2, t3, t4, t5, t6, t7, t8, t9])
+    Ok(vec![t1, t2, t3, t4, t5, t6, t7, t8, t9, t10])
 }
 
 #[cfg(test)]
@@ -967,8 +1035,37 @@ mod tests {
             goodput_err: 0.004,
             speedup: 7.2,
         }];
+        let spec = vec![SpecRun {
+            label: "g4-a0.80".into(),
+            gamma: 4,
+            acceptance: 0.8,
+            offered: 192,
+            completed: 192,
+            shed: 0,
+            expected_decode_tokens: 2112,
+            decode_tokens_committed: 2112,
+            tokens_exact: true,
+            drafted: 2500,
+            accepted: 1900,
+            rejected: 600,
+            acceptance_observed: 0.76,
+            tbt_p50_ms: 4.2,
+            tbt_p99_ms: 9.1,
+            ttft_p99_s: 0.12,
+            goodput_tok_s: 1500.0,
+            tok_s: 1520.0,
+            slo_ttft_s: 0.3,
+            slo_tbt_s: 0.02,
+            verify_steps: 11,
+            verify_m_p50: 512,
+            verify_above_threshold: 3,
+            m_threshold: 1642,
+            tokens_per_weight_stream: 3.4,
+            preemptions: 0,
+            resumes: 0,
+        }];
         let j = render_json(
-            &runs, &memo, 0.6, &cluster, &tier, &plan, &slo, &fault, &fleet, &scale,
+            &runs, &memo, 0.6, &cluster, &tier, &plan, &slo, &fault, &fleet, &scale, &spec,
         );
         assert!(j.starts_with("{\n"));
         assert!(j.trim_end().ends_with('}'));
@@ -996,5 +1093,12 @@ mod tests {
         assert!(j.contains("\"sim_threads\": 1"));
         assert!(j.contains("\"speedup\": 7.200"));
         assert!(j.contains("\"ttft_err\": 0.0310"));
+        assert!(j.contains("\"spec\": ["));
+        assert!(j.contains("\"policy\": \"g4-a0.80\""));
+        assert!(j.contains("\"gamma\": 4"));
+        assert!(j.contains("\"acceptance_observed\": 0.7600"));
+        assert!(j.contains("\"tokens_per_weight_stream\": 3.4000"));
+        assert!(j.contains("\"verify_above_threshold\": 3"));
+        assert!(j.contains("\"m_threshold\": 1642"));
     }
 }

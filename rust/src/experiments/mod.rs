@@ -24,6 +24,7 @@
 //! | `fault_study` | injected faults: crash recovery vs resubmit, degradation windows | [`fault_study`] |
 //! | `fleet_study` | fleet-level PD disaggregation: planned heterogeneous fleet vs homogeneous fused | [`fleet_study`] |
 //! | `scale_study` | two-speed simulation: parallel chip stepping + calibrated analytic fast path | [`scale_study`] |
+//! | `spec_study` | speculative decoding: vanilla vs gamma × acceptance grid, token conservation | [`spec_study`] |
 
 pub mod ablations;
 pub mod bench;
@@ -44,6 +45,7 @@ pub mod overload_study;
 pub mod plan_study;
 pub mod reference_hw;
 pub mod scale_study;
+pub mod spec_study;
 pub mod table2;
 pub mod tier_study;
 
@@ -91,7 +93,7 @@ impl Opts {
 pub const ALL: &[&str] = &[
     "table2", "fig7a", "fig7b", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13", "fig14",
     "headline", "ablations", "hybrid_study", "bench", "cluster_study", "tier_study", "plan_study",
-    "overload_study", "fault_study", "fleet_study", "scale_study",
+    "overload_study", "fault_study", "fleet_study", "scale_study", "spec_study",
 ];
 
 /// Run one experiment by id; returns its tables (already printed).
@@ -118,6 +120,7 @@ pub fn run(id: &str, opts: &Opts) -> anyhow::Result<Vec<Table>> {
         "fault_study" => fault_study::run(opts)?,
         "fleet_study" => fleet_study::run(opts)?,
         "scale_study" => scale_study::run(opts)?,
+        "spec_study" => spec_study::run(opts)?,
         other => anyhow::bail!("unknown experiment {other:?} (try one of {ALL:?})"),
     };
     for t in &tables {

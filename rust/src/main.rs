@@ -13,7 +13,7 @@ use npusim::config::{ChipConfig, ModelConfig, PriorityMix, WorkloadConfig};
 use npusim::coordinator::{Coordinator, GenRequest};
 use npusim::experiments::{self, Opts};
 use npusim::model::memo::SimLevel;
-use npusim::parallel::plan::{self, ChipRole, DeploymentPlan};
+use npusim::parallel::plan::{self, ChipRole, DeploymentPlan, SpecConfig};
 use npusim::serving::cluster::{
     simulate_cluster, simulate_cluster_requests, ClusterConfig, ClusterMetrics, RouterPolicy,
     ShedPolicy, ShedScope,
@@ -66,6 +66,7 @@ fn dispatch(args: &Args) -> Result<()> {
                  npusim simulate --chips 4 --fleet auto           # planner picks roles\n      \
                  npusim simulate --chips 4 --fault-seed 42 --chip-mttf 5.0 --shed-policy drop --shed-scope per-chip\n      \
                  npusim simulate --chips 16 --sim-level fast --sim-threads 8   # two-speed simulation\n      \
+                 npusim simulate --mode fusion --spec gamma=4,accept=0.8   # speculative decoding\n      \
                  npusim serve --prompt \"1,2,3,4\""
             );
             Ok(())
@@ -148,8 +149,18 @@ fn fusion_cfg_from(args: &Args) -> Result<FusionConfig> {
         memo: args.flag("memo"),
         sim_level: sim_level_from(args)?,
         slo_preempt: args.opt_parse::<f64>("slo-preempt")?,
+        spec: spec_from(args)?,
         ..defaults
     })
+}
+
+/// `--spec gamma=K,accept=P[,draft=F]` — speculative decoding. Unset
+/// keeps vanilla one-token-per-iteration decode bit-identical.
+fn spec_from(args: &Args) -> Result<Option<SpecConfig>> {
+    match args.opt("spec") {
+        Some(s) => Ok(Some(SpecConfig::parse(s)?)),
+        None => Ok(None),
+    }
 }
 
 /// `--sim-level txn|fast` (default txn, the bit-exact transaction level).
@@ -172,6 +183,7 @@ fn disagg_cfg_from(args: &Args) -> Result<DisaggConfig> {
         cross_pipe: args.flag("cross-pipe"),
         memo: args.flag("memo"),
         sim_level: sim_level_from(args)?,
+        spec: spec_from(args)?,
         ..DisaggConfig::default()
     })
 }
@@ -230,6 +242,9 @@ fn plan_from(
     plan.hbm_tier_frac = tier_frac_from(args)?;
     if let Some(gap) = args.opt_parse::<usize>("affinity-gap")? {
         plan.affinity_gap = gap;
+    }
+    if let Some(spec) = spec_from(args)? {
+        plan.spec = Some(spec);
     }
     println!("{}", plan.summary());
     Ok(plan)

@@ -53,6 +53,12 @@ impl Chain {
     pub fn replace_last(&mut self, block: u32) {
         *self.blocks.last_mut().expect("replace_last on empty chain") = block;
     }
+
+    /// Remove and return the last block (speculative-decode rollback).
+    /// The caller owns releasing the block's reference.
+    pub fn pop(&mut self) -> Option<u32> {
+        self.blocks.pop()
+    }
 }
 
 /// Fixed-size, ref-counted block allocator over a byte capacity.

@@ -123,6 +123,10 @@ pub struct KvStats {
     pub demoted_bytes: u64,
     /// Bytes streamed HBM→SRAM by promotions (charged as HBM reads).
     pub promoted_bytes: u64,
+    /// Bytes removed by speculative-decode rollback ([`KvCache::truncate`]).
+    pub rollback_bytes: u64,
+    /// SRAM blocks freed by speculative-decode rollback.
+    pub rollback_blocks: u64,
 }
 
 /// The bounded HBM region holding demoted prefix blocks, plus the
@@ -652,6 +656,56 @@ impl KvCache {
         out
     }
 
+    /// Roll back the most recent `n_tokens` of request `id`'s KV
+    /// (speculative-decode reject path). Unwinds the append order exactly:
+    /// spilled HBM bytes first (they are the newest), then SRAM tail
+    /// bytes, popping tail blocks that become empty. Only *private*
+    /// blocks (refcount 1) are popped — a block shared with the prefix
+    /// index or another request is never reclaimed, and a frozen shared
+    /// tail clamps the walk (speculative tokens never land in either, so
+    /// the clamp is a safety bound, not a lossy path). `n_tokens` must not
+    /// exceed the tokens appended since the last committed token. Returns
+    /// the bytes removed; the caller charges them as KV-spill-class HBM
+    /// traffic.
+    pub fn truncate(&mut self, id: u64, n_tokens: u64) -> u64 {
+        let mut remaining = n_tokens * self.bytes_per_token;
+        let block_bytes = self.sram.block_bytes();
+        let Some(entry) = self.entries.get_mut(&id) else {
+            return 0;
+        };
+        let mut removed = 0u64;
+        // Newest bytes live in the HBM spill buffer: unwind those first.
+        let take = remaining.min(entry.res.hbm_bytes);
+        entry.res.hbm_bytes -= take;
+        removed += take;
+        remaining -= take;
+        // Then unwind the SRAM tail.
+        while remaining > 0 && entry.res.sram_bytes > 0 {
+            let tail = entry.chain.last().expect("sram bytes without blocks");
+            if entry.frozen_tail_fill.is_some() || self.sram.refcount(tail) > 1 {
+                // The tail (and everything below it) is shared prefix
+                // content: clamp — rollback never reclaims shared bytes.
+                break;
+            }
+            // Earlier blocks are always full (appends fill tail room before
+            // allocating), so the tail's fill is the residency overhang.
+            let tail_fill = entry.res.sram_bytes - (entry.cap_bytes - block_bytes);
+            let take = remaining.min(tail_fill);
+            entry.res.sram_bytes -= take;
+            removed += take;
+            remaining -= take;
+            if take < tail_fill {
+                break; // partial unwind: the tail block stays
+            }
+            entry.chain.pop();
+            self.sram.release_block(tail);
+            entry.cap_bytes -= block_bytes;
+            self.stats.rollback_blocks += 1;
+        }
+        self.stats.rollback_bytes += removed;
+        removed
+    }
+
     /// Current residency of a request's KV.
     pub fn residency(&self, id: u64) -> KvResidency {
         self.entries.get(&id).map(|e| e.res).unwrap_or_default()
@@ -1149,6 +1203,87 @@ mod tests {
             }
             while kv.alloc_block().is_some() {}
             assert_eq!(kv.sram_free_bytes(), 0);
+        });
+    }
+
+    #[test]
+    fn truncate_unwinds_appends_hbm_first_and_pops_empty_blocks() {
+        let mut kv = cache(); // 4 SRAM blocks × 16 tokens
+        kv.admit(1);
+        kv.append(1, 70); // 64 SRAM + 6 spilled
+        assert_eq!(kv.residency(1).hbm_bytes, 6 * 8);
+        // Rolling back 10 tokens removes the 6 spilled first, then 4 from
+        // the SRAM tail — the tail block empties and is reclaimed.
+        assert_eq!(kv.truncate(1, 10), 10 * 8);
+        let r = kv.residency(1);
+        assert_eq!(r.hbm_bytes, 0);
+        assert_eq!(r.sram_bytes, 60 * 8);
+        assert_eq!(kv.sram_free_bytes(), 0, "60/64 tokens keep 4 blocks");
+        assert_eq!(kv.truncate(1, 12), 12 * 8); // 48 left: block 4 frees
+        assert_eq!(kv.sram_free_bytes(), 16 * 8);
+        let s = kv.stats();
+        assert_eq!(s.rollback_bytes, 22 * 8);
+        assert_eq!(s.rollback_blocks, 1);
+        // Re-appending after rollback lands exactly where it would have.
+        let a = kv.append(1, 16);
+        assert_eq!(a.sram_bytes, 16 * 8);
+        assert_eq!(kv.residency(1).total(), 64 * 8);
+    }
+
+    #[test]
+    fn truncate_never_reclaims_shared_prefix_blocks() {
+        let mut kv = cache();
+        kv.enable_prefix_cache();
+        let ks = keys(11, 32);
+        kv.admit_prefixed(1, &ks, u64::MAX, 0);
+        kv.append(1, 32);
+        kv.note_prefilled(1, 32, 5);
+        // Request 2 shares both prefix blocks, then speculates 4 tokens
+        // into a fresh private block.
+        assert_eq!(kv.admit_prefixed(2, &ks, u64::MAX, 5), Some(32));
+        kv.append(2, 4);
+        let phys = kv.sram_physical_bytes();
+        // Rolling the 4 speculative tokens back frees only the private
+        // block; asking for more clamps at the shared prefix.
+        assert_eq!(kv.truncate(2, 4), 4 * 8);
+        assert_eq!(kv.truncate(2, 100), 0, "shared prefix is clamped");
+        assert_eq!(kv.residency(2).sram_bytes, 32 * 8);
+        assert_eq!(kv.sram_physical_bytes(), phys - 16 * 8);
+        // The cached prefix is intact for a third request.
+        assert_eq!(kv.peek_prefix(&ks, u64::MAX, 5), 32);
+        kv.release(1);
+        kv.release(2);
+        assert_eq!(kv.admit_prefixed(3, &ks, u64::MAX, 5), Some(32));
+    }
+
+    #[test]
+    fn prop_append_truncate_roundtrip_conserves_residency_and_blocks() {
+        // Random append/truncate interleavings (truncate never exceeding
+        // the tokens appended so far, the spec-decode contract): residency
+        // must track the net token count exactly and a full unwind must
+        // return the allocator to its starting state.
+        check("kv truncate conservation", 64, |rng| {
+            let n_blocks = rng.range_u64(2, 10);
+            let mut kv = KvCache::new(n_blocks * 16 * 8, 16, 1 << 20, 8, 2048);
+            kv.admit(1);
+            let free0 = kv.sram_free_bytes();
+            let mut tokens = 0u64;
+            for _ in 0..rng.range(1, 50) {
+                if rng.chance(0.6) {
+                    let n = rng.range_u64(1, 24).min(2048 - tokens);
+                    kv.append(1, n);
+                    tokens += n;
+                } else if tokens > 0 {
+                    let n = rng.range_u64(1, tokens + 1);
+                    assert_eq!(kv.truncate(1, n), n * 8);
+                    tokens -= n;
+                }
+                assert_eq!(kv.residency(1).total(), tokens * 8);
+                assert_eq!(kv.overflow_bytes(), 0);
+            }
+            kv.truncate(1, tokens);
+            assert_eq!(kv.residency(1).total(), 0);
+            assert_eq!(kv.sram_free_bytes(), free0, "full unwind frees all");
         });
     }
 

@@ -46,6 +46,92 @@ pub const DEFAULT_HBM_TIER_FRAC: f64 = 0.125;
 /// constant keeps the planner deterministic and workload-shape-agnostic.
 const MODELED_DECODE_BATCH: u64 = 8;
 
+/// Speculative decoding (CLI `--spec gamma=K,accept=P[,draft=F]`).
+///
+/// Decode is memory-bound: every vanilla step streams the full weight
+/// shard to emit one token per request. With speculation a cheap draft
+/// proposes `gamma` tokens per request and the target model scores them
+/// in **one** verify iteration of `gamma+1` tokens per request — the
+/// verify GEMM's row count is `batch * (gamma+1)`, which amortises the
+/// weight stream over every proposed token and pushes decode GEMMs
+/// across the Fig. 9 partition crossover (`m_threshold`), so the win
+/// shows up in modeled collective/HBM traffic rather than a scalar.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpecConfig {
+    /// Draft tokens proposed per request per speculation round (≥ 1).
+    pub gamma: u64,
+    /// Per-token acceptance probability of the modeled draft (i.i.d.;
+    /// the first rejection discards the rest of the round's draft).
+    pub acceptance: f64,
+    /// Draft-pass cost as a fraction of the target model's per-step
+    /// weight stream (a ~10×-smaller draft model ≈ 0.1).
+    pub draft_cost_frac: f64,
+}
+
+impl SpecConfig {
+    pub fn new(gamma: u64, acceptance: f64) -> Self {
+        SpecConfig {
+            gamma,
+            acceptance,
+            draft_cost_frac: 0.1,
+        }
+    }
+
+    /// Parse the CLI form `gamma=K,accept=P[,draft=F]`.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        let mut spec = SpecConfig::new(4, 0.8);
+        for part in s.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let Some((key, val)) = part.split_once('=') else {
+                anyhow::bail!("--spec expects key=value pairs, got {part:?}");
+            };
+            let val = val.trim();
+            match key.trim() {
+                "gamma" => {
+                    spec.gamma = val
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("--spec gamma={val:?} is not an integer"))?
+                }
+                "accept" | "acceptance" => {
+                    spec.acceptance = val
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("--spec accept={val:?} is not a number"))?
+                }
+                "draft" | "draft_cost_frac" => {
+                    spec.draft_cost_frac = val
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("--spec draft={val:?} is not a number"))?
+                }
+                other => anyhow::bail!("unknown --spec key {other:?} (gamma|accept|draft)"),
+            }
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            (1..=64).contains(&self.gamma),
+            "--spec gamma must be in 1..=64, got {}",
+            self.gamma
+        );
+        anyhow::ensure!(
+            self.acceptance > 0.0 && self.acceptance <= 1.0,
+            "--spec accept must be in (0, 1], got {}",
+            self.acceptance
+        );
+        anyhow::ensure!(
+            (0.0..1.0).contains(&self.draft_cost_frac),
+            "--spec draft must be in [0, 1), got {}",
+            self.draft_cost_frac
+        );
+        Ok(())
+    }
+}
+
 /// PD organisation of a plan.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PdMode {
@@ -117,6 +203,9 @@ pub struct DeploymentPlan {
     /// Simulation fidelity: transaction-level (default) or the calibrated
     /// analytic surrogate (`--sim-level fast`).
     pub sim_level: SimLevel,
+    /// Speculative decoding (`--spec`); `None` keeps vanilla
+    /// one-token-per-step decode bit-identically.
+    pub spec: Option<SpecConfig>,
 }
 
 impl DeploymentPlan {
@@ -144,6 +233,7 @@ impl DeploymentPlan {
             affinity_gap: 4,
             memo: false,
             sim_level: SimLevel::Txn,
+            spec: None,
         }
     }
 
@@ -175,6 +265,7 @@ impl DeploymentPlan {
             affinity_gap: 4,
             memo: false,
             sim_level: SimLevel::Txn,
+            spec: None,
         }
     }
 
@@ -254,8 +345,12 @@ impl DeploymentPlan {
         } else {
             String::new()
         };
+        let spec = match self.spec {
+            Some(sc) => format!(" | spec: gamma {} accept {:.2}", sc.gamma, sc.acceptance),
+            None => String::new(),
+        };
         format!(
-            "plan {} [{mode} | tp {} x {} stages | {} | prefill {} / decode {}{phase}]",
+            "plan {} [{mode} | tp {} x {} stages | {} | prefill {} / decode {}{phase}{spec}]",
             self.name,
             self.tp,
             self.stages,
@@ -321,6 +416,53 @@ fn gemm_cycles(
     let cost = partition_cost(strategy, tp, m, k, n, alpha);
     let comm = cost.total_comm * chip.dtype_bytes as f64 * cost.max_hop.max(1) as f64 / link;
     compute + comm
+}
+
+/// Learn the Fig. 9 phase-switch threshold for a strategy pair: the
+/// smallest GEMM row count `m` at which the large-M (prefill) strategy's
+/// analytic cycle estimate, summed over the model's per-layer GEMMs,
+/// stops losing to the small-M (decode) strategy. This replaces the old
+/// `hidden/2` heuristic with the actual cost-model crossover: Table 2
+/// makes the MN collective volume m-independent (`(p-1)/p·K·N`) while the
+/// K-partition's AllReduce grows linearly in m (`2(p-1)/p·M·N`), so with
+/// equal compute a unique crossover exists whenever the strategies
+/// differ. Falls back to `hidden/2` when no crossover appears in the
+/// searched range (e.g. identical strategies).
+pub fn learned_m_threshold(
+    chip: &ChipConfig,
+    model: &ModelConfig,
+    tp: usize,
+    prefill_strategy: PartitionStrategy,
+    decode_strategy: PartitionStrategy,
+) -> u64 {
+    let fallback = model.hidden as u64 / 2;
+    if prefill_strategy == decode_strategy {
+        return fallback;
+    }
+    let cost = |strategy: PartitionStrategy, m: u64| -> f64 {
+        layer_gemms(model)
+            .iter()
+            .map(|&(k, n)| gemm_cycles(chip, strategy, tp, m, k, n, 1))
+            .sum()
+    };
+    let wins = |m: u64| cost(prefill_strategy, m) <= cost(decode_strategy, m);
+    let cap = (8 * model.hidden as u64).max(16);
+    if !wins(cap) {
+        return fallback; // no crossover in range: keep the heuristic
+    }
+    // Binary search the smallest winning m (`wins` is monotone in m: the
+    // decode strategy's collective volume grows linearly in m while the
+    // prefill strategy's m-dependence is strictly weaker).
+    let (mut lo, mut hi) = (1u64, cap);
+    while lo < hi {
+        let mid = lo + (hi - lo) / 2;
+        if wins(mid) {
+            hi = mid;
+        } else {
+            lo = mid + 1;
+        }
+    }
+    lo
 }
 
 /// The partition strategy the phase-aware executor would run a GEMM of
@@ -583,7 +725,6 @@ pub fn enumerate_plans(
     };
 
     let base = DeploymentPlan::fusion_default();
-    let hidden = model.hidden as u64;
     for tp in [2usize, 4, 8, 16] {
         if tp > chip.n_cores() {
             continue;
@@ -615,14 +756,22 @@ pub fn enumerate_plans(
                         // Phase-aware variant: long-chunk prefill runs
                         // `strategy`, while GEMMs below the threshold
                         // (decode steps, short tail chunks) fall back to
-                        // AllReduce. The chunk must reach the threshold or
-                        // the variant would never exercise its large-M
-                        // strategy and degenerate into a duplicate of the
-                        // K candidate.
-                        let chunk = ((hidden / 2) as usize).max(plan.chunk);
+                        // AllReduce. The threshold is learned from the
+                        // Table-2 cost crossover for this strategy pair,
+                        // and the chunk must reach it or the variant would
+                        // never exercise its large-M strategy and
+                        // degenerate into a duplicate of the K candidate.
+                        let m_threshold = learned_m_threshold(
+                            chip,
+                            model,
+                            tp,
+                            strategy,
+                            PartitionStrategy::OneDimK,
+                        );
+                        let chunk = (m_threshold as usize).max(plan.chunk);
                         push(DeploymentPlan {
                             name: format!("{}+phase", plan.name),
-                            m_threshold: hidden / 2,
+                            m_threshold,
                             chunk,
                             budget: chunk + plan.budget.saturating_sub(plan.chunk),
                             ..plan.clone()
@@ -658,7 +807,13 @@ pub fn enumerate_plans(
             placement: Placement::LinearInterleave,
             prefill_strategy: PartitionStrategy::OneDimMN,
             decode_strategy: PartitionStrategy::OneDimK,
-            m_threshold: hidden / 2,
+            m_threshold: learned_m_threshold(
+                chip,
+                model,
+                tp,
+                PartitionStrategy::OneDimMN,
+                PartitionStrategy::OneDimK,
+            ),
             ..base.clone()
         });
     }
@@ -1009,6 +1164,68 @@ mod tests {
         let k_ring = score("fusion-tp4s4-ring-1d-k(allreduce)");
         assert!(k_ring < score("fusion-tp4s4-ring-1d-mn(allgather)"));
         assert!(k_ring < score("fusion-tp4s4-linear-seq-1d-k(allreduce)"));
+    }
+
+    #[test]
+    fn spec_config_parses_and_validates() {
+        let s = SpecConfig::parse("gamma=4,accept=0.8").unwrap();
+        assert_eq!(s.gamma, 4);
+        assert_eq!(s.acceptance, 0.8);
+        assert_eq!(s.draft_cost_frac, 0.1);
+        let s = SpecConfig::parse("gamma=2,accept=0.6,draft=0.05").unwrap();
+        assert_eq!(s.gamma, 2);
+        assert_eq!(s.draft_cost_frac, 0.05);
+        assert!(SpecConfig::parse("gamma=0,accept=0.8").is_err());
+        assert!(SpecConfig::parse("gamma=4,accept=1.5").is_err());
+        assert!(SpecConfig::parse("gamma=4,accept=0.8,draft=1.0").is_err());
+        assert!(SpecConfig::parse("turbo=9").is_err());
+        assert!(SpecConfig::parse("gamma").is_err());
+    }
+
+    #[test]
+    fn learned_threshold_sits_at_the_analytic_crossover() {
+        // With equal compute and alpha-1 hops the Table-2 crossover of
+        // AllGather (comm (p-1)/p·K·N, m-independent) against AllReduce
+        // (2(p-1)/p·M·N) is m* = Σkn / (2Σn) — the learned threshold must
+        // hit it exactly, for any tp (the (p-1)/p factors cancel).
+        let chip = ChipConfig::large_core();
+        let model = ModelConfig::qwen3_4b();
+        let gemms = layer_gemms(&model);
+        let kn: f64 = gemms.iter().map(|&(k, n)| (k * n) as f64).sum();
+        let n_sum: f64 = gemms.iter().map(|&(_, n)| n as f64).sum();
+        let expect = (kn / (2.0 * n_sum)).ceil() as u64;
+        for tp in [2usize, 4, 8] {
+            let t = learned_m_threshold(
+                &chip,
+                &model,
+                tp,
+                PartitionStrategy::OneDimMN,
+                PartitionStrategy::OneDimK,
+            );
+            assert_eq!(t, expect, "tp={tp}");
+        }
+        // The learned value genuinely replaces the heuristic…
+        assert_ne!(expect, model.hidden as u64 / 2);
+        // …and identical strategies (no crossover) keep the fallback.
+        let same = learned_m_threshold(
+            &chip,
+            &model,
+            4,
+            PartitionStrategy::OneDimK,
+            PartitionStrategy::OneDimK,
+        );
+        assert_eq!(same, model.hidden as u64 / 2);
+        // Every phase-aware candidate the enumerator emits carries the
+        // learned threshold, not the heuristic.
+        let w = WorkloadConfig::sharegpt_like(16);
+        for c in enumerate_plans(&chip, &model, &w) {
+            if c.plan.name.ends_with("+phase")
+                && c.plan.prefill_strategy == PartitionStrategy::OneDimMN
+            {
+                assert_eq!(c.plan.m_threshold, expect, "{}", c.plan.name);
+                assert!(c.plan.chunk as u64 >= expect);
+            }
+        }
     }
 
     #[test]

@@ -843,14 +843,25 @@ fn reject_arrival(
     }
 }
 
-/// Load-adaptive defer backoff base: the minimum re-timing step scaled by
-/// the worst probed backpressure across the routable chips.
+/// Load-adaptive defer backoff base from one backpressure probe (clamped
+/// to `[0, 1]`): the minimum re-timing step scaled by how saturated the
+/// probed admission path is.
+fn defer_backoff_from(bp: f64) -> f64 {
+    DEFER_BACKOFF_S * (1.0 + DEFER_LOAD_GAIN * bp.clamp(0.0, 1.0))
+}
+
+/// Cluster-global defer backoff base: the worst probed backpressure across
+/// the routable chips — the right signal when admission failed because
+/// *every* chip was saturated ([`ShedScope::Global`]). The per-chip scope
+/// instead feeds [`defer_backoff_from`] the routed target's own probe: the
+/// retry will re-route, so one hot chip far from the target must not
+/// stretch the whole cluster's retry spacing.
 fn defer_backoff(scheds: &[Box<dyn Scheduler>], avail: &[usize]) -> f64 {
     let bp = avail
         .iter()
-        .map(|&i| scheds[i].backpressure().clamp(0.0, 1.0))
+        .map(|&i| scheds[i].backpressure())
         .fold(0.0, f64::max);
-    DEFER_BACKOFF_S * (1.0 + DEFER_LOAD_GAIN * bp)
+    defer_backoff_from(bp)
 }
 
 /// Handle one request stranded by a dead chip: bounded-backoff retry under
@@ -1223,7 +1234,10 @@ pub fn simulate_cluster_mixed(
                 let saturated = views[d.chip].pending_work >= cap
                     || scheds[target].backpressure() >= 0.999;
                 if saturated {
-                    let base = defer_backoff(&scheds, &avail);
+                    // The rejection is about *this* chip, and the deferred
+                    // retry re-routes across the fleet — so back off by the
+                    // target's own saturation, not the fleet-wide maximum.
+                    let base = defer_backoff_from(scheds[target].backpressure());
                     reject_arrival(
                         req,
                         cfg.shed,

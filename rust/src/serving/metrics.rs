@@ -174,6 +174,98 @@ impl ControlStats {
     }
 }
 
+/// Speculative-decoding counters of one serving run (all zero when
+/// `--spec` is off — the golden vectors pin that).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SpecStats {
+    /// Draft tokens proposed across all verify rounds.
+    pub drafted_tokens: u64,
+    /// Draft tokens accepted by verification.
+    pub accepted_tokens: u64,
+    /// Draft tokens rejected and rolled back from the paged KV.
+    pub rejected_tokens: u64,
+    /// Batched verify iterations issued.
+    pub verify_steps: u64,
+    /// Histogram of the verify GEMM M (total q_tokens per verify batch),
+    /// bucketed by power of two: bucket `i` counts batches with
+    /// `M in [2^i, 2^(i+1))`.
+    pub verify_m_hist: [u64; 16],
+    /// Verify batches whose M crossed the exec's phase-switch threshold,
+    /// i.e. ran the large-M (prefill) partition strategy instead of the
+    /// decode K-partition — the Fig. 9 flip evidence the bucketed
+    /// histogram cannot express exactly.
+    pub verify_above_threshold: u64,
+    /// Decode iterations that streamed the layer weights from HBM
+    /// (vanilla decode steps + spec verify steps) — the denominator of
+    /// tokens-per-weight-stream.
+    pub decode_weight_streams: u64,
+    /// Output tokens committed by decode iterations (vanilla + spec).
+    pub decode_tokens_committed: u64,
+}
+
+impl SpecStats {
+    /// Record one verify batch of GEMM size `m` against the exec's
+    /// phase-switch threshold (`0` = no switch configured).
+    pub fn observe_verify_m(&mut self, m: u64, threshold: u64) {
+        let bucket = (63 - m.max(1).leading_zeros() as usize).min(self.verify_m_hist.len() - 1);
+        self.verify_m_hist[bucket] += 1;
+        self.verify_steps += 1;
+        if threshold > 0 && m >= threshold {
+            self.verify_above_threshold += 1;
+        }
+    }
+
+    /// Median verify-batch M, reconstructed from the histogram's bucket
+    /// lower bounds (0 when no verify step ran).
+    pub fn verify_m_p50(&self) -> u64 {
+        let total: u64 = self.verify_m_hist.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let mut seen = 0u64;
+        for (i, &n) in self.verify_m_hist.iter().enumerate() {
+            seen += n;
+            if seen * 2 >= total {
+                return 1 << i;
+            }
+        }
+        0
+    }
+
+    /// Fraction of drafted tokens accepted (0 when nothing drafted).
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.drafted_tokens == 0 {
+            return 0.0;
+        }
+        self.accepted_tokens as f64 / self.drafted_tokens as f64
+    }
+
+    /// Output tokens committed per weight stream from HBM — the
+    /// amortization headline: vanilla decode commits one token per request
+    /// per stream, spec verification lifts that toward
+    /// `1 + gamma * acceptance` per request.
+    pub fn tokens_per_weight_stream(&self) -> f64 {
+        if self.decode_weight_streams == 0 {
+            return 0.0;
+        }
+        self.decode_tokens_committed as f64 / self.decode_weight_streams as f64
+    }
+
+    /// Fold another run's counters into this one (cluster rollups).
+    pub fn merge(&mut self, o: &SpecStats) {
+        self.drafted_tokens += o.drafted_tokens;
+        self.accepted_tokens += o.accepted_tokens;
+        self.rejected_tokens += o.rejected_tokens;
+        self.verify_steps += o.verify_steps;
+        for (a, b) in self.verify_m_hist.iter_mut().zip(o.verify_m_hist) {
+            *a += b;
+        }
+        self.verify_above_threshold += o.verify_above_threshold;
+        self.decode_weight_streams += o.decode_weight_streams;
+        self.decode_tokens_committed += o.decode_tokens_committed;
+    }
+}
+
 /// Aggregated metrics over a serving run.
 #[derive(Debug, Clone, Default)]
 pub struct Metrics {
@@ -184,6 +276,8 @@ pub struct Metrics {
     /// Control-plane counters (filled by the schedulers and the cluster
     /// admission frontend).
     pub control: ControlStats,
+    /// Speculative-decoding counters (filled by the schedulers).
+    pub spec: SpecStats,
 }
 
 impl Metrics {
@@ -193,6 +287,7 @@ impl Metrics {
             freq_mhz,
             cache: CacheStats::default(),
             control: ControlStats::default(),
+            spec: SpecStats::default(),
         }
     }
 
@@ -264,6 +359,7 @@ impl Metrics {
         self.records.extend_from_slice(&other.records);
         self.cache.merge(&other.cache);
         self.control.merge(&other.control);
+        self.spec.merge(&other.spec);
     }
 
     pub fn n_requests(&self) -> usize {
@@ -475,6 +571,49 @@ mod tests {
         assert_eq!(m.cache, CacheStats::default());
         assert_eq!(m.cache.prefix_hit_rate(), 0.0);
         assert_eq!(m.cache.memo_hit_rate(), 0.0);
+        assert_eq!(m.spec, SpecStats::default());
+        assert_eq!(m.spec.verify_m_p50(), 0);
+        assert_eq!(m.spec.tokens_per_weight_stream(), 0.0);
+    }
+
+    #[test]
+    fn spec_stats_histogram_median_and_merge() {
+        let mut s = SpecStats::default();
+        // Three batches at M=40 (bucket 5), one at M=200 (bucket 7),
+        // against a phase-switch threshold of 100: only M=200 crosses.
+        for _ in 0..3 {
+            s.observe_verify_m(40, 100);
+        }
+        s.observe_verify_m(200, 100);
+        assert_eq!(s.verify_steps, 4);
+        assert_eq!(s.verify_m_hist[5], 3);
+        assert_eq!(s.verify_m_hist[7], 1);
+        assert_eq!(s.verify_above_threshold, 1);
+        // Median falls in the M=40 bucket → its lower bound 32.
+        assert_eq!(s.verify_m_p50(), 32);
+        s.drafted_tokens = 10;
+        s.accepted_tokens = 8;
+        s.rejected_tokens = 2;
+        s.decode_weight_streams = 4;
+        s.decode_tokens_committed = 12;
+        assert!((s.acceptance_rate() - 0.8).abs() < 1e-9);
+        assert!((s.tokens_per_weight_stream() - 3.0).abs() < 1e-9);
+        let b = s;
+        s.merge(&b);
+        assert_eq!(s.verify_steps, 8);
+        assert_eq!(s.drafted_tokens, 20);
+        assert_eq!(s.verify_m_hist[5], 6);
+        assert_eq!(s.verify_above_threshold, 2);
+        // Rates are scale-invariant under self-merge.
+        assert!((s.acceptance_rate() - 0.8).abs() < 1e-9);
+        // Huge M clamps into the last bucket instead of overflowing.
+        let mut t = SpecStats::default();
+        t.observe_verify_m(u64::MAX, 0);
+        assert_eq!(t.verify_m_hist[15], 1);
+        t.observe_verify_m(0, 0); // degenerate M clamps to bucket 0
+        assert_eq!(t.verify_m_hist[0], 1);
+        // Threshold 0 = no phase switch: nothing counts as crossing.
+        assert_eq!(t.verify_above_threshold, 0);
     }
 
     #[test]

@@ -19,7 +19,7 @@ use crate::config::{ModelConfig, WorkloadConfig};
 use crate::parallel::partition::PartitionStrategy;
 use crate::model::memo::SimLevel;
 use crate::parallel::pd_placement::PdPlacementPolicy;
-use crate::parallel::plan::{DeploymentPlan, PdMode};
+use crate::parallel::plan::{DeploymentPlan, PdMode, SpecConfig};
 use crate::serving::metrics::Metrics;
 use crate::serving::request::Request;
 use crate::serving::scheduler::{self, DisaggScheduler};
@@ -70,6 +70,9 @@ pub struct DisaggConfig {
     /// or the calibrated analytic surrogate — see
     /// [`crate::model::memo::Surrogate`].
     pub sim_level: SimLevel,
+    /// Speculative decoding on the decode groups (`--spec`): `None` (the
+    /// default) keeps vanilla one-token-per-step decode bit-identical.
+    pub spec: Option<SpecConfig>,
 }
 
 impl DisaggConfig {
@@ -113,6 +116,7 @@ impl DisaggConfig {
             cross_pipe: plan.cross_pipe,
             memo: plan.memo,
             sim_level: plan.sim_level,
+            spec: plan.spec,
         })
     }
 
@@ -197,6 +201,7 @@ mod tests {
         assert_eq!(d.m_threshold, 0, "phase switch must default off");
         assert_eq!(d.max_decode_batch, 32);
         assert_eq!(d.kv_share, 0.6);
+        assert!(d.spec.is_none(), "speculative decoding must default off");
         // A fusion plan cannot masquerade as a disagg config.
         assert!(DisaggConfig::from_plan(&DeploymentPlan::fusion_default()).is_err());
     }

@@ -16,7 +16,7 @@ use crate::config::{ModelConfig, WorkloadConfig};
 use crate::model::memo::SimLevel;
 use crate::parallel::partition::PartitionStrategy;
 use crate::parallel::placement::Placement;
-use crate::parallel::plan::{DeploymentPlan, PdMode};
+use crate::parallel::plan::{DeploymentPlan, PdMode, SpecConfig};
 use crate::serving::metrics::Metrics;
 use crate::serving::request::Request;
 use crate::serving::scheduler::{self, FusionScheduler};
@@ -85,6 +85,12 @@ pub struct FusionConfig {
     /// priority. `None` (the default) keeps the legacy priority-only
     /// preemption bit-identical.
     pub slo_preempt: Option<f64>,
+    /// Speculative decoding (`--spec gamma=K,accept=P`): decode requests
+    /// draft `gamma` tokens and verify them in one batched iteration of
+    /// `gamma+1` tokens per request, with rejected drafts rolled back on
+    /// the paged KV. `None` (the default) keeps vanilla
+    /// one-token-per-step decode bit-identical.
+    pub spec: Option<SpecConfig>,
 }
 
 impl FusionConfig {
@@ -112,6 +118,7 @@ impl FusionConfig {
             memo: plan.memo,
             sim_level: plan.sim_level,
             slo_preempt: None,
+            spec: plan.spec,
         }
     }
 }
@@ -176,6 +183,7 @@ mod tests {
         assert_eq!(f.hbm_tier_frac, 0.125, "the former fixed 1/8 carve");
         assert_eq!(f.affinity_gap, 4);
         assert!(f.slo_preempt.is_none(), "SLO preemption must default off");
+        assert!(f.spec.is_none(), "speculative decoding must default off");
         assert_eq!(
             f.sim_level,
             SimLevel::Txn,

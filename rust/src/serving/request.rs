@@ -136,8 +136,11 @@ impl Request {
     }
 }
 
-/// SplitMix64 finalizer (the same mixer the RNG seeds through).
-fn splitmix64(mut z: u64) -> u64 {
+/// SplitMix64 finalizer (the same mixer the RNG seeds through). Also the
+/// per-(request, position) mixer of the speculative-decode acceptance
+/// sampler, which needs a counter-mode hash rather than a stream RNG so
+/// acceptance draws are independent of batching order.
+pub(crate) fn splitmix64(mut z: u64) -> u64 {
     z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
     z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
     z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);

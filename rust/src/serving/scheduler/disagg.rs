@@ -260,6 +260,34 @@ impl Scheduler for DisaggScheduler {
                     .collect()
             })
             .collect();
+        // Vanilla decode runs GEMV-shaped iterations, so the groups pin
+        // `decode_strategy` statically. Speculative decoding turns each
+        // iteration into a verify GEMM of `batch * (gamma + 1)` rows —
+        // large enough to cross the Fig. 9 boundary — so with `--spec` the
+        // groups get the same phase switch as the prefill pipelines:
+        // verify batches above the threshold run `prefill_strategy`,
+        // everything smaller keeps the decode partition. A plan that left
+        // the switch off (`m_threshold` 0) learns the cost-model crossover
+        // here, since a threshold of 0 would wrongly force every batch
+        // onto the large-M strategy.
+        let decode_exec = match cfg.spec {
+            Some(_) => {
+                let threshold = if cfg.m_threshold > 0 {
+                    cfg.m_threshold
+                } else {
+                    crate::parallel::plan::learned_m_threshold(
+                        &chip.cfg,
+                        model,
+                        cfg.decode_tp,
+                        cfg.prefill_strategy,
+                        cfg.decode_strategy,
+                    )
+                };
+                crate::model::exec::ExecConfig::new(cfg.prefill_strategy, layers, true)
+                    .with_small_m(cfg.decode_strategy, threshold)
+            }
+            None => crate::model::exec::ExecConfig::new(cfg.decode_strategy, layers, true),
+        };
         self.groups = a
             .decode_groups
             .iter()
@@ -270,7 +298,7 @@ impl Scheduler for DisaggScheduler {
                     &decode_core,
                     model,
                     g.clone(),
-                    crate::model::exec::ExecConfig::new(cfg.decode_strategy, layers, true),
+                    decode_exec,
                     cfg.max_decode_batch,
                     cfg.kv_share,
                     max_tokens,
@@ -571,24 +599,86 @@ fn decode_tick(
         group.active.push(r);
     }
 
-    let items: Vec<BatchItem> = group
+    // Schedule ready decodes; with speculative decoding each becomes one
+    // verify item of `d + 1` query tokens (drafts capped so even an
+    // accept-all round commits exactly `output_len` tokens).
+    let mut items = Vec::new();
+    let mut scheduled: Vec<(u64, u64)> = Vec::new(); // (request id, drafts)
+    for a in group
         .active
         .iter()
         .filter(|a| a.generated < a.req.output_len as u64 && a.ready_at <= now)
-        .map(|a| BatchItem::decode(a.req.id, a.req.input_len as u64 + a.generated))
-        .collect();
+    {
+        let d = match cfg.spec {
+            Some(sc) => sc
+                .gamma
+                .min((a.req.output_len as u64 - a.generated).saturating_sub(1)),
+            None => 0,
+        };
+        items.push(BatchItem {
+            request: a.req.id,
+            q_tokens: 1 + d,
+            kv_tokens: a.req.input_len as u64 + a.generated,
+            phase: crate::model::Phase::Decode,
+        });
+        scheduled.push((a.req.id, d));
+    }
     if items.is_empty() {
         return 0;
     }
-    let ids: Vec<u64> = items.iter().map(|i| i.request).collect();
-    let finish = group.worker.run(chip, model, &IterBatch::new(items));
 
-    let mut completions = 0;
-    for a in &mut group.active {
-        if ids.contains(&a.req.id) {
-            a.generated += 1;
-            a.ready_at = finish;
+    // Draft pass of a speculative round (see the fused pipe's tick): the
+    // deepest request's draft count, each step priced at `draft_cost_frac`
+    // of the group's layer weight stream.
+    let gamma_used = scheduled.iter().map(|&(_, d)| d).max().unwrap_or(0);
+    if gamma_used > 0 {
+        let frac = cfg.spec.map_or(0.0, |sc| sc.draft_cost_frac);
+        let bytes = (group.worker.plan.weight_hbm_bytes as f64 * frac) as u64 * gamma_used;
+        if bytes > 0 {
+            for &c in &group.worker.group.coords {
+                chip.core_mut(c).hbm_access(bytes, OpClass::HbmWeight);
+            }
         }
+    }
+    let batch = IterBatch::new(items);
+    if gamma_used > 0 {
+        let threshold = group.worker.exec.small_m.map_or(0, |(_, t)| t);
+        metrics.spec.observe_verify_m(batch.total_q_tokens(), threshold);
+    }
+    metrics.spec.decode_weight_streams += 1;
+    let finish = group.worker.run(chip, model, &batch);
+
+    // Commit: a plain step commits one token; a verify item commits the
+    // leading accepted drafts plus the corrected/bonus token and truncates
+    // the rejected tail off the group's paged KV, charged on the spill
+    // channel (see `pipe::spec_accepted` for the sampler's determinism).
+    let mut completions = 0;
+    for (id, d) in scheduled {
+        let ai = group
+            .active
+            .iter()
+            .position(|a| a.req.id == id)
+            .expect("scheduled request is active");
+        if d == 0 {
+            group.active[ai].generated += 1;
+            group.active[ai].ready_at = finish;
+            metrics.spec.decode_tokens_committed += 1;
+            continue;
+        }
+        let sc = cfg.spec.expect("drafted tokens without a spec config");
+        let k = pipe::spec_accepted(id, group.active[ai].generated, d, sc.acceptance);
+        let rejected = d - k;
+        let mut landed = finish;
+        if rejected > 0 {
+            group.worker.kv.truncate(id, rejected);
+            landed = landed.max(pipe::charge_kv_swap(chip, &group.worker, model, rejected));
+            metrics.spec.rejected_tokens += rejected;
+        }
+        metrics.spec.drafted_tokens += d;
+        metrics.spec.accepted_tokens += k;
+        metrics.spec.decode_tokens_committed += k + 1;
+        group.active[ai].generated += k + 1;
+        group.active[ai].ready_at = landed;
     }
     let mut i = 0;
     while i < group.active.len() {

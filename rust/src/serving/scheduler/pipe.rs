@@ -35,6 +35,30 @@ use std::collections::VecDeque;
 /// stream cannot livelock a parked low-class decode.
 pub(crate) const MAX_PREEMPTIONS: u8 = 3;
 
+/// Fixed seed of the speculative-decode acceptance sampler. Acceptance is
+/// a property of the modeled draft model, not of the workload, so it is
+/// not configurable — one seed keeps every policy's draws comparable.
+pub(crate) const SPEC_SEED: u64 = 0x5bec_dec0_0000_0001;
+
+/// Leading accepted drafts of one speculative round: `d` i.i.d. Bernoulli
+/// draws hashed counter-mode from (request id, absolute output position),
+/// so acceptance is bit-for-bit deterministic and independent of batch
+/// composition, tick timing and scheduler policy. Verification commits
+/// the corrected token at the first rejection, discarding the rest of the
+/// round — so the return value `k` means `k + 1` tokens commit and
+/// `d - k` drafts roll back.
+pub(crate) fn spec_accepted(id: u64, pos0: u64, d: u64, acceptance: f64) -> u64 {
+    let base = crate::serving::request::splitmix64(SPEC_SEED ^ crate::serving::request::splitmix64(id));
+    for j in 0..d {
+        let bits = crate::serving::request::splitmix64(base ^ (pos0 + j));
+        let u = (bits >> 11) as f64 / (1u64 << 53) as f64; // uniform [0, 1)
+        if u >= acceptance {
+            return j;
+        }
+    }
+    d
+}
+
 /// In-flight request state on a pipe.
 #[derive(Debug, Clone, Copy)]
 pub(crate) struct Active {
@@ -431,6 +455,10 @@ pub(crate) struct BatchPlan {
     pub items: Vec<BatchItem>,
     /// Indices into `active` of the scheduled decode steps.
     pub decode_idx: Vec<usize>,
+    /// Draft tokens scheduled for each decode step (parallel to
+    /// `decode_idx`; all zero with speculative decoding off). A decode
+    /// with `d` drafts runs as one verify item of `d + 1` query tokens.
+    pub drafted: Vec<u64>,
     /// `(index into active, chunk tokens)` of the scheduled prefill chunks.
     pub prefill_idx: Vec<(usize, u64)>,
 }
@@ -444,6 +472,7 @@ pub(crate) fn plan_batch(
     let mut items = Vec::new();
     let mut budget = cfg.budget as u64;
     let mut decode_idx = Vec::new();
+    let mut drafted = Vec::new();
     let mut prefill_idx = Vec::new();
     // Token budget and microbatch slots go to the highest class first; the
     // sort is stable, so uniform-priority batches keep the legacy index
@@ -461,12 +490,27 @@ pub(crate) fn plan_batch(
             continue;
         }
         if !a.is_prefilling() && a.ready_at <= now && budget > 0 && decode_idx.len() < micro_cap {
-            items.push(BatchItem::decode(
-                a.req.id,
-                a.req.input_len as u64 + a.generated,
-            ));
+            // Speculative decoding: draft up to `gamma` tokens and verify
+            // them together with the regular next token in one item of
+            // `d + 1` query tokens (the Fig. 9 large-M shape). Drafts are
+            // capped so even accept-all commits exactly `output_len`
+            // tokens, and each verify token consumes one budget unit.
+            let d = match cfg.spec {
+                Some(sc) => sc
+                    .gamma
+                    .min((a.req.output_len as u64 - a.generated).saturating_sub(1))
+                    .min(budget - 1),
+                None => 0,
+            };
+            items.push(BatchItem {
+                request: a.req.id,
+                q_tokens: 1 + d,
+                kv_tokens: a.req.input_len as u64 + a.generated,
+                phase: crate::model::Phase::Decode,
+            });
             decode_idx.push(i);
-            budget -= 1;
+            drafted.push(d);
+            budget -= 1 + d;
         }
     }
     for &i in &order {
@@ -482,6 +526,7 @@ pub(crate) fn plan_batch(
     BatchPlan {
         items,
         decode_idx,
+        drafted,
         prefill_idx,
     }
 }
@@ -868,8 +913,34 @@ impl Pipe {
         }
         let batch = IterBatch::new(plan.items);
 
+        // Draft pass of a speculative round: the requests draft in
+        // lockstep, so the round runs the draft model for the deepest
+        // request's draft count and each step streams the draft weights
+        // once per stage — priced at `draft_cost_frac` of the stage's
+        // layer weight stream on the same HBM channels the verify pass
+        // uses. With `--spec` off (all-zero drafts) nothing is charged.
+        let gamma_used = plan.drafted.iter().copied().max().unwrap_or(0);
+        if gamma_used > 0 {
+            let frac = cfg.spec.map_or(0.0, |sc| sc.draft_cost_frac);
+            for s in &self.stages {
+                let bytes = (s.plan.weight_hbm_bytes as f64 * frac) as u64 * gamma_used;
+                if bytes > 0 {
+                    for &c in &s.group.coords {
+                        chip.core_mut(c).hbm_access(bytes, OpClass::HbmWeight);
+                    }
+                }
+            }
+        }
+
         // Stream the batch through the pipeline stages.
         let q = batch.total_q_tokens();
+        if gamma_used > 0 {
+            let threshold = self.stages[0].exec.small_m.map_or(0, |(_, t)| t);
+            metrics.spec.observe_verify_m(q, threshold);
+        }
+        if !plan.decode_idx.is_empty() {
+            metrics.spec.decode_weight_streams += 1;
+        }
         let mut finish = 0;
         for s in 0..self.stages.len() {
             finish = self.stages[s].run(chip, model, &batch);
@@ -906,10 +977,41 @@ impl Pipe {
                 s.note_prefilled(id, upto, finish);
             }
         }
-        for i in plan.decode_idx {
+        // Commit decode steps. A plain step commits one token. A verify
+        // item of `d + 1` query tokens commits the leading accepted drafts
+        // plus the corrected/bonus token, and the rejected tail — whose KV
+        // the iteration already appended — is truncated off every stage's
+        // paged chain and its writeback charged on the spill channel, so
+        // misspeculation is never free. Commit and rollback happen inside
+        // this tick, before any preemption can observe the request, so a
+        // parked-mid-speculation request always parks with exact
+        // (generated, KV) state.
+        for (&i, &d) in plan.decode_idx.iter().zip(&plan.drafted) {
+            if d == 0 {
+                let a = &mut self.active[i];
+                a.generated += 1;
+                a.ready_at = finish;
+                metrics.spec.decode_tokens_committed += 1;
+                continue;
+            }
+            let sc = cfg.spec.expect("drafted tokens without a spec config");
+            let (id, pos0) = (self.active[i].req.id, self.active[i].generated);
+            let k = spec_accepted(id, pos0, d, sc.acceptance);
+            let rejected = d - k;
+            let mut landed = finish;
+            if rejected > 0 {
+                for si in 0..self.stages.len() {
+                    self.stages[si].kv.truncate(id, rejected);
+                    landed = landed.max(charge_kv_swap(chip, &self.stages[si], model, rejected));
+                }
+                metrics.spec.rejected_tokens += rejected;
+            }
+            metrics.spec.drafted_tokens += d;
+            metrics.spec.accepted_tokens += k;
+            metrics.spec.decode_tokens_committed += k + 1;
             let a = &mut self.active[i];
-            a.generated += 1;
-            a.ready_at = finish;
+            a.generated += k + 1;
+            a.ready_at = landed;
         }
 
         // Retire completed requests; in prefill-only mode, extract the

@@ -1,0 +1,258 @@
+//! Speculative-decoding properties: exact token conservation across the
+//! acceptance range (reject-all through accept-all), KV byte/refcount
+//! conservation under rollback, seeded determinism, and the flags-off
+//! golden pin (spec unset must reproduce the vanilla timeline).
+
+use npusim::config::{ChipConfig, ModelConfig, WorkloadConfig};
+use npusim::memmgr::KvCache;
+use npusim::parallel::plan::SpecConfig;
+use npusim::serving::metrics::Metrics;
+use npusim::serving::pd_disagg::DisaggConfig;
+use npusim::serving::pd_fusion::FusionConfig;
+use npusim::serving::request::{self, Request};
+use npusim::serving::scheduler::{self, HybridConfig, SchedulerConfig};
+use npusim::sim::chip::ChipSim;
+use npusim::util::prop;
+use std::fmt::Write as _;
+
+/// `Σ (output_len − 1)`: the decode path owes exactly this many tokens
+/// (the first output token of every request comes from its prefill).
+fn expected_decode_tokens(reqs: &[Request]) -> u64 {
+    reqs.iter()
+        .map(|r| (r.output_len as u64).saturating_sub(1))
+        .sum()
+}
+
+fn run(sys: &SchedulerConfig, reqs: Vec<Request>) -> Metrics {
+    let model = ModelConfig::qwen3_4b();
+    let mut chip = ChipSim::new(ChipConfig::large_core());
+    let mut sched = sys.build();
+    scheduler::simulate_requests(&mut chip, &model, reqs, sched.as_mut())
+        .unwrap_or_else(|e| panic!("{} failed: {e:#}", sys.name()))
+}
+
+/// Canonical text rendering (same shape as the golden-metrics pin): any
+/// cycle-level drift in the speculative path shows up as a byte diff.
+fn summarize(m: &Metrics) -> String {
+    let mut records: Vec<_> = m.records().to_vec();
+    records.sort_by_key(|r| r.id);
+    let mut out = String::new();
+    let _ = writeln!(out, "n={} makespan={}", m.n_requests(), m.makespan());
+    for r in records {
+        let _ = writeln!(
+            out,
+            "id={} arrival={} first={} finish={} in={} out={}",
+            r.id, r.arrival, r.first_token, r.finish, r.input_tokens, r.output_tokens
+        );
+    }
+    out
+}
+
+fn assert_conserves(label: &str, m: &Metrics, offered: usize, expected: u64) {
+    assert_eq!(m.n_requests(), offered, "{label}: lost/duplicated requests");
+    assert_eq!(
+        m.spec.decode_tokens_committed, expected,
+        "{label}: decode committed {} tokens, expected {expected}",
+        m.spec.decode_tokens_committed
+    );
+    assert_eq!(
+        m.spec.drafted_tokens,
+        m.spec.accepted_tokens + m.spec.rejected_tokens,
+        "{label}: draft ledger does not balance"
+    );
+}
+
+#[test]
+fn fusion_conserves_tokens_across_the_acceptance_range() {
+    // Reject-all (acceptance ≈ 0: every verify commits exactly the one
+    // bonus token), mid-range, and accept-all (u ∈ [0,1) < 1.0 always):
+    // the committed total must be bit-exact in every regime.
+    let w = WorkloadConfig::fixed_ratio(64, 10, 6).with_seed(7);
+    let reqs = request::generate(&w);
+    let expected = expected_decode_tokens(&reqs);
+    for gamma in [1u64, 4, 8] {
+        for acceptance in [1e-9, 0.5, 1.0] {
+            let sys = SchedulerConfig::Fusion(FusionConfig {
+                spec: Some(SpecConfig::new(gamma, acceptance)),
+                ..FusionConfig::default()
+            });
+            let m = run(&sys, reqs.clone());
+            let label = format!("fusion g{gamma} a{acceptance}");
+            assert_conserves(&label, &m, reqs.len(), expected);
+            assert!(m.spec.drafted_tokens > 0, "{label}: never drafted");
+            if acceptance == 1.0 {
+                assert_eq!(m.spec.rejected_tokens, 0, "{label}: accept-all rejected");
+            } else if acceptance == 1e-9 {
+                assert!(
+                    m.spec.acceptance_rate() <= 0.01,
+                    "{label}: reject-all accepted {:.3} of drafts",
+                    m.spec.acceptance_rate()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn random_spec_configs_conserve_tokens() {
+    // Randomized gamma × acceptance × workload: conservation is a hard
+    // invariant, not a property of the tuned study points.
+    prop::check("spec token conservation", 6, |rng| {
+        let gamma = *rng.choose(&[1u64, 2, 3, 5, 8]);
+        let acceptance = rng.range_f64(0.05, 1.0);
+        let n = rng.range(2, 6);
+        let output = rng.range(4, 16);
+        let w = WorkloadConfig::fixed_ratio(48, output, n).with_seed(rng.next_u64());
+        let reqs = request::generate(&w);
+        let expected = expected_decode_tokens(&reqs);
+        let sys = SchedulerConfig::Fusion(FusionConfig {
+            spec: Some(SpecConfig::new(gamma, acceptance)),
+            ..FusionConfig::default()
+        });
+        let m = run(&sys, reqs.clone());
+        assert_conserves(
+            &format!("fusion g{gamma} a{acceptance:.3} n{n} out{output}"),
+            &m,
+            reqs.len(),
+            expected,
+        );
+    });
+}
+
+#[test]
+fn disagg_and_hybrid_decode_legs_conserve_tokens() {
+    // The prefill→decode handoff carries speculation state across chips'
+    // role boundary; neither the disagg decode leg nor the hybrid
+    // controller may lose or mint a token.
+    let w = WorkloadConfig::fixed_ratio(128, 12, 5).with_seed(11);
+    let reqs = request::generate(&w);
+    let expected = expected_decode_tokens(&reqs);
+    let spec = Some(SpecConfig::new(4, 0.8));
+    let disagg = SchedulerConfig::Disagg(DisaggConfig {
+        spec,
+        ..DisaggConfig::p42_d21()
+    });
+    let md = run(&disagg, reqs.clone());
+    assert_conserves("disagg g4 a0.8", &md, reqs.len(), expected);
+    assert!(md.spec.drafted_tokens > 0, "disagg decode leg never drafted");
+
+    let hybrid = SchedulerConfig::Hybrid(HybridConfig {
+        fusion: FusionConfig {
+            spec,
+            ..FusionConfig::default()
+        },
+        ..HybridConfig::default()
+    });
+    let mh = run(&hybrid, reqs.clone());
+    assert_conserves("hybrid g4 a0.8", &mh, reqs.len(), expected);
+}
+
+#[test]
+fn kv_rollback_conserves_bytes_and_refcounts() {
+    // Random append/truncate interleavings over several chains: rollback
+    // must free exactly the rejected bytes, residency must track the
+    // logical token count, and releasing everything must return the
+    // allocator to empty (no leaked blocks, no double frees).
+    prop::check("kv rollback conservation", 32, |rng| {
+        let bytes_per_token = 8u64;
+        let mut kv = KvCache::new(1 << 22, 16, 1 << 22, bytes_per_token, 4096);
+        let ids = [1u64, 2, 3];
+        let mut tokens = [0u64; 3];
+        for &id in &ids {
+            assert!(kv.admit(id));
+        }
+        let mut rolled_back = 0u64;
+        for _ in 0..40 {
+            let i = rng.range(0, ids.len());
+            let id = ids[i];
+            if tokens[i] == 0 || rng.chance(0.6) {
+                let n = rng.range_u64(1, 24);
+                let a = kv.append(id, n);
+                assert_eq!(a.sram_bytes + a.hbm_bytes, n * bytes_per_token);
+                tokens[i] += n;
+            } else {
+                let n = rng.range_u64(1, tokens[i] + 1);
+                let freed = kv.truncate(id, n);
+                assert_eq!(freed, n * bytes_per_token, "truncate freed wrong bytes");
+                tokens[i] -= n;
+                rolled_back += freed;
+            }
+            assert_eq!(
+                kv.residency(id).total(),
+                tokens[i] * bytes_per_token,
+                "residency drifted from the logical chain length"
+            );
+        }
+        assert_eq!(kv.stats().rollback_bytes, rolled_back);
+        for &id in &ids {
+            kv.release(id);
+        }
+        assert_eq!(kv.n_active(), 0);
+        assert_eq!(kv.sram_used_bytes(), 0, "rollback leaked SRAM blocks");
+    });
+}
+
+#[test]
+fn seeded_speculation_is_deterministic_and_parameter_sensitive() {
+    // The per-(request, position) counter-mode sampler makes a spec run a
+    // pure function of (trace, config): two runs are byte-identical, and
+    // the draft/accept ledgers match to the token. Changing the
+    // acceptance must change the timeline (the sampler is not dead code).
+    let w = WorkloadConfig::fixed_ratio(64, 12, 4).with_seed(13);
+    let reqs = request::generate(&w);
+    let cfg = |acceptance: f64| {
+        SchedulerConfig::Fusion(FusionConfig {
+            spec: Some(SpecConfig::new(4, acceptance)),
+            ..FusionConfig::default()
+        })
+    };
+    let a = run(&cfg(0.8), reqs.clone());
+    let b = run(&cfg(0.8), reqs.clone());
+    assert_eq!(summarize(&a), summarize(&b), "spec run not deterministic");
+    assert_eq!(a.spec.drafted_tokens, b.spec.drafted_tokens);
+    assert_eq!(a.spec.accepted_tokens, b.spec.accepted_tokens);
+    assert_eq!(a.spec.verify_m_p50(), b.spec.verify_m_p50());
+    let c = run(&cfg(0.2), reqs.clone());
+    assert_ne!(
+        summarize(&a),
+        summarize(&c),
+        "acceptance never changed the schedule"
+    );
+}
+
+#[test]
+fn spec_off_is_the_default_and_bit_identical_to_vanilla() {
+    // The flags-off golden pin: speculation is strictly opt-in. The
+    // defaults carry no SpecConfig, an explicit `spec: None` reproduces
+    // the default timeline byte-for-byte, and a vanilla run reports zero
+    // speculative activity.
+    assert!(FusionConfig::default().spec.is_none());
+    assert!(DisaggConfig::default().spec.is_none());
+    let w = WorkloadConfig::fixed_ratio(256, 24, 6).with_seed(7);
+    let reqs = request::generate(&w);
+    let default_run = run(
+        &SchedulerConfig::Fusion(FusionConfig::default()),
+        reqs.clone(),
+    );
+    let explicit_off = run(
+        &SchedulerConfig::Fusion(FusionConfig {
+            spec: None,
+            ..FusionConfig::default()
+        }),
+        reqs.clone(),
+    );
+    assert_eq!(
+        summarize(&default_run),
+        summarize(&explicit_off),
+        "spec: None perturbed the vanilla timeline"
+    );
+    assert_eq!(default_run.spec.drafted_tokens, 0);
+    assert_eq!(default_run.spec.verify_steps, 0);
+    assert_eq!(default_run.spec.rejected_tokens, 0);
+    // Vanilla still owes the exact decode-token total — the ledger is
+    // live (and conserved) even with speculation off.
+    assert_eq!(
+        default_run.spec.decode_tokens_committed,
+        expected_decode_tokens(&reqs)
+    );
+}

@@ -18,8 +18,9 @@
 //!    fault study (none / crash_recover / crash_resubmit / degrade
 //!    scenarios on a ≥ 4-chip fleet), the fleet-specialization study
 //!    (homog-fused / fleet-planned / fleet-planned-crash at one equal
-//!    chip count), and the two-speed simulation study (txn / txn-par8 /
-//!    fast rows on a ≥ 16-chip fleet).
+//!    chip count), the two-speed simulation study (txn / txn-par8 /
+//!    fast rows on a ≥ 16-chip fleet), and the speculative-decoding
+//!    study (vanilla / g4-a0.80 / g8-a0.95 / g4-a0.80+preempt rows).
 //! 2. **Invariants**: on the shared-prefix workload the prefix-hit-aware
 //!    router must beat round-robin on TTFT p50 for the fusion system (the
 //!    cluster acceptance property), cache-on must not lose TTFT, the
@@ -49,6 +50,15 @@
 //!    txn-par8 row must report metrics identical to sequential txn
 //!    (conservative-window stepping is bit-exact by construction), and
 //!    every level must conserve requests (completed + shed = offered).
+//!    The spec study adds the speculative-decoding properties: every
+//!    row — the preemption-under-speculation one included — conserves
+//!    requests (completed + shed = offered) and commits exactly the
+//!    expected decode tokens (`tokens_exact`), gamma=4/accept=0.8 must
+//!    strictly beat vanilla decode on TBT p50, goodput-under-SLO and
+//!    tokens-per-weight-stream (the modeled HBM amortization win), at
+//!    least one row's verify batches must cross the learned Fig. 9
+//!    M-threshold (the K→MN partition flip), and the `+preempt` row
+//!    must actually preempt mid-speculation.
 //! 3. **Numbers**: `tokens_per_s` must not drop, and `ttft_p99_s` must
 //!    not rise, by more than the tolerance against the matching baseline
 //!    row. A baseline marked `"provisional": true` skips this layer (the
@@ -252,6 +262,12 @@ fn check_structure(current: &Json, violations: &mut Vec<String>) {
             }
         }
     }
+    let spec = rows(current, "spec");
+    for policy in ["vanilla", "g4-a0.80", "g8-a0.95", "g4-a0.80+preempt"] {
+        if spec_row(&spec, policy).is_none() {
+            violations.push(format!("spec row missing: {policy}"));
+        }
+    }
 }
 
 /// The slo-section row of one admission policy.
@@ -275,6 +291,11 @@ fn fleet_row<'a>(fleet: &[&'a Json], name: &str) -> Option<&'a Json> {
 /// The scale-section row of one simulation level.
 fn scale_row<'a>(scale: &[&'a Json], level: &str) -> Option<&'a Json> {
     scale.iter().find(|r| r.str("level") == Some(level)).copied()
+}
+
+/// The spec-section row of one decode policy.
+fn spec_row<'a>(spec: &[&'a Json], policy: &str) -> Option<&'a Json> {
+    spec.iter().find(|r| r.str("policy") == Some(policy)).copied()
 }
 
 /// `prefill_tokens_skipped` of one tier-ablation row.
@@ -556,6 +577,84 @@ fn check_invariants(current: &Json, violations: &mut Vec<String>) {
         }
         _ => violations.push("cannot evaluate two-speed simulation invariants".into()),
     }
+    // The speculative-decoding acceptance properties.
+    let spec = rows(current, "spec");
+    for r in &spec {
+        let policy = r.str("policy").unwrap_or("?");
+        // Exact conservation in every row: speculation may neither lose
+        // nor duplicate a request, and rollback may not drift a token.
+        let (offered, completed, shed) = (
+            r.num("offered").unwrap_or(-1.0),
+            r.num("completed").unwrap_or(-1.0),
+            r.num("shed").unwrap_or(-1.0),
+        );
+        if completed + shed != offered {
+            violations.push(format!(
+                "spec {policy}: completed {completed} + shed {shed} != offered {offered}"
+            ));
+        }
+        if r.get("tokens_exact").and_then(|v| v.as_bool()) != Some(true) {
+            violations.push(format!(
+                "spec {policy}: decode did not commit exactly the expected tokens"
+            ));
+        }
+    }
+    match (spec_row(&spec, "vanilla"), spec_row(&spec, "g4-a0.80")) {
+        (Some(vanilla), Some(g4)) => {
+            if vanilla.num("verify_steps").unwrap_or(-1.0) != 0.0 {
+                violations.push("spec vanilla ran verify iterations".into());
+            }
+            // The headline win must come from the modeled traffic:
+            // strictly better TBT p50, goodput-under-SLO and
+            // tokens-per-weight-stream than vanilla decode.
+            let (v_tbt, s_tbt) = (
+                vanilla.num("tbt_p50_ms").unwrap_or(0.0),
+                g4.num("tbt_p50_ms").unwrap_or(f64::INFINITY),
+            );
+            if s_tbt >= v_tbt {
+                violations.push(format!(
+                    "spec g4-a0.80 does not beat vanilla on TBT p50 ({s_tbt} vs {v_tbt})"
+                ));
+            }
+            let (v_good, s_good) = (
+                vanilla.num("goodput_tok_s").unwrap_or(f64::INFINITY),
+                g4.num("goodput_tok_s").unwrap_or(0.0),
+            );
+            if s_good <= v_good {
+                violations.push(format!(
+                    "spec g4-a0.80 does not beat vanilla on goodput-under-SLO \
+                     ({s_good} vs {v_good})"
+                ));
+            }
+            let (v_tws, s_tws) = (
+                vanilla.num("tokens_per_weight_stream").unwrap_or(f64::INFINITY),
+                g4.num("tokens_per_weight_stream").unwrap_or(0.0),
+            );
+            if s_tws <= v_tws {
+                violations.push(format!(
+                    "spec g4-a0.80 does not amortize the weight stream over vanilla \
+                     ({s_tws} vs {v_tws} tokens/stream)"
+                ));
+            }
+        }
+        _ => violations.push("cannot evaluate spec-vs-vanilla invariants".into()),
+    }
+    // The Fig. 9 phase flip must actually fire: somewhere, a verify batch
+    // crossed the learned M-threshold into the large-M MN partition.
+    if !spec.is_empty()
+        && !spec
+            .iter()
+            .any(|r| r.num("verify_above_threshold").unwrap_or(0.0) > 0.0)
+    {
+        violations.push(
+            "no spec verify batch crossed the learned Fig. 9 M-threshold".into(),
+        );
+    }
+    if let Some(preempt) = spec_row(&spec, "g4-a0.80+preempt") {
+        if preempt.num("preemptions").unwrap_or(0.0) < 1.0 {
+            violations.push("spec g4-a0.80+preempt never preempted mid-speculation".into());
+        }
+    }
 }
 
 /// One directional comparison: `cur` must not be worse than `base` by more
@@ -825,6 +924,32 @@ fn check_numbers(current: &Json, baseline: &Json, tol: f64, violations: &mut Vec
             &format!("scale {level} ttft_ms"),
             c.num("ttft_ms"),
             b.num("ttft_ms"),
+            tol,
+            false,
+            violations,
+        );
+    }
+    // Spec study: match rows on the policy label.
+    let cur_spec = rows(current, "spec");
+    let base_spec = rows(baseline, "spec");
+    for b in &base_spec {
+        let policy = b.str("policy").unwrap_or("");
+        let Some(c) = cur_spec.iter().find(|r| r.str("policy") == Some(policy)) else {
+            violations.push(format!("spec row disappeared: {policy}"));
+            continue;
+        };
+        check_metric(
+            &format!("spec {policy} goodput_tok_s"),
+            c.num("goodput_tok_s"),
+            b.num("goodput_tok_s"),
+            tol,
+            true,
+            violations,
+        );
+        check_metric(
+            &format!("spec {policy} tbt_p50_ms"),
+            c.num("tbt_p50_ms"),
+            b.num("tbt_p50_ms"),
             tol,
             false,
             violations,
